@@ -1,0 +1,66 @@
+//! RPC argument-classification explorer: reproduces the paper's Fig. 3
+//! walk-through on the actual pass, showing how each call-site argument is
+//! classified (value / statically identified object / enumerable set /
+//! dynamic lookup) and which landing pads get generated.
+//!
+//! ```bash
+//! cargo run --release --example rpc_explorer
+//! ```
+
+use gpu_first::ir::parser::parse_module;
+use gpu_first::ir::printer::print_module;
+use gpu_first::rpc::WrapperRegistry;
+use gpu_first::transform::rpcgen;
+
+/// The Fig. 3a example, lowered to our IR: a variadic fscanf whose
+/// arguments exercise every classification the pass supports.
+const FIG3: &str = r#"
+global @fmt const 9 "%f %i %i"
+
+func @use(%s: ptr, %r: i64, %i: i64) -> void {
+  return
+}
+
+func @main() -> i64 {
+  %fd = 0
+  %s = alloca 12            ;; struct S { int a, b; float f; }
+  %i = alloca 4             ;; int i
+  %heap = call malloc(64)   ;; statically unknown object
+  %sa = load.4 %s           ;; s.a
+  %pb = gep %s, 4           ;; &s.b
+  %pf = gep %s, 8           ;; &s.f
+  %c = ne %sa, 0
+  %p = select %c, %i, %pb   ;; s.a ? &i : &s.b
+  %r = call fscanf(%fd, @fmt, %pf, %p, %heap)
+  call use(%s, %r, 0)
+  return %r
+}
+"#;
+
+fn main() {
+    let mut module = parse_module(FIG3).expect("parse");
+    module.verify().expect("verify");
+    let registry = WrapperRegistry::new();
+    let report = rpcgen::run(&mut module, &registry);
+
+    println!("=== paper Fig. 3: compile-time RPC generation ===\n");
+    for (func, callee, mangled, args) in &report.rewritten {
+        println!("call site: {callee} in @{func}");
+        println!("  landing pad: {mangled} (host-side, non-variadic)");
+        for (i, desc) in args.iter().enumerate() {
+            println!("  arg {i}: {desc}");
+        }
+    }
+    println!("\nregistered landing pads: {:?}", registry.names());
+    println!("\n=== transformed module ===\n{}", print_module(&module));
+
+    // The classifications the paper calls out must all appear.
+    let (_, _, mangled, args) = &report.rewritten[0];
+    assert_eq!(mangled, "__fscanf_p_cp_fp_ip_ip");
+    assert!(args[0].contains("value"), "FILE* is an opaque value");
+    assert!(args[1].contains("static object"), "format string");
+    assert!(args[2].contains("static object"), "&s.f");
+    assert!(args[3].contains("candidates"), "select(&i, &s.b)");
+    assert!(args[4].contains("dynamic lookup"), "malloc'd pointer");
+    println!("OK — all five of the paper's argument categories reproduced.");
+}

@@ -1,0 +1,147 @@
+"""AOT lowering: L2 graphs -> HLO text artifacts + manifest.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax >= 0.5
+emits HloModuleProtos with 64-bit instruction ids which the rust side's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Run once via ``make artifacts``; never imported at runtime.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from compile import model
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def spec(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# Every artifact entry: name -> (callable, example args). Shapes are the
+# bench workloads (DESIGN.md §4); HLO is shape-specialized so small/large
+# variants are separate entries.
+def entries():
+    e = {}
+    # XSBench (E3): small & large unionized grids.
+    for label, g in (("small", 2048), ("large", 32768)):
+        b, c, m = 4096, 5, 12
+        e[f"xs_event_{label}"] = (
+            model.xs_event,
+            (spec((b,)), spec((b,), I32), spec((g,)), spec((g, c)), spec((m,))),
+        )
+        e[f"xs_history_{label}"] = (
+            model.xs_history,
+            (spec((4096,)), spec((4096,), I32), spec((g,)), spec((g, c)), spec((m,))),
+        )
+    # RSBench (E4).
+    for label, p in (("small", 1024), ("large", 8192)):
+        b, l = 2048, 16
+        e[f"rs_lookup_{label}"] = (
+            model.rs_lookup,
+            (spec((b,)), spec((b, l), I32), spec((p, 4))),
+        )
+    # hypterm (E6): 32^3 interior + halo.
+    n = 32
+    e["hypterm3"] = (model.hypterm3, (spec((n + 8, n + 8, n + 8)),))
+    # AMGmk relax (E7): 27-point ELL.
+    r, k = 16384, 27
+    e["amgmk_relax"] = (
+        model.amgmk_relax,
+        (spec((r, k)), spec((r, k), I32), spec((r,)), spec((r,)), spec((r,))),
+    )
+    # page-rank (E7).
+    r2, k2 = 8192, 16
+    e["pagerank_step"] = (
+        model.pagerank_step,
+        (spec((r2, k2)), spec((r2, k2), I32), spec((r2,))),
+    )
+    # interleaved (E5): SoA and AoS variants.
+    nele = 1 << 20
+    e["interleaved_soa"] = (
+        model.interleaved_soa,
+        (spec((nele,)), spec((nele,)), spec((nele,)), spec((nele,))),
+    )
+    e["interleaved_aos"] = (model.interleaved_aos, (spec((nele, 4)),))
+    return e
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def tensor_spec(s):
+    return {"dtype": str(s.dtype), "shape": list(s.shape)}
+
+
+def input_fingerprint():
+    """Hash of the compile-path sources: artifacts rebuild only on change."""
+    h = hashlib.sha256()
+    root = os.path.dirname(os.path.abspath(__file__))
+    for dirpath, _, files in sorted(os.walk(root)):
+        for f in sorted(files):
+            if f.endswith(".py"):
+                with open(os.path.join(dirpath, f), "rb") as fh:
+                    h.update(fh.read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-separated entry names")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    fp = input_fingerprint()
+    stamp = os.path.join(args.out_dir, ".fingerprint")
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    if args.only is None and os.path.exists(stamp) and os.path.exists(manifest_path):
+        with open(stamp) as f:
+            if f.read().strip() == fp:
+                print("artifacts up to date (fingerprint match)")
+                return
+
+    only = set(args.only.split(",")) if args.only else None
+    manifest = {"entries": []}
+    for name, (fn, example) in entries().items():
+        if only and name not in only:
+            continue
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out_dir, fname), "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *example)
+        manifest["entries"].append(
+            {
+                "name": name,
+                "file": fname,
+                "inputs": [tensor_spec(s) for s in example],
+                "outputs": [tensor_spec(s) for s in outs],
+            }
+        )
+        print(f"lowered {name:<20} -> {fname} ({len(text)} chars)")
+    with open(manifest_path, "w") as f:
+        json.dump(manifest, f, indent=1)
+    with open(stamp, "w") as f:
+        f.write(fp)
+    print(f"wrote {manifest_path} ({len(manifest['entries'])} entries)")
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,67 @@
+"""L1 Pallas kernel: hypterm 8th-order stencil flux (one direction).
+
+TPU rethink of the CUDA thread-per-cell register-shifting kernel
+(DESIGN.md §Hardware-Adaptation): the grid walks x-slabs of ``block_x``
+interior planes; each step re-reads its 4-plane halo (halo re-read instead
+of the CUDA shared-memory shuffle) and computes the directional derivative
+as four shifted-slice FMAs over the VMEM tile. Because this Pallas
+version cannot express overlapping input windows in a BlockSpec, the
+input ref maps the whole field and the kernel slices its slab via
+``pl.program_id`` — on a real TPU the same schedule would use an
+element-indexed window; the VMEM budget in ``vmem_bytes`` reflects the
+slab+halo working set, not the full field.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+H = 4
+# ExpCNS 8th-order first-derivative coefficients (ALP, BET, GAM, DEL).
+COEFFS = (0.8, -0.2, 0.038095238095238, -0.003571428571429)
+
+
+def _kernel(axis, block_x, q_ref, out_ref):
+    pid = pl.program_id(0)
+    q = q_ref[...]  # [nx+8, ny+8, nz+8]
+    bx, ny, nz = out_ref.shape
+
+    # The slab of interior cells this grid step owns, plus halo along x.
+    x0 = pid * block_x
+
+    def interior(off):
+        start = [H + x0, jnp.int32(H), jnp.int32(H)]
+        start[axis] = start[axis] + off
+        start = [jnp.asarray(s, jnp.int32) for s in start]
+        size = [bx, ny, nz]
+        return jax.lax.dynamic_slice(q, start, size)
+
+    acc = jnp.zeros(out_ref.shape, q.dtype)
+    for k in range(H):
+        acc = acc + COEFFS[k] * (interior(k + 1) - interior(-(k + 1)))
+    out_ref[...] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("axis", "block_x"))
+def hypterm_flux(q, *, axis=0, block_x=8):
+    """Directional flux: q is [nx+8, ny+8, nz+8]; returns [nx, ny, nz]."""
+    nxh, nyh, nzh = q.shape
+    nx, ny, nz = nxh - 2 * H, nyh - 2 * H, nzh - 2 * H
+    block_x = min(block_x, nx)
+    assert nx % block_x == 0, f"nx={nx} not a multiple of block_x={block_x}"
+    grid = (nx // block_x,)
+    return pl.pallas_call(
+        functools.partial(_kernel, axis, block_x),
+        grid=grid,
+        in_specs=[pl.BlockSpec((nxh, nyh, nzh), lambda i: (0, 0, 0))],
+        out_specs=pl.BlockSpec((block_x, ny, nz), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nx, ny, nz), q.dtype),
+        interpret=True,
+    )(q)
+
+
+def vmem_bytes(block_x, ny, nz, itemsize=4):
+    """Working-set estimate of the slab+halo schedule (perf §L1)."""
+    return itemsize * ((block_x + 2 * H) * (ny + 2 * H) * (nz + 2 * H) + block_x * ny * nz)

@@ -1,0 +1,100 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference implementation here written
+with plain jax.numpy ops; pytest (and hypothesis sweeps) assert
+``allclose`` between kernel and oracle across shapes and dtypes. These are
+also the L2 building blocks' ground truth.
+"""
+
+import jax.numpy as jnp
+
+
+def xs_lookup_ref(e, mats, egrid, xs, mat_scale):
+    """XSBench macroscopic cross-section lookup, event-based.
+
+    For each lookup ``b``: bisect ``egrid`` for ``e[b]``, linearly
+    interpolate the ``C`` reaction channels, scale by the material factor.
+
+    Args:
+      e:         [B]   lookup energies in [egrid[0], egrid[-1]).
+      mats:      [B]   int32 material ids.
+      egrid:     [G]   sorted unionized energy grid.
+      xs:        [G,C] cross-section table.
+      mat_scale: [M]   per-material number-density factor.
+
+    Returns: [B, C] macroscopic cross sections.
+    """
+    idx = jnp.clip(jnp.searchsorted(egrid, e, side="right") - 1, 0, egrid.shape[0] - 2)
+    e0 = egrid[idx]
+    e1 = egrid[idx + 1]
+    w = ((e - e0) / (e1 - e0))[:, None]
+    lo = xs[idx]
+    hi = xs[idx + 1]
+    out = lo * (1.0 - w) + hi * w
+    return out * mat_scale[mats][:, None]
+
+
+def stencil1d_ref(q, axis, coeffs):
+    """8th-order central first-derivative flux along ``axis``.
+
+    ``q`` has a 4-cell halo on every side; the output drops the halo:
+    out[i] = sum_k coeffs[k] * (q[i + k + 1] - q[i - k - 1]) evaluated at
+    interior points only.
+
+    Args:
+      q:      [nx+8, ny+8, nz+8]
+      axis:   0, 1, or 2.
+      coeffs: [4] stencil coefficients (ALP, BET, GAM, DEL).
+
+    Returns: [nx, ny, nz].
+    """
+    H = 4
+    nx, ny, nz = (s - 2 * H for s in q.shape)
+
+    def interior(arr, off_axis):
+        sl = []
+        for ax, n in zip(range(3), (nx, ny, nz)):
+            o = H + (off_axis if ax == axis else 0)
+            sl.append(slice(o, o + n))
+        return arr[tuple(sl)]
+
+    out = jnp.zeros((nx, ny, nz), q.dtype)
+    for k in range(H):
+        out = out + coeffs[k] * (interior(q, k + 1) - interior(q, -(k + 1)))
+    return out
+
+
+def spmv_ell_ref(vals, cols, x):
+    """ELL-format SpMV: y[r] = sum_k vals[r,k] * x[cols[r,k]].
+
+    Padding entries use ``cols == 0`` with ``vals == 0`` so they
+    contribute nothing.
+    """
+    return jnp.sum(vals * x[cols], axis=1)
+
+
+def rs_lookup_ref(e, win_idx, poles):
+    """RSBench-style windowed multipole resonance evaluation.
+
+    For each lookup ``b`` sum over its window's poles the real part of the
+    resonance term ``(a + i b) / (E - (c + i d))``.
+
+    Args:
+      e:       [B]    lookup energies.
+      win_idx: [B, L] int32 pole indices of each lookup's window.
+      poles:   [P, 4] (re_num, im_num, re_pole, im_pole) rows.
+
+    Returns: [B] total resonance cross section.
+    """
+    p = poles[win_idx]  # [B, L, 4]
+    num_re, num_im = p[..., 0], p[..., 1]
+    den_re = e[:, None] - p[..., 2]
+    den_im = -p[..., 3]
+    den = den_re * den_re + den_im * den_im
+    re = (num_re * den_re + num_im * den_im) / jnp.maximum(den, 1e-30)
+    return jnp.sum(re, axis=1)
+
+
+def interleaved_ref(a, b, c, d):
+    """HeCBench ``interleaved`` compute: per-element fused arithmetic."""
+    return (a + b) * c - d * 0.5 + jnp.sqrt(jnp.abs(a * d) + 1.0)

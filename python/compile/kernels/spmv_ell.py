@@ -1,0 +1,48 @@
+"""L1 Pallas kernel: ELL-format SpMV (AMGmk relax / page-rank substrate).
+
+TPU rethink of the CUDA row-per-thread gather (DESIGN.md
+§Hardware-Adaptation): rows are tiled ``block_r`` at a time so each block
+is a dense [block_r, K] gather + multiply + reduce; the column-index tile
+rides in VMEM next to the values and the dense vector ``x`` stays resident
+across grid steps.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(vals_ref, cols_ref, x_ref, out_ref):
+    vals = vals_ref[...]  # [block_r, K]
+    cols = cols_ref[...]  # [block_r, K]
+    x = x_ref[...]  # [C]
+    gathered = jnp.take(x, cols)  # dense [block_r, K] gather
+    out_ref[...] = jnp.sum(vals * gathered, axis=1)
+
+
+@functools.partial(jax.jit, static_argnames=("block_r",))
+def spmv_ell(vals, cols, x, *, block_r=1024):
+    """y[r] = sum_k vals[r,k] * x[cols[r,k]]; zero-padded ELL."""
+    r, k = vals.shape
+    c = x.shape[0]
+    block_r = min(block_r, r)
+    assert r % block_r == 0, f"R={r} not a multiple of block_r={block_r}"
+    grid = (r // block_r,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((block_r, k), lambda i: (i, 0)),
+            pl.BlockSpec((c,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_r,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), vals.dtype),
+        interpret=True,
+    )(vals, cols, x)
+
+
+def vmem_bytes(block_r, k, c, itemsize=4):
+    return itemsize * (2 * block_r * k + c + block_r)

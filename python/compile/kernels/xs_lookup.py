@@ -1,0 +1,79 @@
+"""L1 Pallas kernel: XSBench macroscopic cross-section lookup.
+
+TPU rethink of the CUDA one-thread-per-lookup kernel (DESIGN.md
+§Hardware-Adaptation): lookups are tiled into VMEM blocks of ``block_b``;
+the divergent per-thread binary search becomes a **branch-free bisection**
+— ``ceil(log2(G))`` lock-step rounds of masked selects over the whole
+tile, so the VPU runs dense lanes with zero divergence. The energy grid
+and the ``[G, C]`` table live fully in VMEM (the paper's "small" case
+fits; for larger grids the same BlockSpec would tile G).
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot run Mosaic
+custom-calls; interpret-mode lowers to plain HLO which the rust runtime
+executes.
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(e_ref, mats_ref, egrid_ref, xs_ref, scale_ref, out_ref):
+    e = e_ref[...]  # [Bt]
+    mats = mats_ref[...]  # [Bt]
+    egrid = egrid_ref[...]  # [G]
+    xs = xs_ref[...]  # [G, C]
+    scale = scale_ref[...]  # [M]
+    g = egrid.shape[0]
+
+    # Branch-free bisection: after ceil(log2 G) rounds lo is the last index
+    # with egrid[lo] <= e (clamped to G-2 for interpolation).
+    lo = jnp.zeros(e.shape, jnp.int32)
+    hi = jnp.full(e.shape, g - 1, jnp.int32)
+    for _ in range(int(math.ceil(math.log2(max(g, 2))))):
+        mid = (lo + hi) // 2
+        below = jnp.take(egrid, mid) <= e
+        lo = jnp.where(below, mid, lo)
+        hi = jnp.where(below, hi, mid)
+    idx = jnp.clip(lo, 0, g - 2)
+
+    e0 = jnp.take(egrid, idx)
+    e1 = jnp.take(egrid, idx + 1)
+    w = ((e - e0) / (e1 - e0))[:, None]
+    lo_xs = jnp.take(xs, idx, axis=0)
+    hi_xs = jnp.take(xs, idx + 1, axis=0)
+    out = lo_xs * (1.0 - w) + hi_xs * w
+    out_ref[...] = out * jnp.take(scale, mats)[:, None]
+
+
+@functools.partial(jax.jit, static_argnames=("block_b",))
+def xs_lookup(e, mats, egrid, xs, mat_scale, *, block_b=512):
+    """Pallas event-mode lookup; see ``ref.xs_lookup_ref`` for semantics."""
+    b = e.shape[0]
+    g, c = xs.shape
+    m = mat_scale.shape[0]
+    block_b = min(block_b, b)
+    assert b % block_b == 0, f"B={b} must be a multiple of block_b={block_b}"
+    grid = (b // block_b,)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((block_b,), lambda i: (i,)),
+            pl.BlockSpec((g,), lambda i: (0,)),
+            pl.BlockSpec((g, c), lambda i: (0, 0)),
+            pl.BlockSpec((m,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_b, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, c), xs.dtype),
+        interpret=True,
+    )(e, mats, egrid, xs, mat_scale)
+
+
+def vmem_bytes(block_b, g, c, m, itemsize=4):
+    """Static VMEM footprint estimate for the chosen BlockSpec (perf §L1)."""
+    return itemsize * (2 * block_b + g + g * c + m + block_b * c)

@@ -1,0 +1,81 @@
+"""L2: the JAX compute graphs the manual-offload comparators execute.
+
+Each function here is the "manually offloaded kernel" of one paper
+experiment, composed from the L1 Pallas kernels (which lower into the
+same HLO under ``interpret=True``). ``aot.py`` lowers these once to HLO
+text; the rust coordinator executes them via PJRT with no Python on the
+request path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels.hypterm import hypterm_flux
+from compile.kernels.spmv_ell import spmv_ell
+from compile.kernels.xs_lookup import xs_lookup
+from compile.kernels import ref
+
+GOLDEN = 0.618033988749895
+
+
+def xs_event(e, mats, egrid, xs, mat_scale):
+    """XSBench event-based lookup: one batched kernel call (Fig. 8a)."""
+    return (xs_lookup(e, mats, egrid, xs, mat_scale),)
+
+
+def xs_history(e0, mats, egrid, xs, mat_scale, *, steps=8):
+    """XSBench history-based lookup (Fig. 8a "history" series).
+
+    Each particle performs ``steps`` *sequential* lookups; the next energy
+    depends on the previous macroscopic total — the serial dependence that
+    distinguishes history from event mode. Returns the accumulated totals.
+    """
+
+    def step(carry, _):
+        e, acc = carry
+        out = xs_lookup(e, mats, egrid, xs, mat_scale)
+        total = jnp.sum(out, axis=1)
+        # Energy random walk seeded by the lookup result (stays in grid).
+        e_next = jnp.abs(jnp.mod(e * GOLDEN + total * 1e-3, 1.0))
+        return (e_next, acc + total), None
+
+    (_, acc), _ = jax.lax.scan(step, (e0, jnp.zeros_like(e0)), None, length=steps)
+    return (acc,)
+
+
+def hypterm3(q):
+    """HeCBench hypterm: the three parallel regions PR1-3 (Fig. 9b)."""
+    return (
+        hypterm_flux(q, axis=0),
+        hypterm_flux(q, axis=1),
+        hypterm_flux(q, axis=2),
+    )
+
+
+def amgmk_relax(vals, cols, diag, b, x):
+    """AMGmk relax kernel (Fig. 9c): x' = x + w * (b - A x) / diag."""
+    ax = spmv_ell(vals, cols, x)
+    return (x + 0.9 * (b - ax) / diag,)
+
+
+def pagerank_step(vals, cols, rank):
+    """Page-rank propagation (Fig. 9c): r' = d * A^T r + (1-d)/N."""
+    n = rank.shape[0]
+    contrib = spmv_ell(vals, cols, rank)
+    return (0.85 * contrib + 0.15 / n,)
+
+
+def interleaved_soa(a, b, c, d):
+    """Interleaved benchmark, struct-of-arrays layout (Fig. 9a)."""
+    return (ref.interleaved_ref(a, b, c, d),)
+
+
+def interleaved_aos(packed):
+    """Interleaved benchmark, array-of-structs layout: packed [N, 4]."""
+    a, b, c, d = (packed[:, i] for i in range(4))
+    return (ref.interleaved_ref(a, b, c, d),)
+
+
+def rs_lookup(e, win_idx, poles):
+    """RSBench windowed multipole evaluation (Fig. 8b)."""
+    return (ref.rs_lookup_ref(e, win_idx, poles),)

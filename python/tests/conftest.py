@@ -1,0 +1,5 @@
+import jax
+
+# The f64 kernel tests need real double precision; explicit f32 arrays are
+# unaffected by this flag.
+jax.config.update("jax_enable_x64", True)

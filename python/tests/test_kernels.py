@@ -1,0 +1,149 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; fixed seeds keep CI deterministic.
+"""
+
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.hypterm import hypterm_flux, COEFFS, H
+from compile.kernels.spmv_ell import spmv_ell
+from compile.kernels.xs_lookup import xs_lookup
+
+RNG = np.random.default_rng(0xC0FFEE)
+
+
+def xs_inputs(b, g, c, m, dtype=np.float32):
+    egrid = np.sort(RNG.uniform(0.0, 1.0, g)).astype(dtype)
+    egrid[0], egrid[-1] = 0.0, 1.0
+    # Strictly increasing grid.
+    egrid = (np.cumsum(np.abs(np.diff(egrid, prepend=0.0)) + 1e-4)).astype(dtype)
+    egrid = (egrid - egrid[0]) / (egrid[-1] - egrid[0])
+    e = RNG.uniform(0.0, 0.999, b).astype(dtype)
+    mats = RNG.integers(0, m, b).astype(np.int32)
+    xs = RNG.uniform(0.1, 10.0, (g, c)).astype(dtype)
+    scale = RNG.uniform(0.5, 2.0, m).astype(dtype)
+    return e, mats, egrid, xs, scale
+
+
+class TestXsLookup:
+    def test_matches_ref_basic(self):
+        args = xs_inputs(512, 256, 5, 8)
+        got = xs_lookup(*map(jnp.asarray, args))
+        want = ref.xs_lookup_ref(*map(jnp.asarray, args))
+        np.testing.assert_allclose(got, want, rtol=1e-5)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        b_blocks=st.integers(1, 4),
+        block=st.sampled_from([64, 128]),
+        g_log=st.integers(4, 10),
+        c=st.integers(1, 7),
+        m=st.integers(1, 12),
+    )
+    def test_matches_ref_shape_sweep(self, b_blocks, block, g_log, c, m):
+        b, g = b_blocks * block, 1 << g_log
+        args = xs_inputs(b, g, c, m)
+        got = xs_lookup(*map(jnp.asarray, args), block_b=block)
+        want = ref.xs_lookup_ref(*map(jnp.asarray, args))
+        np.testing.assert_allclose(got, want, rtol=1e-4)
+
+    def test_grid_endpoints(self):
+        # Energies exactly at grid points and at the extremes.
+        g, c, m = 64, 3, 2
+        _, mats, egrid, xs, scale = xs_inputs(64, g, c, m)
+        e = np.concatenate([egrid[:32], [0.0], egrid[1:32]]).astype(np.float32)[:64]
+        got = xs_lookup(*map(jnp.asarray, (e, mats, egrid, xs, scale)))
+        want = ref.xs_lookup_ref(*map(jnp.asarray, (e, mats, egrid, xs, scale)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-5)
+
+    def test_f64(self):
+        args = xs_inputs(128, 128, 4, 4, dtype=np.float64)
+        got = xs_lookup(*map(jnp.asarray, args), block_b=128)
+        want = ref.xs_lookup_ref(*map(jnp.asarray, args))
+        np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+class TestHypterm:
+    @pytest.mark.parametrize("axis", [0, 1, 2])
+    def test_matches_ref_all_axes(self, axis):
+        q = RNG.standard_normal((24, 20, 28)).astype(np.float32)
+        got = hypterm_flux(jnp.asarray(q), axis=axis)
+        want = ref.stencil1d_ref(jnp.asarray(q), axis, COEFFS)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+    @settings(max_examples=8, deadline=None)
+    @given(
+        bx=st.sampled_from([2, 4, 8]),
+        blocks=st.integers(1, 3),
+        ny=st.integers(4, 12),
+        nz=st.integers(4, 12),
+        axis=st.integers(0, 2),
+    )
+    def test_shape_sweep(self, bx, blocks, ny, nz, axis):
+        nx = bx * blocks
+        q = RNG.standard_normal((nx + 2 * H, ny + 2 * H, nz + 2 * H)).astype(np.float32)
+        got = hypterm_flux(jnp.asarray(q), axis=axis, block_x=bx)
+        want = ref.stencil1d_ref(jnp.asarray(q), axis, COEFFS)
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=1e-5)
+
+    def test_constant_field_has_zero_flux(self):
+        q = np.full((16, 16, 16), 3.25, np.float32)
+        got = hypterm_flux(jnp.asarray(q), axis=0)
+        np.testing.assert_allclose(got, np.zeros((8, 8, 8)), atol=1e-6)
+
+    def test_linear_field_has_constant_flux(self):
+        # d/dx of a linear ramp is exact for any consistent FD scheme.
+        x = np.arange(24, dtype=np.float32)
+        q = np.broadcast_to(x[:, None, None], (24, 16, 16)).copy()
+        got = np.asarray(hypterm_flux(jnp.asarray(q), axis=0))
+        expect = sum(COEFFS[k] * 2 * (k + 1) for k in range(4))
+        np.testing.assert_allclose(got, np.full_like(got, expect), rtol=1e-4)
+
+
+class TestSpmvEll:
+    def test_matches_ref(self):
+        r, k, c = 2048, 9, 2048
+        vals = RNG.standard_normal((r, k)).astype(np.float32)
+        cols = RNG.integers(0, c, (r, k)).astype(np.int32)
+        x = RNG.standard_normal(c).astype(np.float32)
+        got = spmv_ell(*map(jnp.asarray, (vals, cols, x)))
+        want = ref.spmv_ell_ref(*map(jnp.asarray, (vals, cols, x)))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        blocks=st.integers(1, 4),
+        block=st.sampled_from([32, 128]),
+        k=st.integers(1, 32),
+        c_log=st.integers(3, 12),
+    )
+    def test_shape_sweep(self, blocks, block, k, c_log):
+        r, c = blocks * block, 1 << c_log
+        vals = RNG.standard_normal((r, k)).astype(np.float32)
+        cols = RNG.integers(0, c, (r, k)).astype(np.int32)
+        x = RNG.standard_normal(c).astype(np.float32)
+        got = spmv_ell(*map(jnp.asarray, (vals, cols, x)), block_r=block)
+        want = ref.spmv_ell_ref(*map(jnp.asarray, (vals, cols, x)))
+        np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-4)
+
+    def test_zero_padding_contributes_nothing(self):
+        vals = np.array([[1.0, 0.0], [2.0, 0.0]], np.float32)
+        cols = np.array([[1, 0], [0, 0]], np.int32)
+        x = np.array([10.0, 20.0], np.float32)
+        got = spmv_ell(*map(jnp.asarray, (vals, cols, x)), block_r=2)
+        np.testing.assert_allclose(got, [20.0, 20.0])
+
+    def test_identity_matrix(self):
+        n = 128
+        vals = np.ones((n, 1), np.float32)
+        cols = np.arange(n, dtype=np.int32)[:, None]
+        x = RNG.standard_normal(n).astype(np.float32)
+        got = spmv_ell(*map(jnp.asarray, (vals, cols, x)), block_r=n)
+        np.testing.assert_allclose(got, x, rtol=1e-6)

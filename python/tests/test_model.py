@@ -1,0 +1,118 @@
+"""L2 model shape/semantics checks + AOT manifest consistency."""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, model
+from compile.kernels import ref
+from .test_kernels import xs_inputs
+
+
+class TestModels:
+    def test_xs_event_shape_and_value(self):
+        args = tuple(map(jnp.asarray, xs_inputs(256, 128, 5, 4)))
+        (out,) = model.xs_event(*args)
+        assert out.shape == (256, 5)
+        np.testing.assert_allclose(out, ref.xs_lookup_ref(*args), rtol=1e-4)
+
+    def test_xs_history_accumulates_sequentially(self):
+        args = tuple(map(jnp.asarray, xs_inputs(128, 64, 5, 4)))
+        (acc1,) = model.xs_history(*args, steps=1)
+        (acc4,) = model.xs_history(*args, steps=4)
+        assert acc1.shape == (128,)
+        # More steps accumulate strictly more positive cross section.
+        assert float(jnp.min(acc4 - acc1)) > 0.0
+        # Step 1 equals one event lookup's total.
+        total1 = jnp.sum(ref.xs_lookup_ref(*args), axis=1)
+        np.testing.assert_allclose(acc1, total1, rtol=1e-4)
+
+    def test_hypterm3_matches_per_axis_refs(self):
+        q = jnp.asarray(np.random.default_rng(1).standard_normal((24, 24, 24)), jnp.float32)
+        outs = model.hypterm3(q)
+        assert len(outs) == 3
+        from compile.kernels.hypterm import COEFFS
+
+        for axis, out in enumerate(outs):
+            want = ref.stencil1d_ref(q, axis, COEFFS)
+            np.testing.assert_allclose(out, want, rtol=2e-4, atol=1e-5)
+
+    def test_amgmk_relax_reduces_residual(self):
+        rng = np.random.default_rng(2)
+        r, k = 512, 9
+        # Diagonally dominant system so Jacobi converges.
+        cols = rng.integers(0, r, (r, k)).astype(np.int32)
+        vals = (rng.standard_normal((r, k)) * 0.05).astype(np.float32)
+        diag = (np.abs(rng.standard_normal(r)) + k).astype(np.float32)
+        # Fold the diagonal into ELL as well: col j==row with value diag.
+        cols[:, 0] = np.arange(r)
+        vals[:, 0] = diag
+        b = rng.standard_normal(r).astype(np.float32)
+        x = np.zeros(r, np.float32)
+        a_vals, a_cols = map(jnp.asarray, (vals, cols))
+        xb = jnp.asarray(x)
+        res0 = float(jnp.linalg.norm(b - ref.spmv_ell_ref(a_vals, a_cols, xb)))
+        for _ in range(8):
+            (xb,) = model.amgmk_relax(a_vals, a_cols, jnp.asarray(diag), jnp.asarray(b), xb)
+        res1 = float(jnp.linalg.norm(b - ref.spmv_ell_ref(a_vals, a_cols, xb)))
+        assert res1 < 0.25 * res0
+
+    def test_pagerank_step_preserves_positivity(self):
+        rng = np.random.default_rng(3)
+        n, k = 256, 8
+        cols = rng.integers(0, n, (n, k)).astype(np.int32)
+        vals = np.full((n, k), 1.0 / k, np.float32)
+        rank = np.full(n, 1.0 / n, np.float32)
+        (r1,) = model.pagerank_step(jnp.asarray(vals), jnp.asarray(cols), jnp.asarray(rank))
+        assert float(jnp.min(r1)) > 0.0
+        # Total mass stays ~1 for a column-stochastic-ish matrix.
+        assert abs(float(jnp.sum(r1)) - 1.0) < 0.2
+
+    def test_interleaved_layouts_agree(self):
+        rng = np.random.default_rng(4)
+        n = 1024
+        a, b, c, d = (rng.standard_normal(n).astype(np.float32) for _ in range(4))
+        packed = np.stack([a, b, c, d], axis=1)
+        (soa,) = model.interleaved_soa(*map(jnp.asarray, (a, b, c, d)))
+        (aos,) = model.interleaved_aos(jnp.asarray(packed))
+        np.testing.assert_allclose(soa, aos, rtol=1e-6)
+
+    def test_rs_lookup_finite_and_window_sensitive(self):
+        rng = np.random.default_rng(5)
+        b_, l, p = 128, 8, 256
+        e = rng.uniform(0.1, 0.9, b_).astype(np.float32)
+        poles = rng.standard_normal((p, 4)).astype(np.float32)
+        poles[:, 3] = np.abs(poles[:, 3]) + 0.1  # keep poles off the axis
+        w1 = rng.integers(0, p, (b_, l)).astype(np.int32)
+        w2 = rng.integers(0, p, (b_, l)).astype(np.int32)
+        (o1,) = model.rs_lookup(jnp.asarray(e), jnp.asarray(w1), jnp.asarray(poles))
+        (o2,) = model.rs_lookup(jnp.asarray(e), jnp.asarray(w2), jnp.asarray(poles))
+        assert np.all(np.isfinite(o1)) and np.all(np.isfinite(o2))
+        assert not np.allclose(o1, o2)
+
+
+class TestAot:
+    def test_entries_lower_to_hlo_text(self):
+        # Lower ONE representative entry end-to-end (full set is `make
+        # artifacts`; this keeps the unit suite fast).
+        fn, example = aot.entries()["pagerank_step"]
+        lowered = jax.jit(fn).lower(*example)
+        text = aot.to_hlo_text(lowered)
+        assert "HloModule" in text
+        assert "ENTRY" in text
+
+    def test_manifest_specs_match_entries(self):
+        es = aot.entries()
+        assert {"xs_event_small", "xs_event_large", "hypterm3", "amgmk_relax"} <= set(es)
+        for name, (fn, example) in es.items():
+            outs = jax.eval_shape(fn, *example)
+            assert isinstance(outs, tuple) and len(outs) >= 1, name
+
+    def test_fingerprint_stable(self):
+        assert aot.input_fingerprint() == aot.input_fingerprint()

@@ -1,0 +1,36 @@
+//! E4 — Fig. 8b: RSBench GPU variants vs the CPU version.
+
+use gpu_first::apps::common::{close, Mode};
+use gpu_first::apps::rsbench::{run, LookupMode, RsWorkload};
+use gpu_first::util::fmt_ratio;
+use gpu_first::util::table::Table;
+
+fn main() {
+    println!("== E4 / Fig. 8b: RSBench compute-kernel performance relative to CPU ==");
+    let mut t = Table::new(
+        "Fig. 8b — speedup over the CPU version (same lookup mode)",
+        &["input", "series", "modeled speedup vs CPU", "checksum ok"],
+    );
+    for w in [RsWorkload::small(), RsWorkload::large()] {
+        let cpu_ev = run(Mode::Cpu, LookupMode::Event, &w);
+        let cpu_hi = run(Mode::Cpu, LookupMode::History, &w);
+        for (label, mode, lm, base) in [
+            ("offload (event)", Mode::Offload, LookupMode::Event, &cpu_ev),
+            ("GPU First (event)", Mode::GpuFirst, LookupMode::Event, &cpu_ev),
+            ("GPU First (history)", Mode::GpuFirst, LookupMode::History, &cpu_hi),
+        ] {
+            let r = run(mode, lm, &w);
+            t.row(&[
+                w.label.to_string(),
+                label.to_string(),
+                fmt_ratio(r.speedup_vs(base)),
+                close(r.checksum, base.checksum, 1e-3).to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nexpected shape (paper §5.3.1): history ahead on the small input; event has CAUGHT UP \
+         at the large input (RSBench is compute-bound)."
+    );
+}

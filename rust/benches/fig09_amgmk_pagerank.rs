@@ -1,0 +1,40 @@
+//! E7 — Fig. 9c: AMGmk relax kernel and page-rank propagation step.
+
+use gpu_first::apps::common::{close, Mode};
+use gpu_first::apps::{amgmk, pagerank};
+use gpu_first::util::fmt_ratio;
+use gpu_first::util::table::Table;
+
+fn main() {
+    println!("== E7 / Fig. 9c: AMGmk + page-rank, GPU relative to CPU ==");
+    let mut t = Table::new(
+        "Fig. 9c — speedup over the CPU parallel region",
+        &["benchmark", "series", "modeled speedup vs CPU", "checksum ok"],
+    );
+
+    let aw = amgmk::AmgmkWorkload::default();
+    let a_cpu = amgmk::run(Mode::Cpu, &aw);
+    for (label, mode) in [("offload", Mode::Offload), ("GPU First", Mode::GpuFirst)] {
+        let r = amgmk::run(mode, &aw);
+        t.row(&[
+            "AMGmk relax".into(),
+            label.to_string(),
+            fmt_ratio(r.speedup_vs(&a_cpu)),
+            close(r.checksum, a_cpu.checksum, 1e-2).to_string(),
+        ]);
+    }
+
+    let pw = pagerank::PagerankWorkload::default();
+    let p_cpu = pagerank::run(Mode::Cpu, &pw);
+    for (label, mode) in [("offload", Mode::Offload), ("GPU First", Mode::GpuFirst)] {
+        let r = pagerank::run(mode, &pw);
+        t.row(&[
+            "page-rank".into(),
+            label.to_string(),
+            fmt_ratio(r.speedup_vs(&p_cpu)),
+            close(r.checksum, p_cpu.checksum, 1e-2).to_string(),
+        ]);
+    }
+    t.print();
+    println!("\nexpected shape (paper §5.3.4): GPU First tracks the manual offload on both.");
+}

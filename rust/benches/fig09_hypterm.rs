@@ -1,0 +1,32 @@
+//! E6 — Fig. 9b: the three hypterm parallel regions PR1-PR3.
+
+use gpu_first::apps::common::{close, Mode};
+use gpu_first::apps::hypterm::{run, HyptermWorkload};
+use gpu_first::util::fmt_ratio;
+use gpu_first::util::table::Table;
+
+fn main() {
+    println!("== E6 / Fig. 9b: hypterm stencil regions, GPU relative to CPU ==");
+    let w = HyptermWorkload::default();
+    let mut t = Table::new(
+        "Fig. 9b — speedup over the CPU parallel region",
+        &["region", "series", "modeled speedup vs CPU", "checksum ok"],
+    );
+    for region in 0..3 {
+        let cpu = run(Mode::Cpu, region, &w);
+        for (label, mode) in [("offload", Mode::Offload), ("GPU First", Mode::GpuFirst)] {
+            let r = run(mode, region, &w);
+            t.row(&[
+                format!("PR{}", region + 1),
+                label.to_string(),
+                fmt_ratio(r.speedup_vs(&cpu)),
+                close(r.checksum, cpu.checksum, 2e-2).to_string(),
+            ]);
+        }
+    }
+    t.print();
+    println!(
+        "\nexpected shape (paper §5.3.3): the performance behaviour of the manual offload \
+         matches the GPU First prediction on every region."
+    );
+}

@@ -1,0 +1,85 @@
+//! §Perf — L3 hot-path microbenchmarks tracked across the optimization
+//! pass (EXPERIMENTS.md §Perf): RPC round-trip, allocator fast paths,
+//! simulator launch overhead, device-memory access, PJRT execution.
+
+use gpu_first::alloc::{AllocCtx, BalancedAllocator, BalancedConfig, DeviceAllocator};
+use gpu_first::gpu::grid::{Device, LaunchConfig};
+use gpu_first::gpu::memory::{DeviceMemory, MemConfig, GLOBAL_BASE};
+use gpu_first::rpc::{ArgMode, HostEnv, RpcArgInfo, RpcClient, RpcServer, WrapperRegistry};
+use gpu_first::util::bench::{bb, Bencher};
+use std::sync::Arc;
+
+fn main() {
+    println!("== §Perf: L3 hot paths ==");
+    let mut b = Bencher::from_env();
+
+    // Device memory substrate.
+    let mem = DeviceMemory::new(MemConfig::small());
+    let a = GLOBAL_BASE + 1024;
+    b.bench("mem.write_u64+read_u64 (aligned)", || {
+        mem.write_u64(a, 0x1234_5678);
+        bb(mem.read_u64(a));
+    });
+    let buf = [7u8; 256];
+    b.bench("mem.write_bytes 256B (aligned)", || {
+        mem.write_bytes(a, &buf);
+    });
+    b.bench("mem.write_bytes 256B (unaligned)", || {
+        mem.write_bytes(a + 3, &buf);
+    });
+
+    // Allocator fast path.
+    let bal = BalancedAllocator::new(GLOBAL_BASE, 64 << 20, BalancedConfig::default());
+    b.bench("balanced alloc+free fast path", || {
+        let p = bal.malloc(AllocCtx::default(), 256).unwrap();
+        bal.free(p).unwrap();
+    });
+
+    // Grid launch overhead (empty kernels).
+    let dev = Device::small();
+    b.bench("launch 1x128 empty", || {
+        bb(dev.launch(LaunchConfig::new(1, 128), |_| {}));
+    });
+    b.bench("launch 64x128 empty", || {
+        bb(dev.launch(LaunchConfig::new(64, 128), |_| {}));
+    });
+
+    // Real RPC round-trip (protocol cost without the modeled wait).
+    let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+    let registry = Arc::new(WrapperRegistry::new());
+    let id = registry.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+    let id_ref = registry.register(
+        "__len_cp",
+        Box::new(|f, _| f.cstr(0).len() as i64),
+    );
+    let env = Arc::new(HostEnv::new());
+    let server = RpcServer::start(Arc::clone(&mem), Arc::clone(&registry), env);
+    let str_addr = GLOBAL_BASE + 512;
+    mem.write_cstr(str_addr, &"y".repeat(127));
+    {
+        let mut client = RpcClient::new(&mem);
+        b.bench("rpc round-trip (1 value arg)", || {
+            let mut info = RpcArgInfo::new();
+            info.add_val(42);
+            bb(client.call(id, &info, None));
+        });
+        b.bench("rpc round-trip (128B ref arg rw)", || {
+            let mut info = RpcArgInfo::new();
+            info.add_ref(str_addr, ArgMode::ReadWrite, 128, 0);
+            bb(client.call(id_ref, &info, None));
+        });
+    }
+    server.stop();
+
+    // PJRT execution (offload request path).
+    gpu_first::apps::common::with_runtime(|rt| {
+        let n = 1 << 20;
+        let x: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let mut bench = Bencher::quick();
+        bench.bench("pjrt interleaved_soa 1M elems", || {
+            bb(rt
+                .execute_f32("interleaved_soa", &[(&x, &[n]), (&x, &[n]), (&x, &[n]), (&x, &[n])])
+                .unwrap());
+        });
+    });
+}

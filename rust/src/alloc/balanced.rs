@@ -1,0 +1,436 @@
+//! The *balanced* allocator (paper §3.4, Fig. 5) — the paper's
+//! domain-specific contribution for massively parallel alloc/dealloc.
+//!
+//! The heap is divided into `N × M` chunks; a thread with `(tid, team)` uses
+//! chunk `(tid mod N) + (team mod M) * N`. One lock per chunk; different
+//! chunks are fully independent. Within a chunk, allocation bumps a
+//! *watermark*; deallocation marks the entry unused without touching the
+//! encoding. When the **top** entry is unused, the watermark is moved back
+//! (repeatedly), reclaiming space with minimal overhead — ideal for the
+//! balanced alloc/dealloc-at-region-boundary pattern of the SPEC OMP codes.
+//! If the watermark hits the chunk end, a linear traversal tries to reuse an
+//! unreclaimed hole.
+//!
+//! Because large serial-phase allocations are performed by the initial
+//! thread (always thread 0 of team 0), the **first chunk is larger** than
+//! the rest by a configurable ratio.
+
+use super::{align_up, AllocCtx, AllocError, AllocStats, DeviceAllocator, ObjRecord, ALIGN};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BalancedConfig {
+    /// Thread slots (N).
+    pub n: usize,
+    /// Team slots (M).
+    pub m: usize,
+    /// Fraction of the heap reserved for chunk 0 (the initial thread's).
+    pub first_chunk_ratio: f64,
+}
+
+impl Default for BalancedConfig {
+    fn default() -> Self {
+        // The paper's evaluation uses balanced[32,16].
+        Self { n: 32, m: 16, first_chunk_ratio: 0.25 }
+    }
+}
+
+#[derive(Debug, Clone, Copy)]
+struct Entry {
+    base: u64,
+    /// Hole size (allocation rounded up; reused holes keep their size).
+    size: u64,
+    used: bool,
+}
+
+struct Chunk {
+    base: u64,
+    size: u64,
+    /// Address-ordered entries below the watermark (bases strictly
+    /// increasing; entries are never moved, matching the in-heap encoding).
+    entries: Vec<Entry>,
+    watermark: u64,
+    ops: u64,
+    live_bytes: u64,
+}
+
+impl Chunk {
+    fn new(base: u64, size: u64) -> Self {
+        Self { base, size, entries: Vec::new(), watermark: base, ops: 0, live_bytes: 0 }
+    }
+
+    fn malloc(&mut self, size: u64) -> Option<u64> {
+        self.ops += 1;
+        // Fast path: bump the watermark.
+        if self.watermark + size <= self.base + self.size {
+            let addr = self.watermark;
+            self.watermark += size;
+            self.entries.push(Entry { base: addr, size, used: true });
+            self.live_bytes += size;
+            return Some(addr);
+        }
+        // Slow path: linear traversal for an unreclaimed hole (paper: "we
+        // need to traverse the list until a suitable entry is found, which
+        // can be costly in practice").
+        for e in self.entries.iter_mut() {
+            if !e.used && e.size >= size {
+                e.used = true;
+                self.live_bytes += e.size;
+                return Some(e.base);
+            }
+        }
+        None
+    }
+
+    fn free(&mut self, addr: u64) -> Result<(), AllocError> {
+        self.ops += 1;
+        // Entries are base-ordered: binary search.
+        let idx = self
+            .entries
+            .binary_search_by(|e| e.base.cmp(&addr))
+            .map_err(|_| AllocError::InvalidFree { addr })?;
+        if !self.entries[idx].used {
+            return Err(AllocError::InvalidFree { addr });
+        }
+        self.entries[idx].used = false;
+        self.live_bytes -= self.entries[idx].size;
+        // Reclaim from the top while the top entry is unused (Fig. 5 bottom).
+        while let Some(top) = self.entries.last() {
+            if top.used {
+                break;
+            }
+            self.watermark = top.base;
+            self.entries.pop();
+        }
+        Ok(())
+    }
+
+    fn lookup(&self, addr: u64) -> Option<ObjRecord> {
+        let idx = match self.entries.binary_search_by(|e| e.base.cmp(&addr)) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let e = &self.entries[idx];
+        if e.used && addr < e.base + e.size {
+            Some(ObjRecord { base: e.base, size: e.size })
+        } else {
+            None
+        }
+    }
+}
+
+pub struct BalancedAllocator {
+    cfg: BalancedConfig,
+    base: u64,
+    size: u64,
+    chunks: Vec<Mutex<Chunk>>,
+    /// Chunk boundaries for address→chunk lookup: chunk i covers
+    /// `[starts[i], starts[i+1])`.
+    starts: Vec<u64>,
+    mallocs: AtomicU64,
+    frees: AtomicU64,
+    failed: AtomicU64,
+}
+
+impl BalancedAllocator {
+    pub fn new(base: u64, size: u64, cfg: BalancedConfig) -> Self {
+        assert!(cfg.n >= 1 && cfg.m >= 1);
+        assert!((0.0..1.0).contains(&cfg.first_chunk_ratio));
+        let base = align_up(base, ALIGN);
+        let total = cfg.n * cfg.m;
+        let mut sizes = vec![0u64; total];
+        if total == 1 {
+            sizes[0] = size;
+        } else {
+            let first = align_up((size as f64 * cfg.first_chunk_ratio) as u64, ALIGN);
+            let rest = (size - first) / (total as u64 - 1);
+            let rest = rest & !(ALIGN - 1);
+            sizes[0] = first;
+            for s in sizes.iter_mut().skip(1) {
+                *s = rest;
+            }
+        }
+        let mut chunks = Vec::with_capacity(total);
+        let mut starts = Vec::with_capacity(total + 1);
+        let mut cursor = base;
+        for &s in &sizes {
+            starts.push(cursor);
+            chunks.push(Mutex::new(Chunk::new(cursor, s)));
+            cursor += s;
+        }
+        starts.push(cursor);
+        Self {
+            cfg,
+            base,
+            size,
+            chunks,
+            starts,
+            mallocs: AtomicU64::new(0),
+            frees: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> BalancedConfig {
+        self.cfg
+    }
+
+    /// Total managed heap bytes.
+    pub fn heap_size(&self) -> u64 {
+        self.size
+    }
+
+    #[inline]
+    fn chunk_of(&self, ctx: AllocCtx) -> usize {
+        (ctx.thread_id % self.cfg.n) + (ctx.team_id % self.cfg.m) * self.cfg.n
+    }
+
+    fn chunk_by_addr(&self, addr: u64) -> Option<usize> {
+        if addr < self.base || addr >= self.starts[self.starts.len() - 1] {
+            return None;
+        }
+        match self.starts.binary_search(&addr) {
+            Ok(i) => Some(i.min(self.chunks.len() - 1)),
+            Err(i) => Some(i - 1),
+        }
+    }
+
+    /// Test hook: per-chunk (watermark offset, live entries, total entries).
+    pub fn chunk_debug(&self, idx: usize) -> (u64, usize, usize) {
+        let c = self.chunks[idx].lock().unwrap();
+        (c.watermark - c.base, c.entries.iter().filter(|e| e.used).count(), c.entries.len())
+    }
+
+    /// Invariant check for tests: entries base-ordered, disjoint, below the
+    /// watermark, inside the chunk.
+    pub fn check_invariants(&self) {
+        for (i, ch) in self.chunks.iter().enumerate() {
+            let c = ch.lock().unwrap();
+            let mut cursor = c.base;
+            for e in &c.entries {
+                assert!(e.base >= cursor, "chunk {i}: overlapping entries");
+                cursor = e.base + e.size;
+            }
+            assert!(cursor <= c.watermark, "chunk {i}: entry past watermark");
+            assert!(c.watermark <= c.base + c.size, "chunk {i}: watermark past end");
+            if let Some(top) = c.entries.last() {
+                assert!(top.used, "chunk {i}: unreclaimed unused top entry");
+            }
+        }
+    }
+}
+
+impl DeviceAllocator for BalancedAllocator {
+    fn name(&self) -> &'static str {
+        "balanced"
+    }
+
+    fn malloc(&self, ctx: AllocCtx, size: u64) -> Result<u64, AllocError> {
+        let size = align_up(size.max(1), ALIGN);
+        self.mallocs.fetch_add(1, Ordering::Relaxed);
+        let idx = self.chunk_of(ctx);
+        let mut c = self.chunks[idx].lock().unwrap();
+        match c.malloc(size) {
+            Some(addr) => Ok(addr),
+            None => {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                Err(AllocError::OutOfChunk { chunk: idx, requested: size })
+            }
+        }
+    }
+
+    fn free(&self, addr: u64) -> Result<(), AllocError> {
+        self.frees.fetch_add(1, Ordering::Relaxed);
+        let idx = self.chunk_by_addr(addr).ok_or(AllocError::InvalidFree { addr })?;
+        self.chunks[idx].lock().unwrap().free(addr)
+    }
+
+    fn lookup(&self, addr: u64) -> Option<ObjRecord> {
+        let idx = self.chunk_by_addr(addr)?;
+        self.chunks[idx].lock().unwrap().lookup(addr)
+    }
+
+    fn stats(&self) -> AllocStats {
+        let mut per_lock_ops = Vec::with_capacity(self.chunks.len());
+        let mut live = 0;
+        for ch in &self.chunks {
+            let c = ch.lock().unwrap();
+            per_lock_ops.push(c.ops);
+            live += c.live_bytes;
+        }
+        AllocStats {
+            mallocs: self.mallocs.load(Ordering::Relaxed),
+            frees: self.frees.load(Ordering::Relaxed),
+            failed: self.failed.load(Ordering::Relaxed),
+            per_lock_ops,
+            live_bytes: live,
+            peak_live_bytes: 0, // not tracked per chunk
+        }
+    }
+
+    fn reset(&self) {
+        for ch in &self.chunks {
+            let mut c = ch.lock().unwrap();
+            c.entries.clear();
+            c.watermark = c.base;
+            c.ops = 0;
+            c.live_bytes = 0;
+        }
+        self.mallocs.store(0, Ordering::Relaxed);
+        self.frees.store(0, Ordering::Relaxed);
+        self.failed.store(0, Ordering::Relaxed);
+    }
+
+    fn per_op_ns(&self) -> f64 {
+        crate::perfmodel::a100::BALANCED_ALLOC_OP_NS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn balanced() -> BalancedAllocator {
+        BalancedAllocator::new(
+            0x1000,
+            4 << 20,
+            BalancedConfig { n: 4, m: 2, first_chunk_ratio: 0.25 },
+        )
+    }
+
+    #[test]
+    fn different_slots_get_disjoint_chunks() {
+        let a = balanced();
+        let p0 = a.malloc(AllocCtx { thread_id: 0, team_id: 0 }, 64).unwrap();
+        let p1 = a.malloc(AllocCtx { thread_id: 1, team_id: 0 }, 64).unwrap();
+        let p2 = a.malloc(AllocCtx { thread_id: 0, team_id: 1 }, 64).unwrap();
+        assert_ne!(a.chunk_by_addr(p0), a.chunk_by_addr(p1));
+        assert_ne!(a.chunk_by_addr(p0), a.chunk_by_addr(p2));
+        a.check_invariants();
+    }
+
+    #[test]
+    fn first_chunk_is_larger() {
+        let a = balanced();
+        let c0 = a.chunks[0].lock().unwrap().size;
+        let c1 = a.chunks[1].lock().unwrap().size;
+        assert!(c0 > 2 * c1, "first chunk {c0} should dwarf {c1}");
+    }
+
+    #[test]
+    fn watermark_reclaims_top_lazily() {
+        let a = balanced();
+        let ctx = AllocCtx { thread_id: 2, team_id: 0 };
+        let p1 = a.malloc(ctx, 100).unwrap();
+        let p2 = a.malloc(ctx, 100).unwrap();
+        let p3 = a.malloc(ctx, 100).unwrap();
+        let idx = a.chunk_of(ctx);
+        // Free the middle: encoding unchanged (3 entries, one unused).
+        a.free(p2).unwrap();
+        let (_, used, total) = a.chunk_debug(idx);
+        assert_eq!((used, total), (2, 3));
+        // Free the top: the top AND the previously-freed middle reclaim.
+        a.free(p3).unwrap();
+        let (wm_off, used, total) = a.chunk_debug(idx);
+        assert_eq!((used, total), (1, 1));
+        assert_eq!(wm_off, align_up(100, ALIGN));
+        a.free(p1).unwrap();
+        let (wm_off, _, total) = a.chunk_debug(idx);
+        assert_eq!((wm_off, total), (0, 0));
+        a.check_invariants();
+    }
+
+    #[test]
+    fn hole_reuse_after_exhaustion() {
+        let a = BalancedAllocator::new(
+            0x1000,
+            64 * 1024,
+            BalancedConfig { n: 1, m: 1, first_chunk_ratio: 0.5 },
+        );
+        let ctx = AllocCtx::default();
+        // Fill the chunk.
+        let mut ptrs = Vec::new();
+        loop {
+            match a.malloc(ctx, 1024) {
+                Ok(p) => ptrs.push(p),
+                Err(_) => break,
+            }
+        }
+        assert!(ptrs.len() >= 32);
+        // Free a middle entry; the next alloc must reuse its hole.
+        let victim = ptrs[ptrs.len() / 2];
+        a.free(victim).unwrap();
+        let p = a.malloc(ctx, 512).unwrap();
+        assert_eq!(p, victim, "slow path should reuse the unreclaimed hole");
+        a.check_invariants();
+    }
+
+    #[test]
+    fn out_of_chunk_while_others_empty() {
+        let a = balanced();
+        let ctx = AllocCtx { thread_id: 3, team_id: 1 };
+        let chunk_size = {
+            let idx = a.chunk_of(ctx);
+            a.chunks[idx].lock().unwrap().size
+        };
+        // One chunk exhausted even though the heap is mostly empty.
+        assert!(matches!(
+            a.malloc(ctx, chunk_size + 1024),
+            Err(AllocError::OutOfChunk { .. })
+        ));
+    }
+
+    #[test]
+    fn lookup_resolves_interior_pointers() {
+        let a = balanced();
+        let ctx = AllocCtx { thread_id: 1, team_id: 1 };
+        let p = a.malloc(ctx, 256).unwrap();
+        assert_eq!(a.lookup(p + 128).unwrap().base, p);
+        a.free(p).unwrap();
+        assert!(a.lookup(p + 128).is_none());
+    }
+
+    #[test]
+    fn concurrent_balanced_stress() {
+        use std::sync::Arc;
+        let a = Arc::new(BalancedAllocator::new(0x1000, 32 << 20, BalancedConfig::default()));
+        let handles: Vec<_> = (0..16usize)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    let ctx = AllocCtx { thread_id: t, team_id: t / 4 };
+                    for _ in 0..200 {
+                        // The SPEC OMP pattern: alloc at region start, free at end.
+                        let ps: Vec<u64> =
+                            (0..8).map(|i| a.malloc(ctx, 64 + i * 32).unwrap()).collect();
+                        for p in ps.into_iter().rev() {
+                            a.free(p).unwrap();
+                        }
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        a.check_invariants();
+        assert_eq!(a.stats().live_bytes, 0);
+        // Balanced pattern with LIFO frees ⇒ full reclamation everywhere.
+        for i in 0..a.chunks.len() {
+            assert_eq!(a.chunk_debug(i).0, 0, "chunk {i} not fully reclaimed");
+        }
+    }
+
+    #[test]
+    fn stats_report_per_chunk_lock_domains() {
+        let a = balanced();
+        let _ = a.malloc(AllocCtx { thread_id: 0, team_id: 0 }, 64).unwrap();
+        let _ = a.malloc(AllocCtx { thread_id: 1, team_id: 0 }, 64).unwrap();
+        let s = a.stats();
+        assert_eq!(s.per_lock_ops.len(), 8);
+        assert_eq!(s.per_lock_ops.iter().sum::<u64>(), 2);
+        assert_eq!(s.modeled_ns(10.0), 10.0, "independent chunks don't serialize");
+    }
+}

@@ -1,0 +1,267 @@
+//! The single-thread *generic* allocator (paper §3.4).
+//!
+//! "The single-thread generic allocator tracks all allocations in two linked
+//! lists: an allocation list and a free list. Each thread can use the entire
+//! heap space if necessary, but access to the lists has to be mutually
+//! exclusive, which can become a performance bottleneck for applications
+//! that allocate heap memory concurrently."
+//!
+//! We keep the same structure — one lock, an allocation map, a free list
+//! with first-fit and coalescing — with the lists held host-side (the
+//! simulator's equivalent of metadata in device memory).
+
+use super::{align_up, AllocCtx, AllocError, AllocStats, DeviceAllocator, ObjRecord, ALIGN};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+struct Inner {
+    /// base -> size of live allocations.
+    allocs: BTreeMap<u64, u64>,
+    /// base -> size of free holes (coalesced, address ordered).
+    free: BTreeMap<u64, u64>,
+    live_bytes: u64,
+    peak_live_bytes: u64,
+}
+
+pub struct GenericAllocator {
+    base: u64,
+    size: u64,
+    inner: Mutex<Inner>,
+    mallocs: AtomicU64,
+    frees: AtomicU64,
+    failed: AtomicU64,
+}
+
+impl GenericAllocator {
+    pub fn new(base: u64, size: u64) -> Self {
+        let base = align_up(base, ALIGN);
+        Self {
+            base,
+            size,
+            inner: Mutex::new(Inner {
+                allocs: BTreeMap::new(),
+                free: BTreeMap::from([(base, size)]),
+                live_bytes: 0,
+                peak_live_bytes: 0,
+            }),
+            mallocs: AtomicU64::new(0),
+            frees: AtomicU64::new(0),
+            failed: AtomicU64::new(0),
+        }
+    }
+
+    /// Whole-heap invariant check (tests): free holes + live allocations
+    /// tile the heap without overlap.
+    pub fn check_invariants(&self) {
+        let g = self.inner.lock().unwrap();
+        let mut regions: Vec<(u64, u64, bool)> = g
+            .allocs
+            .iter()
+            .map(|(&b, &s)| (b, s, true))
+            .chain(g.free.iter().map(|(&b, &s)| (b, s, false)))
+            .collect();
+        regions.sort_by_key(|r| r.0);
+        let mut cursor = self.base;
+        let mut prev_free = false;
+        for (b, s, used) in regions {
+            assert!(b >= cursor, "overlap at {b:#x} (cursor {cursor:#x})");
+            if !used {
+                assert!(!prev_free || b > cursor, "adjacent uncoalesced free holes");
+            }
+            cursor = b + s;
+            prev_free = !used;
+        }
+        assert!(cursor <= self.base + self.size, "region past heap end");
+    }
+}
+
+impl DeviceAllocator for GenericAllocator {
+    fn name(&self) -> &'static str {
+        "generic"
+    }
+
+    fn malloc(&self, _ctx: AllocCtx, size: u64) -> Result<u64, AllocError> {
+        let size = align_up(size.max(1), ALIGN);
+        self.mallocs.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        // First fit over the address-ordered free list.
+        let found = g.free.iter().find(|(_, &s)| s >= size).map(|(&b, &s)| (b, s));
+        match found {
+            Some((hole_base, hole_size)) => {
+                g.free.remove(&hole_base);
+                if hole_size > size {
+                    g.free.insert(hole_base + size, hole_size - size);
+                }
+                g.allocs.insert(hole_base, size);
+                g.live_bytes += size;
+                g.peak_live_bytes = g.peak_live_bytes.max(g.live_bytes);
+                Ok(hole_base)
+            }
+            None => {
+                self.failed.fetch_add(1, Ordering::Relaxed);
+                Err(AllocError::OutOfMemory { requested: size })
+            }
+        }
+    }
+
+    fn free(&self, addr: u64) -> Result<(), AllocError> {
+        self.frees.fetch_add(1, Ordering::Relaxed);
+        let mut g = self.inner.lock().unwrap();
+        let size = g.allocs.remove(&addr).ok_or(AllocError::InvalidFree { addr })?;
+        g.live_bytes -= size;
+        // Insert into free list, coalescing with neighbours.
+        let mut base = addr;
+        let mut len = size;
+        if let Some((&pb, &ps)) = g.free.range(..addr).next_back() {
+            if pb + ps == addr {
+                g.free.remove(&pb);
+                base = pb;
+                len += ps;
+            }
+        }
+        if let Some(&ns) = g.free.get(&(addr + size)) {
+            g.free.remove(&(addr + size));
+            len += ns;
+        }
+        g.free.insert(base, len);
+        Ok(())
+    }
+
+    fn lookup(&self, addr: u64) -> Option<ObjRecord> {
+        let g = self.inner.lock().unwrap();
+        let (&base, &size) = g.allocs.range(..=addr).next_back()?;
+        if addr < base + size {
+            Some(ObjRecord { base, size })
+        } else {
+            None
+        }
+    }
+
+    fn stats(&self) -> AllocStats {
+        let g = self.inner.lock().unwrap();
+        let mallocs = self.mallocs.load(Ordering::Relaxed);
+        let frees = self.frees.load(Ordering::Relaxed);
+        AllocStats {
+            mallocs,
+            frees,
+            failed: self.failed.load(Ordering::Relaxed),
+            per_lock_ops: vec![mallocs + frees],
+            live_bytes: g.live_bytes,
+            peak_live_bytes: g.peak_live_bytes,
+        }
+    }
+
+    fn reset(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.allocs.clear();
+        g.free = BTreeMap::from([(self.base, self.size)]);
+        g.live_bytes = 0;
+        g.peak_live_bytes = 0;
+        self.mallocs.store(0, Ordering::Relaxed);
+        self.frees.store(0, Ordering::Relaxed);
+        self.failed.store(0, Ordering::Relaxed);
+    }
+
+    /// List traversal + lock, but no vendor-runtime overhead; calibrated in
+    /// `perfmodel::a100`.
+    fn per_op_ns(&self) -> f64 {
+        crate::perfmodel::a100::GENERIC_ALLOC_OP_NS
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn alloc() -> GenericAllocator {
+        GenericAllocator::new(0x1000, 1 << 20)
+    }
+
+    #[test]
+    fn alloc_free_cycle() {
+        let a = alloc();
+        let ctx = AllocCtx::default();
+        let p1 = a.malloc(ctx, 100).unwrap();
+        let p2 = a.malloc(ctx, 200).unwrap();
+        assert_ne!(p1, p2);
+        assert!(p1 % ALIGN == 0 && p2 % ALIGN == 0);
+        a.free(p1).unwrap();
+        a.free(p2).unwrap();
+        a.check_invariants();
+        // Whole heap coalesced: a huge allocation fits again.
+        let p3 = a.malloc(ctx, (1 << 20) - 64).unwrap();
+        a.free(p3).unwrap();
+    }
+
+    #[test]
+    fn lookup_interior_pointer() {
+        let a = alloc();
+        let p = a.malloc(AllocCtx::default(), 256).unwrap();
+        let rec = a.lookup(p + 100).unwrap();
+        assert_eq!(rec.base, p);
+        assert_eq!(rec.size, 256);
+        assert!(a.lookup(p + 256).is_none());
+        a.free(p).unwrap();
+        assert!(a.lookup(p).is_none());
+    }
+
+    #[test]
+    fn double_free_rejected() {
+        let a = alloc();
+        let p = a.malloc(AllocCtx::default(), 8).unwrap();
+        a.free(p).unwrap();
+        assert_eq!(a.free(p), Err(AllocError::InvalidFree { addr: p }));
+    }
+
+    #[test]
+    fn oom_reported() {
+        let a = GenericAllocator::new(0x1000, 1024);
+        assert!(matches!(
+            a.malloc(AllocCtx::default(), 4096),
+            Err(AllocError::OutOfMemory { .. })
+        ));
+        assert_eq!(a.stats().failed, 1);
+    }
+
+    #[test]
+    fn reuse_after_free_first_fit() {
+        let a = alloc();
+        let ctx = AllocCtx::default();
+        let p1 = a.malloc(ctx, 128).unwrap();
+        let _p2 = a.malloc(ctx, 128).unwrap();
+        a.free(p1).unwrap();
+        let p3 = a.malloc(ctx, 64).unwrap();
+        assert_eq!(p3, p1, "first-fit should reuse the freed hole");
+        a.check_invariants();
+    }
+
+    #[test]
+    fn concurrent_stress_preserves_invariants() {
+        use std::sync::Arc;
+        let a = Arc::new(alloc());
+        let handles: Vec<_> = (0..8usize)
+            .map(|t| {
+                let a = Arc::clone(&a);
+                std::thread::spawn(move || {
+                    let ctx = AllocCtx { thread_id: t, team_id: 0 };
+                    let mut ptrs = Vec::new();
+                    for i in 0..500u64 {
+                        ptrs.push(a.malloc(ctx, 16 + (i % 7) * 24).unwrap());
+                        if i % 3 == 0 {
+                            a.free(ptrs.remove(0)).unwrap();
+                        }
+                    }
+                    for p in ptrs {
+                        a.free(p).unwrap();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        a.check_invariants();
+        assert_eq!(a.stats().live_bytes, 0);
+    }
+}

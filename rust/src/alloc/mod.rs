@@ -1,0 +1,139 @@
+//! Device heap allocators (paper §3.4).
+//!
+//! The paper ships two configurable allocators selected via
+//! `-fopenmp-target-allocator={generic,balanced[N,M]}`:
+//!
+//! * [`generic::GenericAllocator`] — single-lock free-list allocator; any
+//!   thread can use the whole heap, list access is mutually exclusive.
+//! * [`balanced::BalancedAllocator`] — the paper's contribution: the heap is
+//!   split into N×M chunks keyed by `(thread id mod N, team id mod M)`, one
+//!   lock per chunk, watermark bump allocation with lazy reclamation of the
+//!   top entry, and an oversized first chunk for the initial thread.
+//! * [`vendor::VendorAllocator`] — a model of the NVIDIA-provided device
+//!   `malloc` (globally serializing, high fixed per-op cost), the Fig. 6
+//!   baseline.
+//!
+//! All allocators also maintain the **allocation tracking** records that the
+//! RPC pass's dynamic underlying-object lookup (`_FindObj`, paper §3.2)
+//! queries at runtime via [`DeviceAllocator::lookup`].
+
+pub mod generic;
+pub mod balanced;
+pub mod vendor;
+
+pub use balanced::{BalancedAllocator, BalancedConfig};
+pub use generic::GenericAllocator;
+pub use vendor::VendorAllocator;
+
+use std::fmt;
+
+/// Alignment of every allocation (GPU-friendly 16B).
+pub const ALIGN: u64 = 16;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AllocError {
+    OutOfMemory { requested: u64 },
+    /// Balanced allocator: the thread's chunk is exhausted even though other
+    /// chunks may be mostly empty (paper §3.4 discusses exactly this mode).
+    OutOfChunk { chunk: usize, requested: u64 },
+    InvalidFree { addr: u64 },
+}
+
+impl fmt::Display for AllocError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            AllocError::OutOfMemory { requested } => write!(f, "out of device heap ({requested} B)"),
+            AllocError::OutOfChunk { chunk, requested } => {
+                write!(f, "chunk {chunk} exhausted ({requested} B requested)")
+            }
+            AllocError::InvalidFree { addr } => write!(f, "invalid free of {addr:#x}"),
+        }
+    }
+}
+
+impl std::error::Error for AllocError {}
+
+/// An allocation record: the *underlying object* the RPC pass resolves
+/// pointers against at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ObjRecord {
+    pub base: u64,
+    pub size: u64,
+}
+
+/// Aggregate operation statistics, used by the Fig. 6 cost model: vendor and
+/// generic allocators serialize on one lock, balanced on one lock per chunk.
+#[derive(Debug, Clone, Default)]
+pub struct AllocStats {
+    pub mallocs: u64,
+    pub frees: u64,
+    pub failed: u64,
+    /// Operations per lock domain (len 1 for the single-lock allocators).
+    pub per_lock_ops: Vec<u64>,
+    pub live_bytes: u64,
+    pub peak_live_bytes: u64,
+}
+
+impl AllocStats {
+    /// Modeled serialized time: each lock domain serializes its operations;
+    /// domains proceed in parallel ⇒ the critical path is the busiest lock.
+    pub fn modeled_ns(&self, per_op_ns: f64) -> f64 {
+        self.per_lock_ops
+            .iter()
+            .map(|&ops| ops as f64 * per_op_ns)
+            .fold(0.0, f64::max)
+    }
+}
+
+/// Identity of the simulated thread performing an allocator call; the
+/// balanced allocator derives the chunk from it.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct AllocCtx {
+    pub thread_id: usize,
+    pub team_id: usize,
+}
+
+pub trait DeviceAllocator: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn malloc(&self, ctx: AllocCtx, size: u64) -> Result<u64, AllocError>;
+
+    fn free(&self, addr: u64) -> Result<(), AllocError>;
+
+    /// Dynamic underlying-object lookup (`_FindObj`): given an interior
+    /// pointer, return the containing allocation if the address belongs to a
+    /// live heap object.
+    fn lookup(&self, addr: u64) -> Option<ObjRecord>;
+
+    fn stats(&self) -> AllocStats;
+
+    /// Reset heap to empty (between bench iterations).
+    fn reset(&self);
+
+    /// Modeled cost of one allocator operation, excluding serialization
+    /// (which `AllocStats::modeled_ns` derives from lock-domain traffic).
+    fn per_op_ns(&self) -> f64;
+}
+
+pub(crate) fn align_up(x: u64, align: u64) -> u64 {
+    (x + align - 1) & !(align - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn align_up_works() {
+        assert_eq!(align_up(0, 16), 0);
+        assert_eq!(align_up(1, 16), 16);
+        assert_eq!(align_up(16, 16), 16);
+        assert_eq!(align_up(17, 16), 32);
+    }
+
+    #[test]
+    fn modeled_ns_is_max_over_domains() {
+        let s = AllocStats { per_lock_ops: vec![10, 50, 20], ..Default::default() };
+        assert_eq!(s.modeled_ns(2.0), 100.0);
+    }
+}

@@ -1,0 +1,137 @@
+//! Call graph over the module: which functions call which, and which call
+//! sites target *undefined* (library) functions — the RPC pass's worklist.
+
+use crate::ir::{Instr, Module};
+use std::collections::{BTreeMap, BTreeSet};
+
+#[derive(Debug, Default)]
+pub struct CallGraph {
+    /// caller -> callees (defined functions only).
+    pub edges: BTreeMap<String, BTreeSet<String>>,
+    /// caller -> library (undefined, non-intrinsic) callees.
+    pub library_calls: BTreeMap<String, BTreeSet<String>>,
+}
+
+impl CallGraph {
+    pub fn build(m: &Module) -> Self {
+        let mut cg = CallGraph::default();
+        for (name, f) in &m.functions {
+            let mut defined = BTreeSet::new();
+            let mut lib = BTreeSet::new();
+            walk(&f.body, &mut |ins| {
+                if let Instr::Call { callee, .. } = ins {
+                    if m.is_defined(callee) {
+                        defined.insert(callee.clone());
+                    } else if !Module::is_native_intrinsic(callee) {
+                        lib.insert(callee.clone());
+                    }
+                }
+            });
+            cg.edges.insert(name.clone(), defined);
+            cg.library_calls.insert(name.clone(), lib);
+        }
+        cg
+    }
+
+    /// All library functions called anywhere in the module.
+    pub fn all_library_callees(&self) -> BTreeSet<String> {
+        self.library_calls.values().flatten().cloned().collect()
+    }
+
+    /// Does `f` (transitively) contain a parallel region?
+    pub fn transitively_parallel(&self, m: &Module, f: &str) -> bool {
+        let mut seen = BTreeSet::new();
+        let mut stack = vec![f.to_string()];
+        while let Some(cur) = stack.pop() {
+            if !seen.insert(cur.clone()) {
+                continue;
+            }
+            if let Some(func) = m.functions.get(&cur) {
+                let mut found = false;
+                walk(&func.body, &mut |ins| {
+                    if matches!(ins, Instr::Parallel { .. }) {
+                        found = true;
+                    }
+                });
+                if found {
+                    return true;
+                }
+            }
+            if let Some(callees) = self.edges.get(&cur) {
+                stack.extend(callees.iter().cloned());
+            }
+        }
+        false
+    }
+}
+
+/// Depth-first walk over all instructions including nested bodies.
+pub fn walk(body: &[Instr], f: &mut impl FnMut(&Instr)) {
+    for ins in body {
+        f(ins);
+        match ins {
+            Instr::If { then_body, else_body, .. } => {
+                walk(then_body, f);
+                walk(else_body, f);
+            }
+            Instr::While { cond, body, .. } => {
+                walk(cond, f);
+                walk(body, f);
+            }
+            Instr::For { body, .. } | Instr::Parallel { body, .. } => walk(body, f),
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    const SRC: &str = r#"
+func @helper() -> void {
+  call fprintf(2)
+  return
+}
+
+func @par() -> void {
+  parallel {
+    %t = tid
+  }
+  return
+}
+
+func @main() -> i64 {
+  call helper()
+  call par()
+  %p = call malloc(8)
+  call fscanf(0)
+  return 0
+}
+"#;
+
+    #[test]
+    fn classifies_call_kinds() {
+        let m = parse_module(SRC).unwrap();
+        let cg = CallGraph::build(&m);
+        assert!(cg.edges["main"].contains("helper"));
+        assert!(cg.edges["main"].contains("par"));
+        assert!(cg.library_calls["main"].contains("fscanf"));
+        assert!(!cg.library_calls["main"].contains("malloc"), "intrinsics are not library calls");
+        assert!(cg.library_calls["helper"].contains("fprintf"));
+        assert_eq!(
+            cg.all_library_callees(),
+            ["fprintf", "fscanf"].iter().map(|s| s.to_string()).collect()
+        );
+    }
+
+    #[test]
+    fn transitive_parallelism() {
+        let m = parse_module(SRC).unwrap();
+        let cg = CallGraph::build(&m);
+        assert!(cg.transitively_parallel(&m, "main"));
+        assert!(cg.transitively_parallel(&m, "par"));
+        assert!(!cg.transitively_parallel(&m, "helper"));
+    }
+}

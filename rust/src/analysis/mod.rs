@@ -1,0 +1,15 @@
+//! Interprocedural analyses backing the RPC generation pass.
+//!
+//! * [`objects`] — the underlying-object analysis (the reproduction's
+//!   stand-in for LLVM's Attributor-based reasoning in paper §3.2): for a
+//!   pointer operand at a call site, determine the object(s) it may point
+//!   into, their sizes, the pointer's offset, and whether the set is a
+//!   single static object, a statically enumerable set, or requires a
+//!   dynamic lookup.
+//! * [`callgraph`] — call-graph construction over the module (used to
+//!   decide which calls are library calls and for multi-team eligibility).
+
+pub mod objects;
+pub mod callgraph;
+
+pub use objects::{classify_operand, ObjClass, ObjOrigin, OffKind};

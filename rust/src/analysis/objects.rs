@@ -1,0 +1,312 @@
+//! Underlying-object analysis (paper §3.2).
+//!
+//! Classifies a pointer-valued operand at a call site into the paper's
+//! three argument kinds:
+//!
+//! 1. a **value** (integer constant, or a pointer of unknown host origin
+//!    treated as opaque),
+//! 2. a pointer into a **statically identified object** — an `alloca` or a
+//!    global — with known size and (constant or dynamic) offset,
+//! 3. a **statically enumerable set** of such objects (through `select`),
+//! 4. a pointer requiring **dynamic lookup** (`malloc` results, loads,
+//!    parameters) resolved at runtime against allocation tracking.
+//!
+//! The walk follows single-assignment def chains through `gep`, `select`
+//! and plain copies, accumulating constant offsets.
+
+use crate::ir::{Expr, Function, Instr, Operand};
+use std::collections::HashMap;
+
+/// Where a statically identified object lives.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObjOrigin {
+    /// `alloca` result variable (stack memory).
+    Alloca(String),
+    /// Module global (global/constant memory).
+    Global(String),
+}
+
+impl ObjOrigin {
+    /// The operand that evaluates to the object's base address.
+    pub fn base_operand(&self) -> Operand {
+        match self {
+            ObjOrigin::Alloca(v) => Operand::Var(v.clone()),
+            ObjOrigin::Global(g) => Operand::Global(g.clone()),
+        }
+    }
+}
+
+/// Offset of the pointer into its object.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OffKind {
+    Const(u64),
+    Dynamic,
+}
+
+impl OffKind {
+    fn add(self, other: OffKind) -> OffKind {
+        match (self, other) {
+            (OffKind::Const(a), OffKind::Const(b)) => OffKind::Const(a + b),
+            _ => OffKind::Dynamic,
+        }
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct StaticObj {
+    pub origin: ObjOrigin,
+    pub size: u64,
+    pub constant: bool,
+    pub offset: OffKind,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum ObjClass {
+    /// Not a pointer (or a compile-time scalar): pass by value.
+    Value,
+    /// Exactly one statically identified object.
+    Static(StaticObj),
+    /// A statically enumerable candidate set (Fig. 3c lines 34-39).
+    Multi(Vec<StaticObj>),
+    /// Underlying object only resolvable at runtime (`_FindObj`).
+    Dynamic,
+}
+
+/// Map from local name to its defining instruction, collected over the
+/// whole (structured) function body. The IR is written single-assignment
+/// per name; later defs shadow earlier ones conservatively.
+pub fn def_map(f: &Function) -> HashMap<String, Instr> {
+    let mut map = HashMap::new();
+    collect(&f.body, &mut map);
+    map
+}
+
+fn collect(body: &[Instr], map: &mut HashMap<String, Instr>) {
+    for ins in body {
+        match ins {
+            Instr::Assign { dst, .. }
+            | Instr::Alloca { dst, .. }
+            | Instr::Load { dst, .. } => {
+                map.insert(dst.clone(), ins.clone());
+            }
+            Instr::Call { dst: Some(d), .. }
+            | Instr::RpcCall { dst: Some(d), .. }
+            | Instr::Intrinsic { dst: Some(d), .. } => {
+                map.insert(d.clone(), ins.clone());
+            }
+            Instr::If { then_body, else_body, .. } => {
+                collect(then_body, map);
+                collect(else_body, map);
+            }
+            Instr::While { cond, body, .. } => {
+                collect(cond, map);
+                collect(body, map);
+            }
+            Instr::For { body, .. } => collect(body, map),
+            Instr::Parallel { body, .. } => collect(body, map),
+            _ => {}
+        }
+    }
+}
+
+/// Classify `op` as a call-site pointer argument within function `f` of
+/// module `m`.
+pub fn classify_operand(
+    m: &crate::ir::Module,
+    defs: &HashMap<String, Instr>,
+    op: &Operand,
+) -> ObjClass {
+    classify_rec(m, defs, op, 0)
+}
+
+fn classify_rec(
+    m: &crate::ir::Module,
+    defs: &HashMap<String, Instr>,
+    op: &Operand,
+    depth: usize,
+) -> ObjClass {
+    if depth > 32 {
+        return ObjClass::Dynamic;
+    }
+    match op {
+        Operand::ConstI(_) | Operand::ConstF(_) => ObjClass::Value,
+        Operand::Global(g) => match m.globals.get(g) {
+            Some(gl) => ObjClass::Static(StaticObj {
+                origin: ObjOrigin::Global(g.clone()),
+                size: gl.size,
+                constant: gl.constant,
+                offset: OffKind::Const(0),
+            }),
+            None => ObjClass::Dynamic,
+        },
+        Operand::Var(v) => match defs.get(v) {
+            Some(Instr::Alloca { size, .. }) => ObjClass::Static(StaticObj {
+                origin: ObjOrigin::Alloca(v.clone()),
+                size: *size,
+                constant: false,
+                offset: OffKind::Const(0),
+            }),
+            Some(Instr::Assign { expr, .. }) => match expr {
+                Expr::Op(inner) => classify_rec(m, defs, inner, depth + 1),
+                Expr::Gep(base, off) => {
+                    let off_kind = match off {
+                        Operand::ConstI(c) if *c >= 0 => OffKind::Const(*c as u64),
+                        _ => OffKind::Dynamic,
+                    };
+                    match classify_rec(m, defs, base, depth + 1) {
+                        ObjClass::Static(s) => {
+                            ObjClass::Static(StaticObj { offset: s.offset.add(off_kind), ..s })
+                        }
+                        ObjClass::Multi(cands) => ObjClass::Multi(
+                            cands
+                                .into_iter()
+                                .map(|s| StaticObj { offset: s.offset.add(off_kind), ..s })
+                                .collect(),
+                        ),
+                        other => other,
+                    }
+                }
+                Expr::Select(_, a, b) => {
+                    let ca = classify_rec(m, defs, a, depth + 1);
+                    let cb = classify_rec(m, defs, b, depth + 1);
+                    let mut cands = Vec::new();
+                    for c in [ca, cb] {
+                        match c {
+                            ObjClass::Static(s) => cands.push(s),
+                            ObjClass::Multi(mut cs) => cands.append(&mut cs),
+                            // One unknown side poisons enumerability.
+                            _ => return ObjClass::Dynamic,
+                        }
+                    }
+                    ObjClass::Multi(cands)
+                }
+                // Arithmetic on ints is a value; anything else unknown.
+                Expr::Bin(b, _, _) if !b.is_float() => ObjClass::Value,
+                Expr::Tid | Expr::NumThreads => ObjClass::Value,
+                _ => ObjClass::Value,
+            },
+            // malloc-like results: tracked at runtime by the allocator.
+            Some(Instr::Intrinsic { name, .. }) if name == "malloc" || name == "realloc" => {
+                ObjClass::Dynamic
+            }
+            Some(Instr::Intrinsic { .. }) => ObjClass::Value,
+            // Loaded pointers / call results / RPC results: unknown origin.
+            Some(Instr::Load { .. }) | Some(Instr::Call { .. }) | Some(Instr::RpcCall { .. }) => {
+                ObjClass::Dynamic
+            }
+            Some(_) => ObjClass::Dynamic,
+            // Parameters: unknown origin (the paper's inter-procedural
+            // Attributor could refine this; we fall back to dynamic lookup).
+            None => ObjClass::Dynamic,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    fn classify_in_main(src: &str, var: &str) -> ObjClass {
+        let m = parse_module(src).unwrap();
+        let f = &m.functions["main"];
+        let defs = def_map(f);
+        classify_operand(&m, &defs, &Operand::var(var))
+    }
+
+    const FIG3: &str = r#"
+global @fmt const 9 "%f %i %i"
+
+func @main() -> i64 {
+  %s = alloca 12
+  %i = alloca 4
+  %sa = load.4 %s
+  %pb = gep %s, 4
+  %pf = gep %s, 8
+  %c = ne %sa, 0
+  %p = select %c, %i, %pb
+  %h = call malloc(64)
+  %q = load.8 %h
+  %off = mul %sa, 4
+  %dynp = gep %s, %off
+  return 0
+}
+"#;
+
+    #[test]
+    fn alloca_is_static_with_const_offset() {
+        match classify_in_main(FIG3, "pf") {
+            ObjClass::Static(s) => {
+                assert_eq!(s.origin, ObjOrigin::Alloca("s".into()));
+                assert_eq!(s.size, 12);
+                assert_eq!(s.offset, OffKind::Const(8));
+                assert!(!s.constant);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn global_is_static_and_const() {
+        let m = parse_module(FIG3).unwrap();
+        let defs = def_map(&m.functions["main"]);
+        match classify_operand(&m, &defs, &Operand::Global("fmt".into())) {
+            ObjClass::Static(s) => {
+                assert_eq!(s.origin, ObjOrigin::Global("fmt".into()));
+                assert!(s.constant);
+                assert_eq!(s.size, 9);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn select_enumerates_candidates() {
+        // %p = select %c, %i, %pb — the paper's (s.a ? &i : &s.b).
+        match classify_in_main(FIG3, "p") {
+            ObjClass::Multi(cands) => {
+                assert_eq!(cands.len(), 2);
+                assert_eq!(cands[0].origin, ObjOrigin::Alloca("i".into()));
+                assert_eq!(cands[0].offset, OffKind::Const(0));
+                assert_eq!(cands[1].origin, ObjOrigin::Alloca("s".into()));
+                assert_eq!(cands[1].offset, OffKind::Const(4));
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn malloc_result_is_dynamic() {
+        assert_eq!(classify_in_main(FIG3, "h"), ObjClass::Dynamic);
+    }
+
+    #[test]
+    fn loaded_pointer_is_dynamic() {
+        assert_eq!(classify_in_main(FIG3, "q"), ObjClass::Dynamic);
+    }
+
+    #[test]
+    fn variable_offset_gep_is_static_with_dynamic_offset() {
+        match classify_in_main(FIG3, "dynp") {
+            ObjClass::Static(s) => {
+                assert_eq!(s.origin, ObjOrigin::Alloca("s".into()));
+                assert_eq!(s.offset, OffKind::Dynamic);
+            }
+            other => panic!("{other:?}"),
+        }
+    }
+
+    #[test]
+    fn int_arithmetic_is_value() {
+        assert_eq!(classify_in_main(FIG3, "off"), ObjClass::Value);
+        assert_eq!(classify_in_main(FIG3, "c"), ObjClass::Value);
+    }
+
+    #[test]
+    fn params_are_dynamic() {
+        let src = "func @main(%p: ptr) -> i64 {\n  return 0\n}\n";
+        let m = parse_module(src).unwrap();
+        let defs = def_map(&m.functions["main"]);
+        assert_eq!(classify_operand(&m, &defs, &Operand::var("p")), ObjClass::Dynamic);
+    }
+}

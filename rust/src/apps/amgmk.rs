@@ -1,0 +1,216 @@
+//! AMGmk relax kernel (Fig. 9c): Jacobi smoothing over a 27-point ELL
+//! matrix — the CORAL proxy's timed hot loop.
+
+use super::common::{self, checksum, grid_for, AppResult, Mode};
+use crate::gpu::stats::{LaunchStats, Pattern};
+use crate::perfmodel::a100;
+use crate::util::rng::SplitMix64;
+
+/// Paper-scale AMGmk solves ~262k-row systems; counts scale accordingly.
+pub const MODEL_SCALE: f64 = 16.0;
+
+#[derive(Debug, Clone, Copy)]
+pub struct AmgmkWorkload {
+    pub rows: usize,
+    pub ell_width: usize,
+    pub sweeps: usize,
+}
+
+impl Default for AmgmkWorkload {
+    /// Matches the `amgmk_relax` artifact.
+    fn default() -> Self {
+        Self { rows: 16384, ell_width: 27, sweeps: 4 }
+    }
+}
+
+pub struct EllMatrix {
+    pub vals: Vec<f32>,
+    pub cols: Vec<i32>,
+    pub diag: Vec<f32>,
+    pub b: Vec<f32>,
+}
+
+impl AmgmkWorkload {
+    /// Diagonally dominant 27-point-ish system (Jacobi converges).
+    pub fn generate(&self) -> EllMatrix {
+        let (r, k) = (self.rows, self.ell_width);
+        let mut vals = vec![0f32; r * k];
+        let mut cols = vec![0i32; r * k];
+        let mut diag = vec![0f32; r];
+        for row in 0..r {
+            cols[row * k] = row as i32;
+            let d = k as f32 + (SplitMix64::at(71, row as u64) % 100) as f32 * 0.05;
+            vals[row * k] = d;
+            diag[row] = d;
+            for slot in 1..k {
+                let col = SplitMix64::at(73, (row * k + slot) as u64) % r as u64;
+                cols[row * k + slot] = col as i32;
+                vals[row * k + slot] =
+                    ((SplitMix64::at(79, (row * k + slot) as u64) % 200) as f32 / 1000.0) - 0.1;
+            }
+        }
+        let b = (0..r)
+            .map(|i| (SplitMix64::at(83, i as u64) % 1000) as f32 / 500.0 - 1.0)
+            .collect();
+        EllMatrix { vals, cols, diag, b }
+    }
+}
+
+/// One Jacobi relax row: x'[r] = x[r] + w*(b[r] - (Ax)[r]) / diag[r].
+#[inline]
+pub fn relax_row(m: &EllMatrix, k: usize, x: &[f32], row: usize) -> f32 {
+    let mut ax = 0f32;
+    for slot in 0..k {
+        let c = m.cols[row * k + slot] as usize;
+        ax += m.vals[row * k + slot] * x[c];
+    }
+    x[row] + 0.9 * (m.b[row] - ax) / m.diag[row]
+}
+
+fn count_sweep(stats: &mut LaunchStats, rows: u64, k: u64) {
+    stats.bytes_coalesced += rows * k * 8; // vals+cols stream
+    stats.bytes_random += rows * k * 4; // x gather
+    stats.flops_f32 += rows * (2 * k + 4);
+    stats.int_ops += rows * k * 2;
+}
+
+pub fn run(mode: Mode, w: &AmgmkWorkload) -> AppResult {
+    let m = w.generate();
+    let (r, k) = (w.rows, w.ell_width);
+    let t0 = std::time::Instant::now();
+    let mut stats = LaunchStats::default();
+    let mut x = vec![0f32; r];
+    let cs;
+
+    match mode {
+        Mode::Cpu => {
+            for _ in 0..w.sweeps {
+                let xr = &x;
+                let next = super::xsbench::parallel_map_cpu(r, |row| relax_row(&m, k, xr, row) as f64);
+                x = next.into_iter().map(|v| v as f32).collect();
+                count_sweep(&mut stats, r as u64, k as u64);
+            }
+            cs = checksum(x.iter().map(|&v| v as f64));
+        }
+        Mode::Offload => {
+            x = common::with_runtime(|rt| {
+                let mut x = x.clone();
+                for _ in 0..w.sweeps {
+                    let lits = vec![
+                        xla::Literal::vec1(&m.vals).reshape(&[r as i64, k as i64]).unwrap(),
+                        xla::Literal::vec1(&m.cols).reshape(&[r as i64, k as i64]).unwrap(),
+                        xla::Literal::vec1(&m.diag).reshape(&[r as i64]).unwrap(),
+                        xla::Literal::vec1(&m.b).reshape(&[r as i64]).unwrap(),
+                        xla::Literal::vec1(&x).reshape(&[r as i64]).unwrap(),
+                    ];
+                    x = rt.execute("amgmk_relax", &lits).unwrap()[0].to_vec().unwrap();
+                }
+                x
+            })
+            .expect("offload mode needs artifacts");
+            for _ in 0..w.sweeps {
+                count_sweep(&mut stats, r as u64, k as u64);
+            }
+            cs = checksum(x.iter().map(|&v| v as f64));
+        }
+        gpu_mode => {
+            let dev = common::shared_device();
+            let cfg = grid_for(gpu_mode, 64);
+            for _ in 0..w.sweeps {
+                let next = std::sync::Mutex::new(vec![0f32; r]);
+                let xr = &x;
+                let ls = dev.launch(cfg, |ctx| {
+                    let nt = ctx.num_threads_global();
+                    let mut local = Vec::new();
+                    let mut row = ctx.global_tid();
+                    while row < r {
+                        local.push((row, relax_row(&m, k, xr, row)));
+                        ctx.mem(k as u64 * 8, Pattern::Coalesced);
+                        ctx.mem(k as u64 * 4, Pattern::Random);
+                        ctx.flops32(2 * k as u64 + 4);
+                        ctx.int_ops(k as u64 * 2);
+                        row += nt;
+                    }
+                    let mut g = next.lock().unwrap();
+                    for (i, v) in local {
+                        g[i] = v;
+                    }
+                });
+                x = next.into_inner().unwrap();
+                stats = stats.add(&ls);
+            }
+            cs = checksum(x.iter().map(|&v| v as f64));
+        }
+    }
+
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    let scaled = common::scale_stats(&stats, MODEL_SCALE);
+    let rows_model = (r as f64 * MODEL_SCALE) as u64;
+    let modeled_ns = match mode {
+        Mode::Cpu => common::cpu_modeled_ns(&scaled, common::CPU_THREADS),
+        Mode::Offload => {
+            // Fig. 9c times the relax kernel only.
+            common::gpu_modeled_ns(&scaled, rows_model, w.sweeps as u64)
+        }
+        _ => {
+            common::gpu_modeled_ns(&scaled, rows_model, w.sweeps as u64)
+                + w.sweeps as f64 * a100::KERNEL_SPLIT_RPC_NS
+        }
+    };
+    AppResult {
+        app: "amgmk".into(),
+        mode,
+        workload: format!("relax x{}", w.sweeps),
+        modeled_ns,
+        wall_ns,
+        checksum: cs,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::common::close;
+
+    #[test]
+    fn substrates_agree() {
+        let w = AmgmkWorkload { rows: 1024, ell_width: 9, sweeps: 2 };
+        let cpu = run(Mode::Cpu, &w);
+        let gpu = run(Mode::GpuFirst, &w);
+        assert!(close(cpu.checksum, gpu.checksum, 1e-6));
+    }
+
+    #[test]
+    fn jacobi_reduces_residual() {
+        let w = AmgmkWorkload { rows: 512, ell_width: 9, sweeps: 1 };
+        let m = w.generate();
+        let x0 = vec![0f32; w.rows];
+        let res = |x: &[f32]| -> f64 {
+            (0..w.rows)
+                .map(|row| {
+                    let mut ax = 0f32;
+                    for s in 0..w.ell_width {
+                        ax += m.vals[row * w.ell_width + s] * x[m.cols[row * w.ell_width + s] as usize];
+                    }
+                    ((m.b[row] - ax) as f64).powi(2)
+                })
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut x = x0.clone();
+        for _ in 0..6 {
+            let next: Vec<f32> = (0..w.rows).map(|row| relax_row(&m, w.ell_width, &x, row)).collect();
+            x = next;
+        }
+        assert!(res(&x) < 0.2 * res(&x0), "{} vs {}", res(&x), res(&x0));
+    }
+
+    #[test]
+    fn fig9c_gpu_beats_cpu() {
+        let w = AmgmkWorkload::default();
+        let cpu = run(Mode::Cpu, &w);
+        let gpu = run(Mode::GpuFirst, &w);
+        assert!(gpu.modeled_ns < cpu.modeled_ns * 2.0);
+    }
+}

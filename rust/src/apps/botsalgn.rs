@@ -1,0 +1,184 @@
+//! 358.botsalgn (Fig. 10a): protein sequence alignment with OpenMP tasks
+//! (the BOTS "alignment" kernel). An outer parallel region distributes
+//! sequences; each thread spawns tasks performing the pairwise alignment.
+//!
+//! On the GPU, LLVM/OpenMP has no tasking: "tasks are executed immediately
+//! by the encountering thread", so concurrency collapses to the number of
+//! sequences — the paper's explanation for the big slowdowns. We model
+//! exactly that: GPU-First active threads = #sequences, while the CPU
+//! uses its cores for task execution.
+
+use super::common::{self, checksum, AppResult, Mode};
+use crate::gpu::grid::LaunchConfig;
+use crate::gpu::stats::{LaunchStats, Pattern};
+use crate::perfmodel::a100;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BotsalgnWorkload {
+    pub sequences: usize,
+    pub length: usize,
+}
+
+impl BotsalgnWorkload {
+    pub fn new(sequences: usize) -> Self {
+        Self { sequences, length: 96 }
+    }
+
+    pub fn generate(&self) -> Vec<Vec<u8>> {
+        let mut rng = Xoshiro256::new(0xA11C);
+        (0..self.sequences)
+            .map(|_| (0..self.length).map(|_| (rng.next_below(20)) as u8).collect())
+            .collect()
+    }
+
+    pub fn pairs(&self) -> usize {
+        self.sequences * (self.sequences - 1) / 2
+    }
+}
+
+/// Needleman-Wunsch-style global alignment score (two-row DP) — the task
+/// body of the benchmark.
+pub fn align(a: &[u8], b: &[u8]) -> i32 {
+    const GAP: i32 = -2;
+    let n = b.len();
+    let mut prev: Vec<i32> = (0..=n as i32).map(|j| j * GAP).collect();
+    let mut cur = vec![0i32; n + 1];
+    for (i, &ca) in a.iter().enumerate() {
+        cur[0] = (i as i32 + 1) * GAP;
+        for j in 0..n {
+            let m = if ca == b[j] { 3 } else { -1 };
+            cur[j + 1] = (prev[j] + m).max(prev[j + 1] + GAP).max(cur[j] + GAP);
+        }
+        std::mem::swap(&mut prev, &mut cur);
+    }
+    prev[n]
+}
+
+fn count_pair(stats: &mut LaunchStats, len: u64) {
+    let cells = len * len;
+    stats.int_ops += cells * 8;
+    stats.bytes_coalesced += cells * 6;
+}
+
+pub fn run(mode: Mode, w: &BotsalgnWorkload) -> AppResult {
+    let seqs = w.generate();
+    let pairs: Vec<(usize, usize)> = (0..w.sequences)
+        .flat_map(|i| ((i + 1)..w.sequences).map(move |j| (i, j)))
+        .collect();
+    let t0 = std::time::Instant::now();
+    let mut stats = LaunchStats::default();
+    let cs;
+
+    match mode {
+        Mode::Cpu => {
+            // Tasks steal across all cores: idle threads of the outer
+            // region execute spawned tasks concurrently.
+            let scores = super::xsbench::parallel_map_cpu(pairs.len(), |p| {
+                let (i, j) = pairs[p];
+                align(&seqs[i], &seqs[j]) as f64
+            });
+            cs = checksum(scores);
+            for _ in &pairs {
+                count_pair(&mut stats, w.length as u64);
+            }
+        }
+        Mode::Offload => {
+            panic!("no manual offload exists for the tasking benchmarks (paper §5.3.5)")
+        }
+        _ => {
+            // GPU First: outer region distributes sequences; each
+            // sequence's tasks run IMMEDIATELY on the encountering thread
+            // (no GPU tasking) => parallelism == #sequences.
+            let dev = common::shared_device();
+            let cfg = LaunchConfig::new(
+                w.sequences.div_ceil(common::DEFAULT_TEAM_SIZE).max(1),
+                common::DEFAULT_TEAM_SIZE.min(w.sequences),
+            );
+            let out: std::sync::Mutex<Vec<(usize, f64)>> = std::sync::Mutex::new(Vec::new());
+            let ls = dev.launch(cfg, |ctx| {
+                let i = ctx.global_tid();
+                if i >= w.sequences {
+                    return;
+                }
+                // The thread owning sequence i immediately executes all of
+                // the tasks it would have spawned (pairs (i, j>i)).
+                let mut local = Vec::new();
+                for j in (i + 1)..w.sequences {
+                    local.push((i * w.sequences + j, align(&seqs[i], &seqs[j]) as f64));
+                    let cells = (w.length * w.length) as u64;
+                    ctx.int_ops(cells * 8);
+                    ctx.mem(cells * 6, Pattern::Strided);
+                    ctx.divergent(w.length as u64);
+                }
+                out.lock().unwrap().extend(local);
+            });
+            let mut scores = out.into_inner().unwrap();
+            scores.sort_by_key(|&(k, _)| k);
+            cs = checksum(scores.into_iter().map(|(_, s)| s));
+            stats = ls;
+        }
+    }
+
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    let modeled_ns = match mode {
+        Mode::Cpu => common::cpu_modeled_ns(&stats, common::CPU_THREADS),
+        _ => {
+            // Only #sequences GPU threads ever run concurrently.
+            common::gpu_modeled_ns(&stats, w.sequences as u64, 1) + a100::KERNEL_SPLIT_RPC_NS
+        }
+    };
+    AppResult {
+        app: "botsalgn".into(),
+        mode,
+        workload: format!("{} sequences", w.sequences),
+        modeled_ns,
+        wall_ns,
+        checksum: cs,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::common::close;
+
+    #[test]
+    fn align_identical_and_disjoint() {
+        let a = vec![1u8, 2, 3, 4, 5, 6, 7, 8];
+        assert_eq!(align(&a, &a), 3 * 8);
+        let b = vec![10u8; 8];
+        assert!(align(&a, &b) < 0);
+    }
+
+    #[test]
+    fn substrates_agree() {
+        let w = BotsalgnWorkload { sequences: 8, length: 32 };
+        let cpu = run(Mode::Cpu, &w);
+        let gpu = run(Mode::GpuFirst, &w);
+        assert!(close(cpu.checksum, gpu.checksum, 1e-9));
+    }
+
+    #[test]
+    fn fig10a_gpu_slowdown_from_task_starvation() {
+        // Few sequences => the GPU runs a handful of threads and loses
+        // badly; the CPU keeps its cores busy via task stealing.
+        let w = BotsalgnWorkload::new(8);
+        let cpu = run(Mode::Cpu, &w);
+        let gpu = run(Mode::GpuFirst, &w);
+        assert!(
+            gpu.modeled_ns > 3.0 * cpu.modeled_ns,
+            "gpu {} should be much slower than cpu {}",
+            gpu.modeled_ns,
+            cpu.modeled_ns
+        );
+        // More sequences narrow the gap.
+        let w2 = BotsalgnWorkload::new(48);
+        let cpu2 = run(Mode::Cpu, &w2);
+        let gpu2 = run(Mode::GpuFirst, &w2);
+        let gap1 = gpu.modeled_ns / cpu.modeled_ns;
+        let gap2 = gpu2.modeled_ns / cpu2.modeled_ns;
+        assert!(gap2 < gap1, "gap should shrink with more sequences ({gap1} -> {gap2})");
+    }
+}

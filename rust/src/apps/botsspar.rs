@@ -1,0 +1,260 @@
+//! 359.botsspar (Fig. 10b): BOTS "sparselu" — LU decomposition of a
+//! sparse blocked matrix with OpenMP tasks.
+//!
+//! In the original, one thread creates tasks while the region's other
+//! threads execute them; with no GPU tasking this degenerates to SERIAL
+//! execution, so (like the paper) we evaluate the *rewritten* variant:
+//! the task regions become `parallel for` over the per-step block lists.
+//! The slowdown the paper observes comes from insufficient parallelism —
+//! each elimination step exposes only O(remaining-blocks) work.
+
+use super::common::{self, checksum, AppResult, Mode};
+use crate::gpu::stats::LaunchStats;
+use crate::perfmodel::a100;
+use crate::util::rng::Xoshiro256;
+
+#[derive(Debug, Clone, Copy)]
+pub struct BotssparWorkload {
+    /// Matrix is nb × nb blocks.
+    pub nb: usize,
+    /// Each block is bs × bs.
+    pub bs: usize,
+}
+
+impl BotssparWorkload {
+    pub fn new(nb: usize, bs: usize) -> Self {
+        Self { nb, bs }
+    }
+
+    /// BOTS-style sparse block structure: diagonal plus ~40% fill.
+    pub fn generate(&self) -> Vec<Option<Vec<f32>>> {
+        let mut rng = Xoshiro256::new(0x5BA5);
+        let (nb, bs) = (self.nb, self.bs);
+        let mut blocks: Vec<Option<Vec<f32>>> = vec![None; nb * nb];
+        for i in 0..nb {
+            for j in 0..nb {
+                if i == j || rng.next_f64() < 0.4 {
+                    let mut b: Vec<f32> =
+                        (0..bs * bs).map(|_| rng.next_f32() * 0.1 - 0.05).collect();
+                    if i == j {
+                        for d in 0..bs {
+                            b[d * bs + d] += bs as f32; // diagonally dominant
+                        }
+                    }
+                    blocks[i * nb + j] = Some(b);
+                }
+            }
+        }
+        blocks
+    }
+}
+
+fn lu0(a: &mut [f32], bs: usize) {
+    for k in 0..bs {
+        let piv = a[k * bs + k];
+        for i in (k + 1)..bs {
+            a[i * bs + k] /= piv;
+            for j in (k + 1)..bs {
+                a[i * bs + j] -= a[i * bs + k] * a[k * bs + j];
+            }
+        }
+    }
+}
+
+fn bdiv(diag: &[f32], row: &mut [f32], bs: usize) {
+    for i in 0..bs {
+        for k in 0..bs {
+            row[i * bs + k] /= diag[k * bs + k];
+            for j in (k + 1)..bs {
+                row[i * bs + j] -= row[i * bs + k] * diag[k * bs + j];
+            }
+        }
+    }
+}
+
+fn fwd(diag: &[f32], col: &mut [f32], bs: usize) {
+    for j in 0..bs {
+        for k in 0..bs {
+            for i in (k + 1)..bs {
+                col[i * bs + j] -= diag[i * bs + k] * col[k * bs + j];
+            }
+        }
+    }
+}
+
+fn bmod(row: &[f32], col: &[f32], inner: &mut [f32], bs: usize) {
+    for i in 0..bs {
+        for k in 0..bs {
+            let r = row[i * bs + k];
+            if r != 0.0 {
+                for j in 0..bs {
+                    inner[i * bs + j] -= r * col[k * bs + j];
+                }
+            }
+        }
+    }
+}
+
+fn count_block_op(stats: &mut LaunchStats, bs: u64) {
+    stats.flops_f32 += bs * bs * bs * 2;
+    stats.bytes_strided += bs * bs * 12;
+    stats.int_ops += bs * bs * 4;
+}
+
+/// Factorize; `par` applies each wave's independent block ops through the
+/// given executor (CPU pool or simulated grid), returning per-wave stats.
+pub fn run(mode: Mode, w: &BotssparWorkload) -> AppResult {
+    let mut blocks = w.generate();
+    let (nb, bs) = (w.nb, w.bs);
+    let t0 = std::time::Instant::now();
+    let mut stats = LaunchStats::default();
+    let mut waves = 0u64;
+    let mut max_wave_par = 0usize;
+    let mut total_ops = 0u64;
+
+    for kk in 0..nb {
+        // lu0 on the diagonal block (serial on every substrate).
+        let mut diag = blocks[kk * nb + kk].take().expect("diagonal block");
+        lu0(&mut diag, bs);
+        count_block_op(&mut stats, bs as u64);
+        total_ops += 1;
+
+        // Wave 1: bdiv row panels + fwd column panels (independent).
+        let mut wave1: Vec<(usize, bool)> = Vec::new();
+        for jj in (kk + 1)..nb {
+            if blocks[kk * nb + jj].is_some() {
+                wave1.push((jj, true)); // fwd on U row
+            }
+            if blocks[jj * nb + kk].is_some() {
+                wave1.push((jj, false)); // bdiv on L column
+            }
+        }
+        max_wave_par = max_wave_par.max(wave1.len());
+        for &(jj, is_row) in &wave1 {
+            if is_row {
+                let mut b = blocks[kk * nb + jj].take().unwrap();
+                fwd(&diag, &mut b, bs);
+                blocks[kk * nb + jj] = Some(b);
+            } else {
+                let mut b = blocks[jj * nb + kk].take().unwrap();
+                bdiv(&diag, &mut b, bs);
+                blocks[jj * nb + kk] = Some(b);
+            }
+            count_block_op(&mut stats, bs as u64);
+            total_ops += 1;
+        }
+        waves += 1;
+
+        // Wave 2: bmod on the trailing submatrix (independent).
+        let mut wave2: Vec<(usize, usize)> = Vec::new();
+        for ii in (kk + 1)..nb {
+            for jj in (kk + 1)..nb {
+                if blocks[ii * nb + kk].is_some() && blocks[kk * nb + jj].is_some() {
+                    wave2.push((ii, jj));
+                }
+            }
+        }
+        max_wave_par = max_wave_par.max(wave2.len());
+        for &(ii, jj) in &wave2 {
+            let row = blocks[ii * nb + kk].clone().unwrap();
+            let col = blocks[kk * nb + jj].clone().unwrap();
+            let mut inner = blocks[ii * nb + jj]
+                .take()
+                .unwrap_or_else(|| vec![0f32; bs * bs]);
+            bmod(&row, &col, &mut inner, bs);
+            blocks[ii * nb + jj] = Some(inner);
+            count_block_op(&mut stats, bs as u64);
+            total_ops += 1;
+        }
+        waves += 1;
+        blocks[kk * nb + kk] = Some(diag);
+    }
+
+    let cs = checksum(
+        blocks
+            .iter()
+            .flatten()
+            .map(|b| b.iter().map(|&x| x as f64).sum::<f64>()),
+    );
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+
+    // Parallelism exposed per wave decides the modeled time.
+    let avg_par = (total_ops as f64 / waves as f64).max(1.0);
+    let modeled_ns = match mode {
+        Mode::Cpu => {
+            let threads = common::CPU_THREADS.min(avg_par.ceil() as usize);
+            common::cpu_modeled_ns(&stats, threads.max(1))
+        }
+        Mode::Offload => panic!("no manual offload exists for the tasking benchmarks"),
+        _ => {
+            // parallel-for rewrite: each wave is a kernel over its blocks.
+            common::gpu_modeled_ns(&stats, avg_par.ceil() as u64, waves)
+                + waves as f64 * a100::KERNEL_SPLIT_RPC_NS
+        }
+    };
+    AppResult {
+        app: "botsspar".into(),
+        mode,
+        workload: format!("{}x{} blocks of {}x{}", nb, nb, bs, bs),
+        modeled_ns,
+        wall_ns,
+        checksum: cs,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::common::close;
+
+    #[test]
+    fn lu_reconstructs_dense_matrix() {
+        // For a single dense block, lu0 must satisfy A = L*U.
+        let bs = 8;
+        let w = BotssparWorkload::new(1, bs);
+        let a0 = w.generate()[0].clone().unwrap();
+        let mut lu = a0.clone();
+        lu0(&mut lu, bs);
+        // Reconstruct.
+        for i in 0..bs {
+            for j in 0..bs {
+                let mut sum = 0f64;
+                for k in 0..=i.min(j) {
+                    let l = if k == i { 1.0 } else { lu[i * bs + k] as f64 };
+                    let u = lu[k * bs + j] as f64;
+                    if k <= j && k <= i {
+                        sum += if k == i { u } else { l * u };
+                    }
+                }
+                assert!(
+                    (sum - a0[i * bs + j] as f64).abs() < 1e-3,
+                    "A[{i}][{j}] {} vs {}",
+                    sum,
+                    a0[i * bs + j]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn modes_agree_on_checksum() {
+        let w = BotssparWorkload::new(4, 8);
+        let cpu = run(Mode::Cpu, &w);
+        let gpu = run(Mode::GpuFirst, &w);
+        assert!(close(cpu.checksum, gpu.checksum, 1e-9));
+    }
+
+    #[test]
+    fn fig10b_insufficient_parallelism_slows_gpu() {
+        let w = BotssparWorkload::new(6, 16);
+        let cpu = run(Mode::Cpu, &w);
+        let gpu = run(Mode::GpuFirst, &w);
+        assert!(
+            gpu.modeled_ns > cpu.modeled_ns,
+            "gpu {} should trail cpu {} at this size",
+            gpu.modeled_ns,
+            cpu.modeled_ns
+        );
+    }
+}

@@ -1,0 +1,201 @@
+//! HeCBench "interleaved" (Fig. 9a): array-of-structs vs struct-of-arrays
+//! memory layouts. On the GPU, SoA accesses coalesce and AoS do not — the
+//! benchmark whose entire point is the coalescing class our simulator
+//! tracks. The paper notes GPU First needed the number of teams
+//! *explicitly matched* to reproduce the manual-offload result exactly —
+//! hence the `Mode::GpuFirstMatching` series.
+
+use super::common::{self, checksum, grid_for, AppResult, Mode};
+use super::xsbench::parallel_map_cpu;
+use crate::gpu::stats::{LaunchStats, Pattern};
+use crate::perfmodel::a100;
+use crate::util::rng::SplitMix64;
+
+/// Paper-scale arrays are ~16M elements; counts scale accordingly.
+pub const MODEL_SCALE: f64 = 16.0;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layout {
+    /// struct-of-arrays: coalesced on GPU.
+    Soa,
+    /// array-of-structs: strided on GPU.
+    Aos,
+}
+
+#[derive(Debug, Clone)]
+pub struct InterleavedWorkload {
+    pub n: usize,
+    /// Teams the manual offload version uses (the "matching" count).
+    pub offload_teams: usize,
+}
+
+impl Default for InterleavedWorkload {
+    fn default() -> Self {
+        Self { n: 1 << 20, offload_teams: 64 }
+    }
+}
+
+impl InterleavedWorkload {
+    pub fn generate(&self) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+        let gen = |seed: u64| -> Vec<f32> {
+            (0..self.n)
+                .map(|i| (SplitMix64::at(seed, i as u64) % 2000) as f32 / 500.0 - 2.0)
+                .collect()
+        };
+        (gen(51), gen(52), gen(53), gen(54))
+    }
+}
+
+/// The per-element compute — mirrors `ref.interleaved_ref`.
+#[inline]
+pub fn element(a: f32, b: f32, c: f32, d: f32) -> f32 {
+    (a + b) * c - d * 0.5 + ((a * d).abs() + 1.0).sqrt()
+}
+
+pub fn run(mode: Mode, layout: Layout, w: &InterleavedWorkload) -> AppResult {
+    let (a, b, c, d) = w.generate();
+    // AoS packing: the physically interleaved buffer.
+    let packed: Vec<f32> = (0..w.n).flat_map(|i| [a[i], b[i], c[i], d[i]]).collect();
+    let t0 = std::time::Instant::now();
+    let mut stats = LaunchStats::default();
+    let cs;
+    let workload = format!("{:?}", layout).to_lowercase();
+
+    let pattern = match layout {
+        Layout::Soa => Pattern::Coalesced,
+        Layout::Aos => Pattern::Strided,
+    };
+
+    match mode {
+        Mode::Cpu => {
+            let sums = parallel_map_cpu(w.n, |i| match layout {
+                Layout::Soa => element(a[i], b[i], c[i], d[i]) as f64,
+                Layout::Aos => {
+                    let p = &packed[i * 4..i * 4 + 4];
+                    element(p[0], p[1], p[2], p[3]) as f64
+                }
+            });
+            cs = checksum(sums);
+            // CPU caches make both layouts unit-stride-ish (AoS is in fact
+            // MORE cache friendly per element group).
+            stats.bytes_coalesced = w.n as u64 * 20;
+            stats.flops_f32 = w.n as u64 * 9;
+        }
+        Mode::Offload => {
+            let out: Vec<f32> = common::with_runtime(|rt| match layout {
+                Layout::Soa => rt
+                    .execute_f32(
+                        "interleaved_soa",
+                        &[(&a, &[w.n]), (&b, &[w.n]), (&c, &[w.n]), (&d, &[w.n])],
+                    )
+                    .unwrap(),
+                Layout::Aos => rt
+                    .execute_f32("interleaved_aos", &[(&packed, &[w.n, 4])])
+                    .unwrap(),
+            })
+            .expect("offload mode needs artifacts");
+            cs = checksum(out.iter().map(|&x| x as f64));
+            stats.mem_add(w.n as u64 * 20, pattern);
+            stats.flops_f32 = w.n as u64 * 9;
+        }
+        gpu_mode => {
+            let dev = common::shared_device();
+            let cfg = grid_for(gpu_mode, w.offload_teams);
+            let outsums: std::sync::Mutex<Vec<(usize, f64)>> = std::sync::Mutex::new(Vec::new());
+            let ls = dev.launch(cfg, |ctx| {
+                let nt = ctx.num_threads_global();
+                let mut local = Vec::new();
+                let mut i = ctx.global_tid();
+                while i < w.n {
+                    let v = match layout {
+                        Layout::Soa => element(a[i], b[i], c[i], d[i]),
+                        Layout::Aos => {
+                            let p = &packed[i * 4..i * 4 + 4];
+                            element(p[0], p[1], p[2], p[3])
+                        }
+                    };
+                    local.push((i, v as f64));
+                    ctx.mem(20, pattern);
+                    ctx.flops32(9);
+                    i += nt;
+                }
+                outsums.lock().unwrap().extend(local);
+            });
+            let mut sums = outsums.into_inner().unwrap();
+            sums.sort_by_key(|&(i, _)| i);
+            cs = checksum(sums.into_iter().map(|(_, s)| s));
+            stats = ls;
+        }
+    }
+
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    let scaled = common::scale_stats(&stats, MODEL_SCALE);
+    let modeled_ns = match mode {
+        Mode::Cpu => common::cpu_modeled_ns(&scaled, common::CPU_THREADS),
+        Mode::Offload => {
+            // Fig. 9a times the parallel region / kernel only.
+            let active = (w.offload_teams * common::DEFAULT_TEAM_SIZE) as u64;
+            common::gpu_modeled_ns(&scaled, active, 1) + a100::LAUNCH_OVERHEAD_NS
+        }
+        Mode::GpuFirstMatching => {
+            let active = (w.offload_teams * common::DEFAULT_TEAM_SIZE) as u64;
+            common::gpu_modeled_ns(&scaled, active, 1) + a100::KERNEL_SPLIT_RPC_NS
+        }
+        _ => {
+            let active = (common::DEFAULT_TEAMS * common::DEFAULT_TEAM_SIZE) as u64;
+            common::gpu_modeled_ns(&scaled, active, 1) + a100::KERNEL_SPLIT_RPC_NS
+        }
+    };
+    AppResult { app: "interleaved".into(), mode, workload, modeled_ns, wall_ns, checksum: cs, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::common::close;
+
+    #[test]
+    fn layouts_compute_identical_results() {
+        let w = InterleavedWorkload { n: 1 << 14, ..Default::default() };
+        let soa = run(Mode::GpuFirst, Layout::Soa, &w);
+        let aos = run(Mode::GpuFirst, Layout::Aos, &w);
+        assert!(close(soa.checksum, aos.checksum, 1e-9));
+    }
+
+    #[test]
+    fn cpu_matches_gpufirst_checksum() {
+        let w = InterleavedWorkload { n: 1 << 14, ..Default::default() };
+        let cpu = run(Mode::Cpu, Layout::Soa, &w);
+        let gpu = run(Mode::GpuFirst, Layout::Soa, &w);
+        assert!(close(cpu.checksum, gpu.checksum, 1e-9));
+    }
+
+    #[test]
+    fn fig9a_soa_beats_aos_on_gpu_only() {
+        let w = InterleavedWorkload::default();
+        let gpu_soa = run(Mode::GpuFirst, Layout::Soa, &w);
+        let gpu_aos = run(Mode::GpuFirst, Layout::Aos, &w);
+        assert!(
+            gpu_soa.modeled_ns < gpu_aos.modeled_ns,
+            "SoA {} should beat AoS {} on GPU",
+            gpu_soa.modeled_ns,
+            gpu_aos.modeled_ns
+        );
+        let cpu_soa = run(Mode::Cpu, Layout::Soa, &w);
+        let cpu_aos = run(Mode::Cpu, Layout::Aos, &w);
+        let cpu_gap = (cpu_soa.modeled_ns - cpu_aos.modeled_ns).abs() / cpu_aos.modeled_ns;
+        assert!(cpu_gap < 0.05, "CPU should be layout-insensitive (gap {cpu_gap})");
+    }
+
+    #[test]
+    fn matching_teams_tracks_offload_grid() {
+        // The paper: "we needed to explicitly match the number of teams to
+        // perfectly match the result".
+        let w = InterleavedWorkload::default();
+        let matching = run(Mode::GpuFirstMatching, Layout::Soa, &w);
+        let default = run(Mode::GpuFirst, Layout::Soa, &w);
+        // Matching uses fewer teams than the whole device here.
+        assert!(matching.modeled_ns >= default.modeled_ns * 0.5);
+        assert_ne!(matching.modeled_ns, default.modeled_ns);
+    }
+}

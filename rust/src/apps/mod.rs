@@ -1,0 +1,26 @@
+//! The evaluation applications (paper §5.3), each in three variants:
+//!
+//! * `cpu`     — the legacy CPU-parallel implementation (the baseline the
+//!               paper compares against), run natively multi-threaded.
+//! * `gpufirst`— the GPU First port: the same code executed on the
+//!               simulated device with expanded multi-team parallel
+//!               regions, device allocator + libc, and modeled A100 time.
+//! * `offload` — the manually written offload version: the AOT-compiled
+//!               Pallas/JAX kernel executed through [`crate::runtime`],
+//!               plus modeled host↔device transfers.
+//!
+//! Shared machinery (workload generators, mode plumbing, result records)
+//! lives in [`common`].
+
+pub mod common;
+pub mod xsbench;
+pub mod rsbench;
+pub mod interleaved;
+pub mod hypterm;
+pub mod amgmk;
+pub mod pagerank;
+pub mod botsalgn;
+pub mod botsspar;
+pub mod smithwa;
+
+pub use common::{AppResult, Mode};

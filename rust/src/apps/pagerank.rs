@@ -1,0 +1,181 @@
+//! Page-rank propagation step (Fig. 9c): the HeCBench graph micro
+//! benchmark; the timed region is one damped propagation over an ELL
+//! adjacency structure.
+
+use super::common::{self, checksum, grid_for, AppResult, Mode};
+use crate::gpu::stats::{LaunchStats, Pattern};
+use crate::perfmodel::a100;
+use crate::util::rng::SplitMix64;
+
+pub const DAMPING: f32 = 0.85;
+/// Paper-scale graphs are ~1M nodes; counts scale accordingly.
+pub const MODEL_SCALE: f64 = 128.0;
+
+#[derive(Debug, Clone, Copy)]
+pub struct PagerankWorkload {
+    pub nodes: usize,
+    pub ell_width: usize,
+    pub iterations: usize,
+}
+
+impl Default for PagerankWorkload {
+    /// Matches the `pagerank_step` artifact.
+    fn default() -> Self {
+        Self { nodes: 8192, ell_width: 16, iterations: 4 }
+    }
+}
+
+impl PagerankWorkload {
+    /// Random graph in ELL transpose form: vals[r,k] = 1/outdeg(src).
+    pub fn generate(&self) -> (Vec<f32>, Vec<i32>) {
+        let (n, k) = (self.nodes, self.ell_width);
+        let mut cols = vec![0i32; n * k];
+        let mut outdeg = vec![0u32; n];
+        for i in 0..n * k {
+            let src = (SplitMix64::at(91, i as u64) % n as u64) as usize;
+            cols[i] = src as i32;
+            outdeg[src] += 1;
+        }
+        let vals: Vec<f32> = cols
+            .iter()
+            .map(|&c| 1.0 / outdeg[c as usize].max(1) as f32)
+            .collect();
+        (vals, cols)
+    }
+}
+
+#[inline]
+pub fn propagate_row(vals: &[f32], cols: &[i32], k: usize, rank: &[f32], row: usize) -> f32 {
+    let n = rank.len() as f32;
+    let mut acc = 0f32;
+    for slot in 0..k {
+        acc += vals[row * k + slot] * rank[cols[row * k + slot] as usize];
+    }
+    DAMPING * acc + (1.0 - DAMPING) / n
+}
+
+fn count_iter(stats: &mut LaunchStats, n: u64, k: u64) {
+    stats.bytes_coalesced += n * k * 8;
+    stats.bytes_random += n * k * 4;
+    stats.flops_f32 += n * (2 * k + 3);
+    stats.int_ops += n * k * 2;
+}
+
+pub fn run(mode: Mode, w: &PagerankWorkload) -> AppResult {
+    let (vals, cols) = w.generate();
+    let (n, k) = (w.nodes, w.ell_width);
+    let t0 = std::time::Instant::now();
+    let mut stats = LaunchStats::default();
+    let mut rank = vec![1.0 / n as f32; n];
+    let cs;
+
+    match mode {
+        Mode::Cpu => {
+            for _ in 0..w.iterations {
+                let r = &rank;
+                let next =
+                    super::xsbench::parallel_map_cpu(n, |row| propagate_row(&vals, &cols, k, r, row) as f64);
+                rank = next.into_iter().map(|v| v as f32).collect();
+                count_iter(&mut stats, n as u64, k as u64);
+            }
+            cs = checksum(rank.iter().map(|&v| v as f64));
+        }
+        Mode::Offload => {
+            rank = common::with_runtime(|rt| {
+                let mut rank = rank.clone();
+                for _ in 0..w.iterations {
+                    let lits = vec![
+                        xla::Literal::vec1(&vals).reshape(&[n as i64, k as i64]).unwrap(),
+                        xla::Literal::vec1(&cols).reshape(&[n as i64, k as i64]).unwrap(),
+                        xla::Literal::vec1(&rank).reshape(&[n as i64]).unwrap(),
+                    ];
+                    rank = rt.execute("pagerank_step", &lits).unwrap()[0].to_vec().unwrap();
+                }
+                rank
+            })
+            .expect("offload mode needs artifacts");
+            for _ in 0..w.iterations {
+                count_iter(&mut stats, n as u64, k as u64);
+            }
+            cs = checksum(rank.iter().map(|&v| v as f64));
+        }
+        gpu_mode => {
+            let dev = common::shared_device();
+            let cfg = grid_for(gpu_mode, 64);
+            for _ in 0..w.iterations {
+                let next = std::sync::Mutex::new(vec![0f32; n]);
+                let r = &rank;
+                let ls = dev.launch(cfg, |ctx| {
+                    let nt = ctx.num_threads_global();
+                    let mut local = Vec::new();
+                    let mut row = ctx.global_tid();
+                    while row < n {
+                        local.push((row, propagate_row(&vals, &cols, k, r, row)));
+                        ctx.mem(k as u64 * 8, Pattern::Coalesced);
+                        ctx.mem(k as u64 * 4, Pattern::Random);
+                        ctx.flops32(2 * k as u64 + 3);
+                        ctx.int_ops(k as u64 * 2);
+                        row += nt;
+                    }
+                    let mut g = next.lock().unwrap();
+                    for (i, v) in local {
+                        g[i] = v;
+                    }
+                });
+                rank = next.into_inner().unwrap();
+                stats = stats.add(&ls);
+            }
+            cs = checksum(rank.iter().map(|&v| v as f64));
+        }
+    }
+
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    let scaled = common::scale_stats(&stats, MODEL_SCALE);
+    let nodes_model = (n as f64 * MODEL_SCALE) as u64;
+    let modeled_ns = match mode {
+        Mode::Cpu => common::cpu_modeled_ns(&scaled, common::CPU_THREADS),
+        Mode::Offload => {
+            // Fig. 9c times the propagation kernel only.
+            common::gpu_modeled_ns(&scaled, nodes_model, w.iterations as u64)
+        }
+        _ => {
+            common::gpu_modeled_ns(&scaled, nodes_model, w.iterations as u64)
+                + w.iterations as f64 * a100::KERNEL_SPLIT_RPC_NS
+        }
+    };
+    AppResult {
+        app: "pagerank".into(),
+        mode,
+        workload: format!("propagate x{}", w.iterations),
+        modeled_ns,
+        wall_ns,
+        checksum: cs,
+        stats,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::common::close;
+
+    #[test]
+    fn substrates_agree() {
+        let w = PagerankWorkload { nodes: 1024, ell_width: 8, iterations: 2 };
+        let cpu = run(Mode::Cpu, &w);
+        let gpu = run(Mode::GpuFirst, &w);
+        assert!(close(cpu.checksum, gpu.checksum, 1e-6));
+    }
+
+    #[test]
+    fn rank_mass_roughly_conserved() {
+        let w = PagerankWorkload { nodes: 512, ell_width: 8, iterations: 1 };
+        let (vals, cols) = w.generate();
+        let rank = vec![1.0 / 512f32; 512];
+        let next: Vec<f32> =
+            (0..512).map(|r| propagate_row(&vals, &cols, w.ell_width, &rank, r)).collect();
+        let mass: f32 = next.iter().sum();
+        assert!((mass - 1.0).abs() < 0.2, "mass {mass}");
+        assert!(next.iter().all(|&v| v > 0.0));
+    }
+}

@@ -1,0 +1,265 @@
+//! RSBench (Fig. 8b): windowed-multipole resonance cross sections — the
+//! reduced-data-movement alternative to XSBench's table lookup. Compute
+//! bound (complex pole arithmetic), tiny tables.
+
+use super::common::{self, checksum, grid_for, AppResult, Mode};
+use super::xsbench::parallel_map_cpu;
+use crate::gpu::stats::{LaunchStats, Pattern};
+use crate::perfmodel::a100;
+use crate::util::rng::SplitMix64;
+
+pub const WINDOW: usize = 16;
+/// Full-run scale factor (see xsbench::BATCHES).
+pub const BATCHES: f64 = 256.0;
+
+#[derive(Debug, Clone)]
+pub struct RsWorkload {
+    pub label: &'static str,
+    pub poles: usize,
+    pub lookups: usize,
+    pub particles: usize,
+    pub history_steps: usize,
+}
+
+impl RsWorkload {
+    pub fn small() -> Self {
+        Self { label: "small", poles: 1024, lookups: 2048, particles: 2048, history_steps: 8 }
+    }
+
+    pub fn large() -> Self {
+        Self { label: "large", poles: 8192, lookups: 2048, particles: 2048, history_steps: 8 }
+    }
+
+    pub fn generate(&self) -> RsData {
+        let p = self.poles;
+        let poles: Vec<f32> = (0..p * 4)
+            .map(|i| {
+                let v = (SplitMix64::at(31, i as u64) % 2000) as f32 / 1000.0 - 1.0;
+                if i % 4 == 3 {
+                    v.abs() + 0.1 // keep poles off the real axis
+                } else {
+                    v
+                }
+            })
+            .collect();
+        let n = self.lookups.max(self.particles);
+        let e: Vec<f32> =
+            (0..n).map(|i| 0.1 + (SplitMix64::at(37, i as u64) % 800) as f32 / 1000.0).collect();
+        let win: Vec<i32> = (0..n * WINDOW)
+            .map(|i| (SplitMix64::at(41, i as u64) % p as u64) as i32)
+            .collect();
+        RsData { poles, e, win }
+    }
+}
+
+pub struct RsData {
+    /// [P,4] rows: re_num, im_num, re_pole, im_pole.
+    pub poles: Vec<f32>,
+    pub e: Vec<f32>,
+    /// [N, WINDOW] pole indices.
+    pub win: Vec<i32>,
+}
+
+/// One resonance evaluation — identical code on every substrate; mirrors
+/// `ref.rs_lookup_ref`.
+#[inline]
+pub fn eval(data: &RsData, i: usize) -> f32 {
+    let e = data.e[i];
+    let mut acc = 0f32;
+    for k in 0..WINDOW {
+        let p = data.win[i * WINDOW + k] as usize * 4;
+        let (nr, ni, pr, pi) = (data.poles[p], data.poles[p + 1], data.poles[p + 2], data.poles[p + 3]);
+        let dr = e - pr;
+        let di = -pi;
+        let den = (dr * dr + di * di).max(1e-30);
+        acc += (nr * dr + ni * di) / den;
+    }
+    acc
+}
+
+fn count_eval(stats: &mut LaunchStats, n: u64) {
+    stats.bytes_random += n * (WINDOW as u64 * 20);
+    stats.flops_f32 += n * (WINDOW as u64 * 10);
+    stats.int_ops += n * (WINDOW as u64 * 4);
+}
+
+fn history_chain(data: &RsData, p: usize, steps: usize, n_poles: usize) -> f32 {
+    let mut acc = 0f32;
+    let mut i = p;
+    for _ in 0..steps {
+        let v = eval(data, i);
+        acc += v;
+        // Next window depends on the previous result (serial dependence).
+        i = (i + (v.abs() * 997.0) as usize) % data.e.len().min(n_poles.max(1));
+    }
+    acc
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LookupMode {
+    Event,
+    History,
+}
+
+pub fn run(mode: Mode, lm: LookupMode, w: &RsWorkload) -> AppResult {
+    let data = w.generate();
+    let t0 = std::time::Instant::now();
+    let mut stats = LaunchStats::default();
+    let cs;
+    let workload =
+        format!("{}/{}", w.label, if lm == LookupMode::Event { "event" } else { "history" });
+
+    match (mode, lm) {
+        (Mode::Offload, LookupMode::History) => {
+            panic!("manual offload of history mode does not exist (paper §5.3.1)")
+        }
+        (Mode::Offload, LookupMode::Event) => {
+            let name = format!("rs_lookup_{}", w.label);
+            let b = w.lookups;
+            let out: Vec<f32> = common::with_runtime(|rt| {
+                let lits = vec![
+                    xla::Literal::vec1(&data.e[..b]).reshape(&[b as i64]).unwrap(),
+                    xla::Literal::vec1(&data.win[..b * WINDOW])
+                        .reshape(&[b as i64, WINDOW as i64])
+                        .unwrap(),
+                    xla::Literal::vec1(&data.poles).reshape(&[w.poles as i64, 4]).unwrap(),
+                ];
+                rt.execute(&name, &lits).unwrap()[0].to_vec().unwrap()
+            })
+            .expect("offload mode needs artifacts");
+            cs = checksum(out.iter().map(|&x| x as f64));
+            count_eval(&mut stats, b as u64);
+        }
+        (Mode::Cpu, lm) => {
+            let sums = match lm {
+                LookupMode::Event => parallel_map_cpu(w.lookups, |i| eval(&data, i) as f64),
+                LookupMode::History => parallel_map_cpu(w.particles, |p| {
+                    history_chain(&data, p, w.history_steps, w.poles) as f64
+                }),
+            };
+            cs = checksum(sums);
+            let n = match lm {
+                LookupMode::Event => w.lookups as u64,
+                LookupMode::History => (w.particles * w.history_steps) as u64,
+            };
+            count_eval(&mut stats, n);
+        }
+        (gpu_mode, lm) => {
+            let dev = common::shared_device();
+            let cfg = grid_for(gpu_mode, 64);
+            let items = match lm {
+                LookupMode::Event => w.lookups,
+                LookupMode::History => w.particles,
+            };
+            let outsums: std::sync::Mutex<Vec<(usize, f64)>> = std::sync::Mutex::new(Vec::new());
+            let ls = dev.launch(cfg, |ctx| {
+                let n = ctx.num_threads_global();
+                let mut local = Vec::new();
+                let mut i = ctx.global_tid();
+                while i < items {
+                    match lm {
+                        LookupMode::Event => {
+                            local.push((i, eval(&data, i) as f64));
+                            ctx.mem(WINDOW as u64 * 20, Pattern::Random);
+                            ctx.flops32(WINDOW as u64 * 10);
+                            ctx.int_ops(WINDOW as u64 * 4);
+                        }
+                        LookupMode::History => {
+                            local.push((
+                                i,
+                                history_chain(&data, i, w.history_steps, w.poles) as f64,
+                            ));
+                            let h = w.history_steps as u64;
+                            ctx.mem(h * WINDOW as u64 * 20, Pattern::Random);
+                            ctx.flops32(h * WINDOW as u64 * 10);
+                            ctx.int_ops(h * WINDOW as u64 * 4);
+                        }
+                    }
+                    i += n;
+                }
+                outsums.lock().unwrap().extend(local);
+            });
+            let mut sums = outsums.into_inner().unwrap();
+            sums.sort_by_key(|&(i, _)| i);
+            cs = checksum(sums.into_iter().map(|(_, s)| s));
+            stats = ls;
+        }
+    }
+
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    let modeled_ns = match mode {
+        Mode::Cpu => common::cpu_modeled_ns(&common::scale_stats(&stats, BATCHES), common::CPU_THREADS),
+        _ => {
+            let mut stats = common::scale_stats(&stats, BATCHES);
+            let active = match lm {
+                LookupMode::Event => (w.lookups as f64 * BATCHES) as u64,
+                LookupMode::History => {
+                    // Same temporal-locality discount as XSBench: a
+                    // particle's sequential windows stay L2-resident while
+                    // the (full-app-scaled) pole table fits 40 MB. RSBench
+                    // stores ~300 doubles of multipole data per pole.
+                    let scaled = (w.poles * 16 * 300) as f64;
+                    let f = (scaled / (40.0 * 1024.0 * 1024.0)).clamp(0.15, 1.0);
+                    stats.bytes_random = (stats.bytes_random as f64 * f) as u64;
+                    // Unlike XSBench's pointer-chase, the window loop gives
+                    // each particle ~4-wide memory-level parallelism.
+                    w.particles as u64 * 4
+                }
+            };
+            // Fig. 8 times the compute kernel only (no transfers).
+            let mut t = common::gpu_modeled_ns(&stats, active, 1);
+            if mode != Mode::Offload {
+                t += a100::KERNEL_SPLIT_RPC_NS;
+            }
+            t
+        }
+    };
+    AppResult { app: "rsbench".into(), mode, workload, modeled_ns, wall_ns, checksum: cs, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::apps::common::close;
+
+    #[test]
+    fn substrates_agree_on_checksum() {
+        let w = RsWorkload::small();
+        let cpu = run(Mode::Cpu, LookupMode::Event, &w);
+        let gpu = run(Mode::GpuFirst, LookupMode::Event, &w);
+        assert!(close(cpu.checksum, gpu.checksum, 1e-9));
+    }
+
+    #[test]
+    fn eval_is_finite_and_window_dependent() {
+        let w = RsWorkload::small();
+        let data = w.generate();
+        let a = eval(&data, 0);
+        let b = eval(&data, 1);
+        assert!(a.is_finite() && b.is_finite());
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn fig8b_large_input_event_catches_up() {
+        // RSBench is compute-bound: event and history converge at the
+        // large size (event "has caught up" rather than surpassing).
+        let rel = |w: &RsWorkload, lm: LookupMode| {
+            let n = match lm {
+                LookupMode::Event => w.lookups as u64,
+                LookupMode::History => (w.particles * w.history_steps) as u64,
+            };
+            let gpu = run(Mode::GpuFirst, lm, w);
+            let cpu = run(Mode::Cpu, lm, w);
+            (cpu.modeled_ns / n as f64) / (gpu.modeled_ns / n as f64)
+        };
+        let small = RsWorkload::small();
+        let large = RsWorkload::large();
+        let (ev_s, hi_s) = (rel(&small, LookupMode::Event), rel(&small, LookupMode::History));
+        let (ev_l, hi_l) = (rel(&large, LookupMode::Event), rel(&large, LookupMode::History));
+        assert!(hi_s > ev_s, "small: history {hi_s:.3} vs event {ev_s:.3}");
+        let gap_small = hi_s / ev_s;
+        let gap_large = hi_l / ev_l;
+        assert!(gap_large < gap_small, "event should close the gap at large size");
+    }
+}

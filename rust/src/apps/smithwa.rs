@@ -1,0 +1,214 @@
+//! 372.smithwa (Fig. 10c): Smith-Waterman local alignment. The workload
+//! is distributed across threads which communicate through a
+//! producer-consumer scheme of shared variables **followed by barriers**
+//! (one wave per DP row) — conceptually inefficient on GPUs. Each region
+//! also allocates/frees per-thread scratch on the device heap, which is
+//! why the paper notes the run is allocator-bound without the balanced
+//! allocator.
+//!
+//! Fig. 10c's x-axis is the SPEC "sequence length" exponent; the DP
+//! problem is `n = 2^(l/2)` so the cell count is `2^l`. The paper sees
+//! stable relative performance until length 26, then exponentially
+//! growing slowdown: the full benchmark's working set (~640 B per cell
+//! row-block across its report structures) exceeds the A100's 40 GB at
+//! l ≥ 26 and managed memory starts thrashing. We model that
+//! oversubscription term explicitly; the DP itself is computed for real
+//! (sub-sampled above `REAL_CELL_CAP`, with counts scaled analytically).
+
+use super::common::{self, AppResult, Mode};
+use crate::gpu::grid::{AllocatorKind, Device, LaunchConfig};
+use crate::gpu::memory::MemConfig;
+use crate::gpu::stats::{LaunchStats, Pattern};
+use crate::perfmodel::a100;
+use crate::util::rng::Xoshiro256;
+
+/// Real-compute cap: above this many DP cells, compute a sample and scale
+/// the operation counts (the modeled time drives the figure).
+const REAL_CELL_CAP: u64 = 1 << 24;
+/// Full-benchmark bytes per DP cell (matrix + report structures).
+const BYTES_PER_CELL: f64 = 640.0;
+const DEVICE_MEM_BYTES: f64 = 40.0 * 1024.0 * 1024.0 * 1024.0;
+
+#[derive(Debug, Clone, Copy)]
+pub struct SmithwaWorkload {
+    /// SPEC-style "sequence length" exponent (Fig. 10c x-axis).
+    pub length_exp: u32,
+    pub threads: usize,
+}
+
+impl SmithwaWorkload {
+    pub fn new(length_exp: u32) -> Self {
+        Self { length_exp, threads: 64 }
+    }
+
+    pub fn n(&self) -> u64 {
+        1u64 << (self.length_exp / 2)
+    }
+
+    pub fn cells(&self) -> u64 {
+        self.n() * self.n()
+    }
+
+    pub fn working_set_bytes(&self) -> f64 {
+        self.cells() as f64 * BYTES_PER_CELL
+    }
+}
+
+/// Smith-Waterman DP over anti-ordered rows with a barrier per row wave
+/// (the producer-consumer structure). Returns (best score, stats).
+fn wavefront_dp(
+    dev: &Device,
+    w: &SmithwaWorkload,
+    n: usize,
+    a: &[u8],
+    b: &[u8],
+) -> (i32, LaunchStats) {
+    use std::sync::atomic::{AtomicI32, Ordering};
+    let prev: Vec<AtomicI32> = (0..=n).map(|_| AtomicI32::new(0)).collect();
+    let cur: Vec<AtomicI32> = (0..=n).map(|_| AtomicI32::new(0)).collect();
+    let best = AtomicI32::new(0);
+    let threads = w.threads.min(n.max(1));
+    let cfg = LaunchConfig::new(1, threads);
+    let chunk = n.div_ceil(threads);
+
+    // One phase per DP row: threads fill disjoint column chunks of `cur`
+    // from `prev` (the wave structure makes within-row cells depend only
+    // on the previous row in this banded variant), then barrier.
+    let stats = dev.launch_phased(cfg, n, |ctx, row| {
+        let t = ctx.global_tid();
+        // Region-boundary allocation (the paper's allocator stress): a
+        // per-thread scratch line allocated and freed each wave.
+        let scratch = ctx.malloc(64).ok();
+        let lo = t * chunk;
+        let hi = ((t + 1) * chunk).min(n);
+        let ca = a[row % a.len()];
+        let mut local_best = 0;
+        for j in lo..hi {
+            let m = if ca == b[j % b.len()] { 3 } else { -1 };
+            let diag = prev[j].load(Ordering::Relaxed);
+            let up = prev[j + 1].load(Ordering::Relaxed);
+            let v = (diag + m).max(up - 2).max(0);
+            cur[j + 1].store(v, Ordering::Relaxed);
+            local_best = local_best.max(v);
+        }
+        best.fetch_max(local_best, Ordering::Relaxed);
+        ctx.mem((hi - lo) as u64 * 12, Pattern::Strided);
+        ctx.int_ops((hi - lo) as u64 * 10);
+        if row + 1 < n {
+            // Producer-consumer handoff: copy cur -> prev in our chunk.
+            for j in lo..hi {
+                prev[j + 1].store(cur[j + 1].load(Ordering::Relaxed), Ordering::Relaxed);
+            }
+            ctx.mem((hi - lo) as u64 * 8, Pattern::Strided);
+        }
+        if let Some(p) = scratch {
+            ctx.free(p).ok();
+        }
+    });
+    (best.load(Ordering::Relaxed), stats)
+}
+
+pub fn run_with_allocator(mode: Mode, w: &SmithwaWorkload, alloc: AllocatorKind) -> AppResult {
+    let n_real = (w.n().min((REAL_CELL_CAP as f64).sqrt() as u64)) as usize;
+    let scale = (w.cells() as f64 / (n_real as f64 * n_real as f64)).max(1.0);
+    let mut rng = Xoshiro256::new(0x57A7);
+    let a: Vec<u8> = (0..n_real).map(|_| rng.next_below(20) as u8).collect();
+    let b: Vec<u8> = (0..n_real).map(|_| rng.next_below(20) as u8).collect();
+    let t0 = std::time::Instant::now();
+
+    let dev = Device::new(MemConfig::small(), alloc);
+    let (score, mut stats) = wavefront_dp(&dev, w, n_real, &a, &b);
+
+    // Scale the sampled counts to the full problem.
+    stats.bytes_strided = (stats.bytes_strided as f64 * scale) as u64;
+    stats.int_ops = (stats.int_ops as f64 * scale) as u64;
+    stats.barriers_global = (stats.barriers_global as f64 * scale.sqrt()) as u64;
+    stats.allocs = (stats.allocs as f64 * scale.sqrt()) as u64;
+    stats.frees = stats.allocs;
+
+    let wall_ns = t0.elapsed().as_nanos() as f64;
+    // Allocator serialization: real per-lock traffic, modeled per-op cost.
+    let alloc_stats = dev.heap.stats();
+    let alloc_ns = alloc_stats.modeled_ns(dev.heap.per_op_ns()) * scale.sqrt();
+
+    let modeled_ns = match mode {
+        Mode::Cpu => common::cpu_modeled_ns(&stats, common::CPU_THREADS.min(w.threads)),
+        Mode::Offload => panic!("no manual offload exists for 372.smithwa"),
+        _ => {
+            let mut t = common::gpu_modeled_ns(&stats, w.threads as u64, 1)
+                + a100::KERNEL_SPLIT_RPC_NS
+                + alloc_ns;
+            // Managed-memory oversubscription: past device capacity every
+            // extra byte pays migration, growing exponentially with the
+            // oversubscription ratio.
+            let ratio = w.working_set_bytes() / DEVICE_MEM_BYTES;
+            if ratio > 1.0 {
+                // Each doubling of oversubscription roughly quadruples the
+                // page-migration traffic; saturates once everything faults.
+                t *= (2.0f64).powf((ratio - 1.0).min(5.0) * 2.0);
+            }
+            t
+        }
+    };
+    AppResult {
+        app: "smithwa".into(),
+        mode,
+        workload: format!("length 2^{} ({} alloc)", w.length_exp, dev.heap.name()),
+        modeled_ns,
+        wall_ns,
+        checksum: score as f64,
+        stats,
+    }
+}
+
+pub fn run(mode: Mode, w: &SmithwaWorkload) -> AppResult {
+    run_with_allocator(mode, w, AllocatorKind::Balanced(Default::default()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn score_deterministic_across_allocators() {
+        let w = SmithwaWorkload { length_exp: 16, threads: 16 };
+        let a = run_with_allocator(Mode::GpuFirst, &w, AllocatorKind::Balanced(Default::default()));
+        let b = run_with_allocator(Mode::GpuFirst, &w, AllocatorKind::Generic);
+        assert_eq!(a.checksum, b.checksum);
+        assert!(a.checksum > 0.0);
+    }
+
+    #[test]
+    fn fig10c_stable_then_blowup_after_26() {
+        let rel = |l: u32| {
+            let w = SmithwaWorkload::new(l);
+            let cpu = run(Mode::Cpu, &w);
+            let gpu = run(Mode::GpuFirst, &w);
+            gpu.modeled_ns / cpu.modeled_ns
+        };
+        let r20 = rel(20);
+        let r24 = rel(24);
+        let r28 = rel(28);
+        let r30 = rel(30);
+        // Stable region: within 2x of each other.
+        assert!((r24 / r20) < 3.0, "stable region drifts: {r20} -> {r24}");
+        // Blow-up region: super-linear growth past 26.
+        assert!(r28 > 3.0 * r24, "no blowup at 28: {r24} -> {r28}");
+        assert!(r30 > 3.0 * r28, "not exponential: {r28} -> {r30}");
+    }
+
+    #[test]
+    fn balanced_allocator_removes_alloc_domination() {
+        // Paper: "without the balanced allocator the performance is
+        // dominated by the massively parallel allocations".
+        let w = SmithwaWorkload { length_exp: 20, threads: 64 };
+        let bal = run_with_allocator(Mode::GpuFirst, &w, AllocatorKind::Balanced(Default::default()));
+        let vendor = run_with_allocator(Mode::GpuFirst, &w, AllocatorKind::Vendor);
+        assert!(
+            vendor.modeled_ns > 1.5 * bal.modeled_ns,
+            "vendor {} vs balanced {}",
+            vendor.modeled_ns,
+            bal.modeled_ns
+        );
+    }
+}

@@ -1,0 +1,78 @@
+//! Runtime configuration (the paper's environment knobs: allocator flag,
+//! grid shape, memory sizes).
+
+use crate::gpu::grid::AllocatorKind;
+use crate::gpu::memory::MemConfig;
+use crate::util::cli::Args;
+
+#[derive(Debug, Clone, Copy)]
+pub struct Config {
+    pub teams: usize,
+    pub threads_per_team: usize,
+    pub allocator: AllocatorKind,
+    pub mem: MemConfig,
+    /// Print pass reports and per-launch stats.
+    pub verbose: bool,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Self {
+            teams: 64,
+            threads_per_team: 128,
+            allocator: AllocatorKind::Balanced(Default::default()),
+            mem: MemConfig::default(),
+            verbose: false,
+        }
+    }
+}
+
+impl Config {
+    /// Build from CLI arguments:
+    /// `--teams N --threads N --allocator generic|vendor|balanced[N,M]
+    ///  --heap-mb N --verbose`.
+    pub fn from_args(args: &Args) -> Result<Self, String> {
+        let mut cfg = Config::default();
+        cfg.teams = args.get_usize("teams", cfg.teams);
+        cfg.threads_per_team = args.get_usize("threads", cfg.threads_per_team);
+        if let Some(a) = args.get("allocator") {
+            cfg.allocator = AllocatorKind::parse(a)?;
+        }
+        let heap_mb = args.get_usize("heap-mb", 256);
+        cfg.mem.global_size = (heap_mb as u64) << 20;
+        cfg.verbose = args.flag("verbose");
+        if cfg.teams == 0 || cfg.threads_per_team == 0 {
+            return Err("teams/threads must be positive".into());
+        }
+        Ok(cfg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_flags() {
+        let args = Args::parse(
+            &sv(&["--teams", "8", "--threads", "32", "--allocator", "balanced[4,2]", "--heap-mb", "64", "--verbose"]),
+            &[],
+        );
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.teams, 8);
+        assert_eq!(cfg.threads_per_team, 32);
+        assert_eq!(cfg.mem.global_size, 64 << 20);
+        assert!(cfg.verbose);
+        assert!(matches!(cfg.allocator, AllocatorKind::Balanced(c) if c.n == 4 && c.m == 2));
+    }
+
+    #[test]
+    fn rejects_bad_allocator() {
+        let args = Args::parse(&sv(&["--allocator", "wat"]), &[]);
+        assert!(Config::from_args(&args).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! The GPU First session: compile → load → run (paper Fig. 1 & Fig. 2).
+//!
+//! "The loader is the entry point for the operating system and responsible
+//! to setup the environment on the device": here it creates the simulated
+//! device, starts the single-threaded host RPC server, registers the
+//! common landing pads (the pass registers call-site-specific ones during
+//! compilation), materializes the program, maps `argv` onto the device and
+//! transfers control to the user's `main`.
+
+use super::config::Config;
+use super::metrics::RunMetrics;
+use crate::gpu::grid::Device;
+use crate::ir::interp::{ProgramEnv, Value};
+use crate::ir::Module;
+use crate::rpc::wrappers::register_common;
+use crate::rpc::{HostEnv, RpcServer, WrapperRegistry};
+use crate::transform::{compile, CompileOptions, CompileReport};
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+pub struct GpuFirstSession {
+    pub cfg: Config,
+    pub device: Arc<Device>,
+    pub registry: Arc<WrapperRegistry>,
+    pub host: Arc<HostEnv>,
+    server: Option<RpcServer>,
+    pub report: Option<CompileReport>,
+    pub env: Option<Arc<ProgramEnv>>,
+}
+
+impl GpuFirstSession {
+    /// Bring up device + host server + common landing pads.
+    pub fn start(cfg: Config) -> Self {
+        let device = Arc::new(Device::new(cfg.mem, cfg.allocator));
+        let registry = Arc::new(WrapperRegistry::new());
+        register_common(&registry);
+        let host = Arc::new(HostEnv::new());
+        let server = RpcServer::start(
+            Arc::clone(&device.mem),
+            Arc::clone(&registry),
+            Arc::clone(&host),
+        );
+        Self { cfg, device, registry, host, server: Some(server), report: None, env: None }
+    }
+
+    /// Run the compiler pipeline over `module` (in place), registering
+    /// landing pads against this session's registry.
+    pub fn compile(&mut self, module: &mut Module, opts: CompileOptions) -> Result<(), String> {
+        let report = compile(module, &self.registry, opts)
+            .map_err(|errs| format!("verification failed:\n  {}", errs.join("\n  ")))?;
+        self.report = Some(report);
+        Ok(())
+    }
+
+    /// Materialize the compiled module on the device.
+    pub fn load(&mut self, module: Module) {
+        let env = ProgramEnv::load_with_grid(
+            module,
+            Arc::clone(&self.device),
+            Arc::clone(&self.registry),
+            Arc::clone(&self.host),
+            self.cfg.teams,
+            self.cfg.threads_per_team,
+        );
+        self.env = Some(env);
+    }
+
+    /// Map argv to the device and invoke the user `main` on the GPU.
+    pub fn run(&self, argv: &[i64]) -> (i64, RunMetrics) {
+        let env = self.env.as_ref().expect("load() before run()");
+        let args: Vec<Value> = argv.iter().map(|&v| Value::I(v)).collect();
+        let t0 = std::time::Instant::now();
+        let (ret, main_stats) = env.run_main(&args);
+        let wall_ns = t0.elapsed().as_nanos() as f64;
+        let kernel_stats = *env.kernel_stats.lock().unwrap();
+        let metrics = RunMetrics {
+            exit_code: ret,
+            wall_ns,
+            main_stats,
+            kernel_stats,
+            kernel_launches: env.kernel_launches.load(Ordering::Relaxed),
+            grid: (self.cfg.teams, self.cfg.threads_per_team),
+        };
+        (ret, metrics)
+    }
+
+    /// Compile + load + run a parsed module in one call.
+    pub fn execute(
+        &mut self,
+        mut module: Module,
+        opts: CompileOptions,
+        argv: &[i64],
+    ) -> Result<(i64, RunMetrics), String> {
+        self.compile(&mut module, opts)?;
+        self.load(module);
+        Ok(self.run(argv))
+    }
+
+    pub fn stop(mut self) {
+        if let Some(s) = self.server.take() {
+            s.stop();
+        }
+    }
+}
+
+impl Drop for GpuFirstSession {
+    fn drop(&mut self) {
+        if let Some(s) = self.server.take() {
+            s.stop();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::MemConfig;
+
+    fn small_cfg() -> Config {
+        Config { mem: MemConfig::small(), teams: 4, threads_per_team: 32, ..Default::default() }
+    }
+
+    #[test]
+    fn end_to_end_hello() {
+        let src = r#"
+global @fmt const 20 "hello from the GPU\n"
+
+func @main() -> i64 {
+  call printf(@fmt)
+  return 0
+}
+"#;
+        let module = crate::ir::parser::parse_module(src).unwrap();
+        let mut session = GpuFirstSession::start(small_cfg());
+        let (ret, metrics) =
+            session.execute(module, CompileOptions::default(), &[]).unwrap();
+        assert_eq!(ret, 0);
+        assert_eq!(session.host.stdout_string(), "hello from the GPU\n");
+        assert_eq!(metrics.main_stats.rpc_calls, 1);
+        session.stop();
+    }
+
+    #[test]
+    fn config_grid_drives_kernel_launch() {
+        let src = r#"
+global @out 65536
+
+func @main() -> i64 {
+  parallel {
+    for.team %i = 0 to 8192 step 1 {
+      %off = mul %i, 8
+      %p = gep @out, %off
+      store.8 %i, %p
+    }
+  }
+  %p = gep @out, 65528
+  %r = load.8 %p
+  return %r
+}
+"#;
+        let module = crate::ir::parser::parse_module(src).unwrap();
+        let mut session = GpuFirstSession::start(small_cfg());
+        let (ret, metrics) =
+            session.execute(module, CompileOptions::default(), &[]).unwrap();
+        assert_eq!(ret, 8191);
+        assert_eq!(metrics.kernel_launches, 1);
+        assert_eq!(metrics.grid, (4, 32));
+        session.stop();
+    }
+}

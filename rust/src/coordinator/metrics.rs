@@ -1,0 +1,64 @@
+//! Per-run metrics: real wallclock + modeled device time decomposition.
+
+use crate::gpu::stats::LaunchStats;
+use crate::perfmodel::a100;
+
+#[derive(Debug, Clone, Copy)]
+pub struct RunMetrics {
+    pub exit_code: i64,
+    /// Real wallclock of the whole simulated run on this host.
+    pub wall_ns: f64,
+    /// Main-kernel (serial part, 1×1) stats.
+    pub main_stats: LaunchStats,
+    /// Aggregate over all launched parallel kernels.
+    pub kernel_stats: LaunchStats,
+    pub kernel_launches: u64,
+    pub grid: (usize, usize),
+}
+
+impl RunMetrics {
+    /// Modeled A100 time: serial main kernel (1 thread) + parallel kernels
+    /// (whole grid) + one kernel-split RPC per launch.
+    pub fn modeled_device_ns(&self) -> f64 {
+        let serial = a100::device_time(&self.main_stats, 1, 1).total_ns();
+        let par = a100::device_time(
+            &self.kernel_stats,
+            (self.grid.0 * self.grid.1) as u64,
+            self.kernel_launches.max(1),
+        )
+        .total_ns();
+        serial + par + self.kernel_launches as f64 * a100::KERNEL_SPLIT_RPC_NS
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "exit={} wall={} modeled_device={} launches={} grid={}x{} rpcs={}",
+            self.exit_code,
+            crate::util::fmt_ns(self.wall_ns),
+            crate::util::fmt_ns(self.modeled_device_ns()),
+            self.kernel_launches,
+            self.grid.0,
+            self.grid.1,
+            self.main_stats.rpc_calls + self.kernel_stats.rpc_calls,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn modeled_time_includes_launch_rpc() {
+        let m = RunMetrics {
+            exit_code: 0,
+            wall_ns: 0.0,
+            main_stats: LaunchStats::default(),
+            kernel_stats: LaunchStats::default(),
+            kernel_launches: 3,
+            grid: (4, 32),
+        };
+        assert!(m.modeled_device_ns() >= 3.0 * a100::KERNEL_SPLIT_RPC_NS);
+        assert!(m.summary().contains("launches=3"));
+    }
+}

@@ -1,0 +1,14 @@
+//! The coordinator: the paper's Fig. 1 *loader* plus the host process.
+//!
+//! It owns process topology: the simulated device, the host RPC server
+//! thread, the landing-pad registry, the PJRT runtime for offloaded
+//! kernels, metrics, and the CLI-facing configuration. The request path
+//! (run an application, launch kernels, serve RPCs) is pure Rust.
+
+pub mod config;
+pub mod loader;
+pub mod metrics;
+
+pub use config::Config;
+pub use loader::GpuFirstSession;
+pub use metrics::RunMetrics;

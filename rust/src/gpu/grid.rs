@@ -1,0 +1,467 @@
+//! Grid execution engine: runs simulated GPU threads on a host worker pool.
+//!
+//! Three launch shapes cover the paper's execution modes:
+//!
+//! * [`Device::launch`] — data-parallel grid (no cross-thread communication
+//!   inside the body). Simulated threads are partitioned over a worker
+//!   pool; this is how expanded multi-team parallel regions execute.
+//! * [`Device::launch_phased`] — bulk-synchronous: the body is called once
+//!   per phase per simulated thread with an implicit **global barrier**
+//!   between phases (the paper's cross-team barrier via global atomic
+//!   counters). Used by wavefront codes (smithwa).
+//! * [`Device::launch_coop`] — one real OS thread per simulated thread with
+//!   a true [`GridCtx::barrier_global`]; bounded to small grids, used where
+//!   arbitrary barrier placement is required.
+
+use super::memory::{DeviceMemory, MemConfig, GLOBAL_BASE, MANAGED_BASE};
+use super::stats::{Counters, LaunchStats, Pattern, SharedCounters};
+use crate::alloc::{
+    AllocCtx, AllocError, BalancedAllocator, BalancedConfig, DeviceAllocator, GenericAllocator,
+    VendorAllocator,
+};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaunchConfig {
+    pub teams: usize,
+    pub threads_per_team: usize,
+}
+
+impl LaunchConfig {
+    pub fn new(teams: usize, threads_per_team: usize) -> Self {
+        assert!(teams >= 1 && threads_per_team >= 1);
+        Self { teams, threads_per_team }
+    }
+
+    pub fn total_threads(&self) -> usize {
+        self.teams * self.threads_per_team
+    }
+}
+
+/// Allocator selection — the paper's
+/// `-fopenmp-target-allocator={generic,balanced[N,M]}` flag, plus the
+/// vendor baseline.
+#[derive(Debug, Clone, Copy)]
+pub enum AllocatorKind {
+    Generic,
+    Balanced(BalancedConfig),
+    Vendor,
+}
+
+impl AllocatorKind {
+    /// Parse the paper's flag syntax: `generic`, `vendor`, `balanced`,
+    /// `balanced[N,M]`.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        match s {
+            "generic" => Ok(AllocatorKind::Generic),
+            "vendor" => Ok(AllocatorKind::Vendor),
+            "balanced" => Ok(AllocatorKind::Balanced(BalancedConfig::default())),
+            _ => {
+                let inner = s
+                    .strip_prefix("balanced[")
+                    .and_then(|r| r.strip_suffix(']'))
+                    .ok_or_else(|| format!("unknown allocator {s:?}"))?;
+                let (n, m) = inner.split_once(',').ok_or("balanced[N,M] expects two ints")?;
+                Ok(AllocatorKind::Balanced(BalancedConfig {
+                    n: n.trim().parse().map_err(|e| format!("bad N: {e}"))?,
+                    m: m.trim().parse().map_err(|e| format!("bad M: {e}"))?,
+                    ..BalancedConfig::default()
+                }))
+            }
+        }
+    }
+}
+
+/// The simulated device: memory + heap allocator + worker pool size.
+pub struct Device {
+    pub mem: Arc<DeviceMemory>,
+    pub heap: Arc<dyn DeviceAllocator>,
+    workers: usize,
+    managed_bump: Mutex<u64>,
+    managed_end: u64,
+    /// Launches performed (for the cost model's launch-overhead term).
+    pub launches: AtomicU64,
+}
+
+impl Device {
+    pub fn new(mem_cfg: MemConfig, alloc_kind: AllocatorKind) -> Self {
+        let mem = Arc::new(DeviceMemory::new(mem_cfg));
+        let heap_base = GLOBAL_BASE;
+        let heap_size = mem_cfg.global_size;
+        let heap: Arc<dyn DeviceAllocator> = match alloc_kind {
+            AllocatorKind::Generic => Arc::new(GenericAllocator::new(heap_base, heap_size)),
+            AllocatorKind::Balanced(cfg) => {
+                Arc::new(BalancedAllocator::new(heap_base, heap_size, cfg))
+            }
+            AllocatorKind::Vendor => Arc::new(VendorAllocator::new(heap_base, heap_size)),
+        };
+        let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8).min(16);
+        Self {
+            mem,
+            heap,
+            workers,
+            // Reserve the low managed region for RPC mailboxes (see rpc::).
+            managed_bump: Mutex::new(MANAGED_BASE + crate::rpc::mailbox::MAILBOX_RESERVED),
+            managed_end: MANAGED_BASE + mem_cfg.managed_size,
+            launches: AtomicU64::new(0),
+        }
+    }
+
+    pub fn small() -> Self {
+        Self::new(MemConfig::small(), AllocatorKind::Generic)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Bump-allocate managed (host-visible) memory; freed only wholesale.
+    pub fn managed_alloc(&self, size: u64) -> u64 {
+        let size = crate::alloc::align_up(size.max(1), 16);
+        let mut g = self.managed_bump.lock().unwrap();
+        assert!(*g + size <= self.managed_end, "managed segment exhausted");
+        let addr = *g;
+        *g += size;
+        addr
+    }
+
+    /// Data-parallel launch. Returns aggregated launch statistics.
+    pub fn launch<F>(&self, cfg: LaunchConfig, body: F) -> LaunchStats
+    where
+        F: Fn(&mut GridCtx) + Sync,
+    {
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        let shared = SharedCounters::default();
+        let total = cfg.total_threads();
+        let next = AtomicUsize::new(0);
+        // Perf (§Perf L3-2): spawning a worker costs ~1.5 us; small grids
+        // use fewer workers so launch overhead tracks grid size.
+        let workers = self.workers.min(total.div_ceil(64)).max(1);
+        let chunk = (total / (workers * 8)).max(1);
+        std::thread::scope(|s| {
+            for _ in 0..workers.min(total) {
+                s.spawn(|| {
+                    let mut local = Counters::default();
+                    loop {
+                        let start = next.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= total {
+                            break;
+                        }
+                        for gtid in start..(start + chunk).min(total) {
+                            let mut ctx = GridCtx {
+                                team_id: gtid / cfg.threads_per_team,
+                                thread_id: gtid % cfg.threads_per_team,
+                                cfg,
+                                counters: Counters::default(),
+                                device: self,
+                                coop_barrier: None,
+                            };
+                            body(&mut ctx);
+                            local.merge_from(&ctx.counters);
+                        }
+                    }
+                    shared.absorb(&local);
+                });
+            }
+        });
+        shared.snapshot()
+    }
+
+    /// Bulk-synchronous launch: `phases` rounds with a global barrier after
+    /// each. The barrier cost is charged once per phase per thread.
+    pub fn launch_phased<F>(&self, cfg: LaunchConfig, phases: usize, body: F) -> LaunchStats
+    where
+        F: Fn(&mut GridCtx, usize) + Sync,
+    {
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        let shared = SharedCounters::default();
+        let total = cfg.total_threads();
+        for phase in 0..phases {
+            let next = AtomicUsize::new(0);
+            let chunk = (total / (self.workers * 8)).max(1);
+            std::thread::scope(|s| {
+                for _ in 0..self.workers.min(total) {
+                    s.spawn(|| {
+                        let mut local = Counters::default();
+                        loop {
+                            let start = next.fetch_add(chunk, Ordering::Relaxed);
+                            if start >= total {
+                                break;
+                            }
+                            for gtid in start..(start + chunk).min(total) {
+                                let mut ctx = GridCtx {
+                                    team_id: gtid / cfg.threads_per_team,
+                                    thread_id: gtid % cfg.threads_per_team,
+                                    cfg,
+                                    counters: Counters::default(),
+                                    device: self,
+                                    coop_barrier: None,
+                                };
+                                body(&mut ctx, phase);
+                                ctx.counters.barriers_global += 1;
+                                local.merge_from(&ctx.counters);
+                            }
+                        }
+                        shared.absorb(&local);
+                    });
+                }
+            });
+        }
+        shared.snapshot()
+    }
+
+    /// Cooperative launch: real OS thread per simulated thread so the body
+    /// may call [`GridCtx::barrier_global`] anywhere. Grid bounded to 1024.
+    pub fn launch_coop<F>(&self, cfg: LaunchConfig, body: F) -> LaunchStats
+    where
+        F: Fn(&mut GridCtx) + Sync,
+    {
+        let total = cfg.total_threads();
+        assert!(total <= 1024, "launch_coop bounded to 1024 simulated threads (got {total})");
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        let shared = SharedCounters::default();
+        let barrier = Barrier::new(total);
+        std::thread::scope(|s| {
+            for gtid in 0..total {
+                let barrier = &barrier;
+                let shared = &shared;
+                let body = &body;
+                s.spawn(move || {
+                    let mut ctx = GridCtx {
+                        team_id: gtid / cfg.threads_per_team,
+                        thread_id: gtid % cfg.threads_per_team,
+                        cfg,
+                        counters: Counters::default(),
+                        device: self,
+                        coop_barrier: Some(barrier),
+                    };
+                    body(&mut ctx);
+                    shared.absorb(&ctx.counters);
+                });
+            }
+        });
+        shared.snapshot()
+    }
+}
+
+/// Per-simulated-thread execution context.
+pub struct GridCtx<'a> {
+    pub team_id: usize,
+    pub thread_id: usize,
+    pub cfg: LaunchConfig,
+    pub counters: Counters,
+    pub device: &'a Device,
+    coop_barrier: Option<&'a Barrier>,
+}
+
+impl<'a> GridCtx<'a> {
+    /// Continuous global thread id across teams (paper §3.3: teams "are
+    /// bulked together as one large team, ensuring that all the threads
+    /// have continuous thread IDs").
+    #[inline]
+    pub fn global_tid(&self) -> usize {
+        self.team_id * self.cfg.threads_per_team + self.thread_id
+    }
+
+    #[inline]
+    pub fn num_threads_global(&self) -> usize {
+        self.cfg.total_threads()
+    }
+
+    // ---- counter shorthands ----
+
+    #[inline]
+    pub fn flops(&mut self, n: u64) {
+        self.counters.flops_f64 += n;
+    }
+
+    #[inline]
+    pub fn flops32(&mut self, n: u64) {
+        self.counters.flops_f32 += n;
+    }
+
+    #[inline]
+    pub fn int_ops(&mut self, n: u64) {
+        self.counters.int_ops += n;
+    }
+
+    #[inline]
+    pub fn mem(&mut self, bytes: u64, p: Pattern) {
+        self.counters.mem(bytes, p);
+    }
+
+    #[inline]
+    pub fn divergent(&mut self, n: u64) {
+        self.counters.divergent_branches += n;
+        // A divergent warp serializes both sides: charge the ALU proxy.
+        self.counters.int_ops += n * 32;
+    }
+
+    // ---- heap ----
+
+    pub fn malloc(&mut self, size: u64) -> Result<u64, AllocError> {
+        self.counters.allocs += 1;
+        self.counters.charge_ns(self.device.heap.per_op_ns());
+        self.device.heap.malloc(AllocCtx { thread_id: self.thread_id, team_id: self.team_id }, size)
+    }
+
+    pub fn free(&mut self, addr: u64) -> Result<(), AllocError> {
+        self.counters.frees += 1;
+        self.counters.charge_ns(self.device.heap.per_op_ns());
+        self.device.heap.free(addr)
+    }
+
+    // ---- synchronization ----
+
+    /// Cross-team barrier. Real synchronization in coop mode; in
+    /// data-parallel mode only legal as a no-op at thread exit, so it
+    /// panics to catch misuse early.
+    pub fn barrier_global(&mut self) {
+        self.counters.barriers_global += 1;
+        match self.coop_barrier {
+            Some(b) => {
+                b.wait();
+            }
+            None => panic!(
+                "barrier_global requires launch_coop (data-parallel launches \
+                 must use launch_phased for bulk-synchronous patterns)"
+            ),
+        }
+    }
+
+    /// In-team barrier: counted for the cost model; simulation-level
+    /// ordering is provided by phase structure.
+    pub fn barrier_team(&mut self) {
+        self.counters.barriers_team += 1;
+        if let Some(b) = self.coop_barrier {
+            // Coop grids are small; a full barrier conservatively preserves
+            // in-team ordering too.
+            b.wait();
+        }
+    }
+
+    pub fn atomic_add_u64(&mut self, addr: u64, v: u64) -> u64 {
+        self.counters.atomics_global += 1;
+        self.device.mem.atomic_add_u64(addr, v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn launch_covers_every_thread_exactly_once() {
+        let dev = Device::small();
+        let cfg = LaunchConfig::new(8, 16);
+        let hits: Vec<AtomicU64> = (0..cfg.total_threads()).map(|_| AtomicU64::new(0)).collect();
+        dev.launch(cfg, |ctx| {
+            hits[ctx.global_tid()].fetch_add(1, Ordering::Relaxed);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1));
+    }
+
+    #[test]
+    fn global_tid_continuous_across_teams() {
+        let dev = Device::small();
+        let cfg = LaunchConfig::new(4, 4);
+        let seen = Mutex::new(Vec::new());
+        dev.launch(cfg, |ctx| {
+            seen.lock().unwrap().push((ctx.team_id, ctx.thread_id, ctx.global_tid()));
+        });
+        for (team, thr, gtid) in seen.into_inner().unwrap() {
+            assert_eq!(gtid, team * 4 + thr);
+        }
+    }
+
+    #[test]
+    fn stats_aggregate_flops_and_mem() {
+        let dev = Device::small();
+        let stats = dev.launch(LaunchConfig::new(2, 8), |ctx| {
+            ctx.flops(10);
+            ctx.mem(64, Pattern::Coalesced);
+            ctx.mem(8, Pattern::Random);
+        });
+        assert_eq!(stats.flops_f64, 160);
+        assert_eq!(stats.bytes_coalesced, 1024);
+        assert_eq!(stats.bytes_random, 128);
+    }
+
+    #[test]
+    fn phased_launch_orders_phases() {
+        let dev = Device::small();
+        let cfg = LaunchConfig::new(2, 4);
+        // Phase 1 reads what phase 0 wrote by a *different* thread.
+        let a = GLOBAL_BASE + 4096;
+        let stats = dev.launch_phased(cfg, 2, |ctx, phase| {
+            let n = ctx.num_threads_global() as u64;
+            let t = ctx.global_tid() as u64;
+            if phase == 0 {
+                ctx.device.mem.write_u64(a + t * 8, t + 1);
+            } else {
+                let peer = (t + 1) % n;
+                assert_eq!(ctx.device.mem.read_u64(a + peer * 8), peer + 1);
+            }
+        });
+        assert_eq!(stats.barriers_global, 2 * cfg.total_threads() as u64);
+    }
+
+    #[test]
+    fn coop_barrier_synchronizes() {
+        let dev = Device::small();
+        let cfg = LaunchConfig::new(2, 8);
+        let a = GLOBAL_BASE + 8192;
+        dev.launch_coop(cfg, |ctx| {
+            let t = ctx.global_tid() as u64;
+            ctx.device.mem.write_u64(a + t * 8, t * 10);
+            ctx.barrier_global();
+            let peer = ((t + 5) % 16) * 8;
+            assert_eq!(ctx.device.mem.read_u64(a + peer), (peer / 8) * 10);
+        });
+    }
+
+    #[test]
+    #[should_panic] // worker-thread panic resurfaces at scope join
+    fn barrier_in_data_parallel_panics() {
+        let dev = Device::small();
+        dev.launch(LaunchConfig::new(1, 2), |ctx| {
+            ctx.barrier_global();
+        });
+    }
+
+    #[test]
+    fn malloc_through_ctx_counts() {
+        let dev = Device::small();
+        let stats = dev.launch(LaunchConfig::new(1, 4), |ctx| {
+            let p = ctx.malloc(128).unwrap();
+            ctx.free(p).unwrap();
+        });
+        assert_eq!(stats.allocs, 4);
+        assert_eq!(stats.frees, 4);
+        assert!(stats.charged_ns_max > 0.0);
+    }
+
+    #[test]
+    fn allocator_kind_parses_paper_flag() {
+        assert!(matches!(AllocatorKind::parse("generic"), Ok(AllocatorKind::Generic)));
+        assert!(matches!(AllocatorKind::parse("vendor"), Ok(AllocatorKind::Vendor)));
+        match AllocatorKind::parse("balanced[8,4]").unwrap() {
+            AllocatorKind::Balanced(c) => {
+                assert_eq!((c.n, c.m), (8, 4));
+            }
+            _ => panic!(),
+        }
+        assert!(AllocatorKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn managed_alloc_bumps() {
+        let dev = Device::small();
+        let a = dev.managed_alloc(100);
+        let b = dev.managed_alloc(100);
+        assert!(b >= a + 100);
+        assert_eq!(dev.mem.segment(a), super::super::memory::Segment::Managed);
+    }
+}

@@ -1,0 +1,390 @@
+//! Simulated device memory.
+//!
+//! A single flat, byte-addressable store backed by `AtomicU64` words, so
+//! concurrently executing simulated GPU threads (which run on real OS
+//! threads) can exhibit hardware-like racy behaviour without Rust-level
+//! undefined behaviour. Relaxed atomics compile to plain loads/stores on
+//! x86, so the substrate stays fast.
+//!
+//! The address space is segmented like a discrete-GPU system:
+//!
+//! ```text
+//!   0x0000_0000 .. 0x0000_1000   null guard page (never mapped)
+//!   GLOBAL_BASE ..               device heap (managed by `alloc::`)
+//!   MANAGED_BASE ..              managed/unified memory: RPC mailboxes and
+//!                                migrated objects; host-visible
+//!   STACK_BASE ..                per-thread stack frames (IR interpreter)
+//! ```
+//!
+//! The *host* (RPC server thread) accesses managed memory through the same
+//! [`DeviceMemory`]; the paper's CPU→GPU visibility latency (Fig. 7's 89%
+//! "notification gap") is charged by the cost model, not by delaying writes.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+pub const GLOBAL_BASE: u64 = 0x1000_0000;
+pub const MANAGED_BASE: u64 = 0x8000_0000;
+pub const STACK_BASE: u64 = 0xC000_0000;
+
+/// Which segment an address falls into.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Segment {
+    NullPage,
+    Global,
+    Managed,
+    Stack,
+    /// Host pointer range (addresses above all device segments): values that
+    /// were host pointers all along and must not be translated by RPC.
+    Host,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct MemConfig {
+    pub global_size: u64,
+    pub managed_size: u64,
+    pub stack_size: u64,
+}
+
+impl Default for MemConfig {
+    fn default() -> Self {
+        Self {
+            global_size: 256 << 20,
+            managed_size: 32 << 20,
+            stack_size: 32 << 20,
+        }
+    }
+}
+
+impl MemConfig {
+    pub fn small() -> Self {
+        Self {
+            global_size: 16 << 20,
+            managed_size: 4 << 20,
+            stack_size: 4 << 20,
+        }
+    }
+}
+
+pub struct DeviceMemory {
+    cfg: MemConfig,
+    global: Box<[AtomicU64]>,
+    managed: Box<[AtomicU64]>,
+    stack: Box<[AtomicU64]>,
+}
+
+fn alloc_words(bytes: u64) -> Box<[AtomicU64]> {
+    let words = (bytes as usize + 7) / 8;
+    let mut v = Vec::with_capacity(words);
+    v.resize_with(words, || AtomicU64::new(0));
+    v.into_boxed_slice()
+}
+
+impl DeviceMemory {
+    pub fn new(cfg: MemConfig) -> Self {
+        Self {
+            global: alloc_words(cfg.global_size),
+            managed: alloc_words(cfg.managed_size),
+            stack: alloc_words(cfg.stack_size),
+            cfg,
+        }
+    }
+
+    pub fn config(&self) -> &MemConfig {
+        &self.cfg
+    }
+
+    pub fn segment(&self, addr: u64) -> Segment {
+        if addr < 0x1000 {
+            Segment::NullPage
+        } else if (GLOBAL_BASE..GLOBAL_BASE + self.cfg.global_size).contains(&addr) {
+            Segment::Global
+        } else if (MANAGED_BASE..MANAGED_BASE + self.cfg.managed_size).contains(&addr) {
+            Segment::Managed
+        } else if (STACK_BASE..STACK_BASE + self.cfg.stack_size).contains(&addr) {
+            Segment::Stack
+        } else {
+            Segment::Host
+        }
+    }
+
+    /// Map an address to (segment slice, byte offset). Panics on unmapped
+    /// addresses — the simulator's equivalent of a device-side fault.
+    fn locate(&self, addr: u64, len: u64) -> (&[AtomicU64], u64) {
+        match self.segment(addr) {
+            Segment::Global => {
+                assert!(addr + len <= GLOBAL_BASE + self.cfg.global_size, "global OOB {addr:#x}+{len}");
+                (&self.global, addr - GLOBAL_BASE)
+            }
+            Segment::Managed => {
+                assert!(addr + len <= MANAGED_BASE + self.cfg.managed_size, "managed OOB {addr:#x}+{len}");
+                (&self.managed, addr - MANAGED_BASE)
+            }
+            Segment::Stack => {
+                assert!(addr + len <= STACK_BASE + self.cfg.stack_size, "stack OOB {addr:#x}+{len}");
+                (&self.stack, addr - STACK_BASE)
+            }
+            seg => panic!("device fault: access to {seg:?} address {addr:#x} (len {len})"),
+        }
+    }
+
+    // ---- word-aligned fast paths ----
+
+    pub fn read_u64(&self, addr: u64) -> u64 {
+        if addr % 8 == 0 {
+            let (seg, off) = self.locate(addr, 8);
+            seg[(off / 8) as usize].load(Ordering::Relaxed)
+        } else {
+            let mut b = [0u8; 8];
+            self.read_bytes(addr, &mut b);
+            u64::from_le_bytes(b)
+        }
+    }
+
+    pub fn write_u64(&self, addr: u64, v: u64) {
+        if addr % 8 == 0 {
+            let (seg, off) = self.locate(addr, 8);
+            seg[(off / 8) as usize].store(v, Ordering::Relaxed);
+        } else {
+            self.write_bytes(addr, &v.to_le_bytes());
+        }
+    }
+
+    pub fn read_u32(&self, addr: u64) -> u32 {
+        let mut b = [0u8; 4];
+        self.read_bytes(addr, &mut b);
+        u32::from_le_bytes(b)
+    }
+
+    pub fn write_u32(&self, addr: u64, v: u32) {
+        self.write_bytes(addr, &v.to_le_bytes());
+    }
+
+    pub fn read_u8(&self, addr: u64) -> u8 {
+        let (seg, off) = self.locate(addr, 1);
+        let w = seg[(off / 8) as usize].load(Ordering::Relaxed);
+        (w >> ((off % 8) * 8)) as u8
+    }
+
+    pub fn write_u8(&self, addr: u64, v: u8) {
+        self.write_bytes(addr, &[v]);
+    }
+
+    pub fn read_f64(&self, addr: u64) -> f64 {
+        f64::from_bits(self.read_u64(addr))
+    }
+
+    pub fn write_f64(&self, addr: u64, v: f64) {
+        self.write_u64(addr, v.to_bits());
+    }
+
+    pub fn read_f32(&self, addr: u64) -> f32 {
+        f32::from_bits(self.read_u32(addr))
+    }
+
+    pub fn write_f32(&self, addr: u64, v: f32) {
+        self.write_u32(addr, v.to_bits());
+    }
+
+    pub fn read_i64(&self, addr: u64) -> i64 {
+        self.read_u64(addr) as i64
+    }
+
+    pub fn write_i64(&self, addr: u64, v: i64) {
+        self.write_u64(addr, v as u64);
+    }
+
+    // ---- bulk ----
+
+    pub fn read_bytes(&self, addr: u64, out: &mut [u8]) {
+        let (seg, off) = self.locate(addr, out.len() as u64);
+        for (i, byte) in out.iter_mut().enumerate() {
+            let o = off + i as u64;
+            let w = seg[(o / 8) as usize].load(Ordering::Relaxed);
+            *byte = (w >> ((o % 8) * 8)) as u8;
+        }
+    }
+
+    pub fn write_bytes(&self, addr: u64, data: &[u8]) {
+        if data.is_empty() {
+            return;
+        }
+        let (seg, off) = self.locate(addr, data.len() as u64);
+        let mut i = 0usize;
+        while i < data.len() {
+            let o = off + i as u64;
+            let word_idx = (o / 8) as usize;
+            let shift = (o % 8) * 8;
+            let in_word = (8 - (o % 8) as usize).min(data.len() - i);
+            if in_word == 8 {
+                let v = u64::from_le_bytes(data[i..i + 8].try_into().unwrap());
+                seg[word_idx].store(v, Ordering::Relaxed);
+            } else {
+                // Sub-word write: CAS loop so concurrent neighbours survive.
+                let mut mask = 0u64;
+                let mut val = 0u64;
+                for k in 0..in_word {
+                    mask |= 0xffu64 << (shift + (k as u64) * 8);
+                    val |= (data[i + k] as u64) << (shift + (k as u64) * 8);
+                }
+                let cell = &seg[word_idx];
+                let mut cur = cell.load(Ordering::Relaxed);
+                loop {
+                    let new = (cur & !mask) | val;
+                    match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                        Ok(_) => break,
+                        Err(c) => cur = c,
+                    }
+                }
+            }
+            i += in_word;
+        }
+    }
+
+    pub fn read_vec(&self, addr: u64, len: usize) -> Vec<u8> {
+        let mut v = vec![0u8; len];
+        self.read_bytes(addr, &mut v);
+        v
+    }
+
+    /// Read a NUL-terminated string (bounded).
+    pub fn read_cstr(&self, addr: u64, max: usize) -> String {
+        let mut out = Vec::new();
+        for i in 0..max as u64 {
+            let b = self.read_u8(addr + i);
+            if b == 0 {
+                break;
+            }
+            out.push(b);
+        }
+        String::from_utf8_lossy(&out).into_owned()
+    }
+
+    pub fn write_cstr(&self, addr: u64, s: &str) {
+        self.write_bytes(addr, s.as_bytes());
+        self.write_u8(addr + s.len() as u64, 0);
+    }
+
+    // ---- atomics (device-wide, SeqCst to model GPU global atomics) ----
+
+    pub fn atomic_add_u64(&self, addr: u64, v: u64) -> u64 {
+        assert_eq!(addr % 8, 0, "atomic on unaligned address {addr:#x}");
+        let (seg, off) = self.locate(addr, 8);
+        seg[(off / 8) as usize].fetch_add(v, Ordering::SeqCst)
+    }
+
+    pub fn atomic_cas_u64(&self, addr: u64, expect: u64, new: u64) -> Result<u64, u64> {
+        assert_eq!(addr % 8, 0, "atomic on unaligned address {addr:#x}");
+        let (seg, off) = self.locate(addr, 8);
+        seg[(off / 8) as usize].compare_exchange(expect, new, Ordering::SeqCst, Ordering::SeqCst)
+    }
+
+    pub fn atomic_load_u64(&self, addr: u64) -> u64 {
+        assert_eq!(addr % 8, 0);
+        let (seg, off) = self.locate(addr, 8);
+        seg[(off / 8) as usize].load(Ordering::SeqCst)
+    }
+
+    pub fn atomic_store_u64(&self, addr: u64, v: u64) {
+        assert_eq!(addr % 8, 0);
+        let (seg, off) = self.locate(addr, 8);
+        seg[(off / 8) as usize].store(v, Ordering::SeqCst)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mem() -> DeviceMemory {
+        DeviceMemory::new(MemConfig::small())
+    }
+
+    #[test]
+    fn segments_classified() {
+        let m = mem();
+        assert_eq!(m.segment(0x10), Segment::NullPage);
+        assert_eq!(m.segment(GLOBAL_BASE), Segment::Global);
+        assert_eq!(m.segment(MANAGED_BASE + 8), Segment::Managed);
+        assert_eq!(m.segment(STACK_BASE), Segment::Stack);
+        assert_eq!(m.segment(0xFFFF_FFFF_0000), Segment::Host);
+    }
+
+    #[test]
+    fn rw_round_trip_all_widths() {
+        let m = mem();
+        let a = GLOBAL_BASE + 64;
+        m.write_u64(a, 0x1122334455667788);
+        assert_eq!(m.read_u64(a), 0x1122334455667788);
+        m.write_u32(a + 16, 0xDEADBEEF);
+        assert_eq!(m.read_u32(a + 16), 0xDEADBEEF);
+        m.write_u8(a + 25, 0xAB);
+        assert_eq!(m.read_u8(a + 25), 0xAB);
+        m.write_f64(a + 32, -1.5);
+        assert_eq!(m.read_f64(a + 32), -1.5);
+        m.write_f32(a + 40, 2.25);
+        assert_eq!(m.read_f32(a + 40), 2.25);
+        m.write_i64(a + 48, -42);
+        assert_eq!(m.read_i64(a + 48), -42);
+    }
+
+    #[test]
+    fn unaligned_access_round_trips() {
+        let m = mem();
+        let a = GLOBAL_BASE + 3; // crosses a word boundary
+        m.write_u64(a, 0xA1B2C3D4E5F60718);
+        assert_eq!(m.read_u64(a), 0xA1B2C3D4E5F60718);
+        // Neighbours untouched beyond the 8 bytes written.
+        assert_eq!(m.read_u8(GLOBAL_BASE + 2), 0);
+        assert_eq!(m.read_u8(a + 8), 0);
+    }
+
+    #[test]
+    fn bulk_and_cstr() {
+        let m = mem();
+        let a = MANAGED_BASE + 100; // unaligned on purpose
+        let data: Vec<u8> = (0..33).collect();
+        m.write_bytes(a, &data);
+        assert_eq!(m.read_vec(a, 33), data);
+        m.write_cstr(a + 64, "hello, GPU");
+        assert_eq!(m.read_cstr(a + 64, 64), "hello, GPU");
+    }
+
+    #[test]
+    fn atomics() {
+        let m = mem();
+        let a = GLOBAL_BASE + 1024;
+        assert_eq!(m.atomic_add_u64(a, 5), 0);
+        assert_eq!(m.atomic_add_u64(a, 3), 5);
+        assert_eq!(m.atomic_load_u64(a), 8);
+        assert!(m.atomic_cas_u64(a, 8, 100).is_ok());
+        assert_eq!(m.atomic_cas_u64(a, 8, 1), Err(100));
+    }
+
+    #[test]
+    #[should_panic(expected = "device fault")]
+    fn null_deref_faults() {
+        mem().read_u64(0x8);
+    }
+
+    #[test]
+    fn concurrent_subword_writes_do_not_clobber() {
+        use std::sync::Arc;
+        let m = Arc::new(mem());
+        let a = GLOBAL_BASE + 2048;
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let m = Arc::clone(&m);
+            handles.push(std::thread::spawn(move || {
+                for _ in 0..1000 {
+                    m.write_u8(a + t, t as u8 + 1);
+                }
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        for t in 0..8u64 {
+            assert_eq!(m.read_u8(a + t), t as u8 + 1);
+        }
+    }
+}

@@ -1,0 +1,15 @@
+//! The simulated GPU substrate.
+//!
+//! The paper runs on an NVIDIA A100; this reproduction substitutes a SIMT
+//! device simulator (see DESIGN.md §2): segmented device memory
+//! ([`memory`]), a teams×threads grid execution engine ([`grid`]) and
+//! executed-operation counters ([`stats`]) consumed by the
+//! [`crate::perfmodel`] roofline to produce modeled device time.
+
+pub mod memory;
+pub mod stats;
+pub mod grid;
+
+pub use grid::{AllocatorKind, Device, GridCtx, LaunchConfig};
+pub use memory::{DeviceMemory, MemConfig, Segment, GLOBAL_BASE, MANAGED_BASE, STACK_BASE};
+pub use stats::{Counters, LaunchStats, Pattern};

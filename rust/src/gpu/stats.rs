@@ -1,0 +1,297 @@
+//! Executed-operation counters.
+//!
+//! The simulator does not cycle-accurately model an A100; instead every
+//! simulated thread records *what it did* (flops, bytes moved by coalescing
+//! class, barriers, atomics, allocator traffic, RPC waits) and the
+//! [`crate::perfmodel`] roofline converts the aggregate into modeled device
+//! time. Counters are plain `u64`s accumulated thread-locally and merged
+//! into a [`SharedCounters`] at the end of each simulated thread, so the hot
+//! path is increment-only.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Memory-access pattern, per warp, as the multi-team transform classifies
+/// it (index linear in tid → coalesced; constant stride → strided; data
+/// dependent → random).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Pattern {
+    Coalesced,
+    Strided,
+    Random,
+}
+
+/// Per-thread counters (not shared; merged on completion).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Counters {
+    pub flops_f64: u64,
+    pub flops_f32: u64,
+    pub int_ops: u64,
+    pub bytes_coalesced: u64,
+    pub bytes_strided: u64,
+    pub bytes_random: u64,
+    pub barriers_team: u64,
+    pub barriers_global: u64,
+    pub atomics_global: u64,
+    pub allocs: u64,
+    pub frees: u64,
+    /// Modeled nanoseconds charged directly (allocator serialization, RPC
+    /// wait, vendor-malloc fixed costs).
+    pub charged_ns: f64,
+    pub rpc_calls: u64,
+    pub divergent_branches: u64,
+}
+
+impl Counters {
+    #[inline]
+    pub fn flops(&mut self, n: u64) {
+        self.flops_f64 += n;
+    }
+
+    #[inline]
+    pub fn flops32(&mut self, n: u64) {
+        self.flops_f32 += n;
+    }
+
+    #[inline]
+    pub fn mem(&mut self, bytes: u64, p: Pattern) {
+        match p {
+            Pattern::Coalesced => self.bytes_coalesced += bytes,
+            Pattern::Strided => self.bytes_strided += bytes,
+            Pattern::Random => self.bytes_random += bytes,
+        }
+    }
+
+    #[inline]
+    pub fn charge_ns(&mut self, ns: f64) {
+        self.charged_ns += ns;
+    }
+
+    pub fn merge_from(&mut self, o: &Counters) {
+        self.flops_f64 += o.flops_f64;
+        self.flops_f32 += o.flops_f32;
+        self.int_ops += o.int_ops;
+        self.bytes_coalesced += o.bytes_coalesced;
+        self.bytes_strided += o.bytes_strided;
+        self.bytes_random += o.bytes_random;
+        self.barriers_team += o.barriers_team;
+        self.barriers_global += o.barriers_global;
+        self.atomics_global += o.atomics_global;
+        self.allocs += o.allocs;
+        self.frees += o.frees;
+        self.charged_ns += o.charged_ns;
+        self.rpc_calls += o.rpc_calls;
+        self.divergent_branches += o.divergent_branches;
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_coalesced + self.bytes_strided + self.bytes_random
+    }
+}
+
+/// Atomic accumulator shared across the worker pool.
+#[derive(Debug, Default)]
+pub struct SharedCounters {
+    pub flops_f64: AtomicU64,
+    pub flops_f32: AtomicU64,
+    pub int_ops: AtomicU64,
+    pub bytes_coalesced: AtomicU64,
+    pub bytes_strided: AtomicU64,
+    pub bytes_random: AtomicU64,
+    pub barriers_team: AtomicU64,
+    pub barriers_global: AtomicU64,
+    pub atomics_global: AtomicU64,
+    pub allocs: AtomicU64,
+    pub frees: AtomicU64,
+    /// Max over threads of charged ns (critical-path approximation), stored
+    /// as f64 bits.
+    pub charged_ns_max: AtomicU64,
+    /// Sum over threads of charged ns (serialization approximation).
+    pub charged_ns_sum: AtomicU64,
+    pub rpc_calls: AtomicU64,
+    pub divergent_branches: AtomicU64,
+}
+
+impl SharedCounters {
+    pub fn absorb(&self, c: &Counters) {
+        let r = Ordering::Relaxed;
+        self.flops_f64.fetch_add(c.flops_f64, r);
+        self.flops_f32.fetch_add(c.flops_f32, r);
+        self.int_ops.fetch_add(c.int_ops, r);
+        self.bytes_coalesced.fetch_add(c.bytes_coalesced, r);
+        self.bytes_strided.fetch_add(c.bytes_strided, r);
+        self.bytes_random.fetch_add(c.bytes_random, r);
+        self.barriers_team.fetch_add(c.barriers_team, r);
+        self.barriers_global.fetch_add(c.barriers_global, r);
+        self.atomics_global.fetch_add(c.atomics_global, r);
+        self.allocs.fetch_add(c.allocs, r);
+        self.frees.fetch_add(c.frees, r);
+        self.rpc_calls.fetch_add(c.rpc_calls, r);
+        self.divergent_branches.fetch_add(c.divergent_branches, r);
+        // f64 max via CAS on bits.
+        let mut cur = self.charged_ns_max.load(r);
+        loop {
+            if c.charged_ns <= f64::from_bits(cur) {
+                break;
+            }
+            match self.charged_ns_max.compare_exchange_weak(
+                cur,
+                c.charged_ns.to_bits(),
+                r,
+                r,
+            ) {
+                Ok(_) => break,
+                Err(x) => cur = x,
+            }
+        }
+        // f64 sum via CAS on bits.
+        let mut cur = self.charged_ns_sum.load(r);
+        loop {
+            let new = f64::from_bits(cur) + c.charged_ns;
+            match self
+                .charged_ns_sum
+                .compare_exchange_weak(cur, new.to_bits(), r, r)
+            {
+                Ok(_) => break,
+                Err(x) => cur = x,
+            }
+        }
+    }
+
+    pub fn snapshot(&self) -> LaunchStats {
+        let r = Ordering::Relaxed;
+        LaunchStats {
+            flops_f64: self.flops_f64.load(r),
+            flops_f32: self.flops_f32.load(r),
+            int_ops: self.int_ops.load(r),
+            bytes_coalesced: self.bytes_coalesced.load(r),
+            bytes_strided: self.bytes_strided.load(r),
+            bytes_random: self.bytes_random.load(r),
+            barriers_team: self.barriers_team.load(r),
+            barriers_global: self.barriers_global.load(r),
+            atomics_global: self.atomics_global.load(r),
+            allocs: self.allocs.load(r),
+            frees: self.frees.load(r),
+            charged_ns_max: f64::from_bits(self.charged_ns_max.load(r)),
+            charged_ns_sum: f64::from_bits(self.charged_ns_sum.load(r)),
+            rpc_calls: self.rpc_calls.load(r),
+            divergent_branches: self.divergent_branches.load(r),
+        }
+    }
+}
+
+/// Immutable aggregate of one launch, input to the cost model.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct LaunchStats {
+    pub flops_f64: u64,
+    pub flops_f32: u64,
+    pub int_ops: u64,
+    pub bytes_coalesced: u64,
+    pub bytes_strided: u64,
+    pub bytes_random: u64,
+    pub barriers_team: u64,
+    pub barriers_global: u64,
+    pub atomics_global: u64,
+    pub allocs: u64,
+    pub frees: u64,
+    pub charged_ns_max: f64,
+    pub charged_ns_sum: f64,
+    pub rpc_calls: u64,
+    pub divergent_branches: u64,
+}
+
+impl LaunchStats {
+    /// Add memory traffic under a coalescing class.
+    pub fn mem_add(&mut self, bytes: u64, p: Pattern) {
+        match p {
+            Pattern::Coalesced => self.bytes_coalesced += bytes,
+            Pattern::Strided => self.bytes_strided += bytes,
+            Pattern::Random => self.bytes_random += bytes,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.bytes_coalesced + self.bytes_strided + self.bytes_random
+    }
+
+    pub fn add(&self, o: &LaunchStats) -> LaunchStats {
+        LaunchStats {
+            flops_f64: self.flops_f64 + o.flops_f64,
+            flops_f32: self.flops_f32 + o.flops_f32,
+            int_ops: self.int_ops + o.int_ops,
+            bytes_coalesced: self.bytes_coalesced + o.bytes_coalesced,
+            bytes_strided: self.bytes_strided + o.bytes_strided,
+            bytes_random: self.bytes_random + o.bytes_random,
+            barriers_team: self.barriers_team + o.barriers_team,
+            barriers_global: self.barriers_global + o.barriers_global,
+            atomics_global: self.atomics_global + o.atomics_global,
+            allocs: self.allocs + o.allocs,
+            frees: self.frees + o.frees,
+            charged_ns_max: self.charged_ns_max.max(o.charged_ns_max),
+            charged_ns_sum: self.charged_ns_sum + o.charged_ns_sum,
+            rpc_calls: self.rpc_calls + o.rpc_calls,
+            divergent_branches: self.divergent_branches + o.divergent_branches,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_merge() {
+        let mut a = Counters::default();
+        a.flops(10);
+        a.mem(64, Pattern::Coalesced);
+        a.mem(32, Pattern::Random);
+        let mut b = Counters::default();
+        b.flops(5);
+        b.mem(8, Pattern::Strided);
+        b.charge_ns(100.0);
+        a.merge_from(&b);
+        assert_eq!(a.flops_f64, 15);
+        assert_eq!(a.total_bytes(), 104);
+        assert_eq!(a.charged_ns, 100.0);
+    }
+
+    #[test]
+    fn shared_absorb_and_snapshot() {
+        let s = SharedCounters::default();
+        let mut c1 = Counters::default();
+        c1.charge_ns(50.0);
+        c1.flops(7);
+        let mut c2 = Counters::default();
+        c2.charge_ns(80.0);
+        s.absorb(&c1);
+        s.absorb(&c2);
+        let snap = s.snapshot();
+        assert_eq!(snap.flops_f64, 7);
+        assert_eq!(snap.charged_ns_max, 80.0);
+        assert!((snap.charged_ns_sum - 130.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn shared_concurrent_absorb() {
+        use std::sync::Arc;
+        let s = Arc::new(SharedCounters::default());
+        let handles: Vec<_> = (0..8)
+            .map(|_| {
+                let s = Arc::clone(&s);
+                std::thread::spawn(move || {
+                    for _ in 0..1000 {
+                        let mut c = Counters::default();
+                        c.flops(1);
+                        c.charge_ns(1.0);
+                        s.absorb(&c);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = s.snapshot();
+        assert_eq!(snap.flops_f64, 8000);
+        assert!((snap.charged_ns_sum - 8000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,911 @@
+//! IR interpreter: executes a compiled module on the simulated GPU.
+//!
+//! The execution model mirrors paper Fig. 4:
+//!
+//! * `main` runs as the **main kernel** — one team, one thread
+//!   (`launch_coop(1,1)`), because "for the sequential part of the
+//!   original application we still utilize a single team";
+//! * an (un-expanded) `parallel` region executes single-team, with the
+//!   threads of that one team — the natural OpenMP offload mapping;
+//! * a [`Instr::KernelLaunch`] (produced by the multi-team pass) issues a
+//!   host RPC; the host-side launcher runs the outlined region function
+//!   over a multi-team grid with continuous global thread ids;
+//! * [`Instr::RpcCall`]s marshal arguments per their compile-time
+//!   descriptors, resolving `MultiRef` candidates by pointer comparison
+//!   and `DynRef` via the allocator's `_FindObj` lookup, then block on the
+//!   mailbox.
+
+use super::*;
+use crate::gpu::grid::{Device, GridCtx, LaunchConfig};
+use crate::gpu::stats::{LaunchStats, Pattern};
+use crate::libc_gpu::rand::DeviceRand;
+use crate::libc_gpu::{stdlib as dstdlib, string as dstring};
+use crate::rpc::{RpcArgInfo, RpcClient, WrapperRegistry};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+pub const PER_THREAD_STACK: u64 = 8 << 10;
+
+/// A loaded program: module + device + host-side registry, with globals
+/// materialized in device memory. Shared by every simulated thread.
+pub struct ProgramEnv {
+    pub module: Module,
+    pub device: Arc<Device>,
+    pub registry: Arc<WrapperRegistry>,
+    pub host: Arc<crate::rpc::HostEnv>,
+    /// name -> (base address, size) of materialized globals.
+    pub globals: HashMap<String, (u64, u64)>,
+    /// Kernel-region name -> launch id used in the launch RPC.
+    pub region_ids: HashMap<String, u64>,
+    region_names: Vec<String>,
+    /// Captures for the in-flight kernel launch (single RPC slot ⇒ one).
+    pending: Mutex<Option<PendingLaunch>>,
+    stack_bump: AtomicU64,
+    stack_slots: u64,
+    /// Default grid for expanded regions without a num_threads clause.
+    pub default_teams: usize,
+    pub default_team_size: usize,
+    /// Aggregated stats of all launched parallel kernels.
+    pub kernel_stats: Mutex<LaunchStats>,
+    /// Launch count of parallel kernels.
+    pub kernel_launches: AtomicU64,
+}
+
+struct PendingLaunch {
+    region: String,
+    values: Vec<Value>,
+    cfg: LaunchConfig,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Value {
+    I(i64),
+    F(f64),
+}
+
+impl Value {
+    pub fn as_i(&self) -> i64 {
+        match self {
+            Value::I(i) => *i,
+            Value::F(f) => *f as i64,
+        }
+    }
+
+    pub fn as_f(&self) -> f64 {
+        match self {
+            Value::I(i) => *i as f64,
+            Value::F(f) => *f,
+        }
+    }
+
+    pub fn as_addr(&self) -> u64 {
+        self.as_i() as u64
+    }
+
+    pub fn truthy(&self) -> bool {
+        match self {
+            Value::I(i) => *i != 0,
+            Value::F(f) => *f != 0.0,
+        }
+    }
+}
+
+enum Flow {
+    Normal,
+    Returned(Option<Value>),
+}
+
+impl ProgramEnv {
+    /// Materialize the module on `device`: allocate + initialize globals,
+    /// assign region launch ids, and install the kernel-split launcher
+    /// into the host environment.
+    pub fn load(
+        module: Module,
+        device: Arc<Device>,
+        registry: Arc<WrapperRegistry>,
+        host: Arc<crate::rpc::HostEnv>,
+    ) -> Arc<Self> {
+        Self::load_with_grid(module, device, registry, host, 64, 128)
+    }
+
+    /// `load` with an explicit default grid for expanded regions.
+    pub fn load_with_grid(
+        module: Module,
+        device: Arc<Device>,
+        registry: Arc<WrapperRegistry>,
+        host: Arc<crate::rpc::HostEnv>,
+        default_teams: usize,
+        default_team_size: usize,
+    ) -> Arc<Self> {
+        let mut globals = HashMap::new();
+        for g in module.globals.values() {
+            let base = device
+                .heap
+                .malloc(crate::alloc::AllocCtx::default(), g.size.max(1))
+                .expect("global allocation");
+            if !g.init.is_empty() {
+                device.mem.write_bytes(base, &g.init);
+            }
+            globals.insert(g.name.clone(), (base, g.size));
+        }
+        let mut region_ids = HashMap::new();
+        let mut region_names = Vec::new();
+        for (name, f) in &module.functions {
+            if f.is_kernel_region {
+                region_ids.insert(name.clone(), region_names.len() as u64);
+                region_names.push(name.clone());
+            }
+        }
+        let stack_slots = device.mem.config().stack_size / PER_THREAD_STACK;
+        let env = Arc::new(Self {
+            module,
+            device,
+            registry,
+            host,
+            globals,
+            region_ids,
+            region_names,
+            pending: Mutex::new(None),
+            stack_bump: AtomicU64::new(0),
+            stack_slots,
+            default_teams,
+            default_team_size,
+            kernel_stats: Mutex::new(LaunchStats::default()),
+            kernel_launches: AtomicU64::new(0),
+        });
+        // Install the host-side kernel launcher (Fig. 4 ①→②).
+        let weak = Arc::downgrade(&env);
+        *env.host.region_launcher.lock().unwrap() = Some(Box::new(move |_region_id, _arg| {
+            let Some(env) = weak.upgrade() else { return -1 };
+            let Some(pending) = env.pending.lock().unwrap().take() else { return -2 };
+            let stats = env.run_region(&pending.region, &pending.values, pending.cfg);
+            let mut agg = env.kernel_stats.lock().unwrap();
+            *agg = agg.add(&stats);
+            env.kernel_launches.fetch_add(1, Ordering::Relaxed);
+            0
+        }));
+        env
+    }
+
+    /// Kernel-region names in launch-id order.
+    pub fn region_names(&self) -> &[String] {
+        &self.region_names
+    }
+
+    fn global_addr(&self, name: &str) -> u64 {
+        self.globals.get(name).unwrap_or_else(|| panic!("unknown global @{name}")).0
+    }
+
+    /// `_FindObj` fallback for globals (the allocator tracks heap objects;
+    /// globals are statically known to the compiler-generated tables).
+    pub fn find_object(&self, addr: u64) -> Option<(u64, u64)> {
+        if let Some(rec) = self.device.heap.lookup(addr) {
+            return Some((rec.base, rec.size));
+        }
+        self.globals
+            .values()
+            .find(|(b, s)| addr >= *b && addr < b + s.max(&1))
+            .copied()
+    }
+
+    fn stack_base(&self) -> u64 {
+        let slot = self.stack_bump.fetch_add(1, Ordering::Relaxed) % self.stack_slots;
+        crate::gpu::memory::STACK_BASE + slot * PER_THREAD_STACK
+    }
+
+    /// Execute `main` as the main kernel (1 team × 1 thread). Returns
+    /// (exit value, main-kernel stats).
+    pub fn run_main(self: &Arc<Self>, args: &[Value]) -> (i64, LaunchStats) {
+        let result = Mutex::new(0i64);
+        let stats = self.device.launch_coop(LaunchConfig::new(1, 1), |g| {
+            let mut interp = Interp::new(self, g);
+            let ret = interp.call_function("main", args.to_vec());
+            *result.lock().unwrap() = ret.map(|v| v.as_i()).unwrap_or(0);
+        });
+        let r = *result.lock().unwrap();
+        (r, stats)
+    }
+
+    /// Host-side execution of an expanded region over a grid.
+    fn run_region(self: &Arc<Self>, region: &str, values: &[Value], cfg: LaunchConfig) -> LaunchStats {
+        let f = &self.module.functions[region];
+        let has_barrier = body_has_barrier(&f.body);
+        let body = |g: &mut GridCtx| {
+            let mut interp = Interp::new(self, g);
+            let bindings: Vec<(String, Value)> = f
+                .params
+                .iter()
+                .zip(values.iter())
+                .map(|(p, v)| (p.name.clone(), *v))
+                .collect();
+            interp.exec_function_body(&f.body, bindings);
+        };
+        if has_barrier {
+            let total = cfg.total_threads().min(1024);
+            let cfg = LaunchConfig::new((total / cfg.threads_per_team).max(1), cfg.threads_per_team.min(total));
+            self.device.launch_coop(cfg, body)
+        } else {
+            self.device.launch(cfg, body)
+        }
+    }
+}
+
+pub(crate) fn body_has_barrier(body: &[Instr]) -> bool {
+    let mut found = false;
+    crate::analysis::callgraph::walk(body, &mut |i| {
+        if matches!(i, Instr::Barrier) {
+            found = true;
+        }
+    });
+    found
+}
+
+/// One simulated thread executing IR.
+pub struct Interp<'e, 'g, 'd> {
+    env: &'e Arc<ProgramEnv>,
+    g: &'g mut GridCtx<'d>,
+    frames: Vec<HashMap<String, Value>>,
+    sp: u64,
+    stack_end: u64,
+    rand: DeviceRand,
+    depth: usize,
+}
+
+impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
+    pub fn new(env: &'e Arc<ProgramEnv>, g: &'g mut GridCtx<'d>) -> Self {
+        let base = env.stack_base();
+        let tid = g.global_tid() as u64;
+        Self {
+            env,
+            g,
+            frames: vec![HashMap::new()],
+            sp: base,
+            stack_end: base + PER_THREAD_STACK,
+            rand: DeviceRand::for_thread(0xD00D, tid),
+            depth: 0,
+        }
+    }
+
+    fn frame(&mut self) -> &mut HashMap<String, Value> {
+        self.frames.last_mut().unwrap()
+    }
+
+    fn set(&mut self, name: &str, v: Value) {
+        self.frame().insert(name.to_string(), v);
+    }
+
+    fn get(&self, name: &str) -> Value {
+        for f in self.frames.iter().rev() {
+            if let Some(v) = f.get(name) {
+                return *v;
+            }
+        }
+        panic!("undefined variable %{name}")
+    }
+
+    fn eval(&mut self, op: &Operand) -> Value {
+        match op {
+            Operand::Var(v) => self.get(v),
+            Operand::ConstI(i) => Value::I(*i),
+            Operand::ConstF(f) => Value::F(*f),
+            Operand::Global(g) => Value::I(self.env.global_addr(g) as i64),
+        }
+    }
+
+    pub fn call_function(&mut self, name: &str, args: Vec<Value>) -> Option<Value> {
+        let f = self
+            .env
+            .module
+            .functions
+            .get(name)
+            .unwrap_or_else(|| panic!("call to undefined function {name} (missing rpcgen?)"))
+            .clone();
+        assert_eq!(f.params.len(), args.len(), "arity mismatch calling {name}");
+        let bindings: Vec<(String, Value)> =
+            f.params.iter().zip(args).map(|(p, v)| (p.name.clone(), v)).collect();
+        self.exec_function_body(&f.body, bindings)
+    }
+
+    fn exec_function_body(&mut self, body: &[Instr], bindings: Vec<(String, Value)>) -> Option<Value> {
+        self.depth += 1;
+        assert!(self.depth < 128, "interpreter call depth exceeded");
+        let saved_sp = self.sp;
+        let mut frame = HashMap::new();
+        for (k, v) in bindings {
+            frame.insert(k, v);
+        }
+        self.frames.push(frame);
+        let flow = self.exec_body(body);
+        self.frames.pop();
+        self.sp = saved_sp;
+        self.depth -= 1;
+        match flow {
+            Flow::Returned(v) => v,
+            Flow::Normal => None,
+        }
+    }
+
+    fn exec_body(&mut self, body: &[Instr]) -> Flow {
+        for ins in body {
+            match self.exec_instr(ins) {
+                Flow::Normal => {}
+                ret => return ret,
+            }
+        }
+        Flow::Normal
+    }
+
+    fn exec_instr(&mut self, ins: &Instr) -> Flow {
+        self.g.counters.int_ops += 1;
+        match ins {
+            Instr::Assign { dst, expr } => {
+                let v = self.eval_expr(expr);
+                self.set(dst, v);
+            }
+            Instr::Alloca { dst, size } => {
+                let addr = crate::alloc::align_up(self.sp, 16);
+                assert!(addr + size <= self.stack_end, "device stack overflow");
+                self.sp = addr + size;
+                self.set(dst, Value::I(addr as i64));
+            }
+            Instr::Store { addr, val, width } => {
+                let a = self.eval(addr).as_addr();
+                let v = self.eval(val);
+                self.g.mem(*width as u64, Pattern::Strided);
+                match (v, width) {
+                    (Value::F(f), 8) => self.env.device.mem.write_f64(a, f),
+                    (Value::F(f), 4) => self.env.device.mem.write_f32(a, f as f32),
+                    (v, 8) => self.env.device.mem.write_i64(a, v.as_i()),
+                    (v, 4) => self.env.device.mem.write_u32(a, v.as_i() as u32),
+                    (v, 1) => self.env.device.mem.write_u8(a, v.as_i() as u8),
+                    (_, w) => panic!("bad store width {w}"),
+                }
+            }
+            Instr::Load { dst, addr, width, ty } => {
+                let a = self.eval(addr).as_addr();
+                self.g.mem(*width as u64, Pattern::Strided);
+                let v = match (ty, width) {
+                    (Ty::F64, 8) => Value::F(self.env.device.mem.read_f64(a)),
+                    (Ty::F64, 4) => Value::F(self.env.device.mem.read_f32(a) as f64),
+                    (_, 8) => Value::I(self.env.device.mem.read_i64(a)),
+                    (_, 4) => Value::I(self.env.device.mem.read_u32(a) as i32 as i64),
+                    (_, 1) => Value::I(self.env.device.mem.read_u8(a) as i64),
+                    (_, w) => panic!("bad load width {w}"),
+                };
+                self.set(dst, v);
+            }
+            Instr::Call { dst, callee, args } => {
+                let vals: Vec<Value> = args.iter().map(|a| self.eval(a)).collect();
+                let ret = self.call_function(callee, vals);
+                if let Some(d) = dst {
+                    self.set(d, ret.unwrap_or(Value::I(0)));
+                }
+            }
+            Instr::Intrinsic { dst, name, args } => {
+                let vals: Vec<Value> = args.iter().map(|a| self.eval(a)).collect();
+                let ret = self.intrinsic(name, &vals);
+                if let Some(d) = dst {
+                    self.set(d, ret);
+                }
+            }
+            Instr::RpcCall { dst, callee_id, args, .. } => {
+                let ret = self.issue_rpc(*callee_id, args);
+                if let Some(d) = dst {
+                    self.set(d, Value::I(ret));
+                }
+            }
+            Instr::KernelLaunch { region, arg } => {
+                self.kernel_launch(region, arg.as_ref());
+            }
+            Instr::If { cond, then_body, else_body } => {
+                let c = self.eval(cond).truthy();
+                let flow =
+                    if c { self.exec_body(then_body) } else { self.exec_body(else_body) };
+                if let Flow::Returned(_) = flow {
+                    return flow;
+                }
+            }
+            Instr::While { cond_var, cond, body } => loop {
+                if let Flow::Returned(v) = self.exec_body(cond) {
+                    return Flow::Returned(v);
+                }
+                if !self.get(cond_var).truthy() {
+                    break;
+                }
+                if let Flow::Returned(v) = self.exec_body(body) {
+                    return Flow::Returned(v);
+                }
+            },
+            Instr::For { var, lo, hi, step, schedule, body } => {
+                let lo = self.eval(lo).as_i();
+                let hi = self.eval(hi).as_i();
+                let step = self.eval(step).as_i().max(1);
+                let (start, stride) = match schedule {
+                    Schedule::Seq => (lo, step),
+                    // omp for: cyclic over the encountering team's threads.
+                    Schedule::Team => {
+                        let t = self.g.thread_id as i64;
+                        let n = self.g.cfg.threads_per_team as i64;
+                        (lo + t * step, n * step)
+                    }
+                    // distribute parallel for: cyclic over the whole grid,
+                    // continuous thread ids across teams (paper Fig. 4).
+                    Schedule::Grid => {
+                        let t = self.g.global_tid() as i64;
+                        let n = self.g.num_threads_global() as i64;
+                        (lo + t * step, n * step)
+                    }
+                };
+                let mut i = start;
+                while i < hi {
+                    self.set(var, Value::I(i));
+                    if let Flow::Returned(v) = self.exec_body(body) {
+                        return Flow::Returned(v);
+                    }
+                    i += stride;
+                }
+            }
+            Instr::Parallel { num_threads, body } => {
+                // Un-expanded region: single-team execution (the Tian et
+                // al. baseline the paper improves on).
+                let n = num_threads
+                    .as_ref()
+                    .map(|o| self.eval(o).as_i() as usize)
+                    .unwrap_or(128)
+                    .clamp(1, 1024);
+                let snapshot: HashMap<String, Value> = self
+                    .frames
+                    .iter()
+                    .flat_map(|f| f.iter().map(|(k, v)| (k.clone(), *v)))
+                    .collect();
+                let env = self.env;
+                let has_barrier = body_has_barrier(body);
+                let cfg = LaunchConfig::new(1, n);
+                let runner = |g: &mut GridCtx| {
+                    let mut interp = Interp::new(env, g);
+                    let bindings: Vec<(String, Value)> =
+                        snapshot.iter().map(|(k, v)| (k.clone(), *v)).collect();
+                    interp.exec_function_body(body, bindings);
+                };
+                let stats = if has_barrier {
+                    env.device.launch_coop(cfg, runner)
+                } else {
+                    env.device.launch(cfg, runner)
+                };
+                let mut agg = env.kernel_stats.lock().unwrap();
+                *agg = agg.add(&stats);
+            }
+            Instr::Barrier => {
+                if self.g.num_threads_global() > 1 {
+                    self.g.barrier_global();
+                } else {
+                    self.g.counters.barriers_global += 1;
+                }
+            }
+            Instr::Return(v) => {
+                let val = v.as_ref().map(|o| self.eval(o));
+                return Flow::Returned(val);
+            }
+        }
+        Flow::Normal
+    }
+
+    fn eval_expr(&mut self, e: &Expr) -> Value {
+        match e {
+            Expr::Op(o) => self.eval(o),
+            Expr::Bin(op, a, b) => {
+                let x = self.eval(a);
+                let y = self.eval(b);
+                if op.is_float() {
+                    self.g.counters.flops_f64 += 1;
+                } else {
+                    self.g.counters.int_ops += 1;
+                }
+                eval_bin(*op, x, y)
+            }
+            Expr::Gep(base, off) => {
+                let b = self.eval(base).as_i();
+                let o = self.eval(off).as_i();
+                Value::I(b + o)
+            }
+            Expr::Select(c, a, b) => {
+                if self.eval(c).truthy() {
+                    self.eval(a)
+                } else {
+                    self.eval(b)
+                }
+            }
+            Expr::SiToFp(a) => Value::F(self.eval(a).as_i() as f64),
+            Expr::FpToSi(a) => Value::I(self.eval(a).as_f() as i64),
+            Expr::Tid => Value::I(self.g.global_tid() as i64),
+            Expr::NumThreads => Value::I(self.g.num_threads_global() as i64),
+            Expr::Sqrt(a) => {
+                self.g.counters.flops_f64 += 4;
+                Value::F(self.eval(a).as_f().sqrt())
+            }
+            Expr::Exp(a) => {
+                self.g.counters.flops_f64 += 8;
+                Value::F(self.eval(a).as_f().exp())
+            }
+            Expr::Log(a) => {
+                self.g.counters.flops_f64 += 8;
+                Value::F(self.eval(a).as_f().ln())
+            }
+        }
+    }
+
+    fn intrinsic(&mut self, name: &str, args: &[Value]) -> Value {
+        let mem = &self.env.device.mem;
+        match name {
+            "malloc" => {
+                let size = args[0].as_i().max(0) as u64;
+                let addr = self.g.malloc(size).unwrap_or_else(|e| panic!("malloc: {e}"));
+                Value::I(addr as i64)
+            }
+            "free" => {
+                let addr = args[0].as_addr();
+                if addr != 0 {
+                    self.g.free(addr).unwrap_or_else(|e| panic!("free: {e}"));
+                }
+                Value::I(0)
+            }
+            "realloc" => {
+                let old = args[0].as_addr();
+                let new_size = args[1].as_i().max(0) as u64;
+                let new = self.g.malloc(new_size).unwrap_or_else(|e| panic!("realloc: {e}"));
+                if old != 0 {
+                    if let Some(rec) = self.env.device.heap.lookup(old) {
+                        dstring::memcpy(mem, new, old, rec.size.min(new_size));
+                    }
+                    self.g.free(old).ok();
+                }
+                Value::I(new as i64)
+            }
+            "strlen" => Value::I(dstring::strlen(mem, args[0].as_addr()) as i64),
+            "strcpy" => Value::I(dstring::strcpy(mem, args[0].as_addr(), args[1].as_addr()) as i64),
+            "strcmp" => Value::I(dstring::strcmp(mem, args[0].as_addr(), args[1].as_addr()) as i64),
+            "strcat" => Value::I(dstring::strcat(mem, args[0].as_addr(), args[1].as_addr()) as i64),
+            "memcpy" => Value::I(dstring::memcpy(
+                mem,
+                args[0].as_addr(),
+                args[1].as_addr(),
+                args[2].as_i() as u64,
+            ) as i64),
+            "memset" => Value::I(dstring::memset(
+                mem,
+                args[0].as_addr(),
+                args[1].as_i() as u8,
+                args[2].as_i() as u64,
+            ) as i64),
+            "strtod" => Value::F(dstdlib::strtod(mem, args[0].as_addr()).0),
+            "atoi" => Value::I(dstdlib::atoi(mem, args[0].as_addr())),
+            "rand" => Value::I(self.rand.rand() as i64),
+            "srand" => {
+                self.rand = DeviceRand::for_thread(args[0].as_i() as u64, self.g.global_tid() as u64);
+                Value::I(0)
+            }
+            "sqrt" => Value::F(args[0].as_f().sqrt()),
+            "fabs" => Value::F(args[0].as_f().abs()),
+            other => panic!("unknown intrinsic {other}"),
+        }
+    }
+
+    fn issue_rpc(&mut self, callee_id: u64, specs: &[RpcArgSpec]) -> i64 {
+        let mut info = RpcArgInfo::with_capacity(specs.len());
+        for spec in specs {
+            match spec {
+                RpcArgSpec::Val(op) => {
+                    let v = self.eval(op);
+                    let bits = match v {
+                        Value::I(i) => i as u64,
+                        Value::F(f) => f.to_bits(),
+                    };
+                    info.add_val(bits);
+                }
+                RpcArgSpec::Ref { ptr, mode, obj_size, offset } => {
+                    let p = self.eval(ptr).as_addr();
+                    let off = match offset {
+                        OffsetSpec::Const(c) => *c,
+                        OffsetSpec::Dynamic => unreachable!("Ref with dynamic offset"),
+                    };
+                    info.add_ref(p, *mode, *obj_size, off);
+                }
+                RpcArgSpec::MultiRef { ptr, candidates } => {
+                    // Fig. 3c lines 34-39: identify the object at runtime
+                    // by comparing the pointer against candidate bases.
+                    let p = self.eval(ptr).as_addr();
+                    let mut matched = false;
+                    for (cand, mode, size, _off) in candidates {
+                        let base = self.eval(cand).as_addr();
+                        if p >= base && p < base + size.max(&1) {
+                            info.add_ref(p, *mode, *size, p - base);
+                            matched = true;
+                            break;
+                        }
+                    }
+                    if !matched {
+                        info.add_val(p);
+                    }
+                }
+                RpcArgSpec::DynRef { ptr, mode } => {
+                    // _FindObj against allocation tracking + global tables;
+                    // on failure the pointer degrades to a value (paper:
+                    // "we will treat the pointer as a value").
+                    let p = self.eval(ptr).as_addr();
+                    match self.env.find_object(p) {
+                        Some((base, size)) => {
+                            info.add_ref(p, *mode, size, p - base);
+                        }
+                        None => {
+                            info.add_val(p);
+                        }
+                    }
+                }
+            }
+        }
+        let mut client = RpcClient::new(&self.env.device.mem);
+        client.call(callee_id, &info, Some(&mut self.g.counters))
+    }
+
+    fn kernel_launch(&mut self, region: &str, num_threads: Option<&Operand>) {
+        let f = &self.env.module.functions[region];
+        let requested = num_threads.map(|o| self.eval(o).as_i() as usize);
+        let cfg = match requested {
+            Some(n) if n > 0 => {
+                let per_team = n.min(self.env.default_team_size);
+                LaunchConfig::new(n.div_ceil(per_team), per_team)
+            }
+            _ => LaunchConfig::new(self.env.default_teams, self.env.default_team_size),
+        };
+        let values: Vec<Value> = f
+            .params
+            .iter()
+            .map(|p| self.get(&p.name))
+            .collect();
+        *self.env.pending.lock().unwrap() = Some(PendingLaunch {
+            region: region.to_string(),
+            values,
+            cfg,
+        });
+        // Fig. 4 ①: RPC to the host to launch the parallel kernel.
+        let launch_id = self
+            .env
+            .registry
+            .id_of("__launch_kernel_i_i")
+            .expect("launch wrapper not registered (coordinator::register_common)");
+        let region_id = self.env.region_ids[region];
+        let mut info = RpcArgInfo::new();
+        info.add_val(region_id);
+        info.add_val(0);
+        let mut client = RpcClient::new(&self.env.device.mem);
+        let ret = client.call(launch_id, &info, Some(&mut self.g.counters));
+        assert_eq!(ret, 0, "kernel launch RPC failed for {region}");
+    }
+}
+
+fn eval_bin(op: BinOp, x: Value, y: Value) -> Value {
+    use BinOp::*;
+    match op {
+        Add => Value::I(x.as_i().wrapping_add(y.as_i())),
+        Sub => Value::I(x.as_i().wrapping_sub(y.as_i())),
+        Mul => Value::I(x.as_i().wrapping_mul(y.as_i())),
+        Div => Value::I(x.as_i().checked_div(y.as_i()).unwrap_or(0)),
+        Rem => Value::I(x.as_i().checked_rem(y.as_i()).unwrap_or(0)),
+        And => Value::I(x.as_i() & y.as_i()),
+        Or => Value::I(x.as_i() | y.as_i()),
+        Xor => Value::I(x.as_i() ^ y.as_i()),
+        Shl => Value::I(x.as_i().wrapping_shl(y.as_i() as u32)),
+        Shr => Value::I((x.as_i() as u64 >> (y.as_i() as u32 & 63)) as i64),
+        Eq => Value::I((x.as_i() == y.as_i()) as i64),
+        Ne => Value::I((x.as_i() != y.as_i()) as i64),
+        Lt => Value::I((x.as_i() < y.as_i()) as i64),
+        Le => Value::I((x.as_i() <= y.as_i()) as i64),
+        Gt => Value::I((x.as_i() > y.as_i()) as i64),
+        Ge => Value::I((x.as_i() >= y.as_i()) as i64),
+        FAdd => Value::F(x.as_f() + y.as_f()),
+        FSub => Value::F(x.as_f() - y.as_f()),
+        FMul => Value::F(x.as_f() * y.as_f()),
+        FDiv => Value::F(x.as_f() / y.as_f()),
+        FLt => Value::I((x.as_f() < y.as_f()) as i64),
+        FLe => Value::I((x.as_f() <= y.as_f()) as i64),
+        FGt => Value::I((x.as_f() > y.as_f()) as i64),
+        FGe => Value::I((x.as_f() >= y.as_f()) as i64),
+        FEq => Value::I((x.as_f() == y.as_f()) as i64),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::grid::AllocatorKind;
+    use crate::gpu::memory::MemConfig;
+    use crate::rpc::wrappers::register_common;
+    use crate::rpc::RpcServer;
+
+    fn setup(src: &str, opts: crate::transform::CompileOptions) -> (Arc<ProgramEnv>, RpcServer) {
+        let mut module = crate::ir::parser::parse_module(src).unwrap();
+        let registry = Arc::new(WrapperRegistry::new());
+        register_common(&registry);
+        crate::transform::compile(&mut module, &registry, opts).unwrap();
+        let device = Arc::new(Device::new(MemConfig::small(), AllocatorKind::Generic));
+        let host = Arc::new(crate::rpc::HostEnv::new());
+        let server = RpcServer::start(
+            Arc::clone(&device.mem),
+            Arc::clone(&registry),
+            Arc::clone(&host),
+        );
+        let env = ProgramEnv::load(module, device, registry, host);
+        (env, server)
+    }
+
+    #[test]
+    fn arithmetic_and_control_flow() {
+        let src = r#"
+func @fib(%n: i64) -> i64 {
+  %c = lt %n, 2
+  if %c {
+    return %n
+  }
+  %a = sub %n, 1
+  %b = sub %n, 2
+  %x = call fib(%a)
+  %y = call fib(%b)
+  %r = add %x, %y
+  return %r
+}
+
+func @main() -> i64 {
+  %r = call fib(10)
+  return %r
+}
+"#;
+        let (env, server) = setup(src, crate::transform::CompileOptions::default());
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 55);
+        server.stop();
+    }
+
+    #[test]
+    fn memory_and_intrinsics() {
+        let src = r#"
+func @main() -> i64 {
+  %p = call malloc(64)
+  store.8 12345, %p
+  %q = gep %p, 8
+  store.4 7, %q
+  %a = load.8 %p
+  %b = load.4 %q
+  %s = add %a, %b
+  call free(%p)
+  return %s
+}
+"#;
+        let (env, server) = setup(src, crate::transform::CompileOptions::default());
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 12352);
+        server.stop();
+    }
+
+    #[test]
+    fn rpc_printf_reaches_host_stdout() {
+        let src = r#"
+global @fmt const 16 "value: %d done"
+
+func @main() -> i64 {
+  call printf(@fmt, 42)
+  return 0
+}
+"#;
+        let (env, server) = setup(src, crate::transform::CompileOptions::default());
+        let (ret, stats) = env.run_main(&[]);
+        assert_eq!(ret, 0);
+        assert_eq!(env.host.stdout_string(), "value: 42 done");
+        assert_eq!(stats.rpc_calls, 1);
+        server.stop();
+    }
+
+    #[test]
+    fn multiteam_kernel_split_executes_whole_grid() {
+        // Sum 0..N over the grid using atomic-free per-slot writes, then a
+        // serial reduction in the main kernel.
+        let src = r#"
+global @acc 32768
+
+func @main() -> i64 {
+  %n = 4096
+  parallel num_threads(256) {
+    for.team %i = 0 to %n step 1 {
+      %off = mul %i, 8
+      %p = gep @acc, %off
+      store.8 %i, %p
+    }
+  }
+  %sum = alloca 8
+  store.8 0, %sum
+  for %i = 0 to %n step 1 {
+    %off = mul %i, 8
+    %p = gep @acc, %off
+    %v = load.8 %p
+    %s = load.8 %sum
+    %s2 = add %s, %v
+    store.8 %s2, %sum
+  }
+  %r = load.8 %sum
+  return %r
+}
+"#;
+        let (env, server) = setup(src, crate::transform::CompileOptions::default());
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 4096 * 4095 / 2);
+        // The region really was kernel-split and multi-team launched.
+        assert_eq!(env.kernel_launches.load(Ordering::Relaxed), 1);
+        let ks = env.kernel_stats.lock().unwrap();
+        assert!(ks.bytes_coalesced + ks.bytes_strided + ks.bytes_random > 0);
+        server.stop();
+    }
+
+    #[test]
+    fn single_team_mode_matches_multiteam_result() {
+        let src = r#"
+global @out 8192
+
+func @main() -> i64 {
+  parallel num_threads(64) {
+    %t = tid
+    %n = nthreads
+    for.team %i = 0 to 1024 step 1 {
+      %off = mul %i, 8
+      %p = gep @out, %off
+      %v = mul %i, 3
+      store.8 %v, %p
+    }
+  }
+  %p = gep @out, 8176
+  %r = load.8 %p
+  return %r
+}
+"#;
+        let opts_multi = crate::transform::CompileOptions::default();
+        let (env, server) = setup(src, opts_multi);
+        let (multi, _) = env.run_main(&[]);
+        server.stop();
+
+        let opts_single =
+            crate::transform::CompileOptions { rpcgen: true, multiteam: false };
+        let (env2, server2) = setup(src, opts_single);
+        let (single, _) = env2.run_main(&[]);
+        server2.stop();
+
+        assert_eq!(multi, 1022 * 3);
+        assert_eq!(single, multi, "expansion must preserve semantics");
+        assert_eq!(env2.kernel_launches.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn fscanf_round_trip_via_host_file() {
+        let src = r#"
+global @path const 10 "input.txt"
+global @mode const 2 "r"
+global @fmt const 6 "%d %d"
+
+func @main() -> i64 {
+  %fd = call fopen(@path, @mode)
+  %a = alloca 4
+  %b = alloca 4
+  %n = call fscanf(%fd, @fmt, %a, %b)
+  call fclose(%fd)
+  %x = load.4 %a
+  %y = load.4 %b
+  %s = add %x, %y
+  %r = mul %s, %n
+  return %r
+}
+"#;
+        let (env, server) = setup(src, crate::transform::CompileOptions::default());
+        env.host.put_file("input.txt", b"30 12");
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, (30 + 12) * 2);
+        server.stop();
+    }
+}

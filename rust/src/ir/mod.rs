@@ -1,0 +1,551 @@
+//! The compiler IR.
+//!
+//! A small, typed, structured IR standing in for LLVM-IR in the
+//! reproduction (DESIGN.md §2). It keeps exactly the features the paper's
+//! passes reason about: address-taken stack objects (`alloca`), globals
+//! with constness, pointer arithmetic (`gep`), `select` between pointers,
+//! `malloc`-like calls, calls to *undefined* (library) functions, OpenMP
+//! `parallel` regions with work-sharing loops and barriers, and thread-id
+//! queries.
+//!
+//! Control flow is structured (if/while/for) rather than a CFG — the
+//! paper's transforms (RPC generation §3.2, multi-team expansion §3.3)
+//! operate on call sites and region structure, not on basic blocks, so a
+//! structured IR keeps every pass and the interpreter small without losing
+//! the analyses the paper needs.
+//!
+//! Text round-trip: [`parser`] and [`printer`]; program execution on the
+//! simulated device: [`interp`].
+
+pub mod parser;
+pub mod printer;
+pub mod interp;
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Value types. Pointers are untyped addresses (as in LLVM with opaque
+/// pointers); object sizes live on the allocation site.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Ty {
+    I64,
+    F64,
+    Ptr,
+    Void,
+}
+
+impl fmt::Display for Ty {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Ty::I64 => write!(f, "i64"),
+            Ty::F64 => write!(f, "f64"),
+            Ty::Ptr => write!(f, "ptr"),
+            Ty::Void => write!(f, "void"),
+        }
+    }
+}
+
+/// An operand: a local variable, a constant, or a global's address.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Operand {
+    Var(String),
+    ConstI(i64),
+    ConstF(f64),
+    Global(String),
+}
+
+impl Operand {
+    pub fn var(s: &str) -> Self {
+        Operand::Var(s.to_string())
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BinOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Rem,
+    And,
+    Or,
+    Xor,
+    Shl,
+    Shr,
+    Eq,
+    Ne,
+    Lt,
+    Le,
+    Gt,
+    Ge,
+    FAdd,
+    FSub,
+    FMul,
+    FDiv,
+    FLt,
+    FLe,
+    FGt,
+    FGe,
+    FEq,
+}
+
+impl BinOp {
+    pub fn is_float(self) -> bool {
+        matches!(
+            self,
+            BinOp::FAdd
+                | BinOp::FSub
+                | BinOp::FMul
+                | BinOp::FDiv
+                | BinOp::FLt
+                | BinOp::FLe
+                | BinOp::FGt
+                | BinOp::FGe
+                | BinOp::FEq
+        )
+    }
+}
+
+/// Pure expressions assigned to locals.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Expr {
+    Op(Operand),
+    Bin(BinOp, Operand, Operand),
+    /// Pointer arithmetic: `base + offset` (bytes).
+    Gep(Operand, Operand),
+    /// `select cond, a, b` — the pointer-`select` of Fig. 3a line 5.
+    Select(Operand, Operand, Operand),
+    /// Int→float / float→int conversions.
+    SiToFp(Operand),
+    FpToSi(Operand),
+    /// OpenMP queries: thread id / team size, as the source observes them.
+    Tid,
+    NumThreads,
+    /// sqrt/exp/log for the numeric benchmarks.
+    Sqrt(Operand),
+    Exp(Operand),
+    Log(Operand),
+}
+
+/// Load/store access width in bytes (1, 4, or 8).
+pub type Width = u8;
+
+/// Work-sharing schedule of a `for` inside a parallel region.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Schedule {
+    /// Sequential loop (not work-shared).
+    Seq,
+    /// `omp for`: distributed over the threads of the encountering team —
+    /// the natural single-team offload mapping (paper §3.3).
+    Team,
+    /// After multi-team expansion: distributed over ALL threads of ALL
+    /// teams (`omp distribute parallel for` semantics).
+    Grid,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Instr {
+    /// `%dst = <expr>`
+    Assign { dst: String, expr: Expr },
+    /// `%dst = alloca <size>` — a stack object (statically identified).
+    Alloca { dst: String, size: u64 },
+    /// `store.<w> <val>, <addr>`
+    Store { addr: Operand, val: Operand, width: Width },
+    /// `%dst = load.<w> <addr>`
+    Load { dst: String, addr: Operand, width: Width, ty: Ty },
+    /// Direct call. Calls to names with no definition in the module are
+    /// *library calls* — the RPC pass's targets.
+    Call { dst: Option<String>, callee: String, args: Vec<Operand> },
+    /// Post-rpcgen call: issue through the RPC client (Fig. 3c).
+    RpcCall { dst: Option<String>, mangled: String, callee_id: u64, args: Vec<RpcArgSpec> },
+    /// Post-multiteam kernel split: launch region `region` with the grid
+    /// config chosen by the coordinator, passing `arg` (a pointer to the
+    /// shared-environment struct).
+    KernelLaunch { region: String, arg: Option<Operand> },
+    If { cond: Operand, then_body: Vec<Instr>, else_body: Vec<Instr> },
+    While { cond_var: String, cond: Vec<Instr>, body: Vec<Instr> },
+    /// `for %v = lo to hi step s { body }` (half-open `[lo, hi)`).
+    For { var: String, lo: Operand, hi: Operand, step: Operand, schedule: Schedule, body: Vec<Instr> },
+    /// `parallel num_threads(n) { body }`
+    Parallel { num_threads: Option<Operand>, body: Vec<Instr> },
+    Barrier,
+    Return(Option<Operand>),
+    /// Device-native libc intrinsics (paper §3.4) — NOT RPCs.
+    Intrinsic { dst: Option<String>, name: String, args: Vec<Operand> },
+}
+
+/// Argument descriptor of a generated RPC call site (Fig. 3c lines 27-44).
+#[derive(Debug, Clone, PartialEq)]
+pub enum RpcArgSpec {
+    /// Opaque value, treated as a byte sequence.
+    Val(Operand),
+    /// Pointer to a statically identified object.
+    Ref { ptr: Operand, mode: crate::rpc::ArgMode, obj_size: u64, offset: OffsetSpec },
+    /// Statically enumerable candidates resolved by a pointer compare at
+    /// runtime (Fig. 3c lines 34-39).
+    MultiRef { ptr: Operand, candidates: Vec<(Operand, crate::rpc::ArgMode, u64, OffsetSpec)> },
+    /// Statically unknown object: `_FindObj` against allocation tracking,
+    /// degrading to a value if the lookup fails.
+    DynRef { ptr: Operand, mode: crate::rpc::ArgMode },
+}
+
+/// The pointer's offset into its underlying object.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OffsetSpec {
+    Const(u64),
+    /// offset = ptr - base(candidate); computed at runtime.
+    Dynamic,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Global {
+    pub name: String,
+    pub size: u64,
+    pub constant: bool,
+    /// Initializer bytes (zero-filled to `size`).
+    pub init: Vec<u8>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Param {
+    pub name: String,
+    pub ty: Ty,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Function {
+    pub name: String,
+    pub params: Vec<Param>,
+    pub ret: Ty,
+    pub body: Vec<Instr>,
+    /// Set by the multi-team pass on extracted region functions.
+    pub is_kernel_region: bool,
+}
+
+/// A translation unit after "LTO": the complete world view the RPC pass
+/// requires (paper §3.2: "the benefit over per translation unit reasoning
+/// is the complete world view").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Module {
+    pub globals: BTreeMap<String, Global>,
+    pub functions: BTreeMap<String, Function>,
+    /// Declared-but-undefined functions (candidate library calls).
+    pub externals: Vec<String>,
+}
+
+impl Module {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn is_defined(&self, name: &str) -> bool {
+        self.functions.contains_key(name)
+    }
+
+    /// Device-native libc (paper §3.4): these never become RPCs.
+    pub fn is_native_intrinsic(name: &str) -> bool {
+        matches!(
+            name,
+            "malloc"
+                | "free"
+                | "realloc"
+                | "strlen"
+                | "strcpy"
+                | "strcmp"
+                | "strcat"
+                | "memcpy"
+                | "memset"
+                | "strtod"
+                | "atoi"
+                | "rand"
+                | "srand"
+                | "sqrt"
+                | "fabs"
+        )
+    }
+
+    /// Verify structural invariants; returns human-readable errors.
+    pub fn verify(&self) -> Result<(), Vec<String>> {
+        let mut errs = Vec::new();
+        for (name, f) in &self.functions {
+            if name != &f.name {
+                errs.push(format!("function key {name} != name {}", f.name));
+            }
+            let mut defined: Vec<String> = f.params.iter().map(|p| p.name.clone()).collect();
+            verify_body(self, &f.body, &mut defined, &mut errs, &f.name, f.is_kernel_region);
+        }
+        if errs.is_empty() {
+            Ok(())
+        } else {
+            Err(errs)
+        }
+    }
+}
+
+fn verify_body(
+    m: &Module,
+    body: &[Instr],
+    defined: &mut Vec<String>,
+    errs: &mut Vec<String>,
+    fname: &str,
+    in_parallel: bool,
+) {
+    let check_op = |op: &Operand, defined: &Vec<String>, errs: &mut Vec<String>| {
+        match op {
+            Operand::Var(v) => {
+                if !defined.contains(v) {
+                    errs.push(format!("{fname}: use of undefined %{v}"));
+                }
+            }
+            Operand::Global(g) => {
+                if !m.globals.contains_key(g) {
+                    errs.push(format!("{fname}: use of undefined @{g}"));
+                }
+            }
+            _ => {}
+        }
+    };
+    for ins in body {
+        match ins {
+            Instr::Assign { dst, expr } => {
+                for op in expr_operands(expr) {
+                    check_op(op, defined, errs);
+                }
+                defined.push(dst.clone());
+            }
+            Instr::Alloca { dst, size } => {
+                if *size == 0 {
+                    errs.push(format!("{fname}: zero-size alloca %{dst}"));
+                }
+                defined.push(dst.clone());
+            }
+            Instr::Store { addr, val, width } => {
+                if !matches!(width, 1 | 4 | 8) {
+                    errs.push(format!("{fname}: bad store width {width}"));
+                }
+                check_op(addr, defined, errs);
+                check_op(val, defined, errs);
+            }
+            Instr::Load { dst, addr, width, .. } => {
+                if !matches!(width, 1 | 4 | 8) {
+                    errs.push(format!("{fname}: bad load width {width}"));
+                }
+                check_op(addr, defined, errs);
+                defined.push(dst.clone());
+            }
+            Instr::Call { dst, callee, args } => {
+                for a in args {
+                    check_op(a, defined, errs);
+                }
+                if let Some(f) = m.functions.get(callee) {
+                    if f.params.len() != args.len() {
+                        errs.push(format!(
+                            "{fname}: call {callee} arity {} != {}",
+                            args.len(),
+                            f.params.len()
+                        ));
+                    }
+                }
+                if let Some(d) = dst {
+                    defined.push(d.clone());
+                }
+            }
+            Instr::RpcCall { dst, args, .. } => {
+                for a in args {
+                    match a {
+                        RpcArgSpec::Val(op) | RpcArgSpec::DynRef { ptr: op, .. } => {
+                            check_op(op, defined, errs)
+                        }
+                        RpcArgSpec::Ref { ptr, .. } => check_op(ptr, defined, errs),
+                        RpcArgSpec::MultiRef { ptr, candidates } => {
+                            check_op(ptr, defined, errs);
+                            for (c, _, _, _) in candidates {
+                                check_op(c, defined, errs);
+                            }
+                        }
+                    }
+                }
+                if let Some(d) = dst {
+                    defined.push(d.clone());
+                }
+            }
+            Instr::KernelLaunch { region, arg } => {
+                if !m.is_defined(region) {
+                    errs.push(format!("{fname}: kernel launch of undefined region {region}"));
+                }
+                if let Some(a) = arg {
+                    check_op(a, defined, errs);
+                }
+            }
+            Instr::If { cond, then_body, else_body } => {
+                check_op(cond, defined, errs);
+                let mut d1 = defined.clone();
+                verify_body(m, then_body, &mut d1, errs, fname, in_parallel);
+                let mut d2 = defined.clone();
+                verify_body(m, else_body, &mut d2, errs, fname, in_parallel);
+            }
+            Instr::While { cond_var, cond, body } => {
+                let mut d = defined.clone();
+                verify_body(m, cond, &mut d, errs, fname, in_parallel);
+                if !d.contains(cond_var) {
+                    errs.push(format!(
+                        "{fname}: while condition %{cond_var} not defined by cond block"
+                    ));
+                }
+                verify_body(m, body, &mut d, errs, fname, in_parallel);
+            }
+            Instr::For { var, lo, hi, step, schedule, body } => {
+                check_op(lo, defined, errs);
+                check_op(hi, defined, errs);
+                check_op(step, defined, errs);
+                if matches!(schedule, Schedule::Team | Schedule::Grid) && !in_parallel {
+                    errs.push(format!("{fname}: work-shared for outside parallel region"));
+                }
+                let mut d = defined.clone();
+                d.push(var.clone());
+                verify_body(m, body, &mut d, errs, fname, in_parallel);
+            }
+            Instr::Parallel { num_threads, body } => {
+                if let Some(n) = num_threads {
+                    check_op(n, defined, errs);
+                }
+                if in_parallel {
+                    errs.push(format!("{fname}: nested parallel regions unsupported"));
+                }
+                let mut d = defined.clone();
+                verify_body(m, body, &mut d, errs, fname, true);
+            }
+            Instr::Barrier => {}
+            Instr::Return(op) => {
+                if let Some(o) = op {
+                    check_op(o, defined, errs);
+                }
+            }
+            Instr::Intrinsic { dst, name, args } => {
+                if !Module::is_native_intrinsic(name) {
+                    errs.push(format!("{fname}: unknown intrinsic {name}"));
+                }
+                for a in args {
+                    check_op(a, defined, errs);
+                }
+                if let Some(d) = dst {
+                    defined.push(d.clone());
+                }
+            }
+        }
+    }
+}
+
+pub(crate) fn expr_operands(e: &Expr) -> Vec<&Operand> {
+    match e {
+        Expr::Op(a)
+        | Expr::SiToFp(a)
+        | Expr::FpToSi(a)
+        | Expr::Sqrt(a)
+        | Expr::Exp(a)
+        | Expr::Log(a) => vec![a],
+        Expr::Bin(_, a, b) | Expr::Gep(a, b) => vec![a, b],
+        Expr::Select(c, a, b) => vec![c, a, b],
+        Expr::Tid | Expr::NumThreads => vec![],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk_fn(name: &str, body: Vec<Instr>) -> Function {
+        Function { name: name.into(), params: vec![], ret: Ty::I64, body, is_kernel_region: false }
+    }
+
+    #[test]
+    fn verify_accepts_wellformed() {
+        let mut m = Module::new();
+        m.functions.insert(
+            "main".into(),
+            mk_fn(
+                "main",
+                vec![
+                    Instr::Alloca { dst: "p".into(), size: 8 },
+                    Instr::Assign { dst: "x".into(), expr: Expr::Op(Operand::ConstI(5)) },
+                    Instr::Store { addr: Operand::var("p"), val: Operand::var("x"), width: 8 },
+                    Instr::Return(Some(Operand::var("x"))),
+                ],
+            ),
+        );
+        assert!(m.verify().is_ok());
+    }
+
+    #[test]
+    fn verify_rejects_undefined_var() {
+        let mut m = Module::new();
+        m.functions
+            .insert("main".into(), mk_fn("main", vec![Instr::Return(Some(Operand::var("nope")))]));
+        let errs = m.verify().unwrap_err();
+        assert!(errs[0].contains("undefined %nope"));
+    }
+
+    #[test]
+    fn verify_rejects_workshared_for_outside_parallel() {
+        let mut m = Module::new();
+        m.functions.insert(
+            "main".into(),
+            mk_fn(
+                "main",
+                vec![Instr::For {
+                    var: "i".into(),
+                    lo: Operand::ConstI(0),
+                    hi: Operand::ConstI(10),
+                    step: Operand::ConstI(1),
+                    schedule: Schedule::Team,
+                    body: vec![],
+                }],
+            ),
+        );
+        let errs = m.verify().unwrap_err();
+        assert!(errs[0].contains("work-shared for outside parallel"));
+    }
+
+    #[test]
+    fn verify_rejects_nested_parallel() {
+        let mut m = Module::new();
+        m.functions.insert(
+            "main".into(),
+            mk_fn(
+                "main",
+                vec![Instr::Parallel {
+                    num_threads: None,
+                    body: vec![Instr::Parallel { num_threads: None, body: vec![] }],
+                }],
+            ),
+        );
+        assert!(m.verify().is_err());
+    }
+
+    #[test]
+    fn verify_checks_call_arity() {
+        let mut m = Module::new();
+        m.functions.insert(
+            "f".into(),
+            Function {
+                name: "f".into(),
+                params: vec![Param { name: "a".into(), ty: Ty::I64 }],
+                ret: Ty::I64,
+                body: vec![Instr::Return(Some(Operand::var("a")))],
+                is_kernel_region: false,
+            },
+        );
+        m.functions.insert(
+            "main".into(),
+            mk_fn("main", vec![Instr::Call { dst: None, callee: "f".into(), args: vec![] }]),
+        );
+        assert!(m.verify().unwrap_err()[0].contains("arity"));
+    }
+
+    #[test]
+    fn native_intrinsics_listed() {
+        assert!(Module::is_native_intrinsic("malloc"));
+        assert!(Module::is_native_intrinsic("strtod"));
+        assert!(!Module::is_native_intrinsic("fscanf"));
+    }
+}

@@ -1,0 +1,785 @@
+//! Recursive-descent parser for the textual IR (see [`super::printer`] for
+//! the grammar by example; `;` starts a line comment).
+
+use super::*;
+use crate::rpc::ArgMode;
+
+pub fn parse_module(src: &str) -> Result<Module, String> {
+    let toks = lex(src)?;
+    let mut p = P { toks, i: 0 };
+    let mut m = Module::new();
+    while !p.done() {
+        match p.peek_word() {
+            Some("global") => {
+                p.bump();
+                let name = p.expect_global()?;
+                let constant = p.eat_word("const");
+                let size = p.expect_int()? as u64;
+                let init = if let Some(Tok::Str(_)) = p.peek() {
+                    let Tok::Str(s) = p.bump().clone() else { unreachable!() };
+                    let mut b = s.into_bytes();
+                    b.push(0);
+                    b
+                } else {
+                    Vec::new()
+                };
+                if init.len() as u64 > size {
+                    return Err(format!("global @{name}: init longer than size"));
+                }
+                m.globals.insert(name.clone(), Global { name, size, constant, init });
+            }
+            Some("extern") => {
+                p.bump();
+                let name = p.expect_word()?;
+                m.externals.push(name);
+            }
+            Some("func") => {
+                let f = parse_func(&mut p)?;
+                m.functions.insert(f.name.clone(), f);
+            }
+            other => return Err(format!("unexpected top-level token {other:?}")),
+        }
+    }
+    Ok(m)
+}
+
+fn parse_func(p: &mut P) -> Result<Function, String> {
+    p.expect_word_eq("func")?;
+    let name = p.expect_global()?;
+    p.expect(Tok::LParen)?;
+    let mut params = Vec::new();
+    while !p.eat(Tok::RParen) {
+        let pname = p.expect_var()?;
+        p.expect(Tok::Colon)?;
+        let ty = parse_ty(&p.expect_word()?)?;
+        params.push(Param { name: pname, ty });
+        if !p.eat(Tok::Comma) {
+            p.expect(Tok::RParen)?;
+            break;
+        }
+    }
+    p.expect(Tok::Arrow)?;
+    let ret = parse_ty(&p.expect_word()?)?;
+    let is_kernel_region = p.eat_word("kernel");
+    let body = parse_block(p)?;
+    Ok(Function { name, params, ret, body, is_kernel_region })
+}
+
+fn parse_ty(s: &str) -> Result<Ty, String> {
+    match s {
+        "i64" => Ok(Ty::I64),
+        "f64" => Ok(Ty::F64),
+        "ptr" => Ok(Ty::Ptr),
+        "void" => Ok(Ty::Void),
+        _ => Err(format!("unknown type {s}")),
+    }
+}
+
+fn parse_block(p: &mut P) -> Result<Vec<Instr>, String> {
+    p.expect(Tok::LBrace)?;
+    let mut body = Vec::new();
+    while !p.eat(Tok::RBrace) {
+        body.push(parse_instr(p)?);
+    }
+    Ok(body)
+}
+
+fn parse_instr(p: &mut P) -> Result<Instr, String> {
+    // Leading %dst = ...
+    if let Some(Tok::Var(_)) = p.peek() {
+        let dst = p.expect_var()?;
+        p.expect(Tok::Assign)?;
+        return parse_rhs(p, dst);
+    }
+    let word = p.expect_word()?;
+    match word.as_str() {
+        w if w.starts_with("store.") => {
+            let width: Width = w[6..].parse().map_err(|_| format!("bad width {w}"))?;
+            let val = parse_operand(p)?;
+            p.expect(Tok::Comma)?;
+            let addr = parse_operand(p)?;
+            Ok(Instr::Store { addr, val, width })
+        }
+        "call" => {
+            let callee = p.expect_word()?;
+            let args = parse_args(p)?;
+            if Module::is_native_intrinsic(&callee) {
+                Ok(Instr::Intrinsic { dst: None, name: callee, args })
+            } else {
+                Ok(Instr::Call { dst: None, callee, args })
+            }
+        }
+        "rpc" => parse_rpc(p, None),
+        "launch" => {
+            let region = p.expect_global()?;
+            let arg = if p.eat(Tok::LParen) {
+                let a = parse_operand(p)?;
+                p.expect(Tok::RParen)?;
+                Some(a)
+            } else {
+                None
+            };
+            Ok(Instr::KernelLaunch { region, arg })
+        }
+        "if" => {
+            let cond = parse_operand(p)?;
+            let then_body = parse_block(p)?;
+            let else_body = if p.eat_word("else") { parse_block(p)? } else { Vec::new() };
+            Ok(Instr::If { cond, then_body, else_body })
+        }
+        "while" => {
+            let cond_var = p.expect_var()?;
+            let cond = parse_block(p)?;
+            let body = parse_block(p)?;
+            Ok(Instr::While { cond_var, cond, body })
+        }
+        "for" | "for.team" | "for.grid" => {
+            let schedule = match word.as_str() {
+                "for" => Schedule::Seq,
+                "for.team" => Schedule::Team,
+                _ => Schedule::Grid,
+            };
+            let var = p.expect_var()?;
+            p.expect(Tok::Assign)?;
+            let lo = parse_operand(p)?;
+            p.expect_word_eq("to")?;
+            let hi = parse_operand(p)?;
+            p.expect_word_eq("step")?;
+            let step = parse_operand(p)?;
+            let body = parse_block(p)?;
+            Ok(Instr::For { var, lo, hi, step, schedule, body })
+        }
+        "parallel" => {
+            let num_threads = if p.eat_word("num_threads") {
+                p.expect(Tok::LParen)?;
+                let n = parse_operand(p)?;
+                p.expect(Tok::RParen)?;
+                Some(n)
+            } else {
+                None
+            };
+            let body = parse_block(p)?;
+            Ok(Instr::Parallel { num_threads, body })
+        }
+        "barrier" => Ok(Instr::Barrier),
+        "return" => {
+            // A return value must be on the same conceptual statement; an
+            // operand is present unless the next token starts a new instr.
+            match p.peek() {
+                Some(Tok::Var(_)) | Some(Tok::Int(_)) | Some(Tok::Float(_)) | Some(Tok::GlobalRef(_)) => {
+                    Ok(Instr::Return(Some(parse_operand(p)?)))
+                }
+                _ => Ok(Instr::Return(None)),
+            }
+        }
+        other => Err(format!("unexpected instruction {other:?}")),
+    }
+}
+
+fn parse_rhs(p: &mut P, dst: String) -> Result<Instr, String> {
+    // %dst = <int|float|var|global> | <unop/binop/...> | alloca | load | call | rpc
+    match p.peek() {
+        Some(Tok::Int(_)) | Some(Tok::Float(_)) | Some(Tok::Var(_)) | Some(Tok::GlobalRef(_)) => {
+            let o = parse_operand(p)?;
+            return Ok(Instr::Assign { dst, expr: Expr::Op(o) });
+        }
+        _ => {}
+    }
+    let word = p.expect_word()?;
+    match word.as_str() {
+        "alloca" => {
+            let size = p.expect_int()? as u64;
+            Ok(Instr::Alloca { dst, size })
+        }
+        w if w.starts_with("load.") || w.starts_with("loadf.") => {
+            let (ty, width_s) = if let Some(rest) = w.strip_prefix("loadf.") {
+                (Ty::F64, rest)
+            } else {
+                (Ty::I64, &w[5..])
+            };
+            let width: Width = width_s.parse().map_err(|_| format!("bad width {w}"))?;
+            let addr = parse_operand(p)?;
+            Ok(Instr::Load { dst, addr, width, ty })
+        }
+        "call" => {
+            let callee = p.expect_word()?;
+            let args = parse_args(p)?;
+            if Module::is_native_intrinsic(&callee) {
+                Ok(Instr::Intrinsic { dst: Some(dst), name: callee, args })
+            } else {
+                Ok(Instr::Call { dst: Some(dst), callee, args })
+            }
+        }
+        "rpc" => parse_rpc(p, Some(dst)),
+        "gep" => {
+            let a = parse_operand(p)?;
+            p.expect(Tok::Comma)?;
+            let b = parse_operand(p)?;
+            Ok(Instr::Assign { dst, expr: Expr::Gep(a, b) })
+        }
+        "select" => {
+            let c = parse_operand(p)?;
+            p.expect(Tok::Comma)?;
+            let a = parse_operand(p)?;
+            p.expect(Tok::Comma)?;
+            let b = parse_operand(p)?;
+            Ok(Instr::Assign { dst, expr: Expr::Select(c, a, b) })
+        }
+        "sitofp" => Ok(Instr::Assign { dst, expr: Expr::SiToFp(parse_operand(p)?) }),
+        "fptosi" => Ok(Instr::Assign { dst, expr: Expr::FpToSi(parse_operand(p)?) }),
+        "tid" => Ok(Instr::Assign { dst, expr: Expr::Tid }),
+        "nthreads" => Ok(Instr::Assign { dst, expr: Expr::NumThreads }),
+        "sqrt" => Ok(Instr::Assign { dst, expr: Expr::Sqrt(parse_operand(p)?) }),
+        "exp" => Ok(Instr::Assign { dst, expr: Expr::Exp(parse_operand(p)?) }),
+        "log" => Ok(Instr::Assign { dst, expr: Expr::Log(parse_operand(p)?) }),
+        other => {
+            let b = binop_from_name(other).ok_or_else(|| format!("unknown rhs {other:?}"))?;
+            let x = parse_operand(p)?;
+            p.expect(Tok::Comma)?;
+            let y = parse_operand(p)?;
+            Ok(Instr::Assign { dst, expr: Expr::Bin(b, x, y) })
+        }
+    }
+}
+
+fn parse_rpc(p: &mut P, dst: Option<String>) -> Result<Instr, String> {
+    let Tok::Str(mangled) = p.bump().clone() else {
+        return Err("rpc expects mangled name string".into());
+    };
+    let callee_id = p.expect_int()? as u64;
+    p.expect(Tok::LParen)?;
+    let mut args = Vec::new();
+    while !p.eat(Tok::RParen) {
+        args.push(parse_spec(p)?);
+        if !p.eat(Tok::Comma) {
+            p.expect(Tok::RParen)?;
+            break;
+        }
+    }
+    Ok(Instr::RpcCall { dst, mangled, callee_id, args })
+}
+
+fn parse_mode(p: &mut P) -> Result<ArgMode, String> {
+    match p.expect_word()?.as_str() {
+        "r" => Ok(ArgMode::Read),
+        "w" => Ok(ArgMode::Write),
+        "rw" => Ok(ArgMode::ReadWrite),
+        m => Err(format!("bad arg mode {m:?}")),
+    }
+}
+
+fn parse_offset(p: &mut P) -> Result<OffsetSpec, String> {
+    p.expect(Tok::Plus)?;
+    if p.eat_word("dyn") {
+        Ok(OffsetSpec::Dynamic)
+    } else {
+        Ok(OffsetSpec::Const(p.expect_int()? as u64))
+    }
+}
+
+fn parse_spec(p: &mut P) -> Result<RpcArgSpec, String> {
+    match p.expect_word()?.as_str() {
+        "val" => Ok(RpcArgSpec::Val(parse_operand(p)?)),
+        "ref" => {
+            let ptr = parse_operand(p)?;
+            let mode = parse_mode(p)?;
+            let obj_size = p.expect_int()? as u64;
+            let offset = parse_offset(p)?;
+            Ok(RpcArgSpec::Ref { ptr, mode, obj_size, offset })
+        }
+        "dyn" => {
+            let ptr = parse_operand(p)?;
+            let mode = parse_mode(p)?;
+            Ok(RpcArgSpec::DynRef { ptr, mode })
+        }
+        "multi" => {
+            let ptr = parse_operand(p)?;
+            p.expect(Tok::LBracket)?;
+            let mut candidates = Vec::new();
+            loop {
+                let c = parse_operand(p)?;
+                let m = parse_mode(p)?;
+                let s = p.expect_int()? as u64;
+                let o = parse_offset(p)?;
+                candidates.push((c, m, s, o));
+                if p.eat(Tok::Semi) {
+                    continue;
+                }
+                p.expect(Tok::RBracket)?;
+                break;
+            }
+            Ok(RpcArgSpec::MultiRef { ptr, candidates })
+        }
+        s => Err(format!("bad rpc arg spec {s:?}")),
+    }
+}
+
+fn parse_args(p: &mut P) -> Result<Vec<Operand>, String> {
+    p.expect(Tok::LParen)?;
+    let mut args = Vec::new();
+    while !p.eat(Tok::RParen) {
+        args.push(parse_operand(p)?);
+        if !p.eat(Tok::Comma) {
+            p.expect(Tok::RParen)?;
+            break;
+        }
+    }
+    Ok(args)
+}
+
+fn parse_operand(p: &mut P) -> Result<Operand, String> {
+    match p.bump().clone() {
+        Tok::Var(v) => Ok(Operand::Var(v)),
+        Tok::GlobalRef(g) => Ok(Operand::Global(g)),
+        Tok::Int(i) => Ok(Operand::ConstI(i)),
+        Tok::Float(f) => Ok(Operand::ConstF(f)),
+        t => Err(format!("expected operand, got {t:?}")),
+    }
+}
+
+fn binop_from_name(s: &str) -> Option<BinOp> {
+    Some(match s {
+        "add" => BinOp::Add,
+        "sub" => BinOp::Sub,
+        "mul" => BinOp::Mul,
+        "div" => BinOp::Div,
+        "rem" => BinOp::Rem,
+        "and" => BinOp::And,
+        "or" => BinOp::Or,
+        "xor" => BinOp::Xor,
+        "shl" => BinOp::Shl,
+        "shr" => BinOp::Shr,
+        "eq" => BinOp::Eq,
+        "ne" => BinOp::Ne,
+        "lt" => BinOp::Lt,
+        "le" => BinOp::Le,
+        "gt" => BinOp::Gt,
+        "ge" => BinOp::Ge,
+        "fadd" => BinOp::FAdd,
+        "fsub" => BinOp::FSub,
+        "fmul" => BinOp::FMul,
+        "fdiv" => BinOp::FDiv,
+        "flt" => BinOp::FLt,
+        "fle" => BinOp::FLe,
+        "fgt" => BinOp::FGt,
+        "fge" => BinOp::FGe,
+        "feq" => BinOp::FEq,
+        _ => return None,
+    })
+}
+
+// ---- lexer ----
+
+#[derive(Debug, Clone, PartialEq)]
+enum Tok {
+    Word(String),
+    Var(String),
+    GlobalRef(String),
+    Int(i64),
+    Float(f64),
+    Str(String),
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    LBracket,
+    RBracket,
+    Comma,
+    Colon,
+    Semi,
+    Assign,
+    Arrow,
+    Plus,
+}
+
+fn lex(src: &str) -> Result<Vec<Tok>, String> {
+    let b: Vec<char> = src.chars().collect();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            ';' => {
+                // `;` inside rpc multi-lists is Semi; comments are `;;`? No:
+                // a lone `;` followed by space inside brackets is Semi; line
+                // comments start with `;` at which point we skip to EOL —
+                // disambiguate: comment only if previous token closed a
+                // statement. Simpler rule: `;;` comments.
+                if i + 1 < b.len() && b[i + 1] == ';' {
+                    while i < b.len() && b[i] != '\n' {
+                        i += 1;
+                    }
+                } else {
+                    toks.push(Tok::Semi);
+                    i += 1;
+                }
+            }
+            c if c.is_whitespace() => i += 1,
+            '(' => {
+                toks.push(Tok::LParen);
+                i += 1;
+            }
+            ')' => {
+                toks.push(Tok::RParen);
+                i += 1;
+            }
+            '{' => {
+                toks.push(Tok::LBrace);
+                i += 1;
+            }
+            '}' => {
+                toks.push(Tok::RBrace);
+                i += 1;
+            }
+            '[' => {
+                toks.push(Tok::LBracket);
+                i += 1;
+            }
+            ']' => {
+                toks.push(Tok::RBracket);
+                i += 1;
+            }
+            ',' => {
+                toks.push(Tok::Comma);
+                i += 1;
+            }
+            ':' => {
+                toks.push(Tok::Colon);
+                i += 1;
+            }
+            '+' => {
+                toks.push(Tok::Plus);
+                i += 1;
+            }
+            '=' => {
+                toks.push(Tok::Assign);
+                i += 1;
+            }
+            '-' if i + 1 < b.len() && b[i + 1] == '>' => {
+                toks.push(Tok::Arrow);
+                i += 2;
+            }
+            '%' => {
+                i += 1;
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '.') {
+                    i += 1;
+                }
+                toks.push(Tok::Var(b[start..i].iter().collect()));
+            }
+            '@' => {
+                i += 1;
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '.') {
+                    i += 1;
+                }
+                toks.push(Tok::GlobalRef(b[start..i].iter().collect()));
+            }
+            '"' => {
+                i += 1;
+                let mut s = String::new();
+                while i < b.len() && b[i] != '"' {
+                    if b[i] == '\\' && i + 1 < b.len() {
+                        i += 1;
+                        s.push(match b[i] {
+                            'n' => '\n',
+                            't' => '\t',
+                            '\\' => '\\',
+                            '"' => '"',
+                            c => c,
+                        });
+                    } else {
+                        s.push(b[i]);
+                    }
+                    i += 1;
+                }
+                if i >= b.len() {
+                    return Err("unterminated string".into());
+                }
+                i += 1;
+                toks.push(Tok::Str(s));
+            }
+            c if c == '-' || c.is_ascii_digit() => {
+                let start = i;
+                i += 1;
+                let mut is_float = false;
+                while i < b.len()
+                    && (b[i].is_ascii_digit()
+                        || b[i] == '.'
+                        || b[i] == 'e'
+                        || b[i] == 'E'
+                        || ((b[i] == '-' || b[i] == '+') && (b[i - 1] == 'e' || b[i - 1] == 'E')))
+                {
+                    if b[i] == '.' || b[i] == 'e' || b[i] == 'E' {
+                        is_float = true;
+                    }
+                    i += 1;
+                }
+                let text: String = b[start..i].iter().collect();
+                if is_float {
+                    toks.push(Tok::Float(text.parse().map_err(|e| format!("bad float {text}: {e}"))?));
+                } else {
+                    toks.push(Tok::Int(text.parse().map_err(|e| format!("bad int {text}: {e}"))?));
+                }
+            }
+            c if c.is_alphabetic() || c == '_' => {
+                let start = i;
+                while i < b.len() && (b[i].is_alphanumeric() || b[i] == '_' || b[i] == '.') {
+                    i += 1;
+                }
+                toks.push(Tok::Word(b[start..i].iter().collect()));
+            }
+            c => return Err(format!("unexpected character {c:?}")),
+        }
+    }
+    Ok(toks)
+}
+
+struct P {
+    toks: Vec<Tok>,
+    i: usize,
+}
+
+impl P {
+    fn done(&self) -> bool {
+        self.i >= self.toks.len()
+    }
+
+    fn peek(&self) -> Option<&Tok> {
+        self.toks.get(self.i)
+    }
+
+    fn peek_word(&self) -> Option<&str> {
+        match self.peek() {
+            Some(Tok::Word(w)) => Some(w),
+            _ => None,
+        }
+    }
+
+    fn bump(&mut self) -> &Tok {
+        let t = &self.toks[self.i.min(self.toks.len() - 1)];
+        self.i += 1;
+        t
+    }
+
+    fn eat(&mut self, t: Tok) -> bool {
+        if self.peek() == Some(&t) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn eat_word(&mut self, w: &str) -> bool {
+        if self.peek_word() == Some(w) {
+            self.i += 1;
+            true
+        } else {
+            false
+        }
+    }
+
+    fn expect(&mut self, t: Tok) -> Result<(), String> {
+        if self.eat(t.clone()) {
+            Ok(())
+        } else {
+            Err(format!("expected {t:?}, got {:?} at token {}", self.peek(), self.i))
+        }
+    }
+
+    fn expect_word(&mut self) -> Result<String, String> {
+        match self.peek() {
+            Some(Tok::Word(w)) => {
+                let w = w.clone();
+                self.i += 1;
+                Ok(w)
+            }
+            t => Err(format!("expected word, got {t:?}")),
+        }
+    }
+
+    fn expect_word_eq(&mut self, w: &str) -> Result<(), String> {
+        let got = self.expect_word()?;
+        if got == w {
+            Ok(())
+        } else {
+            Err(format!("expected {w:?}, got {got:?}"))
+        }
+    }
+
+    fn expect_var(&mut self) -> Result<String, String> {
+        match self.peek() {
+            Some(Tok::Var(v)) => {
+                let v = v.clone();
+                self.i += 1;
+                Ok(v)
+            }
+            t => Err(format!("expected %var, got {t:?}")),
+        }
+    }
+
+    fn expect_global(&mut self) -> Result<String, String> {
+        match self.peek() {
+            Some(Tok::GlobalRef(g)) => {
+                let g = g.clone();
+                self.i += 1;
+                Ok(g)
+            }
+            t => Err(format!("expected @global, got {t:?}")),
+        }
+    }
+
+    fn expect_int(&mut self) -> Result<i64, String> {
+        match self.peek() {
+            Some(Tok::Int(i)) => {
+                let i = *i;
+                self.i += 1;
+                Ok(i)
+            }
+            t => Err(format!("expected integer, got {t:?}")),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::printer::print_module;
+
+    const EXAMPLE: &str = r#"
+;; the Fig. 3a example, lowered
+global @fmt const 9 "%f %i %i"
+global @arr 64
+extern fscanf
+
+func @use(%s: ptr, %r: i64, %i: i64) -> void {
+  return
+}
+
+func @main() -> i64 {
+  %s = alloca 12
+  %i = alloca 4
+  %fd = 0
+  %sa = load.4 %s
+  %pb = gep %s, 4
+  %pf = gep %s, 8
+  %c = ne %sa, 0
+  %p = select %c, %i, %pb
+  %r = call fscanf(%fd, @fmt, %pf, %p, @arr)
+  call use(%s, %r, %i)
+  return 0
+}
+"#;
+
+    #[test]
+    fn parses_example_and_verifies() {
+        let m = parse_module(EXAMPLE).unwrap();
+        assert_eq!(m.functions.len(), 2);
+        assert_eq!(m.externals, vec!["fscanf"]);
+        assert!(m.globals["fmt"].constant);
+        assert_eq!(m.globals["fmt"].init, b"%f %i %i\0");
+        m.verify().unwrap();
+    }
+
+    #[test]
+    fn print_parse_round_trip() {
+        let m = parse_module(EXAMPLE).unwrap();
+        let text = print_module(&m);
+        let m2 = parse_module(&text).unwrap_or_else(|e| panic!("reparse failed: {e}\n{text}"));
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn parses_parallel_constructs() {
+        let src = r#"
+func @main() -> i64 {
+  %n = 1024
+  parallel num_threads(128) {
+    %t = tid
+    %nt = nthreads
+    for.team %i = 0 to %n step 1 {
+      %x = mul %i, 2
+    }
+    barrier
+  }
+  return 0
+}
+"#;
+        let m = parse_module(src).unwrap();
+        m.verify().unwrap();
+        let text = print_module(&m);
+        assert_eq!(parse_module(&text).unwrap(), m);
+        let Instr::Parallel { body, .. } = &m.functions["main"].body[1] else {
+            panic!()
+        };
+        assert!(matches!(body[2], Instr::For { schedule: Schedule::Team, .. }));
+    }
+
+    #[test]
+    fn parses_rpc_and_launch_forms() {
+        let src = r#"
+func @region0() -> void kernel {
+  return
+}
+
+func @main() -> i64 {
+  %p = alloca 8
+  %r = rpc "__fscanf_p_cp_ip" 3 (val 0, ref %p rw 8 +0, dyn %p rw, multi %p [ %p r 8 +0 ; %p rw 8 +dyn ])
+  launch @region0 (%p)
+  launch @region0
+  return %r
+}
+"#;
+        let m = parse_module(src).unwrap();
+        m.verify().unwrap();
+        let text = print_module(&m);
+        assert_eq!(parse_module(&text).unwrap(), m, "round trip:\n{text}");
+    }
+
+    #[test]
+    fn parses_while_and_floats() {
+        let src = r#"
+func @main() -> f64 {
+  %x = 1.5
+  %acc = 0.0
+  %i = alloca 8
+  store.8 0, %i
+  while %c {
+    %iv = load.8 %i
+    %c = lt %iv, 10
+  } {
+    %iv2 = load.8 %i
+    %iv3 = add %iv2, 1
+    store.8 %iv3, %i
+    %acc2 = fadd %acc, %x
+  }
+  return %acc
+}
+"#;
+        let m = parse_module(src).unwrap();
+        m.verify().unwrap();
+        assert_eq!(parse_module(&print_module(&m)).unwrap(), m);
+    }
+
+    #[test]
+    fn comments_ignored() {
+        let src = ";; top comment\nfunc @main() -> i64 {\n  ;; inner\n  return 7\n}\n";
+        let m = parse_module(src).unwrap();
+        assert!(m.functions.contains_key("main"));
+    }
+
+    #[test]
+    fn errors_are_reported() {
+        assert!(parse_module("func @f( -> i64 { }").is_err());
+        assert!(parse_module("global @g const 4 \"too long\"").is_err());
+        assert!(parse_module("func @f() -> i64 { %x = bogus 1, 2 }").is_err());
+    }
+
+    #[test]
+    fn native_calls_become_intrinsics() {
+        let src = "func @main() -> i64 {\n  %p = call malloc(64)\n  call free(%p)\n  return 0\n}\n";
+        let m = parse_module(src).unwrap();
+        assert!(matches!(&m.functions["main"].body[0], Instr::Intrinsic { name, .. } if name == "malloc"));
+    }
+}

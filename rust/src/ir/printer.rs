@@ -1,0 +1,250 @@
+//! Textual IR emission. `parse(print(m)) == m` is property-tested.
+
+use super::*;
+
+pub fn print_module(m: &Module) -> String {
+    let mut out = String::new();
+    for g in m.globals.values() {
+        out.push_str("global @");
+        out.push_str(&g.name);
+        if g.constant {
+            out.push_str(" const");
+        }
+        if !g.init.is_empty() && g.init.iter().any(|&b| b != 0) {
+            // String-initialized global (init includes the NUL).
+            let text = String::from_utf8_lossy(&g.init[..g.init.len().saturating_sub(1)]);
+            out.push_str(&format!(" {} \"{}\"", g.size, escape(&text)));
+        } else {
+            out.push_str(&format!(" {}", g.size));
+        }
+        out.push('\n');
+    }
+    for e in &m.externals {
+        out.push_str(&format!("extern {e}\n"));
+    }
+    for f in m.functions.values() {
+        out.push_str(&format!("\nfunc @{}(", f.name));
+        for (i, p) in f.params.iter().enumerate() {
+            if i > 0 {
+                out.push_str(", ");
+            }
+            out.push_str(&format!("%{}: {}", p.name, p.ty));
+        }
+        out.push_str(&format!(") -> {}", f.ret));
+        if f.is_kernel_region {
+            out.push_str(" kernel");
+        }
+        out.push_str(" {\n");
+        print_body(&mut out, &f.body, 1);
+        out.push_str("}\n");
+    }
+    out
+}
+
+fn ind(out: &mut String, depth: usize) {
+    for _ in 0..depth {
+        out.push_str("  ");
+    }
+}
+
+fn print_body(out: &mut String, body: &[Instr], depth: usize) {
+    for ins in body {
+        ind(out, depth);
+        match ins {
+            Instr::Assign { dst, expr } => {
+                out.push_str(&format!("%{dst} = {}", print_expr(expr)));
+            }
+            Instr::Alloca { dst, size } => out.push_str(&format!("%{dst} = alloca {size}")),
+            Instr::Store { addr, val, width } => {
+                out.push_str(&format!("store.{width} {}, {}", op(val), op(addr)))
+            }
+            Instr::Load { dst, addr, width, ty } => {
+                let m = if *ty == Ty::F64 { "loadf" } else { "load" };
+                out.push_str(&format!("%{dst} = {m}.{width} {}", op(addr)));
+            }
+            Instr::Call { dst, callee, args } => {
+                if let Some(d) = dst {
+                    out.push_str(&format!("%{d} = "));
+                }
+                out.push_str(&format!("call {callee}("));
+                out.push_str(&args.iter().map(op).collect::<Vec<_>>().join(", "));
+                out.push(')');
+            }
+            Instr::RpcCall { dst, mangled, callee_id, args } => {
+                if let Some(d) = dst {
+                    out.push_str(&format!("%{d} = "));
+                }
+                out.push_str(&format!("rpc \"{mangled}\" {callee_id} ("));
+                out.push_str(&args.iter().map(print_spec).collect::<Vec<_>>().join(", "));
+                out.push(')');
+            }
+            Instr::KernelLaunch { region, arg } => {
+                out.push_str(&format!("launch @{region}"));
+                if let Some(a) = arg {
+                    out.push_str(&format!(" ({})", op(a)));
+                }
+            }
+            Instr::If { cond, then_body, else_body } => {
+                out.push_str(&format!("if {} {{\n", op(cond)));
+                print_body(out, then_body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+                if !else_body.is_empty() {
+                    out.push_str(" else {\n");
+                    print_body(out, else_body, depth + 1);
+                    ind(out, depth);
+                    out.push('}');
+                }
+            }
+            Instr::While { cond_var, cond, body } => {
+                out.push_str(&format!("while %{cond_var} {{\n"));
+                print_body(out, cond, depth + 1);
+                ind(out, depth);
+                out.push_str("} {\n");
+                print_body(out, body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+            }
+            Instr::For { var, lo, hi, step, schedule, body } => {
+                let sched = match schedule {
+                    Schedule::Seq => "for",
+                    Schedule::Team => "for.team",
+                    Schedule::Grid => "for.grid",
+                };
+                out.push_str(&format!(
+                    "{sched} %{var} = {} to {} step {} {{\n",
+                    op(lo),
+                    op(hi),
+                    op(step)
+                ));
+                print_body(out, body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+            }
+            Instr::Parallel { num_threads, body } => {
+                out.push_str("parallel");
+                if let Some(n) = num_threads {
+                    out.push_str(&format!(" num_threads({})", op(n)));
+                }
+                out.push_str(" {\n");
+                print_body(out, body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+            }
+            Instr::Barrier => out.push_str("barrier"),
+            Instr::Return(v) => match v {
+                Some(v) => out.push_str(&format!("return {}", op(v))),
+                None => out.push_str("return"),
+            },
+            Instr::Intrinsic { dst, name, args } => {
+                if let Some(d) = dst {
+                    out.push_str(&format!("%{d} = "));
+                }
+                out.push_str(&format!("call {name}("));
+                out.push_str(&args.iter().map(op).collect::<Vec<_>>().join(", "));
+                out.push(')');
+            }
+        }
+        out.push('\n');
+    }
+}
+
+pub fn op(o: &Operand) -> String {
+    match o {
+        Operand::Var(v) => format!("%{v}"),
+        Operand::ConstI(i) => i.to_string(),
+        Operand::ConstF(f) => {
+            if f.fract() == 0.0 && f.is_finite() {
+                format!("{f:.1}")
+            } else {
+                format!("{f}")
+            }
+        }
+        Operand::Global(g) => format!("@{g}"),
+    }
+}
+
+fn print_expr(e: &Expr) -> String {
+    match e {
+        Expr::Op(a) => op(a),
+        Expr::Bin(b, x, y) => format!("{} {}, {}", binop_name(*b), op(x), op(y)),
+        Expr::Gep(b, o) => format!("gep {}, {}", op(b), op(o)),
+        Expr::Select(c, a, b) => format!("select {}, {}, {}", op(c), op(a), op(b)),
+        Expr::SiToFp(a) => format!("sitofp {}", op(a)),
+        Expr::FpToSi(a) => format!("fptosi {}", op(a)),
+        Expr::Tid => "tid".into(),
+        Expr::NumThreads => "nthreads".into(),
+        Expr::Sqrt(a) => format!("sqrt {}", op(a)),
+        Expr::Exp(a) => format!("exp {}", op(a)),
+        Expr::Log(a) => format!("log {}", op(a)),
+    }
+}
+
+pub fn binop_name(b: BinOp) -> &'static str {
+    match b {
+        BinOp::Add => "add",
+        BinOp::Sub => "sub",
+        BinOp::Mul => "mul",
+        BinOp::Div => "div",
+        BinOp::Rem => "rem",
+        BinOp::And => "and",
+        BinOp::Or => "or",
+        BinOp::Xor => "xor",
+        BinOp::Shl => "shl",
+        BinOp::Shr => "shr",
+        BinOp::Eq => "eq",
+        BinOp::Ne => "ne",
+        BinOp::Lt => "lt",
+        BinOp::Le => "le",
+        BinOp::Gt => "gt",
+        BinOp::Ge => "ge",
+        BinOp::FAdd => "fadd",
+        BinOp::FSub => "fsub",
+        BinOp::FMul => "fmul",
+        BinOp::FDiv => "fdiv",
+        BinOp::FLt => "flt",
+        BinOp::FLe => "fle",
+        BinOp::FGt => "fgt",
+        BinOp::FGe => "fge",
+        BinOp::FEq => "feq",
+    }
+}
+
+fn print_spec(s: &RpcArgSpec) -> String {
+    let mode = |m: crate::rpc::ArgMode| match m {
+        crate::rpc::ArgMode::Read => "r",
+        crate::rpc::ArgMode::Write => "w",
+        crate::rpc::ArgMode::ReadWrite => "rw",
+    };
+    let off = |o: &OffsetSpec| match o {
+        OffsetSpec::Const(c) => format!("+{c}"),
+        OffsetSpec::Dynamic => "+dyn".into(),
+    };
+    match s {
+        RpcArgSpec::Val(o) => format!("val {}", op(o)),
+        RpcArgSpec::Ref { ptr, mode: m, obj_size, offset } => {
+            format!("ref {} {} {} {}", op(ptr), mode(*m), obj_size, off(offset))
+        }
+        RpcArgSpec::DynRef { ptr, mode: m } => format!("dyn {} {}", op(ptr), mode(*m)),
+        RpcArgSpec::MultiRef { ptr, candidates } => {
+            let cands = candidates
+                .iter()
+                .map(|(c, m, s, o)| format!("{} {} {} {}", op(c), mode(*m), s, off(o)))
+                .collect::<Vec<_>>()
+                .join(" ; ");
+            format!("multi {} [ {cands} ]", op(ptr))
+        }
+    }
+}
+
+fn escape(s: &str) -> String {
+    s.chars()
+        .flat_map(|c| match c {
+            '"' => vec!['\\', '"'],
+            '\\' => vec!['\\', '\\'],
+            '\n' => vec!['\\', 'n'],
+            '\t' => vec!['\\', 't'],
+            c => vec![c],
+        })
+        .collect()
+}

@@ -1,0 +1,42 @@
+//! `gpu_first` — a reproduction of *"GPU First — Execution of Legacy CPU
+//! Codes on GPUs"* (Tian, Scogland, Chapman, Doerfert; 2023).
+//!
+//! The crate implements the paper's full system against a simulated GPU
+//! substrate (see `DESIGN.md` for the substitution table):
+//!
+//! * [`ir`] / [`analysis`] / [`transform`] — the compiler: a small typed IR,
+//!   an Attributor-style underlying-object analysis, the automatic **RPC
+//!   generation** pass (paper §3.2) and the **multi-team expansion / kernel
+//!   split** pass (paper §3.3).
+//! * [`gpu`] — the SIMT device simulator (teams × threads, address-spaced
+//!   memory, cross-team barriers, coalescing classification).
+//! * [`rpc`] — the synchronous, stateless host-RPC protocol over managed
+//!   memory (client stubs, host server, landing-pad registry, single-level
+//!   memory migration).
+//! * [`alloc`] — the device heap allocators (paper §3.4): *generic*
+//!   free-list, *balanced* N×M chunk allocator, and a vendor-malloc model,
+//!   plus allocation tracking for dynamic object lookup.
+//! * [`libc_gpu`] — the partial libc that runs "natively" on the device.
+//! * [`runtime`] — PJRT loading/execution of the AOT JAX/Pallas artifacts
+//!   (HLO text interchange).
+//! * [`coordinator`] — the loader + host process tying it all together.
+//! * [`perfmodel`] — A100/EPYC roofline cost models converting executed
+//!   operation counts into modeled device time.
+//! * [`apps`] — the evaluation applications (XSBench, RSBench, HeCBench
+//!   micro benchmarks, SPEC-OMP-style kernels) in CPU / GPU-First / manual
+//!   offload variants.
+//! * [`util`] — offline substrate: RNG, CLI, JSON, stats, tables, property
+//!   testing, bench harness.
+
+pub mod util;
+pub mod alloc;
+pub mod gpu;
+pub mod rpc;
+pub mod libc_gpu;
+pub mod ir;
+pub mod analysis;
+pub mod transform;
+pub mod runtime;
+pub mod perfmodel;
+pub mod coordinator;
+pub mod apps;

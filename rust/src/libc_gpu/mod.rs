@@ -1,0 +1,13 @@
+//! Partial libc that runs *natively on the device* (paper §3.4) — no RPC.
+//!
+//! The paper extends the partial GPU libc of Tian et al. with functions
+//! "guided by benchmarks ... such as `strtod`, `rand`, and `realloc`".
+//! These operate directly on simulated device memory and are available to
+//! IR programs as interpreter intrinsics and to the hand-ported apps as
+//! plain calls. Functions that need OS support (file I/O, `exit`) are NOT
+//! here — they go through the RPC layer.
+
+pub mod string;
+pub mod stdlib;
+pub mod rand;
+pub mod stdio;

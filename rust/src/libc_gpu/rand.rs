@@ -1,0 +1,107 @@
+//! `rand()` for the device — per-thread LCG streams.
+//!
+//! The paper adds `rand` to the native GPU libc. A single global `rand`
+//! state would serialize every thread on one atomic; like the XSBench /
+//! RSBench proxies we use a per-thread LCG (the same 64-bit
+//! multiplicative congruential generator XSBench's `rn(&seed)` uses) with
+//! skip-ahead seeding so streams are reproducible regardless of the
+//! thread count.
+
+/// LCG parameters from XSBench (O'Neill / PCG-family multiplier).
+pub const LCG_M: u64 = 2_806_196_910_506_780_709;
+pub const LCG_A: u64 = 1;
+
+#[derive(Debug, Clone, Copy)]
+pub struct DeviceRand {
+    pub seed: u64,
+}
+
+impl DeviceRand {
+    /// Seed stream `tid` out of the base seed, with an O(log n)
+    /// skip-ahead so thread streams never overlap.
+    pub fn for_thread(base_seed: u64, tid: u64) -> Self {
+        Self { seed: fast_forward(base_seed, tid.wrapping_mul(0x1_0000)) }
+    }
+
+    /// Next uniform double in (0, 1) — XSBench's `rn`.
+    #[inline]
+    pub fn next_f64(&mut self) -> f64 {
+        self.seed = self.seed.wrapping_mul(LCG_M).wrapping_add(LCG_A);
+        (self.seed >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// C `rand()`: 31-bit non-negative int.
+    #[inline]
+    pub fn rand(&mut self) -> i32 {
+        self.seed = self.seed.wrapping_mul(LCG_M).wrapping_add(LCG_A);
+        ((self.seed >> 33) & 0x7FFF_FFFF) as i32
+    }
+}
+
+/// Jump the LCG forward by `n` steps in O(log n) (XSBench's
+/// `fast_forward_LCG`).
+pub fn fast_forward(seed: u64, mut n: u64) -> u64 {
+    let mut m = LCG_M;
+    let mut a = LCG_A;
+    let mut m_total: u64 = 1;
+    let mut a_total: u64 = 0;
+    while n > 0 {
+        if n & 1 == 1 {
+            m_total = m_total.wrapping_mul(m);
+            a_total = a_total.wrapping_mul(m).wrapping_add(a);
+        }
+        a = a.wrapping_mul(m).wrapping_add(a);
+        m = m.wrapping_mul(m);
+        n >>= 1;
+    }
+    seed.wrapping_mul(m_total).wrapping_add(a_total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_forward_matches_stepping() {
+        let seed = 42;
+        let mut stepped = DeviceRand { seed };
+        for _ in 0..1000 {
+            stepped.next_f64();
+        }
+        assert_eq!(fast_forward(seed, 1000), stepped.seed);
+    }
+
+    #[test]
+    fn streams_are_decorrelated() {
+        let a: Vec<i32> = {
+            let mut r = DeviceRand::for_thread(7, 0);
+            (0..32).map(|_| r.rand()).collect()
+        };
+        let b: Vec<i32> = {
+            let mut r = DeviceRand::for_thread(7, 1);
+            (0..32).map(|_| r.rand()).collect()
+        };
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn uniform_in_unit_interval() {
+        let mut r = DeviceRand::for_thread(123, 5);
+        let n = 50_000;
+        let mut sum = 0.0;
+        for _ in 0..n {
+            let v = r.next_f64();
+            assert!((0.0..1.0).contains(&v));
+            sum += v;
+        }
+        assert!((sum / n as f64 - 0.5).abs() < 0.01);
+    }
+
+    #[test]
+    fn rand_is_non_negative() {
+        let mut r = DeviceRand::for_thread(1, 2);
+        for _ in 0..1000 {
+            assert!(r.rand() >= 0);
+        }
+    }
+}

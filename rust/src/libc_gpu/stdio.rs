@@ -1,0 +1,98 @@
+//! Device-side `snprintf` subset: formatting that does NOT need the host.
+//!
+//! `printf`-to-a-stream still requires an RPC (the bytes must reach the
+//! host), but composing strings (`sprintf`/`snprintf`) is pure computation
+//! and runs natively, which the paper's libc extension exploits to shrink
+//! RPC payloads to a single pre-formatted string.
+
+use crate::gpu::memory::DeviceMemory;
+
+/// A formatting argument (device-side variadics).
+#[derive(Debug, Clone, Copy)]
+pub enum FmtArg {
+    I(i64),
+    U(u64),
+    F(f64),
+    /// Device pointer to a C string.
+    S(u64),
+    C(u8),
+}
+
+/// `snprintf(dst, cap, fmt, args)` → number of bytes written (excluding
+/// NUL). Supports `%d %i %u %x %f %e %g %s %c %%` with width/precision.
+pub fn snprintf(mem: &DeviceMemory, dst: u64, cap: u64, fmt: &str, args: &[FmtArg]) -> u64 {
+    let mut out = String::new();
+    let mut ai = 0usize;
+    for (lit, conv) in crate::rpc::wrappers::parse_format(fmt) {
+        out.push_str(&lit);
+        let Some((conv, width, prec)) = conv else { continue };
+        use crate::rpc::wrappers::Conv;
+        let rendered = match conv {
+            Conv::Percent => "%".to_string(),
+            _ => {
+                let a = args.get(ai).copied().unwrap_or(FmtArg::I(0));
+                ai += 1;
+                match (conv, a) {
+                    (Conv::Int, FmtArg::I(v)) => v.to_string(),
+                    (Conv::Int, FmtArg::U(v)) => (v as i64).to_string(),
+                    (Conv::Uint, FmtArg::U(v)) => v.to_string(),
+                    (Conv::Uint, FmtArg::I(v)) => (v as u64).to_string(),
+                    (Conv::Hex, FmtArg::U(v)) => format!("{v:x}"),
+                    (Conv::Hex, FmtArg::I(v)) => format!("{:x}", v as u64),
+                    (Conv::Float, FmtArg::F(v)) => match prec {
+                        Some(p) => format!("{v:.p$}"),
+                        None => format!("{v:.6}"),
+                    },
+                    (Conv::Str, FmtArg::S(p)) => mem.read_cstr(p, 4096),
+                    (Conv::Char, FmtArg::C(c)) => (c as char).to_string(),
+                    (c, a) => panic!("snprintf: conversion {c:?} with argument {a:?}"),
+                }
+            }
+        };
+        match width {
+            Some(w) if rendered.len() < w => {
+                out.push_str(&" ".repeat(w - rendered.len()));
+                out.push_str(&rendered);
+            }
+            _ => out.push_str(&rendered),
+        }
+    }
+    let bytes = out.as_bytes();
+    let n = bytes.len().min(cap.saturating_sub(1) as usize);
+    mem.write_bytes(dst, &bytes[..n]);
+    mem.write_u8(dst + n as u64, 0);
+    n as u64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::{MemConfig, GLOBAL_BASE};
+
+    #[test]
+    fn formats_into_device_memory() {
+        let m = DeviceMemory::new(MemConfig::small());
+        let s = GLOBAL_BASE + 64;
+        let name = GLOBAL_BASE + 512;
+        m.write_cstr(name, "xsbench");
+        let n = snprintf(
+            &m,
+            s,
+            128,
+            "app=%s lookups=%d t=%.3f",
+            &[FmtArg::S(name), FmtArg::I(17_000_000), FmtArg::F(1.23456)],
+        );
+        let got = m.read_cstr(s, 128);
+        assert_eq!(got, "app=xsbench lookups=17000000 t=1.235");
+        assert_eq!(n, got.len() as u64);
+    }
+
+    #[test]
+    fn truncates_at_capacity() {
+        let m = DeviceMemory::new(MemConfig::small());
+        let s = GLOBAL_BASE + 64;
+        let n = snprintf(&m, s, 6, "%d", &[FmtArg::I(1234567)]);
+        assert_eq!(n, 5);
+        assert_eq!(m.read_cstr(s, 16), "12345");
+    }
+}

@@ -1,0 +1,230 @@
+//! `<stdlib.h>` subset over device memory: `strtod`, `atoi`, `strtol`,
+//! `qsort`, `bsearch` — the functions the paper added natively "guided by
+//! benchmarks" so they do not round-trip through RPC.
+
+use crate::gpu::memory::DeviceMemory;
+
+/// `strtod`: parse a double from the C string at `s`; returns (value,
+/// end offset relative to `s`).
+pub fn strtod(mem: &DeviceMemory, s: u64) -> (f64, u64) {
+    let mut i = 0u64;
+    while (mem.read_u8(s + i) as char).is_whitespace() {
+        i += 1;
+    }
+    let start = i;
+    let mut seen_digit = false;
+    if matches!(mem.read_u8(s + i), b'-' | b'+') {
+        i += 1;
+    }
+    while mem.read_u8(s + i).is_ascii_digit() {
+        i += 1;
+        seen_digit = true;
+    }
+    if mem.read_u8(s + i) == b'.' {
+        i += 1;
+        while mem.read_u8(s + i).is_ascii_digit() {
+            i += 1;
+            seen_digit = true;
+        }
+    }
+    if seen_digit && matches!(mem.read_u8(s + i), b'e' | b'E') {
+        let mut j = i + 1;
+        if matches!(mem.read_u8(s + j), b'-' | b'+') {
+            j += 1;
+        }
+        if mem.read_u8(s + j).is_ascii_digit() {
+            while mem.read_u8(s + j).is_ascii_digit() {
+                j += 1;
+            }
+            i = j;
+        }
+    }
+    if !seen_digit {
+        return (0.0, 0);
+    }
+    let text = mem.read_vec(s + start, (i - start) as usize);
+    let v = std::str::from_utf8(&text).ok().and_then(|t| t.parse().ok()).unwrap_or(0.0);
+    (v, i)
+}
+
+pub fn atoi(mem: &DeviceMemory, s: u64) -> i64 {
+    let (v, _) = strtol(mem, s);
+    v
+}
+
+pub fn strtol(mem: &DeviceMemory, s: u64) -> (i64, u64) {
+    let mut i = 0u64;
+    while (mem.read_u8(s + i) as char).is_whitespace() {
+        i += 1;
+    }
+    let mut sign = 1i64;
+    if mem.read_u8(s + i) == b'-' {
+        sign = -1;
+        i += 1;
+    } else if mem.read_u8(s + i) == b'+' {
+        i += 1;
+    }
+    let mut v: i64 = 0;
+    let mut any = false;
+    while mem.read_u8(s + i).is_ascii_digit() {
+        v = v.wrapping_mul(10).wrapping_add((mem.read_u8(s + i) - b'0') as i64);
+        i += 1;
+        any = true;
+    }
+    if !any {
+        return (0, 0);
+    }
+    (sign * v, i)
+}
+
+/// `qsort` over an array of `n` elements of `width` bytes at `base`,
+/// ordered by `cmp` over raw element bytes. In-place binary insertion /
+/// heap hybrid (heapsort: O(n log n), no recursion — GPU-friendly).
+pub fn qsort(
+    mem: &DeviceMemory,
+    base: u64,
+    n: u64,
+    width: u64,
+    cmp: &dyn Fn(&[u8], &[u8]) -> std::cmp::Ordering,
+) {
+    if n < 2 {
+        return;
+    }
+    let get = |i: u64| mem.read_vec(base + i * width, width as usize);
+    let put = |i: u64, v: &[u8]| mem.write_bytes(base + i * width, v);
+    let sift_down = |mut root: u64, end: u64| {
+        loop {
+            let mut child = 2 * root + 1;
+            if child > end {
+                break;
+            }
+            if child + 1 <= end && cmp(&get(child), &get(child + 1)) == std::cmp::Ordering::Less {
+                child += 1;
+            }
+            if cmp(&get(root), &get(child)) == std::cmp::Ordering::Less {
+                let r = get(root);
+                let c = get(child);
+                put(root, &c);
+                put(child, &r);
+                root = child;
+            } else {
+                break;
+            }
+        }
+    };
+    let mut start = (n - 2) / 2;
+    loop {
+        sift_down(start, n - 1);
+        if start == 0 {
+            break;
+        }
+        start -= 1;
+    }
+    let mut end = n - 1;
+    while end > 0 {
+        let a = get(0);
+        let b = get(end);
+        put(0, &b);
+        put(end, &a);
+        end -= 1;
+        sift_down(0, end);
+    }
+}
+
+/// `bsearch`: index of `key` in the sorted array, or `None`.
+pub fn bsearch(
+    mem: &DeviceMemory,
+    key: &[u8],
+    base: u64,
+    n: u64,
+    width: u64,
+    cmp: &dyn Fn(&[u8], &[u8]) -> std::cmp::Ordering,
+) -> Option<u64> {
+    let mut lo = 0u64;
+    let mut hi = n;
+    while lo < hi {
+        let mid = lo + (hi - lo) / 2;
+        let elem = mem.read_vec(base + mid * width, width as usize);
+        match cmp(key, &elem) {
+            std::cmp::Ordering::Less => hi = mid,
+            std::cmp::Ordering::Greater => lo = mid + 1,
+            std::cmp::Ordering::Equal => return Some(mid),
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::{MemConfig, GLOBAL_BASE};
+
+    fn mem() -> DeviceMemory {
+        DeviceMemory::new(MemConfig::small())
+    }
+
+    #[test]
+    fn strtod_cases() {
+        let m = mem();
+        let s = GLOBAL_BASE + 64;
+        for (text, want, end) in [
+            ("3.25", 3.25, 4),
+            ("  -1.5e3xyz", -1500.0, 8),
+            ("42", 42.0, 2),
+            ("+.5", 0.5, 3),
+            ("nope", 0.0, 0),
+            ("1e", 1.0, 1),
+        ] {
+            m.write_cstr(s, text);
+            let (v, e) = strtod(&m, s);
+            assert_eq!(v, want, "{text}");
+            assert_eq!(e, end, "{text}");
+        }
+    }
+
+    #[test]
+    fn atoi_strtol() {
+        let m = mem();
+        let s = GLOBAL_BASE + 64;
+        m.write_cstr(s, "  -123abc");
+        assert_eq!(atoi(&m, s), -123);
+        m.write_cstr(s, "99");
+        assert_eq!(strtol(&m, s), (99, 2));
+        m.write_cstr(s, "x");
+        assert_eq!(strtol(&m, s), (0, 0));
+    }
+
+    #[test]
+    fn qsort_sorts_i64() {
+        let m = mem();
+        let base = GLOBAL_BASE + 1024;
+        let vals: Vec<i64> = vec![5, -2, 9, 0, 3, 3, -7, 100, 1];
+        for (i, v) in vals.iter().enumerate() {
+            m.write_i64(base + i as u64 * 8, *v);
+        }
+        let cmp = |a: &[u8], b: &[u8]| {
+            i64::from_le_bytes(a.try_into().unwrap()).cmp(&i64::from_le_bytes(b.try_into().unwrap()))
+        };
+        qsort(&m, base, vals.len() as u64, 8, &cmp);
+        let mut sorted = vals.clone();
+        sorted.sort_unstable();
+        let got: Vec<i64> = (0..vals.len()).map(|i| m.read_i64(base + i as u64 * 8)).collect();
+        assert_eq!(got, sorted);
+    }
+
+    #[test]
+    fn bsearch_finds_and_misses() {
+        let m = mem();
+        let base = GLOBAL_BASE + 4096;
+        for (i, v) in [2i64, 4, 8, 16, 32].iter().enumerate() {
+            m.write_i64(base + i as u64 * 8, *v);
+        }
+        let cmp = |a: &[u8], b: &[u8]| {
+            i64::from_le_bytes(a.try_into().unwrap()).cmp(&i64::from_le_bytes(b.try_into().unwrap()))
+        };
+        assert_eq!(bsearch(&m, &8i64.to_le_bytes(), base, 5, 8, &cmp), Some(2));
+        assert_eq!(bsearch(&m, &2i64.to_le_bytes(), base, 5, 8, &cmp), Some(0));
+        assert_eq!(bsearch(&m, &32i64.to_le_bytes(), base, 5, 8, &cmp), Some(4));
+        assert_eq!(bsearch(&m, &5i64.to_le_bytes(), base, 5, 8, &cmp), None);
+    }
+}

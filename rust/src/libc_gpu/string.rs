@@ -1,0 +1,172 @@
+//! `<string.h>` subset over device memory.
+
+use crate::gpu::memory::DeviceMemory;
+
+pub fn strlen(mem: &DeviceMemory, s: u64) -> u64 {
+    let mut n = 0;
+    while mem.read_u8(s + n) != 0 {
+        n += 1;
+    }
+    n
+}
+
+pub fn strcpy(mem: &DeviceMemory, dst: u64, src: u64) -> u64 {
+    let mut i = 0;
+    loop {
+        let b = mem.read_u8(src + i);
+        mem.write_u8(dst + i, b);
+        if b == 0 {
+            break;
+        }
+        i += 1;
+    }
+    dst
+}
+
+pub fn strncpy(mem: &DeviceMemory, dst: u64, src: u64, n: u64) -> u64 {
+    let mut i = 0;
+    let mut terminated = false;
+    while i < n {
+        let b = if terminated { 0 } else { mem.read_u8(src + i) };
+        if b == 0 {
+            terminated = true;
+        }
+        mem.write_u8(dst + i, b);
+        i += 1;
+    }
+    dst
+}
+
+pub fn strcmp(mem: &DeviceMemory, a: u64, b: u64) -> i32 {
+    let mut i = 0;
+    loop {
+        let ca = mem.read_u8(a + i);
+        let cb = mem.read_u8(b + i);
+        if ca != cb {
+            return ca as i32 - cb as i32;
+        }
+        if ca == 0 {
+            return 0;
+        }
+        i += 1;
+    }
+}
+
+pub fn strchr(mem: &DeviceMemory, s: u64, c: u8) -> u64 {
+    let mut i = 0;
+    loop {
+        let b = mem.read_u8(s + i);
+        if b == c {
+            return s + i;
+        }
+        if b == 0 {
+            return 0;
+        }
+        i += 1;
+    }
+}
+
+pub fn strcat(mem: &DeviceMemory, dst: u64, src: u64) -> u64 {
+    let end = dst + strlen(mem, dst);
+    strcpy(mem, end, src);
+    dst
+}
+
+pub fn memcpy(mem: &DeviceMemory, dst: u64, src: u64, n: u64) -> u64 {
+    // Chunked copy through a bounce buffer (no aliasing hazards in the
+    // word-atomic store).
+    let mut off = 0u64;
+    let mut buf = [0u8; 256];
+    while off < n {
+        let k = (n - off).min(256) as usize;
+        mem.read_bytes(src + off, &mut buf[..k]);
+        mem.write_bytes(dst + off, &buf[..k]);
+        off += k as u64;
+    }
+    dst
+}
+
+pub fn memset(mem: &DeviceMemory, dst: u64, byte: u8, n: u64) -> u64 {
+    let buf = [byte; 256];
+    let mut off = 0u64;
+    while off < n {
+        let k = (n - off).min(256) as usize;
+        mem.write_bytes(dst + off, &buf[..k]);
+        off += k as u64;
+    }
+    dst
+}
+
+pub fn memcmp(mem: &DeviceMemory, a: u64, b: u64, n: u64) -> i32 {
+    for i in 0..n {
+        let ca = mem.read_u8(a + i);
+        let cb = mem.read_u8(b + i);
+        if ca != cb {
+            return ca as i32 - cb as i32;
+        }
+    }
+    0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::{MemConfig, GLOBAL_BASE};
+
+    fn mem() -> DeviceMemory {
+        DeviceMemory::new(MemConfig::small())
+    }
+
+    #[test]
+    fn strlen_strcpy_strcmp() {
+        let m = mem();
+        let a = GLOBAL_BASE + 64;
+        let b = GLOBAL_BASE + 256;
+        m.write_cstr(a, "gpu first");
+        assert_eq!(strlen(&m, a), 9);
+        strcpy(&m, b, a);
+        assert_eq!(m.read_cstr(b, 32), "gpu first");
+        assert_eq!(strcmp(&m, a, b), 0);
+        m.write_cstr(b, "gpu second");
+        assert!(strcmp(&m, a, b) < 0);
+        assert!(strcmp(&m, b, a) > 0);
+    }
+
+    #[test]
+    fn strncpy_pads_with_nul() {
+        let m = mem();
+        let a = GLOBAL_BASE + 64;
+        let b = GLOBAL_BASE + 256;
+        m.write_cstr(a, "ab");
+        m.write_bytes(b, &[0xFF; 8]);
+        strncpy(&m, b, a, 6);
+        assert_eq!(m.read_vec(b, 8), vec![b'a', b'b', 0, 0, 0, 0, 0xFF, 0xFF]);
+    }
+
+    #[test]
+    fn strchr_and_strcat() {
+        let m = mem();
+        let a = GLOBAL_BASE + 64;
+        m.write_cstr(a, "key=value");
+        assert_eq!(strchr(&m, a, b'='), a + 3);
+        assert_eq!(strchr(&m, a, b'?'), 0);
+        let b = GLOBAL_BASE + 256;
+        m.write_cstr(b, "!");
+        strcat(&m, a, b);
+        assert_eq!(m.read_cstr(a, 32), "key=value!");
+    }
+
+    #[test]
+    fn memcpy_memset_memcmp() {
+        let m = mem();
+        let a = GLOBAL_BASE + 1000; // unaligned
+        let b = GLOBAL_BASE + 5000;
+        let data: Vec<u8> = (0..600u32).map(|i| (i % 251) as u8).collect();
+        m.write_bytes(a, &data);
+        memcpy(&m, b, a, 600);
+        assert_eq!(memcmp(&m, a, b, 600), 0);
+        memset(&m, b, 7, 600);
+        assert_eq!(m.read_u8(b + 599), 7);
+        assert!(memcmp(&m, a, b, 600) != 0);
+    }
+}

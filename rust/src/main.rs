@@ -1,0 +1,142 @@
+//! `gpu-first` CLI — compile and run legacy (IR) applications on the
+//! simulated GPU, run the evaluation apps, and inspect pass output.
+//!
+//! ```text
+//! gpu-first compile <prog.ir> [--no-rpcgen] [--no-multiteam]
+//! gpu-first run     <prog.ir> [--teams N] [--threads N] [--allocator K]
+//! gpu-first explain <prog.ir>          # RPC argument classification
+//! gpu-first apps                        # list evaluation apps
+//! gpu-first artifacts [--dir artifacts] # load + smoke the AOT artifacts
+//! ```
+
+use gpu_first::coordinator::{Config, GpuFirstSession};
+use gpu_first::ir::parser::parse_module;
+use gpu_first::ir::printer::print_module;
+use gpu_first::transform::CompileOptions;
+use gpu_first::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(&["compile", "run", "explain", "apps", "artifacts"]);
+    let result = match args.subcommand.as_deref() {
+        Some("compile") => cmd_compile(&args),
+        Some("run") => cmd_run(&args),
+        Some("explain") => cmd_explain(&args),
+        Some("apps") => cmd_apps(),
+        Some("artifacts") => cmd_artifacts(&args),
+        _ => {
+            eprintln!(
+                "usage: gpu-first <compile|run|explain|apps|artifacts> [...]\n\
+                 see README.md"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}
+
+fn read_module(args: &Args) -> Result<gpu_first::ir::Module, String> {
+    let path = args.positional.first().ok_or("expected an input .ir file")?;
+    let src = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    parse_module(&src)
+}
+
+fn opts(args: &Args) -> CompileOptions {
+    CompileOptions {
+        rpcgen: !args.flag("no-rpcgen"),
+        multiteam: !args.flag("no-multiteam"),
+    }
+}
+
+fn cmd_compile(args: &Args) -> Result<(), String> {
+    let mut module = read_module(args)?;
+    let mut session = GpuFirstSession::start(Config::from_args(args)?);
+    session.compile(&mut module, opts(args))?;
+    let report = session.report.as_ref().unwrap();
+    println!("{}", print_module(&module));
+    eprintln!(";; --- rpcgen: {} call sites rewritten ---", report.rpc.rewritten.len());
+    for (f, callee, mangled, _) in &report.rpc.rewritten {
+        eprintln!(";;   {f}: {callee} -> {mangled}");
+    }
+    eprintln!(";; --- multiteam: {} regions expanded ---", report.multiteam.regions.len());
+    for r in &report.multiteam.regions {
+        eprintln!(
+            ";;   {} -> {} (captures: {:?}, barrier: {})",
+            r.in_function, r.region, r.captures, r.has_barrier
+        );
+    }
+    session.stop();
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), String> {
+    let module = read_module(args)?;
+    let cfg = Config::from_args(args)?;
+    let verbose = cfg.verbose;
+    let mut session = GpuFirstSession::start(cfg);
+    let (ret, metrics) = session.execute(module, opts(args), &[])?;
+    // Host-side streams reach the real terminal.
+    print!("{}", session.host.stdout_string());
+    eprint!("{}", session.host.stderr_string());
+    if verbose {
+        eprintln!(";; {}", metrics.summary());
+    }
+    session.stop();
+    std::process::exit(ret as i32);
+}
+
+fn cmd_explain(args: &Args) -> Result<(), String> {
+    let mut module = read_module(args)?;
+    let mut session = GpuFirstSession::start(Config::from_args(args)?);
+    session.compile(&mut module, CompileOptions { rpcgen: true, multiteam: false })?;
+    let report = session.report.as_ref().unwrap();
+    println!("RPC argument classification (paper §3.2):");
+    for (f, callee, mangled, summary) in &report.rpc.rewritten {
+        println!("  in @{f}: call {callee} -> landing pad {mangled}");
+        for (i, s) in summary.iter().enumerate() {
+            println!("    arg {i}: {s}");
+        }
+    }
+    if !report.rpc.unsupported.is_empty() {
+        println!("  unsupported library callees: {:?}", report.rpc.unsupported);
+    }
+    session.stop();
+    Ok(())
+}
+
+fn cmd_apps() -> Result<(), String> {
+    println!("evaluation apps (run via `cargo bench` harnesses; see DESIGN.md §4):");
+    for (name, fig) in [
+        ("xsbench", "Fig. 8a"),
+        ("rsbench", "Fig. 8b"),
+        ("interleaved", "Fig. 9a"),
+        ("hypterm", "Fig. 9b"),
+        ("amgmk", "Fig. 9c"),
+        ("pagerank", "Fig. 9c"),
+        ("botsalgn", "Fig. 10a"),
+        ("botsspar", "Fig. 10b"),
+        ("smithwa", "Fig. 10c"),
+    ] {
+        println!("  {name:<12} {fig}");
+    }
+    Ok(())
+}
+
+fn cmd_artifacts(args: &Args) -> Result<(), String> {
+    let dir = std::path::PathBuf::from(args.get_or("dir", "artifacts"));
+    let mut rt = gpu_first::runtime::Runtime::cpu().map_err(|e| e.to_string())?;
+    let manifest = rt.load_manifest_dir(&dir).map_err(|e| e.to_string())?;
+    println!("platform: {}", rt.platform());
+    for e in &manifest.entries {
+        println!(
+            "  {:<24} {} inputs, {} outputs ({} B in)",
+            e.name,
+            e.inputs.len(),
+            e.outputs.len(),
+            e.inputs.iter().map(|t| t.bytes()).sum::<usize>()
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,68 @@
+//! AMD EPYC 7532 host model — the paper's CPU (§5: 32 cores, SMT off,
+//! 256 GB DDR4).
+
+use super::{roofline_ns, ModeledTime};
+use crate::gpu::stats::LaunchStats;
+
+pub const CORES: usize = 32;
+/// 2.4 GHz × 16 DP flops/cycle (2× AVX2 FMA) per core.
+pub const PEAK_F64_FLOPS_PER_CORE: f64 = 38.4e9;
+pub const PEAK_F32_FLOPS_PER_CORE: f64 = 76.8e9;
+pub const PEAK_INT_OPS_PER_CORE: f64 = 76.8e9;
+/// 8-channel DDR4-3200.
+pub const DRAM_BW: f64 = 204.8e9;
+/// CPUs prefetch well; strided costs little extra.
+pub const STRIDED_EFF: f64 = 0.5;
+/// Random dependent 8B gathers (pointer-chase-like): ~20 GB/s across the
+/// socket.
+pub const RANDOM_EFF: f64 = 0.1;
+/// OpenMP barrier on 32 cores.
+pub const BARRIER_NS: f64 = 2_500.0;
+pub const ATOMIC_NS: f64 = 20.0;
+/// `malloc`/`free` on the host (glibc, uncontended arena).
+pub const HOST_ALLOC_OP_NS: f64 = 60.0;
+
+/// Modeled CPU time with `threads` OpenMP threads.
+pub fn cpu_time(stats: &LaunchStats, threads: usize) -> ModeledTime {
+    let t = threads.clamp(1, CORES) as f64;
+    let (compute_ns, memory_ns) = roofline_ns(
+        stats,
+        PEAK_F64_FLOPS_PER_CORE * t,
+        PEAK_F32_FLOPS_PER_CORE * t,
+        PEAK_INT_OPS_PER_CORE * t,
+        // Memory bandwidth saturates well below 32 cores.
+        DRAM_BW * (t / CORES as f64).sqrt().min(1.0),
+        STRIDED_EFF,
+        RANDOM_EFF,
+    );
+    let sync_ns = (stats.barriers_team + stats.barriers_global) as f64 * BARRIER_NS
+        + stats.atomics_global as f64 * ATOMIC_NS
+        + (stats.allocs + stats.frees) as f64 * HOST_ALLOC_OP_NS / t;
+    ModeledTime { compute_ns, memory_ns, sync_ns, overhead_ns: 0.0, charged_ns: 0.0 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scales_with_threads_until_bw_bound() {
+        let mut s = LaunchStats::default();
+        s.flops_f64 = 10_000_000_000;
+        let t1 = cpu_time(&s, 1).total_ns();
+        let t32 = cpu_time(&s, 32).total_ns();
+        assert!(t1 / t32 > 20.0, "compute-bound should scale: {}", t1 / t32);
+
+        let mut m = LaunchStats::default();
+        m.bytes_coalesced = 10_000_000_000;
+        let m8 = cpu_time(&m, 8).total_ns();
+        let m32 = cpu_time(&m, 32).total_ns();
+        assert!(m8 / m32 < 3.0, "bw-bound should not scale linearly");
+    }
+
+    #[test]
+    fn thread_count_clamped() {
+        let s = LaunchStats { flops_f64: 1_000_000, ..Default::default() };
+        assert_eq!(cpu_time(&s, 64).total_ns(), cpu_time(&s, 32).total_ns());
+    }
+}

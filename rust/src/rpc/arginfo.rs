@@ -1,0 +1,161 @@
+//! `RPCArgInfo` — the call-site argument description (paper Fig. 3c).
+//!
+//! Three kinds of arguments (paper §3.2):
+//! 1. **Value** arguments: integers, floats, and pointers to opaque types
+//!    (e.g. `FILE*`) that are assumed to already be host values and are
+//!    passed through untranslated.
+//! 2. **Reference** arguments to *statically identified objects*: the pass
+//!    knows the underlying object, its size, and the pointer's offset into
+//!    it, plus a read/write mode that controls migration direction.
+//! 3. Reference arguments resolved by **dynamic lookup** (`_FindObj`)
+//!    against the allocator's tracking records; if the lookup fails the
+//!    pointer degrades to a value argument.
+
+/// Read/write behaviour of the callee w.r.t. the underlying object,
+/// controlling which directions the object is copied.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArgMode {
+    Read,
+    Write,
+    ReadWrite,
+}
+
+impl ArgMode {
+    pub fn copies_to_host(self) -> bool {
+        matches!(self, ArgMode::Read | ArgMode::ReadWrite)
+    }
+
+    pub fn copies_back(self) -> bool {
+        matches!(self, ArgMode::Write | ArgMode::ReadWrite)
+    }
+
+    pub fn encode(self) -> u64 {
+        match self {
+            ArgMode::Read => 0,
+            ArgMode::Write => 1,
+            ArgMode::ReadWrite => 2,
+        }
+    }
+
+    pub fn decode(v: u64) -> ArgMode {
+        match v {
+            0 => ArgMode::Read,
+            1 => ArgMode::Write,
+            2 => ArgMode::ReadWrite,
+            _ => panic!("bad ArgMode encoding {v}"),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RpcArg {
+    /// Opaque value, treated as a byte sequence.
+    Val(u64),
+    /// Pointer into an underlying device object that must be migrated.
+    Ref {
+        /// The pointer value at the call site (device address).
+        ptr: u64,
+        mode: ArgMode,
+        /// Size of the *underlying object* (not the pointed-to element).
+        obj_size: u64,
+        /// Offset of `ptr` into the object: object base = `ptr - offset`.
+        offset: u64,
+    },
+}
+
+impl RpcArg {
+    pub fn obj_base(&self) -> Option<u64> {
+        match self {
+            RpcArg::Val(_) => None,
+            RpcArg::Ref { ptr, offset, .. } => Some(ptr - offset),
+        }
+    }
+}
+
+/// The per-call-site argument record (`RPCArgInfo` in Fig. 3c).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct RpcArgInfo {
+    pub args: Vec<RpcArg>,
+}
+
+impl RpcArgInfo {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn with_capacity(n: usize) -> Self {
+        Self { args: Vec::with_capacity(n) }
+    }
+
+    /// `addValArg` (Fig. 3c line 29).
+    pub fn add_val(&mut self, v: u64) -> &mut Self {
+        self.args.push(RpcArg::Val(v));
+        self
+    }
+
+    /// `addRefArg` (Fig. 3c lines 30-39).
+    pub fn add_ref(&mut self, ptr: u64, mode: ArgMode, obj_size: u64, offset: u64) -> &mut Self {
+        assert!(offset <= obj_size, "pointer offset {offset} outside object of size {obj_size}");
+        self.args.push(RpcArg::Ref { ptr, mode, obj_size, offset });
+        self
+    }
+
+    /// Total bytes that must be migrated to the host (deduplicated by
+    /// object base, since two arguments may point into the same object).
+    pub fn bytes_to_host(&self) -> u64 {
+        let mut seen: Vec<(u64, u64)> = Vec::new();
+        for a in &self.args {
+            if let RpcArg::Ref { mode, obj_size, .. } = a {
+                if mode.copies_to_host() {
+                    let base = a.obj_base().unwrap();
+                    if !seen.iter().any(|&(b, _)| b == base) {
+                        seen.push((base, *obj_size));
+                    }
+                }
+            }
+        }
+        seen.iter().map(|&(_, s)| s).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mode_directions() {
+        assert!(ArgMode::Read.copies_to_host() && !ArgMode::Read.copies_back());
+        assert!(!ArgMode::Write.copies_to_host() && ArgMode::Write.copies_back());
+        assert!(ArgMode::ReadWrite.copies_to_host() && ArgMode::ReadWrite.copies_back());
+    }
+
+    #[test]
+    fn mode_encoding_round_trips() {
+        for m in [ArgMode::Read, ArgMode::Write, ArgMode::ReadWrite] {
+            assert_eq!(ArgMode::decode(m.encode()), m);
+        }
+    }
+
+    #[test]
+    fn obj_base_from_interior_pointer() {
+        let a = RpcArg::Ref { ptr: 0x1010, mode: ArgMode::Read, obj_size: 0x40, offset: 0x10 };
+        assert_eq!(a.obj_base(), Some(0x1000));
+        assert_eq!(RpcArg::Val(7).obj_base(), None);
+    }
+
+    #[test]
+    fn bytes_to_host_dedups_same_object() {
+        // Fig. 3a: &s.f and &s.b point into the same struct s.
+        let mut ai = RpcArgInfo::new();
+        ai.add_ref(0x1004, ArgMode::ReadWrite, 12, 4); // &s.b
+        ai.add_ref(0x1008, ArgMode::ReadWrite, 12, 8); // &s.f
+        ai.add_ref(0x2000, ArgMode::Write, 64, 0); // write-only: no copy-in
+        assert_eq!(ai.bytes_to_host(), 12);
+    }
+
+    #[test]
+    #[should_panic(expected = "outside object")]
+    fn offset_validated() {
+        RpcArgInfo::new().add_ref(0x1000, ArgMode::Read, 8, 16);
+    }
+}

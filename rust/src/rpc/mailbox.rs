@@ -1,0 +1,201 @@
+//! The managed-memory RPC channel (paper §2.2: the runtime "communicates
+//! with the GPU threads via 'shared', in our case, managed, memory").
+//!
+//! One slot (the paper's prototype features single-threaded RPC handling,
+//! §4.4) at the base of the managed segment:
+//!
+//! ```text
+//! off   field
+//! 0     STATUS   0 = idle, 1 = request ready, 2 = done, 3 = shutdown
+//! 8     CALLEE   enum value identifying the landing pad (Fig. 3c line 18)
+//! 16    NARGS
+//! 24    RET      i64 return value
+//! 32    FLAGS    bit 0: wrapper failed (unknown callee / bad frame)
+//! 40    ARGS     MAX_ARGS × 40 B: kind, value, mode, size, offset
+//! 1024  DATA     migrated underlying objects (client packs, server reads)
+//! ```
+
+use crate::gpu::memory::{DeviceMemory, MANAGED_BASE};
+
+pub const SLOT_BASE: u64 = MANAGED_BASE;
+pub const MAX_ARGS: usize = 16;
+pub const DATA_OFF: u64 = 1024;
+pub const DATA_CAP: u64 = 1 << 20;
+/// Managed bytes reserved for the mailbox (see `Device::new`).
+pub const MAILBOX_RESERVED: u64 = DATA_OFF + DATA_CAP;
+
+pub const ST_IDLE: u64 = 0;
+pub const ST_REQUEST: u64 = 1;
+pub const ST_DONE: u64 = 2;
+pub const ST_SHUTDOWN: u64 = 3;
+
+const OFF_STATUS: u64 = 0;
+const OFF_CALLEE: u64 = 8;
+const OFF_NARGS: u64 = 16;
+const OFF_RET: u64 = 24;
+const OFF_FLAGS: u64 = 32;
+const OFF_ARGS: u64 = 40;
+const ARG_STRIDE: u64 = 40;
+
+pub const KIND_VAL: u64 = 0;
+pub const KIND_REF: u64 = 1;
+
+/// Raw typed view over the slot; both client (device thread) and server
+/// (host thread) construct one over the same [`DeviceMemory`].
+pub struct Mailbox<'a> {
+    pub mem: &'a DeviceMemory,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WireArg {
+    pub kind: u64,
+    /// KIND_VAL: the opaque value. KIND_REF: offset of the *object base*
+    /// within the DATA region.
+    pub value: u64,
+    pub mode: u64,
+    pub size: u64,
+    pub offset: u64,
+}
+
+impl<'a> Mailbox<'a> {
+    pub fn new(mem: &'a DeviceMemory) -> Self {
+        Self { mem }
+    }
+
+    pub fn status(&self) -> u64 {
+        self.mem.atomic_load_u64(SLOT_BASE + OFF_STATUS)
+    }
+
+    pub fn set_status(&self, st: u64) {
+        self.mem.atomic_store_u64(SLOT_BASE + OFF_STATUS, st);
+    }
+
+    /// Doorbell with CAS so concurrent device threads serialize on the
+    /// single slot (FIFO not guaranteed, matching the prototype).
+    pub fn try_acquire(&self) -> bool {
+        self.mem.atomic_cas_u64(SLOT_BASE + OFF_STATUS, ST_IDLE, ST_IDLE).is_ok()
+    }
+
+    pub fn cas_status(&self, from: u64, to: u64) -> bool {
+        self.mem.atomic_cas_u64(SLOT_BASE + OFF_STATUS, from, to).is_ok()
+    }
+
+    pub fn set_callee(&self, id: u64) {
+        self.mem.write_u64(SLOT_BASE + OFF_CALLEE, id);
+    }
+
+    pub fn callee(&self) -> u64 {
+        self.mem.read_u64(SLOT_BASE + OFF_CALLEE)
+    }
+
+    pub fn set_nargs(&self, n: u64) {
+        assert!(n as usize <= MAX_ARGS);
+        self.mem.write_u64(SLOT_BASE + OFF_NARGS, n);
+    }
+
+    pub fn nargs(&self) -> u64 {
+        self.mem.read_u64(SLOT_BASE + OFF_NARGS)
+    }
+
+    pub fn set_ret(&self, v: i64) {
+        self.mem.write_i64(SLOT_BASE + OFF_RET, v);
+    }
+
+    pub fn ret(&self) -> i64 {
+        self.mem.read_i64(SLOT_BASE + OFF_RET)
+    }
+
+    pub fn set_flags(&self, v: u64) {
+        self.mem.write_u64(SLOT_BASE + OFF_FLAGS, v);
+    }
+
+    pub fn flags(&self) -> u64 {
+        self.mem.read_u64(SLOT_BASE + OFF_FLAGS)
+    }
+
+    pub fn write_arg(&self, i: usize, a: WireArg) {
+        assert!(i < MAX_ARGS);
+        let base = SLOT_BASE + OFF_ARGS + i as u64 * ARG_STRIDE;
+        self.mem.write_u64(base, a.kind);
+        self.mem.write_u64(base + 8, a.value);
+        self.mem.write_u64(base + 16, a.mode);
+        self.mem.write_u64(base + 24, a.size);
+        self.mem.write_u64(base + 32, a.offset);
+    }
+
+    pub fn read_arg(&self, i: usize) -> WireArg {
+        assert!(i < MAX_ARGS);
+        let base = SLOT_BASE + OFF_ARGS + i as u64 * ARG_STRIDE;
+        WireArg {
+            kind: self.mem.read_u64(base),
+            value: self.mem.read_u64(base + 8),
+            mode: self.mem.read_u64(base + 16),
+            size: self.mem.read_u64(base + 24),
+            offset: self.mem.read_u64(base + 32),
+        }
+    }
+
+    pub fn data_addr(&self, off: u64) -> u64 {
+        assert!(off < DATA_CAP, "mailbox data offset {off} out of range");
+        SLOT_BASE + DATA_OFF + off
+    }
+
+    pub fn write_data(&self, off: u64, bytes: &[u8]) {
+        assert!(off + bytes.len() as u64 <= DATA_CAP, "mailbox data overflow");
+        self.mem.write_bytes(self.data_addr(off), bytes);
+    }
+
+    pub fn read_data(&self, off: u64, len: usize) -> Vec<u8> {
+        assert!(off + len as u64 <= DATA_CAP, "mailbox data overflow");
+        self.mem.read_vec(self.data_addr(off), len)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::MemConfig;
+
+    #[test]
+    fn wire_arg_round_trip() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let mb = Mailbox::new(&mem);
+        let a = WireArg { kind: KIND_REF, value: 64, mode: 2, size: 128, offset: 8 };
+        mb.write_arg(3, a);
+        assert_eq!(mb.read_arg(3), a);
+    }
+
+    #[test]
+    fn header_fields() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let mb = Mailbox::new(&mem);
+        mb.set_callee(42);
+        mb.set_nargs(5);
+        mb.set_ret(-3);
+        mb.set_flags(1);
+        assert_eq!(mb.callee(), 42);
+        assert_eq!(mb.nargs(), 5);
+        assert_eq!(mb.ret(), -3);
+        assert_eq!(mb.flags(), 1);
+    }
+
+    #[test]
+    fn status_cas_protocol() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let mb = Mailbox::new(&mem);
+        assert_eq!(mb.status(), ST_IDLE);
+        assert!(mb.cas_status(ST_IDLE, ST_REQUEST));
+        assert!(!mb.cas_status(ST_IDLE, ST_REQUEST), "slot is busy");
+        mb.set_status(ST_DONE);
+        assert_eq!(mb.status(), ST_DONE);
+    }
+
+    #[test]
+    fn data_region_round_trip() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let mb = Mailbox::new(&mem);
+        let payload: Vec<u8> = (0..200u32).map(|x| (x % 251) as u8).collect();
+        mb.write_data(96, &payload);
+        assert_eq!(mb.read_data(96, payload.len()), payload);
+    }
+}

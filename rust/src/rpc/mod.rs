@@ -1,0 +1,30 @@
+//! Host remote procedure calls (paper §2.3, §3.2, Fig. 3).
+//!
+//! The GPU (client) sends requests to the host (server) over a synchronous,
+//! stateless protocol in **managed memory** and busy-waits for completion.
+//! The compile-time half (argument classification, landing-pad generation)
+//! lives in [`crate::transform::rpcgen`]; this module is the runtime half:
+//!
+//! * [`arginfo`] — the `RPCArgInfo` object call sites fill in: value
+//!   arguments and reference arguments with (mode, object size, offset).
+//! * [`mailbox`] — the managed-memory channel layout and raw access.
+//! * [`client`] — the device-side call-site-independent stub
+//!   (`issueBlockingCall`): packs arguments, migrates underlying objects
+//!   into the mailbox data region, rings the doorbell, spins, copies
+//!   writable objects back. Records the Fig. 7 stage breakdown.
+//! * [`server`] — the single-threaded host RPC server (paper §4.4) that
+//!   unpacks the frame and invokes the registered landing-pad wrapper.
+//! * [`wrappers`] — the host landing pads for the libc calls the
+//!   evaluation needs (`fprintf`, `fscanf`, `fopen`, `fread`, ...), closed
+//!   over an in-memory [`wrappers::HostEnv`].
+
+pub mod arginfo;
+pub mod mailbox;
+pub mod client;
+pub mod server;
+pub mod wrappers;
+
+pub use arginfo::{ArgMode, RpcArg, RpcArgInfo};
+pub use client::{RpcBreakdown, RpcClient};
+pub use server::{RpcFrame, RpcServer, WrapperFn, WrapperRegistry};
+pub use wrappers::HostEnv;

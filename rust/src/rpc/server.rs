@@ -1,0 +1,388 @@
+//! The host-side RPC server (paper Fig. 1 right, §4.4: single-threaded).
+//!
+//! A host thread polls the mailbox; on a request it unpacks the frame
+//! (copying staged objects out of managed memory into host buffers —
+//! exactly what "the host wrapper ... unpacks the arguments passed from the
+//! device and performs the original call on the host" describes), invokes
+//! the registered landing pad, writes mutated buffers back into the data
+//! region, stores the return value and acknowledges completion.
+
+use super::arginfo::ArgMode;
+use super::mailbox::{Mailbox, KIND_REF, ST_DONE, ST_REQUEST, ST_SHUTDOWN};
+use super::wrappers::HostEnv;
+use crate::gpu::memory::DeviceMemory;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// A host argument as seen by a landing-pad wrapper.
+#[derive(Debug, Clone)]
+pub enum HostArg {
+    Val(u64),
+    /// A migrated underlying object plus the argument's offset into it.
+    Buf { bytes: Vec<u8>, offset: usize, mode: ArgMode },
+}
+
+/// The unpacked call frame handed to a wrapper (Fig. 3b's `RPCInfo` view).
+#[derive(Debug, Default)]
+pub struct RpcFrame {
+    pub args: Vec<HostArg>,
+}
+
+impl RpcFrame {
+    pub fn nargs(&self) -> usize {
+        self.args.len()
+    }
+
+    /// Opaque value argument (Fig. 3b: `(FILE*)RI.getArg(0)`).
+    pub fn val(&self, i: usize) -> u64 {
+        match &self.args[i] {
+            HostArg::Val(v) => *v,
+            a => panic!("arg {i} is not a value: {a:?}"),
+        }
+    }
+
+    /// The argument pointer's view of its object (from its offset onward).
+    pub fn bytes(&self, i: usize) -> &[u8] {
+        match &self.args[i] {
+            HostArg::Buf { bytes, offset, .. } => &bytes[*offset..],
+            a => panic!("arg {i} is not a buffer: {a:?}"),
+        }
+    }
+
+    pub fn bytes_mut(&mut self, i: usize) -> &mut [u8] {
+        match &mut self.args[i] {
+            HostArg::Buf { bytes, offset, .. } => &mut bytes[*offset..],
+            a => panic!("arg {i} is not a buffer: {a:?}"),
+        }
+    }
+
+    /// NUL-terminated string at the argument pointer.
+    pub fn cstr(&self, i: usize) -> String {
+        let b = self.bytes(i);
+        let end = b.iter().position(|&c| c == 0).unwrap_or(b.len());
+        String::from_utf8_lossy(&b[..end]).into_owned()
+    }
+
+    pub fn write_i32(&mut self, i: usize, v: i32) {
+        self.bytes_mut(i)[..4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn write_f32(&mut self, i: usize, v: f32) {
+        self.bytes_mut(i)[..4].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn write_f64(&mut self, i: usize, v: f64) {
+        self.bytes_mut(i)[..8].copy_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn read_i32(&self, i: usize) -> i32 {
+        i32::from_le_bytes(self.bytes(i)[..4].try_into().unwrap())
+    }
+}
+
+/// A landing-pad wrapper: the host function generated per
+/// (callee × argument-type signature) — `__fscanf_ip_fp_ip` in Fig. 3b.
+pub type WrapperFn = Box<dyn Fn(&mut RpcFrame, &HostEnv) -> i64 + Send + Sync>;
+
+/// Registry mapping compile-time callee enum values to wrappers.
+#[derive(Default)]
+pub struct WrapperRegistry {
+    by_name: Mutex<HashMap<String, u64>>,
+    wrappers: Mutex<Vec<Arc<WrapperFn>>>,
+}
+
+impl WrapperRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a landing pad; returns its callee enum value. Registering
+    /// the same mangled name twice returns the existing id (different call
+    /// sites with agreeing signatures share one landing pad).
+    pub fn register(&self, mangled: &str, f: WrapperFn) -> u64 {
+        let mut names = self.by_name.lock().unwrap();
+        if let Some(&id) = names.get(mangled) {
+            return id;
+        }
+        let mut ws = self.wrappers.lock().unwrap();
+        let id = ws.len() as u64;
+        ws.push(Arc::new(f));
+        names.insert(mangled.to_string(), id);
+        id
+    }
+
+    pub fn id_of(&self, mangled: &str) -> Option<u64> {
+        self.by_name.lock().unwrap().get(mangled).copied()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.by_name.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    fn get(&self, id: u64) -> Option<Arc<WrapperFn>> {
+        self.wrappers.lock().unwrap().get(id as usize).cloned()
+    }
+
+    pub fn len(&self) -> usize {
+        self.wrappers.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Handle to the running server thread.
+pub struct RpcServer {
+    shutdown: Arc<AtomicBool>,
+    handle: Option<std::thread::JoinHandle<()>>,
+    pub served: Arc<AtomicU64>,
+}
+
+impl RpcServer {
+    /// Spawn the single server thread over `mem`, dispatching to `registry`
+    /// with `env` as the host state.
+    pub fn start(mem: Arc<DeviceMemory>, registry: Arc<WrapperRegistry>, env: Arc<HostEnv>) -> Self {
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let served = Arc::new(AtomicU64::new(0));
+        let sd = Arc::clone(&shutdown);
+        let sv = Arc::clone(&served);
+        let handle = std::thread::Builder::new()
+            .name("rpc-server".into())
+            .spawn(move || {
+                let mb = Mailbox::new(&mem);
+                let mut idle_spins = 0u64;
+                loop {
+                    match mb.status() {
+                        ST_REQUEST => {
+                            idle_spins = 0;
+                            Self::serve_one(&mb, &registry, &env);
+                            sv.fetch_add(1, Ordering::Relaxed);
+                            mb.set_status(ST_DONE);
+                        }
+                        ST_SHUTDOWN => break,
+                        _ => {
+                            if sd.load(Ordering::Relaxed) {
+                                break;
+                            }
+                            std::hint::spin_loop();
+                            idle_spins += 1;
+                            // Perf (§Perf L3-1): brief hot window after the
+                            // last request, then hand the core back.
+                            if idle_spins > 4 {
+                                std::thread::yield_now();
+                            }
+                        }
+                    }
+                }
+            })
+            .expect("spawn rpc server");
+        Self { shutdown, handle: Some(handle), served }
+    }
+
+    fn serve_one(mb: &Mailbox<'_>, registry: &WrapperRegistry, env: &HostEnv) {
+        // 1) Copy the RPCInfo to the host.
+        let callee = mb.callee();
+        let nargs = mb.nargs() as usize;
+        let mut frame = RpcFrame::default();
+        for i in 0..nargs {
+            let w = mb.read_arg(i);
+            if w.kind == KIND_REF {
+                let bytes = mb.read_data(w.value, w.size as usize);
+                frame.args.push(HostArg::Buf {
+                    bytes,
+                    offset: w.offset as usize,
+                    mode: ArgMode::decode(w.mode),
+                });
+            } else {
+                frame.args.push(HostArg::Val(w.value));
+            }
+        }
+        // 2) Invoke the host wrapper.
+        let (ret, flags) = match registry.get(callee) {
+            Some(w) => (w(&mut frame, env), 0),
+            None => (-1, 1),
+        };
+        // 3) Copy mutated objects back into the data region + notify.
+        for i in 0..nargs {
+            let w = mb.read_arg(i);
+            if w.kind == KIND_REF && ArgMode::decode(w.mode).copies_back() {
+                if let HostArg::Buf { bytes, .. } = &frame.args[i] {
+                    mb.write_data(w.value, bytes);
+                }
+            }
+        }
+        mb.set_ret(ret);
+        mb.set_flags(flags);
+    }
+
+    pub fn stop(mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RpcServer {
+    fn drop(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::{MemConfig, GLOBAL_BASE};
+    use crate::rpc::arginfo::{ArgMode, RpcArgInfo};
+    use crate::rpc::client::RpcClient;
+
+    fn setup() -> (Arc<DeviceMemory>, Arc<WrapperRegistry>, Arc<HostEnv>) {
+        (
+            Arc::new(DeviceMemory::new(MemConfig::small())),
+            Arc::new(WrapperRegistry::new()),
+            Arc::new(HostEnv::new()),
+        )
+    }
+
+    #[test]
+    fn value_only_round_trip() {
+        let (mem, reg, env) = setup();
+        let id = reg.register("__add_i_i", Box::new(|f, _| (f.val(0) + f.val(1)) as i64));
+        let server = RpcServer::start(Arc::clone(&mem), Arc::clone(&reg), env);
+        let mut client = RpcClient::new(&mem);
+        let mut info = RpcArgInfo::new();
+        info.add_val(30).add_val(12);
+        assert_eq!(client.call(id, &info, None), 42);
+        assert!(client.last.wait_ns > 0.0);
+        server.stop();
+    }
+
+    #[test]
+    fn ref_arg_read_and_write_back() {
+        let (mem, reg, env) = setup();
+        // A wrapper that reads a C string and writes its length into an
+        // int* out-param (write-only object).
+        let id = reg.register(
+            "__strlen_out_cp_ip",
+            Box::new(|f, _| {
+                let s = f.cstr(0);
+                f.write_i32(1, s.len() as i32);
+                0
+            }),
+        );
+        let server = RpcServer::start(Arc::clone(&mem), Arc::clone(&reg), env);
+
+        let str_addr = GLOBAL_BASE + 256;
+        mem.write_cstr(str_addr, "hello GPU First");
+        let out_addr = GLOBAL_BASE + 512;
+        mem.write_u32(out_addr, 0xFFFF_FFFF);
+
+        let mut client = RpcClient::new(&mem);
+        let mut info = RpcArgInfo::new();
+        info.add_ref(str_addr, ArgMode::Read, 16, 0);
+        info.add_ref(out_addr, ArgMode::Write, 4, 0);
+        assert_eq!(client.call(id, &info, None), 0);
+        assert_eq!(mem.read_u32(out_addr), 15);
+        server.stop();
+    }
+
+    #[test]
+    fn interior_pointer_into_struct() {
+        let (mem, reg, env) = setup();
+        // Mirrors Fig. 3: &s.f with offset 8 into a 12-byte struct; the
+        // wrapper doubles the float through the interior pointer.
+        let id = reg.register(
+            "__double_fp",
+            Box::new(|f, _| {
+                let v = f32::from_le_bytes(f.bytes(0)[..4].try_into().unwrap());
+                f.write_f32(0, v * 2.0);
+                0
+            }),
+        );
+        let server = RpcServer::start(Arc::clone(&mem), Arc::clone(&reg), env);
+        let s_base = GLOBAL_BASE + 1024;
+        mem.write_u32(s_base, 7); // s.a
+        mem.write_u32(s_base + 4, 8); // s.b
+        mem.write_f32(s_base + 8, 1.5); // s.f
+        let mut client = RpcClient::new(&mem);
+        let mut info = RpcArgInfo::new();
+        info.add_ref(s_base + 8, ArgMode::ReadWrite, 12, 8);
+        client.call(id, &info, None);
+        assert_eq!(mem.read_f32(s_base + 8), 3.0);
+        assert_eq!(mem.read_u32(s_base), 7, "rest of struct preserved");
+        server.stop();
+    }
+
+    #[test]
+    fn two_args_into_same_object_staged_once() {
+        let (mem, reg, env) = setup();
+        let id = reg.register(
+            "__sum2_ip_ip",
+            Box::new(|f, _| {
+                let a = f.read_i32(0) as i64;
+                let b = f.read_i32(1) as i64;
+                a + b
+            }),
+        );
+        let server = RpcServer::start(Arc::clone(&mem), Arc::clone(&reg), env);
+        let base = GLOBAL_BASE + 2048;
+        mem.write_u32(base, 11);
+        mem.write_u32(base + 4, 31);
+        let mut client = RpcClient::new(&mem);
+        let mut info = RpcArgInfo::new();
+        info.add_ref(base, ArgMode::Read, 8, 0);
+        info.add_ref(base + 4, ArgMode::Read, 8, 4);
+        assert_eq!(client.call(id, &info, None), 42);
+        server.stop();
+    }
+
+    #[test]
+    fn unknown_callee_sets_flag() {
+        let (mem, reg, env) = setup();
+        let server = RpcServer::start(Arc::clone(&mem), Arc::clone(&reg), env);
+        let mut client = RpcClient::new(&mem);
+        let info = RpcArgInfo::new();
+        assert_eq!(client.call(999, &info, None), -1);
+        server.stop();
+    }
+
+    #[test]
+    fn registry_dedups_by_mangled_name() {
+        let reg = WrapperRegistry::new();
+        let a = reg.register("__f_i", Box::new(|_, _| 1));
+        let b = reg.register("__f_i", Box::new(|_, _| 2));
+        assert_eq!(a, b);
+        assert_eq!(reg.len(), 1);
+        let c = reg.register("__f_ip", Box::new(|_, _| 3));
+        assert_ne!(a, c);
+    }
+
+    #[test]
+    fn concurrent_device_threads_serialize_on_slot() {
+        let (mem, reg, env) = setup();
+        let id = reg.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+        let server = RpcServer::start(Arc::clone(&mem), Arc::clone(&reg), env);
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let mem = &mem;
+                s.spawn(move || {
+                    let mut client = RpcClient::new(mem);
+                    for k in 0..20u64 {
+                        let mut info = RpcArgInfo::new();
+                        info.add_val(t * 1000 + k);
+                        assert_eq!(client.call(id, &info, None), (t * 1000 + k) as i64);
+                    }
+                });
+            }
+        });
+        assert_eq!(server.served.load(Ordering::Relaxed), 160);
+        server.stop();
+    }
+}

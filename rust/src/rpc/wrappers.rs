@@ -1,0 +1,672 @@
+//! Host landing-pad wrappers and the host environment they close over.
+//!
+//! The RPC generation pass ([`crate::transform::rpcgen`]) knows *which*
+//! library function a call site targets and the argument-type signature at
+//! that site; it asks this module to synthesize the matching non-variadic
+//! landing pad (the `__fscanf_ip_fp_ip`-style functions of Fig. 3b) and
+//! registers it under the mangled name. The wrappers run against an
+//! in-memory [`HostEnv`] (files, stdout/stderr capture, process state) so
+//! host-side effects are observable in tests.
+
+use super::server::{RpcFrame, WrapperFn, WrapperRegistry};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+pub const FD_STDIN: u64 = 0;
+pub const FD_STDOUT: u64 = 1;
+pub const FD_STDERR: u64 = 2;
+
+struct OpenFile {
+    path: String,
+    pos: usize,
+    writable: bool,
+}
+
+/// Host process state backing the landing pads: an in-memory filesystem,
+/// captured standard streams, environment variables, a monotonic clock and
+/// the kernel-split launch hook (paper §3.3).
+pub struct HostEnv {
+    files: Mutex<HashMap<String, Vec<u8>>>,
+    open: Mutex<HashMap<u64, OpenFile>>,
+    next_fd: AtomicU64,
+    pub stdout: Mutex<Vec<u8>>,
+    pub stderr: Mutex<Vec<u8>>,
+    pub exited: Mutex<Option<i32>>,
+    env_vars: Mutex<HashMap<String, String>>,
+    clock_ns: AtomicU64,
+    /// Kernel-split hook: `(region_id, arg_ptr) -> ret`. The coordinator
+    /// installs a closure that launches the multi-team parallel kernel.
+    #[allow(clippy::type_complexity)]
+    pub region_launcher: Mutex<Option<Box<dyn Fn(u64, u64) -> i64 + Send + Sync>>>,
+}
+
+impl Default for HostEnv {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl HostEnv {
+    pub fn new() -> Self {
+        Self {
+            files: Mutex::new(HashMap::new()),
+            open: Mutex::new(HashMap::new()),
+            next_fd: AtomicU64::new(16),
+            stdout: Mutex::new(Vec::new()),
+            stderr: Mutex::new(Vec::new()),
+            exited: Mutex::new(None),
+            env_vars: Mutex::new(HashMap::new()),
+            clock_ns: AtomicU64::new(1_700_000_000_000_000_000),
+            region_launcher: Mutex::new(None),
+        }
+    }
+
+    pub fn put_file(&self, path: &str, content: &[u8]) {
+        self.files.lock().unwrap().insert(path.to_string(), content.to_vec());
+    }
+
+    pub fn file(&self, path: &str) -> Option<Vec<u8>> {
+        self.files.lock().unwrap().get(path).cloned()
+    }
+
+    pub fn set_env(&self, k: &str, v: &str) {
+        self.env_vars.lock().unwrap().insert(k.to_string(), v.to_string());
+    }
+
+    pub fn stdout_string(&self) -> String {
+        String::from_utf8_lossy(&self.stdout.lock().unwrap()).into_owned()
+    }
+
+    pub fn stderr_string(&self) -> String {
+        String::from_utf8_lossy(&self.stderr.lock().unwrap()).into_owned()
+    }
+
+    fn write_stream(&self, fd: u64, bytes: &[u8]) -> i64 {
+        match fd {
+            FD_STDOUT => self.stdout.lock().unwrap().extend_from_slice(bytes),
+            FD_STDERR => self.stderr.lock().unwrap().extend_from_slice(bytes),
+            fd => {
+                let mut open = self.open.lock().unwrap();
+                let Some(of) = open.get_mut(&fd) else { return -1 };
+                if !of.writable {
+                    return -1;
+                }
+                let mut files = self.files.lock().unwrap();
+                let content = files.entry(of.path.clone()).or_default();
+                if of.pos > content.len() {
+                    content.resize(of.pos, 0);
+                }
+                // Overwrite-at-position semantics.
+                let end = of.pos + bytes.len();
+                if end > content.len() {
+                    content.resize(end, 0);
+                }
+                content[of.pos..end].copy_from_slice(bytes);
+                of.pos = end;
+            }
+        }
+        bytes.len() as i64
+    }
+
+    fn read_stream(&self, fd: u64, out: &mut [u8]) -> i64 {
+        let mut open = self.open.lock().unwrap();
+        let Some(of) = open.get_mut(&fd) else { return -1 };
+        let files = self.files.lock().unwrap();
+        let Some(content) = files.get(&of.path) else { return -1 };
+        let avail = content.len().saturating_sub(of.pos);
+        let n = avail.min(out.len());
+        out[..n].copy_from_slice(&content[of.pos..of.pos + n]);
+        of.pos += n;
+        n as i64
+    }
+
+    fn fopen(&self, path: &str, mode: &str) -> i64 {
+        let writable = mode.starts_with('w') || mode.starts_with('a');
+        {
+            let mut files = self.files.lock().unwrap();
+            if writable && mode.starts_with('w') {
+                files.insert(path.to_string(), Vec::new());
+            } else if !files.contains_key(path) {
+                return 0; // NULL
+            }
+        }
+        let fd = self.next_fd.fetch_add(1, Ordering::Relaxed);
+        let pos = if mode.starts_with('a') {
+            self.files.lock().unwrap().get(path).map(|c| c.len()).unwrap_or(0)
+        } else {
+            0
+        };
+        self.open.lock().unwrap().insert(fd, OpenFile { path: path.to_string(), pos, writable });
+        fd as i64
+    }
+
+    fn fclose(&self, fd: u64) -> i64 {
+        if self.open.lock().unwrap().remove(&fd).is_some() {
+            0
+        } else {
+            -1
+        }
+    }
+
+    /// `fscanf`-style consumption: read from the current position,
+    /// returning the consumed text for the scanner.
+    fn remaining(&self, fd: u64) -> String {
+        let open = self.open.lock().unwrap();
+        let Some(of) = open.get(&fd) else { return String::new() };
+        let files = self.files.lock().unwrap();
+        files
+            .get(&of.path)
+            .map(|c| String::from_utf8_lossy(&c[of.pos.min(c.len())..]).into_owned())
+            .unwrap_or_default()
+    }
+
+    fn advance(&self, fd: u64, by: usize) {
+        if let Some(of) = self.open.lock().unwrap().get_mut(&fd) {
+            of.pos += by;
+        }
+    }
+}
+
+// ---- the C format machinery (printf/scanf subset the benchmarks use) ----
+
+/// One parsed `%` conversion.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Conv {
+    Int,
+    Uint,
+    Hex,
+    Float,
+    Str,
+    Char,
+    Percent,
+}
+
+/// Split a C format string into literal runs and conversions. Width and
+/// precision are parsed (and applied for floats) but length modifiers are
+/// accepted and ignored — device ints are 64-bit anyway.
+pub fn parse_format(fmt: &str) -> Vec<(String, Option<(Conv, Option<usize>, Option<usize>)>)> {
+    let mut out = Vec::new();
+    let mut lit = String::new();
+    let bytes: Vec<char> = fmt.chars().collect();
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] != '%' {
+            lit.push(bytes[i]);
+            i += 1;
+            continue;
+        }
+        i += 1;
+        // flags/width
+        let mut width = String::new();
+        while i < bytes.len() && (bytes[i].is_ascii_digit() || "-+ 0".contains(bytes[i])) {
+            if bytes[i].is_ascii_digit() {
+                width.push(bytes[i]);
+            }
+            i += 1;
+        }
+        let mut prec = None;
+        if i < bytes.len() && bytes[i] == '.' {
+            i += 1;
+            let mut p = String::new();
+            while i < bytes.len() && bytes[i].is_ascii_digit() {
+                p.push(bytes[i]);
+                i += 1;
+            }
+            prec = p.parse().ok();
+        }
+        while i < bytes.len() && "lhzjt".contains(bytes[i]) {
+            i += 1;
+        }
+        let conv = match bytes.get(i) {
+            Some('d') | Some('i') => Conv::Int,
+            Some('u') => Conv::Uint,
+            Some('x') | Some('X') => Conv::Hex,
+            Some('f') | Some('e') | Some('g') | Some('E') | Some('G') => Conv::Float,
+            Some('s') => Conv::Str,
+            Some('c') => Conv::Char,
+            Some('%') => Conv::Percent,
+            other => panic!("unsupported conversion %{other:?} in {fmt:?}"),
+        };
+        i += 1;
+        out.push((std::mem::take(&mut lit), Some((conv, width.parse().ok(), prec))));
+    }
+    if !lit.is_empty() {
+        out.push((lit, None));
+    }
+    out
+}
+
+/// Render `fmt` pulling conversion arguments from the frame starting at
+/// `first_arg`.
+pub fn format_c(frame: &RpcFrame, fmt: &str, first_arg: usize) -> String {
+    let mut out = String::new();
+    let mut ai = first_arg;
+    for (lit, conv) in parse_format(fmt) {
+        out.push_str(&lit);
+        let Some((conv, width, prec)) = conv else { continue };
+        let rendered = match conv {
+            Conv::Percent => "%".to_string(),
+            Conv::Int => (frame.val(ai) as i64).to_string(),
+            Conv::Uint => frame.val(ai).to_string(),
+            Conv::Hex => format!("{:x}", frame.val(ai)),
+            Conv::Float => {
+                let v = f64::from_bits(frame.val(ai));
+                match prec {
+                    Some(p) => format!("{v:.p$}"),
+                    None => format!("{v:.6}"),
+                }
+            }
+            Conv::Str => frame.cstr(ai),
+            Conv::Char => char::from_u32(frame.val(ai) as u32).unwrap_or('?').to_string(),
+        };
+        if conv != Conv::Percent {
+            ai += 1;
+        }
+        match width {
+            Some(w) if rendered.len() < w => {
+                out.push_str(&" ".repeat(w - rendered.len()));
+                out.push_str(&rendered);
+            }
+            _ => out.push_str(&rendered),
+        }
+    }
+    out
+}
+
+/// `sscanf` over `input` guided by `fmt`, writing results into the frame's
+/// out-pointer args starting at `first_arg`. Returns (#converted, bytes
+/// consumed).
+pub fn scan_c(frame: &mut RpcFrame, input: &str, fmt: &str, first_arg: usize) -> (i64, usize) {
+    let mut ai = first_arg;
+    let mut converted = 0i64;
+    let bytes = input.as_bytes();
+    let mut pos = 0usize;
+    let skip_ws = |pos: &mut usize| {
+        while *pos < bytes.len() && (bytes[*pos] as char).is_whitespace() {
+            *pos += 1;
+        }
+    };
+    for (lit, conv) in parse_format(fmt) {
+        for c in lit.chars() {
+            if c.is_whitespace() {
+                skip_ws(&mut pos);
+            } else {
+                if pos >= bytes.len() || bytes[pos] as char != c {
+                    return (converted, pos);
+                }
+                pos += 1;
+            }
+        }
+        let Some((conv, _, _)) = conv else { continue };
+        skip_ws(&mut pos);
+        let start = pos;
+        match conv {
+            Conv::Int | Conv::Uint | Conv::Hex => {
+                if pos < bytes.len() && (bytes[pos] == b'-' || bytes[pos] == b'+') {
+                    pos += 1;
+                }
+                while pos < bytes.len() && bytes[pos].is_ascii_digit() {
+                    pos += 1;
+                }
+                let Ok(v) = input[start..pos].parse::<i64>() else {
+                    return (converted, start);
+                };
+                frame.write_i32(ai, v as i32);
+                ai += 1;
+                converted += 1;
+            }
+            Conv::Float => {
+                if pos < bytes.len() && (bytes[pos] == b'-' || bytes[pos] == b'+') {
+                    pos += 1;
+                }
+                while pos < bytes.len()
+                    && (bytes[pos].is_ascii_digit()
+                        || bytes[pos] == b'.'
+                        || bytes[pos] == b'e'
+                        || bytes[pos] == b'E'
+                        || ((bytes[pos] == b'-' || bytes[pos] == b'+')
+                            && pos > start
+                            && (bytes[pos - 1] == b'e' || bytes[pos - 1] == b'E')))
+                {
+                    pos += 1;
+                }
+                let Ok(v) = input[start..pos].parse::<f64>() else {
+                    return (converted, start);
+                };
+                // Width of the out slot decides f32 vs f64.
+                if frame.bytes(ai).len() >= 8 {
+                    frame.write_f64(ai, v);
+                } else {
+                    frame.write_f32(ai, v as f32);
+                }
+                ai += 1;
+                converted += 1;
+            }
+            Conv::Str => {
+                while pos < bytes.len() && !(bytes[pos] as char).is_whitespace() {
+                    pos += 1;
+                }
+                if pos == start {
+                    return (converted, start);
+                }
+                let s = &input[start..pos];
+                let buf = frame.bytes_mut(ai);
+                let n = s.len().min(buf.len().saturating_sub(1));
+                buf[..n].copy_from_slice(&s.as_bytes()[..n]);
+                buf[n] = 0;
+                ai += 1;
+                converted += 1;
+            }
+            Conv::Char => {
+                if pos >= bytes.len() {
+                    return (converted, pos);
+                }
+                frame.bytes_mut(ai)[0] = bytes[pos];
+                pos += 1;
+                ai += 1;
+                converted += 1;
+            }
+            Conv::Percent => {
+                if pos >= bytes.len() || bytes[pos] != b'%' {
+                    return (converted, pos);
+                }
+                pos += 1;
+            }
+        }
+    }
+    (converted, pos)
+}
+
+// ---- host function models for synthesis ----
+
+/// What the RPC pass knows about a host library function: enough to
+/// synthesize a landing pad for any call-site signature.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HostFnKind {
+    /// `fprintf(FILE*, fmt, ...)` / `printf(fmt, ...)`.
+    Printf { has_fd: bool },
+    /// `fscanf(FILE*, fmt, &outs...)` / `sscanf`-like.
+    Scanf { has_fd: bool },
+    Fopen,
+    Fclose,
+    Fread,
+    Fwrite,
+    Puts,
+    Exit,
+    Time,
+    Getenv,
+    /// Kernel-split launch: `(region_id, arg_ptr)`.
+    LaunchKernel,
+}
+
+/// The library-knowledge table the pass consults (the reproduction's
+/// stand-in for annotated headers / libc knowledge in LLVM).
+pub fn host_function(name: &str) -> Option<HostFnKind> {
+    Some(match name {
+        "printf" => HostFnKind::Printf { has_fd: false },
+        "fprintf" => HostFnKind::Printf { has_fd: true },
+        "scanf" => HostFnKind::Scanf { has_fd: false },
+        "fscanf" => HostFnKind::Scanf { has_fd: true },
+        "fopen" => HostFnKind::Fopen,
+        "fclose" => HostFnKind::Fclose,
+        "fread" => HostFnKind::Fread,
+        "fwrite" => HostFnKind::Fwrite,
+        "puts" => HostFnKind::Puts,
+        "exit" => HostFnKind::Exit,
+        "time" => HostFnKind::Time,
+        "getenv" => HostFnKind::Getenv,
+        "__gpu_first_launch_kernel" => HostFnKind::LaunchKernel,
+        _ => return None,
+    })
+}
+
+/// Synthesize the landing pad for `kind`.
+pub fn synthesize(kind: HostFnKind) -> WrapperFn {
+    match kind {
+        HostFnKind::Printf { has_fd } => Box::new(move |f, env| {
+            let (fd, fmt_i) = if has_fd { (f.val(0), 1) } else { (FD_STDOUT, 0) };
+            let fmt = f.cstr(fmt_i);
+            let s = format_c(f, &fmt, fmt_i + 1);
+            env.write_stream(fd, s.as_bytes())
+        }),
+        HostFnKind::Scanf { has_fd } => Box::new(move |f, env| {
+            let (fd, fmt_i) = if has_fd { (f.val(0), 1) } else { (FD_STDIN, 0) };
+            let fmt = f.cstr(fmt_i);
+            let input = env.remaining(fd);
+            let (n, consumed) = scan_c(f, &input, &fmt, fmt_i + 1);
+            env.advance(fd, consumed);
+            n
+        }),
+        HostFnKind::Fopen => Box::new(|f, env| {
+            let path = f.cstr(0);
+            let mode = f.cstr(1);
+            env.fopen(&path, &mode)
+        }),
+        HostFnKind::Fclose => Box::new(|f, env| env.fclose(f.val(0))),
+        HostFnKind::Fread => Box::new(|f, env| {
+            // fread(buf, size, count, fd)
+            let size = f.val(1) as usize;
+            let count = f.val(2) as usize;
+            let fd = f.val(3);
+            let buf = f.bytes_mut(0);
+            let want = (size * count).min(buf.len());
+            let n = env.read_stream(fd, &mut buf[..want]);
+            if n < 0 || size == 0 {
+                0
+            } else {
+                n / size as i64
+            }
+        }),
+        HostFnKind::Fwrite => Box::new(|f, env| {
+            let size = f.val(1) as usize;
+            let count = f.val(2) as usize;
+            let fd = f.val(3);
+            let data = f.bytes(0)[..size * count].to_vec();
+            let n = env.write_stream(fd, &data);
+            if n < 0 || size == 0 {
+                0
+            } else {
+                n / size as i64
+            }
+        }),
+        HostFnKind::Puts => Box::new(|f, env| {
+            let mut s = f.cstr(0);
+            s.push('\n');
+            env.write_stream(FD_STDOUT, s.as_bytes())
+        }),
+        HostFnKind::Exit => Box::new(|f, env| {
+            *env.exited.lock().unwrap() = Some(f.val(0) as i32);
+            0
+        }),
+        HostFnKind::Time => {
+            Box::new(|_, env| (env.clock_ns.fetch_add(1_000_000, Ordering::Relaxed) / 1_000_000_000) as i64)
+        }
+        HostFnKind::Getenv => Box::new(|f, env| {
+            let k = f.cstr(0);
+            let vars = env.env_vars.lock().unwrap();
+            match vars.get(&k) {
+                Some(v) => {
+                    let buf = f.bytes_mut(1);
+                    let n = v.len().min(buf.len() - 1);
+                    buf[..n].copy_from_slice(&v.as_bytes()[..n]);
+                    buf[n] = 0;
+                    1
+                }
+                None => 0,
+            }
+        }),
+        HostFnKind::LaunchKernel => Box::new(|f, env| {
+            let region = f.val(0);
+            let arg = f.val(1);
+            let launcher = env.region_launcher.lock().unwrap();
+            match launcher.as_ref() {
+                Some(l) => l(region, arg),
+                None => -1,
+            }
+        }),
+    }
+}
+
+/// Register the canonical signatures the hand-written apps and tests use.
+/// (IR programs get theirs registered by the RPC pass instead.)
+pub fn register_common(registry: &WrapperRegistry) -> HashMap<&'static str, u64> {
+    let mut ids = HashMap::new();
+    for (mangled, kind) in [
+        ("__fprintf_p_cp", HostFnKind::Printf { has_fd: true }),
+        ("__fprintf_p_cp_cp", HostFnKind::Printf { has_fd: true }),
+        ("__fprintf_p_cp_i", HostFnKind::Printf { has_fd: true }),
+        ("__fprintf_p_cp_f", HostFnKind::Printf { has_fd: true }),
+        ("__fprintf_p_cp_i_i", HostFnKind::Printf { has_fd: true }),
+        ("__fprintf_p_cp_f_f", HostFnKind::Printf { has_fd: true }),
+        ("__printf_cp", HostFnKind::Printf { has_fd: false }),
+        ("__printf_cp_i", HostFnKind::Printf { has_fd: false }),
+        ("__printf_cp_f", HostFnKind::Printf { has_fd: false }),
+        ("__printf_cp_i_i", HostFnKind::Printf { has_fd: false }),
+        ("__fscanf_p_cp_ip", HostFnKind::Scanf { has_fd: true }),
+        ("__fscanf_p_cp_fp", HostFnKind::Scanf { has_fd: true }),
+        ("__fscanf_p_cp_fp_ip_ip", HostFnKind::Scanf { has_fd: true }),
+        ("__fopen_cp_cp", HostFnKind::Fopen),
+        ("__fclose_p", HostFnKind::Fclose),
+        ("__fread_vp_i_i_p", HostFnKind::Fread),
+        ("__fwrite_vp_i_i_p", HostFnKind::Fwrite),
+        ("__puts_cp", HostFnKind::Puts),
+        ("__exit_i", HostFnKind::Exit),
+        ("__time", HostFnKind::Time),
+        ("__launch_kernel_i_i", HostFnKind::LaunchKernel),
+    ] {
+        ids.insert(mangled, registry.register(mangled, synthesize(kind)));
+    }
+    ids
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::rpc::server::HostArg;
+    use crate::rpc::ArgMode;
+
+    fn buf_arg(bytes: &[u8]) -> HostArg {
+        HostArg::Buf { bytes: bytes.to_vec(), offset: 0, mode: ArgMode::ReadWrite }
+    }
+
+    fn cstr_arg(s: &str) -> HostArg {
+        let mut b = s.as_bytes().to_vec();
+        b.push(0);
+        HostArg::Buf { bytes: b, offset: 0, mode: ArgMode::Read }
+    }
+
+    #[test]
+    fn format_c_mixed() {
+        let frame = RpcFrame {
+            args: vec![
+                cstr_arg("n=%d pi=%.2f s=%s %%"),
+                HostArg::Val(42),
+                HostArg::Val(std::f64::consts::PI.to_bits()),
+                cstr_arg("str"),
+            ],
+        };
+        let fmt = frame.cstr(0);
+        assert_eq!(format_c(&frame, &fmt, 1), "n=42 pi=3.14 s=str %");
+    }
+
+    #[test]
+    fn format_width_padding() {
+        let frame = RpcFrame { args: vec![HostArg::Val(7)] };
+        assert_eq!(format_c(&frame, "[%4d]", 0), "[   7]");
+    }
+
+    #[test]
+    fn scan_c_fig3_shape() {
+        // fscanf(fd, "%f %i %i", &s.f, &i, p) — the Fig. 3a call.
+        let mut frame = RpcFrame {
+            args: vec![buf_arg(&[0u8; 4]), buf_arg(&[0u8; 4]), buf_arg(&[0u8; 4])],
+        };
+        let (n, _) = scan_c(&mut frame, "2.5 -7 11", "%f %i %i", 0);
+        assert_eq!(n, 3);
+        assert_eq!(f32::from_le_bytes(frame.bytes(0)[..4].try_into().unwrap()), 2.5);
+        assert_eq!(frame.read_i32(1), -7);
+        assert_eq!(frame.read_i32(2), 11);
+    }
+
+    #[test]
+    fn scan_c_partial_match() {
+        let mut frame = RpcFrame { args: vec![buf_arg(&[0u8; 4]), buf_arg(&[0u8; 4])] };
+        let (n, _) = scan_c(&mut frame, "5 oops", "%d %d", 0);
+        assert_eq!(n, 1);
+        assert_eq!(frame.read_i32(0), 5);
+    }
+
+    #[test]
+    fn scan_c_string_and_literals() {
+        let mut frame = RpcFrame { args: vec![buf_arg(&[0u8; 16])] };
+        let (n, _) = scan_c(&mut frame, "name: xsbench", "name: %s", 0);
+        assert_eq!(n, 1);
+        let end = frame.bytes(0).iter().position(|&b| b == 0).unwrap();
+        assert_eq!(&frame.bytes(0)[..end], b"xsbench");
+    }
+
+    #[test]
+    fn hostenv_file_lifecycle() {
+        let env = HostEnv::new();
+        env.put_file("input.dat", b"1 2 3");
+        let fd = env.fopen("input.dat", "r");
+        assert!(fd > 2);
+        let mut buf = [0u8; 3];
+        assert_eq!(env.read_stream(fd as u64, &mut buf), 3);
+        assert_eq!(&buf, b"1 2");
+        assert_eq!(env.fclose(fd as u64), 0);
+        assert_eq!(env.fopen("missing", "r"), 0);
+    }
+
+    #[test]
+    fn hostenv_write_and_append() {
+        let env = HostEnv::new();
+        let fd = env.fopen("out.txt", "w") as u64;
+        env.write_stream(fd, b"hello ");
+        env.write_stream(fd, b"world");
+        env.fclose(fd);
+        assert_eq!(env.file("out.txt").unwrap(), b"hello world");
+        let fd = env.fopen("out.txt", "a") as u64;
+        env.write_stream(fd, b"!");
+        assert_eq!(env.file("out.txt").unwrap(), b"hello world!");
+    }
+
+    #[test]
+    fn printf_wrapper_writes_stderr() {
+        let env = HostEnv::new();
+        let w = synthesize(HostFnKind::Printf { has_fd: true });
+        let mut frame = RpcFrame {
+            args: vec![HostArg::Val(FD_STDERR), cstr_arg("fread reads: %s.\n"), cstr_arg("abc")],
+        };
+        let n = w(&mut frame, &env);
+        assert_eq!(env.stderr_string(), "fread reads: abc.\n");
+        assert_eq!(n, "fread reads: abc.\n".len() as i64);
+    }
+
+    #[test]
+    fn exit_wrapper_records_code() {
+        let env = HostEnv::new();
+        let w = synthesize(HostFnKind::Exit);
+        let mut frame = RpcFrame { args: vec![HostArg::Val(3)] };
+        w(&mut frame, &env);
+        assert_eq!(*env.exited.lock().unwrap(), Some(3));
+    }
+
+    #[test]
+    fn launch_kernel_dispatches_to_hook() {
+        let env = HostEnv::new();
+        *env.region_launcher.lock().unwrap() = Some(Box::new(|r, a| (r * 100 + a) as i64));
+        let w = synthesize(HostFnKind::LaunchKernel);
+        let mut frame = RpcFrame { args: vec![HostArg::Val(4), HostArg::Val(7)] };
+        assert_eq!(w(&mut frame, &env), 407);
+    }
+
+    #[test]
+    fn register_common_is_idempotent() {
+        let reg = WrapperRegistry::new();
+        let a = register_common(&reg);
+        let b = register_common(&reg);
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,127 @@
+//! The artifact manifest written by `python/compile/aot.py`.
+
+use crate::util::json::Json;
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct TensorSpec {
+    pub dtype: String,
+    pub shape: Vec<usize>,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        let w = match self.dtype.as_str() {
+            "f64" | "i64" | "u64" => 8,
+            "f32" | "i32" | "u32" => 4,
+            "bf16" | "f16" | "i16" => 2,
+            _ => 1,
+        };
+        self.elements() * w
+    }
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct EntrySpec {
+    pub name: String,
+    pub file: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ArtifactManifest {
+    pub entries: Vec<EntrySpec>,
+}
+
+impl ArtifactManifest {
+    pub fn read(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let v = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let entries = v
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing entries"))?;
+        let parse_tensors = |v: Option<&Json>| -> Result<Vec<TensorSpec>> {
+            v.and_then(|t| t.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(|t| {
+                    Ok(TensorSpec {
+                        dtype: t
+                            .get("dtype")
+                            .and_then(|d| d.as_str())
+                            .ok_or_else(|| anyhow!("tensor missing dtype"))?
+                            .to_string(),
+                        shape: t
+                            .get("shape")
+                            .and_then(|s| s.as_arr())
+                            .ok_or_else(|| anyhow!("tensor missing shape"))?
+                            .iter()
+                            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+                            .collect::<Result<Vec<_>>>()?,
+                    })
+                })
+                .collect()
+        };
+        let mut out = Vec::new();
+        for e in entries {
+            out.push(EntrySpec {
+                name: e
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow!("entry missing name"))?
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .and_then(|n| n.as_str())
+                    .ok_or_else(|| anyhow!("entry missing file"))?
+                    .to_string(),
+                inputs: parse_tensors(e.get("inputs"))?,
+                outputs: parse_tensors(e.get("outputs"))?,
+            });
+        }
+        Ok(ArtifactManifest { entries: out })
+    }
+
+    pub fn entry(&self, name: &str) -> Option<&EntrySpec> {
+        self.entries.iter().find(|e| e.name == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_manifest() {
+        let text = r#"{"entries":[
+            {"name":"xs_lookup_event","file":"xs_lookup_event.hlo.txt",
+             "inputs":[{"dtype":"f32","shape":[4096]},{"dtype":"f32","shape":[512,3]}],
+             "outputs":[{"dtype":"f32","shape":[4096,3]}]}
+        ]}"#;
+        let m = ArtifactManifest::parse(text).unwrap();
+        assert_eq!(m.entries.len(), 1);
+        let e = m.entry("xs_lookup_event").unwrap();
+        assert_eq!(e.file, "xs_lookup_event.hlo.txt");
+        assert_eq!(e.inputs[1].shape, vec![512, 3]);
+        assert_eq!(e.inputs[1].elements(), 1536);
+        assert_eq!(e.inputs[1].bytes(), 6144);
+        assert!(m.entry("missing").is_none());
+    }
+
+    #[test]
+    fn rejects_malformed() {
+        assert!(ArtifactManifest::parse("{}").is_err());
+        assert!(ArtifactManifest::parse(r#"{"entries":[{"file":"x"}]}"#).is_err());
+    }
+}

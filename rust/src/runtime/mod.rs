@@ -1,0 +1,111 @@
+//! PJRT runtime: loads and executes the AOT-compiled JAX/Pallas artifacts.
+//!
+//! The compile path (`python/compile/aot.py`, run once by `make
+//! artifacts`) lowers each L2 model to **HLO text** — the interchange
+//! format this crate's bundled XLA (xla_extension 0.5.1) accepts from
+//! jax ≥ 0.5, whose serialized protos it rejects (64-bit instruction
+//! ids). Here we compile each artifact once on the PJRT CPU client and
+//! execute it from the request path with no Python anywhere.
+
+pub mod manifest;
+
+pub use manifest::{ArtifactManifest, EntrySpec, TensorSpec};
+
+use anyhow::{anyhow, Context, Result};
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+/// A loaded, compiled artifact collection.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    exes: Mutex<HashMap<String, xla::PjRtLoadedExecutable>>,
+    pub manifest: Option<ArtifactManifest>,
+}
+
+impl Runtime {
+    /// CPU PJRT client (the reproduction's "device" for offloaded kernels).
+    pub fn cpu() -> Result<Self> {
+        Ok(Self {
+            client: xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?,
+            exes: Mutex::new(HashMap::new()),
+            manifest: None,
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact under `name`.
+    pub fn load_hlo_text(&self, name: &str, path: &Path) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path.to_str().unwrap())
+            .map_err(|e| anyhow!("parse {path:?}: {e:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        self.exes.lock().unwrap().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Load every entry of `artifacts/manifest.json`.
+    pub fn load_manifest_dir(&mut self, dir: &Path) -> Result<ArtifactManifest> {
+        let manifest = ArtifactManifest::read(&dir.join("manifest.json"))
+            .with_context(|| format!("reading manifest in {dir:?}"))?;
+        for e in &manifest.entries {
+            self.load_hlo_text(&e.name, &dir.join(&e.file))?;
+        }
+        self.manifest = Some(manifest.clone());
+        Ok(manifest)
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.exes.lock().unwrap().contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.exes.lock().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Execute `name` with literal inputs; returns the flattened tuple of
+    /// output literals.
+    pub fn execute(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exes = self.exes.lock().unwrap();
+        let exe = exes.get(name).ok_or_else(|| anyhow!("unknown executable {name}"))?;
+        let result = exe
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let mut lit = result[0][0].to_literal_sync().map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        // aot.py lowers with return_tuple=True.
+        lit.decompose_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Convenience: f32 tensors in, first f32 tensor out.
+    pub fn execute_f32(&self, name: &str, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
+        let lits = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+                lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let outs = self.execute(name, &lits)?;
+        outs[0].to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // PJRT smoke tests live in rust/tests/integration_runtime.rs (they
+    // need artifacts). Here: manifest-independent error paths.
+    #[test]
+    fn unknown_executable_errors() {
+        let rt = Runtime::cpu().unwrap();
+        assert!(rt.execute("nope", &[]).is_err());
+        assert!(!rt.has("nope"));
+    }
+}

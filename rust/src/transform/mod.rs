@@ -1,0 +1,15 @@
+//! Compile-time transformations — the paper's two compiler contributions.
+//!
+//! * [`rpcgen`] — automatic RPC generation (paper §3.2, Fig. 3): replaces
+//!   library call sites with RPC stubs + synthesized host landing pads.
+//! * [`multiteam`] — multi-team execution & kernel split (paper §3.3,
+//!   Fig. 4): expands eligible `parallel` regions into grid-wide kernels
+//!   launched from the host via RPC.
+//! * [`pipeline`] — the "LTO pass pipeline": verify → rpcgen → multiteam →
+//!   verify, i.e. what the paper's augmented compiler driver runs.
+
+pub mod rpcgen;
+pub mod multiteam;
+pub mod pipeline;
+
+pub use pipeline::{compile, CompileOptions, CompileReport};

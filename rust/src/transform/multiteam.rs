@@ -1,0 +1,407 @@
+//! Multi-team execution & kernel split (paper §3.3, Fig. 4).
+//!
+//! The natural OpenMP offload mapping runs a `parallel` region with the
+//! threads of ONE team — unusable for scaling studies. This pass converts
+//! eligible parallel regions into *kernel regions*:
+//!
+//! * the region body is outlined into a new `__region_N` function marked
+//!   `kernel`, whose parameters are the region's captured scalars (the
+//!   "same arguments the parallel region would have been given");
+//! * the `parallel` construct is replaced by a [`Instr::KernelLaunch`]
+//!   which the interpreter lowers to a host RPC
+//!   (`__gpu_first_launch_kernel`) that launches the region over the whole
+//!   grid (Fig. 4 right: ① RPC → ② parallel kernel → ③ completion);
+//! * automatic work-sharing loops (`for.team`, i.e. `omp for`) are
+//!   rescheduled to span all teams (`for.grid`, i.e. `distribute parallel
+//!   for`), and thread-id / num-threads queries keep their source
+//!   semantics because the launched grid exposes *continuous* global
+//!   thread ids;
+//! * `barrier` becomes a cross-team barrier (global atomic counters on
+//!   real GPUs; a true barrier in the simulator).
+
+use crate::analysis::callgraph::CallGraph;
+use crate::ir::{expr_operands, Function, Instr, Module, Operand, Param, Schedule, Ty};
+
+#[derive(Debug, Default, Clone)]
+pub struct MultiTeamReport {
+    /// (host function, region function, captured variables, had barrier).
+    pub regions: Vec<RegionInfo>,
+    /// Parallel regions left single-team (ineligible).
+    pub skipped: Vec<String>,
+}
+
+#[derive(Debug, Clone)]
+pub struct RegionInfo {
+    pub in_function: String,
+    pub region: String,
+    pub captures: Vec<String>,
+    pub has_barrier: bool,
+    /// The region's `num_threads` clause operand, if any (printed form).
+    pub num_threads: Option<Operand>,
+}
+
+/// Run the pass. Every eligible `parallel` region is outlined and split.
+pub fn run(m: &mut Module) -> MultiTeamReport {
+    let cg = CallGraph::build(m);
+    // Eligibility is judged against the ORIGINAL module: once a function's
+    // own region is outlined it no longer "contains parallel", but callers
+    // must still treat it as parallel (its kernel launch would nest).
+    let parallel_fns: std::collections::BTreeSet<String> = m
+        .functions
+        .keys()
+        .filter(|f| cg.transitively_parallel(m, f))
+        .cloned()
+        .collect();
+    let mut report = MultiTeamReport::default();
+    let fnames: Vec<String> = m.functions.keys().cloned().collect();
+    let mut new_fns: Vec<Function> = Vec::new();
+    let mut counter = 0usize;
+    for fname in fnames {
+        // Kernel regions themselves are not re-expanded.
+        if m.functions[&fname].is_kernel_region {
+            continue;
+        }
+        let mut f = m.functions[&fname].clone();
+        rewrite_body(m, &parallel_fns, &fname, &mut f.body, &mut new_fns, &mut counter, &mut report);
+        m.functions.insert(fname, f);
+    }
+    for f in new_fns {
+        m.functions.insert(f.name.clone(), f);
+    }
+    report
+}
+
+fn rewrite_body(
+    m: &Module,
+    parallel_fns: &std::collections::BTreeSet<String>,
+    fname: &str,
+    body: &mut Vec<Instr>,
+    new_fns: &mut Vec<Function>,
+    counter: &mut usize,
+    report: &mut MultiTeamReport,
+) {
+    for ins in body.iter_mut() {
+        match ins {
+            Instr::Parallel { num_threads, body: region_body } => {
+                if !eligible(m, parallel_fns, region_body) {
+                    report.skipped.push(fname.to_string());
+                    continue;
+                }
+                let region_name = format!("__region_{}", *counter);
+                *counter += 1;
+                let captures = free_vars(region_body);
+                let mut outlined = region_body.clone();
+                reschedule(&mut outlined);
+                let has_barrier = contains_barrier(&outlined);
+                new_fns.push(Function {
+                    name: region_name.clone(),
+                    params: captures
+                        .iter()
+                        .map(|c| Param { name: c.clone(), ty: Ty::I64 })
+                        .collect(),
+                    ret: Ty::Void,
+                    body: outlined,
+                    is_kernel_region: true,
+                });
+                report.regions.push(RegionInfo {
+                    in_function: fname.to_string(),
+                    region: region_name.clone(),
+                    captures,
+                    has_barrier,
+                    num_threads: num_threads.clone(),
+                });
+                // The launch's `arg` carries the num_threads request (the
+                // coordinator picks teams × threads from it).
+                *ins = Instr::KernelLaunch { region: region_name, arg: num_threads.clone() };
+            }
+            Instr::If { then_body, else_body, .. } => {
+                rewrite_body(m, parallel_fns, fname, then_body, new_fns, counter, report);
+                rewrite_body(m, parallel_fns, fname, else_body, new_fns, counter, report);
+            }
+            Instr::While { cond, body, .. } => {
+                rewrite_body(m, parallel_fns, fname, cond, new_fns, counter, report);
+                rewrite_body(m, parallel_fns, fname, body, new_fns, counter, report);
+            }
+            Instr::For { body, .. } => {
+                rewrite_body(m, parallel_fns, fname, body, new_fns, counter, report)
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Eligibility (paper: "the workload of many parallel regions can be
+/// executed by multiple teams without violating the program semantics"):
+/// we reject regions that call functions which are themselves parallel
+/// (nested parallelism) and regions that issue RPCs — the kernel-split
+/// launch occupies the single RPC slot for the whole region (paper §4.4:
+/// single-threaded RPC handling), so an in-region RPC would deadlock
+/// against its own launch. Such regions still run single-team, where RPCs
+/// work because no launch RPC is outstanding.
+fn eligible(m: &Module, parallel_fns: &std::collections::BTreeSet<String>, body: &[Instr]) -> bool {
+    let mut calls_parallel = false;
+    let mut has_rpcish = false;
+    crate::analysis::callgraph::walk(body, &mut |ins| match ins {
+        Instr::Call { callee, .. } => {
+            if parallel_fns.contains(callee) {
+                calls_parallel = true;
+            }
+            if !m.is_defined(callee) && !Module::is_native_intrinsic(callee) {
+                has_rpcish = true;
+            }
+        }
+        Instr::RpcCall { .. } => has_rpcish = true,
+        _ => {}
+    });
+    !calls_parallel && !has_rpcish
+}
+
+/// Change `omp for` (team schedule) into `distribute parallel for` (grid
+/// schedule) throughout the outlined region.
+fn reschedule(body: &mut [Instr]) {
+    for ins in body.iter_mut() {
+        match ins {
+            Instr::For { schedule, body, .. } => {
+                if *schedule == Schedule::Team {
+                    *schedule = Schedule::Grid;
+                }
+                reschedule(body);
+            }
+            Instr::If { then_body, else_body, .. } => {
+                reschedule(then_body);
+                reschedule(else_body);
+            }
+            Instr::While { cond, body, .. } => {
+                reschedule(cond);
+                reschedule(body);
+            }
+            _ => {}
+        }
+    }
+}
+
+fn contains_barrier(body: &[Instr]) -> bool {
+    let mut found = false;
+    crate::analysis::callgraph::walk(body, &mut |ins| {
+        if matches!(ins, Instr::Barrier) {
+            found = true;
+        }
+    });
+    found
+}
+
+/// Variables used by `body` but defined outside it, in first-use order —
+/// the values the kernel launch must forward.
+pub fn free_vars(body: &[Instr]) -> Vec<String> {
+    let mut defined: Vec<String> = Vec::new();
+    let mut free: Vec<String> = Vec::new();
+    collect_free(body, &mut defined, &mut free);
+    free
+}
+
+fn use_op(op: &Operand, defined: &[String], free: &mut Vec<String>) {
+    if let Operand::Var(v) = op {
+        if !defined.contains(v) && !free.contains(v) {
+            free.push(v.clone());
+        }
+    }
+}
+
+fn collect_free(body: &[Instr], defined: &mut Vec<String>, free: &mut Vec<String>) {
+    for ins in body {
+        match ins {
+            Instr::Assign { dst, expr } => {
+                for op in expr_operands(expr) {
+                    use_op(op, defined, free);
+                }
+                defined.push(dst.clone());
+            }
+            Instr::Alloca { dst, .. } => defined.push(dst.clone()),
+            Instr::Store { addr, val, .. } => {
+                use_op(addr, defined, free);
+                use_op(val, defined, free);
+            }
+            Instr::Load { dst, addr, .. } => {
+                use_op(addr, defined, free);
+                defined.push(dst.clone());
+            }
+            Instr::Call { dst, args, .. } | Instr::Intrinsic { dst, args, .. } => {
+                for a in args {
+                    use_op(a, defined, free);
+                }
+                if let Some(d) = dst {
+                    defined.push(d.clone());
+                }
+            }
+            Instr::RpcCall { dst, args, .. } => {
+                for a in args {
+                    match a {
+                        crate::ir::RpcArgSpec::Val(o)
+                        | crate::ir::RpcArgSpec::DynRef { ptr: o, .. } => use_op(o, defined, free),
+                        crate::ir::RpcArgSpec::Ref { ptr, .. } => use_op(ptr, defined, free),
+                        crate::ir::RpcArgSpec::MultiRef { ptr, candidates } => {
+                            use_op(ptr, defined, free);
+                            for (c, _, _, _) in candidates {
+                                use_op(c, defined, free);
+                            }
+                        }
+                    }
+                }
+                if let Some(d) = dst {
+                    defined.push(d.clone());
+                }
+            }
+            Instr::KernelLaunch { arg, .. } => {
+                if let Some(a) = arg {
+                    use_op(a, defined, free);
+                }
+            }
+            Instr::If { cond, then_body, else_body } => {
+                use_op(cond, defined, free);
+                collect_free(then_body, defined, free);
+                collect_free(else_body, defined, free);
+            }
+            Instr::While { cond, body, .. } => {
+                collect_free(cond, defined, free);
+                collect_free(body, defined, free);
+            }
+            Instr::For { var, lo, hi, step, body, .. } => {
+                use_op(lo, defined, free);
+                use_op(hi, defined, free);
+                use_op(step, defined, free);
+                defined.push(var.clone());
+                collect_free(body, defined, free);
+            }
+            Instr::Parallel { num_threads, body } => {
+                if let Some(n) = num_threads {
+                    use_op(n, defined, free);
+                }
+                collect_free(body, defined, free);
+            }
+            Instr::Return(Some(op)) => use_op(op, defined, free),
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    const SRC: &str = r#"
+global @out 8192
+
+func @main() -> i64 {
+  %n = 1024
+  %base = gep @out, 0
+  parallel num_threads(128) {
+    %t = tid
+    %nt = nthreads
+    for.team %i = 0 to %n step 1 {
+      %off = mul %i, 8
+      %p = gep %base, %off
+      store.8 %i, %p
+    }
+    barrier
+  }
+  return 0
+}
+"#;
+
+    #[test]
+    fn parallel_region_becomes_kernel_launch() {
+        let mut m = parse_module(SRC).unwrap();
+        let report = run(&mut m);
+        m.verify().unwrap();
+        assert_eq!(report.regions.len(), 1);
+        let info = &report.regions[0];
+        assert_eq!(info.region, "__region_0");
+        assert_eq!(info.captures, vec!["n".to_string(), "base".to_string()]);
+        assert!(info.has_barrier);
+        assert!(matches!(info.num_threads, Some(Operand::ConstI(128))));
+
+        // Main now launches instead of running parallel inline.
+        let body = &m.functions["main"].body;
+        assert!(body.iter().any(|i| matches!(i, Instr::KernelLaunch { region, .. } if region == "__region_0")));
+        assert!(!body.iter().any(|i| matches!(i, Instr::Parallel { .. })));
+
+        // The region function exists, is a kernel, takes the captures.
+        let region = &m.functions["__region_0"];
+        assert!(region.is_kernel_region);
+        assert_eq!(region.params.len(), 2);
+        // omp for -> distribute parallel for.
+        let Instr::For { schedule, .. } = &region.body[2] else { panic!() };
+        assert_eq!(*schedule, Schedule::Grid);
+    }
+
+    #[test]
+    fn round_trips_through_text() {
+        let mut m = parse_module(SRC).unwrap();
+        run(&mut m);
+        let text = crate::ir::printer::print_module(&m);
+        let m2 = parse_module(&text).unwrap();
+        assert_eq!(m, m2);
+    }
+
+    #[test]
+    fn nested_parallel_call_is_skipped() {
+        let src = r#"
+func @inner() -> void {
+  parallel {
+    %t = tid
+  }
+  return
+}
+
+func @main() -> i64 {
+  parallel {
+    call inner()
+  }
+  return 0
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let report = run(&mut m);
+        // @inner's region expands; @main's (which calls parallel code) not.
+        assert_eq!(report.regions.len(), 1);
+        assert_eq!(report.regions[0].in_function, "inner");
+        assert_eq!(report.skipped, vec!["main".to_string()]);
+    }
+
+    #[test]
+    fn rpc_plus_barrier_region_is_skipped() {
+        let src = r#"
+func @main() -> i64 {
+  parallel {
+    call fprintf(2)
+    barrier
+  }
+  return 0
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let report = run(&mut m);
+        assert!(report.regions.is_empty());
+        assert_eq!(report.skipped.len(), 1);
+    }
+
+    #[test]
+    fn free_vars_order_and_shadowing() {
+        let src = r#"
+func @main() -> i64 {
+  %a = 1
+  %b = 2
+  %c = 3
+  parallel {
+    %x = add %b, %a
+    %a2 = add %x, %c
+  }
+  return 0
+}
+"#;
+        let m = parse_module(src).unwrap();
+        let Instr::Parallel { body, .. } = &m.functions["main"].body[3] else { panic!() };
+        assert_eq!(free_vars(body), vec!["b".to_string(), "a".into(), "c".into()]);
+    }
+}

@@ -1,0 +1,102 @@
+//! The "augmented compilation path" of paper Fig. 2: the driver that a
+//! `clang --gpu-first` invocation would run at link time.
+
+use super::{multiteam, rpcgen};
+use crate::ir::Module;
+use crate::rpc::WrapperRegistry;
+
+#[derive(Debug, Clone, Copy)]
+pub struct CompileOptions {
+    /// Generate RPCs for library calls (§3.2). Off = Tian et al. baseline
+    /// where such calls trap.
+    pub rpcgen: bool,
+    /// Expand parallel regions to the whole device (§3.3). Off = original
+    /// single-team direct GPU compilation.
+    pub multiteam: bool,
+}
+
+impl Default for CompileOptions {
+    fn default() -> Self {
+        Self { rpcgen: true, multiteam: true }
+    }
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CompileReport {
+    pub rpc: rpcgen::RpcGenReport,
+    pub multiteam: multiteam::MultiTeamReport,
+}
+
+/// Verify → rpcgen → multi-team expansion → verify.
+pub fn compile(
+    m: &mut Module,
+    registry: &WrapperRegistry,
+    opts: CompileOptions,
+) -> Result<CompileReport, Vec<String>> {
+    m.verify()?;
+    let mut report = CompileReport::default();
+    if opts.rpcgen {
+        report.rpc = rpcgen::run(m, registry);
+    }
+    if opts.multiteam {
+        report.multiteam = multiteam::run(m);
+    }
+    m.verify()?;
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+    use crate::ir::Instr;
+
+    const SRC: &str = r#"
+global @fmt const 14 "result: %d%c"
+
+func @main() -> i64 {
+  %sum = alloca 8
+  store.8 0, %sum
+  parallel num_threads(64) {
+    %t = tid
+    for.team %i = 0 to 4096 step 1 {
+      %v = load.8 %sum
+    }
+  }
+  %r = load.8 %sum
+  call printf(@fmt, %r, 10)
+  return %r
+}
+"#;
+
+    #[test]
+    fn full_pipeline_produces_both_transforms() {
+        let mut m = parse_module(SRC).unwrap();
+        let reg = WrapperRegistry::new();
+        let report = compile(&mut m, &reg, CompileOptions::default()).unwrap();
+        assert_eq!(report.rpc.rewritten.len(), 1);
+        assert_eq!(report.multiteam.regions.len(), 1);
+        let body = &m.functions["main"].body;
+        assert!(body.iter().any(|i| matches!(i, Instr::KernelLaunch { .. })));
+        assert!(body.iter().any(|i| matches!(i, Instr::RpcCall { .. })));
+    }
+
+    #[test]
+    fn options_disable_passes() {
+        let mut m = parse_module(SRC).unwrap();
+        let reg = WrapperRegistry::new();
+        let report =
+            compile(&mut m, &reg, CompileOptions { rpcgen: false, multiteam: false }).unwrap();
+        assert!(report.rpc.rewritten.is_empty());
+        assert!(report.multiteam.regions.is_empty());
+        let body = &m.functions["main"].body;
+        assert!(body.iter().any(|i| matches!(i, Instr::Parallel { .. })));
+    }
+
+    #[test]
+    fn invalid_module_rejected_before_transform() {
+        let mut m = parse_module("func @main() -> i64 {\n  return %undef\n}\n").unwrap();
+        let reg = WrapperRegistry::new();
+        assert!(compile(&mut m, &reg, CompileOptions::default()).is_err());
+    }
+}

@@ -1,0 +1,496 @@
+//! Automatic RPC generation (paper §3.2, Fig. 3).
+//!
+//! A link-time pass with the complete world view: every call to an
+//! *undefined, non-intrinsic* function is replaced by an [`Instr::RpcCall`]
+//! whose argument descriptors encode the underlying-object analysis
+//! results, and a non-variadic host landing pad is synthesized and
+//! registered per `(callee × argument-type-signature)` — variadic call
+//! sites that disagree on argument types get distinct landing pads
+//! (`__fscanf_ip_fp_ip`-style mangling).
+
+use crate::analysis::objects::{classify_operand, def_map, ObjClass, OffKind, StaticObj};
+use crate::ir::{Instr, Module, OffsetSpec, Operand, RpcArgSpec};
+use crate::rpc::wrappers::{self, Conv, HostFnKind};
+use crate::rpc::{ArgMode, WrapperRegistry};
+use std::collections::HashMap;
+
+/// What the pass did — consumed by tests, examples and the CLI's
+/// `--explain` mode.
+#[derive(Debug, Default, Clone)]
+pub struct RpcGenReport {
+    /// (function, original callee, mangled landing-pad name, arg summary).
+    pub rewritten: Vec<(String, String, String, Vec<String>)>,
+    /// Library callees we had no host model for (left as direct calls —
+    /// they will trap in the interpreter, mirroring the paper's
+    /// "not infallible" caveat).
+    pub unsupported: Vec<String>,
+}
+
+/// Run RPC generation over the module, registering landing pads in
+/// `registry`. Returns the report.
+pub fn run(m: &mut Module, registry: &WrapperRegistry) -> RpcGenReport {
+    let mut report = RpcGenReport::default();
+    let fnames: Vec<String> = m.functions.keys().cloned().collect();
+    for fname in fnames {
+        let f = m.functions.get(&fname).unwrap().clone();
+        let defs = def_map(&f);
+        let mut f = f;
+        rewrite_body(m, &mut f.body, &defs, registry, &fname, &mut report);
+        m.functions.insert(fname, f);
+    }
+    report
+}
+
+fn rewrite_body(
+    m: &Module,
+    body: &mut Vec<Instr>,
+    defs: &HashMap<String, Instr>,
+    registry: &WrapperRegistry,
+    fname: &str,
+    report: &mut RpcGenReport,
+) {
+    for ins in body.iter_mut() {
+        match ins {
+            Instr::Call { dst, callee, args }
+                if !m.is_defined(callee) && !Module::is_native_intrinsic(callee) =>
+            {
+                let Some(kind) = wrappers::host_function(callee) else {
+                    if !report.unsupported.contains(callee) {
+                        report.unsupported.push(callee.clone());
+                    }
+                    continue;
+                };
+                let (specs, tags, summary) = build_specs(m, defs, callee, kind, args);
+                let mangled = mangle(callee, &tags);
+                let callee_id = registry.register(&mangled, wrappers::synthesize(kind));
+                report.rewritten.push((
+                    fname.to_string(),
+                    callee.clone(),
+                    mangled.clone(),
+                    summary,
+                ));
+                *ins = Instr::RpcCall { dst: dst.clone(), mangled, callee_id, args: specs };
+            }
+            Instr::If { then_body, else_body, .. } => {
+                rewrite_body(m, then_body, defs, registry, fname, report);
+                rewrite_body(m, else_body, defs, registry, fname, report);
+            }
+            Instr::While { cond, body, .. } => {
+                rewrite_body(m, cond, defs, registry, fname, report);
+                rewrite_body(m, body, defs, registry, fname, report);
+            }
+            Instr::For { body, .. } | Instr::Parallel { body, .. } => {
+                rewrite_body(m, body, defs, registry, fname, report)
+            }
+            _ => {}
+        }
+    }
+}
+
+/// Mangle the landing-pad name from per-argument type tags
+/// (`__fscanf_ip_fp_ip` in Fig. 3b: "the host wrapper function name uses
+/// the variadic argument types").
+pub fn mangle(callee: &str, tags: &[&'static str]) -> String {
+    if tags.is_empty() {
+        format!("__{callee}")
+    } else {
+        format!("__{callee}_{}", tags.join("_"))
+    }
+}
+
+/// Per-argument intent derived from the host-function model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+enum ArgIntent {
+    /// Opaque value (FILE*, int, ...).
+    OpaqueVal,
+    /// Read-only string/buffer.
+    ReadBuf(&'static str),
+    /// Write-only out-buffer.
+    WriteBuf(&'static str),
+    /// Read-write buffer (unknown callee behaviour).
+    RwBuf(&'static str),
+    /// Numeric vararg passed by value.
+    NumVal(&'static str),
+}
+
+/// Determine each argument's intent for `kind`, consulting the format
+/// string (when it is a compile-time constant) for variadic calls —
+/// exactly the precision the paper's pass gets from constant formats.
+fn arg_intents(m: &Module, kind: HostFnKind, args: &[Operand], defs: &HashMap<String, Instr>) -> Vec<ArgIntent> {
+    use ArgIntent::*;
+    let fmt_convs = |fmt_idx: usize| -> Option<Vec<Conv>> {
+        let op = args.get(fmt_idx)?;
+        let defs_class = classify_operand(m, defs, op);
+        if let ObjClass::Static(StaticObj { origin, constant: true, .. }) = defs_class {
+            if let crate::analysis::objects::ObjOrigin::Global(g) = origin {
+                let init = &m.globals[&g].init;
+                let text = String::from_utf8_lossy(&init[..init.len().saturating_sub(1)]).into_owned();
+                return Some(
+                    wrappers::parse_format(&text)
+                        .into_iter()
+                        .filter_map(|(_, c)| c.map(|(conv, _, _)| conv))
+                        .filter(|c| *c != Conv::Percent)
+                        .collect(),
+                );
+            }
+        }
+        None
+    };
+    match kind {
+        HostFnKind::Printf { has_fd } => {
+            let fmt_i = usize::from(has_fd);
+            let mut v = Vec::new();
+            if has_fd {
+                v.push(OpaqueVal);
+            }
+            v.push(ReadBuf("cp"));
+            match fmt_convs(fmt_i) {
+                Some(convs) => {
+                    for c in convs {
+                        v.push(match c {
+                            Conv::Str => ReadBuf("cp"),
+                            Conv::Float => NumVal("f"),
+                            _ => NumVal("i"),
+                        });
+                    }
+                    // Extra args beyond conversions: opaque.
+                    while v.len() < args.len() {
+                        v.push(OpaqueVal);
+                    }
+                }
+                None => {
+                    // Unknown format: buffers must be copied back and forth
+                    // (the Fig. 7 `fprintf` case).
+                    while v.len() < args.len() {
+                        v.push(RwBuf("vp"));
+                    }
+                }
+            }
+            v
+        }
+        HostFnKind::Scanf { has_fd } => {
+            let fmt_i = usize::from(has_fd);
+            let mut v = Vec::new();
+            if has_fd {
+                v.push(OpaqueVal);
+            }
+            v.push(ReadBuf("cp"));
+            match fmt_convs(fmt_i) {
+                Some(convs) => {
+                    for c in convs {
+                        v.push(match c {
+                            Conv::Float => WriteBuf("fp"),
+                            Conv::Str => WriteBuf("cp"),
+                            _ => WriteBuf("ip"),
+                        });
+                    }
+                    while v.len() < args.len() {
+                        v.push(RwBuf("vp"));
+                    }
+                }
+                None => {
+                    while v.len() < args.len() {
+                        v.push(RwBuf("vp"));
+                    }
+                }
+            }
+            v
+        }
+        HostFnKind::Fopen => vec![ReadBuf("cp"), ReadBuf("cp")],
+        HostFnKind::Fclose => vec![OpaqueVal],
+        HostFnKind::Fread => vec![WriteBuf("vp"), NumVal("i"), NumVal("i"), OpaqueVal],
+        HostFnKind::Fwrite => vec![ReadBuf("vp"), NumVal("i"), NumVal("i"), OpaqueVal],
+        HostFnKind::Puts => vec![ReadBuf("cp")],
+        HostFnKind::Exit => vec![NumVal("i")],
+        HostFnKind::Time => vec![],
+        HostFnKind::Getenv => vec![ReadBuf("cp"), WriteBuf("cp")],
+        HostFnKind::LaunchKernel => vec![NumVal("i"), NumVal("i")],
+    }
+}
+
+#[allow(clippy::type_complexity)]
+fn build_specs(
+    m: &Module,
+    defs: &HashMap<String, Instr>,
+    _callee: &str,
+    kind: HostFnKind,
+    args: &[Operand],
+) -> (Vec<RpcArgSpec>, Vec<&'static str>, Vec<String>) {
+    let intents = arg_intents(m, kind, args, defs);
+    let mut specs = Vec::new();
+    let mut tags: Vec<&'static str> = Vec::new();
+    let mut summary = Vec::new();
+    for (i, arg) in args.iter().enumerate() {
+        let intent = intents.get(i).copied().unwrap_or(ArgIntent::RwBuf("vp"));
+        let class = classify_operand(m, defs, arg);
+        let (spec, tag, desc) = lower_arg(arg, intent, class);
+        specs.push(spec);
+        tags.push(tag);
+        summary.push(desc);
+    }
+    (specs, tags, summary)
+}
+
+fn lower_arg(arg: &Operand, intent: ArgIntent, class: ObjClass) -> (RpcArgSpec, &'static str, String) {
+    use ArgIntent::*;
+    // Value intents never migrate memory.
+    match intent {
+        OpaqueVal => return (RpcArgSpec::Val(arg.clone()), "p", "value (opaque)".into()),
+        NumVal(t) => return (RpcArgSpec::Val(arg.clone()), t, "value".into()),
+        _ => {}
+    }
+    let (mode, tag) = match intent {
+        ReadBuf(t) => (ArgMode::Read, t),
+        WriteBuf(t) => (ArgMode::Write, t),
+        RwBuf(t) => (ArgMode::ReadWrite, t),
+        _ => unreachable!(),
+    };
+    let adjust = |mode: ArgMode, s: &StaticObj| -> ArgMode {
+        if s.constant {
+            // Constant objects are copy-in only (the format-string case).
+            ArgMode::Read
+        } else if mode == ArgMode::Write && !(s.offset == OffKind::Const(0) && s.size <= 8) {
+            // Write-only is only safe when the pointer owns its whole small
+            // object (the paper's `&i` vs `&s.b` distinction: writing a
+            // field of a live struct must round-trip the struct).
+            ArgMode::ReadWrite
+        } else {
+            mode
+        }
+    };
+    match class {
+        ObjClass::Value => (RpcArgSpec::Val(arg.clone()), tag, "value (scalar)".into()),
+        ObjClass::Static(s) => {
+            let mode = adjust(mode, &s);
+            match s.offset {
+                OffKind::Const(c) => (
+                    RpcArgSpec::Ref {
+                        ptr: arg.clone(),
+                        mode,
+                        obj_size: s.size,
+                        offset: OffsetSpec::Const(c),
+                    },
+                    tag,
+                    format!("static object {:?} size {} offset {}", s.origin, s.size, c),
+                ),
+                OffKind::Dynamic => (
+                    RpcArgSpec::MultiRef {
+                        ptr: arg.clone(),
+                        candidates: vec![(s.origin.base_operand(), mode, s.size, OffsetSpec::Dynamic)],
+                    },
+                    tag,
+                    format!("static object {:?}, dynamic offset", s.origin),
+                ),
+            }
+        }
+        ObjClass::Multi(cands) => {
+            let candidates = cands
+                .iter()
+                .map(|s| {
+                    let mode = adjust(mode, s);
+                    let off = match s.offset {
+                        OffKind::Const(c) => OffsetSpec::Const(c),
+                        OffKind::Dynamic => OffsetSpec::Dynamic,
+                    };
+                    (s.origin.base_operand(), mode, s.size, off)
+                })
+                .collect();
+            (
+                RpcArgSpec::MultiRef { ptr: arg.clone(), candidates },
+                tag,
+                format!("{} statically enumerated candidates", cands.len()),
+            )
+        }
+        ObjClass::Dynamic => (
+            RpcArgSpec::DynRef { ptr: arg.clone(), mode },
+            tag,
+            "dynamic lookup (_FindObj)".into(),
+        ),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    fn run_on(src: &str) -> (Module, RpcGenReport, WrapperRegistry) {
+        let mut m = parse_module(src).unwrap();
+        m.verify().unwrap();
+        let registry = WrapperRegistry::new();
+        let report = run(&mut m, &registry);
+        m.verify().unwrap();
+        (m, report, registry)
+    }
+
+    const FIG3: &str = r#"
+global @fmt const 9 "%f %i %i"
+
+func @use(%s: ptr, %r: i64, %i: i64) -> void {
+  return
+}
+
+func @main() -> i64 {
+  %fd = 0
+  %s = alloca 12
+  %i = alloca 4
+  %sa = load.4 %s
+  %pb = gep %s, 4
+  %pf = gep %s, 8
+  %c = ne %sa, 0
+  %p = select %c, %i, %pb
+  %r = call fscanf(%fd, @fmt, %pf, %p, %i)
+  call use(%s, %r, 0)
+  return %r
+}
+"#;
+
+    #[test]
+    fn fig3_call_site_lowered_like_the_paper() {
+        let (m, report, reg) = run_on(FIG3);
+        // Mangled per the variadic arg types: fd, fmt, %f -> fp, %i -> ip, %i -> ip.
+        assert_eq!(report.rewritten.len(), 1);
+        let (_, callee, mangled, _) = &report.rewritten[0];
+        assert_eq!(callee, "fscanf");
+        assert_eq!(mangled, "__fscanf_p_cp_fp_ip_ip");
+        assert!(reg.id_of(mangled).is_some());
+
+        let body = &m.functions["main"].body;
+        let Some(Instr::RpcCall { args, .. }) =
+            body.iter().find(|i| matches!(i, Instr::RpcCall { .. }))
+        else {
+            panic!("no RpcCall in {body:?}")
+        };
+        // fd: value.
+        assert!(matches!(&args[0], RpcArgSpec::Val(_)));
+        // fmt: const global, read-only, size 9, offset 0.
+        assert!(matches!(
+            &args[1],
+            RpcArgSpec::Ref { mode: ArgMode::Read, obj_size: 9, offset: OffsetSpec::Const(0), .. }
+        ));
+        // &s.f: inside a 12-byte live struct -> readwrite, offset 8.
+        assert!(matches!(
+            &args[2],
+            RpcArgSpec::Ref {
+                mode: ArgMode::ReadWrite,
+                obj_size: 12,
+                offset: OffsetSpec::Const(8),
+                ..
+            }
+        ));
+        // select(&i, &s.b): statically enumerated candidates, &i write-only
+        // (owns its whole 4-byte object), &s.b readwrite.
+        let RpcArgSpec::MultiRef { candidates, .. } = &args[3] else {
+            panic!("{:?}", args[3])
+        };
+        assert_eq!(candidates.len(), 2);
+        assert_eq!(candidates[0].1, ArgMode::Write);
+        assert_eq!(candidates[0].2, 4);
+        assert_eq!(candidates[1].1, ArgMode::ReadWrite);
+        assert_eq!(candidates[1].2, 12);
+        assert_eq!(candidates[1].3, OffsetSpec::Const(4));
+        // &i direct: own whole object -> write-only.
+        assert!(matches!(&args[4], RpcArgSpec::Ref { mode: ArgMode::Write, obj_size: 4, .. }));
+        // Internal call untouched.
+        assert!(body.iter().any(|i| matches!(i, Instr::Call { callee, .. } if callee == "use")));
+    }
+
+    #[test]
+    fn unknown_format_makes_buffers_readwrite() {
+        // The Fig. 7 experiment: fprintf with a buffer whose read/write
+        // behaviour is unknown without inspecting the format.
+        let src = r#"
+func @main(%fmt: ptr, %buf: ptr) -> i64 {
+  %r = call fprintf(2, %fmt, %buf)
+  return %r
+}
+"#;
+        let (m, _, _) = run_on(src);
+        let body = &m.functions["main"].body;
+        let Instr::RpcCall { args, mangled, .. } = &body[0] else { panic!() };
+        // fd is opaque, the format itself is still read-only, but the
+        // trailing buffer can't be classified without the format text.
+        assert_eq!(mangled, "__fprintf_p_cp_vp");
+        assert!(matches!(&args[1], RpcArgSpec::DynRef { mode: ArgMode::Read, .. }));
+        assert!(matches!(&args[2], RpcArgSpec::DynRef { mode: ArgMode::ReadWrite, .. }));
+    }
+
+    #[test]
+    fn const_format_numeric_args_pass_by_value() {
+        let src = r#"
+global @fmt const 12 "it=%d x=%f\n"
+
+func @main() -> i64 {
+  %x = 1.5
+  %r = call printf(@fmt, 3, %x)
+  return %r
+}
+"#;
+        let (m, report, _) = run_on(src);
+        assert_eq!(report.rewritten[0].2, "__printf_cp_i_f");
+        let Instr::RpcCall { args, .. } = &m.functions["main"].body[1] else { panic!() };
+        assert!(matches!(&args[1], RpcArgSpec::Val(Operand::ConstI(3))));
+        assert!(matches!(&args[2], RpcArgSpec::Val(Operand::Var(v)) if v == "x"));
+    }
+
+    #[test]
+    fn malloc_pointer_gets_dynamic_lookup() {
+        let src = r#"
+global @fmt const 4 "%s\n"
+
+func @main() -> i64 {
+  %p = call malloc(64)
+  %r = call printf(@fmt, %p)
+  return %r
+}
+"#;
+        let (m, _, _) = run_on(src);
+        let Instr::RpcCall { args, .. } = &m.functions["main"].body[1] else { panic!() };
+        assert!(matches!(&args[1], RpcArgSpec::DynRef { mode: ArgMode::Read, .. }));
+    }
+
+    #[test]
+    fn unmodeled_library_reported_unsupported() {
+        let src = "func @main() -> i64 {\n  call dgemm(1)\n  return 0\n}\n";
+        let (m, report, _) = run_on(src);
+        assert_eq!(report.unsupported, vec!["dgemm"]);
+        assert!(matches!(&m.functions["main"].body[0], Instr::Call { .. }));
+    }
+
+    #[test]
+    fn same_signature_shares_landing_pad() {
+        let src = r#"
+global @f1 const 3 "%d"
+global @f2 const 3 "%d"
+
+func @main() -> i64 {
+  call printf(@f1, 1)
+  call printf(@f2, 2)
+  return 0
+}
+"#;
+        let (_, report, reg) = run_on(src);
+        assert_eq!(report.rewritten.len(), 2);
+        assert_eq!(report.rewritten[0].2, report.rewritten[1].2);
+        assert_eq!(reg.len(), 1);
+    }
+
+    #[test]
+    fn disagreeing_variadic_sites_get_distinct_pads() {
+        let src = r#"
+global @f1 const 3 "%d"
+global @f2 const 3 "%f"
+
+func @main() -> i64 {
+  %x = 2.5
+  call printf(@f1, 1)
+  call printf(@f2, %x)
+  return 0
+}
+"#;
+        let (_, report, reg) = run_on(src);
+        assert_eq!(report.rewritten[0].2, "__printf_cp_i");
+        assert_eq!(report.rewritten[1].2, "__printf_cp_f");
+        assert_eq!(reg.len(), 2);
+    }
+}

@@ -1,0 +1,153 @@
+//! Criterion-free benchmarking harness.
+//!
+//! `cargo bench` targets use [`Bencher`] to time closures with warmup,
+//! adaptive iteration counts and outlier-robust summaries, and emit both a
+//! human table and an optional JSON report (for EXPERIMENTS.md extraction).
+
+use super::stats::Summary;
+use std::hint::black_box;
+use std::time::{Duration, Instant};
+
+pub use std::hint::black_box as bb;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    /// Per-iteration wallclock summary, nanoseconds.
+    pub ns: Summary,
+    pub iters_per_sample: u64,
+}
+
+pub struct Bencher {
+    /// Target measurement time per benchmark.
+    pub measure: Duration,
+    pub warmup: Duration,
+    pub samples: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self {
+            measure: Duration::from_millis(600),
+            warmup: Duration::from_millis(150),
+            samples: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Self {
+        Self {
+            measure: Duration::from_millis(120),
+            warmup: Duration::from_millis(30),
+            samples: 8,
+            results: Vec::new(),
+        }
+    }
+
+    /// Honors `GPU_FIRST_BENCH_QUICK=1` for CI-speed runs.
+    pub fn from_env() -> Self {
+        if std::env::var("GPU_FIRST_BENCH_QUICK").as_deref() == Ok("1") {
+            Self::quick()
+        } else {
+            Self::default()
+        }
+    }
+
+    /// Time `f`, which performs ONE logical iteration per call.
+    pub fn bench(&mut self, name: &str, mut f: impl FnMut()) -> BenchResult {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup.as_secs_f64() / calib_iters.max(1) as f64;
+        let total_iters =
+            ((self.measure.as_secs_f64() / per_iter).ceil() as u64).max(self.samples as u64);
+        let iters_per_sample = (total_iters / self.samples as u64).max(1);
+
+        let mut samples_ns = Vec::with_capacity(self.samples);
+        for _ in 0..self.samples {
+            let t = Instant::now();
+            for _ in 0..iters_per_sample {
+                f();
+            }
+            samples_ns.push(t.elapsed().as_nanos() as f64 / iters_per_sample as f64);
+        }
+        let result = BenchResult {
+            name: name.to_string(),
+            ns: Summary::of(&samples_ns),
+            iters_per_sample,
+        };
+        println!(
+            "bench {:<48} {:>12} /iter (p50 {:>12}, n={} x{})",
+            result.name,
+            super::fmt_ns(result.ns.mean),
+            super::fmt_ns(result.ns.p50),
+            self.samples,
+            iters_per_sample
+        );
+        self.results.push(result.clone());
+        result
+    }
+
+    /// Time `f` once (for long-running end-to-end measurements).
+    pub fn bench_once(&mut self, name: &str, f: impl FnOnce()) -> BenchResult {
+        let t = Instant::now();
+        f();
+        let ns = t.elapsed().as_nanos() as f64;
+        let result = BenchResult {
+            name: name.to_string(),
+            ns: Summary::of(&[ns]),
+            iters_per_sample: 1,
+        };
+        println!("bench {:<48} {:>12} (single shot)", result.name, super::fmt_ns(ns));
+        self.results.push(result.clone());
+        result
+    }
+}
+
+/// Measure median wallclock (ns) of `f` over `reps` runs — helper for bench
+/// binaries that report derived quantities rather than raw timings.
+pub fn time_median_ns(reps: usize, mut f: impl FnMut()) -> f64 {
+    assert!(reps > 0);
+    let mut xs = Vec::with_capacity(reps);
+    for _ in 0..reps {
+        let t = Instant::now();
+        black_box(&mut f)();
+        xs.push(t.elapsed().as_nanos() as f64);
+    }
+    xs.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    xs[reps / 2]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let mut b = Bencher::quick();
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000u64 {
+                acc = acc.wrapping_add(bb(i));
+            }
+            bb(acc);
+        });
+        assert!(r.ns.mean > 0.0);
+        assert_eq!(b.results.len(), 1);
+    }
+
+    #[test]
+    fn time_median_positive() {
+        let ns = time_median_ns(5, || {
+            bb((0..100u64).sum::<u64>());
+        });
+        assert!(ns > 0.0);
+    }
+}

@@ -1,0 +1,128 @@
+//! Minimal command-line argument parser (no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
+//! subcommands. Typed accessors with defaults; unknown-option detection.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`. `subcommands` lists recognized first tokens; if the
+    /// first non-option token matches, it is taken as the subcommand.
+    pub fn parse(argv: &[String], subcommands: &[&str]) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    // `--key value` only when a value-looking token follows.
+                    let v = it.next().unwrap().clone();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.subcommand.is_none()
+                && out.positional.is_empty()
+                && subcommands.contains(&tok.as_str())
+            {
+                out.subcommand = Some(tok.clone());
+            } else {
+                out.positional.push(tok.clone());
+            }
+        }
+        out
+    }
+
+    pub fn from_env(subcommands: &[&str]) -> Self {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Self::parse(&argv, subcommands)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_options_flags_positionals() {
+        let a = Args::parse(
+            &sv(&["run", "--teams", "8", "--verbose", "--mode=event", "prog.ir"]),
+            &["run", "compile"],
+        );
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.get("teams"), Some("8"));
+        assert!(a.flag("verbose"));
+        assert_eq!(a.get("mode"), Some("event"));
+        assert_eq!(a.positional, vec!["prog.ir"]);
+    }
+
+    #[test]
+    fn trailing_flag_has_no_value() {
+        let a = Args::parse(&sv(&["--verbose"]), &[]);
+        assert!(a.flag("verbose"));
+        assert!(a.get("verbose").is_none());
+    }
+
+    #[test]
+    fn typed_accessors_and_defaults() {
+        let a = Args::parse(&sv(&["--n", "42", "--x=2.5"]), &[]);
+        assert_eq!(a.get_usize("n", 0), 42);
+        assert_eq!(a.get_f64("x", 0.0), 2.5);
+        assert_eq!(a.get_usize("missing", 7), 7);
+        assert_eq!(a.get_or("mode", "default"), "default");
+    }
+
+    #[test]
+    fn double_dash_then_double_dash_is_flag() {
+        let a = Args::parse(&sv(&["--a", "--b", "v"]), &[]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("v"));
+    }
+}

@@ -1,0 +1,50 @@
+//! Offline substrate utilities.
+//!
+//! The build environment has no network access and only the `xla` crate's
+//! dependency tree vendored, so everything a well-maintained project would
+//! normally pull from crates.io (CLI parsing, benchmarking, property
+//! testing, JSON) is implemented here from scratch.
+
+pub mod rng;
+pub mod cli;
+pub mod json;
+pub mod stats;
+pub mod table;
+pub mod prop;
+pub mod bench;
+
+/// Format a nanosecond quantity with an adaptive unit.
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+/// Format a ratio as `N.NNx` speedup / slowdown.
+pub fn fmt_ratio(r: f64) -> String {
+    format!("{r:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_ns_units() {
+        assert_eq!(fmt_ns(12.0), "12.0 ns");
+        assert_eq!(fmt_ns(1200.0), "1.20 us");
+        assert_eq!(fmt_ns(2.5e6), "2.50 ms");
+        assert_eq!(fmt_ns(3.2e9), "3.200 s");
+    }
+
+    #[test]
+    fn fmt_ratio_rounds() {
+        assert_eq!(fmt_ratio(14.357), "14.36x");
+    }
+}

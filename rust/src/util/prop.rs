@@ -1,0 +1,174 @@
+//! Mini property-based testing harness (proptest is not available offline).
+//!
+//! Provides a deterministic generator context [`Gen`] and a [`check`] driver
+//! that runs a property over many random cases and, on failure, retries with
+//! simple input-size shrinking (re-generating with a smaller size budget) to
+//! report a small counterexample seed.
+//!
+//! Usage:
+//! ```no_run
+//! use gpu_first::util::prop::{check, Gen};
+//! check("reverse twice is identity", 200, |g: &mut Gen| {
+//!     let xs: Vec<u32> = g.vec(0..=64, |g| g.u32(0..1000));
+//!     let mut ys = xs.clone();
+//!     ys.reverse();
+//!     ys.reverse();
+//!     assert_eq!(xs, ys);
+//! });
+//! ```
+
+use super::rng::Xoshiro256;
+use std::ops::RangeInclusive;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+
+/// Random value generator handed to properties. `size` bounds collection
+/// lengths so shrink retries can re-run with smaller inputs.
+pub struct Gen {
+    rng: Xoshiro256,
+    pub size: usize,
+    pub seed: u64,
+}
+
+impl Gen {
+    pub fn new(seed: u64, size: usize) -> Self {
+        Self { rng: Xoshiro256::new(seed), size, seed }
+    }
+
+    pub fn u64(&mut self, lo: u64, hi_excl: u64) -> u64 {
+        assert!(hi_excl > lo);
+        lo + self.rng.next_below(hi_excl - lo)
+    }
+
+    pub fn u32(&mut self, r: std::ops::Range<u32>) -> u32 {
+        self.u64(r.start as u64, r.end as u64) as u32
+    }
+
+    pub fn usize(&mut self, r: std::ops::Range<usize>) -> usize {
+        self.u64(r.start as u64, r.end as u64) as usize
+    }
+
+    pub fn f64(&mut self, lo: f64, hi: f64) -> f64 {
+        self.rng.range_f64(lo, hi)
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.next_u64() & 1 == 1
+    }
+
+    /// Bernoulli with probability `p`.
+    pub fn weighted(&mut self, p: f64) -> bool {
+        self.rng.next_f64() < p
+    }
+
+    /// Pick one element from a slice.
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.usize(0..xs.len())]
+    }
+
+    /// A vector whose length is drawn from `len` clamped by the size budget.
+    pub fn vec<T>(&mut self, len: RangeInclusive<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+        let hi = (*len.end()).min(self.size.max(*len.start()));
+        let lo = (*len.start()).min(hi);
+        let n = self.usize(lo..hi + 1);
+        (0..n).map(|_| f(self)).collect()
+    }
+
+    /// An identifier-looking string.
+    pub fn ident(&mut self) -> String {
+        let n = self.usize(1..9);
+        let mut s = String::new();
+        for i in 0..n {
+            let c = if i == 0 {
+                b'a' + self.u64(0, 26) as u8
+            } else {
+                let k = self.u64(0, 36) as u8;
+                if k < 26 { b'a' + k } else { b'0' + (k - 26) }
+            };
+            s.push(c as char);
+        }
+        s
+    }
+}
+
+/// Run `prop` over `cases` random cases. Panics (failing the enclosing
+/// test) with the seed and a shrunk size budget if a case fails.
+pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
+    let base_seed = 0xC0FFEE ^ fxhash(name);
+    for case in 0..cases {
+        let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
+        let size = 4 + (case as usize % 64);
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut g = Gen::new(seed, size);
+            prop(&mut g);
+        }));
+        if let Err(payload) = result {
+            // Shrink: retry the same seed with progressively smaller sizes to
+            // find the smallest size budget that still fails.
+            let mut min_fail = size;
+            for s in (1..size).rev() {
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    let mut g = Gen::new(seed, s);
+                    prop(&mut g);
+                }));
+                if r.is_err() {
+                    min_fail = s;
+                }
+            }
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".to_string());
+            panic!(
+                "property {name:?} failed (case {case}, seed {seed:#x}, shrunk size {min_fail}): {msg}"
+            );
+        }
+    }
+}
+
+fn fxhash(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sort is idempotent", 100, |g| {
+            let mut xs: Vec<u32> = g.vec(0..=32, |g| g.u32(0..100));
+            xs.sort_unstable();
+            let once = xs.clone();
+            xs.sort_unstable();
+            assert_eq!(once, xs);
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = std::panic::catch_unwind(|| {
+            check("always fails on big vecs", 50, |g| {
+                let xs: Vec<u32> = g.vec(0..=32, |g| g.u32(0..100));
+                assert!(xs.len() < 3, "too big");
+            });
+        });
+        assert!(r.is_err());
+    }
+
+    #[test]
+    fn gen_ranges_respected() {
+        let mut g = Gen::new(1, 16);
+        for _ in 0..1000 {
+            let v = g.u64(10, 20);
+            assert!((10..20).contains(&v));
+            let f = g.f64(-1.0, 1.0);
+            assert!((-1.0..1.0).contains(&f));
+        }
+    }
+}

@@ -1,0 +1,120 @@
+//! Cross-mode validation of the evaluation apps: CPU, GPU First and (where
+//! it exists) the AOT-offload artifact must compute the same answers, and
+//! the modeled figure shapes must hold end to end.
+
+use gpu_first::apps::common::{close, Mode};
+use gpu_first::apps::*;
+
+fn have_artifacts() -> bool {
+    std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists()
+}
+
+#[test]
+fn xsbench_offload_matches_cpu_numerics() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    for w in [xsbench::XsWorkload::small(), xsbench::XsWorkload::large()] {
+        let cpu = xsbench::run(Mode::Cpu, xsbench::LookupMode::Event, &w);
+        let off = xsbench::run(Mode::Offload, xsbench::LookupMode::Event, &w);
+        assert!(
+            close(cpu.checksum, off.checksum, 1e-3),
+            "{}: cpu {} vs offload {}",
+            w.label,
+            cpu.checksum,
+            off.checksum
+        );
+    }
+}
+
+#[test]
+fn rsbench_offload_matches_cpu_numerics() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let w = rsbench::RsWorkload::small();
+    let cpu = rsbench::run(Mode::Cpu, rsbench::LookupMode::Event, &w);
+    let off = rsbench::run(Mode::Offload, rsbench::LookupMode::Event, &w);
+    assert!(close(cpu.checksum, off.checksum, 1e-3), "cpu {} vs offload {}", cpu.checksum, off.checksum);
+}
+
+#[test]
+fn interleaved_offload_matches_both_layouts() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let w = interleaved::InterleavedWorkload::default();
+    for layout in [interleaved::Layout::Soa, interleaved::Layout::Aos] {
+        let cpu = interleaved::run(Mode::Cpu, layout, &w);
+        let off = interleaved::run(Mode::Offload, layout, &w);
+        assert!(close(cpu.checksum, off.checksum, 1e-3), "{layout:?}");
+    }
+}
+
+#[test]
+fn amgmk_and_pagerank_offload_match() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let aw = amgmk::AmgmkWorkload::default();
+    let a_cpu = amgmk::run(Mode::Cpu, &aw);
+    let a_off = amgmk::run(Mode::Offload, &aw);
+    assert!(close(a_cpu.checksum, a_off.checksum, 1e-2), "amgmk {} vs {}", a_cpu.checksum, a_off.checksum);
+
+    let pw = pagerank::PagerankWorkload::default();
+    let p_cpu = pagerank::run(Mode::Cpu, &pw);
+    let p_off = pagerank::run(Mode::Offload, &pw);
+    assert!(close(p_cpu.checksum, p_off.checksum, 1e-2), "pagerank");
+}
+
+#[test]
+fn hypterm_offload_matches_all_regions() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    let w = hypterm::HyptermWorkload::default();
+    for region in 0..3 {
+        let cpu = hypterm::run(Mode::Cpu, region, &w);
+        let off = hypterm::run(Mode::Offload, region, &w);
+        assert!(
+            close(cpu.checksum, off.checksum, 2e-2),
+            "PR{}: cpu {} vs offload {}",
+            region + 1,
+            cpu.checksum,
+            off.checksum
+        );
+    }
+}
+
+#[test]
+fn fig8a_headline_speedup_in_paper_range() {
+    // §1/E12: "up to 14.36x speedup on the GPU" for the proxy app. Our
+    // modeled testbed should land in the same order of magnitude.
+    let w = xsbench::XsWorkload::large();
+    let cpu = xsbench::run(Mode::Cpu, xsbench::LookupMode::Event, &w);
+    let gpu = xsbench::run(Mode::GpuFirst, xsbench::LookupMode::Event, &w);
+    let speedup = gpu.speedup_vs(&cpu);
+    assert!(
+        (2.0..60.0).contains(&speedup),
+        "headline speedup {speedup} out of plausible range (paper: 14.36x)"
+    );
+}
+
+#[test]
+fn gpu_first_tracks_offload_at_large_input() {
+    if !have_artifacts() {
+        eprintln!("skipping: run `make artifacts`");
+        return;
+    }
+    // Paper: "with the large input the two results are a close match".
+    let w = xsbench::XsWorkload::large();
+    let gf = xsbench::run(Mode::GpuFirst, xsbench::LookupMode::Event, &w);
+    let off = xsbench::run(Mode::Offload, xsbench::LookupMode::Event, &w);
+    let ratio = gf.modeled_ns / off.modeled_ns;
+    assert!((0.3..3.0).contains(&ratio), "GPU First vs offload ratio {ratio}");
+}

@@ -1,0 +1,229 @@
+//! End-to-end compiler-pipeline integration: unmodified IR source →
+//! rpcgen + multiteam → execution on the simulated device with a live RPC
+//! server → host-observable effects.
+
+use gpu_first::coordinator::{Config, GpuFirstSession};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::ir::parser::parse_module;
+use gpu_first::transform::CompileOptions;
+
+fn session() -> GpuFirstSession {
+    GpuFirstSession::start(Config {
+        mem: MemConfig::small(),
+        teams: 8,
+        threads_per_team: 32,
+        ..Default::default()
+    })
+}
+
+#[test]
+fn file_io_compute_report_cycle() {
+    // Read config from a file, compute in an expanded parallel region,
+    // write a report via printf — the classic legacy-app shape.
+    let src = r#"
+global @path const 8 "cfg.txt"
+global @mode const 2 "r"
+global @fmt const 6 "%d %d"
+global @out const 15 "result=%d n=%d"
+global @buf 32768
+
+func @main() -> i64 {
+  %fd = call fopen(@path, @mode)
+  %np = alloca 4
+  %sp = alloca 4
+  %r = call fscanf(%fd, @fmt, %np, %sp)
+  call fclose(%fd)
+  %n = load.4 %np
+  %scale = load.4 %sp
+  parallel {
+    for.team %i = 0 to %n step 1 {
+      %v = mul %i, %scale
+      %off = mul %i, 8
+      %p = gep @buf, %off
+      store.8 %v, %p
+    }
+  }
+  %acc = alloca 8
+  store.8 0, %acc
+  for %i = 0 to %n step 1 {
+    %off = mul %i, 8
+    %p = gep @buf, %off
+    %v = load.8 %p
+    %a = load.8 %acc
+    %a2 = add %a, %v
+    store.8 %a2, %acc
+  }
+  %sum = load.8 %acc
+  call printf(@out, %sum, %n)
+  return %sum
+}
+"#;
+    let module = parse_module(src).unwrap();
+    let mut s = session();
+    s.host.put_file("cfg.txt", b"100 7");
+    let (ret, metrics) = s.execute(module, CompileOptions::default(), &[]).unwrap();
+    let expect: i64 = (0..100).map(|i| i * 7).sum();
+    assert_eq!(ret, expect);
+    assert_eq!(s.host.stdout_string(), format!("result={expect} n=100"));
+    assert_eq!(metrics.kernel_launches, 1, "the parallel region was kernel-split");
+    assert!(metrics.main_stats.rpc_calls >= 4, "fopen+fscanf+fclose+printf");
+    assert!(metrics.modeled_device_ns() > 0.0);
+    s.stop();
+}
+
+#[test]
+fn dynamic_lookup_resolves_heap_objects_via_allocator() {
+    // A malloc'd buffer passed to a library call: _FindObj must resolve it
+    // through allocation tracking so scanf can write into it.
+    let src = r#"
+global @path const 6 "n.txt"
+global @mode const 2 "r"
+global @fmt const 3 "%d"
+
+func @main() -> i64 {
+  %fd = call fopen(@path, @mode)
+  %buf = call malloc(16)
+  %r = call fscanf(%fd, @fmt, %buf)
+  call fclose(%fd)
+  %v = load.4 %buf
+  call free(%buf)
+  return %v
+}
+"#;
+    let module = parse_module(src).unwrap();
+    let mut s = session();
+    s.host.put_file("n.txt", b"31337");
+    let (ret, _) = s.execute(module, CompileOptions::default(), &[]).unwrap();
+    assert_eq!(ret, 31337);
+    s.stop();
+}
+
+#[test]
+fn multi_candidate_select_argument_round_trips() {
+    // The Fig. 3 select: the runtime picks the right candidate per branch.
+    let src = r#"
+global @path const 6 "v.txt"
+global @mode const 2 "r"
+global @fmt const 3 "%d"
+
+func @read_into(%cond: i64) -> i64 {
+  %fd = call fopen(@path, @mode)
+  %s = alloca 8
+  %i = alloca 4
+  %pb = gep %s, 4
+  %p = select %cond, %i, %pb
+  %r = call fscanf(%fd, @fmt, %p)
+  call fclose(%fd)
+  %vi = load.4 %i
+  %vb = load.4 %pb
+  %out = select %cond, %vi, %vb
+  return %out
+}
+
+func @main() -> i64 {
+  %a = call read_into(1)
+  %b = call read_into(0)
+  %c = mul %a, 1000
+  %r = add %c, %b
+  return %r
+}
+"#;
+    let module = parse_module(src).unwrap();
+    let mut s = session();
+    s.host.put_file("v.txt", b"42 37");
+    let (ret, _) = s.execute(module, CompileOptions::default(), &[]).unwrap();
+    // Each read_into() fopens afresh, so both branches read the first
+    // value — the point is that BOTH select candidates round-trip.
+    assert_eq!(ret, 42 * 1000 + 42);
+    s.stop();
+}
+
+#[test]
+fn single_team_and_multiteam_agree_and_multiteam_models_faster() {
+    let src = r#"
+global @buf 65536
+
+func @main() -> i64 {
+  parallel num_threads(4096) {
+    for.team %i = 0 to 8192 step 1 {
+      %sq = mul %i, %i
+      %off = mul %i, 8
+      %p = gep @buf, %off
+      store.8 %sq, %p
+    }
+  }
+  %p = gep @buf, 32768
+  %r = load.8 %p
+  return %r
+}
+"#;
+    let run = |multiteam: bool| {
+        let module = parse_module(src).unwrap();
+        let mut s = session();
+        let (ret, metrics) = s
+            .execute(module, CompileOptions { rpcgen: true, multiteam }, &[])
+            .unwrap();
+        s.stop();
+        (ret, metrics)
+    };
+    let (r_multi, m_multi) = run(true);
+    let (r_single, m_single) = run(false);
+    assert_eq!(r_multi, 4096i64 * 4096);
+    assert_eq!(r_single, r_multi, "expansion preserves semantics");
+    // The whole point of §3.3: single-team execution cannot use the device.
+    let single_kernel_ns = gpu_first::perfmodel::a100::device_time(
+        &m_single.kernel_stats,
+        128, // one team
+        1,
+    )
+    .total_ns();
+    let multi_kernel_ns = gpu_first::perfmodel::a100::device_time(
+        &m_multi.kernel_stats,
+        // Whole-device expansion: the full requested grid is resident.
+        4096,
+        1,
+    )
+    .total_ns();
+    assert!(
+        single_kernel_ns > multi_kernel_ns,
+        "single-team {single_kernel_ns} should be slower than multi-team {multi_kernel_ns}"
+    );
+}
+
+#[test]
+fn unsupported_library_call_reported_not_miscompiled() {
+    let src = "func @main() -> i64 {\n  call cublasDgemm(1)\n  return 0\n}\n";
+    let mut module = parse_module(src).unwrap();
+    let mut s = session();
+    s.compile(&mut module, CompileOptions::default()).unwrap();
+    let report = s.report.as_ref().unwrap();
+    assert_eq!(report.rpc.unsupported, vec!["cublasDgemm".to_string()]);
+    s.stop();
+}
+
+#[test]
+fn cli_binary_compiles_and_runs_programs() {
+    // Exercise the installed CLI end-to-end (the Fig. 1 loader).
+    let exe = env!("CARGO_BIN_EXE_gpu-first");
+    let dir = std::env::temp_dir().join("gpu_first_cli_test");
+    std::fs::create_dir_all(&dir).unwrap();
+    let prog = dir.join("hello.ir");
+    std::fs::write(
+        &prog,
+        "global @msg const 12 \"hi from GPU\"\n\nfunc @main() -> i64 {\n  call puts(@msg)\n  return 0\n}\n",
+    )
+    .unwrap();
+    let out = std::process::Command::new(exe)
+        .args(["run", prog.to_str().unwrap(), "--teams", "2", "--threads", "8", "--heap-mb", "16"])
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(String::from_utf8_lossy(&out.stdout), "hi from GPU\n");
+
+    let out = std::process::Command::new(exe)
+        .args(["explain", prog.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(out.status.success());
+    assert!(String::from_utf8_lossy(&out.stdout).contains("__puts_cp"));
+}

@@ -1,0 +1,153 @@
+//! PJRT integration: load the AOT artifacts and check numerics against
+//! rust-side oracles. Skips (with a notice) if `make artifacts` has not
+//! been run.
+
+use gpu_first::runtime::Runtime;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<std::path::PathBuf> {
+    let dir = Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("skipping: run `make artifacts` first");
+        None
+    }
+}
+
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir()?;
+    let mut rt = Runtime::cpu().expect("pjrt cpu client");
+    rt.load_manifest_dir(&dir).expect("load artifacts");
+    Some(rt)
+}
+
+#[test]
+fn manifest_lists_all_experiment_kernels() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "xs_event_small",
+        "xs_event_large",
+        "xs_history_small",
+        "rs_lookup_small",
+        "hypterm3",
+        "amgmk_relax",
+        "pagerank_step",
+        "interleaved_soa",
+        "interleaved_aos",
+    ] {
+        assert!(rt.has(name), "missing artifact {name}");
+    }
+}
+
+#[test]
+fn interleaved_soa_matches_oracle() {
+    let Some(rt) = runtime() else { return };
+    let n = 1 << 20;
+    let a: Vec<f32> = (0..n).map(|i| (i % 17) as f32 * 0.25 - 2.0).collect();
+    let b: Vec<f32> = (0..n).map(|i| (i % 5) as f32).collect();
+    let c: Vec<f32> = (0..n).map(|i| 1.0 + (i % 3) as f32).collect();
+    let d: Vec<f32> = (0..n).map(|i| (i % 7) as f32 - 3.0).collect();
+    let out = rt
+        .execute_f32("interleaved_soa", &[(&a, &[n]), (&b, &[n]), (&c, &[n]), (&d, &[n])])
+        .unwrap();
+    assert_eq!(out.len(), n);
+    for i in (0..n).step_by(97_113) {
+        let want = (a[i] + b[i]) * c[i] - d[i] * 0.5 + ((a[i] * d[i]).abs() + 1.0).sqrt();
+        assert!((out[i] - want).abs() < 1e-4, "i={i} got {} want {want}", out[i]);
+    }
+}
+
+#[test]
+fn xs_event_small_matches_scalar_oracle() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.as_ref().unwrap().entry("xs_event_small").unwrap().clone();
+    let b = spec.inputs[0].shape[0];
+    let (g, c) = (spec.inputs[3].shape[0], spec.inputs[3].shape[1]);
+    let m = spec.inputs[4].shape[0];
+    // Deterministic inputs.
+    let egrid: Vec<f32> = (0..g).map(|i| i as f32 / (g - 1) as f32).collect();
+    let e: Vec<f32> = (0..b).map(|i| ((i * 2654435761usize) % 1000) as f32 / 1001.0).collect();
+    let mats_i32: Vec<i32> = (0..b).map(|i| (i % m) as i32).collect();
+    let xs: Vec<f32> = (0..g * c).map(|i| 0.1 + (i % 13) as f32).collect();
+    let scale: Vec<f32> = (0..m).map(|i| 1.0 + i as f32 * 0.1).collect();
+
+    let lits = vec![
+        xla::Literal::vec1(&e).reshape(&[b as i64]).unwrap(),
+        xla::Literal::vec1(&mats_i32).reshape(&[b as i64]).unwrap(),
+        xla::Literal::vec1(&egrid).reshape(&[g as i64]).unwrap(),
+        xla::Literal::vec1(&xs).reshape(&[g as i64, c as i64]).unwrap(),
+        xla::Literal::vec1(&scale).reshape(&[m as i64]).unwrap(),
+    ];
+    let outs = rt.execute("xs_event_small", &lits).unwrap();
+    let out: Vec<f32> = outs[0].to_vec().unwrap();
+    assert_eq!(out.len(), b * c);
+
+    // Scalar oracle at sampled lookups (uniform grid => closed-form idx).
+    for i in (0..b).step_by(411) {
+        let energy = e[i];
+        let idx = ((energy * (g - 1) as f32).floor() as usize).min(g - 2);
+        let e0 = egrid[idx];
+        let e1 = egrid[idx + 1];
+        let w = (energy - e0) / (e1 - e0);
+        let sc = scale[i % m];
+        for ch in 0..c {
+            let lo = xs[idx * c + ch];
+            let hi = xs[(idx + 1) * c + ch];
+            let want = (lo * (1.0 - w) + hi * w) * sc;
+            let got = out[i * c + ch];
+            assert!(
+                (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                "lookup {i} ch {ch}: got {got} want {want}"
+            );
+        }
+    }
+}
+
+#[test]
+fn amgmk_relax_identity_system() {
+    let Some(rt) = runtime() else { return };
+    let spec = rt.manifest.as_ref().unwrap().entry("amgmk_relax").unwrap().clone();
+    let (r, k) = (spec.inputs[0].shape[0], spec.inputs[0].shape[1]);
+    // A = I (first ELL slot diagonal, rest zero-padded), diag = 1.
+    let mut vals = vec![0f32; r * k];
+    let mut cols = vec![0i32; r * k];
+    for row in 0..r {
+        vals[row * k] = 1.0;
+        cols[row * k] = row as i32;
+    }
+    let diag = vec![1f32; r];
+    let bvec: Vec<f32> = (0..r).map(|i| (i % 9) as f32).collect();
+    let x = vec![0f32; r];
+    let lits = vec![
+        xla::Literal::vec1(&vals).reshape(&[r as i64, k as i64]).unwrap(),
+        xla::Literal::vec1(&cols).reshape(&[r as i64, k as i64]).unwrap(),
+        xla::Literal::vec1(&diag).reshape(&[r as i64]).unwrap(),
+        xla::Literal::vec1(&bvec).reshape(&[r as i64]).unwrap(),
+        xla::Literal::vec1(&x).reshape(&[r as i64]).unwrap(),
+    ];
+    let out: Vec<f32> = rt.execute("amgmk_relax", &lits).unwrap()[0].to_vec().unwrap();
+    // x' = 0 + 0.9 * (b - 0) / 1 = 0.9 b.
+    for i in (0..r).step_by(1311) {
+        assert!((out[i] - 0.9 * bvec[i]).abs() < 1e-5, "{i}");
+    }
+}
+
+#[test]
+fn hypterm3_constant_field_zero_flux() {
+    let Some(rt) = runtime() else { return };
+    let n = 40usize; // 32 + 8 halo
+    let q = vec![1.5f32; n * n * n];
+    let outs = rt
+        .execute(
+            "hypterm3",
+            &[xla::Literal::vec1(&q).reshape(&[n as i64, n as i64, n as i64]).unwrap()],
+        )
+        .unwrap();
+    assert_eq!(outs.len(), 3);
+    for (axis, o) in outs.iter().enumerate() {
+        let v: Vec<f32> = o.to_vec().unwrap();
+        assert_eq!(v.len(), 32 * 32 * 32);
+        assert!(v.iter().all(|x| x.abs() < 1e-5), "axis {axis}: constant field flux != 0");
+    }
+}

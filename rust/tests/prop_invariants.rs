@@ -1,0 +1,198 @@
+//! Property-based invariants over the coordinator substrates (the
+//! offline stand-in for proptest; see `util::prop`).
+
+use gpu_first::alloc::{AllocCtx, BalancedAllocator, BalancedConfig, DeviceAllocator, GenericAllocator};
+use gpu_first::gpu::grid::{Device, LaunchConfig};
+use gpu_first::gpu::memory::{DeviceMemory, MemConfig, GLOBAL_BASE};
+use gpu_first::ir::parser::parse_module;
+use gpu_first::ir::printer::print_module;
+use gpu_first::rpc::mailbox::{Mailbox, WireArg, KIND_REF, KIND_VAL, MAX_ARGS};
+use gpu_first::util::prop::{check, Gen};
+
+/// Random alloc/free sequences never corrupt either allocator: no overlap
+/// between live allocations, all frees succeed, lookups resolve interior
+/// pointers, and a full drain leaves zero live bytes.
+#[test]
+fn prop_allocators_never_corrupt() {
+    check("allocator invariants", 60, |g: &mut Gen| {
+        let balanced = g.bool();
+        let alloc: Box<dyn DeviceAllocator> = if balanced {
+            Box::new(BalancedAllocator::new(
+                0x1000,
+                4 << 20,
+                BalancedConfig {
+                    n: g.usize(1..5),
+                    m: g.usize(1..4),
+                    first_chunk_ratio: g.f64(0.1, 0.6),
+                },
+            ))
+        } else {
+            Box::new(GenericAllocator::new(0x1000, 4 << 20))
+        };
+        let mut live: Vec<(u64, u64)> = Vec::new();
+        for _ in 0..g.usize(1..120) {
+            let ctx = AllocCtx { thread_id: g.usize(0..8), team_id: g.usize(0..4) };
+            if live.is_empty() || g.weighted(0.6) {
+                let size = g.u64(1, 2048);
+                if let Ok(p) = alloc.malloc(ctx, size) {
+                    // No overlap with any live allocation.
+                    for &(b, s) in &live {
+                        assert!(p + size <= b || p >= b + s, "overlap {p:#x}+{size} vs {b:#x}+{s}");
+                    }
+                    // Interior lookup resolves to this allocation.
+                    let probe = p + g.u64(0, size);
+                    let rec = alloc.lookup(probe).expect("lookup live object");
+                    assert_eq!(rec.base, p);
+                    assert!(rec.size >= size);
+                    live.push((p, size));
+                }
+            } else {
+                let idx = g.usize(0..live.len());
+                let (p, _) = live.swap_remove(idx);
+                alloc.free(p).expect("free live object");
+                assert!(alloc.lookup(p).is_none(), "freed object still resolves");
+            }
+        }
+        for (p, _) in live.drain(..) {
+            alloc.free(p).unwrap();
+        }
+        assert_eq!(alloc.stats().live_bytes, 0);
+    });
+}
+
+/// Balanced-allocator structural invariants hold under random traffic.
+#[test]
+fn prop_balanced_watermark_invariants() {
+    check("balanced watermark", 40, |g: &mut Gen| {
+        let a = BalancedAllocator::new(
+            0x1000,
+            2 << 20,
+            BalancedConfig { n: g.usize(1..4), m: g.usize(1..3), first_chunk_ratio: 0.25 },
+        );
+        let mut live = Vec::new();
+        for _ in 0..g.usize(1..100) {
+            let ctx = AllocCtx { thread_id: g.usize(0..6), team_id: g.usize(0..3) };
+            if live.is_empty() || g.weighted(0.55) {
+                if let Ok(p) = a.malloc(ctx, g.u64(16, 1024)) {
+                    live.push(p);
+                }
+            } else {
+                let p = live.swap_remove(g.usize(0..live.len()));
+                a.free(p).unwrap();
+            }
+            a.check_invariants();
+        }
+    });
+}
+
+/// IR text round-trip: print(parse(print(m))) is a fixpoint for random
+/// straight-line modules.
+#[test]
+fn prop_ir_round_trip() {
+    check("ir print/parse round trip", 60, |g: &mut Gen| {
+        let mut body = String::new();
+        let mut vars: Vec<String> = Vec::new();
+        for i in 0..g.usize(1..12) {
+            let v = format!("v{i}");
+            match g.usize(0..4) {
+                0 => body.push_str(&format!("  %{v} = {}\n", g.u64(0, 1000) as i64)),
+                1 => body.push_str(&format!("  %{v} = alloca {}\n", g.u64(8, 256))),
+                2 if !vars.is_empty() => {
+                    let a = g.choose(&vars).clone();
+                    let b = g.choose(&vars).clone();
+                    let op = g.choose(&["add", "sub", "mul", "and", "xor"]);
+                    body.push_str(&format!("  %{v} = {op} %{a}, %{b}\n"));
+                }
+                _ => body.push_str(&format!("  %{v} = {}\n", g.f64(-10.0, 10.0))),
+            }
+            vars.push(v);
+        }
+        let last = vars.last().unwrap();
+        let src = format!("func @main() -> i64 {{\n{body}  return %{last}\n}}\n");
+        let m1 = parse_module(&src).unwrap_or_else(|e| panic!("{e}\n{src}"));
+        m1.verify().unwrap();
+        let text1 = print_module(&m1);
+        let m2 = parse_module(&text1).unwrap();
+        assert_eq!(m1, m2);
+        assert_eq!(text1, print_module(&m2));
+    });
+}
+
+/// Mailbox wire encoding round-trips random argument frames.
+#[test]
+fn prop_mailbox_wire_round_trip() {
+    let mem = DeviceMemory::new(MemConfig::small());
+    check("mailbox wire args", 80, |g: &mut Gen| {
+        let mb = Mailbox::new(&mem);
+        let n = g.usize(1..MAX_ARGS);
+        let args: Vec<WireArg> = (0..n)
+            .map(|_| WireArg {
+                kind: if g.bool() { KIND_VAL } else { KIND_REF },
+                value: g.u64(0, u64::MAX - 1),
+                mode: g.u64(0, 3),
+                size: g.u64(0, 1 << 20),
+                offset: g.u64(0, 1 << 16),
+            })
+            .collect();
+        mb.set_nargs(n as u64);
+        for (i, a) in args.iter().enumerate() {
+            mb.write_arg(i, *a);
+        }
+        for (i, a) in args.iter().enumerate() {
+            assert_eq!(mb.read_arg(i), *a);
+        }
+    });
+}
+
+/// Work-sharing coverage: for random (teams, threads, lo, hi, step) the
+/// grid schedule executes every iteration exactly once.
+#[test]
+fn prop_grid_schedule_covers_iterations_once() {
+    check("grid schedule coverage", 30, |g: &mut Gen| {
+        let teams = g.usize(1..5);
+        let threads = g.usize(1..17);
+        let lo = g.u64(0, 50) as usize;
+        let count = g.usize(1..400);
+        let hi = lo + count;
+        let dev = Device::small();
+        let hits: Vec<std::sync::atomic::AtomicU32> =
+            (0..hi).map(|_| std::sync::atomic::AtomicU32::new(0)).collect();
+        dev.launch(LaunchConfig::new(teams, threads), |ctx| {
+            // The interpreter's Grid schedule: start at lo + tid, stride by
+            // the total thread count.
+            let mut i = lo + ctx.global_tid();
+            while i < hi {
+                hits[i].fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                i += ctx.num_threads_global();
+            }
+        });
+        for (i, h) in hits.iter().enumerate().skip(lo) {
+            assert_eq!(h.load(std::sync::atomic::Ordering::Relaxed), 1, "iteration {i}");
+        }
+    });
+}
+
+/// Device memory: random interleaved byte writes at distinct offsets all
+/// persist (word-level CAS must not clobber neighbours).
+#[test]
+fn prop_device_memory_byte_writes_persist() {
+    let mem = DeviceMemory::new(MemConfig::small());
+    check("device memory bytes", 50, |g: &mut Gen| {
+        let base = GLOBAL_BASE + g.u64(0, 1 << 16);
+        let n = g.usize(1..64);
+        let mut offsets: Vec<u64> = (0..n as u64).collect();
+        // Shuffle-ish via random swaps.
+        for _ in 0..n {
+            let a = g.usize(0..n);
+            let b = g.usize(0..n);
+            offsets.swap(a, b);
+        }
+        let vals: Vec<u8> = (0..n).map(|_| g.u32(0..256) as u8).collect();
+        for (k, &off) in offsets.iter().enumerate() {
+            mem.write_u8(base + off, vals[k]);
+        }
+        for (k, &off) in offsets.iter().enumerate() {
+            assert_eq!(mem.read_u8(base + off), vals[k]);
+        }
+    });
+}
