@@ -9,14 +9,22 @@
 //! (the Fig. 7 percentages) and the real wallclock per RPC on this host.
 
 use gpu_first::coordinator::{Config, GpuFirstSession};
-use gpu_first::gpu::memory::MemConfig;
+use gpu_first::gpu::memory::{DeviceMemory, MemConfig, GLOBAL_BASE};
 use gpu_first::perfmodel::a100;
-use gpu_first::rpc::{ArgMode, RpcArgInfo, RpcClient};
+use gpu_first::rpc::engine::{ArenaLayout, EngineConfig, EngineSnapshot, RpcEngine};
+use gpu_first::rpc::wrappers::register_common;
+use gpu_first::rpc::{ArgMode, HostEnv, RpcArgInfo, RpcClient, RpcServer, WrapperRegistry};
 use gpu_first::transform::CompileOptions;
+use gpu_first::util::json::Json;
 use gpu_first::util::table::Table;
 use gpu_first::util::fmt_ns;
+use std::sync::Arc;
 
 const N_CALLS: usize = 1000;
+/// Sweep shape: RPC-dense workload (per-thread `fprintf`) driven by
+/// this many concurrent simulated threads, `SWEEP_CALLS` calls each.
+const SWEEP_CALLERS: usize = 8;
+const SWEEP_CALLS: usize = 1000;
 
 fn main() {
     println!("== E2 / Fig. 7: time spent resolving an fprintf RPC ==");
@@ -120,4 +128,169 @@ global @msg const 6 "hello"
     );
     assert!((total - a100::RPC_TOTAL_NS).abs() / a100::RPC_TOTAL_NS < 0.1);
     session.stop();
+
+    sweep(bd.device_total_ns());
+}
+
+/// One sweep point: `callers` threads hammer per-thread `fprintf` RPCs
+/// through a lanes×workers engine (or the legacy single-slot server for
+/// 1×1). Returns (real calls/sec, engine counters).
+fn sweep_point(lanes: usize, workers: usize) -> (f64, Option<EngineSnapshot>) {
+    let mem = Arc::new(DeviceMemory::new(MemConfig::default()));
+    let arena = ArenaLayout::for_lanes(lanes);
+    let registry = Arc::new(WrapperRegistry::new());
+    let ids = register_common(&registry);
+    let env = Arc::new(HostEnv::new());
+    let id = ids["__fprintf_p_cp_cp"];
+    enum Service {
+        Legacy(RpcServer),
+        Engine(RpcEngine),
+    }
+    let service = if lanes == 1 && workers == 1 {
+        Service::Legacy(RpcServer::start(Arc::clone(&mem), Arc::clone(&registry), Arc::clone(&env)))
+    } else {
+        Service::Engine(RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&registry),
+            Arc::clone(&env),
+            EngineConfig { lanes, workers, batch: true },
+        ))
+    };
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..SWEEP_CALLERS {
+            let mem = &mem;
+            s.spawn(move || {
+                // Per-caller staged strings (the Fig. 7 fprintf shape:
+                // 18 B format + 128 B buffer copied both ways).
+                let base = GLOBAL_BASE + 16384 + t as u64 * 8192;
+                let (fmt_a, buf_a) = (base, base + 4096);
+                mem.write_cstr(fmt_a, "fread reads: %s.\n");
+                mem.write_cstr(buf_a, &"x".repeat(127));
+                let mut client = RpcClient::for_team(mem, arena, t);
+                for _ in 0..SWEEP_CALLS {
+                    let mut info = RpcArgInfo::new();
+                    info.add_val(2);
+                    info.add_ref(fmt_a, ArgMode::Read, 18, 0);
+                    info.add_ref(buf_a, ArgMode::ReadWrite, 128, 0);
+                    client.call(id, &info, None);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    // Every call appended "fread reads: " + 127 x's + ".\n" = 142 bytes.
+    let calls = SWEEP_CALLERS * SWEEP_CALLS;
+    assert_eq!(
+        env.stderr.lock().unwrap().len(),
+        142 * calls,
+        "lost or duplicated RPCs at lanes={lanes} workers={workers}"
+    );
+    let snap = match service {
+        Service::Legacy(s) => {
+            s.stop();
+            None
+        }
+        Service::Engine(e) => {
+            let snap = e.metrics.snapshot();
+            e.stop();
+            Some(snap)
+        }
+    };
+    (calls as f64 / secs, snap)
+}
+
+/// The lane/worker sweep (1/2/4/8 lanes × 1/2/4 workers) with a JSON
+/// report line for BENCH_*.json trajectory tracking.
+fn sweep(legacy_modeled_total_ns: f64) {
+    println!(
+        "\n== engine sweep: {SWEEP_CALLERS} callers × {SWEEP_CALLS} per-thread fprintf RPCs =="
+    );
+
+    // Degenerate-case parity: an engine at 1×1 must reproduce the legacy
+    // server's modeled Fig. 7 stage breakdown exactly.
+    {
+        let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+        let arena = ArenaLayout::legacy();
+        let registry = Arc::new(WrapperRegistry::new());
+        let ids = register_common(&registry);
+        let env = Arc::new(HostEnv::new());
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&registry),
+            env,
+            EngineConfig::default(),
+        );
+        let fmt_a = GLOBAL_BASE + 16384;
+        let buf_a = GLOBAL_BASE + 20480;
+        mem.write_cstr(fmt_a, "fread reads: %s.\n");
+        mem.write_cstr(buf_a, &"x".repeat(127));
+        let mut client = RpcClient::for_team(&mem, arena, 0);
+        let mut info = RpcArgInfo::new();
+        info.add_val(2);
+        info.add_ref(fmt_a, ArgMode::Read, 18, 0);
+        info.add_ref(buf_a, ArgMode::ReadWrite, 128, 0);
+        client.call(ids["__fprintf_p_cp_cp"], &info, None);
+        let engine_total = client.last.device_total_ns();
+        engine.stop();
+        assert_eq!(
+            engine_total, legacy_modeled_total_ns,
+            "engine 1x1 must match the legacy stage breakdown"
+        );
+        println!("1x1 stage-breakdown parity with legacy server: OK ({})", fmt_ns(engine_total));
+    }
+
+    let mut t = Table::new(
+        "RPC throughput sweep (real wallclock on this host)",
+        &["lanes", "workers", "calls/s", "speedup", "occupancy", "batches", "max_batch", "steals"],
+    );
+    let mut points: Vec<Json> = Vec::new();
+    let mut baseline_cps = 0.0f64;
+    for &lanes in &[1usize, 2, 4, 8] {
+        for &workers in &[1usize, 2, 4] {
+            if workers > lanes {
+                // More pollers than lanes only adds steal contention.
+                continue;
+            }
+            let (cps, snap) = sweep_point(lanes, workers);
+            if lanes == 1 && workers == 1 {
+                baseline_cps = cps;
+            }
+            let speedup = cps / baseline_cps;
+            // The 1×1 point runs the legacy server, which has no engine
+            // counters: report those columns as absent, not as numbers
+            // no measurement produced.
+            t.row(&[
+                lanes.to_string(),
+                workers.to_string(),
+                format!("{cps:.0}"),
+                format!("{speedup:.2}x"),
+                snap.map_or("-".into(), |s| format!("{:.3}", s.occupancy())),
+                snap.map_or("-".into(), |s| s.batches.to_string()),
+                snap.map_or("-".into(), |s| s.max_batch.to_string()),
+                snap.map_or("-".into(), |s| s.steals.to_string()),
+            ]);
+            points.push(Json::obj(vec![
+                ("lanes", Json::num(lanes as f64)),
+                ("workers", Json::num(workers as f64)),
+                ("calls_per_sec", Json::num(cps)),
+                ("speedup_vs_single_slot", Json::num(speedup)),
+                ("occupancy", snap.map_or(Json::Null, |s| Json::num(s.occupancy()))),
+                ("batches", snap.map_or(Json::Null, |s| Json::num(s.batches as f64))),
+                ("max_batch", snap.map_or(Json::Null, |s| Json::num(s.max_batch as f64))),
+                ("steals", snap.map_or(Json::Null, |s| Json::num(s.steals as f64))),
+            ]));
+        }
+    }
+    t.print();
+    let report = Json::obj(vec![
+        ("bench", Json::str("fig07_rpc_sweep")),
+        ("callers", Json::num(SWEEP_CALLERS as f64)),
+        ("calls_per_caller", Json::num(SWEEP_CALLS as f64)),
+        ("baseline_calls_per_sec", Json::num(baseline_cps)),
+        ("points", Json::Arr(points)),
+    ]);
+    println!("\nJSON {report}");
 }

@@ -1,5 +1,5 @@
 //! Runtime configuration (the paper's environment knobs: allocator flag,
-//! grid shape, memory sizes).
+//! grid shape, memory sizes, RPC engine shape).
 
 use crate::gpu::grid::AllocatorKind;
 use crate::gpu::memory::MemConfig;
@@ -11,6 +11,14 @@ pub struct Config {
     pub threads_per_team: usize,
     pub allocator: AllocatorKind,
     pub mem: MemConfig,
+    /// RPC mailbox lanes (`--rpc-lanes`); 1 = the paper's single slot.
+    pub rpc_lanes: usize,
+    /// Host RPC worker threads (`--rpc-workers`); 1 = single-threaded
+    /// server. `lanes=1, workers=1` selects the legacy code path.
+    pub rpc_workers: usize,
+    /// Coalesce same-callee requests per poll sweep (`--no-rpc-batch`
+    /// disables).
+    pub rpc_batch: bool,
     /// Print pass reports and per-launch stats.
     pub verbose: bool,
 }
@@ -22,6 +30,9 @@ impl Default for Config {
             threads_per_team: 128,
             allocator: AllocatorKind::Balanced(Default::default()),
             mem: MemConfig::default(),
+            rpc_lanes: 1,
+            rpc_workers: 1,
+            rpc_batch: true,
             verbose: false,
         }
     }
@@ -30,7 +41,8 @@ impl Default for Config {
 impl Config {
     /// Build from CLI arguments:
     /// `--teams N --threads N --allocator generic|vendor|balanced[N,M]
-    ///  --heap-mb N --verbose`.
+    ///  --heap-mb N --rpc-lanes N --rpc-workers N --no-rpc-batch
+    ///  --verbose`.
     pub fn from_args(args: &Args) -> Result<Self, String> {
         let mut cfg = Config::default();
         cfg.teams = args.get_usize("teams", cfg.teams);
@@ -40,11 +52,34 @@ impl Config {
         }
         let heap_mb = args.get_usize("heap-mb", 256);
         cfg.mem.global_size = (heap_mb as u64) << 20;
+        cfg.rpc_lanes = args.get_usize("rpc-lanes", cfg.rpc_lanes);
+        cfg.rpc_workers = args.get_usize("rpc-workers", cfg.rpc_workers);
+        cfg.rpc_batch = !args.flag("no-rpc-batch");
         cfg.verbose = args.flag("verbose");
         if cfg.teams == 0 || cfg.threads_per_team == 0 {
             return Err("teams/threads must be positive".into());
         }
+        if cfg.rpc_lanes == 0 || cfg.rpc_workers == 0 {
+            return Err("rpc-lanes/rpc-workers must be positive".into());
+        }
+        // Reject arena shapes the device cannot reserve here, where it is
+        // a clean CLI error rather than a panic in Device::with_arena.
+        let arena = crate::rpc::engine::ArenaLayout::for_lanes(cfg.rpc_lanes);
+        if arena.reserved_bytes() + (1 << 20) > cfg.mem.managed_size {
+            return Err(format!(
+                "--rpc-lanes {} needs {} B of managed memory (plus 1 MiB headroom) \
+                 but the managed segment is {} B",
+                cfg.rpc_lanes,
+                arena.reserved_bytes(),
+                cfg.mem.managed_size,
+            ));
+        }
         Ok(cfg)
+    }
+
+    /// The legacy single-slot single-thread server path (paper §4.4)?
+    pub fn legacy_rpc(&self) -> bool {
+        self.rpc_lanes == 1 && self.rpc_workers == 1
     }
 }
 
@@ -68,11 +103,43 @@ mod tests {
         assert_eq!(cfg.mem.global_size, 64 << 20);
         assert!(cfg.verbose);
         assert!(matches!(cfg.allocator, AllocatorKind::Balanced(c) if c.n == 4 && c.m == 2));
+        assert!(cfg.legacy_rpc(), "default RPC path is the single slot");
+        assert!(cfg.rpc_batch);
+    }
+
+    #[test]
+    fn parses_rpc_engine_flags() {
+        let args = Args::parse(&sv(&["--rpc-lanes", "4", "--rpc-workers", "2", "--no-rpc-batch"]), &[]);
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.rpc_lanes, 4);
+        assert_eq!(cfg.rpc_workers, 2);
+        assert!(!cfg.rpc_batch);
+        assert!(!cfg.legacy_rpc());
     }
 
     #[test]
     fn rejects_bad_allocator() {
         let args = Args::parse(&sv(&["--allocator", "wat"]), &[]);
         assert!(Config::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn rejects_zero_lanes_or_workers() {
+        let args = Args::parse(&sv(&["--rpc-lanes", "0"]), &[]);
+        assert!(Config::from_args(&args).is_err());
+        let args = Args::parse(&sv(&["--rpc-workers", "0"]), &[]);
+        assert!(Config::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn rejects_arena_too_large_for_managed_segment() {
+        // 200 lanes × ~257 KiB ≫ the default 32 MiB managed segment:
+        // must be a clean Err, not a Device::with_arena panic.
+        let args = Args::parse(&sv(&["--rpc-lanes", "200"]), &[]);
+        let err = Config::from_args(&args).unwrap_err();
+        assert!(err.contains("managed"), "unexpected error: {err}");
+        // A modest lane count fits fine.
+        let args = Args::parse(&sv(&["--rpc-lanes", "8"]), &[]);
+        assert!(Config::from_args(&args).is_ok());
     }
 }

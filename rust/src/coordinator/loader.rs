@@ -2,45 +2,93 @@
 //!
 //! "The loader is the entry point for the operating system and responsible
 //! to setup the environment on the device": here it creates the simulated
-//! device, starts the single-threaded host RPC server, registers the
-//! common landing pads (the pass registers call-site-specific ones during
-//! compilation), materializes the program, maps `argv` onto the device and
-//! transfers control to the user's `main`.
+//! device (reserving the RPC mailbox arena), starts the host RPC service
+//! — the paper's single-threaded server for `lanes=1, workers=1`, the
+//! multi-lane worker-pool [`RpcEngine`] otherwise — registers the common
+//! landing pads (the pass registers call-site-specific ones during
+//! compilation), materializes the program, maps `argv` onto the device
+//! and transfers control to the user's `main`.
 
 use super::config::Config;
 use super::metrics::RunMetrics;
 use crate::gpu::grid::Device;
 use crate::ir::interp::{ProgramEnv, Value};
 use crate::ir::Module;
+use crate::rpc::engine::{ArenaLayout, EngineConfig, RpcEngine};
 use crate::rpc::wrappers::register_common;
-use crate::rpc::{HostEnv, RpcServer, WrapperRegistry};
+use crate::rpc::{EngineSnapshot, HostEnv, RpcServer, WrapperRegistry};
 use crate::transform::{compile, CompileOptions, CompileReport};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
+
+/// Which host-side RPC service this session runs.
+enum RpcService {
+    /// The paper's single-threaded single-slot server (§4.4).
+    Legacy(RpcServer),
+    /// The multi-lane worker-pool engine.
+    Engine(RpcEngine),
+}
+
+impl RpcService {
+    fn stop(self) {
+        match self {
+            RpcService::Legacy(s) => s.stop(),
+            RpcService::Engine(e) => e.stop(),
+        }
+    }
+}
 
 pub struct GpuFirstSession {
     pub cfg: Config,
     pub device: Arc<Device>,
     pub registry: Arc<WrapperRegistry>,
     pub host: Arc<HostEnv>,
-    server: Option<RpcServer>,
+    server: Option<RpcService>,
     pub report: Option<CompileReport>,
     pub env: Option<Arc<ProgramEnv>>,
 }
 
 impl GpuFirstSession {
-    /// Bring up device + host server + common landing pads.
+    /// Bring up device + host RPC service + common landing pads.
     pub fn start(cfg: Config) -> Self {
-        let device = Arc::new(Device::new(cfg.mem, cfg.allocator));
+        let arena = ArenaLayout::for_lanes(cfg.rpc_lanes);
+        let device = Arc::new(Device::with_arena(cfg.mem, cfg.allocator, arena));
         let registry = Arc::new(WrapperRegistry::new());
         register_common(&registry);
         let host = Arc::new(HostEnv::new());
-        let server = RpcServer::start(
-            Arc::clone(&device.mem),
-            Arc::clone(&registry),
-            Arc::clone(&host),
-        );
+        let server = if cfg.legacy_rpc() {
+            RpcService::Legacy(RpcServer::start(
+                Arc::clone(&device.mem),
+                Arc::clone(&registry),
+                Arc::clone(&host),
+            ))
+        } else {
+            RpcService::Engine(RpcEngine::start(
+                Arc::clone(&device.mem),
+                arena,
+                Arc::clone(&registry),
+                Arc::clone(&host),
+                EngineConfig { lanes: cfg.rpc_lanes, workers: cfg.rpc_workers, batch: cfg.rpc_batch },
+            ))
+        };
         Self { cfg, device, registry, host, server: Some(server), report: None, env: None }
+    }
+
+    /// Engine counters, when the session runs the multi-lane engine.
+    pub fn engine_snapshot(&self) -> Option<EngineSnapshot> {
+        match &self.server {
+            Some(RpcService::Engine(e)) => Some(e.metrics.snapshot()),
+            _ => None,
+        }
+    }
+
+    /// Requests the host service answered so far (either path).
+    pub fn rpc_served(&self) -> u64 {
+        match &self.server {
+            Some(RpcService::Legacy(s)) => s.served.load(Ordering::Relaxed),
+            Some(RpcService::Engine(e)) => e.metrics.served.load(Ordering::Relaxed),
+            None => 0,
+        }
     }
 
     /// Run the compiler pipeline over `module` (in place), registering
@@ -80,6 +128,7 @@ impl GpuFirstSession {
             kernel_stats,
             kernel_launches: env.kernel_launches.load(Ordering::Relaxed),
             grid: (self.cfg.teams, self.cfg.threads_per_team),
+            rpc_engine: self.engine_snapshot(),
         };
         (ret, metrics)
     }
@@ -137,6 +186,8 @@ func @main() -> i64 {
         assert_eq!(ret, 0);
         assert_eq!(session.host.stdout_string(), "hello from the GPU\n");
         assert_eq!(metrics.main_stats.rpc_calls, 1);
+        assert!(metrics.rpc_engine.is_none(), "legacy path has no engine metrics");
+        assert_eq!(session.rpc_served(), 1);
         session.stop();
     }
 
@@ -165,6 +216,34 @@ func @main() -> i64 {
         assert_eq!(ret, 8191);
         assert_eq!(metrics.kernel_launches, 1);
         assert_eq!(metrics.grid, (4, 32));
+        session.stop();
+    }
+
+    #[test]
+    fn engine_session_runs_programs_and_reports_metrics() {
+        let src = r#"
+global @fmt const 7 "n=%d\n"
+
+func @main() -> i64 {
+  for %i = 0 to 20 step 1 {
+    call printf(@fmt, %i)
+  }
+  return 0
+}
+"#;
+        let module = crate::ir::parser::parse_module(src).unwrap();
+        let cfg = Config { rpc_lanes: 4, rpc_workers: 2, ..small_cfg() };
+        assert!(!cfg.legacy_rpc());
+        let mut session = GpuFirstSession::start(cfg);
+        let (ret, metrics) = session.execute(module, CompileOptions::default(), &[]).unwrap();
+        assert_eq!(ret, 0);
+        let out = session.host.stdout_string();
+        assert_eq!(out, (0..20).map(|i| format!("n={i}\n")).collect::<String>());
+        let snap = metrics.rpc_engine.expect("engine path reports metrics");
+        assert_eq!(snap.lanes, 4);
+        assert_eq!(snap.workers, 2);
+        assert_eq!(snap.served, 20);
+        assert!(metrics.summary().contains("rpc_engine"));
         session.stop();
     }
 }

@@ -1,7 +1,10 @@
-//! Per-run metrics: real wallclock + modeled device time decomposition.
+//! Per-run metrics: real wallclock + modeled device time decomposition,
+//! plus the RPC engine's occupancy/batching counters when the session
+//! runs the multi-lane engine.
 
 use crate::gpu::stats::LaunchStats;
 use crate::perfmodel::a100;
+use crate::rpc::EngineSnapshot;
 
 #[derive(Debug, Clone, Copy)]
 pub struct RunMetrics {
@@ -14,6 +17,8 @@ pub struct RunMetrics {
     pub kernel_stats: LaunchStats,
     pub kernel_launches: u64,
     pub grid: (usize, usize),
+    /// Engine counters; `None` on the legacy single-slot path.
+    pub rpc_engine: Option<EngineSnapshot>,
 }
 
 impl RunMetrics {
@@ -31,7 +36,7 @@ impl RunMetrics {
     }
 
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "exit={} wall={} modeled_device={} launches={} grid={}x{} rpcs={}",
             self.exit_code,
             crate::util::fmt_ns(self.wall_ns),
@@ -40,7 +45,12 @@ impl RunMetrics {
             self.grid.0,
             self.grid.1,
             self.main_stats.rpc_calls + self.kernel_stats.rpc_calls,
-        )
+        );
+        if let Some(e) = &self.rpc_engine {
+            s.push(' ');
+            s.push_str(&e.summary());
+        }
+        s
     }
 }
 
@@ -57,8 +67,36 @@ mod tests {
             kernel_stats: LaunchStats::default(),
             kernel_launches: 3,
             grid: (4, 32),
+            rpc_engine: None,
         };
         assert!(m.modeled_device_ns() >= 3.0 * a100::KERNEL_SPLIT_RPC_NS);
         assert!(m.summary().contains("launches=3"));
+        assert!(!m.summary().contains("rpc_engine"));
+    }
+
+    #[test]
+    fn summary_appends_engine_counters() {
+        let m = RunMetrics {
+            exit_code: 0,
+            wall_ns: 0.0,
+            main_stats: LaunchStats::default(),
+            kernel_stats: LaunchStats::default(),
+            kernel_launches: 0,
+            grid: (1, 1),
+            rpc_engine: Some(EngineSnapshot {
+                lanes: 4,
+                workers: 2,
+                served: 10,
+                batches: 2,
+                batched_calls: 6,
+                max_batch: 4,
+                steals: 1,
+                polls: 100,
+                polls_busy: 25,
+            }),
+        };
+        let s = m.summary();
+        assert!(s.contains("rpc_engine lanes=4 workers=2 served=10"));
+        assert!(s.contains("occupancy=0.250"));
     }
 }

@@ -78,6 +78,7 @@ pub struct Device {
     pub mem: Arc<DeviceMemory>,
     pub heap: Arc<dyn DeviceAllocator>,
     workers: usize,
+    arena: crate::rpc::engine::ArenaLayout,
     managed_bump: Mutex<u64>,
     managed_end: u64,
     /// Launches performed (for the cost model's launch-overhead term).
@@ -85,7 +86,19 @@ pub struct Device {
 }
 
 impl Device {
+    /// Device with the legacy single-slot RPC reservation (paper §4.4).
     pub fn new(mem_cfg: MemConfig, alloc_kind: AllocatorKind) -> Self {
+        Self::with_arena(mem_cfg, alloc_kind, crate::rpc::engine::ArenaLayout::legacy())
+    }
+
+    /// Device reserving a multi-lane RPC mailbox arena at the base of
+    /// the managed segment (see `rpc::engine::arena`); managed
+    /// allocations start above it.
+    pub fn with_arena(
+        mem_cfg: MemConfig,
+        alloc_kind: AllocatorKind,
+        arena: crate::rpc::engine::ArenaLayout,
+    ) -> Self {
         let mem = Arc::new(DeviceMemory::new(mem_cfg));
         let heap_base = GLOBAL_BASE;
         let heap_size = mem_cfg.global_size;
@@ -97,12 +110,22 @@ impl Device {
             AllocatorKind::Vendor => Arc::new(VendorAllocator::new(heap_base, heap_size)),
         };
         let workers = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(8).min(16);
+        // Leave at least 1 MiB of managed headroom above the arena for
+        // migrated objects and managed_alloc callers.
+        assert!(
+            arena.reserved_bytes() + (1 << 20) <= mem_cfg.managed_size,
+            "RPC arena ({} lanes × {} B) does not fit the managed segment; \
+             lower --rpc-lanes or raise managed_size",
+            arena.lanes,
+            arena.lane_stride(),
+        );
         Self {
             mem,
             heap,
             workers,
-            // Reserve the low managed region for RPC mailboxes (see rpc::).
-            managed_bump: Mutex::new(MANAGED_BASE + crate::rpc::mailbox::MAILBOX_RESERVED),
+            arena,
+            // Reserve the low managed region for the RPC mailbox arena.
+            managed_bump: Mutex::new(MANAGED_BASE + arena.reserved_bytes()),
             managed_end: MANAGED_BASE + mem_cfg.managed_size,
             launches: AtomicU64::new(0),
         }
@@ -114,6 +137,11 @@ impl Device {
 
     pub fn workers(&self) -> usize {
         self.workers
+    }
+
+    /// Shape of the RPC mailbox arena this device reserved.
+    pub fn arena(&self) -> crate::rpc::engine::ArenaLayout {
+        self.arena
     }
 
     /// Bump-allocate managed (host-visible) memory; freed only wholesale.
@@ -463,5 +491,22 @@ mod tests {
         let b = dev.managed_alloc(100);
         assert!(b >= a + 100);
         assert_eq!(dev.mem.segment(a), super::super::memory::Segment::Managed);
+    }
+
+    #[test]
+    fn arena_reservation_pushes_managed_allocs_up() {
+        let arena = crate::rpc::engine::ArenaLayout::for_lanes(4);
+        let dev = Device::with_arena(MemConfig::small(), AllocatorKind::Generic, arena);
+        assert_eq!(dev.arena(), arena);
+        let a = dev.managed_alloc(64);
+        assert!(
+            a >= MANAGED_BASE + arena.reserved_bytes(),
+            "managed allocations must start above the {}-lane arena",
+            arena.lanes
+        );
+        // Legacy device keeps the historical single-slot reservation.
+        let legacy = Device::small();
+        let b = legacy.managed_alloc(64);
+        assert!(b >= MANAGED_BASE + crate::rpc::mailbox::MAILBOX_RESERVED);
     }
 }

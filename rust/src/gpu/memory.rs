@@ -11,14 +11,19 @@
 //! ```text
 //!   0x0000_0000 .. 0x0000_1000   null guard page (never mapped)
 //!   GLOBAL_BASE ..               device heap (managed by `alloc::`)
-//!   MANAGED_BASE ..              managed/unified memory: RPC mailboxes and
-//!                                migrated objects; host-visible
+//!   MANAGED_BASE ..              managed/unified memory, host-visible:
+//!                                the RPC mailbox arena (one cache-line
+//!                                padded lane per team, see
+//!                                `rpc::engine::arena`) sits at the base,
+//!                                migrated objects and `managed_alloc`
+//!                                carve the rest
 //!   STACK_BASE ..                per-thread stack frames (IR interpreter)
 //! ```
 //!
-//! The *host* (RPC server thread) accesses managed memory through the same
-//! [`DeviceMemory`]; the paper's CPU→GPU visibility latency (Fig. 7's 89%
-//! "notification gap") is charged by the cost model, not by delaying writes.
+//! The *host* (RPC server / engine worker threads) accesses managed memory
+//! through the same [`DeviceMemory`]; the paper's CPU→GPU visibility
+//! latency (Fig. 7's 89% "notification gap") is charged by the cost model,
+//! not by delaying writes.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 

@@ -644,7 +644,11 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
                 }
             }
         }
-        let mut client = RpcClient::new(&self.env.device.mem);
+        // Lane selection by team id: threads of different teams use
+        // different arena lanes and only serialize when the arena is
+        // narrower than the set of concurrently-calling teams.
+        let mut client =
+            RpcClient::for_team(&self.env.device.mem, self.env.device.arena(), self.g.team_id);
         client.call(callee_id, &info, Some(&mut self.g.counters))
     }
 
@@ -678,7 +682,8 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         let mut info = RpcArgInfo::new();
         info.add_val(region_id);
         info.add_val(0);
-        let mut client = RpcClient::new(&self.env.device.mem);
+        let mut client =
+            RpcClient::for_team(&self.env.device.mem, self.env.device.arena(), self.g.team_id);
         let ret = client.call(launch_id, &info, Some(&mut self.g.counters));
         assert_eq!(ret, 0, "kernel launch RPC failed for {region}");
     }

@@ -12,7 +12,13 @@
 //!   memory, cross-team barriers, coalescing classification).
 //! * [`rpc`] — the synchronous, stateless host-RPC protocol over managed
 //!   memory (client stubs, host server, landing-pad registry, single-level
-//!   memory migration).
+//!   memory migration), plus [`rpc::engine`]: the **multi-lane mailbox
+//!   arena** (one cache-line-padded lane per team), the **worker-pool
+//!   host server** (disjoint lane sets with race-free work stealing) and
+//!   the **batching layer** that dispatches homogeneous calls of a poll
+//!   sweep as one landing-pad invocation. The paper's single-threaded
+//!   single-slot server (§4.4) remains the `lanes=1, workers=1`
+//!   degenerate case.
 //! * [`alloc`] — the device heap allocators (paper §3.4): *generic*
 //!   free-list, *balanced* N×M chunk allocator, and a vendor-malloc model,
 //!   plus allocation tracking for dynamic object lookup.

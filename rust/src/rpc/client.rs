@@ -1,15 +1,24 @@
 //! Device-side RPC stub — the call-site *independent* code of Fig. 3c
 //! (`issueBlockingCall`), plus the Fig. 7 stage accounting.
+//!
+//! The stub is lane-aware: a client constructed with
+//! [`RpcClient::for_team`] prefers the lane `team_id % lanes` of the
+//! mailbox arena and falls over to neighbouring lanes when its home lane
+//! is contended. When every lane is busy the caller spins/yields — the
+//! arena is the backpressure boundary, exactly like the paper's single
+//! slot, just N-wide. [`RpcClient::new`] is the legacy single-lane
+//! client over [`ArenaLayout::legacy`].
 
 use super::arginfo::{RpcArg, RpcArgInfo};
-use super::mailbox::{Mailbox, WireArg, DATA_CAP, KIND_REF, KIND_VAL, ST_DONE, ST_IDLE, ST_REQUEST};
+use super::engine::arena::ArenaLayout;
+use super::mailbox::{Mailbox, WireArg, KIND_REF, KIND_VAL, ST_DONE, ST_IDLE, ST_REQUEST};
 use crate::gpu::memory::{DeviceMemory, Segment};
 use crate::gpu::stats::Counters;
 use crate::perfmodel::a100;
 
 /// Additional claimed state so a device thread can fill the frame before
-/// ringing the doorbell.
-pub const ST_CLAIMED: u64 = 4;
+/// ringing the doorbell (re-exported from the mailbox layout).
+pub use super::mailbox::ST_CLAIMED;
 
 /// Modeled per-stage nanoseconds of one RPC (the Fig. 7 quantities).
 #[derive(Debug, Clone, Copy, Default)]
@@ -25,6 +34,8 @@ pub struct RpcBreakdown {
     pub host_gap_ns: f64,
     /// Real wallclock of the whole call on this machine (perf tracking).
     pub real_ns: f64,
+    /// Which arena lane carried the call.
+    pub lane: usize,
 }
 
 impl RpcBreakdown {
@@ -42,12 +53,38 @@ const STAGE_COPY_BYTES_PER_NS: f64 = 8.0;
 
 pub struct RpcClient<'a> {
     pub mem: &'a DeviceMemory,
+    arena: ArenaLayout,
+    home_lane: usize,
     pub last: RpcBreakdown,
 }
 
 impl<'a> RpcClient<'a> {
+    /// Legacy single-lane client (the paper's single slot).
     pub fn new(mem: &'a DeviceMemory) -> Self {
-        Self { mem, last: RpcBreakdown::default() }
+        Self::for_team(mem, ArenaLayout::legacy(), 0)
+    }
+
+    /// Lane-aware client: home lane is `team_id % arena.lanes`.
+    pub fn for_team(mem: &'a DeviceMemory, arena: ArenaLayout, team_id: usize) -> Self {
+        Self { mem, arena, home_lane: team_id % arena.lanes.max(1), last: RpcBreakdown::default() }
+    }
+
+    pub fn home_lane(&self) -> usize {
+        self.home_lane
+    }
+
+    /// Non-blocking lane acquisition: try the home lane, then every
+    /// other lane once. `None` means the arena is exhausted and the
+    /// caller must back off (lane backpressure).
+    pub fn try_claim(&self) -> Option<(usize, Mailbox<'a>)> {
+        for k in 0..self.arena.lanes {
+            let lane = (self.home_lane + k) % self.arena.lanes;
+            let mb = self.arena.lane(self.mem, lane);
+            if mb.cas_status(ST_IDLE, ST_CLAIMED) {
+                return Some((lane, mb));
+            }
+        }
+        None
     }
 
     /// Issue a blocking RPC. `counters`, when given, receives the modeled
@@ -59,24 +96,28 @@ impl<'a> RpcClient<'a> {
         mut counters: Option<&mut Counters>,
     ) -> i64 {
         let t0 = std::time::Instant::now();
-        let mb = Mailbox::new(self.mem);
         let mut bd = RpcBreakdown { init_ns: a100::RPC_TOTAL_NS * a100::RPC_ARGINFO_INIT_FRAC, ..Default::default() };
 
-        // Acquire the single slot (serializes concurrent device callers).
+        // Acquire a lane (serializes concurrent device callers only when
+        // the arena is narrower than the caller count).
         // Perf (§Perf L3-1): brief spin for the multi-core fast path, then
         // yield aggressively — on core-starved hosts the server can only
         // answer once we give the core up.
         let mut spins = 0u64;
-        while !mb.cas_status(ST_IDLE, ST_CLAIMED) {
+        let (lane, mb) = loop {
+            if let Some(claim) = self.try_claim() {
+                break claim;
+            }
             std::hint::spin_loop();
             spins += 1;
             if spins > 4 {
                 std::thread::yield_now();
             }
             if spins > 2_000_000_000 {
-                panic!("RPC slot acquisition timed out (server dead?)");
+                panic!("RPC lane acquisition timed out (server dead?)");
             }
-        }
+        };
+        bd.lane = lane;
 
         // ---- Stage 2: identify underlying objects, stage them in the
         // mailbox data region (paper: "copying the format string and buffer
@@ -108,7 +149,10 @@ impl<'a> RpcClient<'a> {
                         Some((_, off, _)) => off,
                         None => {
                             let off = crate::alloc::align_up(data_off, 16);
-                            assert!(off + obj_size <= DATA_CAP, "RPC object too large to stage");
+                            assert!(
+                                off + obj_size <= mb.data_cap(),
+                                "RPC object too large to stage in lane data region"
+                            );
                             if mode.copies_to_host() {
                                 // Device→managed staging copy.
                                 let obj = self.mem.read_vec(base, obj_size as usize);
@@ -189,8 +233,10 @@ impl<'a> RpcClient<'a> {
 #[cfg(test)]
 mod tests {
     // End-to-end client↔server round trips live in `super::server::tests`
-    // (the client requires a live server thread to acknowledge requests).
+    // and `super::engine::server::tests` (the client requires a live
+    // server thread to acknowledge requests).
     use super::*;
+    use crate::gpu::memory::MemConfig;
 
     #[test]
     fn breakdown_totals() {
@@ -202,5 +248,44 @@ mod tests {
             ..Default::default()
         };
         assert_eq!(bd.device_total_ns(), 10.0);
+    }
+
+    #[test]
+    fn home_lane_follows_team_id() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let arena = ArenaLayout::for_lanes(4);
+        assert_eq!(RpcClient::for_team(&mem, arena, 0).home_lane(), 0);
+        assert_eq!(RpcClient::for_team(&mem, arena, 3).home_lane(), 3);
+        assert_eq!(RpcClient::for_team(&mem, arena, 6).home_lane(), 2);
+        assert_eq!(RpcClient::new(&mem).home_lane(), 0);
+    }
+
+    #[test]
+    fn lane_exhaustion_backpressure_and_release() {
+        // All lanes claimed -> try_claim refuses; freeing any lane lets
+        // the caller in, preferring its home lane's probe order.
+        let mem = DeviceMemory::new(MemConfig::small());
+        let arena = ArenaLayout::for_lanes(2);
+        for lane in 0..2 {
+            assert!(arena.lane(&mem, lane).cas_status(ST_IDLE, ST_CLAIMED));
+        }
+        let client = RpcClient::for_team(&mem, arena, 1);
+        assert!(client.try_claim().is_none(), "arena exhausted: caller must back off");
+        // Lane 0 frees up; the team-1 client probes 1 then 0.
+        arena.lane(&mem, 0).set_status(ST_IDLE);
+        let (lane, mb) = client.try_claim().expect("a lane is idle again");
+        assert_eq!(lane, 0);
+        assert_eq!(mb.base(), arena.lane_base(0));
+        assert_eq!(mb.status(), ST_CLAIMED, "claim transitions the slot");
+        assert!(client.try_claim().is_none(), "claim is exclusive");
+    }
+
+    #[test]
+    fn home_lane_preferred_when_idle() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let arena = ArenaLayout::for_lanes(4);
+        let client = RpcClient::for_team(&mem, arena, 2);
+        let (lane, _) = client.try_claim().unwrap();
+        assert_eq!(lane, 2);
     }
 }

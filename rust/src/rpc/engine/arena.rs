@@ -1,0 +1,156 @@
+//! The multi-lane mailbox arena: N independent RPC slots carved out of
+//! the base of the managed segment, one lane per team (lane = `team_id %
+//! lanes`), so device threads in different teams no longer serialize on
+//! the paper's single slot.
+//!
+//! Layout: lanes are packed back to back, each `DATA_OFF + data_cap`
+//! bytes. `DATA_OFF`, `data_cap` and `SLOT_BASE` are all 64-byte
+//! multiples (const-asserted in [`mailbox`]), so every lane header sits
+//! on its own cache line — concurrent polling by engine workers never
+//! false-shares a line with a neighbouring lane's doorbell.
+//!
+//! ```text
+//! SLOT_BASE                 + stride              + 2*stride
+//! | hdr | pad | DATA lane0 | hdr | pad | DATA l1 | hdr | ...
+//!   ^--- stride = DATA_OFF + data_cap ---^
+//! ```
+//!
+//! [`ArenaLayout::legacy`] (1 lane × 1 MiB data) occupies exactly the
+//! bytes the single-slot prototype reserved (`MAILBOX_RESERVED`), which
+//! is what keeps the `lanes=1,workers=1` path bit-identical to the
+//! paper's Fig. 7 setup.
+//!
+//! [`mailbox`]: crate::rpc::mailbox
+
+use crate::gpu::memory::DeviceMemory;
+use crate::rpc::mailbox::{Mailbox, DATA_CAP, DATA_OFF, MAILBOX_RESERVED, SLOT_BASE};
+
+/// Per-lane data capacity used by multi-lane arenas. Smaller than the
+/// legacy 1 MiB so 8+ lanes fit comfortably in the managed segment;
+/// still far above what the libc-style calls the evaluation issues ever
+/// stage.
+pub const MULTI_LANE_DATA_CAP: u64 = 256 << 10;
+
+/// Shape of the mailbox arena. Copy-cheap; the [`Device`] owns one and
+/// clients/engine workers carry copies.
+///
+/// [`Device`]: crate::gpu::grid::Device
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ArenaLayout {
+    pub lanes: usize,
+    /// DATA region bytes per lane.
+    pub data_cap: u64,
+}
+
+impl Default for ArenaLayout {
+    fn default() -> Self {
+        Self::legacy()
+    }
+}
+
+impl ArenaLayout {
+    /// The paper's single-slot layout: one lane, 1 MiB data region.
+    pub const fn legacy() -> Self {
+        Self { lanes: 1, data_cap: DATA_CAP }
+    }
+
+    pub fn new(lanes: usize, data_cap: u64) -> Self {
+        assert!(lanes >= 1, "arena needs at least one lane");
+        assert!(
+            data_cap > 0 && data_cap % 64 == 0,
+            "lane data capacity must be a positive cache-line multiple"
+        );
+        Self { lanes, data_cap }
+    }
+
+    /// The default shape for a lane count: the legacy layout for one
+    /// lane (Fig. 7 reproducibility), [`MULTI_LANE_DATA_CAP`] otherwise.
+    pub fn for_lanes(lanes: usize) -> Self {
+        if lanes <= 1 {
+            Self::legacy()
+        } else {
+            Self::new(lanes, MULTI_LANE_DATA_CAP)
+        }
+    }
+
+    /// Bytes from one lane's base to the next (header pad + data).
+    pub const fn lane_stride(&self) -> u64 {
+        DATA_OFF + self.data_cap
+    }
+
+    /// Managed bytes the whole arena occupies from `SLOT_BASE`.
+    pub const fn reserved_bytes(&self) -> u64 {
+        self.lanes as u64 * self.lane_stride()
+    }
+
+    pub fn lane_base(&self, lane: usize) -> u64 {
+        assert!(lane < self.lanes, "lane {lane} out of range ({} lanes)", self.lanes);
+        SLOT_BASE + lane as u64 * self.lane_stride()
+    }
+
+    /// A typed mailbox view over one lane.
+    pub fn lane<'a>(&self, mem: &'a DeviceMemory, lane: usize) -> Mailbox<'a> {
+        Mailbox::at(mem, self.lane_base(lane), self.data_cap)
+    }
+}
+
+// The degenerate arena reserves exactly what the single-slot prototype
+// did, so `Device::new` keeps its historical managed-memory map.
+const _: () = assert!(ArenaLayout::legacy().reserved_bytes() == MAILBOX_RESERVED);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::{MemConfig, Segment};
+    use crate::rpc::mailbox::{ST_IDLE, ST_REQUEST};
+
+    #[test]
+    fn legacy_matches_single_slot_reservation() {
+        let a = ArenaLayout::legacy();
+        assert_eq!(a.lanes, 1);
+        assert_eq!(a.reserved_bytes(), MAILBOX_RESERVED);
+        assert_eq!(a.lane_base(0), SLOT_BASE);
+        assert_eq!(ArenaLayout::for_lanes(1), a);
+    }
+
+    #[test]
+    fn lanes_tile_without_gaps_or_overlap() {
+        let a = ArenaLayout::for_lanes(4);
+        for i in 0..4 {
+            assert_eq!(a.lane_base(i) % 64, 0, "lane {i} base not cache-line aligned");
+            if i > 0 {
+                // Lane i starts exactly where lane i-1's data region ends.
+                assert_eq!(a.lane_base(i), a.lane_base(i - 1) + DATA_OFF + a.data_cap);
+            }
+        }
+        assert_eq!(a.lane_base(3) + a.lane_stride(), SLOT_BASE + a.reserved_bytes());
+    }
+
+    #[test]
+    fn lanes_are_independent_slots() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let a = ArenaLayout::for_lanes(3);
+        assert_eq!(mem.segment(a.lane_base(2) + a.lane_stride() - 1), Segment::Managed);
+        for i in 0..3 {
+            let mb = a.lane(&mem, i);
+            mb.set_callee(100 + i as u64);
+            mb.write_data(0, &[i as u8; 64]);
+        }
+        for i in 0..3 {
+            let mb = a.lane(&mem, i);
+            assert_eq!(mb.callee(), 100 + i as u64);
+            assert_eq!(mb.read_data(0, 64), vec![i as u8; 64]);
+            assert_eq!(mb.status(), ST_IDLE);
+        }
+        // Status transitions stay per-lane.
+        assert!(a.lane(&mem, 1).cas_status(ST_IDLE, ST_REQUEST));
+        assert_eq!(a.lane(&mem, 0).status(), ST_IDLE);
+        assert_eq!(a.lane(&mem, 2).status(), ST_IDLE);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn lane_index_bounds_checked() {
+        ArenaLayout::for_lanes(2).lane_base(2);
+    }
+}

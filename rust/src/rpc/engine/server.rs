@@ -1,0 +1,629 @@
+//! The worker-pool host RPC server over the multi-lane arena.
+//!
+//! N host threads poll disjoint lane sets (`lane % workers == worker`),
+//! claim ready lanes with a `ST_REQUEST -> ST_SERVING` CAS (which makes
+//! **work-stealing** between workers race-free), and drain *every* ready
+//! lane of a poll sweep before dispatching. Homogeneous calls in one
+//! sweep — same callee id, the per-thread `fprintf` storm of Fig. 7 —
+//! are dispatched as **one batched landing-pad invocation** through the
+//! registry's batch pad (or, lacking one, one registry lookup amortized
+//! over the group).
+//!
+//! Stage table for the batched path (the Fig. 7 pipeline, per sweep):
+//!
+//! ```text
+//! stage                         single-slot server      engine (per sweep)
+//! 1  poll                       1 slot                  own lanes + steal CAS
+//! 2  copy RPCInfo to host       1 frame                 all ready frames
+//! 3  invoke host wrapper        1 scalar pad            1 batch pad / group
+//! 4  copy-back + notify         1 slot -> DONE          each lane -> DONE
+//! ```
+//!
+//! `lanes=1, workers=1` degenerates to the paper's single-threaded
+//! single-slot server: one lane, one poller, batches of one.
+
+use super::arena::ArenaLayout;
+use crate::gpu::memory::DeviceMemory;
+use crate::rpc::mailbox::{ST_DONE, ST_IDLE, ST_REQUEST, ST_SERVING};
+use crate::rpc::server::{unpack_frame, writeback_frame, RpcFrame, WrapperRegistry};
+use crate::rpc::wrappers::HostEnv;
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+
+/// Engine shape: `--rpc-lanes` × `--rpc-workers` plus the batching
+/// toggle (`--no-rpc-batch` clears it).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineConfig {
+    pub lanes: usize,
+    pub workers: usize,
+    /// Coalesce same-callee requests of one sweep into one dispatch.
+    pub batch: bool,
+}
+
+impl Default for EngineConfig {
+    fn default() -> Self {
+        Self { lanes: 1, workers: 1, batch: true }
+    }
+}
+
+/// Per-lane occupancy/serve counters.
+#[derive(Debug, Default)]
+pub struct LaneCounters {
+    pub served: AtomicU64,
+    /// Owner-worker polls of this lane.
+    pub polls: AtomicU64,
+    /// Polls that found the lane non-idle (occupancy numerator).
+    pub polls_busy: AtomicU64,
+}
+
+/// Live engine counters (atomics shared with the worker threads).
+#[derive(Debug)]
+pub struct EngineMetrics {
+    lanes_n: usize,
+    workers_n: usize,
+    pub served: AtomicU64,
+    /// Coalesced dispatches (groups of ≥ 2 same-callee requests).
+    pub batches: AtomicU64,
+    /// Requests that rode in those coalesced dispatches.
+    pub batched_calls: AtomicU64,
+    pub max_batch: AtomicU64,
+    /// Requests a worker claimed from a lane it does not own.
+    pub steals: AtomicU64,
+    pub lanes: Vec<LaneCounters>,
+}
+
+impl EngineMetrics {
+    fn new(cfg: EngineConfig) -> Self {
+        Self {
+            lanes_n: cfg.lanes,
+            workers_n: cfg.workers,
+            served: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            batched_calls: AtomicU64::new(0),
+            max_batch: AtomicU64::new(0),
+            steals: AtomicU64::new(0),
+            lanes: (0..cfg.lanes).map(|_| LaneCounters::default()).collect(),
+        }
+    }
+
+    pub fn snapshot(&self) -> EngineSnapshot {
+        let r = Ordering::Relaxed;
+        EngineSnapshot {
+            lanes: self.lanes_n,
+            workers: self.workers_n,
+            served: self.served.load(r),
+            batches: self.batches.load(r),
+            batched_calls: self.batched_calls.load(r),
+            max_batch: self.max_batch.load(r),
+            steals: self.steals.load(r),
+            polls: self.lanes.iter().map(|l| l.polls.load(r)).sum(),
+            polls_busy: self.lanes.iter().map(|l| l.polls_busy.load(r)).sum(),
+        }
+    }
+
+    pub fn lane_served(&self) -> Vec<u64> {
+        self.lanes.iter().map(|l| l.served.load(Ordering::Relaxed)).collect()
+    }
+
+    /// Machine-readable report including the per-lane breakdown.
+    pub fn to_json(&self) -> Json {
+        let r = Ordering::Relaxed;
+        let s = self.snapshot();
+        let lanes: Vec<Json> = self
+            .lanes
+            .iter()
+            .enumerate()
+            .map(|(i, l)| {
+                let polls = l.polls.load(r);
+                let busy = l.polls_busy.load(r);
+                Json::obj(vec![
+                    ("lane", Json::num(i as f64)),
+                    ("served", Json::num(l.served.load(r) as f64)),
+                    (
+                        "occupancy",
+                        Json::num(if polls == 0 { 0.0 } else { busy as f64 / polls as f64 }),
+                    ),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("lanes", Json::num(s.lanes as f64)),
+            ("workers", Json::num(s.workers as f64)),
+            ("served", Json::num(s.served as f64)),
+            ("batches", Json::num(s.batches as f64)),
+            ("batched_calls", Json::num(s.batched_calls as f64)),
+            ("max_batch", Json::num(s.max_batch as f64)),
+            ("steals", Json::num(s.steals as f64)),
+            ("occupancy", Json::num(s.occupancy())),
+            ("per_lane", Json::Arr(lanes)),
+        ])
+    }
+}
+
+/// Copyable aggregate of [`EngineMetrics`] for `RunMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct EngineSnapshot {
+    pub lanes: usize,
+    pub workers: usize,
+    pub served: u64,
+    pub batches: u64,
+    pub batched_calls: u64,
+    pub max_batch: u64,
+    pub steals: u64,
+    pub polls: u64,
+    pub polls_busy: u64,
+}
+
+impl EngineSnapshot {
+    /// Fraction of owner polls that found the lane occupied.
+    pub fn occupancy(&self) -> f64 {
+        if self.polls == 0 {
+            0.0
+        } else {
+            self.polls_busy as f64 / self.polls as f64
+        }
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "rpc_engine lanes={} workers={} served={} batches={} batched={} max_batch={} steals={} occupancy={:.3}",
+            self.lanes,
+            self.workers,
+            self.served,
+            self.batches,
+            self.batched_calls,
+            self.max_batch,
+            self.steals,
+            self.occupancy(),
+        )
+    }
+}
+
+/// Handle to the running worker pool.
+pub struct RpcEngine {
+    cfg: EngineConfig,
+    shutdown: Arc<AtomicBool>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<EngineMetrics>,
+}
+
+impl RpcEngine {
+    /// Spawn `cfg.workers` poller threads over `arena`, dispatching to
+    /// `registry` with `env` as the host state.
+    pub fn start(
+        mem: Arc<DeviceMemory>,
+        arena: ArenaLayout,
+        registry: Arc<WrapperRegistry>,
+        env: Arc<HostEnv>,
+        cfg: EngineConfig,
+    ) -> Self {
+        assert!(cfg.workers >= 1, "engine needs at least one worker");
+        assert_eq!(cfg.lanes, arena.lanes, "engine config and arena disagree on lane count");
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let metrics = Arc::new(EngineMetrics::new(cfg));
+        let mut handles = Vec::with_capacity(cfg.workers);
+        for w in 0..cfg.workers {
+            let mem = Arc::clone(&mem);
+            let registry = Arc::clone(&registry);
+            let env = Arc::clone(&env);
+            let metrics = Arc::clone(&metrics);
+            let shutdown = Arc::clone(&shutdown);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rpc-engine-{w}"))
+                    .spawn(move || worker_loop(w, &mem, arena, &registry, &env, cfg, &metrics, &shutdown))
+                    .expect("spawn rpc engine worker"),
+            );
+        }
+        Self { cfg, shutdown, handles, metrics }
+    }
+
+    pub fn config(&self) -> EngineConfig {
+        self.cfg
+    }
+
+    pub fn stop(mut self) {
+        self.join_workers();
+    }
+
+    fn join_workers(&mut self) {
+        self.shutdown.store(true, Ordering::Relaxed);
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for RpcEngine {
+    fn drop(&mut self) {
+        self.join_workers();
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn worker_loop(
+    worker: usize,
+    mem: &DeviceMemory,
+    arena: ArenaLayout,
+    registry: &WrapperRegistry,
+    env: &HostEnv,
+    cfg: EngineConfig,
+    metrics: &EngineMetrics,
+    shutdown: &AtomicBool,
+) {
+    let own: Vec<usize> = (0..cfg.lanes).filter(|i| i % cfg.workers == worker).collect();
+    let mut idle_sweeps = 0u64;
+    let mut claimed: Vec<usize> = Vec::with_capacity(cfg.lanes);
+    loop {
+        claimed.clear();
+        // Sweep the lanes this worker owns, claiming every ready one.
+        // (Engine shutdown is the atomic flag only — a lane stuck at
+        // ST_SHUTDOWN is just "busy" here, never a reason to abandon
+        // lanes already claimed in this sweep.)
+        for &i in &own {
+            let mb = arena.lane(mem, i);
+            let lc = &metrics.lanes[i];
+            lc.polls.fetch_add(1, Ordering::Relaxed);
+            match mb.status() {
+                ST_IDLE => {}
+                _ => {
+                    lc.polls_busy.fetch_add(1, Ordering::Relaxed);
+                    if mb.cas_status(ST_REQUEST, ST_SERVING) {
+                        claimed.push(i);
+                    }
+                }
+            }
+        }
+        // Nothing of our own: steal one ready request from a foreign lane
+        // (the claim CAS makes this race-free against its owner).
+        if claimed.is_empty() && cfg.lanes > own.len() {
+            for i in 0..cfg.lanes {
+                if i % cfg.workers == worker {
+                    continue;
+                }
+                if arena.lane(mem, i).cas_status(ST_REQUEST, ST_SERVING) {
+                    metrics.steals.fetch_add(1, Ordering::Relaxed);
+                    claimed.push(i);
+                    break;
+                }
+            }
+        }
+        if claimed.is_empty() {
+            if shutdown.load(Ordering::Relaxed) {
+                break;
+            }
+            // Perf (§Perf L3-1): brief hot window after the last request,
+            // then hand the core back.
+            std::hint::spin_loop();
+            idle_sweeps += 1;
+            if idle_sweeps > 4 {
+                std::thread::yield_now();
+            }
+            continue;
+        }
+        idle_sweeps = 0;
+        dispatch_sweep(mem, arena, registry, env, cfg.batch, metrics, &claimed);
+    }
+}
+
+/// Serve every claimed lane of one sweep, coalescing same-callee groups.
+fn dispatch_sweep(
+    mem: &DeviceMemory,
+    arena: ArenaLayout,
+    registry: &WrapperRegistry,
+    env: &HostEnv,
+    batch: bool,
+    metrics: &EngineMetrics,
+    claimed: &[usize],
+) {
+    // Stage 2: copy every ready RPCInfo to the host.
+    let mut callees = Vec::with_capacity(claimed.len());
+    let mut frames: Vec<RpcFrame> = Vec::with_capacity(claimed.len());
+    for &lane in claimed {
+        let (callee, frame) = unpack_frame(&arena.lane(mem, lane));
+        callees.push(callee);
+        frames.push(frame);
+    }
+    // Group by callee, preserving claim order within a group.
+    let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
+    for (k, &c) in callees.iter().enumerate() {
+        match groups.iter_mut().find(|(g, _)| *g == c) {
+            Some((_, members)) => members.push(k),
+            None => groups.push((c, vec![k])),
+        }
+    }
+    // Stage 3: one landing-pad invocation per homogeneous group.
+    for (callee, members) in groups {
+        let coalesced = batch && members.len() > 1;
+        if coalesced {
+            metrics.batches.fetch_add(1, Ordering::Relaxed);
+            metrics.batched_calls.fetch_add(members.len() as u64, Ordering::Relaxed);
+            metrics.max_batch.fetch_max(members.len() as u64, Ordering::Relaxed);
+        }
+        let rets: Vec<(i64, u64)> = match (coalesced.then(|| registry.get_batch(callee)).flatten(), registry.get(callee)) {
+            (Some(batch_pad), _) => {
+                // True batch pad: the whole group in one invocation.
+                let mut group_frames: Vec<RpcFrame> =
+                    members.iter().map(|&k| std::mem::take(&mut frames[k])).collect();
+                let rs = batch_pad(&mut group_frames, env);
+                for (j, &k) in members.iter().enumerate() {
+                    frames[k] = std::mem::take(&mut group_frames[j]);
+                }
+                (0..members.len()).map(|j| (rs.get(j).copied().unwrap_or(-1), 0)).collect()
+            }
+            (None, Some(pad)) => {
+                // Scalar pad: still a single registry dispatch for the group.
+                members.iter().map(|&k| (pad(&mut frames[k], env), 0)).collect()
+            }
+            (None, None) => members.iter().map(|_| (-1i64, 1u64)).collect(),
+        };
+        // Stage 4: copy-back + notify, per lane.
+        for (j, &k) in members.iter().enumerate() {
+            let lane = claimed[k];
+            let mb = arena.lane(mem, lane);
+            writeback_frame(&mb, &frames[k]);
+            let (ret, flags) = rets[j];
+            mb.set_ret(ret);
+            mb.set_flags(flags);
+            metrics.lanes[lane].served.fetch_add(1, Ordering::Relaxed);
+            metrics.served.fetch_add(1, Ordering::Relaxed);
+            mb.set_status(ST_DONE);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::{MemConfig, GLOBAL_BASE};
+    use crate::rpc::arginfo::{ArgMode, RpcArgInfo};
+    use crate::rpc::client::RpcClient;
+    use crate::rpc::mailbox::{WireArg, KIND_REF, KIND_VAL};
+    use crate::rpc::server::RpcServer;
+    use crate::rpc::wrappers::register_common;
+
+    fn setup(lanes: usize) -> (Arc<DeviceMemory>, ArenaLayout, Arc<WrapperRegistry>, Arc<HostEnv>) {
+        (
+            Arc::new(DeviceMemory::new(MemConfig::small())),
+            ArenaLayout::for_lanes(lanes),
+            Arc::new(WrapperRegistry::new()),
+            Arc::new(HostEnv::new()),
+        )
+    }
+
+    #[test]
+    fn multi_lane_round_trip_across_teams() {
+        let (mem, arena, reg, env) = setup(4);
+        let id = reg.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            env,
+            EngineConfig { lanes: 4, workers: 2, batch: true },
+        );
+        std::thread::scope(|s| {
+            for t in 0..8u64 {
+                let mem = &mem;
+                s.spawn(move || {
+                    let mut client = RpcClient::for_team(mem, arena, t as usize);
+                    for k in 0..25u64 {
+                        let mut info = RpcArgInfo::new();
+                        info.add_val(t * 1000 + k);
+                        assert_eq!(client.call(id, &info, None), (t * 1000 + k) as i64);
+                    }
+                });
+            }
+        });
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.served, 200);
+        assert_eq!(engine.metrics.lane_served().iter().sum::<u64>(), 200);
+        // Teams hash over all four lanes, so no lane saw everything.
+        assert!(engine.metrics.lane_served().iter().all(|&n| n < 200));
+        engine.stop();
+    }
+
+    #[test]
+    fn degenerate_engine_matches_legacy_server_observably() {
+        // lanes=1, workers=1 must behave exactly like the single-slot
+        // server: same rets, same host effects, same modeled breakdown.
+        let run = |legacy: bool| {
+            let (mem, arena, reg, env) = setup(1);
+            let ids = register_common(&reg);
+            let id = ids["__fprintf_p_cp_cp"];
+            let server: Box<dyn FnOnce()> = if legacy {
+                let s = RpcServer::start(Arc::clone(&mem), Arc::clone(&reg), Arc::clone(&env));
+                Box::new(move || s.stop())
+            } else {
+                let e = RpcEngine::start(
+                    Arc::clone(&mem),
+                    arena,
+                    Arc::clone(&reg),
+                    Arc::clone(&env),
+                    EngineConfig::default(),
+                );
+                Box::new(move || e.stop())
+            };
+            let fmt = GLOBAL_BASE + 256;
+            mem.write_cstr(fmt, "v=%s\n");
+            let buf = GLOBAL_BASE + 512;
+            mem.write_cstr(buf, "payload");
+            let mut client = RpcClient::for_team(&mem, arena, 0);
+            let mut info = RpcArgInfo::new();
+            info.add_val(2);
+            info.add_ref(fmt, ArgMode::Read, 6, 0);
+            info.add_ref(buf, ArgMode::ReadWrite, 8, 0);
+            let ret = client.call(id, &info, None);
+            let bd = client.last;
+            server();
+            (ret, env.stderr_string(), bd.device_total_ns())
+        };
+        let (ret_l, err_l, ns_l) = run(true);
+        let (ret_e, err_e, ns_e) = run(false);
+        assert_eq!(ret_l, ret_e);
+        assert_eq!(err_l, err_e);
+        assert_eq!(err_e, "v=payload\n");
+        assert_eq!(ns_l, ns_e, "modeled Fig. 7 stage totals must be identical");
+    }
+
+    #[test]
+    fn sweep_batches_homogeneous_requests() {
+        // Pre-fill all four lanes before the engine starts: the first
+        // sweep then sees four ready same-callee requests and must
+        // dispatch them as one coalesced group.
+        let (mem, arena, reg, env) = setup(4);
+        let id = reg.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+        for lane in 0..4 {
+            let mb = arena.lane(&mem, lane);
+            mb.set_callee(id);
+            mb.set_nargs(1);
+            mb.write_arg(0, WireArg { kind: KIND_VAL, value: 70 + lane as u64, mode: 0, size: 0, offset: 0 });
+            mb.set_status(ST_REQUEST);
+        }
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            env,
+            EngineConfig { lanes: 4, workers: 1, batch: true },
+        );
+        for lane in 0..4 {
+            let mb = arena.lane(&mem, lane);
+            let mut spins = 0u64;
+            while mb.status() != ST_DONE {
+                std::thread::yield_now();
+                spins += 1;
+                assert!(spins < 50_000_000, "lane {lane} never served");
+            }
+            assert_eq!(mb.ret(), 70 + lane as i64);
+            mb.set_status(ST_IDLE);
+        }
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.served, 4);
+        assert_eq!(snap.batches, 1, "one coalesced dispatch");
+        assert_eq!(snap.batched_calls, 4);
+        assert_eq!(snap.max_batch, 4);
+        engine.stop();
+    }
+
+    #[test]
+    fn printf_batch_pad_appends_in_claim_order() {
+        let (mem, arena, reg, env) = setup(3);
+        let ids = register_common(&reg);
+        let id = ids["__printf_cp"];
+        for lane in 0..3 {
+            let mb = arena.lane(&mem, lane);
+            let msg = format!("line{lane}\n\0");
+            mb.write_data(0, msg.as_bytes());
+            mb.set_callee(id);
+            mb.set_nargs(1);
+            mb.write_arg(
+                0,
+                WireArg { kind: KIND_REF, value: 0, mode: ArgMode::Read.encode(), size: msg.len() as u64, offset: 0 },
+            );
+            mb.set_status(ST_REQUEST);
+        }
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            Arc::clone(&env),
+            EngineConfig { lanes: 3, workers: 1, batch: true },
+        );
+        for lane in 0..3 {
+            let mb = arena.lane(&mem, lane);
+            while mb.status() != ST_DONE {
+                std::thread::yield_now();
+            }
+            assert_eq!(mb.ret(), 6, "printf returns bytes written");
+        }
+        assert_eq!(env.stdout_string(), "line0\nline1\nline2\n");
+        assert_eq!(engine.metrics.snapshot().batches, 1);
+        engine.stop();
+    }
+
+    #[test]
+    fn unknown_callee_in_sweep_sets_flag() {
+        let (mem, arena, reg, env) = setup(2);
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            reg,
+            env,
+            EngineConfig { lanes: 2, workers: 1, batch: true },
+        );
+        let mut client = RpcClient::for_team(&mem, arena, 0);
+        let info = RpcArgInfo::new();
+        assert_eq!(client.call(999, &info, None), -1);
+        engine.stop();
+    }
+
+    #[test]
+    fn idle_worker_steals_from_busy_workers_lanes() {
+        // 4 lanes × 2 workers: w0 owns {0,2}, w1 owns {1,3}. Park w1 in a
+        // slow wrapper on lane 1, then drive lane 3 (also w1's): only w0
+        // can serve it, via stealing.
+        let (mem, arena, reg, env) = setup(4);
+        let slow = reg.register(
+            "__slow",
+            Box::new(|_, _| {
+                std::thread::sleep(std::time::Duration::from_millis(60));
+                0
+            }),
+        );
+        let fast = reg.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            env,
+            EngineConfig { lanes: 4, workers: 2, batch: true },
+        );
+        std::thread::scope(|s| {
+            let mem_ref = &mem;
+            s.spawn(move || {
+                let mut client = RpcClient::for_team(mem_ref, arena, 1);
+                assert_eq!(client.call(slow, &RpcArgInfo::new(), None), 0);
+            });
+            std::thread::sleep(std::time::Duration::from_millis(10));
+            let mut client = RpcClient::for_team(&mem, arena, 3);
+            for k in 0..5u64 {
+                let mut info = RpcArgInfo::new();
+                info.add_val(k);
+                assert_eq!(client.call(fast, &info, None), k as i64);
+            }
+        });
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.served, 6);
+        assert!(snap.steals >= 1, "lane 3 requests were served while its owner slept");
+        engine.stop();
+    }
+
+    #[test]
+    fn occupancy_and_json_report() {
+        let (mem, arena, reg, env) = setup(2);
+        let id = reg.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            reg,
+            env,
+            EngineConfig { lanes: 2, workers: 1, batch: true },
+        );
+        let mut client = RpcClient::for_team(&mem, arena, 0);
+        for k in 0..10u64 {
+            let mut info = RpcArgInfo::new();
+            info.add_val(k);
+            client.call(id, &info, None);
+        }
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.served, 10);
+        assert!(snap.polls > 0);
+        assert!((0.0..=1.0).contains(&snap.occupancy()));
+        let j = engine.metrics.to_json().to_string();
+        assert!(j.contains("\"per_lane\""), "json report lists lanes: {j}");
+        assert!(snap.summary().contains("served=10"));
+        engine.stop();
+    }
+}

@@ -1,12 +1,16 @@
 //! The managed-memory RPC channel (paper §2.2: the runtime "communicates
 //! with the GPU threads via 'shared', in our case, managed, memory").
 //!
-//! One slot (the paper's prototype features single-threaded RPC handling,
-//! §4.4) at the base of the managed segment:
+//! A *slot* is one request/response mailbox. The paper's prototype
+//! features single-threaded RPC handling over a single slot (§4.4); the
+//! [`super::engine`] generalizes this into a multi-lane arena of slots,
+//! so the slot layout here is parameterized by base address and data
+//! capacity. [`Mailbox::new`] is the legacy single slot at the base of
+//! the managed segment.
 //!
 //! ```text
 //! off   field
-//! 0     STATUS   0 = idle, 1 = request ready, 2 = done, 3 = shutdown
+//! 0     STATUS   0 idle, 1 request, 2 done, 3 shutdown, 4 claimed, 5 serving
 //! 8     CALLEE   enum value identifying the landing pad (Fig. 3c line 18)
 //! 16    NARGS
 //! 24    RET      i64 return value
@@ -14,38 +18,44 @@
 //! 40    ARGS     MAX_ARGS × 40 B: kind, value, mode, size, offset
 //! 1024  DATA     migrated underlying objects (client packs, server reads)
 //! ```
+//!
+//! The offsets are not hard-coded: they are derived below and checked at
+//! compile time against the `#[repr(C)]` [`SlotHeader`] mirror, so the
+//! header can never silently grow into the DATA region when `MAX_ARGS`
+//! changes.
 
 use crate::gpu::memory::{DeviceMemory, MANAGED_BASE};
+use std::mem::{align_of, size_of};
 
 pub const SLOT_BASE: u64 = MANAGED_BASE;
 pub const MAX_ARGS: usize = 16;
 pub const DATA_OFF: u64 = 1024;
 pub const DATA_CAP: u64 = 1 << 20;
-/// Managed bytes reserved for the mailbox (see `Device::new`).
+/// Managed bytes reserved for the legacy single-slot mailbox; the
+/// multi-lane arena reserves `ArenaLayout::reserved_bytes()` instead
+/// (see `Device::with_arena`).
 pub const MAILBOX_RESERVED: u64 = DATA_OFF + DATA_CAP;
 
 pub const ST_IDLE: u64 = 0;
 pub const ST_REQUEST: u64 = 1;
 pub const ST_DONE: u64 = 2;
 pub const ST_SHUTDOWN: u64 = 3;
-
-const OFF_STATUS: u64 = 0;
-const OFF_CALLEE: u64 = 8;
-const OFF_NARGS: u64 = 16;
-const OFF_RET: u64 = 24;
-const OFF_FLAGS: u64 = 32;
-const OFF_ARGS: u64 = 40;
-const ARG_STRIDE: u64 = 40;
+/// A device thread won the slot and is filling the frame before ringing
+/// the doorbell (client-side state, introduced by [`super::client`]).
+pub const ST_CLAIMED: u64 = 4;
+/// An engine worker CAS'd `ST_REQUEST -> ST_SERVING` to claim the
+/// request; this is what makes work-stealing between workers race-free.
+pub const ST_SERVING: u64 = 5;
 
 pub const KIND_VAL: u64 = 0;
 pub const KIND_REF: u64 = 1;
 
-/// Raw typed view over the slot; both client (device thread) and server
-/// (host thread) construct one over the same [`DeviceMemory`].
-pub struct Mailbox<'a> {
-    pub mem: &'a DeviceMemory,
-}
-
+/// One argument descriptor as it sits in the slot (`ARGS[i]`). This is
+/// both the wire view used by [`Mailbox::write_arg`]/[`read_arg`] and the
+/// `#[repr(C)]` layout source of truth.
+///
+/// [`read_arg`]: Mailbox::read_arg
+#[repr(C)]
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct WireArg {
     pub kind: u64,
@@ -57,65 +67,133 @@ pub struct WireArg {
     pub offset: u64,
 }
 
+/// `#[repr(C)]` mirror of the slot header. Nothing constructs this
+/// type — it exists so the field offsets used for raw device-memory
+/// access are *checked against the compiler's* layout rules instead of
+/// being free-floating magic numbers.
+#[repr(C)]
+#[allow(dead_code)]
+pub struct SlotHeader {
+    pub status: u64,
+    pub callee: u64,
+    pub nargs: u64,
+    pub ret: i64,
+    pub flags: u64,
+    pub args: [WireArg; MAX_ARGS],
+}
+
+// Offsets derived field-by-field (repr(C): no reordering, and with every
+// field 8-aligned there is no padding — the const assertions below prove
+// both claims against the real layout).
+const OFF_STATUS: u64 = 0;
+const OFF_CALLEE: u64 = OFF_STATUS + size_of::<u64>() as u64;
+const OFF_NARGS: u64 = OFF_CALLEE + size_of::<u64>() as u64;
+const OFF_RET: u64 = OFF_NARGS + size_of::<u64>() as u64;
+const OFF_FLAGS: u64 = OFF_RET + size_of::<i64>() as u64;
+const OFF_ARGS: u64 = OFF_FLAGS + size_of::<u64>() as u64;
+const ARG_STRIDE: u64 = size_of::<WireArg>() as u64;
+/// Total header bytes; everything from here to `DATA_OFF` is padding
+/// that keeps the DATA region (and therefore every lane stride in the
+/// arena) cache-line aligned.
+pub const HEADER_BYTES: u64 = OFF_ARGS + MAX_ARGS as u64 * ARG_STRIDE;
+
+const _: () = assert!(
+    size_of::<SlotHeader>() as u64 == HEADER_BYTES,
+    "derived offsets disagree with #[repr(C)] SlotHeader layout"
+);
+const _: () = assert!(align_of::<SlotHeader>() == 8 && align_of::<WireArg>() == 8);
+const _: () = assert!(
+    HEADER_BYTES <= DATA_OFF,
+    "slot header overlaps the DATA region; raise DATA_OFF or shrink MAX_ARGS"
+);
+const _: () = assert!(DATA_OFF % 64 == 0, "DATA region must stay cache-line aligned");
+const _: () = assert!(DATA_CAP % 64 == 0, "lane stride must stay cache-line aligned");
+const _: () = assert!(SLOT_BASE % 64 == 0, "slot base must be cache-line aligned");
+
+/// Raw typed view over one slot; both client (device thread) and server
+/// (host thread) construct one over the same [`DeviceMemory`].
+pub struct Mailbox<'a> {
+    pub mem: &'a DeviceMemory,
+    base: u64,
+    data_cap: u64,
+}
+
 impl<'a> Mailbox<'a> {
+    /// The legacy single slot at the base of the managed segment.
     pub fn new(mem: &'a DeviceMemory) -> Self {
-        Self { mem }
+        Self::at(mem, SLOT_BASE, DATA_CAP)
+    }
+
+    /// A slot at an arbitrary (cache-line aligned) managed address — one
+    /// lane of the engine's mailbox arena.
+    pub fn at(mem: &'a DeviceMemory, base: u64, data_cap: u64) -> Self {
+        assert_eq!(base % 64, 0, "mailbox slot base {base:#x} not cache-line aligned");
+        assert!(data_cap > 0, "mailbox data region must be non-empty");
+        Self { mem, base, data_cap }
+    }
+
+    pub fn base(&self) -> u64 {
+        self.base
+    }
+
+    pub fn data_cap(&self) -> u64 {
+        self.data_cap
     }
 
     pub fn status(&self) -> u64 {
-        self.mem.atomic_load_u64(SLOT_BASE + OFF_STATUS)
+        self.mem.atomic_load_u64(self.base + OFF_STATUS)
     }
 
     pub fn set_status(&self, st: u64) {
-        self.mem.atomic_store_u64(SLOT_BASE + OFF_STATUS, st);
+        self.mem.atomic_store_u64(self.base + OFF_STATUS, st);
     }
 
     /// Doorbell with CAS so concurrent device threads serialize on the
-    /// single slot (FIFO not guaranteed, matching the prototype).
+    /// slot (FIFO not guaranteed, matching the prototype).
     pub fn try_acquire(&self) -> bool {
-        self.mem.atomic_cas_u64(SLOT_BASE + OFF_STATUS, ST_IDLE, ST_IDLE).is_ok()
+        self.mem.atomic_cas_u64(self.base + OFF_STATUS, ST_IDLE, ST_IDLE).is_ok()
     }
 
     pub fn cas_status(&self, from: u64, to: u64) -> bool {
-        self.mem.atomic_cas_u64(SLOT_BASE + OFF_STATUS, from, to).is_ok()
+        self.mem.atomic_cas_u64(self.base + OFF_STATUS, from, to).is_ok()
     }
 
     pub fn set_callee(&self, id: u64) {
-        self.mem.write_u64(SLOT_BASE + OFF_CALLEE, id);
+        self.mem.write_u64(self.base + OFF_CALLEE, id);
     }
 
     pub fn callee(&self) -> u64 {
-        self.mem.read_u64(SLOT_BASE + OFF_CALLEE)
+        self.mem.read_u64(self.base + OFF_CALLEE)
     }
 
     pub fn set_nargs(&self, n: u64) {
         assert!(n as usize <= MAX_ARGS);
-        self.mem.write_u64(SLOT_BASE + OFF_NARGS, n);
+        self.mem.write_u64(self.base + OFF_NARGS, n);
     }
 
     pub fn nargs(&self) -> u64 {
-        self.mem.read_u64(SLOT_BASE + OFF_NARGS)
+        self.mem.read_u64(self.base + OFF_NARGS)
     }
 
     pub fn set_ret(&self, v: i64) {
-        self.mem.write_i64(SLOT_BASE + OFF_RET, v);
+        self.mem.write_i64(self.base + OFF_RET, v);
     }
 
     pub fn ret(&self) -> i64 {
-        self.mem.read_i64(SLOT_BASE + OFF_RET)
+        self.mem.read_i64(self.base + OFF_RET)
     }
 
     pub fn set_flags(&self, v: u64) {
-        self.mem.write_u64(SLOT_BASE + OFF_FLAGS, v);
+        self.mem.write_u64(self.base + OFF_FLAGS, v);
     }
 
     pub fn flags(&self) -> u64 {
-        self.mem.read_u64(SLOT_BASE + OFF_FLAGS)
+        self.mem.read_u64(self.base + OFF_FLAGS)
     }
 
     pub fn write_arg(&self, i: usize, a: WireArg) {
         assert!(i < MAX_ARGS);
-        let base = SLOT_BASE + OFF_ARGS + i as u64 * ARG_STRIDE;
+        let base = self.base + OFF_ARGS + i as u64 * ARG_STRIDE;
         self.mem.write_u64(base, a.kind);
         self.mem.write_u64(base + 8, a.value);
         self.mem.write_u64(base + 16, a.mode);
@@ -125,7 +203,7 @@ impl<'a> Mailbox<'a> {
 
     pub fn read_arg(&self, i: usize) -> WireArg {
         assert!(i < MAX_ARGS);
-        let base = SLOT_BASE + OFF_ARGS + i as u64 * ARG_STRIDE;
+        let base = self.base + OFF_ARGS + i as u64 * ARG_STRIDE;
         WireArg {
             kind: self.mem.read_u64(base),
             value: self.mem.read_u64(base + 8),
@@ -136,17 +214,17 @@ impl<'a> Mailbox<'a> {
     }
 
     pub fn data_addr(&self, off: u64) -> u64 {
-        assert!(off < DATA_CAP, "mailbox data offset {off} out of range");
-        SLOT_BASE + DATA_OFF + off
+        assert!(off < self.data_cap, "mailbox data offset {off} out of range");
+        self.base + DATA_OFF + off
     }
 
     pub fn write_data(&self, off: u64, bytes: &[u8]) {
-        assert!(off + bytes.len() as u64 <= DATA_CAP, "mailbox data overflow");
+        assert!(off + bytes.len() as u64 <= self.data_cap, "mailbox data overflow");
         self.mem.write_bytes(self.data_addr(off), bytes);
     }
 
     pub fn read_data(&self, off: u64, len: usize) -> Vec<u8> {
-        assert!(off + len as u64 <= DATA_CAP, "mailbox data overflow");
+        assert!(off + len as u64 <= self.data_cap, "mailbox data overflow");
         self.mem.read_vec(self.data_addr(off), len)
     }
 }
@@ -197,5 +275,36 @@ mod tests {
         let payload: Vec<u8> = (0..200u32).map(|x| (x % 251) as u8).collect();
         mb.write_data(96, &payload);
         assert_eq!(mb.read_data(96, payload.len()), payload);
+    }
+
+    #[test]
+    fn layout_header_fits_below_data() {
+        assert!(HEADER_BYTES <= DATA_OFF);
+        assert_eq!(std::mem::size_of::<SlotHeader>() as u64, HEADER_BYTES);
+        assert_eq!(std::mem::size_of::<WireArg>(), 40);
+    }
+
+    #[test]
+    fn slots_at_different_bases_do_not_alias() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let cap = 4096u64;
+        let a = Mailbox::at(&mem, SLOT_BASE, cap);
+        let b = Mailbox::at(&mem, SLOT_BASE + DATA_OFF + cap, cap);
+        a.set_callee(7);
+        b.set_callee(9);
+        a.write_data(0, b"aaaa");
+        b.write_data(0, b"bbbb");
+        assert_eq!(a.callee(), 7);
+        assert_eq!(b.callee(), 9);
+        assert_eq!(a.read_data(0, 4), b"aaaa");
+        assert_eq!(b.read_data(0, 4), b"bbbb");
+    }
+
+    #[test]
+    #[should_panic(expected = "data overflow")]
+    fn small_lane_data_cap_enforced() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let mb = Mailbox::at(&mem, SLOT_BASE, 128);
+        mb.write_data(64, &[0u8; 128]);
     }
 }

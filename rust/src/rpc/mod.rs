@@ -7,24 +7,49 @@
 //!
 //! * [`arginfo`] — the `RPCArgInfo` object call sites fill in: value
 //!   arguments and reference arguments with (mode, object size, offset).
-//! * [`mailbox`] — the managed-memory channel layout and raw access.
+//! * [`mailbox`] — the managed-memory slot layout (offsets derived from a
+//!   `#[repr(C)]` mirror and const-asserted) and raw access, parameterized
+//!   by base address so slots can tile into an arena.
 //! * [`client`] — the device-side call-site-independent stub
-//!   (`issueBlockingCall`): packs arguments, migrates underlying objects
-//!   into the mailbox data region, rings the doorbell, spins, copies
-//!   writable objects back. Records the Fig. 7 stage breakdown.
+//!   (`issueBlockingCall`): picks an arena lane by team id (falling over
+//!   under contention), packs arguments, migrates underlying objects into
+//!   the lane's data region, rings the doorbell, spins, copies writable
+//!   objects back. Records the Fig. 7 stage breakdown.
 //! * [`server`] — the single-threaded host RPC server (paper §4.4) that
-//!   unpacks the frame and invokes the registered landing-pad wrapper.
+//!   unpacks the frame and invokes the registered landing-pad wrapper;
+//!   also home of the [`WrapperRegistry`] with its scalar and batched pads.
+//! * [`engine`] — the multi-lane successor: mailbox **arena** (one lane
+//!   per team), **worker-pool** server with race-free work stealing, and
+//!   the **batching layer** that dispatches homogeneous calls of a poll
+//!   sweep as one landing-pad invocation. `lanes=1, workers=1` degenerates
+//!   to the legacy single-slot behaviour.
 //! * [`wrappers`] — the host landing pads for the libc calls the
 //!   evaluation needs (`fprintf`, `fscanf`, `fopen`, `fread`, ...), closed
-//!   over an in-memory [`wrappers::HostEnv`].
+//!   over an in-memory [`wrappers::HostEnv`], plus their batched variants.
+//!
+//! ## Fig. 7-style stage table, batched path
+//!
+//! One engine poll sweep over an N-lane arena serves up to N in-flight
+//! calls; per sweep:
+//!
+//! ```text
+//! stage                     single-slot (paper)   engine sweep
+//! poll / claim              read 1 status word    own-lane CAS sweep + steal
+//! copy RPCInfo to host      1 frame               all ready frames
+//! invoke host wrapper       scalar pad            1 batched pad per callee group
+//! copy-back + notify        1 slot                per lane, then ST_DONE each
+//! client-visible wait       975 us modeled        unchanged per call; calls overlap
+//! ```
 
 pub mod arginfo;
 pub mod mailbox;
 pub mod client;
 pub mod server;
+pub mod engine;
 pub mod wrappers;
 
 pub use arginfo::{ArgMode, RpcArg, RpcArgInfo};
 pub use client::{RpcBreakdown, RpcClient};
-pub use server::{RpcFrame, RpcServer, WrapperFn, WrapperRegistry};
+pub use engine::{ArenaLayout, EngineConfig, EngineMetrics, EngineSnapshot, RpcEngine};
+pub use server::{BatchWrapperFn, RpcFrame, RpcServer, WrapperFn, WrapperRegistry};
 pub use wrappers::HostEnv;

@@ -85,11 +85,18 @@ impl RpcFrame {
 /// (callee × argument-type signature) — `__fscanf_ip_fp_ip` in Fig. 3b.
 pub type WrapperFn = Box<dyn Fn(&mut RpcFrame, &HostEnv) -> i64 + Send + Sync>;
 
+/// A *batched* landing pad: one invocation serving every same-callee
+/// frame an engine poll sweep drained, returning one value per frame.
+/// See [`crate::rpc::wrappers::synthesize_batch`].
+pub type BatchWrapperFn = Box<dyn Fn(&mut [RpcFrame], &HostEnv) -> Vec<i64> + Send + Sync>;
+
 /// Registry mapping compile-time callee enum values to wrappers.
 #[derive(Default)]
 pub struct WrapperRegistry {
     by_name: Mutex<HashMap<String, u64>>,
     wrappers: Mutex<Vec<Arc<WrapperFn>>>,
+    /// Optional batched variants, keyed by the scalar pad's callee id.
+    batch: Mutex<HashMap<u64, Arc<BatchWrapperFn>>>,
 }
 
 impl WrapperRegistry {
@@ -122,8 +129,21 @@ impl WrapperRegistry {
         v
     }
 
-    fn get(&self, id: u64) -> Option<Arc<WrapperFn>> {
+    /// Register the batched variant of an already-registered landing
+    /// pad; returns its callee id, or `None` when no scalar pad exists
+    /// under `mangled` (the batch pad would be unreachable).
+    pub fn register_batch(&self, mangled: &str, f: BatchWrapperFn) -> Option<u64> {
+        let id = self.id_of(mangled)?;
+        self.batch.lock().unwrap().insert(id, Arc::new(f));
+        Some(id)
+    }
+
+    pub(crate) fn get(&self, id: u64) -> Option<Arc<WrapperFn>> {
         self.wrappers.lock().unwrap().get(id as usize).cloned()
+    }
+
+    pub(crate) fn get_batch(&self, id: u64) -> Option<Arc<BatchWrapperFn>> {
+        self.batch.lock().unwrap().get(&id).cloned()
     }
 
     pub fn len(&self) -> usize {
@@ -185,36 +205,14 @@ impl RpcServer {
 
     fn serve_one(mb: &Mailbox<'_>, registry: &WrapperRegistry, env: &HostEnv) {
         // 1) Copy the RPCInfo to the host.
-        let callee = mb.callee();
-        let nargs = mb.nargs() as usize;
-        let mut frame = RpcFrame::default();
-        for i in 0..nargs {
-            let w = mb.read_arg(i);
-            if w.kind == KIND_REF {
-                let bytes = mb.read_data(w.value, w.size as usize);
-                frame.args.push(HostArg::Buf {
-                    bytes,
-                    offset: w.offset as usize,
-                    mode: ArgMode::decode(w.mode),
-                });
-            } else {
-                frame.args.push(HostArg::Val(w.value));
-            }
-        }
+        let (callee, mut frame) = unpack_frame(mb);
         // 2) Invoke the host wrapper.
         let (ret, flags) = match registry.get(callee) {
             Some(w) => (w(&mut frame, env), 0),
             None => (-1, 1),
         };
         // 3) Copy mutated objects back into the data region + notify.
-        for i in 0..nargs {
-            let w = mb.read_arg(i);
-            if w.kind == KIND_REF && ArgMode::decode(w.mode).copies_back() {
-                if let HostArg::Buf { bytes, .. } = &frame.args[i] {
-                    mb.write_data(w.value, bytes);
-                }
-            }
-        }
+        writeback_frame(mb, &frame);
         mb.set_ret(ret);
         mb.set_flags(flags);
     }
@@ -232,6 +230,44 @@ impl Drop for RpcServer {
         self.shutdown.store(true, Ordering::Relaxed);
         if let Some(h) = self.handle.take() {
             let _ = h.join();
+        }
+    }
+}
+
+/// Copy one slot's RPCInfo to the host (Fig. 7 "copy RPCInfo" stage):
+/// reads the callee id and materializes every argument, staging REF
+/// objects out of the slot's data region. Shared by the legacy server
+/// and the engine's sweep dispatcher.
+pub(crate) fn unpack_frame(mb: &Mailbox<'_>) -> (u64, RpcFrame) {
+    let callee = mb.callee();
+    let nargs = mb.nargs() as usize;
+    let mut frame = RpcFrame::default();
+    for i in 0..nargs {
+        let w = mb.read_arg(i);
+        if w.kind == KIND_REF {
+            let bytes = mb.read_data(w.value, w.size as usize);
+            frame.args.push(HostArg::Buf {
+                bytes,
+                offset: w.offset as usize,
+                mode: ArgMode::decode(w.mode),
+            });
+        } else {
+            frame.args.push(HostArg::Val(w.value));
+        }
+    }
+    (callee, frame)
+}
+
+/// Copy the frame's mutated objects back into the slot's data region
+/// (Fig. 7 "copy-back" stage). The caller still writes ret/flags and
+/// rings `ST_DONE`.
+pub(crate) fn writeback_frame(mb: &Mailbox<'_>, frame: &RpcFrame) {
+    for i in 0..frame.args.len() {
+        let w = mb.read_arg(i);
+        if w.kind == KIND_REF && ArgMode::decode(w.mode).copies_back() {
+            if let HostArg::Buf { bytes, .. } = &frame.args[i] {
+                mb.write_data(w.value, bytes);
+            }
         }
     }
 }
@@ -351,6 +387,19 @@ mod tests {
         let info = RpcArgInfo::new();
         assert_eq!(client.call(999, &info, None), -1);
         server.stop();
+    }
+
+    #[test]
+    fn registry_batch_pad_requires_scalar_pad() {
+        let reg = WrapperRegistry::new();
+        assert!(
+            reg.register_batch("__f_i", Box::new(|fs, _| vec![0; fs.len()])).is_none(),
+            "no scalar pad registered yet"
+        );
+        let id = reg.register("__f_i", Box::new(|_, _| 1));
+        assert_eq!(reg.register_batch("__f_i", Box::new(|fs, _| vec![2; fs.len()])), Some(id));
+        assert!(reg.get_batch(id).is_some());
+        assert!(reg.get_batch(id + 1).is_none());
     }
 
     #[test]

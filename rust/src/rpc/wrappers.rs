@@ -8,7 +8,7 @@
 //! in-memory [`HostEnv`] (files, stdout/stderr capture, process state) so
 //! host-side effects are observable in tests.
 
-use super::server::{RpcFrame, WrapperFn, WrapperRegistry};
+use super::server::{BatchWrapperFn, RpcFrame, WrapperFn, WrapperRegistry};
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -107,6 +107,31 @@ impl HostEnv {
             }
         }
         bytes.len() as i64
+    }
+
+    /// Batched stream append: when every item targets the standard
+    /// streams, both stream locks are taken **once** for the whole batch
+    /// instead of once per call — the host-side win of the engine's
+    /// coalesced printf dispatch. Mixed fds fall back to per-item writes.
+    pub fn write_stream_many(&self, items: &[(u64, String)]) -> Vec<i64> {
+        let all_std = items.iter().all(|(fd, _)| *fd == FD_STDOUT || *fd == FD_STDERR);
+        if all_std {
+            let mut out = self.stdout.lock().unwrap();
+            let mut err = self.stderr.lock().unwrap();
+            items
+                .iter()
+                .map(|(fd, s)| {
+                    if *fd == FD_STDOUT {
+                        out.extend_from_slice(s.as_bytes());
+                    } else {
+                        err.extend_from_slice(s.as_bytes());
+                    }
+                    s.len() as i64
+                })
+                .collect()
+        } else {
+            items.iter().map(|(fd, s)| self.write_stream(*fd, s.as_bytes())).collect()
+        }
     }
 
     fn read_stream(&self, fd: u64, out: &mut [u8]) -> i64 {
@@ -508,6 +533,42 @@ pub fn synthesize(kind: HostFnKind) -> WrapperFn {
     }
 }
 
+/// Synthesize the *batched* landing pad for `kind`, if one exists.
+///
+/// Only callees whose host effect is an order-preserving append benefit:
+/// the printf family renders every frame, then commits the whole batch
+/// to the streams under a single lock acquisition
+/// ([`HostEnv::write_stream_many`]). Stateful callees (fopen/fscanf/...)
+/// return `None` and keep their scalar pads — the engine then amortizes
+/// only the registry dispatch.
+pub fn synthesize_batch(kind: HostFnKind) -> Option<BatchWrapperFn> {
+    match kind {
+        HostFnKind::Printf { has_fd } => Some(Box::new(move |frames, env| {
+            let rendered: Vec<(u64, String)> = frames
+                .iter()
+                .map(|f| {
+                    let (fd, fmt_i) = if has_fd { (f.val(0), 1) } else { (FD_STDOUT, 0) };
+                    let fmt = f.cstr(fmt_i);
+                    (fd, format_c(f, &fmt, fmt_i + 1))
+                })
+                .collect();
+            env.write_stream_many(&rendered)
+        })),
+        HostFnKind::Puts => Some(Box::new(|frames, env| {
+            let rendered: Vec<(u64, String)> = frames
+                .iter()
+                .map(|f| {
+                    let mut s = f.cstr(0);
+                    s.push('\n');
+                    (FD_STDOUT, s)
+                })
+                .collect();
+            env.write_stream_many(&rendered)
+        })),
+        _ => None,
+    }
+}
+
 /// Register the canonical signatures the hand-written apps and tests use.
 /// (IR programs get theirs registered by the RPC pass instead.)
 pub fn register_common(registry: &WrapperRegistry) -> HashMap<&'static str, u64> {
@@ -536,6 +597,9 @@ pub fn register_common(registry: &WrapperRegistry) -> HashMap<&'static str, u64>
         ("__launch_kernel_i_i", HostFnKind::LaunchKernel),
     ] {
         ids.insert(mangled, registry.register(mangled, synthesize(kind)));
+        if let Some(batch) = synthesize_batch(kind) {
+            registry.register_batch(mangled, batch);
+        }
     }
     ids
 }
@@ -668,5 +732,47 @@ mod tests {
         let a = register_common(&reg);
         let b = register_common(&reg);
         assert_eq!(a, b);
+    }
+
+    #[test]
+    fn batch_printf_pad_matches_scalar_pads() {
+        let env_scalar = HostEnv::new();
+        let env_batch = HostEnv::new();
+        let scalar = synthesize(HostFnKind::Printf { has_fd: true });
+        let batch = synthesize_batch(HostFnKind::Printf { has_fd: true }).unwrap();
+        let mk = |fd: u64, msg: &str| RpcFrame {
+            args: vec![HostArg::Val(fd), cstr_arg("[%s]"), cstr_arg(msg)],
+        };
+        let mut frames = vec![mk(FD_STDOUT, "a"), mk(FD_STDERR, "b"), mk(FD_STDOUT, "c")];
+        let batch_rets = batch(&mut frames, &env_batch);
+        let scalar_rets: Vec<i64> = frames.iter_mut().map(|f| scalar(f, &env_scalar)).collect();
+        assert_eq!(batch_rets, scalar_rets);
+        assert_eq!(env_batch.stdout_string(), env_scalar.stdout_string());
+        assert_eq!(env_batch.stderr_string(), env_scalar.stderr_string());
+        assert_eq!(env_batch.stdout_string(), "[a][c]");
+        assert_eq!(env_batch.stderr_string(), "[b]");
+    }
+
+    #[test]
+    fn stateful_callees_have_no_batch_pad() {
+        assert!(synthesize_batch(HostFnKind::Fopen).is_none());
+        assert!(synthesize_batch(HostFnKind::Scanf { has_fd: true }).is_none());
+        assert!(synthesize_batch(HostFnKind::Exit).is_none());
+    }
+
+    #[test]
+    fn write_stream_many_mixed_fds_falls_back() {
+        let env = HostEnv::new();
+        let fd = env.fopen("mix.txt", "w") as u64;
+        let rets = env.write_stream_many(&[
+            (FD_STDOUT, "out".to_string()),
+            (fd, "file".to_string()),
+            (FD_STDERR, "err".to_string()),
+        ]);
+        assert_eq!(rets, vec![3, 4, 3]);
+        env.fclose(fd);
+        assert_eq!(env.stdout_string(), "out");
+        assert_eq!(env.stderr_string(), "err");
+        assert_eq!(env.file("mix.txt").unwrap(), b"file");
     }
 }

@@ -63,6 +63,11 @@ fn rewrite_body(
                 let (specs, tags, summary) = build_specs(m, defs, callee, kind, args);
                 let mangled = mangle(callee, &tags);
                 let callee_id = registry.register(&mangled, wrappers::synthesize(kind));
+                // Order-preserving-append callees also get a batched pad
+                // so the engine can coalesce same-callee sweeps.
+                if let Some(batch) = wrappers::synthesize_batch(kind) {
+                    registry.register_batch(&mangled, batch);
+                }
                 report.rewritten.push((
                     fname.to_string(),
                     callee.clone(),

@@ -1,0 +1,173 @@
+//! Engine ↔ single-slot equivalence (the multi-lane RPC engine must be
+//! a pure scalability change, not a semantics change).
+//!
+//! Property: for a random program of per-thread libc call sequences
+//! (fopen / fprintf-to-own-file / fprintf-to-stderr / fclose), running
+//! the threads **concurrently** over a random lanes×workers engine
+//! yields the same observable [`HostEnv`] state as running the same
+//! sequences **serially** through the paper's single-threaded
+//! single-slot server:
+//!
+//! * every per-thread file has byte-identical contents, and
+//! * the shared stderr stream carries the same multiset of lines
+//!   (line *order* on a shared stream is the one observable the
+//!   protocol leaves undefined — exactly like concurrent `fprintf`
+//!   to one fd on a real host).
+
+use gpu_first::gpu::memory::{DeviceMemory, MemConfig, GLOBAL_BASE};
+use gpu_first::rpc::engine::{ArenaLayout, EngineConfig, RpcEngine};
+use gpu_first::rpc::wrappers::register_common;
+use gpu_first::rpc::{ArgMode, HostEnv, RpcArgInfo, RpcClient, RpcServer, WrapperRegistry};
+use gpu_first::util::prop::{check, Gen};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// One generated call: `true` → fprintf into the thread's own file,
+/// `false` → fprintf to the shared stderr. Payload is the %d argument.
+type Op = (bool, u64);
+
+fn setup() -> (Arc<DeviceMemory>, Arc<WrapperRegistry>, Arc<HostEnv>, HashMap<&'static str, u64>) {
+    let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+    let reg = Arc::new(WrapperRegistry::new());
+    let ids = register_common(&reg);
+    (mem, reg, Arc::new(HostEnv::new()), ids)
+}
+
+/// Run one simulated thread's call sequence through `client`.
+fn run_thread(
+    mem: &DeviceMemory,
+    client: &mut RpcClient<'_>,
+    ids: &HashMap<&'static str, u64>,
+    t: usize,
+    ops: &[Op],
+) {
+    // Per-thread staging area for the strings the calls reference.
+    let base = GLOBAL_BASE + 4096 + t as u64 * 4096;
+    let (path_a, mode_a, fmt_a, efmt_a) = (base, base + 64, base + 128, base + 192);
+    let path = format!("f{t}.txt");
+    mem.write_cstr(path_a, &path);
+    mem.write_cstr(mode_a, "w");
+    mem.write_cstr(fmt_a, "%d\n");
+    mem.write_cstr(efmt_a, "e%d\n");
+
+    let mut info = RpcArgInfo::new();
+    info.add_ref(path_a, ArgMode::Read, path.len() as u64 + 1, 0);
+    info.add_ref(mode_a, ArgMode::Read, 2, 0);
+    let fd = client.call(ids["__fopen_cp_cp"], &info, None);
+    assert!(fd > 2, "fopen failed for {path}");
+
+    for &(to_file, v) in ops {
+        let mut info = RpcArgInfo::new();
+        if to_file {
+            info.add_val(fd as u64);
+            info.add_ref(fmt_a, ArgMode::Read, 4, 0);
+        } else {
+            info.add_val(2);
+            info.add_ref(efmt_a, ArgMode::Read, 5, 0);
+        }
+        info.add_val(v);
+        let n = client.call(ids["__fprintf_p_cp_i"], &info, None);
+        assert!(n > 0, "fprintf failed");
+    }
+
+    let mut info = RpcArgInfo::new();
+    info.add_val(fd as u64);
+    assert_eq!(client.call(ids["__fclose_p"], &info, None), 0);
+}
+
+fn sorted_lines(s: &str) -> Vec<String> {
+    let mut v: Vec<String> = s.lines().map(|l| l.to_string()).collect();
+    v.sort();
+    v
+}
+
+#[test]
+fn prop_concurrent_engine_matches_serial_single_slot() {
+    check("engine interleavings preserve HostEnv state", 12, |g: &mut Gen| {
+        let lanes = g.usize(2..5);
+        let workers = g.usize(1..4);
+        let nthreads = g.usize(2..5);
+        let plan: Vec<Vec<Op>> = (0..nthreads)
+            .map(|_| g.vec(1..=6, |g| (g.bool(), g.u64(0, 1000))))
+            .collect();
+
+        // Concurrent run over the worker-pool engine.
+        let (mem, reg, env, ids) = setup();
+        let arena = ArenaLayout::for_lanes(lanes);
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            Arc::clone(&env),
+            EngineConfig { lanes, workers, batch: true },
+        );
+        std::thread::scope(|s| {
+            for (t, ops) in plan.iter().enumerate() {
+                let (mem, ids) = (&mem, &ids);
+                s.spawn(move || {
+                    let mut client = RpcClient::for_team(mem, arena, t);
+                    run_thread(mem, &mut client, ids, t, ops);
+                });
+            }
+        });
+        let served = engine.metrics.snapshot().served;
+        engine.stop();
+
+        // Serial reference through the legacy single-slot server.
+        let (mem2, reg2, env2, ids2) = setup();
+        let server = RpcServer::start(Arc::clone(&mem2), reg2, Arc::clone(&env2));
+        let mut client = RpcClient::new(&mem2);
+        for (t, ops) in plan.iter().enumerate() {
+            run_thread(&mem2, &mut client, &ids2, t, ops);
+        }
+        server.stop();
+
+        // Same calls answered (fopen + ops + fclose, per thread).
+        let total: u64 = plan.iter().map(|ops| ops.len() as u64 + 2).sum();
+        assert_eq!(served, total);
+        // Same per-file bytes; same stderr line multiset; nothing on stdout.
+        for t in 0..nthreads {
+            let path = format!("f{t}.txt");
+            assert_eq!(
+                env.file(&path),
+                env2.file(&path),
+                "file {path} diverged (lanes={lanes} workers={workers})"
+            );
+        }
+        assert_eq!(sorted_lines(&env.stderr_string()), sorted_lines(&env2.stderr_string()));
+        assert_eq!(env.stdout_string(), env2.stdout_string());
+        assert_eq!(env.stdout_string(), "");
+    });
+}
+
+#[test]
+fn more_callers_than_lanes_all_complete() {
+    // Lane-exhaustion liveness: 8 concurrent callers over 2 lanes must
+    // all make progress through backpressure (blocking lane acquisition),
+    // and every call must be answered exactly once.
+    let (mem, reg, env, _) = setup();
+    let id = reg.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+    let arena = ArenaLayout::for_lanes(2);
+    let engine = RpcEngine::start(
+        Arc::clone(&mem),
+        arena,
+        Arc::clone(&reg),
+        env,
+        EngineConfig { lanes: 2, workers: 1, batch: true },
+    );
+    std::thread::scope(|s| {
+        for t in 0..8u64 {
+            let mem = &mem;
+            s.spawn(move || {
+                let mut client = RpcClient::for_team(mem, arena, t as usize);
+                for k in 0..30u64 {
+                    let mut info = RpcArgInfo::new();
+                    info.add_val(t * 100 + k);
+                    assert_eq!(client.call(id, &info, None), (t * 100 + k) as i64);
+                }
+            });
+        }
+    });
+    assert_eq!(engine.metrics.snapshot().served, 240);
+    engine.stop();
+}

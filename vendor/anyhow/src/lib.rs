@@ -1,0 +1,97 @@
+//! Offline shim for the subset of `anyhow` this workspace uses.
+//!
+//! The build environment has no network access, so instead of the real
+//! crate we vendor a tiny API-compatible stand-in: a string-backed
+//! [`Error`], the [`Result`] alias, the [`anyhow!`] macro and the
+//! [`Context`] extension trait. Swap back to the upstream crate by
+//! deleting this directory and the `[patch]`-free path dependency.
+
+use std::fmt;
+
+/// String-backed error value (the shim keeps no cause chain).
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(msg: impl fmt::Display) -> Self {
+        Self { msg: msg.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Self::msg(e)
+    }
+}
+
+impl From<String> for Error {
+    fn from(e: String) -> Self {
+        Self { msg: e }
+    }
+}
+
+impl From<&str> for Error {
+    fn from(e: &str) -> Self {
+        Self::msg(e)
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `anyhow!("...")` — build an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(format!($($arg)*))
+    };
+}
+
+/// The `with_context` extension used by the runtime module.
+pub trait Context<T> {
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+    fn context<C: fmt::Display>(self, c: C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+
+    fn context<C: fmt::Display>(self, c: C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{c}: {e}")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn macro_and_display() {
+        let e = anyhow!("bad thing {}", 42);
+        assert_eq!(e.to_string(), "bad thing 42");
+    }
+
+    #[test]
+    fn with_context_wraps() {
+        let r: Result<(), String> = Err("inner".to_string());
+        let e = r.with_context(|| "outer").unwrap_err();
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn read() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(read().is_err());
+    }
+}
