@@ -154,7 +154,7 @@ fn sweep_point(lanes: usize, workers: usize) -> (f64, Option<EngineSnapshot>) {
             arena,
             Arc::clone(&registry),
             Arc::clone(&env),
-            EngineConfig { lanes, workers, batch: true },
+            EngineConfig { lanes, workers, ..EngineConfig::default() },
         ))
     };
     let t0 = std::time::Instant::now();
@@ -242,6 +242,51 @@ fn sweep(legacy_modeled_total_ns: f64) {
         println!("1x1 stage-breakdown parity with legacy server: OK ({})", fmt_ns(engine_total));
     }
 
+    // Kernel-split launch liveness at the default 1×1 shape: a launch
+    // whose body issues an RPC back through the single lane. This used
+    // to deadlock (the claiming worker ran the whole kernel); the
+    // dedicated launch executor keeps the worker polling.
+    let launch_1x1_ns = {
+        let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+        let arena = ArenaLayout::legacy();
+        let registry = Arc::new(WrapperRegistry::new());
+        let env = Arc::new(HostEnv::new());
+        let inner = registry.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+        let mem_in = Arc::clone(&mem);
+        let launch = registry.register(
+            "__bench_launch_i",
+            Box::new(move |f, _| {
+                let mut c = RpcClient::for_team(&mem_in, ArenaLayout::legacy(), 0);
+                let mut info = RpcArgInfo::new();
+                info.add_val(f.val(0));
+                c.call(inner, &info, None)
+            }),
+        );
+        registry.mark_launch("__bench_launch_i");
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&registry),
+            env,
+            EngineConfig::default(),
+        );
+        let t0 = std::time::Instant::now();
+        let mut client = RpcClient::for_launch(&mem, arena);
+        let mut info = RpcArgInfo::new();
+        info.add_val(9);
+        assert_eq!(client.call(launch, &info, None), 9, "in-kernel RPC answered at 1x1");
+        let ns = t0.elapsed().as_nanos() as f64;
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.launches, 1);
+        engine.stop();
+        println!(
+            "kernel-split launch with in-kernel RPC at 1x1x1: OK ({} round-trip, executor latency {})",
+            fmt_ns(ns),
+            fmt_ns(snap.launch_latency_ns()),
+        );
+        ns
+    };
+
     let mut t = Table::new(
         "RPC throughput sweep (real wallclock on this host)",
         &["lanes", "workers", "calls/s", "speedup", "occupancy", "batches", "max_batch", "steals"],
@@ -290,6 +335,7 @@ fn sweep(legacy_modeled_total_ns: f64) {
         ("callers", Json::num(SWEEP_CALLERS as f64)),
         ("calls_per_caller", Json::num(SWEEP_CALLS as f64)),
         ("baseline_calls_per_sec", Json::num(baseline_cps)),
+        ("launch_liveness_1x1_ns", Json::num(launch_1x1_ns)),
         ("points", Json::Arr(points)),
     ]);
     println!("\nJSON {report}");

@@ -13,9 +13,15 @@ pub struct Config {
     pub mem: MemConfig,
     /// RPC mailbox lanes (`--rpc-lanes`); 1 = the paper's single slot.
     pub rpc_lanes: usize,
-    /// Host RPC worker threads (`--rpc-workers`); 1 = single-threaded
-    /// server. `lanes=1, workers=1` selects the legacy code path.
+    /// Host RPC poll worker threads (`--rpc-workers`).
     pub rpc_workers: usize,
+    /// Dedicated kernel-split launch executor threads
+    /// (`--rpc-launch-threads`).
+    pub rpc_launch_threads: usize,
+    /// Per-lane mailbox DATA bytes (`--rpc-data-cap`); `None` uses the
+    /// lane-count default (1 MiB legacy single lane, 256 KiB per
+    /// multi-lane slot).
+    pub rpc_data_cap: Option<u64>,
     /// Coalesce same-callee requests per poll sweep (`--no-rpc-batch`
     /// disables).
     pub rpc_batch: bool,
@@ -32,6 +38,8 @@ impl Default for Config {
             mem: MemConfig::default(),
             rpc_lanes: 1,
             rpc_workers: 1,
+            rpc_launch_threads: 1,
+            rpc_data_cap: None,
             rpc_batch: true,
             verbose: false,
         }
@@ -41,35 +49,50 @@ impl Default for Config {
 impl Config {
     /// Build from CLI arguments:
     /// `--teams N --threads N --allocator generic|vendor|balanced[N,M]
-    ///  --heap-mb N --rpc-lanes N --rpc-workers N --no-rpc-batch
-    ///  --verbose`.
+    ///  --heap-mb N --rpc-lanes N --rpc-workers N --rpc-launch-threads N
+    ///  --rpc-data-cap BYTES --no-rpc-batch --verbose`.
     pub fn from_args(args: &Args) -> Result<Self, String> {
+        // Numeric flags parse through the fallible accessor so every
+        // malformed value surfaces as this function's Err (one clean
+        // usage error in main), never a mid-parse process exit.
+        let int = |name| args.try_get::<usize>(name, "an integer");
         let mut cfg = Config::default();
-        cfg.teams = args.get_usize("teams", cfg.teams);
-        cfg.threads_per_team = args.get_usize("threads", cfg.threads_per_team);
+        cfg.teams = int("teams")?.unwrap_or(cfg.teams);
+        cfg.threads_per_team = int("threads")?.unwrap_or(cfg.threads_per_team);
         if let Some(a) = args.get("allocator") {
             cfg.allocator = AllocatorKind::parse(a)?;
         }
-        let heap_mb = args.get_usize("heap-mb", 256);
+        let heap_mb = int("heap-mb")?.unwrap_or(256);
         cfg.mem.global_size = (heap_mb as u64) << 20;
-        cfg.rpc_lanes = args.get_usize("rpc-lanes", cfg.rpc_lanes);
-        cfg.rpc_workers = args.get_usize("rpc-workers", cfg.rpc_workers);
+        cfg.rpc_lanes = int("rpc-lanes")?.unwrap_or(cfg.rpc_lanes);
+        cfg.rpc_workers = int("rpc-workers")?.unwrap_or(cfg.rpc_workers);
+        cfg.rpc_launch_threads = int("rpc-launch-threads")?.unwrap_or(cfg.rpc_launch_threads);
+        cfg.rpc_data_cap = args.try_get::<u64>("rpc-data-cap", "a byte count")?;
         cfg.rpc_batch = !args.flag("no-rpc-batch");
         cfg.verbose = args.flag("verbose");
         if cfg.teams == 0 || cfg.threads_per_team == 0 {
             return Err("teams/threads must be positive".into());
         }
-        if cfg.rpc_lanes == 0 || cfg.rpc_workers == 0 {
-            return Err("rpc-lanes/rpc-workers must be positive".into());
+        if cfg.rpc_lanes == 0 || cfg.rpc_workers == 0 || cfg.rpc_launch_threads == 0 {
+            return Err("rpc-lanes/rpc-workers/rpc-launch-threads must be positive".into());
+        }
+        if let Some(cap) = cfg.rpc_data_cap {
+            if cap == 0 || cap % 64 != 0 {
+                return Err(format!(
+                    "--rpc-data-cap {cap} must be a positive multiple of 64 bytes"
+                ));
+            }
         }
         // Reject arena shapes the device cannot reserve here, where it is
         // a clean CLI error rather than a panic in Device::with_arena.
-        let arena = crate::rpc::engine::ArenaLayout::for_lanes(cfg.rpc_lanes);
+        let arena = cfg.arena();
         if arena.reserved_bytes() + (1 << 20) > cfg.mem.managed_size {
             return Err(format!(
-                "--rpc-lanes {} needs {} B of managed memory (plus 1 MiB headroom) \
-                 but the managed segment is {} B",
+                "the RPC arena ({} lanes + launch slot at {} B each) needs {} B of \
+                 managed memory (plus 1 MiB headroom) but the managed segment is {} B; \
+                 lower --rpc-lanes or --rpc-data-cap",
                 cfg.rpc_lanes,
+                arena.lane_stride(),
                 arena.reserved_bytes(),
                 cfg.mem.managed_size,
             ));
@@ -77,7 +100,17 @@ impl Config {
         Ok(cfg)
     }
 
-    /// The legacy single-slot single-thread server path (paper §4.4)?
+    /// The mailbox arena shape this configuration selects.
+    pub fn arena(&self) -> crate::rpc::engine::ArenaLayout {
+        match self.rpc_data_cap {
+            Some(cap) => crate::rpc::engine::ArenaLayout::new(self.rpc_lanes, cap),
+            None => crate::rpc::engine::ArenaLayout::for_lanes(self.rpc_lanes),
+        }
+    }
+
+    /// The paper's degenerate single-slot shape (`lanes=1, workers=1`)?
+    /// Still served by the engine, whose 1×1 path is bit-identical to
+    /// the legacy single-threaded server for kernels issuing no RPCs.
     pub fn legacy_rpc(&self) -> bool {
         self.rpc_lanes == 1 && self.rpc_workers == 1
     }
@@ -113,8 +146,50 @@ mod tests {
         let cfg = Config::from_args(&args).unwrap();
         assert_eq!(cfg.rpc_lanes, 4);
         assert_eq!(cfg.rpc_workers, 2);
+        assert_eq!(cfg.rpc_launch_threads, 1, "default executor width");
         assert!(!cfg.rpc_batch);
         assert!(!cfg.legacy_rpc());
+    }
+
+    #[test]
+    fn parses_launch_threads_and_data_cap() {
+        let args = Args::parse(
+            &sv(&["--rpc-lanes", "2", "--rpc-launch-threads", "3", "--rpc-data-cap", "131072"]),
+            &[],
+        );
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.rpc_launch_threads, 3);
+        assert_eq!(cfg.rpc_data_cap, Some(131072));
+        let arena = cfg.arena();
+        assert_eq!(arena.lanes, 2);
+        assert_eq!(arena.data_cap, 131072);
+        // Without the flag, the lane-count default applies.
+        let cfg = Config::from_args(&Args::parse(&sv(&["--rpc-lanes", "2"]), &[])).unwrap();
+        assert_eq!(cfg.arena().data_cap, crate::rpc::engine::MULTI_LANE_DATA_CAP);
+        assert_eq!(Config::default().arena(), crate::rpc::engine::ArenaLayout::legacy());
+    }
+
+    #[test]
+    fn malformed_numeric_flag_is_a_clean_err() {
+        // from_args keeps its Result contract: a bad value is an Err
+        // naming the flag, not a process exit from inside parsing.
+        let err = Config::from_args(&Args::parse(&sv(&["--teams", "lots"]), &[])).unwrap_err();
+        assert!(err.contains("--teams") && err.contains("lots"), "unexpected error: {err}");
+        let err =
+            Config::from_args(&Args::parse(&sv(&["--rpc-data-cap", "abc"]), &[])).unwrap_err();
+        assert!(err.contains("--rpc-data-cap"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn rejects_bad_launch_threads_and_data_cap() {
+        let args = Args::parse(&sv(&["--rpc-launch-threads", "0"]), &[]);
+        assert!(Config::from_args(&args).is_err());
+        // Not a cache-line multiple.
+        let args = Args::parse(&sv(&["--rpc-data-cap", "1000"]), &[]);
+        let err = Config::from_args(&args).unwrap_err();
+        assert!(err.contains("multiple of 64"), "unexpected error: {err}");
+        let args = Args::parse(&sv(&["--rpc-data-cap", "0"]), &[]);
+        assert!(Config::from_args(&args).is_err());
     }
 
     #[test]

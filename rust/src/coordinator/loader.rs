@@ -3,92 +3,70 @@
 //! "The loader is the entry point for the operating system and responsible
 //! to setup the environment on the device": here it creates the simulated
 //! device (reserving the RPC mailbox arena), starts the host RPC service
-//! — the paper's single-threaded server for `lanes=1, workers=1`, the
-//! multi-lane worker-pool [`RpcEngine`] otherwise — registers the common
-//! landing pads (the pass registers call-site-specific ones during
-//! compilation), materializes the program, maps `argv` onto the device
-//! and transfers control to the user's `main`.
+//! — always the worker-pool [`RpcEngine`] with its dedicated launch
+//! executor; the paper's `lanes=1, workers=1` shape is the engine's
+//! bit-identical degenerate case, now with in-kernel RPCs live —
+//! registers the common landing pads (the pass registers
+//! call-site-specific ones during compilation), materializes the
+//! program, maps `argv` onto the device and transfers control to the
+//! user's `main`.
 
 use super::config::Config;
 use super::metrics::RunMetrics;
 use crate::gpu::grid::Device;
 use crate::ir::interp::{ProgramEnv, Value};
 use crate::ir::Module;
-use crate::rpc::engine::{ArenaLayout, EngineConfig, RpcEngine};
+use crate::rpc::engine::{EngineConfig, RpcEngine};
 use crate::rpc::wrappers::register_common;
-use crate::rpc::{EngineSnapshot, HostEnv, RpcServer, WrapperRegistry};
+use crate::rpc::{EngineSnapshot, HostEnv, WrapperRegistry};
 use crate::transform::{compile, CompileOptions, CompileReport};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
-
-/// Which host-side RPC service this session runs.
-enum RpcService {
-    /// The paper's single-threaded single-slot server (§4.4).
-    Legacy(RpcServer),
-    /// The multi-lane worker-pool engine.
-    Engine(RpcEngine),
-}
-
-impl RpcService {
-    fn stop(self) {
-        match self {
-            RpcService::Legacy(s) => s.stop(),
-            RpcService::Engine(e) => e.stop(),
-        }
-    }
-}
 
 pub struct GpuFirstSession {
     pub cfg: Config,
     pub device: Arc<Device>,
     pub registry: Arc<WrapperRegistry>,
     pub host: Arc<HostEnv>,
-    server: Option<RpcService>,
+    server: Option<RpcEngine>,
     pub report: Option<CompileReport>,
     pub env: Option<Arc<ProgramEnv>>,
 }
 
 impl GpuFirstSession {
-    /// Bring up device + host RPC service + common landing pads.
+    /// Bring up device + host RPC engine + common landing pads.
     pub fn start(cfg: Config) -> Self {
-        let arena = ArenaLayout::for_lanes(cfg.rpc_lanes);
+        let arena = cfg.arena();
         let device = Arc::new(Device::with_arena(cfg.mem, cfg.allocator, arena));
         let registry = Arc::new(WrapperRegistry::new());
         register_common(&registry);
-        let host = Arc::new(HostEnv::new());
-        let server = if cfg.legacy_rpc() {
-            RpcService::Legacy(RpcServer::start(
-                Arc::clone(&device.mem),
-                Arc::clone(&registry),
-                Arc::clone(&host),
-            ))
-        } else {
-            RpcService::Engine(RpcEngine::start(
-                Arc::clone(&device.mem),
-                arena,
-                Arc::clone(&registry),
-                Arc::clone(&host),
-                EngineConfig { lanes: cfg.rpc_lanes, workers: cfg.rpc_workers, batch: cfg.rpc_batch },
-            ))
-        };
+        // The open-file table shards one-to-one with the lanes serving
+        // the pads; a single-lane session keeps the unsharded (legacy
+        // fd numbering) shape.
+        let host = Arc::new(HostEnv::with_shards(if cfg.rpc_lanes > 1 { cfg.rpc_lanes } else { 0 }));
+        let server = RpcEngine::start(
+            Arc::clone(&device.mem),
+            arena,
+            Arc::clone(&registry),
+            Arc::clone(&host),
+            EngineConfig {
+                lanes: cfg.rpc_lanes,
+                workers: cfg.rpc_workers,
+                launch_threads: cfg.rpc_launch_threads,
+                batch: cfg.rpc_batch,
+            },
+        );
         Self { cfg, device, registry, host, server: Some(server), report: None, env: None }
     }
 
-    /// Engine counters, when the session runs the multi-lane engine.
+    /// Engine counters (the engine serves every session).
     pub fn engine_snapshot(&self) -> Option<EngineSnapshot> {
-        match &self.server {
-            Some(RpcService::Engine(e)) => Some(e.metrics.snapshot()),
-            _ => None,
-        }
+        self.server.as_ref().map(|e| e.metrics.snapshot())
     }
 
-    /// Requests the host service answered so far (either path).
+    /// Requests the host service answered so far.
     pub fn rpc_served(&self) -> u64 {
-        match &self.server {
-            Some(RpcService::Legacy(s)) => s.served.load(Ordering::Relaxed),
-            Some(RpcService::Engine(e)) => e.metrics.served.load(Ordering::Relaxed),
-            None => 0,
-        }
+        self.server.as_ref().map_or(0, |e| e.metrics.served.load(Ordering::Relaxed))
     }
 
     /// Run the compiler pipeline over `module` (in place), registering
@@ -129,6 +107,7 @@ impl GpuFirstSession {
             kernel_launches: env.kernel_launches.load(Ordering::Relaxed),
             grid: (self.cfg.teams, self.cfg.threads_per_team),
             rpc_engine: self.engine_snapshot(),
+            host_io: self.host.io_snapshot(),
         };
         (ret, metrics)
     }
@@ -186,7 +165,10 @@ func @main() -> i64 {
         assert_eq!(ret, 0);
         assert_eq!(session.host.stdout_string(), "hello from the GPU\n");
         assert_eq!(metrics.main_stats.rpc_calls, 1);
-        assert!(metrics.rpc_engine.is_none(), "legacy path has no engine metrics");
+        let snap = metrics.rpc_engine.expect("the engine serves every session");
+        assert_eq!((snap.lanes, snap.workers), (1, 1), "degenerate single-slot shape");
+        assert_eq!(snap.launches, 0, "no parallel region, no kernel-split launch");
+        assert_eq!(metrics.host_io.shards, 0, "single-lane session stays unsharded");
         assert_eq!(session.rpc_served(), 1);
         session.stop();
     }
@@ -216,6 +198,10 @@ func @main() -> i64 {
         assert_eq!(ret, 8191);
         assert_eq!(metrics.kernel_launches, 1);
         assert_eq!(metrics.grid, (4, 32));
+        // The launch rode the dedicated executor, even at lanes=1,workers=1.
+        let snap = metrics.rpc_engine.unwrap();
+        assert_eq!(snap.launches, 1);
+        assert_eq!(snap.launch_queue_depth, 0, "queue drained at run end");
         session.stop();
     }
 

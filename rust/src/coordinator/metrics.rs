@@ -1,10 +1,10 @@
 //! Per-run metrics: real wallclock + modeled device time decomposition,
-//! plus the RPC engine's occupancy/batching counters when the session
-//! runs the multi-lane engine.
+//! plus the RPC engine's occupancy/batching/launch-executor counters and
+//! the host environment's file-table shard counters.
 
 use crate::gpu::stats::LaunchStats;
 use crate::perfmodel::a100;
-use crate::rpc::EngineSnapshot;
+use crate::rpc::{EngineSnapshot, HostIoSnapshot};
 
 #[derive(Debug, Clone, Copy)]
 pub struct RunMetrics {
@@ -17,8 +17,12 @@ pub struct RunMetrics {
     pub kernel_stats: LaunchStats,
     pub kernel_launches: u64,
     pub grid: (usize, usize),
-    /// Engine counters; `None` on the legacy single-slot path.
+    /// Engine counters (lanes/workers/batches, launch-executor queue
+    /// depth and latency). `None` only for hand-built metrics.
     pub rpc_engine: Option<EngineSnapshot>,
+    /// HostEnv file-table shard counters (opens per table class, lock
+    /// contention).
+    pub host_io: HostIoSnapshot,
 }
 
 impl RunMetrics {
@@ -50,6 +54,15 @@ impl RunMetrics {
             s.push(' ');
             s.push_str(&e.summary());
         }
+        if self.host_io.shards > 0 {
+            s.push_str(&format!(
+                " host_io shards={} opens={}+{} contention={}",
+                self.host_io.shards,
+                self.host_io.sharded_opens,
+                self.host_io.shared_opens,
+                self.host_io.lock_contention,
+            ));
+        }
         s
     }
 }
@@ -68,14 +81,16 @@ mod tests {
             kernel_launches: 3,
             grid: (4, 32),
             rpc_engine: None,
+            host_io: HostIoSnapshot::default(),
         };
         assert!(m.modeled_device_ns() >= 3.0 * a100::KERNEL_SPLIT_RPC_NS);
         assert!(m.summary().contains("launches=3"));
         assert!(!m.summary().contains("rpc_engine"));
+        assert!(!m.summary().contains("host_io"), "unsharded runs stay quiet");
     }
 
     #[test]
-    fn summary_appends_engine_counters() {
+    fn summary_appends_engine_and_host_io_counters() {
         let m = RunMetrics {
             exit_code: 0,
             wall_ns: 0.0,
@@ -86,17 +101,33 @@ mod tests {
             rpc_engine: Some(EngineSnapshot {
                 lanes: 4,
                 workers: 2,
+                launch_threads: 1,
                 served: 10,
                 batches: 2,
                 batched_calls: 6,
                 max_batch: 4,
                 steals: 1,
+                launches: 2,
+                launch_queue_depth: 0,
+                launch_queue_peak: 1,
+                launch_requeues: 0,
+                launch_wait_ns: 500,
+                launch_run_ns: 1500,
                 polls: 100,
                 polls_busy: 25,
             }),
+            host_io: HostIoSnapshot {
+                shards: 4,
+                sharded_opens: 7,
+                shared_opens: 1,
+                lock_contention: 3,
+            },
         };
         let s = m.summary();
         assert!(s.contains("rpc_engine lanes=4 workers=2 served=10"));
         assert!(s.contains("occupancy=0.250"));
+        assert!(s.contains("launches=2"), "executor counters surface: {s}");
+        assert!(s.contains("host_io shards=4 opens=7+1 contention=3"), "{s}");
+        assert_eq!(m.rpc_engine.unwrap().launch_latency_ns(), 1000.0);
     }
 }

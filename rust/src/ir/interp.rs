@@ -672,7 +672,10 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
             values,
             cfg,
         });
-        // Fig. 4 ①: RPC to the host to launch the parallel kernel.
+        // Fig. 4 ①: RPC to the host to launch the parallel kernel. The
+        // launch rides the arena's *dedicated launch slot* — never a
+        // regular lane — so every lane stays free for the RPCs the
+        // kernel itself issues (live even at `--rpc-lanes 1`).
         let launch_id = self
             .env
             .registry
@@ -682,8 +685,7 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         let mut info = RpcArgInfo::new();
         info.add_val(region_id);
         info.add_val(0);
-        let mut client =
-            RpcClient::for_team(&self.env.device.mem, self.env.device.arena(), self.g.team_id);
+        let mut client = RpcClient::for_launch(&self.env.device.mem, self.env.device.arena());
         let ret = client.call(launch_id, &info, Some(&mut self.g.counters));
         assert_eq!(ret, 0, "kernel launch RPC failed for {region}");
     }

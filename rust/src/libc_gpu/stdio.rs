@@ -20,6 +20,12 @@ pub enum FmtArg {
 
 /// `snprintf(dst, cap, fmt, args)` → number of bytes written (excluding
 /// NUL). Supports `%d %i %u %x %f %e %g %s %c %%` with width/precision.
+///
+/// A conversion whose argument has the wrong kind (e.g. `%s` fed an
+/// integer) degrades glibc-style: the conversion's literal text is
+/// emitted and [`crate::rpc::wrappers::format_warnings`] is bumped —
+/// never a panic that aborts the whole run. Unknown conversions (`%q`)
+/// degrade inside [`crate::rpc::wrappers::parse_format`] the same way.
 pub fn snprintf(mem: &DeviceMemory, dst: u64, cap: u64, fmt: &str, args: &[FmtArg]) -> u64 {
     let mut out = String::new();
     let mut ai = 0usize;
@@ -45,7 +51,21 @@ pub fn snprintf(mem: &DeviceMemory, dst: u64, cap: u64, fmt: &str, args: &[FmtAr
                     },
                     (Conv::Str, FmtArg::S(p)) => mem.read_cstr(p, 4096),
                     (Conv::Char, FmtArg::C(c)) => (c as char).to_string(),
-                    (c, a) => panic!("snprintf: conversion {c:?} with argument {a:?}"),
+                    (c, _) => {
+                        // Mismatched conversion/argument: emit the
+                        // conversion's literal text and keep formatting.
+                        crate::rpc::wrappers::count_format_warning();
+                        match c {
+                            Conv::Int => "%d",
+                            Conv::Uint => "%u",
+                            Conv::Hex => "%x",
+                            Conv::Float => "%f",
+                            Conv::Str => "%s",
+                            Conv::Char => "%c",
+                            Conv::Percent => "%",
+                        }
+                        .to_string()
+                    }
                 }
             }
         };
@@ -94,5 +114,29 @@ mod tests {
         let n = snprintf(&m, s, 6, "%d", &[FmtArg::I(1234567)]);
         assert_eq!(n, 5);
         assert_eq!(m.read_cstr(s, 16), "12345");
+    }
+
+    #[test]
+    fn mismatched_argument_degrades_instead_of_panicking() {
+        let m = DeviceMemory::new(MemConfig::small());
+        let s = GLOBAL_BASE + 64;
+        let before = crate::rpc::wrappers::format_warnings();
+        // %s fed an integer: the conversion text survives literally and
+        // the neighbouring conversions still format.
+        let n = snprintf(&m, s, 64, "a=%s b=%d", &[FmtArg::I(9), FmtArg::I(3)]);
+        assert_eq!(m.read_cstr(s, 64), "a=%s b=3");
+        assert_eq!(n, 8);
+        assert!(crate::rpc::wrappers::format_warnings() > before);
+    }
+
+    #[test]
+    fn unsupported_conversion_passes_through_literally() {
+        let m = DeviceMemory::new(MemConfig::small());
+        let s = GLOBAL_BASE + 64;
+        let n = snprintf(&m, s, 64, "p=%p q=%d", &[FmtArg::I(4)]);
+        // %p is not in the supported subset: literal pass-through, and
+        // %d still consumes the first argument.
+        assert_eq!(m.read_cstr(s, 64), "p=%p q=4");
+        assert_eq!(n, 8);
     }
 }

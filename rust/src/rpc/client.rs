@@ -55,6 +55,10 @@ pub struct RpcClient<'a> {
     pub mem: &'a DeviceMemory,
     arena: ArenaLayout,
     home_lane: usize,
+    /// Claim only the arena's dedicated launch slot (kernel-split
+    /// launches never contend with regular lanes — see
+    /// [`RpcClient::for_launch`]).
+    launch_only: bool,
     pub last: RpcBreakdown,
 }
 
@@ -66,7 +70,27 @@ impl<'a> RpcClient<'a> {
 
     /// Lane-aware client: home lane is `team_id % arena.lanes`.
     pub fn for_team(mem: &'a DeviceMemory, arena: ArenaLayout, team_id: usize) -> Self {
-        Self { mem, arena, home_lane: team_id % arena.lanes.max(1), last: RpcBreakdown::default() }
+        Self {
+            mem,
+            arena,
+            home_lane: team_id % arena.lanes.max(1),
+            launch_only: false,
+            last: RpcBreakdown::default(),
+        }
+    }
+
+    /// Kernel-split launch client: claims only the arena's dedicated
+    /// launch slot, leaving every regular lane free for the RPCs the
+    /// launched kernel itself issues. This is what makes in-kernel RPCs
+    /// live even at `lanes=1`.
+    pub fn for_launch(mem: &'a DeviceMemory, arena: ArenaLayout) -> Self {
+        Self {
+            mem,
+            arena,
+            home_lane: arena.launch_index(),
+            launch_only: true,
+            last: RpcBreakdown::default(),
+        }
     }
 
     pub fn home_lane(&self) -> usize {
@@ -75,8 +99,17 @@ impl<'a> RpcClient<'a> {
 
     /// Non-blocking lane acquisition: try the home lane, then every
     /// other lane once. `None` means the arena is exhausted and the
-    /// caller must back off (lane backpressure).
+    /// caller must back off (lane backpressure). Launch clients probe
+    /// only the dedicated launch slot (concurrent launches serialize
+    /// there, like the paper's single in-flight kernel).
     pub fn try_claim(&self) -> Option<(usize, Mailbox<'a>)> {
+        if self.launch_only {
+            let mb = self.arena.launch_slot(self.mem);
+            if mb.cas_status(ST_IDLE, ST_CLAIMED) {
+                return Some((self.arena.launch_index(), mb));
+            }
+            return None;
+        }
         for k in 0..self.arena.lanes {
             let lane = (self.home_lane + k) % self.arena.lanes;
             let mb = self.arena.lane(self.mem, lane);
@@ -278,6 +311,22 @@ mod tests {
         assert_eq!(mb.base(), arena.lane_base(0));
         assert_eq!(mb.status(), ST_CLAIMED, "claim transitions the slot");
         assert!(client.try_claim().is_none(), "claim is exclusive");
+    }
+
+    #[test]
+    fn launch_client_claims_only_the_launch_slot() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let arena = ArenaLayout::for_lanes(2);
+        let client = RpcClient::for_launch(&mem, arena);
+        assert_eq!(client.home_lane(), arena.launch_index());
+        let (slot, mb) = client.try_claim().unwrap();
+        assert_eq!(slot, arena.launch_index());
+        assert_eq!(mb.base(), arena.launch_base());
+        // A second launch claim backs off even though every regular lane
+        // is idle — launches never spill onto the lanes.
+        assert!(client.try_claim().is_none());
+        assert_eq!(arena.lane(&mem, 0).status(), ST_IDLE);
+        assert_eq!(arena.lane(&mem, 1).status(), ST_IDLE);
     }
 
     #[test]

@@ -9,18 +9,26 @@
 //! on its own cache line — concurrent polling by engine workers never
 //! false-shares a line with a neighbouring lane's doorbell.
 //!
+//! After the regular lanes comes one **dedicated launch slot**: the
+//! mailbox kernel-split launch RPCs (paper §3.3) ride on. Keeping
+//! launches off the regular lanes is what makes in-kernel RPCs live at
+//! every engine shape: while a launch is in flight (served by the
+//! [`executor`]), every regular lane stays available for the RPCs the
+//! kernel itself issues — even at `lanes=1`.
+//!
 //! ```text
-//! SLOT_BASE                 + stride              + 2*stride
-//! | hdr | pad | DATA lane0 | hdr | pad | DATA l1 | hdr | ...
+//! SLOT_BASE                 + stride              + lanes*stride
+//! | hdr | pad | DATA lane0 | hdr | pad | DATA l1 | ... | launch slot |
 //!   ^--- stride = DATA_OFF + data_cap ---^
 //! ```
 //!
-//! [`ArenaLayout::legacy`] (1 lane × 1 MiB data) occupies exactly the
-//! bytes the single-slot prototype reserved (`MAILBOX_RESERVED`), which
-//! is what keeps the `lanes=1,workers=1` path bit-identical to the
-//! paper's Fig. 7 setup.
+//! Each slot of [`ArenaLayout::legacy`] (1 lane × 1 MiB data, plus the
+//! launch slot) has exactly the shape the single-slot prototype reserved
+//! (`MAILBOX_RESERVED`), which is what keeps the `lanes=1,workers=1`
+//! path bit-identical to the paper's Fig. 7 setup.
 //!
 //! [`mailbox`]: crate::rpc::mailbox
+//! [`executor`]: super::executor
 
 use crate::gpu::memory::DeviceMemory;
 use crate::rpc::mailbox::{Mailbox, DATA_CAP, DATA_OFF, MAILBOX_RESERVED, SLOT_BASE};
@@ -78,9 +86,21 @@ impl ArenaLayout {
         DATA_OFF + self.data_cap
     }
 
-    /// Managed bytes the whole arena occupies from `SLOT_BASE`.
+    /// Total slots: the regular lanes plus the dedicated launch slot.
+    pub const fn slot_count(&self) -> usize {
+        self.lanes + 1
+    }
+
+    /// Slot index of the dedicated kernel-split launch slot (it sits
+    /// after the last regular lane).
+    pub const fn launch_index(&self) -> usize {
+        self.lanes
+    }
+
+    /// Managed bytes the whole arena occupies from `SLOT_BASE`
+    /// (regular lanes + the launch slot).
     pub const fn reserved_bytes(&self) -> u64 {
-        self.lanes as u64 * self.lane_stride()
+        self.slot_count() as u64 * self.lane_stride()
     }
 
     pub fn lane_base(&self, lane: usize) -> u64 {
@@ -88,15 +108,38 @@ impl ArenaLayout {
         SLOT_BASE + lane as u64 * self.lane_stride()
     }
 
+    /// Base address of the dedicated launch slot.
+    pub const fn launch_base(&self) -> u64 {
+        SLOT_BASE + self.lanes as u64 * self.lane_stride()
+    }
+
     /// A typed mailbox view over one lane.
     pub fn lane<'a>(&self, mem: &'a DeviceMemory, lane: usize) -> Mailbox<'a> {
         Mailbox::at(mem, self.lane_base(lane), self.data_cap)
     }
+
+    /// A typed mailbox view over the dedicated launch slot.
+    pub fn launch_slot<'a>(&self, mem: &'a DeviceMemory) -> Mailbox<'a> {
+        Mailbox::at(mem, self.launch_base(), self.data_cap)
+    }
+
+    /// A typed mailbox view over any slot: regular lanes at `0..lanes`,
+    /// the launch slot at [`Self::launch_index`].
+    pub fn slot<'a>(&self, mem: &'a DeviceMemory, idx: usize) -> Mailbox<'a> {
+        if idx == self.launch_index() {
+            self.launch_slot(mem)
+        } else {
+            self.lane(mem, idx)
+        }
+    }
 }
 
-// The degenerate arena reserves exactly what the single-slot prototype
-// did, so `Device::new` keeps its historical managed-memory map.
-const _: () = assert!(ArenaLayout::legacy().reserved_bytes() == MAILBOX_RESERVED);
+// Every slot of the degenerate arena has exactly the shape the
+// single-slot prototype reserved, so the legacy lane keeps its
+// historical managed-memory address and layout; the launch slot tiles
+// right after it.
+const _: () = assert!(ArenaLayout::legacy().lane_stride() == MAILBOX_RESERVED);
+const _: () = assert!(ArenaLayout::legacy().reserved_bytes() == 2 * MAILBOX_RESERVED);
 
 #[cfg(test)]
 mod tests {
@@ -108,8 +151,11 @@ mod tests {
     fn legacy_matches_single_slot_reservation() {
         let a = ArenaLayout::legacy();
         assert_eq!(a.lanes, 1);
-        assert_eq!(a.reserved_bytes(), MAILBOX_RESERVED);
+        assert_eq!(a.lane_stride(), MAILBOX_RESERVED, "legacy lane = the prototype's slot");
+        assert_eq!(a.reserved_bytes(), 2 * MAILBOX_RESERVED, "plus the launch slot");
         assert_eq!(a.lane_base(0), SLOT_BASE);
+        assert_eq!(a.launch_base(), SLOT_BASE + MAILBOX_RESERVED);
+        assert_eq!(a.launch_index(), 1);
         assert_eq!(ArenaLayout::for_lanes(1), a);
     }
 
@@ -123,7 +169,27 @@ mod tests {
                 assert_eq!(a.lane_base(i), a.lane_base(i - 1) + DATA_OFF + a.data_cap);
             }
         }
-        assert_eq!(a.lane_base(3) + a.lane_stride(), SLOT_BASE + a.reserved_bytes());
+        // The launch slot tiles right after the last lane and closes the
+        // reservation.
+        assert_eq!(a.launch_base(), a.lane_base(3) + a.lane_stride());
+        assert_eq!(a.launch_base() % 64, 0);
+        assert_eq!(a.launch_base() + a.lane_stride(), SLOT_BASE + a.reserved_bytes());
+    }
+
+    #[test]
+    fn launch_slot_is_independent_of_lanes() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let a = ArenaLayout::for_lanes(2);
+        let launch = a.launch_slot(&mem);
+        launch.set_callee(77);
+        launch.write_data(0, b"launch");
+        assert!(launch.cas_status(ST_IDLE, ST_REQUEST));
+        for i in 0..2 {
+            assert_eq!(a.lane(&mem, i).status(), ST_IDLE, "lane {i} unaffected");
+        }
+        assert_eq!(a.slot(&mem, a.launch_index()).callee(), 77);
+        assert_eq!(a.slot(&mem, 0).base(), a.lane_base(0));
+        assert_eq!(launch.read_data(0, 6), b"launch");
     }
 
     #[test]

@@ -1,0 +1,281 @@
+//! The dedicated kernel-split launch executor.
+//!
+//! The paper's single-threaded server runs a kernel-split launch RPC
+//! (§3.3) *inside* the thread that claimed it; PR 1's worker pool
+//! inherited that shape, so a kernel that itself issued RPCs needed a
+//! second worker to answer them — and deadlocked at the default
+//! `lanes=1, workers=1` configuration. This module removes the
+//! constraint: poll workers hand launch frames to a small dedicated
+//! thread pool over a bounded queue and immediately resume polling, so
+//! the claiming worker is never occupied for the duration of a kernel.
+//!
+//! Completion writeback stays on the owning slot: when the launch
+//! wrapper returns, the executor thread copies mutated objects back,
+//! stores ret/flags and rings `ST_DONE` on the mailbox the request
+//! arrived on — the device-side client protocol is unchanged.
+//!
+//! Paired with the arena's dedicated launch slot
+//! ([`ArenaLayout::launch_slot`]), this makes in-kernel RPCs correct at
+//! every `lanes × workers × launch-threads` shape, including
+//! `1 × 1 × 1`.
+
+use super::arena::ArenaLayout;
+use super::server::EngineMetrics;
+use crate::gpu::memory::DeviceMemory;
+use crate::rpc::mailbox::ST_DONE;
+use crate::rpc::server::{writeback_frame, RpcFrame, WrapperRegistry};
+use crate::rpc::wrappers::{with_lane_ctx, HostEnv};
+use std::sync::atomic::Ordering;
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+
+/// One claimed launch request, unpacked and ready to run. The slot index
+/// identifies the mailbox the completion must be written back to.
+pub struct LaunchJob {
+    /// Arena slot the request arrived on (usually the dedicated launch
+    /// slot, but a launch callee claimed on a regular lane routes here
+    /// too).
+    pub slot: usize,
+    pub callee: u64,
+    pub frame: RpcFrame,
+    enqueued: std::time::Instant,
+}
+
+impl LaunchJob {
+    pub fn new(slot: usize, callee: u64, frame: RpcFrame) -> Self {
+        Self { slot, callee, frame, enqueued: std::time::Instant::now() }
+    }
+}
+
+/// Dedicated launch thread pool: a bounded job queue drained by
+/// `--rpc-launch-threads` host threads.
+pub struct LaunchExecutor {
+    tx: Option<SyncSender<LaunchJob>>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl LaunchExecutor {
+    /// Spawn `threads` executor threads serving launch frames against
+    /// `registry`/`env`, writing completions back into `arena` slots.
+    pub fn start(
+        mem: Arc<DeviceMemory>,
+        arena: ArenaLayout,
+        registry: Arc<WrapperRegistry>,
+        env: Arc<HostEnv>,
+        threads: usize,
+        metrics: Arc<EngineMetrics>,
+    ) -> Self {
+        assert!(threads >= 1, "launch executor needs at least one thread");
+        // Capacity: one in-flight launch per arena slot is the most the
+        // protocol can produce; `try_submit` still handles Full by
+        // letting the worker re-arm the slot.
+        let (tx, rx) = sync_channel::<LaunchJob>(arena.slot_count());
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(threads);
+        for t in 0..threads {
+            let mem = Arc::clone(&mem);
+            let registry = Arc::clone(&registry);
+            let env = Arc::clone(&env);
+            let metrics = Arc::clone(&metrics);
+            let rx = Arc::clone(&rx);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("rpc-launch-{t}"))
+                    .spawn(move || executor_loop(&mem, arena, &registry, &env, &metrics, &rx))
+                    .expect("spawn rpc launch executor"),
+            );
+        }
+        Self { tx: Some(tx), handles }
+    }
+
+    /// Hand a claimed launch frame to the pool without blocking. On a
+    /// full queue the job is returned so the caller can re-arm the slot
+    /// (`ST_SERVING -> ST_REQUEST`) and retry on a later sweep.
+    pub fn try_submit(&self, job: LaunchJob) -> Result<(), LaunchJob> {
+        match self.tx.as_ref().expect("executor running").try_send(job) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(job)) | Err(TrySendError::Disconnected(job)) => Err(job),
+        }
+    }
+
+    /// Drain the queue and join the pool (every queued launch still
+    /// completes and notifies its slot).
+    pub fn stop(&mut self) {
+        drop(self.tx.take());
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for LaunchExecutor {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn executor_loop(
+    mem: &DeviceMemory,
+    arena: ArenaLayout,
+    registry: &WrapperRegistry,
+    env: &HostEnv,
+    metrics: &EngineMetrics,
+    rx: &Mutex<Receiver<LaunchJob>>,
+) {
+    loop {
+        // Holding the lock only while *waiting*: the job is served with
+        // the receiver released so a multi-thread pool runs launches
+        // concurrently.
+        let job = match rx.lock() {
+            Ok(guard) => guard.recv(),
+            Err(_) => break,
+        };
+        let Ok(mut job) = job else { break };
+        let wait_ns = job.enqueued.elapsed().as_nanos() as u64;
+        metrics.launch_queued.fetch_sub(1, Ordering::Relaxed);
+        let t0 = std::time::Instant::now();
+        // Invoke the launch wrapper under the owning slot's lane context
+        // (HostEnv shard selection), exactly like a worker-served pad.
+        let (ret, flags) = match registry.get(job.callee) {
+            Some(w) => (with_lane_ctx(job.slot, || w(&mut job.frame, env)), 0),
+            None => (-1, 1),
+        };
+        // Stage-4 completion writeback on the owning slot: copy-back,
+        // ret/flags, then the ST_DONE doorbell the client spins on.
+        let mb = arena.slot(mem, job.slot);
+        writeback_frame(&mb, &job.frame);
+        mb.set_ret(ret);
+        mb.set_flags(flags);
+        metrics.launches.fetch_add(1, Ordering::Relaxed);
+        metrics.served.fetch_add(1, Ordering::Relaxed);
+        metrics.launch_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
+        metrics.launch_run_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        mb.set_status(ST_DONE);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::MemConfig;
+    use crate::rpc::mailbox::{WireArg, KIND_VAL, ST_REQUEST, ST_SERVING};
+    use crate::rpc::server::{unpack_frame, HostArg};
+    use crate::rpc::wrappers::register_common;
+    use crate::rpc::engine::server::EngineConfig;
+
+    fn fill_launch_request(mb: &crate::rpc::mailbox::Mailbox<'_>, callee: u64, v: u64) {
+        mb.set_callee(callee);
+        mb.set_nargs(1);
+        mb.write_arg(0, WireArg { kind: KIND_VAL, value: v, mode: 0, size: 0, offset: 0 });
+        mb.set_status(ST_REQUEST);
+    }
+
+    #[test]
+    fn completion_writes_back_to_owning_slot() {
+        let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+        let arena = ArenaLayout::legacy();
+        let reg = Arc::new(WrapperRegistry::new());
+        let id = reg.register("__fake_launch_i", Box::new(|f: &mut RpcFrame, _: &HostEnv| f.val(0) as i64 * 2));
+        reg.mark_launch("__fake_launch_i");
+        let env = Arc::new(HostEnv::new());
+        let metrics = Arc::new(EngineMetrics::new(EngineConfig::default()));
+        let mut exec = LaunchExecutor::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            env,
+            1,
+            Arc::clone(&metrics),
+        );
+        let mb = arena.launch_slot(&mem);
+        fill_launch_request(&mb, id, 21);
+        // Simulate the worker's claim + hand-off.
+        assert!(mb.cas_status(ST_REQUEST, ST_SERVING));
+        let (callee, frame) = unpack_frame(&mb);
+        metrics.launch_queued.fetch_add(1, Ordering::Relaxed);
+        exec.try_submit(LaunchJob::new(arena.launch_index(), callee, frame)).unwrap();
+        let mut spins = 0u64;
+        while mb.status() != ST_DONE {
+            std::thread::yield_now();
+            spins += 1;
+            assert!(spins < 50_000_000, "launch never completed");
+        }
+        assert_eq!(mb.ret(), 42);
+        assert_eq!(mb.flags(), 0);
+        let snap = metrics.snapshot();
+        assert_eq!(snap.launches, 1);
+        assert_eq!(snap.served, 1);
+        exec.stop();
+    }
+
+    #[test]
+    fn unknown_launch_callee_flags_failure() {
+        let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+        let arena = ArenaLayout::legacy();
+        let reg = Arc::new(WrapperRegistry::new());
+        register_common(&reg);
+        let env = Arc::new(HostEnv::new());
+        let metrics = Arc::new(EngineMetrics::new(EngineConfig::default()));
+        let mut exec = LaunchExecutor::start(
+            Arc::clone(&mem),
+            arena,
+            reg,
+            env,
+            1,
+            Arc::clone(&metrics),
+        );
+        metrics.launch_queued.fetch_add(1, Ordering::Relaxed);
+        exec.try_submit(LaunchJob::new(
+            arena.launch_index(),
+            9999,
+            RpcFrame { args: vec![HostArg::Val(0)] },
+        ))
+        .unwrap();
+        let mb = arena.launch_slot(&mem);
+        while mb.status() != ST_DONE {
+            std::thread::yield_now();
+        }
+        assert_eq!(mb.ret(), -1);
+        assert_eq!(mb.flags(), 1);
+        exec.stop();
+    }
+
+    #[test]
+    fn stop_drains_queued_launches() {
+        let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+        let arena = ArenaLayout::for_lanes(2);
+        let reg = Arc::new(WrapperRegistry::new());
+        let id = reg.register(
+            "__slow_launch_i",
+            Box::new(|f: &mut RpcFrame, _: &HostEnv| {
+                std::thread::sleep(std::time::Duration::from_millis(10));
+                f.val(0) as i64
+            }),
+        );
+        reg.mark_launch("__slow_launch_i");
+        let env = Arc::new(HostEnv::new());
+        let metrics = Arc::new(EngineMetrics::new(EngineConfig {
+            lanes: 2,
+            ..EngineConfig::default()
+        }));
+        let mut exec = LaunchExecutor::start(
+            Arc::clone(&mem),
+            arena,
+            reg,
+            env,
+            1,
+            Arc::clone(&metrics),
+        );
+        // Queue two jobs on distinct slots, then stop immediately: both
+        // must still complete and notify.
+        for (slot, v) in [(0usize, 5u64), (arena.launch_index(), 7u64)] {
+            metrics.launch_queued.fetch_add(1, Ordering::Relaxed);
+            exec.try_submit(LaunchJob::new(slot, id, RpcFrame { args: vec![HostArg::Val(v)] }))
+                .unwrap();
+        }
+        exec.stop();
+        assert_eq!(arena.slot(&mem, 0).ret(), 5);
+        assert_eq!(arena.launch_slot(&mem).ret(), 7);
+        assert_eq!(metrics.snapshot().launches, 2);
+    }
+}

@@ -1,16 +1,26 @@
 //! Multi-lane async RPC engine (the scalability successor to the
 //! paper's single-threaded, single-slot server of §4.4 / Fig. 7).
 //!
-//! Three pieces:
+//! Four pieces:
 //!
 //! * [`arena`] — the **multi-lane mailbox arena**: one cache-line-padded
 //!   RPC slot per lane at the base of the managed segment; device
 //!   threads pick a lane by team id (`team % lanes`) and fall over to
-//!   neighbouring lanes under contention.
+//!   neighbouring lanes under contention. A **dedicated launch slot**
+//!   after the lanes carries kernel-split launch RPCs so they never
+//!   contend with the RPCs a running kernel issues.
 //! * [`server`] — the **worker-pool host server**: N host threads poll
-//!   disjoint lane sets, claim requests with a `REQUEST -> SERVING` CAS
-//!   (race-free **work stealing** when a worker's own lanes are quiet),
-//!   and expose per-lane occupancy / batch-size metrics.
+//!   disjoint lane sets (plus the launch slot), claim requests with a
+//!   `REQUEST -> SERVING` CAS (race-free **work stealing** when a
+//!   worker's own lanes are quiet), and expose per-lane occupancy /
+//!   batch-size metrics.
+//! * [`executor`] — the **dedicated launch executor**: poll workers
+//!   hand claimed kernel-split launch frames to a bounded queue drained
+//!   by `--rpc-launch-threads` threads; the executor performs the
+//!   completion writeback on the owning slot when the kernel finishes.
+//!   Workers are therefore never occupied by a launch, which makes
+//!   **in-kernel RPCs correct at every `lanes × workers` shape** —
+//!   including the default `lanes=1, workers=1` that used to deadlock.
 //! * The **batching layer** inside [`server`]: each poll sweep drains
 //!   every ready lane and dispatches homogeneous calls (same callee id)
 //!   as one batched landing-pad invocation — see
@@ -20,21 +30,12 @@
 //! The legacy path is the degenerate case: `lanes=1, workers=1` over
 //! [`ArenaLayout::legacy`] polls the same single slot as
 //! [`crate::rpc::server::RpcServer`], keeping the paper's Fig. 7 numbers
-//! reproducible bit-for-bit.
-//!
-//! ## Nested RPCs need `workers >= 2`
-//!
-//! A kernel-split launch RPC runs the whole kernel *inside* the worker
-//! that claimed it (the launcher wrapper is synchronous, exactly like
-//! the paper's single-threaded server). RPCs issued from inside that
-//! kernel therefore need a *different* worker to answer them: with
-//! `workers = 1` they spin until the client times out, regardless of
-//! how many lanes exist — the same limitation the legacy server has.
-//! Run RPC-issuing kernels with `--rpc-workers 2` or more; the idle
-//! workers' stealing then guarantees progress.
+//! reproducible bit-for-bit for kernels that issue no RPCs.
 
 pub mod arena;
+pub mod executor;
 pub mod server;
 
 pub use arena::{ArenaLayout, MULTI_LANE_DATA_CAP};
+pub use executor::{LaunchExecutor, LaunchJob};
 pub use server::{EngineConfig, EngineMetrics, EngineSnapshot, RpcEngine};

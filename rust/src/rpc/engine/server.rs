@@ -6,8 +6,9 @@
 //! lane of a poll sweep before dispatching. Homogeneous calls in one
 //! sweep — same callee id, the per-thread `fprintf` storm of Fig. 7 —
 //! are dispatched as **one batched landing-pad invocation** through the
-//! registry's batch pad (or, lacking one, one registry lookup amortized
-//! over the group).
+//! registry's batch pad (or, lacking one, the scalar pad already
+//! fetched — together with its launch flag — by the sweep's single
+//! per-frame registry lookup).
 //!
 //! Stage table for the batched path (the Fig. 7 pipeline, per sweep):
 //!
@@ -21,29 +22,42 @@
 //!
 //! `lanes=1, workers=1` degenerates to the paper's single-threaded
 //! single-slot server: one lane, one poller, batches of one.
+//!
+//! Every worker additionally polls the arena's dedicated **launch
+//! slot**; claimed kernel-split launch frames (and launch callees
+//! arriving on regular lanes) are handed to the [`executor`] instead of
+//! being served inline, so a running kernel never occupies a poll
+//! worker and its in-kernel RPCs are answered at every engine shape.
+//!
+//! [`executor`]: super::executor
 
 use super::arena::ArenaLayout;
+use super::executor::{LaunchExecutor, LaunchJob};
 use crate::gpu::memory::DeviceMemory;
 use crate::rpc::mailbox::{ST_DONE, ST_IDLE, ST_REQUEST, ST_SERVING};
-use crate::rpc::server::{unpack_frame, writeback_frame, RpcFrame, WrapperRegistry};
-use crate::rpc::wrappers::HostEnv;
+use crate::rpc::server::{unpack_frame, writeback_frame, RpcFrame, WrapperFn, WrapperRegistry};
+use crate::rpc::wrappers::{with_lane_ctx, HostEnv};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
-/// Engine shape: `--rpc-lanes` × `--rpc-workers` plus the batching
-/// toggle (`--no-rpc-batch` clears it).
+/// Engine shape: `--rpc-lanes` × `--rpc-workers` ×
+/// `--rpc-launch-threads`, plus the batching toggle (`--no-rpc-batch`
+/// clears it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineConfig {
     pub lanes: usize,
     pub workers: usize,
+    /// Dedicated kernel-split launch executor threads
+    /// (`--rpc-launch-threads`). Launches never occupy poll workers.
+    pub launch_threads: usize,
     /// Coalesce same-callee requests of one sweep into one dispatch.
     pub batch: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { lanes: 1, workers: 1, batch: true }
+        Self { lanes: 1, workers: 1, launch_threads: 1, batch: true }
     }
 }
 
@@ -57,11 +71,13 @@ pub struct LaneCounters {
     pub polls_busy: AtomicU64,
 }
 
-/// Live engine counters (atomics shared with the worker threads).
+/// Live engine counters (atomics shared with the worker threads and the
+/// launch executor).
 #[derive(Debug)]
 pub struct EngineMetrics {
     lanes_n: usize,
     workers_n: usize,
+    launch_threads_n: usize,
     pub served: AtomicU64,
     /// Coalesced dispatches (groups of ≥ 2 same-callee requests).
     pub batches: AtomicU64,
@@ -70,19 +86,39 @@ pub struct EngineMetrics {
     pub max_batch: AtomicU64,
     /// Requests a worker claimed from a lane it does not own.
     pub steals: AtomicU64,
+    /// Kernel-split launches completed by the executor.
+    pub launches: AtomicU64,
+    /// Launch jobs currently queued/being handed to the executor.
+    pub launch_queued: AtomicU64,
+    /// High-water mark of the executor queue depth.
+    pub launch_queue_peak: AtomicU64,
+    /// Claims re-armed (`ST_SERVING -> ST_REQUEST`) because the executor
+    /// queue was full.
+    pub launch_requeues: AtomicU64,
+    /// Total ns launch jobs spent waiting in the executor queue.
+    pub launch_wait_ns: AtomicU64,
+    /// Total ns the executor spent running launch wrappers.
+    pub launch_run_ns: AtomicU64,
     pub lanes: Vec<LaneCounters>,
 }
 
 impl EngineMetrics {
-    fn new(cfg: EngineConfig) -> Self {
+    pub(crate) fn new(cfg: EngineConfig) -> Self {
         Self {
             lanes_n: cfg.lanes,
             workers_n: cfg.workers,
+            launch_threads_n: cfg.launch_threads,
             served: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_calls: AtomicU64::new(0),
             max_batch: AtomicU64::new(0),
             steals: AtomicU64::new(0),
+            launches: AtomicU64::new(0),
+            launch_queued: AtomicU64::new(0),
+            launch_queue_peak: AtomicU64::new(0),
+            launch_requeues: AtomicU64::new(0),
+            launch_wait_ns: AtomicU64::new(0),
+            launch_run_ns: AtomicU64::new(0),
             lanes: (0..cfg.lanes).map(|_| LaneCounters::default()).collect(),
         }
     }
@@ -92,11 +128,18 @@ impl EngineMetrics {
         EngineSnapshot {
             lanes: self.lanes_n,
             workers: self.workers_n,
+            launch_threads: self.launch_threads_n,
             served: self.served.load(r),
             batches: self.batches.load(r),
             batched_calls: self.batched_calls.load(r),
             max_batch: self.max_batch.load(r),
             steals: self.steals.load(r),
+            launches: self.launches.load(r),
+            launch_queue_depth: self.launch_queued.load(r),
+            launch_queue_peak: self.launch_queue_peak.load(r),
+            launch_requeues: self.launch_requeues.load(r),
+            launch_wait_ns: self.launch_wait_ns.load(r),
+            launch_run_ns: self.launch_run_ns.load(r),
             polls: self.lanes.iter().map(|l| l.polls.load(r)).sum(),
             polls_busy: self.lanes.iter().map(|l| l.polls_busy.load(r)).sum(),
         }
@@ -130,11 +173,17 @@ impl EngineMetrics {
         Json::obj(vec![
             ("lanes", Json::num(s.lanes as f64)),
             ("workers", Json::num(s.workers as f64)),
+            ("launch_threads", Json::num(s.launch_threads as f64)),
             ("served", Json::num(s.served as f64)),
             ("batches", Json::num(s.batches as f64)),
             ("batched_calls", Json::num(s.batched_calls as f64)),
             ("max_batch", Json::num(s.max_batch as f64)),
             ("steals", Json::num(s.steals as f64)),
+            ("launches", Json::num(s.launches as f64)),
+            ("launch_queue_peak", Json::num(s.launch_queue_peak as f64)),
+            ("launch_requeues", Json::num(s.launch_requeues as f64)),
+            ("launch_wait_ns", Json::num(s.launch_wait_ns as f64)),
+            ("launch_run_ns", Json::num(s.launch_run_ns as f64)),
             ("occupancy", Json::num(s.occupancy())),
             ("per_lane", Json::Arr(lanes)),
         ])
@@ -146,11 +195,21 @@ impl EngineMetrics {
 pub struct EngineSnapshot {
     pub lanes: usize,
     pub workers: usize,
+    pub launch_threads: usize,
     pub served: u64,
     pub batches: u64,
     pub batched_calls: u64,
     pub max_batch: u64,
     pub steals: u64,
+    /// Kernel-split launches completed by the dedicated executor.
+    pub launches: u64,
+    /// Executor queue depth at snapshot time.
+    pub launch_queue_depth: u64,
+    /// Executor queue depth high-water mark.
+    pub launch_queue_peak: u64,
+    pub launch_requeues: u64,
+    pub launch_wait_ns: u64,
+    pub launch_run_ns: u64,
     pub polls: u64,
     pub polls_busy: u64,
 }
@@ -165,8 +224,18 @@ impl EngineSnapshot {
         }
     }
 
+    /// Mean end-to-end executor latency (queue wait + wrapper run) per
+    /// completed launch, in ns.
+    pub fn launch_latency_ns(&self) -> f64 {
+        if self.launches == 0 {
+            0.0
+        } else {
+            (self.launch_wait_ns + self.launch_run_ns) as f64 / self.launches as f64
+        }
+    }
+
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "rpc_engine lanes={} workers={} served={} batches={} batched={} max_batch={} steals={} occupancy={:.3}",
             self.lanes,
             self.workers,
@@ -176,20 +245,32 @@ impl EngineSnapshot {
             self.max_batch,
             self.steals,
             self.occupancy(),
-        )
+        );
+        if self.launches > 0 {
+            s.push_str(&format!(
+                " launches={} launch_threads={} launch_qpeak={} launch_lat={}",
+                self.launches,
+                self.launch_threads,
+                self.launch_queue_peak,
+                crate::util::fmt_ns(self.launch_latency_ns()),
+            ));
+        }
+        s
     }
 }
 
-/// Handle to the running worker pool.
+/// Handle to the running worker pool + launch executor.
 pub struct RpcEngine {
     cfg: EngineConfig,
     shutdown: Arc<AtomicBool>,
     handles: Vec<std::thread::JoinHandle<()>>,
+    executor: Option<Arc<LaunchExecutor>>,
     pub metrics: Arc<EngineMetrics>,
 }
 
 impl RpcEngine {
-    /// Spawn `cfg.workers` poller threads over `arena`, dispatching to
+    /// Spawn `cfg.workers` poller threads over `arena` (plus
+    /// `cfg.launch_threads` launch-executor threads), dispatching to
     /// `registry` with `env` as the host state.
     pub fn start(
         mem: Arc<DeviceMemory>,
@@ -202,6 +283,14 @@ impl RpcEngine {
         assert_eq!(cfg.lanes, arena.lanes, "engine config and arena disagree on lane count");
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(EngineMetrics::new(cfg));
+        let executor = Arc::new(LaunchExecutor::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&registry),
+            Arc::clone(&env),
+            cfg.launch_threads.max(1),
+            Arc::clone(&metrics),
+        ));
         let mut handles = Vec::with_capacity(cfg.workers);
         for w in 0..cfg.workers {
             let mem = Arc::clone(&mem);
@@ -209,14 +298,17 @@ impl RpcEngine {
             let env = Arc::clone(&env);
             let metrics = Arc::clone(&metrics);
             let shutdown = Arc::clone(&shutdown);
+            let executor = Arc::clone(&executor);
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("rpc-engine-{w}"))
-                    .spawn(move || worker_loop(w, &mem, arena, &registry, &env, cfg, &metrics, &shutdown))
+                    .spawn(move || {
+                        worker_loop(w, &mem, arena, &registry, &env, cfg, &metrics, &shutdown, &executor)
+                    })
                     .expect("spawn rpc engine worker"),
             );
         }
-        Self { cfg, shutdown, handles, metrics }
+        Self { cfg, shutdown, handles, executor: Some(executor), metrics }
     }
 
     pub fn config(&self) -> EngineConfig {
@@ -232,6 +324,9 @@ impl RpcEngine {
         for h in self.handles.drain(..) {
             let _ = h.join();
         }
+        // Workers are gone; dropping the last executor handle drains the
+        // launch queue and joins the pool.
+        drop(self.executor.take());
     }
 }
 
@@ -251,10 +346,11 @@ fn worker_loop(
     cfg: EngineConfig,
     metrics: &EngineMetrics,
     shutdown: &AtomicBool,
+    executor: &LaunchExecutor,
 ) {
     let own: Vec<usize> = (0..cfg.lanes).filter(|i| i % cfg.workers == worker).collect();
     let mut idle_sweeps = 0u64;
-    let mut claimed: Vec<usize> = Vec::with_capacity(cfg.lanes);
+    let mut claimed: Vec<usize> = Vec::with_capacity(arena.slot_count());
     loop {
         claimed.clear();
         // Sweep the lanes this worker owns, claiming every ready one.
@@ -273,6 +369,17 @@ fn worker_loop(
                         claimed.push(i);
                     }
                 }
+            }
+        }
+        // The dedicated launch slot is polled by every worker; the claim
+        // CAS keeps that race-free. A plain status read gates the CAS so
+        // the idle fast path never takes the cache line exclusive.
+        // Claimed launches are handed to the executor in dispatch_sweep,
+        // so this never occupies the worker.
+        {
+            let launch = arena.launch_slot(mem);
+            if launch.status() == ST_REQUEST && launch.cas_status(ST_REQUEST, ST_SERVING) {
+                claimed.push(arena.launch_index());
             }
         }
         // Nothing of our own: steal one ready request from a foreign lane
@@ -303,11 +410,14 @@ fn worker_loop(
             continue;
         }
         idle_sweeps = 0;
-        dispatch_sweep(mem, arena, registry, env, cfg.batch, metrics, &claimed);
+        dispatch_sweep(mem, arena, registry, env, cfg.batch, metrics, &claimed, executor);
     }
 }
 
-/// Serve every claimed lane of one sweep, coalescing same-callee groups.
+/// Serve every claimed slot of one sweep: launch callees are handed to
+/// the dedicated executor (which owns their completion writeback);
+/// everything else dispatches inline, coalescing same-callee groups.
+#[allow(clippy::too_many_arguments)]
 fn dispatch_sweep(
     mem: &DeviceMemory,
     arena: ArenaLayout,
@@ -316,14 +426,36 @@ fn dispatch_sweep(
     batch: bool,
     metrics: &EngineMetrics,
     claimed: &[usize],
+    executor: &LaunchExecutor,
 ) {
-    // Stage 2: copy every ready RPCInfo to the host.
+    // Stage 2: copy every ready RPCInfo to the host, peeling launch
+    // frames off to the executor as they are identified. One registry
+    // lock acquisition per frame fetches the pad and the launch flag
+    // together; the group dispatch below reuses the fetched pads.
+    let mut slots = Vec::with_capacity(claimed.len());
     let mut callees = Vec::with_capacity(claimed.len());
     let mut frames: Vec<RpcFrame> = Vec::with_capacity(claimed.len());
-    for &lane in claimed {
-        let (callee, frame) = unpack_frame(&arena.lane(mem, lane));
+    let mut pads: Vec<Option<Arc<WrapperFn>>> = Vec::with_capacity(claimed.len());
+    for &slot in claimed {
+        let mb = arena.slot(mem, slot);
+        let (callee, frame) = unpack_frame(&mb);
+        let entry = registry.get_entry(callee);
+        if matches!(entry, Some((_, true))) {
+            let depth = metrics.launch_queued.fetch_add(1, Ordering::Relaxed) + 1;
+            metrics.launch_queue_peak.fetch_max(depth, Ordering::Relaxed);
+            if executor.try_submit(LaunchJob::new(slot, callee, frame)).is_err() {
+                // Queue full: re-arm the slot and let a later sweep
+                // retry. The client just keeps spinning on ST_DONE.
+                metrics.launch_queued.fetch_sub(1, Ordering::Relaxed);
+                metrics.launch_requeues.fetch_add(1, Ordering::Relaxed);
+                mb.set_status(ST_REQUEST);
+            }
+            continue;
+        }
+        slots.push(slot);
         callees.push(callee);
         frames.push(frame);
+        pads.push(entry.map(|(w, _)| w));
     }
     // Group by callee, preserving claim order within a group.
     let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
@@ -333,7 +465,9 @@ fn dispatch_sweep(
             None => groups.push((c, vec![k])),
         }
     }
-    // Stage 3: one landing-pad invocation per homogeneous group.
+    // Stage 3: one landing-pad invocation per homogeneous group, run
+    // under the (first) owning slot's lane context so HostEnv shard
+    // selection follows the serving lane.
     for (callee, members) in groups {
         let coalesced = batch && members.len() > 1;
         if coalesced {
@@ -341,12 +475,12 @@ fn dispatch_sweep(
             metrics.batched_calls.fetch_add(members.len() as u64, Ordering::Relaxed);
             metrics.max_batch.fetch_max(members.len() as u64, Ordering::Relaxed);
         }
-        let rets: Vec<(i64, u64)> = match (coalesced.then(|| registry.get_batch(callee)).flatten(), registry.get(callee)) {
+        let rets: Vec<(i64, u64)> = match (coalesced.then(|| registry.get_batch(callee)).flatten(), pads[members[0]].clone()) {
             (Some(batch_pad), _) => {
                 // True batch pad: the whole group in one invocation.
                 let mut group_frames: Vec<RpcFrame> =
                     members.iter().map(|&k| std::mem::take(&mut frames[k])).collect();
-                let rs = batch_pad(&mut group_frames, env);
+                let rs = with_lane_ctx(slots[members[0]], || batch_pad(&mut group_frames, env));
                 for (j, &k) in members.iter().enumerate() {
                     frames[k] = std::mem::take(&mut group_frames[j]);
                 }
@@ -354,19 +488,24 @@ fn dispatch_sweep(
             }
             (None, Some(pad)) => {
                 // Scalar pad: still a single registry dispatch for the group.
-                members.iter().map(|&k| (pad(&mut frames[k], env), 0)).collect()
+                members
+                    .iter()
+                    .map(|&k| (with_lane_ctx(slots[k], || pad(&mut frames[k], env)), 0))
+                    .collect()
             }
             (None, None) => members.iter().map(|_| (-1i64, 1u64)).collect(),
         };
-        // Stage 4: copy-back + notify, per lane.
+        // Stage 4: copy-back + notify, per slot.
         for (j, &k) in members.iter().enumerate() {
-            let lane = claimed[k];
-            let mb = arena.lane(mem, lane);
+            let slot = slots[k];
+            let mb = arena.slot(mem, slot);
             writeback_frame(&mb, &frames[k]);
             let (ret, flags) = rets[j];
             mb.set_ret(ret);
             mb.set_flags(flags);
-            metrics.lanes[lane].served.fetch_add(1, Ordering::Relaxed);
+            if let Some(lc) = metrics.lanes.get(slot) {
+                lc.served.fetch_add(1, Ordering::Relaxed);
+            }
             metrics.served.fetch_add(1, Ordering::Relaxed);
             mb.set_status(ST_DONE);
         }
@@ -401,7 +540,7 @@ mod tests {
             arena,
             Arc::clone(&reg),
             env,
-            EngineConfig { lanes: 4, workers: 2, batch: true },
+            EngineConfig { lanes: 4, workers: 2, ..EngineConfig::default() },
         );
         std::thread::scope(|s| {
             for t in 0..8u64 {
@@ -486,7 +625,7 @@ mod tests {
             arena,
             Arc::clone(&reg),
             env,
-            EngineConfig { lanes: 4, workers: 1, batch: true },
+            EngineConfig { lanes: 4, workers: 1, ..EngineConfig::default() },
         );
         for lane in 0..4 {
             let mb = arena.lane(&mem, lane);
@@ -529,7 +668,7 @@ mod tests {
             arena,
             Arc::clone(&reg),
             Arc::clone(&env),
-            EngineConfig { lanes: 3, workers: 1, batch: true },
+            EngineConfig { lanes: 3, workers: 1, ..EngineConfig::default() },
         );
         for lane in 0..3 {
             let mb = arena.lane(&mem, lane);
@@ -551,7 +690,7 @@ mod tests {
             arena,
             reg,
             env,
-            EngineConfig { lanes: 2, workers: 1, batch: true },
+            EngineConfig { lanes: 2, workers: 1, ..EngineConfig::default() },
         );
         let mut client = RpcClient::for_team(&mem, arena, 0);
         let info = RpcArgInfo::new();
@@ -578,7 +717,7 @@ mod tests {
             arena,
             Arc::clone(&reg),
             env,
-            EngineConfig { lanes: 4, workers: 2, batch: true },
+            EngineConfig { lanes: 4, workers: 2, ..EngineConfig::default() },
         );
         std::thread::scope(|s| {
             let mem_ref = &mem;
@@ -601,6 +740,73 @@ mod tests {
     }
 
     #[test]
+    fn launch_runs_on_executor_not_on_the_claiming_worker() {
+        // The deadlock regression at the protocol level: a "launch" pad
+        // that itself issues an RPC through the single lane, at
+        // lanes=1, workers=1, launch_threads=1. Pre-executor this hung —
+        // the only worker ran the launch and nobody answered the nested
+        // call.
+        let (mem, arena, reg, env) = setup(1);
+        let inner = reg.register("__id_i", Box::new(|f, _| f.val(0) as i64));
+        let mem_for_launch = Arc::clone(&mem);
+        let launch_id = reg.register(
+            "__nested_launch_i",
+            Box::new(move |f, _| {
+                // The "kernel": one nested RPC through the regular lane.
+                let mut client = RpcClient::for_team(&mem_for_launch, ArenaLayout::legacy(), 0);
+                let mut info = RpcArgInfo::new();
+                info.add_val(f.val(0));
+                client.call(inner, &info, None)
+            }),
+        );
+        reg.mark_launch("__nested_launch_i");
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            env,
+            EngineConfig::default(),
+        );
+        let mut client = RpcClient::for_launch(&mem, arena);
+        let mut info = RpcArgInfo::new();
+        info.add_val(41);
+        assert_eq!(client.call(launch_id, &info, None), 41);
+        assert_eq!(client.last.lane, arena.launch_index());
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.launches, 1, "launch went through the executor");
+        assert_eq!(snap.served, 2, "launch + the nested call");
+        assert_eq!(snap.launch_queue_depth, 0);
+        assert!(snap.launch_queue_peak >= 1);
+        assert!(snap.launch_latency_ns() > 0.0);
+        engine.stop();
+    }
+
+    #[test]
+    fn launch_on_a_regular_lane_still_routes_to_executor() {
+        // A launch callee arriving on a regular lane (generic client)
+        // must also be handed to the executor, with completion written
+        // back to that lane.
+        let (mem, arena, reg, env) = setup(2);
+        let id = reg.register("__fake_launch_i", Box::new(|f, _| f.val(0) as i64 + 100));
+        reg.mark_launch("__fake_launch_i");
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            env,
+            EngineConfig { lanes: 2, workers: 1, ..EngineConfig::default() },
+        );
+        let mut client = RpcClient::for_team(&mem, arena, 1);
+        let mut info = RpcArgInfo::new();
+        info.add_val(7);
+        assert_eq!(client.call(id, &info, None), 107);
+        assert_eq!(client.last.lane, 1, "request rode lane 1");
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.launches, 1);
+        engine.stop();
+    }
+
+    #[test]
     fn occupancy_and_json_report() {
         let (mem, arena, reg, env) = setup(2);
         let id = reg.register("__id_i", Box::new(|f, _| f.val(0) as i64));
@@ -609,7 +815,7 @@ mod tests {
             arena,
             reg,
             env,
-            EngineConfig { lanes: 2, workers: 1, batch: true },
+            EngineConfig { lanes: 2, workers: 1, ..EngineConfig::default() },
         );
         let mut client = RpcClient::for_team(&mem, arena, 0);
         for k in 0..10u64 {

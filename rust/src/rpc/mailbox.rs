@@ -31,9 +31,12 @@ pub const SLOT_BASE: u64 = MANAGED_BASE;
 pub const MAX_ARGS: usize = 16;
 pub const DATA_OFF: u64 = 1024;
 pub const DATA_CAP: u64 = 1 << 20;
-/// Managed bytes reserved for the legacy single-slot mailbox; the
-/// multi-lane arena reserves `ArenaLayout::reserved_bytes()` instead
-/// (see `Device::with_arena`).
+/// Bytes of one legacy-shaped slot (header pad + 1 MiB data). The
+/// device reserves `ArenaLayout::reserved_bytes()` — the lanes plus the
+/// dedicated kernel-split launch slot — at the base of the managed
+/// segment (see `Device::with_arena`); the legacy arena's lane 0 covers
+/// exactly these bytes at `SLOT_BASE`, preserving the prototype's slot
+/// layout.
 pub const MAILBOX_RESERVED: u64 = DATA_OFF + DATA_CAP;
 
 pub const ST_IDLE: u64 = 0;

@@ -19,10 +19,13 @@
 //!   unpacks the frame and invokes the registered landing-pad wrapper;
 //!   also home of the [`WrapperRegistry`] with its scalar and batched pads.
 //! * [`engine`] — the multi-lane successor: mailbox **arena** (one lane
-//!   per team), **worker-pool** server with race-free work stealing, and
-//!   the **batching layer** that dispatches homogeneous calls of a poll
-//!   sweep as one landing-pad invocation. `lanes=1, workers=1` degenerates
-//!   to the legacy single-slot behaviour.
+//!   per team plus a dedicated kernel-split launch slot), **worker-pool**
+//!   server with race-free work stealing, the **launch executor** that
+//!   runs kernel-split launches off the poll workers (in-kernel RPCs are
+//!   live at every shape), and the **batching layer** that dispatches
+//!   homogeneous calls of a poll sweep as one landing-pad invocation.
+//!   `lanes=1, workers=1` degenerates to the legacy single-slot
+//!   behaviour.
 //! * [`wrappers`] — the host landing pads for the libc calls the
 //!   evaluation needs (`fprintf`, `fscanf`, `fopen`, `fread`, ...), closed
 //!   over an in-memory [`wrappers::HostEnv`], plus their batched variants.
@@ -52,4 +55,4 @@ pub use arginfo::{ArgMode, RpcArg, RpcArgInfo};
 pub use client::{RpcBreakdown, RpcClient};
 pub use engine::{ArenaLayout, EngineConfig, EngineMetrics, EngineSnapshot, RpcEngine};
 pub use server::{BatchWrapperFn, RpcFrame, RpcServer, WrapperFn, WrapperRegistry};
-pub use wrappers::HostEnv;
+pub use wrappers::{HostEnv, HostIoSnapshot};

@@ -94,7 +94,12 @@ pub type BatchWrapperFn = Box<dyn Fn(&mut [RpcFrame], &HostEnv) -> Vec<i64> + Se
 #[derive(Default)]
 pub struct WrapperRegistry {
     by_name: Mutex<HashMap<String, u64>>,
-    wrappers: Mutex<Vec<Arc<WrapperFn>>>,
+    /// `(scalar pad, is-kernel-split-launch)` per callee id. The launch
+    /// flag lives next to the pad so the engine's per-frame hot path
+    /// reads both under the one existing lock ([`Self::get_entry`]);
+    /// flagged pads route to the dedicated launch executor instead of
+    /// being served on the claiming poll worker.
+    wrappers: Mutex<Vec<(Arc<WrapperFn>, bool)>>,
     /// Optional batched variants, keyed by the scalar pad's callee id.
     batch: Mutex<HashMap<u64, Arc<BatchWrapperFn>>>,
 }
@@ -114,7 +119,7 @@ impl WrapperRegistry {
         }
         let mut ws = self.wrappers.lock().unwrap();
         let id = ws.len() as u64;
-        ws.push(Arc::new(f));
+        ws.push((Arc::new(f), false));
         names.insert(mangled.to_string(), id);
         id
     }
@@ -138,8 +143,27 @@ impl WrapperRegistry {
         Some(id)
     }
 
+    /// Mark an already-registered pad as a kernel-split launch; returns
+    /// its callee id, or `None` when no pad exists under `mangled`.
+    pub fn mark_launch(&self, mangled: &str) -> Option<u64> {
+        let id = self.id_of(mangled)?;
+        self.wrappers.lock().unwrap().get_mut(id as usize)?.1 = true;
+        Some(id)
+    }
+
+    /// Does `id` name a kernel-split launch pad?
+    pub fn is_launch(&self, id: u64) -> bool {
+        self.wrappers.lock().unwrap().get(id as usize).is_some_and(|e| e.1)
+    }
+
     pub(crate) fn get(&self, id: u64) -> Option<Arc<WrapperFn>> {
-        self.wrappers.lock().unwrap().get(id as usize).cloned()
+        self.wrappers.lock().unwrap().get(id as usize).map(|e| Arc::clone(&e.0))
+    }
+
+    /// Scalar pad + launch flag in one lock acquisition — the engine's
+    /// per-claimed-frame lookup.
+    pub(crate) fn get_entry(&self, id: u64) -> Option<(Arc<WrapperFn>, bool)> {
+        self.wrappers.lock().unwrap().get(id as usize).map(|(w, l)| (Arc::clone(w), *l))
     }
 
     pub(crate) fn get_batch(&self, id: u64) -> Option<Arc<BatchWrapperFn>> {
@@ -165,6 +189,15 @@ pub struct RpcServer {
 impl RpcServer {
     /// Spawn the single server thread over `mem`, dispatching to `registry`
     /// with `env` as the host state.
+    ///
+    /// `mem` must carry the **legacy single-slot arena**
+    /// ([`ArenaLayout::legacy`], what `Device::new` reserves): besides
+    /// the prototype slot at `SLOT_BASE`, this server polls the legacy
+    /// arena's launch slot at a *fixed* address right above it. Memory
+    /// reserved for a multi-lane arena puts lane data at that address —
+    /// pair such devices with the engine, never this server.
+    ///
+    /// [`ArenaLayout::legacy`]: crate::rpc::engine::ArenaLayout::legacy
     pub fn start(mem: Arc<DeviceMemory>, registry: Arc<WrapperRegistry>, env: Arc<HostEnv>) -> Self {
         let shutdown = Arc::new(AtomicBool::new(false));
         let served = Arc::new(AtomicU64::new(0));
@@ -174,28 +207,36 @@ impl RpcServer {
             .name("rpc-server".into())
             .spawn(move || {
                 let mb = Mailbox::new(&mem);
+                // Kernel-split launches ride the legacy arena's dedicated
+                // launch slot; this single-threaded server serves them
+                // *synchronously* (the paper's §4.4 behaviour — a kernel
+                // that itself issues RPCs hangs here; the engine's launch
+                // executor is the fix).
+                let launch = crate::rpc::engine::ArenaLayout::legacy().launch_slot(&mem);
                 let mut idle_spins = 0u64;
                 loop {
-                    match mb.status() {
-                        ST_REQUEST => {
-                            idle_spins = 0;
-                            Self::serve_one(&mb, &registry, &env);
+                    let mut served_any = false;
+                    for slot in [&mb, &launch] {
+                        if slot.status() == ST_REQUEST {
+                            Self::serve_one(slot, &registry, &env);
                             sv.fetch_add(1, Ordering::Relaxed);
-                            mb.set_status(ST_DONE);
+                            slot.set_status(ST_DONE);
+                            served_any = true;
                         }
-                        ST_SHUTDOWN => break,
-                        _ => {
-                            if sd.load(Ordering::Relaxed) {
-                                break;
-                            }
-                            std::hint::spin_loop();
-                            idle_spins += 1;
-                            // Perf (§Perf L3-1): brief hot window after the
-                            // last request, then hand the core back.
-                            if idle_spins > 4 {
-                                std::thread::yield_now();
-                            }
-                        }
+                    }
+                    if served_any {
+                        idle_spins = 0;
+                        continue;
+                    }
+                    if mb.status() == ST_SHUTDOWN || sd.load(Ordering::Relaxed) {
+                        break;
+                    }
+                    std::hint::spin_loop();
+                    idle_spins += 1;
+                    // Perf (§Perf L3-1): brief hot window after the
+                    // last request, then hand the core back.
+                    if idle_spins > 4 {
+                        std::thread::yield_now();
                     }
                 }
             })
@@ -400,6 +441,22 @@ mod tests {
         assert_eq!(reg.register_batch("__f_i", Box::new(|fs, _| vec![2; fs.len()])), Some(id));
         assert!(reg.get_batch(id).is_some());
         assert!(reg.get_batch(id + 1).is_none());
+    }
+
+    #[test]
+    fn registry_launch_flag_rides_the_wrapper_entry() {
+        let reg = WrapperRegistry::new();
+        assert!(reg.mark_launch("__nope").is_none(), "no pad registered yet");
+        let id = reg.register("__launchish_i_i", Box::new(|_, _| 0));
+        assert!(!reg.is_launch(id));
+        assert_eq!(reg.mark_launch("__launchish_i_i"), Some(id));
+        assert!(reg.is_launch(id));
+        assert!(!reg.is_launch(id + 1), "unknown ids are not launches");
+        let (pad, launch) = reg.get_entry(id).unwrap();
+        assert!(launch);
+        let mut frame = RpcFrame::default();
+        assert_eq!(pad(&mut frame, &HostEnv::new()), 0);
+        assert!(reg.get_entry(id + 1).is_none());
     }
 
     #[test]

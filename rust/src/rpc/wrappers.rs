@@ -9,13 +9,43 @@
 //! host-side effects are observable in tests.
 
 use super::server::{BatchWrapperFn, RpcFrame, WrapperFn, WrapperRegistry};
+use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Mutex;
+use std::sync::{Mutex, MutexGuard};
 
 pub const FD_STDIN: u64 = 0;
 pub const FD_STDOUT: u64 = 1;
 pub const FD_STDERR: u64 = 2;
+
+thread_local! {
+    /// Which arena slot the currently-executing landing pad is serving.
+    /// Set by the engine's dispatch/executor threads; `None` on the
+    /// legacy single-threaded server and in direct test invocations.
+    static LANE_CTX: Cell<Option<usize>> = const { Cell::new(None) };
+}
+
+/// Run `f` with the serving-lane context set to `lane` (restores the
+/// previous context afterwards). [`HostEnv`] uses the context to pick a
+/// per-lane file-table shard for `fopen`.
+pub fn with_lane_ctx<R>(lane: usize, f: impl FnOnce() -> R) -> R {
+    LANE_CTX.with(|c| {
+        let prev = c.replace(Some(lane));
+        let r = f();
+        c.set(prev);
+        r
+    })
+}
+
+fn current_lane() -> Option<usize> {
+    LANE_CTX.with(|c| c.get())
+}
+
+/// Bit position of the shard tag inside a sharded fd: `fd =
+/// (shard + 1) << FD_SHARD_SHIFT | seq`. Tag 0 (plain small fds) is the
+/// shared fallback table, which keeps legacy fd numbering byte-identical
+/// on unsharded environments.
+const FD_SHARD_SHIFT: u32 = 32;
 
 struct OpenFile {
     path: String,
@@ -23,12 +53,62 @@ struct OpenFile {
     writable: bool,
 }
 
+/// One open-file table: a shard of [`HostEnv`]'s fd space with its own
+/// lock and contention counters.
+#[derive(Default)]
+struct FdTable {
+    open: Mutex<HashMap<u64, OpenFile>>,
+    opens: AtomicU64,
+    contended: AtomicU64,
+}
+
+impl FdTable {
+    /// Lock the table, counting the acquisitions that had to wait (the
+    /// per-shard lock-contention metric).
+    fn lock(&self) -> MutexGuard<'_, HashMap<u64, OpenFile>> {
+        match self.open.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                self.contended.fetch_add(1, Ordering::Relaxed);
+                self.open.lock().unwrap()
+            }
+        }
+    }
+}
+
+/// Copyable aggregate of [`HostEnv`]'s file-table shard counters for
+/// `RunMetrics`.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct HostIoSnapshot {
+    /// Per-lane shard count (0 = unsharded: shared table only).
+    pub shards: usize,
+    /// `fopen`s placed in per-lane shards.
+    pub sharded_opens: u64,
+    /// `fopen`s that fell back to the shared table (no lane context).
+    pub shared_opens: u64,
+    /// Lock acquisitions that had to wait, summed over every table.
+    pub lock_contention: u64,
+}
+
 /// Host process state backing the landing pads: an in-memory filesystem,
 /// captured standard streams, environment variables, a monotonic clock and
 /// the kernel-split launch hook (paper §3.3).
+///
+/// The open-file table is **sharded per serving lane**
+/// ([`HostEnv::with_shards`]): `fopen` served on lane L places the
+/// handle in shard `L % shards` and tags the returned fd with its shard,
+/// so any later access — including from another lane (cross-lane
+/// handles) — resolves the owning table straight from the fd without
+/// touching the other shards' locks. Opens with no lane context (the
+/// legacy single-threaded server, direct host calls) use the shared
+/// fallback table, whose fd numbering is byte-identical to the
+/// pre-sharding implementation.
 pub struct HostEnv {
     files: Mutex<HashMap<String, Vec<u8>>>,
-    open: Mutex<HashMap<u64, OpenFile>>,
+    /// Shared fallback open-file table (tag 0; legacy fd numbering).
+    shared: FdTable,
+    /// Per-lane open-file shards; empty = unsharded.
+    shards: Vec<FdTable>,
     next_fd: AtomicU64,
     pub stdout: Mutex<Vec<u8>>,
     pub stderr: Mutex<Vec<u8>>,
@@ -48,10 +128,19 @@ impl Default for HostEnv {
 }
 
 impl HostEnv {
+    /// Unsharded host environment (shared open-file table only) — the
+    /// legacy shape, byte-identical fd numbering included.
     pub fn new() -> Self {
+        Self::with_shards(0)
+    }
+
+    /// Host environment with `shards` per-lane open-file tables (the
+    /// loader passes the engine's lane count). `0` disables sharding.
+    pub fn with_shards(shards: usize) -> Self {
         Self {
             files: Mutex::new(HashMap::new()),
-            open: Mutex::new(HashMap::new()),
+            shared: FdTable::default(),
+            shards: (0..shards).map(|_| FdTable::default()).collect(),
             next_fd: AtomicU64::new(16),
             stdout: Mutex::new(Vec::new()),
             stderr: Mutex::new(Vec::new()),
@@ -60,6 +149,33 @@ impl HostEnv {
             clock_ns: AtomicU64::new(1_700_000_000_000_000_000),
             region_launcher: Mutex::new(None),
         }
+    }
+
+    /// Resolve the table an fd lives in from its shard tag. `None` for
+    /// fds carrying a tag no shard backs (stale/forged handles).
+    fn table_for(&self, fd: u64) -> Option<&FdTable> {
+        match (fd >> FD_SHARD_SHIFT) as usize {
+            0 => Some(&self.shared),
+            tag => self.shards.get(tag - 1),
+        }
+    }
+
+    /// File-table shard counters (engine `RunMetrics`).
+    pub fn io_snapshot(&self) -> HostIoSnapshot {
+        let r = Ordering::Relaxed;
+        HostIoSnapshot {
+            shards: self.shards.len(),
+            sharded_opens: self.shards.iter().map(|s| s.opens.load(r)).sum(),
+            shared_opens: self.shared.opens.load(r),
+            lock_contention: self.shared.contended.load(r)
+                + self.shards.iter().map(|s| s.contended.load(r)).sum::<u64>(),
+        }
+    }
+
+    /// Per-shard lock-contention counts (index = shard; shared fallback
+    /// table excluded).
+    pub fn shard_contention(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.contended.load(Ordering::Relaxed)).collect()
     }
 
     pub fn put_file(&self, path: &str, content: &[u8]) {
@@ -87,7 +203,8 @@ impl HostEnv {
             FD_STDOUT => self.stdout.lock().unwrap().extend_from_slice(bytes),
             FD_STDERR => self.stderr.lock().unwrap().extend_from_slice(bytes),
             fd => {
-                let mut open = self.open.lock().unwrap();
+                let Some(table) = self.table_for(fd) else { return -1 };
+                let mut open = table.lock();
                 let Some(of) = open.get_mut(&fd) else { return -1 };
                 if !of.writable {
                     return -1;
@@ -135,7 +252,8 @@ impl HostEnv {
     }
 
     fn read_stream(&self, fd: u64, out: &mut [u8]) -> i64 {
-        let mut open = self.open.lock().unwrap();
+        let Some(table) = self.table_for(fd) else { return -1 };
+        let mut open = table.lock();
         let Some(of) = open.get_mut(&fd) else { return -1 };
         let files = self.files.lock().unwrap();
         let Some(content) = files.get(&of.path) else { return -1 };
@@ -156,28 +274,38 @@ impl HostEnv {
                 return 0; // NULL
             }
         }
-        let fd = self.next_fd.fetch_add(1, Ordering::Relaxed);
         let pos = if mode.starts_with('a') {
             self.files.lock().unwrap().get(path).map(|c| c.len()).unwrap_or(0)
         } else {
             0
         };
-        self.open.lock().unwrap().insert(fd, OpenFile { path: path.to_string(), pos, writable });
+        // Place the handle in the serving lane's shard when one exists;
+        // the fd's tag records the table for all later accesses.
+        let seq = self.next_fd.fetch_add(1, Ordering::Relaxed);
+        let (table, fd) = match current_lane() {
+            Some(lane) if !self.shards.is_empty() => {
+                let shard = lane % self.shards.len();
+                (&self.shards[shard], ((shard as u64 + 1) << FD_SHARD_SHIFT) | seq)
+            }
+            _ => (&self.shared, seq),
+        };
+        table.opens.fetch_add(1, Ordering::Relaxed);
+        table.lock().insert(fd, OpenFile { path: path.to_string(), pos, writable });
         fd as i64
     }
 
     fn fclose(&self, fd: u64) -> i64 {
-        if self.open.lock().unwrap().remove(&fd).is_some() {
-            0
-        } else {
-            -1
+        match self.table_for(fd) {
+            Some(table) if table.lock().remove(&fd).is_some() => 0,
+            _ => -1,
         }
     }
 
     /// `fscanf`-style consumption: read from the current position,
     /// returning the consumed text for the scanner.
     fn remaining(&self, fd: u64) -> String {
-        let open = self.open.lock().unwrap();
+        let Some(table) = self.table_for(fd) else { return String::new() };
+        let open = table.lock();
         let Some(of) = open.get(&fd) else { return String::new() };
         let files = self.files.lock().unwrap();
         files
@@ -187,13 +315,33 @@ impl HostEnv {
     }
 
     fn advance(&self, fd: u64, by: usize) {
-        if let Some(of) = self.open.lock().unwrap().get_mut(&fd) {
-            of.pos += by;
+        if let Some(table) = self.table_for(fd) {
+            if let Some(of) = table.lock().get_mut(&fd) {
+                of.pos += by;
+            }
         }
     }
 }
 
 // ---- the C format machinery (printf/scanf subset the benchmarks use) ----
+
+/// Conversions the format machinery could not honor and degraded to
+/// their literal text instead of aborting the run (glibc prints unknown
+/// conversions literally). Covers unsupported `%` specifiers in
+/// [`parse_format`] and argument/conversion mismatches in the device
+/// `snprintf` ([`crate::libc_gpu::stdio`]).
+static FORMAT_WARNINGS: AtomicU64 = AtomicU64::new(0);
+
+/// Total format degradations so far (process-wide, monotonic).
+pub fn format_warnings() -> u64 {
+    FORMAT_WARNINGS.load(Ordering::Relaxed)
+}
+
+/// Record one degraded conversion (also used by the device-side
+/// `snprintf` on argument/conversion mismatches).
+pub fn count_format_warning() {
+    FORMAT_WARNINGS.fetch_add(1, Ordering::Relaxed);
+}
 
 /// One parsed `%` conversion.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -210,6 +358,11 @@ pub enum Conv {
 /// Split a C format string into literal runs and conversions. Width and
 /// precision are parsed (and applied for floats) but length modifiers are
 /// accepted and ignored — device ints are 64-bit anyway.
+///
+/// Unsupported conversions (`%q`, a trailing `%`, ...) degrade
+/// glibc-style: the conversion's literal text is emitted unchanged and a
+/// process-wide warning counter ([`format_warnings`]) is bumped — a bad
+/// format string in one call never aborts the whole run.
 pub fn parse_format(fmt: &str) -> Vec<(String, Option<(Conv, Option<usize>, Option<usize>)>)> {
     let mut out = Vec::new();
     let mut lit = String::new();
@@ -221,6 +374,7 @@ pub fn parse_format(fmt: &str) -> Vec<(String, Option<(Conv, Option<usize>, Opti
             i += 1;
             continue;
         }
+        let pct_start = i;
         i += 1;
         // flags/width
         let mut width = String::new();
@@ -251,7 +405,16 @@ pub fn parse_format(fmt: &str) -> Vec<(String, Option<(Conv, Option<usize>, Opti
             Some('s') => Conv::Str,
             Some('c') => Conv::Char,
             Some('%') => Conv::Percent,
-            other => panic!("unsupported conversion %{other:?} in {fmt:?}"),
+            other => {
+                // Unsupported conversion: emit its literal text
+                // (including the consumed flags/width/length chars) and
+                // keep going instead of aborting the run.
+                count_format_warning();
+                let end = if other.is_some() { i + 1 } else { i };
+                lit.extend(&bytes[pct_start..end.min(bytes.len())]);
+                i = end;
+                continue;
+            }
         };
         i += 1;
         out.push((std::mem::take(&mut lit), Some((conv, width.parse().ok(), prec))));
@@ -569,6 +732,21 @@ pub fn synthesize_batch(kind: HostFnKind) -> Option<BatchWrapperFn> {
     }
 }
 
+/// Register the scalar pad for `(mangled, kind)` plus its batched
+/// variant (when one exists), marking kernel-split launch pads in the
+/// registry so the engine routes them to the dedicated launch executor.
+/// Shared by [`register_common`] and the RPC generation pass.
+pub fn register_pad(registry: &WrapperRegistry, mangled: &str, kind: HostFnKind) -> u64 {
+    let id = registry.register(mangled, synthesize(kind));
+    if let Some(batch) = synthesize_batch(kind) {
+        registry.register_batch(mangled, batch);
+    }
+    if kind == HostFnKind::LaunchKernel {
+        registry.mark_launch(mangled);
+    }
+    id
+}
+
 /// Register the canonical signatures the hand-written apps and tests use.
 /// (IR programs get theirs registered by the RPC pass instead.)
 pub fn register_common(registry: &WrapperRegistry) -> HashMap<&'static str, u64> {
@@ -596,10 +774,7 @@ pub fn register_common(registry: &WrapperRegistry) -> HashMap<&'static str, u64>
         ("__time", HostFnKind::Time),
         ("__launch_kernel_i_i", HostFnKind::LaunchKernel),
     ] {
-        ids.insert(mangled, registry.register(mangled, synthesize(kind)));
-        if let Some(batch) = synthesize_batch(kind) {
-            registry.register_batch(mangled, batch);
-        }
+        ids.insert(mangled, register_pad(registry, mangled, kind));
     }
     ids
 }
@@ -758,6 +933,57 @@ mod tests {
         assert!(synthesize_batch(HostFnKind::Fopen).is_none());
         assert!(synthesize_batch(HostFnKind::Scanf { has_fd: true }).is_none());
         assert!(synthesize_batch(HostFnKind::Exit).is_none());
+    }
+
+    #[test]
+    fn unsupported_conversion_degrades_to_literal_text() {
+        let before = format_warnings();
+        let frame = RpcFrame { args: vec![cstr_arg("a=%d b=%q c=%s"), HostArg::Val(1), cstr_arg("x")] };
+        let fmt = frame.cstr(0);
+        // %q is not supported: its literal text survives, the following
+        // conversions still consume their arguments in order.
+        assert_eq!(format_c(&frame, &fmt, 1), "a=1 b=%q c=x");
+        assert!(format_warnings() > before, "degradation is counted");
+        // A trailing bare '%' degrades too instead of panicking.
+        let frame = RpcFrame { args: vec![HostArg::Val(7)] };
+        assert_eq!(format_c(&frame, "%d 100%", 0), "7 100%");
+    }
+
+    #[test]
+    fn sharded_fopen_tags_fds_and_resolves_cross_lane() {
+        let env = HostEnv::with_shards(4);
+        env.put_file("in.txt", b"payload");
+        // No lane context: shared table, legacy numbering.
+        let shared_fd = env.fopen("in.txt", "r") as u64;
+        assert!(shared_fd < 1 << FD_SHARD_SHIFT);
+        // Opened under lane 2's context: lands in shard 2, tagged fd.
+        let fd = with_lane_ctx(2, || env.fopen("out.txt", "w")) as u64;
+        assert_eq!(fd >> FD_SHARD_SHIFT, 3, "shard tag = lane % shards + 1");
+        // Cross-lane use: any lane (or none) resolves the handle from
+        // the fd tag alone.
+        with_lane_ctx(0, || assert_eq!(env.write_stream(fd, b"abc"), 3));
+        assert_eq!(env.write_stream(fd, b"de"), 2);
+        assert_eq!(env.fclose(fd), 0);
+        assert_eq!(env.file("out.txt").unwrap(), b"abcde");
+        let snap = env.io_snapshot();
+        assert_eq!(snap.shards, 4);
+        assert_eq!(snap.sharded_opens, 1);
+        assert_eq!(snap.shared_opens, 1);
+        assert_eq!(env.shard_contention().len(), 4);
+        // A forged tag no shard backs is rejected, not a panic.
+        assert_eq!(env.fclose((99u64 << FD_SHARD_SHIFT) | 5), -1);
+    }
+
+    #[test]
+    fn unsharded_env_keeps_legacy_fd_numbering() {
+        let env = HostEnv::new();
+        env.put_file("a", b"1");
+        // Even with a lane context set, an unsharded env uses the shared
+        // table and plain sequential fds (bit-identical legacy shape).
+        let fd = with_lane_ctx(3, || env.fopen("a", "r"));
+        assert_eq!(fd, 16);
+        assert_eq!(env.io_snapshot().shards, 0);
+        assert_eq!(env.io_snapshot().shared_opens, 1);
     }
 
     #[test]

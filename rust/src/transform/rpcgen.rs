@@ -62,12 +62,10 @@ fn rewrite_body(
                 };
                 let (specs, tags, summary) = build_specs(m, defs, callee, kind, args);
                 let mangled = mangle(callee, &tags);
-                let callee_id = registry.register(&mangled, wrappers::synthesize(kind));
-                // Order-preserving-append callees also get a batched pad
-                // so the engine can coalesce same-callee sweeps.
-                if let Some(batch) = wrappers::synthesize_batch(kind) {
-                    registry.register_batch(&mangled, batch);
-                }
+                // Registers the scalar pad, the batched variant for
+                // order-preserving-append callees, and marks launch pads
+                // for the engine's dedicated executor.
+                let callee_id = wrappers::register_pad(registry, &mangled, kind);
                 report.rewritten.push((
                     fname.to_string(),
                     callee.clone(),

@@ -63,22 +63,50 @@ impl Args {
         self.get(name).unwrap_or(default)
     }
 
+    /// Fallible typed accessor: `Ok(None)` when the option is absent,
+    /// `Err(message)` when the value does not parse.
+    pub fn try_get<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        expected: &str,
+    ) -> Result<Option<T>, String> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| format!("--{name} expects {expected}, got {v:?}")),
+        }
+    }
+
+    /// A malformed option value is a *usage* error: print the offending
+    /// flag and exit cleanly (status 2) instead of panicking with a
+    /// backtrace.
+    fn usage_bail(msg: &str) -> ! {
+        eprintln!("error: {msg}");
+        eprintln!("run `gpu-first` without arguments for usage");
+        std::process::exit(2);
+    }
+
     pub fn get_usize(&self, name: &str, default: usize) -> usize {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        match self.try_get(name, "an integer") {
+            Ok(v) => v.unwrap_or(default),
+            Err(msg) => Self::usage_bail(&msg),
+        }
     }
 
     pub fn get_u64(&self, name: &str, default: u64) -> u64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects an integer, got {v:?}")))
-            .unwrap_or(default)
+        match self.try_get(name, "an integer") {
+            Ok(v) => v.unwrap_or(default),
+            Err(msg) => Self::usage_bail(&msg),
+        }
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> f64 {
-        self.get(name)
-            .map(|v| v.parse().unwrap_or_else(|_| panic!("--{name} expects a number, got {v:?}")))
-            .unwrap_or(default)
+        match self.try_get(name, "a number") {
+            Ok(v) => v.unwrap_or(default),
+            Err(msg) => Self::usage_bail(&msg),
+        }
     }
 }
 
@@ -117,6 +145,16 @@ mod tests {
         assert_eq!(a.get_f64("x", 0.0), 2.5);
         assert_eq!(a.get_usize("missing", 7), 7);
         assert_eq!(a.get_or("mode", "default"), "default");
+    }
+
+    #[test]
+    fn try_get_reports_offending_flag_without_panicking() {
+        let a = Args::parse(&sv(&["--teams", "lots", "--x", "1.5"]), &[]);
+        let err = a.try_get::<usize>("teams", "an integer").unwrap_err();
+        assert!(err.contains("--teams"), "names the offending flag: {err}");
+        assert!(err.contains("lots"), "echoes the bad value: {err}");
+        assert_eq!(a.try_get::<f64>("x", "a number").unwrap(), Some(1.5));
+        assert_eq!(a.try_get::<usize>("missing", "an integer").unwrap(), None);
     }
 
     #[test]

@@ -99,7 +99,7 @@ fn prop_concurrent_engine_matches_serial_single_slot() {
             arena,
             Arc::clone(&reg),
             Arc::clone(&env),
-            EngineConfig { lanes, workers, batch: true },
+            EngineConfig { lanes, workers, ..EngineConfig::default() },
         );
         std::thread::scope(|s| {
             for (t, ops) in plan.iter().enumerate() {
@@ -153,7 +153,7 @@ fn more_callers_than_lanes_all_complete() {
         arena,
         Arc::clone(&reg),
         env,
-        EngineConfig { lanes: 2, workers: 1, batch: true },
+        EngineConfig { lanes: 2, workers: 1, ..EngineConfig::default() },
     );
     std::thread::scope(|s| {
         for t in 0..8u64 {

@@ -1,0 +1,196 @@
+//! Kernel-split launch executor: the deadlock regression and
+//! engine/serial equivalence (companion to `engine_equivalence.rs`).
+//!
+//! The bug: through PR 1, a kernel-split launch RPC ran the whole kernel
+//! inside the claiming server thread, so a kernel that itself issued
+//! RPCs needed `workers >= 2` — at the default `lanes=1, workers=1` it
+//! deadlocked (spun until the client timeout). The dedicated launch
+//! executor plus the arena's launch slot remove the constraint; these
+//! tests pin the fix at the whole-session level:
+//!
+//! * a kernel-split region issuing `fprintf` RPCs completes — with
+//!   correct output — at `lanes=1, workers=1, launch-threads=1`;
+//! * random engine shapes produce the same observable output as the
+//!   semantic serial reference (equivalence property);
+//! * for kernels that issue no RPCs, the degenerate engine's output is
+//!   byte-identical to the paper's legacy single-threaded server.
+
+use gpu_first::coordinator::{Config, GpuFirstSession};
+use gpu_first::gpu::grid::{AllocatorKind, Device};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::ir::interp::ProgramEnv;
+use gpu_first::rpc::wrappers::register_common;
+use gpu_first::rpc::{HostEnv, RpcServer, WrapperRegistry};
+use gpu_first::transform::CompileOptions;
+use gpu_first::util::prop::{check, Gen};
+use std::sync::Arc;
+
+/// Run `f` on a helper thread and fail loudly if it does not finish —
+/// a regressed launch deadlock must show up as this panic, not as a
+/// CI job spinning until the 2B-spin client timeout.
+fn with_timeout<T: Send + 'static>(secs: u64, f: impl FnOnce() -> T + Send + 'static) -> T {
+    let (tx, rx) = std::sync::mpsc::channel();
+    std::thread::spawn(move || {
+        let _ = tx.send(f());
+    });
+    rx.recv_timeout(std::time::Duration::from_secs(secs))
+        .expect("deadlock: kernel-split launch with in-kernel RPCs did not complete")
+}
+
+/// A kernel-split program whose region body issues one `fprintf` RPC per
+/// iteration (to stderr, the shared stream).
+fn rpc_kernel_src(iters: usize) -> String {
+    format!(
+        r#"
+global @fmt const 6 "k=%d\n"
+
+func @main() -> i64 {{
+  parallel {{
+    for.team %i = 0 to {iters} step 1 {{
+      call fprintf(2, @fmt, %i)
+    }}
+  }}
+  return 0
+}}
+"#
+    )
+}
+
+fn sorted_lines(s: &str) -> Vec<String> {
+    let mut v: Vec<String> = s.lines().map(|l| l.to_string()).collect();
+    v.sort();
+    v
+}
+
+fn expected_lines(iters: usize) -> Vec<String> {
+    let mut v: Vec<String> = (0..iters).map(|i| format!("k={i}")).collect();
+    v.sort();
+    v
+}
+
+/// Run `src` through a full session at the given engine shape; returns
+/// (stderr, stdout, launches).
+fn run_session(
+    src: &str,
+    teams: usize,
+    threads: usize,
+    lanes: usize,
+    workers: usize,
+    launch_threads: usize,
+) -> (String, String, u64) {
+    let cfg = Config {
+        mem: MemConfig::small(),
+        teams,
+        threads_per_team: threads,
+        rpc_lanes: lanes,
+        rpc_workers: workers,
+        rpc_launch_threads: launch_threads,
+        ..Default::default()
+    };
+    let module = gpu_first::ir::parser::parse_module(src).expect("parse");
+    let mut session = GpuFirstSession::start(cfg);
+    let (ret, metrics) = session.execute(module, CompileOptions::default(), &[]).expect("execute");
+    assert_eq!(ret, 0);
+    let out = (session.host.stderr_string(), session.host.stdout_string());
+    let launches = metrics.rpc_engine.expect("engine metrics").launches;
+    assert_eq!(metrics.kernel_launches, launches, "every launch rode the executor");
+    session.stop();
+    (out.0, out.1, launches)
+}
+
+#[test]
+fn in_kernel_fprintf_completes_at_default_single_slot_shape() {
+    // THE regression: lanes=1, workers=1, launch-threads=1 (the paper's
+    // bit-identical default) with a kernel that issues RPCs. Pre-fix
+    // this deadlocked; now it must complete with correct output.
+    let (stderr, stdout, launches) = with_timeout(300, || {
+        run_session(&rpc_kernel_src(16), 2, 4, 1, 1, 1)
+    });
+    assert_eq!(sorted_lines(&stderr), expected_lines(16));
+    assert_eq!(stdout, "");
+    assert_eq!(launches, 1);
+}
+
+#[test]
+fn prop_engine_shapes_match_serial_reference() {
+    // Equivalence property: whatever the lanes × workers ×
+    // launch-threads shape, a kernel-split region issuing fprintf RPCs
+    // produces exactly the semantic reference output (each iteration's
+    // line exactly once; stream order is the one undefined observable).
+    check("launch executor preserves in-kernel RPC output", 6, |g: &mut Gen| {
+        let iters = g.usize(1..24);
+        let teams = g.usize(1..3);
+        let threads = g.usize(1..5);
+        let lanes = g.usize(1..4);
+        let workers = g.usize(1..3);
+        let launch_threads = g.usize(1..3);
+        let src = rpc_kernel_src(iters);
+        let (stderr, _, launches) = with_timeout(300, move || {
+            run_session(&src, teams, threads, lanes, workers, launch_threads)
+        });
+        assert_eq!(
+            sorted_lines(&stderr),
+            expected_lines(iters),
+            "diverged at lanes={lanes} workers={workers} launch_threads={launch_threads}"
+        );
+        assert_eq!(launches, 1);
+    });
+}
+
+#[test]
+fn no_rpc_kernel_output_bit_identical_to_legacy_server() {
+    // Acceptance criterion: for kernels that issue no RPCs, the default
+    // engine shape's output is byte-identical to the paper's legacy
+    // single-threaded single-slot server.
+    const SRC: &str = r#"
+global @out 8192
+global @fmt const 13 "checksum=%d\n"
+
+func @main() -> i64 {
+  parallel {
+    for.team %i = 0 to 1024 step 1 {
+      %off = mul %i, 8
+      %p = gep @out, %off
+      %v = mul %i, 7
+      store.8 %v, %p
+    }
+  }
+  %acc = alloca 8
+  store.8 0, %acc
+  for %i = 0 to 1024 step 1 {
+    %off = mul %i, 8
+    %p = gep @out, %off
+    %v = load.8 %p
+    %a = load.8 %acc
+    %a2 = add %a, %v
+    store.8 %a2, %acc
+  }
+  %s = load.8 %acc
+  call printf(@fmt, %s)
+  return 0
+}
+"#;
+    let (teams, threads) = (2usize, 8usize);
+
+    // Engine path: the default lanes=1, workers=1, launch-threads=1.
+    let (stderr_e, stdout_e, launches) = run_session(SRC, teams, threads, 1, 1, 1);
+
+    // Legacy reference: the paper's single-threaded RpcServer over the
+    // single-slot arena, same grid, same allocator.
+    let mut module = gpu_first::ir::parser::parse_module(SRC).expect("parse");
+    let registry = Arc::new(WrapperRegistry::new());
+    register_common(&registry);
+    gpu_first::transform::compile(&mut module, &registry, CompileOptions::default()).expect("compile");
+    let device = Arc::new(Device::new(MemConfig::small(), AllocatorKind::Balanced(Default::default())));
+    let host = Arc::new(HostEnv::new());
+    let server = RpcServer::start(Arc::clone(&device.mem), Arc::clone(&registry), Arc::clone(&host));
+    let env = ProgramEnv::load_with_grid(module, device, registry, Arc::clone(&host), teams, threads);
+    let (ret, _) = env.run_main(&[]);
+    server.stop();
+    assert_eq!(ret, 0);
+
+    assert_eq!(launches, 1);
+    assert_eq!(stdout_e, host.stdout_string(), "stdout must be byte-identical");
+    assert_eq!(stderr_e, host.stderr_string(), "stderr must be byte-identical");
+    assert_eq!(stdout_e, format!("checksum={}\n", 7 * (1023 * 1024) / 2));
+}
