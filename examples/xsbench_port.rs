@@ -45,7 +45,9 @@ fn main() {
                 format!("{lm:?}").to_lowercase(),
                 fmt_ns(cpu.modeled_ns),
                 fmt_ns(gf.modeled_ns),
-                offload.map(|o| fmt_ns(o.modeled_ns)).unwrap_or_else(|| "n/a (unimplemented)".into()),
+                offload
+                    .map(|o| fmt_ns(o.modeled_ns))
+                    .unwrap_or_else(|| "n/a (unimplemented)".into()),
                 fmt_ratio(speedup),
                 validated.to_string(),
             ]);

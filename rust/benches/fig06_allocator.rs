@@ -6,7 +6,9 @@
 //! calibrated per-op cost) and the REAL wallclock of our actual allocator
 //! implementations under the same concurrent stress on this host.
 
-use gpu_first::alloc::{AllocCtx, BalancedAllocator, BalancedConfig, DeviceAllocator, GenericAllocator};
+use gpu_first::alloc::{
+    AllocCtx, BalancedAllocator, BalancedConfig, DeviceAllocator, GenericAllocator,
+};
 use gpu_first::gpu::grid::{AllocatorKind, Device, LaunchConfig};
 use gpu_first::gpu::memory::{MemConfig, GLOBAL_BASE};
 use gpu_first::perfmodel::a100;
@@ -17,7 +19,11 @@ const ALLOCS_PER_THREAD: usize = 4;
 const ALLOC_SIZE: u64 = 256;
 
 /// Stress one allocator on the simulator; returns (real ns, stats).
-fn stress(kind: AllocatorKind, teams: usize, threads: usize) -> (f64, gpu_first::alloc::AllocStats) {
+fn stress(
+    kind: AllocatorKind,
+    teams: usize,
+    threads: usize,
+) -> (f64, gpu_first::alloc::AllocStats) {
     let dev = Device::new(MemConfig::default(), kind);
     let t0 = std::time::Instant::now();
     dev.launch(LaunchConfig::new(teams, threads), |ctx| {

@@ -20,14 +20,36 @@ use gpu_first::util::table::Table;
 use gpu_first::util::fmt_ns;
 use std::sync::Arc;
 
-const N_CALLS: usize = 1000;
+/// Quick mode (`FIG07_QUICK=1`): CI's bench-smoke job shrinks every
+/// iteration count so the whole report runs in seconds while still
+/// exercising the full engine surface.
+fn quick() -> bool {
+    std::env::var("FIG07_QUICK").is_ok()
+}
+
+fn n_calls() -> usize {
+    if quick() {
+        100
+    } else {
+        1000
+    }
+}
+
 /// Sweep shape: RPC-dense workload (per-thread `fprintf`) driven by
-/// this many concurrent simulated threads, `SWEEP_CALLS` calls each.
+/// this many concurrent simulated threads, `sweep_calls()` calls each.
 const SWEEP_CALLERS: usize = 8;
-const SWEEP_CALLS: usize = 1000;
+
+fn sweep_calls() -> usize {
+    if quick() {
+        100
+    } else {
+        1000
+    }
+}
 
 fn main() {
     println!("== E2 / Fig. 7: time spent resolving an fprintf RPC ==");
+    let n_calls = n_calls();
 
     // Full-stack run: unmodified "legacy" IR source through the compiler.
     let src = format!(
@@ -38,7 +60,7 @@ global @buf 128
 func @main() -> i64 {{
   %p = gep @buf, 0
   call strcpy(%p, @msg)
-  for %i = 0 to {N_CALLS} step 1 {{
+  for %i = 0 to {n_calls} step 1 {{
     call fprintf(2, @fmt, %p)
   }}
   return 0
@@ -59,7 +81,7 @@ global @msg const 6 "hello"
     let wall = t0.elapsed().as_nanos() as f64;
     assert_eq!(ret, 0);
     let n_rpc = metrics.main_stats.rpc_calls;
-    assert_eq!(n_rpc as usize, N_CALLS, "strcpy is native; only fprintf goes through RPC");
+    assert_eq!(n_rpc as usize, n_calls, "strcpy is native; only fprintf goes through RPC");
     println!(
         "full stack: {} RPCs, host received {} bytes of stderr, real {} total ({} / call)",
         n_rpc,
@@ -78,7 +100,7 @@ global @msg const 6 "hello"
     mem.write_cstr(fmt_addr, "fread reads: %s.\n");
     let mut real_total = 0f64;
     let mut bd = Default::default();
-    for _ in 0..N_CALLS {
+    for _ in 0..n_calls {
         let mut info = RpcArgInfo::new();
         info.add_val(2);
         info.add_ref(fmt_addr, ArgMode::Read, 18, 0);
@@ -124,7 +146,7 @@ global @msg const 6 "hello"
     println!(
         "\nmodeled total {} / call (paper: 975 us); REAL protocol round-trip on this host: {} / call",
         fmt_ns(total),
-        fmt_ns(real_total / N_CALLS as f64)
+        fmt_ns(real_total / n_calls as f64)
     );
     assert!((total - a100::RPC_TOTAL_NS).abs() / a100::RPC_TOTAL_NS < 0.1);
     session.stop();
@@ -169,7 +191,7 @@ fn sweep_point(lanes: usize, workers: usize) -> (f64, Option<EngineSnapshot>) {
                 mem.write_cstr(fmt_a, "fread reads: %s.\n");
                 mem.write_cstr(buf_a, &"x".repeat(127));
                 let mut client = RpcClient::for_team(mem, arena, t);
-                for _ in 0..SWEEP_CALLS {
+                for _ in 0..sweep_calls() {
                     let mut info = RpcArgInfo::new();
                     info.add_val(2);
                     info.add_ref(fmt_a, ArgMode::Read, 18, 0);
@@ -181,7 +203,7 @@ fn sweep_point(lanes: usize, workers: usize) -> (f64, Option<EngineSnapshot>) {
     });
     let secs = t0.elapsed().as_secs_f64();
     // Every call appended "fread reads: " + 127 x's + ".\n" = 142 bytes.
-    let calls = SWEEP_CALLERS * SWEEP_CALLS;
+    let calls = SWEEP_CALLERS * sweep_calls();
     assert_eq!(
         env.stderr.lock().unwrap().len(),
         142 * calls,
@@ -205,7 +227,8 @@ fn sweep_point(lanes: usize, workers: usize) -> (f64, Option<EngineSnapshot>) {
 /// report line for BENCH_*.json trajectory tracking.
 fn sweep(legacy_modeled_total_ns: f64) {
     println!(
-        "\n== engine sweep: {SWEEP_CALLERS} callers × {SWEEP_CALLS} per-thread fprintf RPCs =="
+        "\n== engine sweep: {SWEEP_CALLERS} callers × {} per-thread fprintf RPCs ==",
+        sweep_calls()
     );
 
     // Degenerate-case parity: an engine at 1×1 must reproduce the legacy
@@ -330,13 +353,101 @@ fn sweep(legacy_modeled_total_ns: f64) {
         }
     }
     t.print();
+
+    // Launch-ring sweep: N concurrent launch sessions over a ring of
+    // 1 / 2 / 4 slots (executor pool matching the ring). Launch pads
+    // sleep ~1 ms to model a short kernel; a wider ring must raise
+    // completed launches/sec roughly with its width until the session
+    // count is the limit.
+    println!("\n== launch-ring sweep: 4 concurrent launch sessions ==");
+    let mut ring_table = Table::new(
+        "kernel-split launch throughput vs ring width",
+        &["launch_slots", "launches/s", "speedup", "ring_peak"],
+    );
+    let mut ring_points: Vec<Json> = Vec::new();
+    let mut ring_baseline = 0.0f64;
+    for &slots in &[1usize, 2, 4] {
+        let (lps, peak) = ring_point(slots, if quick() { 10 } else { 50 });
+        if slots == 1 {
+            ring_baseline = lps;
+        }
+        let speedup = lps / ring_baseline;
+        ring_table.row(&[
+            slots.to_string(),
+            format!("{lps:.0}"),
+            format!("{speedup:.2}x"),
+            peak.to_string(),
+        ]);
+        ring_points.push(Json::obj(vec![
+            ("launch_slots", Json::num(slots as f64)),
+            ("launches_per_sec", Json::num(lps)),
+            ("speedup_vs_single_slot", Json::num(speedup)),
+            ("ring_peak", Json::num(peak as f64)),
+        ]));
+    }
+    ring_table.print();
+
     let report = Json::obj(vec![
         ("bench", Json::str("fig07_rpc_sweep")),
+        ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
         ("callers", Json::num(SWEEP_CALLERS as f64)),
-        ("calls_per_caller", Json::num(SWEEP_CALLS as f64)),
+        ("calls_per_caller", Json::num(sweep_calls() as f64)),
         ("baseline_calls_per_sec", Json::num(baseline_cps)),
         ("launch_liveness_1x1_ns", Json::num(launch_1x1_ns)),
         ("points", Json::Arr(points)),
+        ("launch_ring_points", Json::Arr(ring_points)),
     ]);
     println!("\nJSON {report}");
+    // CI's bench-smoke job exports FIG07_JSON=BENCH_fig07.json and
+    // uploads the file as the perf-trajectory artifact.
+    if let Ok(path) = std::env::var("FIG07_JSON") {
+        std::fs::write(&path, format!("{report}\n")).expect("write bench JSON");
+        println!("wrote {path}");
+    }
+}
+
+/// One launch-ring sweep point: 4 launch sessions issue `per_session`
+/// kernel-split launches each (1 ms pads) over a `slots`-wide ring with
+/// a matching executor pool. Returns (launches/sec, ring-occupancy
+/// peak).
+fn ring_point(slots: usize, per_session: usize) -> (f64, u64) {
+    const SESSIONS: usize = 4;
+    let mem = Arc::new(DeviceMemory::new(MemConfig::default()));
+    let arena = ArenaLayout::for_shape(1, slots);
+    let registry = Arc::new(WrapperRegistry::new());
+    let env = Arc::new(HostEnv::new());
+    let id = registry.register(
+        "__sleepy_launch_i",
+        Box::new(|f, _| {
+            std::thread::sleep(std::time::Duration::from_millis(1));
+            f.val(0) as i64
+        }),
+    );
+    registry.mark_launch("__sleepy_launch_i");
+    let engine = RpcEngine::start(
+        Arc::clone(&mem),
+        arena,
+        Arc::clone(&registry),
+        env,
+        EngineConfig { launch_slots: slots, launch_threads: slots, ..EngineConfig::default() },
+    );
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for session in 0..SESSIONS {
+            let mem = &mem;
+            s.spawn(move || {
+                let mut client = RpcClient::for_launch_session(mem, arena, session);
+                for k in 0..per_session {
+                    let mut info = RpcArgInfo::new();
+                    info.add_val(k as u64);
+                    assert_eq!(client.call(id, &info, None), k as i64);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let snap = engine.metrics.snapshot();
+    assert_eq!(snap.launches as usize, SESSIONS * per_session, "every launch completed");
+    engine.stop();
+    ((SESSIONS * per_session) as f64 / secs, snap.ring_peak)
 }

@@ -42,7 +42,9 @@ pub enum AllocError {
 impl fmt::Display for AllocError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            AllocError::OutOfMemory { requested } => write!(f, "out of device heap ({requested} B)"),
+            AllocError::OutOfMemory { requested } => {
+                write!(f, "out of device heap ({requested} B)")
+            }
             AllocError::OutOfChunk { chunk, requested } => {
                 write!(f, "chunk {chunk} exhausted ({requested} B requested)")
             }

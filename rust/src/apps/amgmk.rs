@@ -86,7 +86,8 @@ pub fn run(mode: Mode, w: &AmgmkWorkload) -> AppResult {
         Mode::Cpu => {
             for _ in 0..w.sweeps {
                 let xr = &x;
-                let next = super::xsbench::parallel_map_cpu(r, |row| relax_row(&m, k, xr, row) as f64);
+                let next =
+                    super::xsbench::parallel_map_cpu(r, |row| relax_row(&m, k, xr, row) as f64);
                 x = next.into_iter().map(|v| v as f32).collect();
                 count_sweep(&mut stats, r as u64, k as u64);
             }
@@ -191,7 +192,8 @@ mod tests {
                 .map(|row| {
                     let mut ax = 0f32;
                     for s in 0..w.ell_width {
-                        ax += m.vals[row * w.ell_width + s] * x[m.cols[row * w.ell_width + s] as usize];
+                        ax += m.vals[row * w.ell_width + s]
+                            * x[m.cols[row * w.ell_width + s] as usize];
                     }
                     ((m.b[row] - ax) as f64).powi(2)
                 })
@@ -200,7 +202,8 @@ mod tests {
         };
         let mut x = x0.clone();
         for _ in 0..6 {
-            let next: Vec<f32> = (0..w.rows).map(|row| relax_row(&m, w.ell_width, &x, row)).collect();
+            let next: Vec<f32> =
+                (0..w.rows).map(|row| relax_row(&m, w.ell_width, &x, row)).collect();
             x = next;
         }
         assert!(res(&x) < 0.2 * res(&x0), "{} vs {}", res(&x), res(&x0));

@@ -146,7 +146,15 @@ pub fn run(mode: Mode, layout: Layout, w: &InterleavedWorkload) -> AppResult {
             common::gpu_modeled_ns(&scaled, active, 1) + a100::KERNEL_SPLIT_RPC_NS
         }
     };
-    AppResult { app: "interleaved".into(), mode, workload, modeled_ns, wall_ns, checksum: cs, stats }
+    AppResult {
+        app: "interleaved".into(),
+        mode,
+        workload,
+        modeled_ns,
+        wall_ns,
+        checksum: cs,
+        stats,
+    }
 }
 
 #[cfg(test)]

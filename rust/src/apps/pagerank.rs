@@ -73,8 +73,9 @@ pub fn run(mode: Mode, w: &PagerankWorkload) -> AppResult {
         Mode::Cpu => {
             for _ in 0..w.iterations {
                 let r = &rank;
-                let next =
-                    super::xsbench::parallel_map_cpu(n, |row| propagate_row(&vals, &cols, k, r, row) as f64);
+                let next = super::xsbench::parallel_map_cpu(n, |row| {
+                    propagate_row(&vals, &cols, k, r, row) as f64
+                });
                 rank = next.into_iter().map(|v| v as f32).collect();
                 count_iter(&mut stats, n as u64, k as u64);
             }

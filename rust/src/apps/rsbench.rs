@@ -68,7 +68,8 @@ pub fn eval(data: &RsData, i: usize) -> f32 {
     let mut acc = 0f32;
     for k in 0..WINDOW {
         let p = data.win[i * WINDOW + k] as usize * 4;
-        let (nr, ni, pr, pi) = (data.poles[p], data.poles[p + 1], data.poles[p + 2], data.poles[p + 3]);
+        let (nr, ni, pr, pi) =
+            (data.poles[p], data.poles[p + 1], data.poles[p + 2], data.poles[p + 3]);
         let dr = e - pr;
         let di = -pi;
         let den = (dr * dr + di * di).max(1e-30);
@@ -188,7 +189,9 @@ pub fn run(mode: Mode, lm: LookupMode, w: &RsWorkload) -> AppResult {
 
     let wall_ns = t0.elapsed().as_nanos() as f64;
     let modeled_ns = match mode {
-        Mode::Cpu => common::cpu_modeled_ns(&common::scale_stats(&stats, BATCHES), common::CPU_THREADS),
+        Mode::Cpu => {
+            common::cpu_modeled_ns(&common::scale_stats(&stats, BATCHES), common::CPU_THREADS)
+        }
         _ => {
             let mut stats = common::scale_stats(&stats, BATCHES);
             let active = match lm {

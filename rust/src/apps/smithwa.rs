@@ -202,7 +202,8 @@ mod tests {
         // Paper: "without the balanced allocator the performance is
         // dominated by the massively parallel allocations".
         let w = SmithwaWorkload { length_exp: 20, threads: 64 };
-        let bal = run_with_allocator(Mode::GpuFirst, &w, AllocatorKind::Balanced(Default::default()));
+        let bal =
+            run_with_allocator(Mode::GpuFirst, &w, AllocatorKind::Balanced(Default::default()));
         let vendor = run_with_allocator(Mode::GpuFirst, &w, AllocatorKind::Vendor);
         assert!(
             vendor.modeled_ns > 1.5 * bal.modeled_ns,

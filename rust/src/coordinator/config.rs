@@ -11,13 +11,17 @@ pub struct Config {
     pub threads_per_team: usize,
     pub allocator: AllocatorKind,
     pub mem: MemConfig,
-    /// RPC mailbox lanes (`--rpc-lanes`); 1 = the paper's single slot.
+    /// RPC mailbox lanes (`--rpc-lanes`, or `--rpc-lanes auto` to size
+    /// from the team count); 1 = the paper's single slot.
     pub rpc_lanes: usize,
     /// Host RPC poll worker threads (`--rpc-workers`).
     pub rpc_workers: usize,
     /// Dedicated kernel-split launch executor threads
     /// (`--rpc-launch-threads`).
     pub rpc_launch_threads: usize,
+    /// Launch ring width (`--rpc-launch-slots`): kernel-split launches
+    /// that can be in flight at once; 1 = the single dedicated slot.
+    pub rpc_launch_slots: usize,
     /// Per-lane mailbox DATA bytes (`--rpc-data-cap`); `None` uses the
     /// lane-count default (1 MiB legacy single lane, 256 KiB per
     /// multi-lane slot).
@@ -39,6 +43,7 @@ impl Default for Config {
             rpc_lanes: 1,
             rpc_workers: 1,
             rpc_launch_threads: 1,
+            rpc_launch_slots: 1,
             rpc_data_cap: None,
             rpc_batch: true,
             verbose: false,
@@ -49,7 +54,8 @@ impl Default for Config {
 impl Config {
     /// Build from CLI arguments:
     /// `--teams N --threads N --allocator generic|vendor|balanced[N,M]
-    ///  --heap-mb N --rpc-lanes N --rpc-workers N --rpc-launch-threads N
+    ///  --heap-mb N --rpc-lanes N|auto --rpc-workers N
+    ///  --rpc-launch-threads N --rpc-launch-slots N
     ///  --rpc-data-cap BYTES --no-rpc-batch --verbose`.
     pub fn from_args(args: &Args) -> Result<Self, String> {
         // Numeric flags parse through the fallible accessor so every
@@ -64,18 +70,14 @@ impl Config {
         }
         let heap_mb = int("heap-mb")?.unwrap_or(256);
         cfg.mem.global_size = (heap_mb as u64) << 20;
-        cfg.rpc_lanes = int("rpc-lanes")?.unwrap_or(cfg.rpc_lanes);
         cfg.rpc_workers = int("rpc-workers")?.unwrap_or(cfg.rpc_workers);
         cfg.rpc_launch_threads = int("rpc-launch-threads")?.unwrap_or(cfg.rpc_launch_threads);
+        cfg.rpc_launch_slots = int("rpc-launch-slots")?.unwrap_or(cfg.rpc_launch_slots);
         cfg.rpc_data_cap = args.try_get::<u64>("rpc-data-cap", "a byte count")?;
-        cfg.rpc_batch = !args.flag("no-rpc-batch");
-        cfg.verbose = args.flag("verbose");
-        if cfg.teams == 0 || cfg.threads_per_team == 0 {
-            return Err("teams/threads must be positive".into());
-        }
-        if cfg.rpc_lanes == 0 || cfg.rpc_workers == 0 || cfg.rpc_launch_threads == 0 {
-            return Err("rpc-lanes/rpc-workers/rpc-launch-threads must be positive".into());
-        }
+        // Validate the cap before anything consumes it: `--rpc-lanes
+        // auto` feeds it straight into ArenaLayout::with_ring, whose
+        // alignment assert would otherwise turn this usage error into a
+        // panic.
         if let Some(cap) = cfg.rpc_data_cap {
             if cap == 0 || cap % 64 != 0 {
                 return Err(format!(
@@ -83,15 +85,41 @@ impl Config {
                 ));
             }
         }
+        if cfg.rpc_workers == 0 || cfg.rpc_launch_threads == 0 || cfg.rpc_launch_slots == 0 {
+            return Err(
+                "rpc-lanes/rpc-workers/rpc-launch-threads/rpc-launch-slots must be positive"
+                    .into(),
+            );
+        }
+        // Lanes last among the engine knobs: `auto` sizes from the team
+        // count and needs the (validated) ring width and data cap.
+        cfg.rpc_lanes = match args.get("rpc-lanes") {
+            Some("auto") => {
+                auto_lanes(cfg.teams, &cfg.mem, cfg.rpc_launch_slots, cfg.rpc_data_cap)
+            }
+            _ => int("rpc-lanes")?.unwrap_or(cfg.rpc_lanes),
+        };
+        cfg.rpc_batch = !args.flag("no-rpc-batch");
+        cfg.verbose = args.flag("verbose");
+        if cfg.teams == 0 || cfg.threads_per_team == 0 {
+            return Err("teams/threads must be positive".into());
+        }
+        if cfg.rpc_lanes == 0 {
+            return Err(
+                "rpc-lanes/rpc-workers/rpc-launch-threads/rpc-launch-slots must be positive"
+                    .into(),
+            );
+        }
         // Reject arena shapes the device cannot reserve here, where it is
         // a clean CLI error rather than a panic in Device::with_arena.
         let arena = cfg.arena();
         if arena.reserved_bytes() + (1 << 20) > cfg.mem.managed_size {
             return Err(format!(
-                "the RPC arena ({} lanes + launch slot at {} B each) needs {} B of \
-                 managed memory (plus 1 MiB headroom) but the managed segment is {} B; \
-                 lower --rpc-lanes or --rpc-data-cap",
+                "the RPC arena ({} lanes + a {}-slot launch ring at {} B each) needs \
+                 {} B of managed memory (plus 1 MiB headroom) but the managed segment \
+                 is {} B; lower --rpc-lanes, --rpc-launch-slots or --rpc-data-cap",
                 cfg.rpc_lanes,
+                cfg.rpc_launch_slots,
                 arena.lane_stride(),
                 arena.reserved_bytes(),
                 cfg.mem.managed_size,
@@ -102,10 +130,7 @@ impl Config {
 
     /// The mailbox arena shape this configuration selects.
     pub fn arena(&self) -> crate::rpc::engine::ArenaLayout {
-        match self.rpc_data_cap {
-            Some(cap) => crate::rpc::engine::ArenaLayout::new(self.rpc_lanes, cap),
-            None => crate::rpc::engine::ArenaLayout::for_lanes(self.rpc_lanes),
-        }
+        arena_for(self.rpc_lanes, self.rpc_launch_slots, self.rpc_data_cap)
     }
 
     /// The paper's degenerate single-slot shape (`lanes=1, workers=1`)?
@@ -114,6 +139,45 @@ impl Config {
     pub fn legacy_rpc(&self) -> bool {
         self.rpc_lanes == 1 && self.rpc_workers == 1
     }
+}
+
+/// The arena a `(lanes, launch_slots, data_cap)` triple selects —
+/// `Config::arena` and the `--rpc-lanes auto` resolver share this so
+/// the resolved lane count is judged against the exact layout the
+/// session will reserve.
+fn arena_for(
+    lanes: usize,
+    launch_slots: usize,
+    data_cap: Option<u64>,
+) -> crate::rpc::engine::ArenaLayout {
+    match data_cap {
+        Some(cap) => crate::rpc::engine::ArenaLayout::with_ring(lanes, cap, launch_slots),
+        None => crate::rpc::engine::ArenaLayout::for_shape(lanes, launch_slots),
+    }
+}
+
+/// Resolve `--rpc-lanes auto`: one lane per team — a team never waits
+/// for a foreign team's mailbox — clamped so the arena (lanes + launch
+/// ring + 1 MiB managed headroom) still fits the managed segment.
+pub fn auto_lanes(
+    teams: usize,
+    mem: &MemConfig,
+    launch_slots: usize,
+    data_cap: Option<u64>,
+) -> usize {
+    let fits = |lanes: usize| {
+        arena_for(lanes, launch_slots, data_cap).reserved_bytes() + (1 << 20) <= mem.managed_size
+    };
+    // Upper bound from raw arithmetic first (the multi-lane stride) so
+    // the fit loop below never walks down from a huge team count one
+    // lane at a time.
+    let stride = arena_for(2, launch_slots, data_cap).lane_stride();
+    let arithmetic_cap = (mem.managed_size / stride.max(1)) as usize;
+    let mut lanes = teams.clamp(1, arithmetic_cap.max(1));
+    while lanes > 1 && !fits(lanes) {
+        lanes -= 1;
+    }
+    lanes
 }
 
 #[cfg(test)]
@@ -127,7 +191,17 @@ mod tests {
     #[test]
     fn parses_flags() {
         let args = Args::parse(
-            &sv(&["--teams", "8", "--threads", "32", "--allocator", "balanced[4,2]", "--heap-mb", "64", "--verbose"]),
+            &sv(&[
+                "--teams",
+                "8",
+                "--threads",
+                "32",
+                "--allocator",
+                "balanced[4,2]",
+                "--heap-mb",
+                "64",
+                "--verbose",
+            ]),
             &[],
         );
         let cfg = Config::from_args(&args).unwrap();
@@ -142,7 +216,8 @@ mod tests {
 
     #[test]
     fn parses_rpc_engine_flags() {
-        let args = Args::parse(&sv(&["--rpc-lanes", "4", "--rpc-workers", "2", "--no-rpc-batch"]), &[]);
+        let args =
+            Args::parse(&sv(&["--rpc-lanes", "4", "--rpc-workers", "2", "--no-rpc-batch"]), &[]);
         let cfg = Config::from_args(&args).unwrap();
         assert_eq!(cfg.rpc_lanes, 4);
         assert_eq!(cfg.rpc_workers, 2);
@@ -167,6 +242,69 @@ mod tests {
         let cfg = Config::from_args(&Args::parse(&sv(&["--rpc-lanes", "2"]), &[])).unwrap();
         assert_eq!(cfg.arena().data_cap, crate::rpc::engine::MULTI_LANE_DATA_CAP);
         assert_eq!(Config::default().arena(), crate::rpc::engine::ArenaLayout::legacy());
+    }
+
+    #[test]
+    fn parses_launch_slots_ring() {
+        let args = Args::parse(&sv(&["--rpc-launch-slots", "2"]), &[]);
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.rpc_launch_slots, 2);
+        let arena = cfg.arena();
+        assert_eq!(arena.launch_slots, 2);
+        assert_eq!(arena.lanes, 1);
+        assert_eq!(arena.slot_count(), 3);
+        // Ring width 0 is a clean usage error.
+        let args = Args::parse(&sv(&["--rpc-launch-slots", "0"]), &[]);
+        assert!(Config::from_args(&args).is_err());
+        // The default stays the byte-identical legacy layout.
+        let cfg = Config::from_args(&Args::parse(&[], &[])).unwrap();
+        assert_eq!(cfg.rpc_launch_slots, 1);
+        assert_eq!(cfg.arena(), crate::rpc::engine::ArenaLayout::legacy());
+    }
+
+    #[test]
+    fn auto_lanes_follow_team_count() {
+        let args = Args::parse(&sv(&["--teams", "6", "--rpc-lanes", "auto"]), &[]);
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.rpc_lanes, 6, "one lane per team when the segment fits them");
+        assert_eq!(cfg.arena().lanes, 6);
+        // A single team degenerates to the legacy single slot.
+        let args = Args::parse(&sv(&["--teams", "1", "--rpc-lanes", "auto"]), &[]);
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.rpc_lanes, 1);
+        assert_eq!(cfg.arena(), crate::rpc::engine::ArenaLayout::legacy());
+    }
+
+    #[test]
+    fn auto_lanes_with_bad_data_cap_is_a_clean_err() {
+        // `auto` feeds the cap into the arena constructor; a misaligned
+        // cap must still surface as the usage Err, never as the
+        // constructor's alignment panic.
+        for bad in ["100", "0"] {
+            let args = Args::parse(&sv(&["--rpc-lanes", "auto", "--rpc-data-cap", bad]), &[]);
+            let err = Config::from_args(&args).unwrap_err();
+            assert!(err.contains("multiple of 64"), "unexpected error: {err}");
+        }
+    }
+
+    #[test]
+    fn auto_lanes_clamp_to_the_managed_segment() {
+        // The default 32 MiB managed segment fits ~120 multi-lane slots:
+        // a 1000-team request must clamp to what fits (with ring +
+        // headroom), never error or overrun.
+        let args = Args::parse(&sv(&["--teams", "1000", "--rpc-lanes", "auto"]), &[]);
+        let cfg = Config::from_args(&args).unwrap();
+        assert!(cfg.rpc_lanes > 1, "clamped lanes still multi-lane: {}", cfg.rpc_lanes);
+        assert!(cfg.rpc_lanes < 1000);
+        let arena = cfg.arena();
+        assert!(arena.reserved_bytes() + (1 << 20) <= cfg.mem.managed_size);
+        // Adding one more lane would overflow the reservation.
+        let bigger = auto_lanes(cfg.rpc_lanes + 1, &cfg.mem, 1, None);
+        assert_eq!(bigger, cfg.rpc_lanes, "resolved count is maximal");
+        // A wider launch ring shrinks the lane budget.
+        let with_ring = auto_lanes(1000, &cfg.mem, 8, None);
+        assert!(with_ring < cfg.rpc_lanes);
+        assert!(with_ring >= 1);
     }
 
     #[test]

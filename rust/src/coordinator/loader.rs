@@ -43,7 +43,8 @@ impl GpuFirstSession {
         // The open-file table shards one-to-one with the lanes serving
         // the pads; a single-lane session keeps the unsharded (legacy
         // fd numbering) shape.
-        let host = Arc::new(HostEnv::with_shards(if cfg.rpc_lanes > 1 { cfg.rpc_lanes } else { 0 }));
+        let host =
+            Arc::new(HostEnv::with_shards(if cfg.rpc_lanes > 1 { cfg.rpc_lanes } else { 0 }));
         let server = RpcEngine::start(
             Arc::clone(&device.mem),
             arena,
@@ -53,6 +54,7 @@ impl GpuFirstSession {
                 lanes: cfg.rpc_lanes,
                 workers: cfg.rpc_workers,
                 launch_threads: cfg.rpc_launch_threads,
+                launch_slots: cfg.rpc_launch_slots,
                 batch: cfg.rpc_batch,
             },
         );
@@ -202,6 +204,35 @@ func @main() -> i64 {
         let snap = metrics.rpc_engine.unwrap();
         assert_eq!(snap.launches, 1);
         assert_eq!(snap.launch_queue_depth, 0, "queue drained at run end");
+        session.stop();
+    }
+
+    #[test]
+    fn session_with_launch_ring_runs_and_reports_ring_metrics() {
+        let src = r#"
+global @out 65536
+
+func @main() -> i64 {
+  parallel {
+    for.team %i = 0 to 1024 step 1 {
+      %off = mul %i, 8
+      %p = gep @out, %off
+      store.8 %i, %p
+    }
+  }
+  return 0
+}
+"#;
+        let module = crate::ir::parser::parse_module(src).unwrap();
+        let cfg = Config { rpc_launch_slots: 2, rpc_launch_threads: 2, ..small_cfg() };
+        let mut session = GpuFirstSession::start(cfg);
+        let (ret, metrics) = session.execute(module, CompileOptions::default(), &[]).unwrap();
+        assert_eq!(ret, 0);
+        let snap = metrics.rpc_engine.unwrap();
+        assert_eq!(snap.launch_slots, 2, "ring width surfaces in metrics");
+        assert_eq!(snap.launches, 1);
+        assert!(snap.ring_peak >= 1);
+        assert_eq!(snap.ring_in_flight, 0, "nothing left running at run end");
         session.stop();
     }
 

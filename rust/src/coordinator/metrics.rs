@@ -54,13 +54,15 @@ impl RunMetrics {
             s.push(' ');
             s.push_str(&e.summary());
         }
-        if self.host_io.shards > 0 {
+        if self.host_io.shards > 0 || self.host_io.content_contention > 0 {
             s.push_str(&format!(
-                " host_io shards={} opens={}+{} contention={}",
+                " host_io shards={} opens={}+{} contention={} files_contention={}/{}shards",
                 self.host_io.shards,
                 self.host_io.sharded_opens,
                 self.host_io.shared_opens,
                 self.host_io.lock_contention,
+                self.host_io.content_contention,
+                self.host_io.content_shards,
             ));
         }
         s
@@ -101,7 +103,8 @@ mod tests {
             rpc_engine: Some(EngineSnapshot {
                 lanes: 4,
                 workers: 2,
-                launch_threads: 1,
+                launch_threads: 2,
+                launch_slots: 2,
                 served: 10,
                 batches: 2,
                 batched_calls: 6,
@@ -113,6 +116,8 @@ mod tests {
                 launch_requeues: 0,
                 launch_wait_ns: 500,
                 launch_run_ns: 1500,
+                ring_in_flight: 0,
+                ring_peak: 2,
                 polls: 100,
                 polls_busy: 25,
             }),
@@ -121,13 +126,17 @@ mod tests {
                 sharded_opens: 7,
                 shared_opens: 1,
                 lock_contention: 3,
+                content_shards: 16,
+                content_contention: 5,
             },
         };
         let s = m.summary();
         assert!(s.contains("rpc_engine lanes=4 workers=2 served=10"));
         assert!(s.contains("occupancy=0.250"));
         assert!(s.contains("launches=2"), "executor counters surface: {s}");
+        assert!(s.contains("ring_peak=2/2"), "ring occupancy surfaces: {s}");
         assert!(s.contains("host_io shards=4 opens=7+1 contention=3"), "{s}");
+        assert!(s.contains("files_contention=5/16shards"), "content-map counters: {s}");
         assert_eq!(m.rpc_engine.unwrap().launch_latency_ns(), 1000.0);
     }
 }

@@ -114,9 +114,10 @@ impl Device {
         // migrated objects and managed_alloc callers.
         assert!(
             arena.reserved_bytes() + (1 << 20) <= mem_cfg.managed_size,
-            "RPC arena ({} lanes + launch slot, {} B each) does not fit the managed \
-             segment; lower --rpc-lanes or raise managed_size",
+            "RPC arena ({} lanes + {}-slot launch ring, {} B each) does not fit the \
+             managed segment; lower --rpc-lanes/--rpc-launch-slots or raise managed_size",
             arena.lanes,
+            arena.launch_slots,
             arena.lane_stride(),
         );
         Self {

@@ -117,15 +117,24 @@ impl DeviceMemory {
     fn locate(&self, addr: u64, len: u64) -> (&[AtomicU64], u64) {
         match self.segment(addr) {
             Segment::Global => {
-                assert!(addr + len <= GLOBAL_BASE + self.cfg.global_size, "global OOB {addr:#x}+{len}");
+                assert!(
+                    addr + len <= GLOBAL_BASE + self.cfg.global_size,
+                    "global OOB {addr:#x}+{len}"
+                );
                 (&self.global, addr - GLOBAL_BASE)
             }
             Segment::Managed => {
-                assert!(addr + len <= MANAGED_BASE + self.cfg.managed_size, "managed OOB {addr:#x}+{len}");
+                assert!(
+                    addr + len <= MANAGED_BASE + self.cfg.managed_size,
+                    "managed OOB {addr:#x}+{len}"
+                );
                 (&self.managed, addr - MANAGED_BASE)
             }
             Segment::Stack => {
-                assert!(addr + len <= STACK_BASE + self.cfg.stack_size, "stack OOB {addr:#x}+{len}");
+                assert!(
+                    addr + len <= STACK_BASE + self.cfg.stack_size,
+                    "stack OOB {addr:#x}+{len}"
+                );
                 (&self.stack, addr - STACK_BASE)
             }
             seg => panic!("device fault: access to {seg:?} address {addr:#x} (len {len})"),
@@ -235,7 +244,8 @@ impl DeviceMemory {
                 let mut cur = cell.load(Ordering::Relaxed);
                 loop {
                     let new = (cur & !mask) | val;
-                    match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed) {
+                    match cell.compare_exchange_weak(cur, new, Ordering::Relaxed, Ordering::Relaxed)
+                    {
                         Ok(_) => break,
                         Err(c) => cur = c,
                     }

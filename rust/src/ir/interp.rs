@@ -208,7 +208,12 @@ impl ProgramEnv {
     }
 
     /// Host-side execution of an expanded region over a grid.
-    fn run_region(self: &Arc<Self>, region: &str, values: &[Value], cfg: LaunchConfig) -> LaunchStats {
+    fn run_region(
+        self: &Arc<Self>,
+        region: &str,
+        values: &[Value],
+        cfg: LaunchConfig,
+    ) -> LaunchStats {
         let f = &self.module.functions[region];
         let has_barrier = body_has_barrier(&f.body);
         let body = |g: &mut GridCtx| {
@@ -223,7 +228,10 @@ impl ProgramEnv {
         };
         if has_barrier {
             let total = cfg.total_threads().min(1024);
-            let cfg = LaunchConfig::new((total / cfg.threads_per_team).max(1), cfg.threads_per_team.min(total));
+            let cfg = LaunchConfig::new(
+                (total / cfg.threads_per_team).max(1),
+                cfg.threads_per_team.min(total),
+            );
             self.device.launch_coop(cfg, body)
         } else {
             self.device.launch(cfg, body)
@@ -307,7 +315,11 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         self.exec_function_body(&f.body, bindings)
     }
 
-    fn exec_function_body(&mut self, body: &[Instr], bindings: Vec<(String, Value)>) -> Option<Value> {
+    fn exec_function_body(
+        &mut self,
+        body: &[Instr],
+        bindings: Vec<(String, Value)>,
+    ) -> Option<Value> {
         self.depth += 1;
         assert!(self.depth < 128, "interpreter call depth exceeded");
         let saved_sp = self.sp;
@@ -582,7 +594,8 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
             "atoi" => Value::I(dstdlib::atoi(mem, args[0].as_addr())),
             "rand" => Value::I(self.rand.rand() as i64),
             "srand" => {
-                self.rand = DeviceRand::for_thread(args[0].as_i() as u64, self.g.global_tid() as u64);
+                self.rand =
+                    DeviceRand::for_thread(args[0].as_i() as u64, self.g.global_tid() as u64);
                 Value::I(0)
             }
             "sqrt" => Value::F(args[0].as_f().sqrt()),
@@ -673,9 +686,11 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
             cfg,
         });
         // Fig. 4 ①: RPC to the host to launch the parallel kernel. The
-        // launch rides the arena's *dedicated launch slot* — never a
-        // regular lane — so every lane stays free for the RPCs the
-        // kernel itself issues (live even at `--rpc-lanes 1`).
+        // launch rides the arena's *launch ring* — never a regular
+        // lane — so every lane stays free for the RPCs the kernel
+        // itself issues (live even at `--rpc-lanes 1`). The issuing
+        // team picks its home ring slot, so concurrent launch sessions
+        // spread over the ring instead of all contending for slot 0.
         let launch_id = self
             .env
             .registry
@@ -685,7 +700,11 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         let mut info = RpcArgInfo::new();
         info.add_val(region_id);
         info.add_val(0);
-        let mut client = RpcClient::for_launch(&self.env.device.mem, self.env.device.arena());
+        let mut client = RpcClient::for_launch_session(
+            &self.env.device.mem,
+            self.env.device.arena(),
+            self.g.team_id,
+        );
         let ret = client.call(launch_id, &info, Some(&mut self.g.counters));
         assert_eq!(ret, 0, "kernel launch RPC failed for {region}");
     }

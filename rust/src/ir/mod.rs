@@ -165,7 +165,14 @@ pub enum Instr {
     If { cond: Operand, then_body: Vec<Instr>, else_body: Vec<Instr> },
     While { cond_var: String, cond: Vec<Instr>, body: Vec<Instr> },
     /// `for %v = lo to hi step s { body }` (half-open `[lo, hi)`).
-    For { var: String, lo: Operand, hi: Operand, step: Operand, schedule: Schedule, body: Vec<Instr> },
+    For {
+        var: String,
+        lo: Operand,
+        hi: Operand,
+        step: Operand,
+        schedule: Schedule,
+        body: Vec<Instr>,
+    },
     /// `parallel num_threads(n) { body }`
     Parallel { num_threads: Option<Operand>, body: Vec<Instr> },
     Barrier,

@@ -166,9 +166,10 @@ fn parse_instr(p: &mut P) -> Result<Instr, String> {
             // A return value must be on the same conceptual statement; an
             // operand is present unless the next token starts a new instr.
             match p.peek() {
-                Some(Tok::Var(_)) | Some(Tok::Int(_)) | Some(Tok::Float(_)) | Some(Tok::GlobalRef(_)) => {
-                    Ok(Instr::Return(Some(parse_operand(p)?)))
-                }
+                Some(Tok::Var(_))
+                | Some(Tok::Int(_))
+                | Some(Tok::Float(_))
+                | Some(Tok::GlobalRef(_)) => Ok(Instr::Return(Some(parse_operand(p)?))),
                 _ => Ok(Instr::Return(None)),
             }
         }
@@ -517,7 +518,9 @@ fn lex(src: &str) -> Result<Vec<Tok>, String> {
                 }
                 let text: String = b[start..i].iter().collect();
                 if is_float {
-                    toks.push(Tok::Float(text.parse().map_err(|e| format!("bad float {text}: {e}"))?));
+                    toks.push(Tok::Float(
+                        text.parse().map_err(|e| format!("bad float {text}: {e}"))?,
+                    ));
                 } else {
                     toks.push(Tok::Int(text.parse().map_err(|e| format!("bad int {text}: {e}"))?));
                 }
@@ -780,6 +783,9 @@ func @main() -> f64 {
     fn native_calls_become_intrinsics() {
         let src = "func @main() -> i64 {\n  %p = call malloc(64)\n  call free(%p)\n  return 0\n}\n";
         let m = parse_module(src).unwrap();
-        assert!(matches!(&m.functions["main"].body[0], Instr::Intrinsic { name, .. } if name == "malloc"));
+        assert!(matches!(
+            &m.functions["main"].body[0],
+            Instr::Intrinsic { name, .. } if name == "malloc"
+        ));
     }
 }

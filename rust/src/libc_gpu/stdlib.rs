@@ -203,7 +203,8 @@ mod tests {
             m.write_i64(base + i as u64 * 8, *v);
         }
         let cmp = |a: &[u8], b: &[u8]| {
-            i64::from_le_bytes(a.try_into().unwrap()).cmp(&i64::from_le_bytes(b.try_into().unwrap()))
+            i64::from_le_bytes(a.try_into().unwrap())
+                .cmp(&i64::from_le_bytes(b.try_into().unwrap()))
         };
         qsort(&m, base, vals.len() as u64, 8, &cmp);
         let mut sorted = vals.clone();
@@ -220,7 +221,8 @@ mod tests {
             m.write_i64(base + i as u64 * 8, *v);
         }
         let cmp = |a: &[u8], b: &[u8]| {
-            i64::from_le_bytes(a.try_into().unwrap()).cmp(&i64::from_le_bytes(b.try_into().unwrap()))
+            i64::from_le_bytes(a.try_into().unwrap())
+                .cmp(&i64::from_le_bytes(b.try_into().unwrap()))
         };
         assert_eq!(bsearch(&m, &8i64.to_le_bytes(), base, 5, 8, &cmp), Some(2));
         assert_eq!(bsearch(&m, &2i64.to_le_bytes(), base, 5, 8, &cmp), Some(0));

@@ -4,9 +4,9 @@
 //! ```text
 //! gpu-first compile <prog.ir> [--no-rpcgen] [--no-multiteam]
 //! gpu-first run     <prog.ir> [--teams N] [--threads N] [--allocator K]
-//!                   [--rpc-lanes N] [--rpc-workers N]
-//!                   [--rpc-launch-threads N] [--rpc-data-cap BYTES]
-//!                   [--no-rpc-batch]
+//!                   [--rpc-lanes N|auto] [--rpc-workers N]
+//!                   [--rpc-launch-threads N] [--rpc-launch-slots N]
+//!                   [--rpc-data-cap BYTES] [--no-rpc-batch]
 //! gpu-first explain <prog.ir>          # RPC argument classification
 //! gpu-first apps                        # list evaluation apps
 //! gpu-first artifacts [--dir artifacts] # load + smoke the AOT artifacts
@@ -14,11 +14,14 @@
 //!
 //! `--rpc-lanes`/`--rpc-workers` shape the multi-lane RPC engine
 //! (`rpc::engine`); the default `1/1` reproduces the paper's
-//! single-slot behaviour bit-for-bit. `--rpc-launch-threads` sizes the
-//! dedicated kernel-split launch executor (in-kernel RPCs are live at
-//! every shape), `--rpc-data-cap` overrides the per-lane mailbox DATA
-//! bytes, and `--no-rpc-batch` disables same-callee coalescing per poll
-//! sweep.
+//! single-slot behaviour bit-for-bit, and `--rpc-lanes auto` sizes the
+//! lanes from the team count (clamped to the managed segment).
+//! `--rpc-launch-threads` sizes the dedicated kernel-split launch
+//! executor (in-kernel RPCs are live at every shape),
+//! `--rpc-launch-slots` widens the launch ring so that many
+//! kernel-split launches can be in flight at once, `--rpc-data-cap`
+//! overrides the per-lane mailbox DATA bytes, and `--no-rpc-batch`
+//! disables same-callee coalescing per poll sweep.
 
 use gpu_first::coordinator::{Config, GpuFirstSession};
 use gpu_first::ir::parser::parse_module;
@@ -38,7 +41,8 @@ fn main() {
             eprintln!(
                 "usage: gpu-first <compile|run|explain|apps|artifacts> [...]\n\
                  run options: --teams N --threads N --allocator generic|vendor|balanced[N,M]\n\
-                              --heap-mb N --rpc-lanes N --rpc-workers N --rpc-launch-threads N\n\
+                              --heap-mb N --rpc-lanes N|auto --rpc-workers N\n\
+                              --rpc-launch-threads N --rpc-launch-slots N\n\
                               --rpc-data-cap BYTES --no-rpc-batch --verbose\n\
                  see README.md"
             );

@@ -160,9 +160,13 @@ mod tests {
 
     #[test]
     fn rpc_fractions_sum_to_one() {
-        let dev = RPC_ARGINFO_INIT_FRAC + RPC_OBJECT_IDENT_FRAC + RPC_DEVICE_WAIT_FRAC + RPC_COPY_BACK_FRAC;
+        let dev = RPC_ARGINFO_INIT_FRAC
+            + RPC_OBJECT_IDENT_FRAC
+            + RPC_DEVICE_WAIT_FRAC
+            + RPC_COPY_BACK_FRAC;
         assert!((dev - 1.0).abs() < 0.01, "device fractions {dev}");
-        let host = RPC_HOST_INFO_COPY_FRAC + RPC_HOST_WRAPPER_FRAC + RPC_HOST_ACK_FRAC + RPC_HOST_GAP_FRAC;
+        let host =
+            RPC_HOST_INFO_COPY_FRAC + RPC_HOST_WRAPPER_FRAC + RPC_HOST_ACK_FRAC + RPC_HOST_GAP_FRAC;
         assert!((host - 1.0).abs() < 0.01, "host fractions {host}");
     }
 

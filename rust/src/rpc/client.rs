@@ -55,9 +55,8 @@ pub struct RpcClient<'a> {
     pub mem: &'a DeviceMemory,
     arena: ArenaLayout,
     home_lane: usize,
-    /// Claim only the arena's dedicated launch slot (kernel-split
-    /// launches never contend with regular lanes — see
-    /// [`RpcClient::for_launch`]).
+    /// Claim only the arena's launch ring (kernel-split launches never
+    /// contend with regular lanes — see [`RpcClient::for_launch`]).
     launch_only: bool,
     pub last: RpcBreakdown,
 }
@@ -79,15 +78,26 @@ impl<'a> RpcClient<'a> {
         }
     }
 
-    /// Kernel-split launch client: claims only the arena's dedicated
-    /// launch slot, leaving every regular lane free for the RPCs the
-    /// launched kernel itself issues. This is what makes in-kernel RPCs
-    /// live even at `lanes=1`.
+    /// Kernel-split launch client: claims only the arena's launch ring,
+    /// leaving every regular lane free for the RPCs the launched kernel
+    /// itself issues. This is what makes in-kernel RPCs live even at
+    /// `lanes=1`.
     pub fn for_launch(mem: &'a DeviceMemory, arena: ArenaLayout) -> Self {
+        Self::for_launch_session(mem, arena, 0)
+    }
+
+    /// Launch client with a home ring slot derived from `session`
+    /// (`session % launch_slots`), so concurrent launch sessions spread
+    /// over the ring instead of all probing slot 0 first. Falls over to
+    /// the other ring slots when the home slot is busy; when the whole
+    /// ring is claimed the caller spins — the ring is the launch
+    /// backpressure boundary, exactly like the lanes are for regular
+    /// RPCs.
+    pub fn for_launch_session(mem: &'a DeviceMemory, arena: ArenaLayout, session: usize) -> Self {
         Self {
             mem,
             arena,
-            home_lane: arena.launch_index(),
+            home_lane: arena.launch_index() + session % arena.launch_slots.max(1),
             launch_only: true,
             last: RpcBreakdown::default(),
         }
@@ -100,13 +110,21 @@ impl<'a> RpcClient<'a> {
     /// Non-blocking lane acquisition: try the home lane, then every
     /// other lane once. `None` means the arena is exhausted and the
     /// caller must back off (lane backpressure). Launch clients probe
-    /// only the dedicated launch slot (concurrent launches serialize
-    /// there, like the paper's single in-flight kernel).
+    /// only the launch ring, home slot first: up to `launch_slots`
+    /// kernel-split launches are in flight at once, and further
+    /// launchers back off here until a ring slot frees (on the default
+    /// one-slot ring, launches serialize exactly like the paper's
+    /// single in-flight kernel).
     pub fn try_claim(&self) -> Option<(usize, Mailbox<'a>)> {
         if self.launch_only {
-            let mb = self.arena.launch_slot(self.mem);
-            if mb.cas_status(ST_IDLE, ST_CLAIMED) {
-                return Some((self.arena.launch_index(), mb));
+            let ring = self.arena.launch_slots;
+            let home = self.home_lane - self.arena.launch_index();
+            for k in 0..ring {
+                let idx = self.arena.launch_index() + (home + k) % ring;
+                let mb = self.arena.slot(self.mem, idx);
+                if mb.cas_status(ST_IDLE, ST_CLAIMED) {
+                    return Some((idx, mb));
+                }
             }
             return None;
         }
@@ -129,7 +147,10 @@ impl<'a> RpcClient<'a> {
         mut counters: Option<&mut Counters>,
     ) -> i64 {
         let t0 = std::time::Instant::now();
-        let mut bd = RpcBreakdown { init_ns: a100::RPC_TOTAL_NS * a100::RPC_ARGINFO_INIT_FRAC, ..Default::default() };
+        let mut bd = RpcBreakdown {
+            init_ns: a100::RPC_TOTAL_NS * a100::RPC_ARGINFO_INIT_FRAC,
+            ..Default::default()
+        };
 
         // Acquire a lane (serializes concurrent device callers only when
         // the arena is narrower than the caller count).
@@ -165,7 +186,10 @@ impl<'a> RpcClient<'a> {
         for (i, arg) in info.args.iter().enumerate() {
             match *arg {
                 RpcArg::Val(v) => {
-                    mb.write_arg(i, WireArg { kind: KIND_VAL, value: v, mode: 0, size: 0, offset: 0 });
+                    mb.write_arg(
+                        i,
+                        WireArg { kind: KIND_VAL, value: v, mode: 0, size: 0, offset: 0 },
+                    );
                 }
                 RpcArg::Ref { ptr, mode, obj_size, offset } => {
                     bd.object_ident_ns += IDENT_PER_REF_NS;
@@ -174,7 +198,10 @@ impl<'a> RpcClient<'a> {
                     // (paper: "the pointer is pointing to host memory
                     // already and consequently does not need translation").
                     if self.mem.segment(base) == Segment::Host {
-                        mb.write_arg(i, WireArg { kind: KIND_VAL, value: ptr, mode: 0, size: 0, offset: 0 });
+                        mb.write_arg(
+                            i,
+                            WireArg { kind: KIND_VAL, value: ptr, mode: 0, size: 0, offset: 0 },
+                        );
                         continue;
                     }
                     let slot = staged.iter().find(|&&(b, _, _)| b == base).copied();
@@ -199,7 +226,13 @@ impl<'a> RpcClient<'a> {
                     };
                     mb.write_arg(
                         i,
-                        WireArg { kind: KIND_REF, value: off, mode: mode.encode(), size: obj_size, offset },
+                        WireArg {
+                            kind: KIND_REF,
+                            value: off,
+                            mode: mode.encode(),
+                            size: obj_size,
+                            offset,
+                        },
                     );
                 }
             }
@@ -327,6 +360,33 @@ mod tests {
         assert!(client.try_claim().is_none());
         assert_eq!(arena.lane(&mem, 0).status(), ST_IDLE);
         assert_eq!(arena.lane(&mem, 1).status(), ST_IDLE);
+    }
+
+    #[test]
+    fn launch_ring_admits_concurrent_sessions_with_backpressure() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let arena = ArenaLayout::for_shape(1, 3);
+        // Sessions home onto distinct ring slots.
+        let c0 = RpcClient::for_launch_session(&mem, arena, 0);
+        let c1 = RpcClient::for_launch_session(&mem, arena, 1);
+        let c4 = RpcClient::for_launch_session(&mem, arena, 4);
+        assert_eq!(c0.home_lane(), arena.launch_index());
+        assert_eq!(c1.home_lane(), arena.launch_index() + 1);
+        assert_eq!(c4.home_lane(), arena.launch_index() + 1, "session % launch_slots");
+        // Three claims land on three distinct ring slots; a fourth backs
+        // off (ring backpressure), and never spills onto the lane.
+        let (s0, _) = c0.try_claim().unwrap();
+        let (s1, _) = c1.try_claim().unwrap();
+        let (s4, _) = c4.try_claim().unwrap();
+        let mut slots = [s0, s1, s4];
+        slots.sort();
+        assert_eq!(slots, [1, 2, 3], "ring slots sit after the single lane");
+        assert!(c0.try_claim().is_none(), "ring exhausted: launcher must back off");
+        assert_eq!(arena.lane(&mem, 0).status(), ST_IDLE, "regular lane untouched");
+        // Freeing any ring slot readmits a launcher, whatever its home.
+        arena.launch_slot_at(&mem, 2).set_status(ST_IDLE);
+        let (s, _) = c0.try_claim().unwrap();
+        assert_eq!(s, 3);
     }
 
     #[test]

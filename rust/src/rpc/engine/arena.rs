@@ -9,23 +9,27 @@
 //! on its own cache line — concurrent polling by engine workers never
 //! false-shares a line with a neighbouring lane's doorbell.
 //!
-//! After the regular lanes comes one **dedicated launch slot**: the
-//! mailbox kernel-split launch RPCs (paper §3.3) ride on. Keeping
-//! launches off the regular lanes is what makes in-kernel RPCs live at
-//! every engine shape: while a launch is in flight (served by the
-//! [`executor`]), every regular lane stays available for the RPCs the
-//! kernel itself issues — even at `lanes=1`.
+//! After the regular lanes comes the **launch ring**
+//! (`--rpc-launch-slots`, default 1): dedicated slots the mailbox
+//! kernel-split launch RPCs (paper §3.3) ride on. Keeping launches off
+//! the regular lanes is what makes in-kernel RPCs live at every engine
+//! shape: while a launch is in flight (served by the [`executor`]),
+//! every regular lane stays available for the RPCs the kernel itself
+//! issues — even at `lanes=1`. A ring wider than one slot lets N
+//! kernel-split launches be genuinely in flight at once (concurrent
+//! sessions); launch clients claim a free ring slot with backpressure.
 //!
 //! ```text
 //! SLOT_BASE                 + stride              + lanes*stride
-//! | hdr | pad | DATA lane0 | hdr | pad | DATA l1 | ... | launch slot |
+//! | hdr | pad | DATA lane0 | hdr | pad | DATA l1 | ... | ring0 | ring1 | ... |
 //!   ^--- stride = DATA_OFF + data_cap ---^
 //! ```
 //!
-//! Each slot of [`ArenaLayout::legacy`] (1 lane × 1 MiB data, plus the
-//! launch slot) has exactly the shape the single-slot prototype reserved
-//! (`MAILBOX_RESERVED`), which is what keeps the `lanes=1,workers=1`
-//! path bit-identical to the paper's Fig. 7 setup.
+//! Each slot of [`ArenaLayout::legacy`] (1 lane × 1 MiB data, plus a
+//! one-slot launch ring) has exactly the shape the single-slot prototype
+//! reserved (`MAILBOX_RESERVED`), which is what keeps the default
+//! `lanes=1,workers=1,launch_slots=1` path bit-identical to the paper's
+//! Fig. 7 setup.
 //!
 //! [`mailbox`]: crate::rpc::mailbox
 //! [`executor`]: super::executor
@@ -48,6 +52,10 @@ pub struct ArenaLayout {
     pub lanes: usize,
     /// DATA region bytes per lane.
     pub data_cap: u64,
+    /// Width of the kernel-split launch ring (`--rpc-launch-slots`):
+    /// dedicated launch slots tiled after the lanes. 1 = the single
+    /// dedicated launch slot (the byte-identical legacy arrangement).
+    pub launch_slots: usize,
 }
 
 impl Default for ArenaLayout {
@@ -57,27 +65,46 @@ impl Default for ArenaLayout {
 }
 
 impl ArenaLayout {
-    /// The paper's single-slot layout: one lane, 1 MiB data region.
+    /// The paper's single-slot layout: one lane, 1 MiB data region,
+    /// one-slot launch ring.
     pub const fn legacy() -> Self {
-        Self { lanes: 1, data_cap: DATA_CAP }
+        Self { lanes: 1, data_cap: DATA_CAP, launch_slots: 1 }
     }
 
+    /// An arena with a single-slot launch ring (the pre-ring shape).
     pub fn new(lanes: usize, data_cap: u64) -> Self {
+        Self::with_ring(lanes, data_cap, 1)
+    }
+
+    /// Fully explicit shape: `lanes` regular lanes of `data_cap` bytes
+    /// each, followed by a `launch_slots`-wide launch ring of the same
+    /// stride.
+    pub fn with_ring(lanes: usize, data_cap: u64, launch_slots: usize) -> Self {
         assert!(lanes >= 1, "arena needs at least one lane");
+        assert!(launch_slots >= 1, "launch ring needs at least one slot");
         assert!(
             data_cap > 0 && data_cap % 64 == 0,
             "lane data capacity must be a positive cache-line multiple"
         );
-        Self { lanes, data_cap }
+        Self { lanes, data_cap, launch_slots }
     }
 
     /// The default shape for a lane count: the legacy layout for one
     /// lane (Fig. 7 reproducibility), [`MULTI_LANE_DATA_CAP`] otherwise.
     pub fn for_lanes(lanes: usize) -> Self {
-        if lanes <= 1 {
+        Self::for_shape(lanes, 1)
+    }
+
+    /// The default shape for a `lanes × launch_slots` request: exactly
+    /// [`ArenaLayout::legacy`] for `1 × 1` (the byte-identical paper
+    /// layout), [`MULTI_LANE_DATA_CAP`] per slot for anything wider —
+    /// a multi-slot ring trades the legacy 1 MiB staging region for
+    /// fitting more concurrent sessions in the managed segment.
+    pub fn for_shape(lanes: usize, launch_slots: usize) -> Self {
+        if lanes <= 1 && launch_slots <= 1 {
             Self::legacy()
         } else {
-            Self::new(lanes, MULTI_LANE_DATA_CAP)
+            Self::with_ring(lanes.max(1), MULTI_LANE_DATA_CAP, launch_slots.max(1))
         }
     }
 
@@ -86,19 +113,24 @@ impl ArenaLayout {
         DATA_OFF + self.data_cap
     }
 
-    /// Total slots: the regular lanes plus the dedicated launch slot.
+    /// Total slots: the regular lanes plus the launch ring.
     pub const fn slot_count(&self) -> usize {
-        self.lanes + 1
+        self.lanes + self.launch_slots
     }
 
-    /// Slot index of the dedicated kernel-split launch slot (it sits
-    /// after the last regular lane).
+    /// Slot index of the launch ring's first slot (it sits after the
+    /// last regular lane).
     pub const fn launch_index(&self) -> usize {
         self.lanes
     }
 
+    /// Is `idx` one of the launch ring's slots?
+    pub const fn is_launch_slot(&self, idx: usize) -> bool {
+        idx >= self.lanes && idx < self.slot_count()
+    }
+
     /// Managed bytes the whole arena occupies from `SLOT_BASE`
-    /// (regular lanes + the launch slot).
+    /// (regular lanes + the launch ring).
     pub const fn reserved_bytes(&self) -> u64 {
         self.slot_count() as u64 * self.lane_stride()
     }
@@ -108,9 +140,19 @@ impl ArenaLayout {
         SLOT_BASE + lane as u64 * self.lane_stride()
     }
 
-    /// Base address of the dedicated launch slot.
+    /// Base address of the launch ring's first slot.
     pub const fn launch_base(&self) -> u64 {
         SLOT_BASE + self.lanes as u64 * self.lane_stride()
+    }
+
+    /// Base address of ring slot `ring` (`0..launch_slots`).
+    pub fn launch_base_at(&self, ring: usize) -> u64 {
+        assert!(
+            ring < self.launch_slots,
+            "ring slot {ring} out of range ({} launch slots)",
+            self.launch_slots
+        );
+        self.launch_base() + ring as u64 * self.lane_stride()
     }
 
     /// A typed mailbox view over one lane.
@@ -118,16 +160,23 @@ impl ArenaLayout {
         Mailbox::at(mem, self.lane_base(lane), self.data_cap)
     }
 
-    /// A typed mailbox view over the dedicated launch slot.
+    /// A typed mailbox view over the launch ring's first slot (the
+    /// whole ring on the default one-slot shape).
     pub fn launch_slot<'a>(&self, mem: &'a DeviceMemory) -> Mailbox<'a> {
-        Mailbox::at(mem, self.launch_base(), self.data_cap)
+        self.launch_slot_at(mem, 0)
+    }
+
+    /// A typed mailbox view over ring slot `ring` (`0..launch_slots`).
+    pub fn launch_slot_at<'a>(&self, mem: &'a DeviceMemory, ring: usize) -> Mailbox<'a> {
+        Mailbox::at(mem, self.launch_base_at(ring), self.data_cap)
     }
 
     /// A typed mailbox view over any slot: regular lanes at `0..lanes`,
-    /// the launch slot at [`Self::launch_index`].
+    /// the launch ring at `lanes..lanes + launch_slots`
+    /// ([`Self::launch_index`] onward).
     pub fn slot<'a>(&self, mem: &'a DeviceMemory, idx: usize) -> Mailbox<'a> {
-        if idx == self.launch_index() {
-            self.launch_slot(mem)
+        if idx >= self.lanes {
+            self.launch_slot_at(mem, idx - self.lanes)
         } else {
             self.lane(mem, idx)
         }
@@ -136,10 +185,13 @@ impl ArenaLayout {
 
 // Every slot of the degenerate arena has exactly the shape the
 // single-slot prototype reserved, so the legacy lane keeps its
-// historical managed-memory address and layout; the launch slot tiles
-// right after it.
+// historical managed-memory address and layout; the one-slot launch
+// ring tiles right after it. The legacy RpcServer polls these addresses
+// through this same layout value, so the two can never diverge.
 const _: () = assert!(ArenaLayout::legacy().lane_stride() == MAILBOX_RESERVED);
+const _: () = assert!(ArenaLayout::legacy().launch_slots == 1);
 const _: () = assert!(ArenaLayout::legacy().reserved_bytes() == 2 * MAILBOX_RESERVED);
+const _: () = assert!(ArenaLayout::legacy().launch_base() == SLOT_BASE + MAILBOX_RESERVED);
 
 #[cfg(test)]
 mod tests {
@@ -156,7 +208,50 @@ mod tests {
         assert_eq!(a.lane_base(0), SLOT_BASE);
         assert_eq!(a.launch_base(), SLOT_BASE + MAILBOX_RESERVED);
         assert_eq!(a.launch_index(), 1);
+        assert_eq!(a.launch_slots, 1);
         assert_eq!(ArenaLayout::for_lanes(1), a);
+        assert_eq!(ArenaLayout::for_shape(1, 1), a);
+        assert_eq!(ArenaLayout::default(), a);
+    }
+
+    #[test]
+    fn launch_ring_tiles_after_the_lanes() {
+        let a = ArenaLayout::for_shape(2, 3);
+        assert_eq!(a.lanes, 2);
+        assert_eq!(a.launch_slots, 3);
+        assert_eq!(a.slot_count(), 5);
+        assert_eq!(a.data_cap, MULTI_LANE_DATA_CAP, "rings wider than 1 use the multi-lane cap");
+        for r in 0..3 {
+            assert_eq!(a.launch_base_at(r), a.launch_base() + r as u64 * a.lane_stride());
+            assert_eq!(a.launch_base_at(r) % 64, 0, "ring slot {r} base not cache-line aligned");
+            assert!(a.is_launch_slot(a.lanes + r));
+        }
+        assert!(!a.is_launch_slot(0));
+        assert!(!a.is_launch_slot(a.slot_count()));
+        assert_eq!(a.launch_base_at(2) + a.lane_stride(), SLOT_BASE + a.reserved_bytes());
+    }
+
+    #[test]
+    fn ring_slots_are_independent_mailboxes() {
+        let mem = DeviceMemory::new(MemConfig::small());
+        let a = ArenaLayout::for_shape(1, 2);
+        let (r0, r1) = (a.launch_slot_at(&mem, 0), a.launch_slot_at(&mem, 1));
+        r0.set_callee(10);
+        r1.set_callee(11);
+        r0.write_data(0, b"ring0");
+        r1.write_data(0, b"ring1");
+        assert!(r0.cas_status(ST_IDLE, ST_REQUEST));
+        assert_eq!(r1.status(), ST_IDLE, "ring slot 1 unaffected by slot 0's doorbell");
+        assert_eq!(r0.read_data(0, 5), b"ring0");
+        assert_eq!(r1.read_data(0, 5), b"ring1");
+        assert_eq!(a.slot(&mem, 1).base(), a.launch_base_at(0));
+        assert_eq!(a.slot(&mem, 2).base(), a.launch_base_at(1));
+    }
+
+    #[test]
+    #[should_panic(expected = "out of range")]
+    fn ring_index_bounds_checked() {
+        ArenaLayout::for_shape(1, 2).launch_base_at(2);
     }
 
     #[test]

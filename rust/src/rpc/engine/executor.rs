@@ -14,10 +14,13 @@
 //! stores ret/flags and rings `ST_DONE` on the mailbox the request
 //! arrived on — the device-side client protocol is unchanged.
 //!
-//! Paired with the arena's dedicated launch slot
-//! ([`ArenaLayout::launch_slot`]), this makes in-kernel RPCs correct at
-//! every `lanes × workers × launch-threads` shape, including
-//! `1 × 1 × 1`.
+//! Paired with the arena's launch ring ([`ArenaLayout::launch_slot_at`]),
+//! this makes in-kernel RPCs correct at every `lanes × workers ×
+//! launch-threads × launch-slots` shape, including `1 × 1 × 1 × 1` —
+//! and with a ring and pool wider than one, N kernel-split launches are
+//! genuinely in flight at once (tracked by the ring-occupancy gauges
+//! `ring_in_flight`/`ring_peak` and the per-slot completion/latency
+//! counters).
 
 use super::arena::ArenaLayout;
 use super::server::EngineMetrics;
@@ -133,6 +136,17 @@ fn executor_loop(
         let Ok(mut job) = job else { break };
         let wait_ns = job.enqueued.elapsed().as_nanos() as u64;
         metrics.launch_queued.fetch_sub(1, Ordering::Relaxed);
+        // Ring occupancy: launches running on executor threads right
+        // now. Only jobs that actually rode a ring slot count — a
+        // launch callee arriving on a regular lane must not inflate the
+        // gauge past what the ring provided. The high-water mark is the
+        // proof of genuine launch concurrency (peak >= 2 needs a ring
+        // and a pool wider than 1).
+        let on_ring = job.slot >= arena.lanes;
+        if on_ring {
+            let in_flight = metrics.ring_in_flight.fetch_add(1, Ordering::Relaxed) + 1;
+            metrics.ring_peak.fetch_max(in_flight, Ordering::Relaxed);
+        }
         let t0 = std::time::Instant::now();
         // Invoke the launch wrapper under the owning slot's lane context
         // (HostEnv shard selection), exactly like a worker-served pad.
@@ -146,10 +160,21 @@ fn executor_loop(
         writeback_frame(&mb, &job.frame);
         mb.set_ret(ret);
         mb.set_flags(flags);
+        let run_ns = t0.elapsed().as_nanos() as u64;
         metrics.launches.fetch_add(1, Ordering::Relaxed);
         metrics.served.fetch_add(1, Ordering::Relaxed);
         metrics.launch_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
-        metrics.launch_run_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+        metrics.launch_run_ns.fetch_add(run_ns, Ordering::Relaxed);
+        // Per-ring-slot completion/latency gauges (launch callees that
+        // arrived on a regular lane count in launches/served only).
+        if on_ring {
+            if let Some(rc) = metrics.ring.get(job.slot - arena.lanes) {
+                rc.completions.fetch_add(1, Ordering::Relaxed);
+                rc.wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
+                rc.run_ns.fetch_add(run_ns, Ordering::Relaxed);
+            }
+            metrics.ring_in_flight.fetch_sub(1, Ordering::Relaxed);
+        }
         mb.set_status(ST_DONE);
     }
 }
@@ -158,10 +183,11 @@ fn executor_loop(
 mod tests {
     use super::*;
     use crate::gpu::memory::MemConfig;
+    use crate::rpc::engine::server::EngineConfig;
     use crate::rpc::mailbox::{WireArg, KIND_VAL, ST_REQUEST, ST_SERVING};
     use crate::rpc::server::{unpack_frame, HostArg};
     use crate::rpc::wrappers::register_common;
-    use crate::rpc::engine::server::EngineConfig;
+    use std::sync::atomic::AtomicU64;
 
     fn fill_launch_request(mb: &crate::rpc::mailbox::Mailbox<'_>, callee: u64, v: u64) {
         mb.set_callee(callee);
@@ -175,7 +201,10 @@ mod tests {
         let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
         let arena = ArenaLayout::legacy();
         let reg = Arc::new(WrapperRegistry::new());
-        let id = reg.register("__fake_launch_i", Box::new(|f: &mut RpcFrame, _: &HostEnv| f.val(0) as i64 * 2));
+        let id = reg.register(
+            "__fake_launch_i",
+            Box::new(|f: &mut RpcFrame, _: &HostEnv| f.val(0) as i64 * 2),
+        );
         reg.mark_launch("__fake_launch_i");
         let env = Arc::new(HostEnv::new());
         let metrics = Arc::new(EngineMetrics::new(EngineConfig::default()));
@@ -277,5 +306,63 @@ mod tests {
         assert_eq!(arena.slot(&mem, 0).ret(), 5);
         assert_eq!(arena.launch_slot(&mem).ret(), 7);
         assert_eq!(metrics.snapshot().launches, 2);
+    }
+
+    #[test]
+    fn ring_peak_counts_concurrent_launches() {
+        // Two launch jobs on distinct ring slots, two executor threads:
+        // a rendezvous inside the pad proves both run simultaneously,
+        // and the ring-occupancy peak must record it.
+        let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+        let arena = ArenaLayout::for_shape(1, 2);
+        let reg = Arc::new(WrapperRegistry::new());
+        let gate = Arc::new(AtomicU64::new(0));
+        let gate_in_pad = Arc::clone(&gate);
+        let id = reg.register(
+            "__rendezvous_launch_i",
+            Box::new(move |f: &mut RpcFrame, _: &HostEnv| {
+                gate_in_pad.fetch_add(1, Ordering::SeqCst);
+                let t0 = std::time::Instant::now();
+                // Wait (bounded) until the other launch is running too.
+                while gate_in_pad.load(Ordering::SeqCst) < 2 {
+                    if t0.elapsed() > std::time::Duration::from_secs(10) {
+                        return -1;
+                    }
+                    std::thread::yield_now();
+                }
+                f.val(0) as i64
+            }),
+        );
+        reg.mark_launch("__rendezvous_launch_i");
+        let env = Arc::new(HostEnv::new());
+        let metrics = Arc::new(EngineMetrics::new(EngineConfig {
+            launch_slots: 2,
+            launch_threads: 2,
+            ..EngineConfig::default()
+        }));
+        let mut exec = LaunchExecutor::start(
+            Arc::clone(&mem),
+            arena,
+            reg,
+            env,
+            2,
+            Arc::clone(&metrics),
+        );
+        for (ring, v) in [(0usize, 5u64), (1, 7)] {
+            metrics.launch_queued.fetch_add(1, Ordering::Relaxed);
+            exec.try_submit(LaunchJob::new(
+                arena.launch_index() + ring,
+                id,
+                RpcFrame { args: vec![HostArg::Val(v)] },
+            ))
+            .unwrap();
+        }
+        exec.stop();
+        assert_eq!(arena.launch_slot_at(&mem, 0).ret(), 5, "rendezvous reached on slot 0");
+        assert_eq!(arena.launch_slot_at(&mem, 1).ret(), 7, "rendezvous reached on slot 1");
+        let snap = metrics.snapshot();
+        assert_eq!(snap.launches, 2);
+        assert!(snap.ring_peak >= 2, "two launches were in flight at once: {snap:?}");
+        assert_eq!(snap.ring_in_flight, 0, "nothing left running");
     }
 }

@@ -6,21 +6,25 @@
 //! * [`arena`] — the **multi-lane mailbox arena**: one cache-line-padded
 //!   RPC slot per lane at the base of the managed segment; device
 //!   threads pick a lane by team id (`team % lanes`) and fall over to
-//!   neighbouring lanes under contention. A **dedicated launch slot**
-//!   after the lanes carries kernel-split launch RPCs so they never
-//!   contend with the RPCs a running kernel issues.
+//!   neighbouring lanes under contention. A **launch ring**
+//!   (`--rpc-launch-slots` dedicated slots) after the lanes carries
+//!   kernel-split launch RPCs so they never contend with the RPCs a
+//!   running kernel issues — and so N launches can be in flight at
+//!   once.
 //! * [`server`] — the **worker-pool host server**: N host threads poll
-//!   disjoint lane sets (plus the launch slot), claim requests with a
+//!   disjoint lane sets (plus the launch ring), claim requests with a
 //!   `REQUEST -> SERVING` CAS (race-free **work stealing** when a
 //!   worker's own lanes are quiet), and expose per-lane occupancy /
 //!   batch-size metrics.
 //! * [`executor`] — the **dedicated launch executor**: poll workers
 //!   hand claimed kernel-split launch frames to a bounded queue drained
 //!   by `--rpc-launch-threads` threads; the executor performs the
-//!   completion writeback on the owning slot when the kernel finishes.
-//!   Workers are therefore never occupied by a launch, which makes
-//!   **in-kernel RPCs correct at every `lanes × workers` shape** —
-//!   including the default `lanes=1, workers=1` that used to deadlock.
+//!   completion writeback on the owning slot when the kernel finishes,
+//!   and tracks ring occupancy (`ring_in_flight`/`ring_peak`) plus
+//!   per-ring-slot completion/latency counters. Workers are therefore
+//!   never occupied by a launch, which makes **in-kernel RPCs correct
+//!   at every `lanes × workers` shape** — including the default
+//!   `lanes=1, workers=1` that used to deadlock.
 //! * The **batching layer** inside [`server`]: each poll sweep drains
 //!   every ready lane and dispatches homogeneous calls (same callee id)
 //!   as one batched landing-pad invocation — see

@@ -23,11 +23,13 @@
 //! `lanes=1, workers=1` degenerates to the paper's single-threaded
 //! single-slot server: one lane, one poller, batches of one.
 //!
-//! Every worker additionally polls the arena's dedicated **launch
-//! slot**; claimed kernel-split launch frames (and launch callees
-//! arriving on regular lanes) are handed to the [`executor`] instead of
-//! being served inline, so a running kernel never occupies a poll
-//! worker and its in-kernel RPCs are answered at every engine shape.
+//! Every worker additionally polls the arena's **launch ring**
+//! (`--rpc-launch-slots` dedicated slots); claimed kernel-split launch
+//! frames (and launch callees arriving on regular lanes) are handed to
+//! the [`executor`] instead of being served inline, so a running kernel
+//! never occupies a poll worker and its in-kernel RPCs are answered at
+//! every engine shape — with a ring and executor pool wider than one,
+//! N kernel-split launches are genuinely in flight at once.
 //!
 //! [`executor`]: super::executor
 
@@ -42,8 +44,8 @@ use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Engine shape: `--rpc-lanes` × `--rpc-workers` ×
-/// `--rpc-launch-threads`, plus the batching toggle (`--no-rpc-batch`
-/// clears it).
+/// `--rpc-launch-threads` × `--rpc-launch-slots`, plus the batching
+/// toggle (`--no-rpc-batch` clears it).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct EngineConfig {
     pub lanes: usize,
@@ -51,13 +53,16 @@ pub struct EngineConfig {
     /// Dedicated kernel-split launch executor threads
     /// (`--rpc-launch-threads`). Launches never occupy poll workers.
     pub launch_threads: usize,
+    /// Launch ring width (`--rpc-launch-slots`): how many kernel-split
+    /// launches can be in flight at once. Must match the arena's ring.
+    pub launch_slots: usize,
     /// Coalesce same-callee requests of one sweep into one dispatch.
     pub batch: bool,
 }
 
 impl Default for EngineConfig {
     fn default() -> Self {
-        Self { lanes: 1, workers: 1, launch_threads: 1, batch: true }
+        Self { lanes: 1, workers: 1, launch_threads: 1, launch_slots: 1, batch: true }
     }
 }
 
@@ -71,6 +76,17 @@ pub struct LaneCounters {
     pub polls_busy: AtomicU64,
 }
 
+/// Per-launch-ring-slot completion/latency counters.
+#[derive(Debug, Default)]
+pub struct RingSlotCounters {
+    /// Launches completed on this ring slot.
+    pub completions: AtomicU64,
+    /// Total ns those launches spent queued for the executor.
+    pub wait_ns: AtomicU64,
+    /// Total ns the executor spent running them.
+    pub run_ns: AtomicU64,
+}
+
 /// Live engine counters (atomics shared with the worker threads and the
 /// launch executor).
 #[derive(Debug)]
@@ -78,6 +94,7 @@ pub struct EngineMetrics {
     lanes_n: usize,
     workers_n: usize,
     launch_threads_n: usize,
+    launch_slots_n: usize,
     pub served: AtomicU64,
     /// Coalesced dispatches (groups of ≥ 2 same-callee requests).
     pub batches: AtomicU64,
@@ -99,7 +116,13 @@ pub struct EngineMetrics {
     pub launch_wait_ns: AtomicU64,
     /// Total ns the executor spent running launch wrappers.
     pub launch_run_ns: AtomicU64,
+    /// Launches running on executor threads right now (ring occupancy).
+    pub ring_in_flight: AtomicU64,
+    /// High-water mark of `ring_in_flight` — peak launch concurrency.
+    pub ring_peak: AtomicU64,
     pub lanes: Vec<LaneCounters>,
+    /// Per-launch-ring-slot counters (index = ring position).
+    pub ring: Vec<RingSlotCounters>,
 }
 
 impl EngineMetrics {
@@ -108,6 +131,7 @@ impl EngineMetrics {
             lanes_n: cfg.lanes,
             workers_n: cfg.workers,
             launch_threads_n: cfg.launch_threads,
+            launch_slots_n: cfg.launch_slots,
             served: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             batched_calls: AtomicU64::new(0),
@@ -119,7 +143,10 @@ impl EngineMetrics {
             launch_requeues: AtomicU64::new(0),
             launch_wait_ns: AtomicU64::new(0),
             launch_run_ns: AtomicU64::new(0),
+            ring_in_flight: AtomicU64::new(0),
+            ring_peak: AtomicU64::new(0),
             lanes: (0..cfg.lanes).map(|_| LaneCounters::default()).collect(),
+            ring: (0..cfg.launch_slots).map(|_| RingSlotCounters::default()).collect(),
         }
     }
 
@@ -129,6 +156,7 @@ impl EngineMetrics {
             lanes: self.lanes_n,
             workers: self.workers_n,
             launch_threads: self.launch_threads_n,
+            launch_slots: self.launch_slots_n,
             served: self.served.load(r),
             batches: self.batches.load(r),
             batched_calls: self.batched_calls.load(r),
@@ -140,9 +168,16 @@ impl EngineMetrics {
             launch_requeues: self.launch_requeues.load(r),
             launch_wait_ns: self.launch_wait_ns.load(r),
             launch_run_ns: self.launch_run_ns.load(r),
+            ring_in_flight: self.ring_in_flight.load(r),
+            ring_peak: self.ring_peak.load(r),
             polls: self.lanes.iter().map(|l| l.polls.load(r)).sum(),
             polls_busy: self.lanes.iter().map(|l| l.polls_busy.load(r)).sum(),
         }
+    }
+
+    /// Launches completed per ring slot (index = ring position).
+    pub fn ring_completions(&self) -> Vec<u64> {
+        self.ring.iter().map(|s| s.completions.load(Ordering::Relaxed)).collect()
     }
 
     pub fn lane_served(&self) -> Vec<u64> {
@@ -170,10 +205,28 @@ impl EngineMetrics {
                 ])
             })
             .collect();
+        let ring: Vec<Json> = self
+            .ring
+            .iter()
+            .enumerate()
+            .map(|(i, c)| {
+                let n = c.completions.load(r);
+                let total_ns = (c.wait_ns.load(r) + c.run_ns.load(r)) as f64;
+                Json::obj(vec![
+                    ("slot", Json::num(i as f64)),
+                    ("completions", Json::num(n as f64)),
+                    (
+                        "mean_latency_ns",
+                        Json::num(if n == 0 { 0.0 } else { total_ns / n as f64 }),
+                    ),
+                ])
+            })
+            .collect();
         Json::obj(vec![
             ("lanes", Json::num(s.lanes as f64)),
             ("workers", Json::num(s.workers as f64)),
             ("launch_threads", Json::num(s.launch_threads as f64)),
+            ("launch_slots", Json::num(s.launch_slots as f64)),
             ("served", Json::num(s.served as f64)),
             ("batches", Json::num(s.batches as f64)),
             ("batched_calls", Json::num(s.batched_calls as f64)),
@@ -184,8 +237,10 @@ impl EngineMetrics {
             ("launch_requeues", Json::num(s.launch_requeues as f64)),
             ("launch_wait_ns", Json::num(s.launch_wait_ns as f64)),
             ("launch_run_ns", Json::num(s.launch_run_ns as f64)),
+            ("ring_peak", Json::num(s.ring_peak as f64)),
             ("occupancy", Json::num(s.occupancy())),
             ("per_lane", Json::Arr(lanes)),
+            ("per_ring_slot", Json::Arr(ring)),
         ])
     }
 }
@@ -196,6 +251,8 @@ pub struct EngineSnapshot {
     pub lanes: usize,
     pub workers: usize,
     pub launch_threads: usize,
+    /// Launch ring width (in-flight launch capacity).
+    pub launch_slots: usize,
     pub served: u64,
     pub batches: u64,
     pub batched_calls: u64,
@@ -210,6 +267,10 @@ pub struct EngineSnapshot {
     pub launch_requeues: u64,
     pub launch_wait_ns: u64,
     pub launch_run_ns: u64,
+    /// Launches running on executor threads at snapshot time.
+    pub ring_in_flight: u64,
+    /// Peak concurrent launches (ring occupancy high-water mark).
+    pub ring_peak: u64,
     pub polls: u64,
     pub polls_busy: u64,
 }
@@ -248,11 +309,13 @@ impl EngineSnapshot {
         );
         if self.launches > 0 {
             s.push_str(&format!(
-                " launches={} launch_threads={} launch_qpeak={} launch_lat={}",
+                " launches={} launch_threads={} launch_qpeak={} launch_lat={} ring_peak={}/{}",
                 self.launches,
                 self.launch_threads,
                 self.launch_queue_peak,
                 crate::util::fmt_ns(self.launch_latency_ns()),
+                self.ring_peak,
+                self.launch_slots,
             ));
         }
         s
@@ -281,6 +344,10 @@ impl RpcEngine {
     ) -> Self {
         assert!(cfg.workers >= 1, "engine needs at least one worker");
         assert_eq!(cfg.lanes, arena.lanes, "engine config and arena disagree on lane count");
+        assert_eq!(
+            cfg.launch_slots, arena.launch_slots,
+            "engine config and arena disagree on launch ring width"
+        );
         let shutdown = Arc::new(AtomicBool::new(false));
         let metrics = Arc::new(EngineMetrics::new(cfg));
         let executor = Arc::new(LaunchExecutor::start(
@@ -303,7 +370,9 @@ impl RpcEngine {
                 std::thread::Builder::new()
                     .name(format!("rpc-engine-{w}"))
                     .spawn(move || {
-                        worker_loop(w, &mem, arena, &registry, &env, cfg, &metrics, &shutdown, &executor)
+                        worker_loop(
+                            w, &mem, arena, &registry, &env, cfg, &metrics, &shutdown, &executor,
+                        )
                     })
                     .expect("spawn rpc engine worker"),
             );
@@ -371,15 +440,16 @@ fn worker_loop(
                 }
             }
         }
-        // The dedicated launch slot is polled by every worker; the claim
+        // The whole launch ring is polled by every worker; the claim
         // CAS keeps that race-free. A plain status read gates the CAS so
-        // the idle fast path never takes the cache line exclusive.
+        // the idle fast path never takes a cache line exclusive.
         // Claimed launches are handed to the executor in dispatch_sweep,
-        // so this never occupies the worker.
-        {
-            let launch = arena.launch_slot(mem);
+        // so this never occupies the worker — and with a multi-slot ring
+        // several launches can be claimed in one sweep.
+        for idx in arena.launch_index()..arena.slot_count() {
+            let launch = arena.slot(mem, idx);
             if launch.status() == ST_REQUEST && launch.cas_status(ST_REQUEST, ST_SERVING) {
-                claimed.push(arena.launch_index());
+                claimed.push(idx);
             }
         }
         // Nothing of our own: steal one ready request from a foreign lane
@@ -475,7 +545,10 @@ fn dispatch_sweep(
             metrics.batched_calls.fetch_add(members.len() as u64, Ordering::Relaxed);
             metrics.max_batch.fetch_max(members.len() as u64, Ordering::Relaxed);
         }
-        let rets: Vec<(i64, u64)> = match (coalesced.then(|| registry.get_batch(callee)).flatten(), pads[members[0]].clone()) {
+        let rets: Vec<(i64, u64)> = match (
+            coalesced.then(|| registry.get_batch(callee)).flatten(),
+            pads[members[0]].clone(),
+        ) {
             (Some(batch_pad), _) => {
                 // True batch pad: the whole group in one invocation.
                 let mut group_frames: Vec<RpcFrame> =
@@ -617,7 +690,10 @@ mod tests {
             let mb = arena.lane(&mem, lane);
             mb.set_callee(id);
             mb.set_nargs(1);
-            mb.write_arg(0, WireArg { kind: KIND_VAL, value: 70 + lane as u64, mode: 0, size: 0, offset: 0 });
+            mb.write_arg(
+                0,
+                WireArg { kind: KIND_VAL, value: 70 + lane as u64, mode: 0, size: 0, offset: 0 },
+            );
             mb.set_status(ST_REQUEST);
         }
         let engine = RpcEngine::start(
@@ -659,7 +735,13 @@ mod tests {
             mb.set_nargs(1);
             mb.write_arg(
                 0,
-                WireArg { kind: KIND_REF, value: 0, mode: ArgMode::Read.encode(), size: msg.len() as u64, offset: 0 },
+                WireArg {
+                    kind: KIND_REF,
+                    value: 0,
+                    mode: ArgMode::Read.encode(),
+                    size: msg.len() as u64,
+                    offset: 0,
+                },
             );
             mb.set_status(ST_REQUEST);
         }
@@ -782,6 +864,65 @@ mod tests {
     }
 
     #[test]
+    fn launch_ring_serves_concurrent_launch_clients() {
+        // Two launch clients, a two-slot ring, two executor threads: the
+        // launches must ride distinct ring slots and overlap in time
+        // (ring occupancy peak >= 2). A rendezvous inside the pad makes
+        // the overlap deterministic rather than probabilistic.
+        let (mem, _, reg, env) = setup(1);
+        let arena = ArenaLayout::for_shape(1, 2);
+        let gate = Arc::new(AtomicU64::new(0));
+        let gate_in_pad = Arc::clone(&gate);
+        let id = reg.register(
+            "__rendezvous_launch_i",
+            Box::new(move |f, _| {
+                gate_in_pad.fetch_add(1, Ordering::SeqCst);
+                let t0 = std::time::Instant::now();
+                while gate_in_pad.load(Ordering::SeqCst) < 2 {
+                    if t0.elapsed() > std::time::Duration::from_secs(10) {
+                        return -1;
+                    }
+                    std::thread::yield_now();
+                }
+                f.val(0) as i64
+            }),
+        );
+        reg.mark_launch("__rendezvous_launch_i");
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            env,
+            EngineConfig { launch_slots: 2, launch_threads: 2, ..EngineConfig::default() },
+        );
+        let lanes_used: Vec<usize> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2u64)
+                .map(|session| {
+                    let mem = &mem;
+                    s.spawn(move || {
+                        let mut client =
+                            RpcClient::for_launch_session(mem, arena, session as usize);
+                        let mut info = RpcArgInfo::new();
+                        info.add_val(40 + session);
+                        assert_eq!(client.call(id, &info, None), 40 + session as i64);
+                        client.last.lane
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert_ne!(lanes_used[0], lanes_used[1], "launches rode distinct ring slots");
+        assert!(lanes_used.iter().all(|&l| arena.is_launch_slot(l)));
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.launches, 2);
+        assert!(snap.ring_peak >= 2, "two launches in flight at once: {snap:?}");
+        assert_eq!(snap.ring_in_flight, 0);
+        assert_eq!(engine.metrics.ring_completions().iter().sum::<u64>(), 2);
+        assert!(engine.metrics.ring_completions().iter().all(|&n| n == 1));
+        engine.stop();
+    }
+
+    #[test]
     fn launch_on_a_regular_lane_still_routes_to_executor() {
         // A launch callee arriving on a regular lane (generic client)
         // must also be handed to the executor, with completion written
@@ -803,6 +944,8 @@ mod tests {
         assert_eq!(client.last.lane, 1, "request rode lane 1");
         let snap = engine.metrics.snapshot();
         assert_eq!(snap.launches, 1);
+        assert_eq!(snap.ring_peak, 0, "a lane-carried launch never occupies the ring");
+        assert_eq!(engine.metrics.ring_completions(), vec![0]);
         engine.stop();
     }
 

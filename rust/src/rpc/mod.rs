@@ -55,4 +55,4 @@ pub use arginfo::{ArgMode, RpcArg, RpcArgInfo};
 pub use client::{RpcBreakdown, RpcClient};
 pub use engine::{ArenaLayout, EngineConfig, EngineMetrics, EngineSnapshot, RpcEngine};
 pub use server::{BatchWrapperFn, RpcFrame, RpcServer, WrapperFn, WrapperRegistry};
-pub use wrappers::{HostEnv, HostIoSnapshot};
+pub use wrappers::{HostEnv, HostIoSnapshot, CONTENT_SHARDS};

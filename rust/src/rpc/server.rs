@@ -191,14 +191,23 @@ impl RpcServer {
     /// with `env` as the host state.
     ///
     /// `mem` must carry the **legacy single-slot arena**
-    /// ([`ArenaLayout::legacy`], what `Device::new` reserves): besides
-    /// the prototype slot at `SLOT_BASE`, this server polls the legacy
-    /// arena's launch slot at a *fixed* address right above it. Memory
-    /// reserved for a multi-lane arena puts lane data at that address —
-    /// pair such devices with the engine, never this server.
+    /// ([`ArenaLayout::legacy`], what `Device::new` reserves): every
+    /// slot this server polls — the prototype slot at `SLOT_BASE` and
+    /// the one-slot launch ring right above it — is derived from that
+    /// one layout value, so the legacy server and the engine can never
+    /// disagree about where the slots live (pinned by the const-asserts
+    /// in [`arena`] and `legacy_server_polls_the_shared_layouts_slots`
+    /// below). Memory reserved for a multi-lane arena puts lane data at
+    /// the ring's address — pair such devices with the engine, never
+    /// this server.
     ///
     /// [`ArenaLayout::legacy`]: crate::rpc::engine::ArenaLayout::legacy
-    pub fn start(mem: Arc<DeviceMemory>, registry: Arc<WrapperRegistry>, env: Arc<HostEnv>) -> Self {
+    /// [`arena`]: crate::rpc::engine::arena
+    pub fn start(
+        mem: Arc<DeviceMemory>,
+        registry: Arc<WrapperRegistry>,
+        env: Arc<HostEnv>,
+    ) -> Self {
         let shutdown = Arc::new(AtomicBool::new(false));
         let served = Arc::new(AtomicU64::new(0));
         let sd = Arc::clone(&shutdown);
@@ -206,17 +215,20 @@ impl RpcServer {
         let handle = std::thread::Builder::new()
             .name("rpc-server".into())
             .spawn(move || {
-                let mb = Mailbox::new(&mem);
-                // Kernel-split launches ride the legacy arena's dedicated
-                // launch slot; this single-threaded server serves them
-                // *synchronously* (the paper's §4.4 behaviour — a kernel
-                // that itself issues RPCs hangs here; the engine's launch
-                // executor is the fix).
-                let launch = crate::rpc::engine::ArenaLayout::legacy().launch_slot(&mem);
+                // One shared layout constructor names every slot: lane 0
+                // is the paper's prototype mailbox, and the launch ring
+                // carries kernel-split launches — served *synchronously*
+                // here (the paper's §4.4 behaviour — a kernel that
+                // itself issues RPCs hangs on this server; the engine's
+                // launch executor is the fix).
+                let arena = crate::rpc::engine::ArenaLayout::legacy();
+                let slots: Vec<Mailbox<'_>> =
+                    (0..arena.slot_count()).map(|i| arena.slot(&mem, i)).collect();
+                let mb = arena.lane(&mem, 0);
                 let mut idle_spins = 0u64;
                 loop {
                     let mut served_any = false;
-                    for slot in [&mb, &launch] {
+                    for slot in &slots {
                         if slot.status() == ST_REQUEST {
                             Self::serve_one(slot, &registry, &env);
                             sv.fetch_add(1, Ordering::Relaxed);
@@ -418,6 +430,23 @@ mod tests {
         info.add_ref(base + 4, ArgMode::Read, 8, 4);
         assert_eq!(client.call(id, &info, None), 42);
         server.stop();
+    }
+
+    #[test]
+    fn legacy_server_polls_the_shared_layouts_slots() {
+        // The legacy server derives every slot it polls from
+        // ArenaLayout::legacy(); this pins lane 0 to the prototype
+        // Mailbox::new address and the one-slot launch ring right above
+        // it, so legacy and engine layouts can never silently diverge.
+        use crate::rpc::mailbox::{MAILBOX_RESERVED, SLOT_BASE};
+        let mem = DeviceMemory::new(MemConfig::small());
+        let arena = crate::rpc::engine::ArenaLayout::legacy();
+        assert_eq!(arena.slot_count(), 2, "prototype slot + one-slot launch ring");
+        assert_eq!(arena.lane(&mem, 0).base(), Mailbox::new(&mem).base());
+        assert_eq!(arena.slot(&mem, 0).base(), SLOT_BASE);
+        assert_eq!(arena.slot(&mem, 1).base(), SLOT_BASE + MAILBOX_RESERVED);
+        assert_eq!(arena.launch_slot(&mem).base(), arena.slot(&mem, 1).base());
+        assert_eq!(arena.lane(&mem, 0).data_cap(), Mailbox::new(&mem).data_cap());
     }
 
     #[test]

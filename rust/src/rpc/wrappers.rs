@@ -53,6 +53,60 @@ struct OpenFile {
     writable: bool,
 }
 
+/// Per-key shard count of the file *content* map. A fixed power of two:
+/// the shard is picked by hashing the file path, so writers to distinct
+/// files (almost always distinct shards) never touch the same lock —
+/// unlike the open-handle tables, which shard per serving *lane*.
+pub const CONTENT_SHARDS: usize = 16;
+
+/// One shard of the file-content map with its own lock and contention
+/// counter.
+#[derive(Default)]
+struct ContentShard {
+    map: Mutex<HashMap<String, Vec<u8>>>,
+    contended: AtomicU64,
+}
+
+/// The per-file-key sharded content map behind `HostEnv`'s in-memory
+/// filesystem. PR 2 sharded only the open-handle tables; this removes
+/// the last global lock on the host I/O path — concurrent writers to
+/// distinct files proceed in parallel, same-file writers serialize on
+/// one shard.
+struct ContentMap {
+    shards: Vec<ContentShard>,
+}
+
+impl ContentMap {
+    fn new() -> Self {
+        Self { shards: (0..CONTENT_SHARDS).map(|_| ContentShard::default()).collect() }
+    }
+
+    /// Which shard holds `path`: FNV-1a placement, deterministic across
+    /// runs (std's seeded `RandomState` would make contention tests
+    /// flaky). Exposed through [`HostEnv::content_shard_of`] so tests
+    /// can pick paths in distinct shards.
+    fn shard_of(path: &str) -> usize {
+        (crate::util::fnv1a(path) % CONTENT_SHARDS as u64) as usize
+    }
+
+    /// Lock the shard holding `path`, counting acquisitions that had to
+    /// wait (the per-shard lock-contention metric).
+    fn lock(&self, path: &str) -> MutexGuard<'_, HashMap<String, Vec<u8>>> {
+        let shard = &self.shards[Self::shard_of(path)];
+        match shard.map.try_lock() {
+            Ok(g) => g,
+            Err(_) => {
+                shard.contended.fetch_add(1, Ordering::Relaxed);
+                shard.map.lock().unwrap()
+            }
+        }
+    }
+
+    fn contention(&self) -> u64 {
+        self.shards.iter().map(|s| s.contended.load(Ordering::Relaxed)).sum()
+    }
+}
+
 /// One open-file table: a shard of [`HostEnv`]'s fd space with its own
 /// lock and contention counters.
 #[derive(Default)]
@@ -86,8 +140,15 @@ pub struct HostIoSnapshot {
     pub sharded_opens: u64,
     /// `fopen`s that fell back to the shared table (no lane context).
     pub shared_opens: u64,
-    /// Lock acquisitions that had to wait, summed over every table.
+    /// Lock acquisitions that had to wait, summed over every
+    /// open-handle table.
     pub lock_contention: u64,
+    /// Per-file-key shard count of the content map
+    /// ([`CONTENT_SHARDS`]).
+    pub content_shards: usize,
+    /// Content-map lock acquisitions that had to wait, summed over
+    /// every shard (0 ⇒ concurrent file traffic never collided).
+    pub content_contention: u64,
 }
 
 /// Host process state backing the landing pads: an in-memory filesystem,
@@ -103,8 +164,15 @@ pub struct HostIoSnapshot {
 /// legacy single-threaded server, direct host calls) use the shared
 /// fallback table, whose fd numbering is byte-identical to the
 /// pre-sharding implementation.
+///
+/// The file *content* map is additionally **sharded per file key**
+/// ([`CONTENT_SHARDS`], path-hash placement): writers to distinct files
+/// take distinct locks, so a session writing `a.txt` never waits on a
+/// session streaming `b.txt`. Same-file access serializes on one shard,
+/// preserving write ordering.
 pub struct HostEnv {
-    files: Mutex<HashMap<String, Vec<u8>>>,
+    /// Per-file-key sharded content map (the in-memory filesystem).
+    files: ContentMap,
     /// Shared fallback open-file table (tag 0; legacy fd numbering).
     shared: FdTable,
     /// Per-lane open-file shards; empty = unsharded.
@@ -138,7 +206,7 @@ impl HostEnv {
     /// loader passes the engine's lane count). `0` disables sharding.
     pub fn with_shards(shards: usize) -> Self {
         Self {
-            files: Mutex::new(HashMap::new()),
+            files: ContentMap::new(),
             shared: FdTable::default(),
             shards: (0..shards).map(|_| FdTable::default()).collect(),
             next_fd: AtomicU64::new(16),
@@ -169,6 +237,8 @@ impl HostEnv {
             shared_opens: self.shared.opens.load(r),
             lock_contention: self.shared.contended.load(r)
                 + self.shards.iter().map(|s| s.contended.load(r)).sum::<u64>(),
+            content_shards: CONTENT_SHARDS,
+            content_contention: self.files.contention(),
         }
     }
 
@@ -178,12 +248,24 @@ impl HostEnv {
         self.shards.iter().map(|s| s.contended.load(Ordering::Relaxed)).collect()
     }
 
+    /// Which content-map shard `path` lives in (deterministic; lets
+    /// tests choose paths with disjoint — or colliding — shards).
+    pub fn content_shard_of(path: &str) -> usize {
+        ContentMap::shard_of(path)
+    }
+
+    /// Total content-map lock acquisitions that had to wait. Stays 0
+    /// while concurrent traffic only ever touches distinct shards.
+    pub fn content_contention(&self) -> u64 {
+        self.files.contention()
+    }
+
     pub fn put_file(&self, path: &str, content: &[u8]) {
-        self.files.lock().unwrap().insert(path.to_string(), content.to_vec());
+        self.files.lock(path).insert(path.to_string(), content.to_vec());
     }
 
     pub fn file(&self, path: &str) -> Option<Vec<u8>> {
-        self.files.lock().unwrap().get(path).cloned()
+        self.files.lock(path).get(path).cloned()
     }
 
     pub fn set_env(&self, k: &str, v: &str) {
@@ -209,7 +291,7 @@ impl HostEnv {
                 if !of.writable {
                     return -1;
                 }
-                let mut files = self.files.lock().unwrap();
+                let mut files = self.files.lock(&of.path);
                 let content = files.entry(of.path.clone()).or_default();
                 if of.pos > content.len() {
                     content.resize(of.pos, 0);
@@ -255,7 +337,7 @@ impl HostEnv {
         let Some(table) = self.table_for(fd) else { return -1 };
         let mut open = table.lock();
         let Some(of) = open.get_mut(&fd) else { return -1 };
-        let files = self.files.lock().unwrap();
+        let files = self.files.lock(&of.path);
         let Some(content) = files.get(&of.path) else { return -1 };
         let avail = content.len().saturating_sub(of.pos);
         let n = avail.min(out.len());
@@ -267,7 +349,7 @@ impl HostEnv {
     fn fopen(&self, path: &str, mode: &str) -> i64 {
         let writable = mode.starts_with('w') || mode.starts_with('a');
         {
-            let mut files = self.files.lock().unwrap();
+            let mut files = self.files.lock(path);
             if writable && mode.starts_with('w') {
                 files.insert(path.to_string(), Vec::new());
             } else if !files.contains_key(path) {
@@ -275,7 +357,7 @@ impl HostEnv {
             }
         }
         let pos = if mode.starts_with('a') {
-            self.files.lock().unwrap().get(path).map(|c| c.len()).unwrap_or(0)
+            self.files.lock(path).get(path).map(|c| c.len()).unwrap_or(0)
         } else {
             0
         };
@@ -307,7 +389,7 @@ impl HostEnv {
         let Some(table) = self.table_for(fd) else { return String::new() };
         let open = table.lock();
         let Some(of) = open.get(&fd) else { return String::new() };
-        let files = self.files.lock().unwrap();
+        let files = self.files.lock(&of.path);
         files
             .get(&of.path)
             .map(|c| String::from_utf8_lossy(&c[of.pos.min(c.len())..]).into_owned())
@@ -667,9 +749,9 @@ pub fn synthesize(kind: HostFnKind) -> WrapperFn {
             *env.exited.lock().unwrap() = Some(f.val(0) as i32);
             0
         }),
-        HostFnKind::Time => {
-            Box::new(|_, env| (env.clock_ns.fetch_add(1_000_000, Ordering::Relaxed) / 1_000_000_000) as i64)
-        }
+        HostFnKind::Time => Box::new(|_, env| {
+            (env.clock_ns.fetch_add(1_000_000, Ordering::Relaxed) / 1_000_000_000) as i64
+        }),
         HostFnKind::Getenv => Box::new(|f, env| {
             let k = f.cstr(0);
             let vars = env.env_vars.lock().unwrap();
@@ -938,7 +1020,8 @@ mod tests {
     #[test]
     fn unsupported_conversion_degrades_to_literal_text() {
         let before = format_warnings();
-        let frame = RpcFrame { args: vec![cstr_arg("a=%d b=%q c=%s"), HostArg::Val(1), cstr_arg("x")] };
+        let frame =
+            RpcFrame { args: vec![cstr_arg("a=%d b=%q c=%s"), HostArg::Val(1), cstr_arg("x")] };
         let fmt = frame.cstr(0);
         // %q is not supported: its literal text survives, the following
         // conversions still consume their arguments in order.
@@ -984,6 +1067,29 @@ mod tests {
         assert_eq!(fd, 16);
         assert_eq!(env.io_snapshot().shards, 0);
         assert_eq!(env.io_snapshot().shared_opens, 1);
+    }
+
+    #[test]
+    fn content_map_shard_placement_is_deterministic_and_spreads() {
+        let a = HostEnv::content_shard_of("alpha.txt");
+        assert_eq!(a, HostEnv::content_shard_of("alpha.txt"), "placement is stable");
+        assert!(a < CONTENT_SHARDS);
+        // The path hash spreads keys over many shards (FNV over 64
+        // probe paths must not degenerate to a single bucket).
+        let shards: std::collections::HashSet<usize> =
+            (0..64).map(|i| HostEnv::content_shard_of(&format!("f{i}.txt"))).collect();
+        assert!(shards.len() > CONTENT_SHARDS / 2, "only {} shards used", shards.len());
+    }
+
+    #[test]
+    fn io_snapshot_reports_content_map_counters() {
+        let env = HostEnv::new();
+        env.put_file("x", b"1");
+        assert_eq!(env.file("x").unwrap(), b"1");
+        let snap = env.io_snapshot();
+        assert_eq!(snap.content_shards, CONTENT_SHARDS);
+        assert_eq!(snap.content_contention, 0, "single-thread traffic never waits");
+        assert_eq!(env.content_contention(), 0);
     }
 
     #[test]

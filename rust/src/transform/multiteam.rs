@@ -62,7 +62,15 @@ pub fn run(m: &mut Module) -> MultiTeamReport {
             continue;
         }
         let mut f = m.functions[&fname].clone();
-        rewrite_body(m, &parallel_fns, &fname, &mut f.body, &mut new_fns, &mut counter, &mut report);
+        rewrite_body(
+            m,
+            &parallel_fns,
+            &fname,
+            &mut f.body,
+            &mut new_fns,
+            &mut counter,
+            &mut report,
+        );
         m.functions.insert(fname, f);
     }
     for f in new_fns {
@@ -323,7 +331,9 @@ func @main() -> i64 {
 
         // Main now launches instead of running parallel inline.
         let body = &m.functions["main"].body;
-        assert!(body.iter().any(|i| matches!(i, Instr::KernelLaunch { region, .. } if region == "__region_0")));
+        assert!(body
+            .iter()
+            .any(|i| matches!(i, Instr::KernelLaunch { region, .. } if region == "__region_0")));
         assert!(!body.iter().any(|i| matches!(i, Instr::Parallel { .. })));
 
         // The region function exists, is a kernel, takes the captures.

@@ -119,7 +119,12 @@ enum ArgIntent {
 /// Determine each argument's intent for `kind`, consulting the format
 /// string (when it is a compile-time constant) for variadic calls —
 /// exactly the precision the paper's pass gets from constant formats.
-fn arg_intents(m: &Module, kind: HostFnKind, args: &[Operand], defs: &HashMap<String, Instr>) -> Vec<ArgIntent> {
+fn arg_intents(
+    m: &Module,
+    kind: HostFnKind,
+    args: &[Operand],
+    defs: &HashMap<String, Instr>,
+) -> Vec<ArgIntent> {
     use ArgIntent::*;
     let fmt_convs = |fmt_idx: usize| -> Option<Vec<Conv>> {
         let op = args.get(fmt_idx)?;
@@ -127,7 +132,8 @@ fn arg_intents(m: &Module, kind: HostFnKind, args: &[Operand], defs: &HashMap<St
         if let ObjClass::Static(StaticObj { origin, constant: true, .. }) = defs_class {
             if let crate::analysis::objects::ObjOrigin::Global(g) = origin {
                 let init = &m.globals[&g].init;
-                let text = String::from_utf8_lossy(&init[..init.len().saturating_sub(1)]).into_owned();
+                let text =
+                    String::from_utf8_lossy(&init[..init.len().saturating_sub(1)]).into_owned();
                 return Some(
                     wrappers::parse_format(&text)
                         .into_iter()
@@ -234,7 +240,11 @@ fn build_specs(
     (specs, tags, summary)
 }
 
-fn lower_arg(arg: &Operand, intent: ArgIntent, class: ObjClass) -> (RpcArgSpec, &'static str, String) {
+fn lower_arg(
+    arg: &Operand,
+    intent: ArgIntent,
+    class: ObjClass,
+) -> (RpcArgSpec, &'static str, String) {
     use ArgIntent::*;
     // Value intents never migrate memory.
     match intent {
@@ -279,7 +289,12 @@ fn lower_arg(arg: &Operand, intent: ArgIntent, class: ObjClass) -> (RpcArgSpec, 
                 OffKind::Dynamic => (
                     RpcArgSpec::MultiRef {
                         ptr: arg.clone(),
-                        candidates: vec![(s.origin.base_operand(), mode, s.size, OffsetSpec::Dynamic)],
+                        candidates: vec![(
+                            s.origin.base_operand(),
+                            mode,
+                            s.size,
+                            OffsetSpec::Dynamic,
+                        )],
                     },
                     tag,
                     format!("static object {:?}, dynamic offset", s.origin),

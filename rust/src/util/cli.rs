@@ -1,9 +1,67 @@
-//! Minimal command-line argument parser (no clap offline).
+//! Minimal command-line argument parser (no clap offline), plus the
+//! engine-shape environment override the CI matrix drives.
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
 //! subcommands. Typed accessors with defaults; unknown-option detection.
 
 use std::collections::BTreeMap;
+
+/// The RPC engine shape as one value: `lanes × workers × launch_threads
+/// × launch_slots`. CI's engine-shape matrix exports it as
+/// `GPU_FIRST_ENGINE_SHAPE=LxWxTxS` and the integration suites re-run
+/// their scenarios at that shape, so non-default engine geometries are
+/// exercised on every push instead of only the default `1x1x1x1`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct EngineShape {
+    pub lanes: usize,
+    pub workers: usize,
+    pub launch_threads: usize,
+    pub launch_slots: usize,
+}
+
+impl EngineShape {
+    /// The paper-default shape (the byte-identical single-slot path).
+    pub const DEFAULT: EngineShape =
+        EngineShape { lanes: 1, workers: 1, launch_threads: 1, launch_slots: 1 };
+
+    /// Name of the environment variable the CI matrix exports.
+    pub const ENV: &'static str = "GPU_FIRST_ENGINE_SHAPE";
+
+    /// Parse `"LxWxTxS"` (e.g. `4x2x2x2`); every component must be a
+    /// positive integer.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let parts: Vec<&str> = s.trim().split('x').collect();
+        let [l, w, t, r] = parts.as_slice() else {
+            return Err(format!("engine shape {s:?} must be lanes x workers x threads x slots"));
+        };
+        let num = |name: &str, v: &str| -> Result<usize, String> {
+            match v.parse::<usize>() {
+                Ok(n) if n >= 1 => Ok(n),
+                _ => Err(format!("engine shape {s:?}: {name} {v:?} must be a positive integer")),
+            }
+        };
+        Ok(Self {
+            lanes: num("lanes", l)?,
+            workers: num("workers", w)?,
+            launch_threads: num("launch_threads", t)?,
+            launch_slots: num("launch_slots", r)?,
+        })
+    }
+
+    /// The shape `GPU_FIRST_ENGINE_SHAPE` selects, or `None` when the
+    /// variable is unset. A malformed value panics — a CI matrix leg
+    /// silently falling back to the default shape would defeat the
+    /// matrix's whole purpose.
+    pub fn from_env() -> Option<Self> {
+        let v = std::env::var(Self::ENV).ok()?;
+        Some(Self::parse(&v).unwrap_or_else(|e| panic!("{}: {e}", Self::ENV)))
+    }
+
+    /// `from_env`, defaulting to [`EngineShape::DEFAULT`].
+    pub fn from_env_or_default() -> Self {
+        Self::from_env().unwrap_or(Self::DEFAULT)
+    }
+}
 
 #[derive(Debug, Clone, Default)]
 pub struct Args {
@@ -162,5 +220,21 @@ mod tests {
         let a = Args::parse(&sv(&["--a", "--b", "v"]), &[]);
         assert!(a.flag("a"));
         assert_eq!(a.get("b"), Some("v"));
+    }
+
+    #[test]
+    fn engine_shape_parses_matrix_legs() {
+        assert_eq!(EngineShape::parse("1x1x1x1").unwrap(), EngineShape::DEFAULT);
+        assert_eq!(
+            EngineShape::parse("4x2x2x2").unwrap(),
+            EngineShape { lanes: 4, workers: 2, launch_threads: 2, launch_slots: 2 }
+        );
+        assert_eq!(
+            EngineShape::parse(" 8x4x4x4 ").unwrap(),
+            EngineShape { lanes: 8, workers: 4, launch_threads: 4, launch_slots: 4 }
+        );
+        for bad in ["", "4x2", "4x2x2x2x2", "4x2x2x0", "axbxcxd"] {
+            assert!(EngineShape::parse(bad).is_err(), "{bad:?} must not parse");
+        }
     }
 }

@@ -13,6 +13,18 @@ pub mod table;
 pub mod prop;
 pub mod bench;
 
+/// FNV-1a over a string's bytes: a stable, seedless hash (std's
+/// `RandomState` is per-process seeded). Used for deterministic shard
+/// placement (`HostEnv` content map) and property-test seeds.
+pub fn fnv1a(s: &str) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
 /// Format a nanosecond quantity with an adaptive unit.
 pub fn fmt_ns(ns: f64) -> String {
     if ns < 1e3 {

@@ -66,7 +66,11 @@ impl Gen {
     }
 
     /// A vector whose length is drawn from `len` clamped by the size budget.
-    pub fn vec<T>(&mut self, len: RangeInclusive<usize>, mut f: impl FnMut(&mut Gen) -> T) -> Vec<T> {
+    pub fn vec<T>(
+        &mut self,
+        len: RangeInclusive<usize>,
+        mut f: impl FnMut(&mut Gen) -> T,
+    ) -> Vec<T> {
         let hi = (*len.end()).min(self.size.max(*len.start()));
         let lo = (*len.start()).min(hi);
         let n = self.usize(lo..hi + 1);
@@ -93,7 +97,7 @@ impl Gen {
 /// Run `prop` over `cases` random cases. Panics (failing the enclosing
 /// test) with the seed and a shrunk size budget if a case fails.
 pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUnwindSafe) {
-    let base_seed = 0xC0FFEE ^ fxhash(name);
+    let base_seed = 0xC0FFEE ^ crate::util::fnv1a(name);
     for case in 0..cases {
         let seed = base_seed.wrapping_add(case.wrapping_mul(0x9E3779B97F4A7C15));
         let size = 4 + (case as usize % 64);
@@ -124,15 +128,6 @@ pub fn check(name: &str, cases: u64, prop: impl Fn(&mut Gen) + std::panic::RefUn
             );
         }
     }
-}
-
-fn fxhash(s: &str) -> u64 {
-    let mut h = 0xcbf29ce484222325u64;
-    for b in s.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x100000001b3);
-    }
-    h
 }
 
 #[cfg(test)]

@@ -18,6 +18,7 @@ use gpu_first::gpu::memory::{DeviceMemory, MemConfig, GLOBAL_BASE};
 use gpu_first::rpc::engine::{ArenaLayout, EngineConfig, RpcEngine};
 use gpu_first::rpc::wrappers::register_common;
 use gpu_first::rpc::{ArgMode, HostEnv, RpcArgInfo, RpcClient, RpcServer, WrapperRegistry};
+use gpu_first::util::cli::EngineShape;
 use gpu_first::util::prop::{check, Gen};
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -138,6 +139,71 @@ fn prop_concurrent_engine_matches_serial_single_slot() {
         assert_eq!(env.stdout_string(), env2.stdout_string());
         assert_eq!(env.stdout_string(), "");
     });
+}
+
+#[test]
+fn matrix_env_shape_matches_serial_single_slot() {
+    // The CI engine-shape matrix leg: run a fixed concurrent plan at the
+    // GPU_FIRST_ENGINE_SHAPE geometry (paper default when unset) and
+    // demand the exact serial-reference HostEnv state. Unlike the
+    // random property above, this pins the specific shapes the matrix
+    // legs export (1x1x1x1 / 4x2x2x2 / 8x4x4x4).
+    let shape = EngineShape::from_env_or_default();
+    let nthreads = 4usize;
+    let plan: Vec<Vec<Op>> = (0..nthreads)
+        .map(|t| (0..5).map(|k| (k % 2 == 0, (t * 100 + k) as u64)).collect())
+        .collect();
+
+    // Concurrent run over the worker-pool engine at the matrix shape.
+    let (mem, reg, env, ids) = setup();
+    let arena = ArenaLayout::for_shape(shape.lanes, shape.launch_slots);
+    let engine = RpcEngine::start(
+        Arc::clone(&mem),
+        arena,
+        Arc::clone(&reg),
+        Arc::clone(&env),
+        EngineConfig {
+            lanes: shape.lanes,
+            workers: shape.workers,
+            launch_threads: shape.launch_threads,
+            launch_slots: shape.launch_slots,
+            batch: true,
+        },
+    );
+    std::thread::scope(|s| {
+        for (t, ops) in plan.iter().enumerate() {
+            let (mem, ids) = (&mem, &ids);
+            s.spawn(move || {
+                let mut client = RpcClient::for_team(mem, arena, t);
+                run_thread(mem, &mut client, ids, t, ops);
+            });
+        }
+    });
+    let served = engine.metrics.snapshot().served;
+    engine.stop();
+
+    // Serial reference through the legacy single-slot server.
+    let (mem2, reg2, env2, ids2) = setup();
+    let server = RpcServer::start(Arc::clone(&mem2), reg2, Arc::clone(&env2));
+    let mut client = RpcClient::new(&mem2);
+    for (t, ops) in plan.iter().enumerate() {
+        run_thread(&mem2, &mut client, &ids2, t, ops);
+    }
+    server.stop();
+
+    let total: u64 = plan.iter().map(|ops| ops.len() as u64 + 2).sum();
+    assert_eq!(served, total, "every call answered exactly once at {shape:?}");
+    for t in 0..nthreads {
+        let path = format!("f{t}.txt");
+        assert_eq!(env.file(&path), env2.file(&path), "file {path} diverged at {shape:?}");
+    }
+    assert_eq!(sorted_lines(&env.stderr_string()), sorted_lines(&env2.stderr_string()));
+    assert_eq!(env.stdout_string(), env2.stdout_string());
+    // Distinct per-thread files land in content-map shards; traffic to
+    // them must not have contended pathologically (same-shard collisions
+    // are possible, a wedged global lock is not).
+    let io = env.io_snapshot();
+    assert!(io.content_shards >= 1);
 }
 
 #[test]

@@ -37,7 +37,12 @@ fn rsbench_offload_matches_cpu_numerics() {
     let w = rsbench::RsWorkload::small();
     let cpu = rsbench::run(Mode::Cpu, rsbench::LookupMode::Event, &w);
     let off = rsbench::run(Mode::Offload, rsbench::LookupMode::Event, &w);
-    assert!(close(cpu.checksum, off.checksum, 1e-3), "cpu {} vs offload {}", cpu.checksum, off.checksum);
+    assert!(
+        close(cpu.checksum, off.checksum, 1e-3),
+        "cpu {} vs offload {}",
+        cpu.checksum,
+        off.checksum
+    );
 }
 
 #[test]
@@ -63,7 +68,12 @@ fn amgmk_and_pagerank_offload_match() {
     let aw = amgmk::AmgmkWorkload::default();
     let a_cpu = amgmk::run(Mode::Cpu, &aw);
     let a_off = amgmk::run(Mode::Offload, &aw);
-    assert!(close(a_cpu.checksum, a_off.checksum, 1e-2), "amgmk {} vs {}", a_cpu.checksum, a_off.checksum);
+    assert!(
+        close(a_cpu.checksum, a_off.checksum, 1e-2),
+        "amgmk {} vs {}",
+        a_cpu.checksum,
+        a_off.checksum
+    );
 
     let pw = pagerank::PagerankWorkload::default();
     let p_cpu = pagerank::run(Mode::Cpu, &pw);

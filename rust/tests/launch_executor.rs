@@ -13,16 +13,24 @@
 //! * random engine shapes produce the same observable output as the
 //!   semantic serial reference (equivalence property);
 //! * for kernels that issue no RPCs, the degenerate engine's output is
-//!   byte-identical to the paper's legacy single-threaded server.
+//!   byte-identical to the paper's legacy single-threaded server;
+//! * with `--rpc-launch-slots 2`, two kernel-split launches are
+//!   genuinely in flight at once (launch-ring regression, proved by the
+//!   ring-occupancy peak);
+//! * the whole scenario re-runs at the engine shape CI's matrix exports
+//!   via `GPU_FIRST_ENGINE_SHAPE`.
 
 use gpu_first::coordinator::{Config, GpuFirstSession};
 use gpu_first::gpu::grid::{AllocatorKind, Device};
-use gpu_first::gpu::memory::MemConfig;
+use gpu_first::gpu::memory::{DeviceMemory, MemConfig};
 use gpu_first::ir::interp::ProgramEnv;
+use gpu_first::rpc::engine::{EngineConfig, RpcEngine};
 use gpu_first::rpc::wrappers::register_common;
-use gpu_first::rpc::{HostEnv, RpcServer, WrapperRegistry};
+use gpu_first::rpc::{HostEnv, RpcArgInfo, RpcClient, RpcServer, WrapperRegistry};
 use gpu_first::transform::CompileOptions;
+use gpu_first::util::cli::EngineShape;
 use gpu_first::util::prop::{check, Gen};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
 /// Run `f` on a helper thread and fail loudly if it does not finish —
@@ -74,17 +82,25 @@ fn run_session(
     src: &str,
     teams: usize,
     threads: usize,
-    lanes: usize,
-    workers: usize,
-    launch_threads: usize,
+    shape: EngineShape,
 ) -> (String, String, u64) {
+    // Wide matrix shapes (8x4x4x4) reserve more arena than the small
+    // test segment holds; fall back to the default memory config then.
+    let arena = gpu_first::rpc::engine::ArenaLayout::for_shape(shape.lanes, shape.launch_slots);
+    let small = MemConfig::small();
+    let mem = if arena.reserved_bytes() + (1 << 20) <= small.managed_size {
+        small
+    } else {
+        MemConfig::default()
+    };
     let cfg = Config {
-        mem: MemConfig::small(),
+        mem,
         teams,
         threads_per_team: threads,
-        rpc_lanes: lanes,
-        rpc_workers: workers,
-        rpc_launch_threads: launch_threads,
+        rpc_lanes: shape.lanes,
+        rpc_workers: shape.workers,
+        rpc_launch_threads: shape.launch_threads,
+        rpc_launch_slots: shape.launch_slots,
         ..Default::default()
     };
     let module = gpu_first::ir::parser::parse_module(src).expect("parse");
@@ -104,9 +120,24 @@ fn in_kernel_fprintf_completes_at_default_single_slot_shape() {
     // bit-identical default) with a kernel that issues RPCs. Pre-fix
     // this deadlocked; now it must complete with correct output.
     let (stderr, stdout, launches) = with_timeout(300, || {
-        run_session(&rpc_kernel_src(16), 2, 4, 1, 1, 1)
+        run_session(&rpc_kernel_src(16), 2, 4, EngineShape::DEFAULT)
     });
     assert_eq!(sorted_lines(&stderr), expected_lines(16));
+    assert_eq!(stdout, "");
+    assert_eq!(launches, 1);
+}
+
+#[test]
+fn in_kernel_rpcs_complete_at_the_matrix_env_shape() {
+    // The CI engine-shape matrix exports GPU_FIRST_ENGINE_SHAPE=LxWxTxS;
+    // this test re-runs the kernel-split in-kernel-RPC scenario at that
+    // shape (the paper default when the variable is unset), so every
+    // matrix leg exercises a genuinely different engine geometry.
+    let shape = EngineShape::from_env_or_default();
+    let (stderr, stdout, launches) = with_timeout(300, move || {
+        run_session(&rpc_kernel_src(24), 3, 4, shape)
+    });
+    assert_eq!(sorted_lines(&stderr), expected_lines(24), "diverged at {shape:?}");
     assert_eq!(stdout, "");
     assert_eq!(launches, 1);
 }
@@ -121,20 +152,101 @@ fn prop_engine_shapes_match_serial_reference() {
         let iters = g.usize(1..24);
         let teams = g.usize(1..3);
         let threads = g.usize(1..5);
-        let lanes = g.usize(1..4);
-        let workers = g.usize(1..3);
-        let launch_threads = g.usize(1..3);
+        let shape = EngineShape {
+            lanes: g.usize(1..4),
+            workers: g.usize(1..3),
+            launch_threads: g.usize(1..3),
+            launch_slots: g.usize(1..3),
+        };
         let src = rpc_kernel_src(iters);
         let (stderr, _, launches) = with_timeout(300, move || {
-            run_session(&src, teams, threads, lanes, workers, launch_threads)
+            run_session(&src, teams, threads, shape)
         });
-        assert_eq!(
-            sorted_lines(&stderr),
-            expected_lines(iters),
-            "diverged at lanes={lanes} workers={workers} launch_threads={launch_threads}"
-        );
+        assert_eq!(sorted_lines(&stderr), expected_lines(iters), "diverged at {shape:?}");
         assert_eq!(launches, 1);
     });
+}
+
+#[test]
+fn ring_of_two_flies_two_launches_concurrently() {
+    // THE ring regression (acceptance criterion): with
+    // `--rpc-launch-slots 2`, two kernel-split launches must be in
+    // flight at once — ring occupancy peak >= 2 — where the PR 2
+    // single launch slot serialized them even with
+    // `--rpc-launch-threads 2`. The engine shape comes from the CLI
+    // flags exactly as a service operator would set them.
+    let args: Vec<String> = ["--rpc-launch-slots", "2", "--rpc-launch-threads", "2"]
+        .iter()
+        .map(|s| s.to_string())
+        .collect();
+    let cfg = Config::from_args(&gpu_first::util::cli::Args::parse(&args, &[])).unwrap();
+    assert_eq!(cfg.rpc_launch_slots, 2);
+    let arena = cfg.arena();
+    assert_eq!(arena.launch_slots, 2);
+
+    let mem = Arc::new(DeviceMemory::new(MemConfig::small()));
+    let reg = Arc::new(WrapperRegistry::new());
+    let gate = Arc::new(AtomicU64::new(0));
+    let gate_in_pad = Arc::clone(&gate);
+    let id = reg.register(
+        "__rendezvous_launch_i",
+        Box::new(move |f, _| {
+            // Both launches must be running simultaneously before either
+            // returns; a serialized ring times out here and returns -1.
+            gate_in_pad.fetch_add(1, Ordering::SeqCst);
+            let t0 = std::time::Instant::now();
+            while gate_in_pad.load(Ordering::SeqCst) < 2 {
+                if t0.elapsed() > std::time::Duration::from_secs(30) {
+                    return -1;
+                }
+                std::thread::yield_now();
+            }
+            f.val(0) as i64
+        }),
+    );
+    reg.mark_launch("__rendezvous_launch_i");
+    let env = Arc::new(HostEnv::new());
+    let engine = RpcEngine::start(
+        Arc::clone(&mem),
+        arena,
+        Arc::clone(&reg),
+        env,
+        EngineConfig {
+            lanes: cfg.rpc_lanes,
+            workers: cfg.rpc_workers,
+            launch_threads: cfg.rpc_launch_threads,
+            launch_slots: cfg.rpc_launch_slots,
+            batch: cfg.rpc_batch,
+        },
+    );
+    let slots: Vec<usize> = with_timeout(120, move || {
+        std::thread::scope(|s| {
+            let handles: Vec<_> = (0..2u64)
+                .map(|session| {
+                    let mem = &mem;
+                    s.spawn(move || {
+                        let mut client =
+                            RpcClient::for_launch_session(mem, arena, session as usize);
+                        let mut info = RpcArgInfo::new();
+                        info.add_val(session + 60);
+                        assert_eq!(
+                            client.call(id, &info, None),
+                            60 + session as i64,
+                            "rendezvous reached: both launches ran concurrently"
+                        );
+                        client.last.lane
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        })
+    });
+    assert_ne!(slots[0], slots[1], "the two launches rode distinct ring slots");
+    let snap = engine.metrics.snapshot();
+    assert_eq!(snap.launches, 2);
+    assert!(snap.ring_peak >= 2, "ring occupancy peak must record the overlap: {snap:?}");
+    assert_eq!(snap.ring_in_flight, 0);
+    engine.stop();
 }
 
 #[test]
@@ -172,19 +284,26 @@ func @main() -> i64 {
 "#;
     let (teams, threads) = (2usize, 8usize);
 
-    // Engine path: the default lanes=1, workers=1, launch-threads=1.
-    let (stderr_e, stdout_e, launches) = run_session(SRC, teams, threads, 1, 1, 1);
+    // Engine path: the default lanes=1, workers=1, launch-threads=1,
+    // launch-slots=1.
+    let (stderr_e, stdout_e, launches) = run_session(SRC, teams, threads, EngineShape::DEFAULT);
 
     // Legacy reference: the paper's single-threaded RpcServer over the
     // single-slot arena, same grid, same allocator.
     let mut module = gpu_first::ir::parser::parse_module(SRC).expect("parse");
     let registry = Arc::new(WrapperRegistry::new());
     register_common(&registry);
-    gpu_first::transform::compile(&mut module, &registry, CompileOptions::default()).expect("compile");
-    let device = Arc::new(Device::new(MemConfig::small(), AllocatorKind::Balanced(Default::default())));
+    gpu_first::transform::compile(&mut module, &registry, CompileOptions::default())
+        .expect("compile");
+    let device = Arc::new(Device::new(
+        MemConfig::small(),
+        AllocatorKind::Balanced(Default::default()),
+    ));
     let host = Arc::new(HostEnv::new());
-    let server = RpcServer::start(Arc::clone(&device.mem), Arc::clone(&registry), Arc::clone(&host));
-    let env = ProgramEnv::load_with_grid(module, device, registry, Arc::clone(&host), teams, threads);
+    let server =
+        RpcServer::start(Arc::clone(&device.mem), Arc::clone(&registry), Arc::clone(&host));
+    let env =
+        ProgramEnv::load_with_grid(module, device, registry, Arc::clone(&host), teams, threads);
     let (ret, _) = env.run_main(&[]);
     server.stop();
     assert_eq!(ret, 0);

@@ -1,7 +1,9 @@
 //! Property-based invariants over the coordinator substrates (the
 //! offline stand-in for proptest; see `util::prop`).
 
-use gpu_first::alloc::{AllocCtx, BalancedAllocator, BalancedConfig, DeviceAllocator, GenericAllocator};
+use gpu_first::alloc::{
+    AllocCtx, BalancedAllocator, BalancedConfig, DeviceAllocator, GenericAllocator,
+};
 use gpu_first::gpu::grid::{Device, LaunchConfig};
 use gpu_first::gpu::memory::{DeviceMemory, MemConfig, GLOBAL_BASE};
 use gpu_first::ir::parser::parse_module;
