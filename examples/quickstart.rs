@@ -72,6 +72,11 @@ fn main() {
     println!("--- run metrics ---");
     println!("{}", metrics.summary());
     let report = session.report.as_ref().unwrap();
+    println!("pass pipeline ({}):", report.pipeline.join(" -> "));
+    for line in report.timing_lines() {
+        println!("  {line}");
+    }
+    println!("symbol resolution (libcres): {}", report.resolution.summary());
     println!("rpcgen rewrote {} call sites:", report.rpc.rewritten.len());
     for (f, callee, mangled, _) in &report.rpc.rewritten {
         println!("  @{f}: {callee} -> {mangled}");

@@ -364,10 +364,17 @@ fn sweep(legacy_modeled_total_ns: f64) {
         "kernel-split launch throughput vs ring width",
         &["launch_slots", "launches/s", "speedup", "ring_peak"],
     );
+    // Per-ring-slot completion/latency gauges (EngineMetrics.ring):
+    // slot-level balance of the ring-claim path, one row per slot of
+    // every sweep point.
+    let mut slot_table = Table::new(
+        "per-ring-slot completion/latency gauges",
+        &["launch_slots", "slot", "completions", "mean latency"],
+    );
     let mut ring_points: Vec<Json> = Vec::new();
     let mut ring_baseline = 0.0f64;
     for &slots in &[1usize, 2, 4] {
-        let (lps, peak) = ring_point(slots, if quick() { 10 } else { 50 });
+        let (lps, peak, gauges) = ring_point(slots, if quick() { 10 } else { 50 });
         if slots == 1 {
             ring_baseline = lps;
         }
@@ -378,14 +385,30 @@ fn sweep(legacy_modeled_total_ns: f64) {
             format!("{speedup:.2}x"),
             peak.to_string(),
         ]);
+        let mut slot_json: Vec<Json> = Vec::new();
+        for (i, (completions, mean_ns)) in gauges.iter().enumerate() {
+            slot_table.row(&[
+                slots.to_string(),
+                i.to_string(),
+                completions.to_string(),
+                fmt_ns(*mean_ns),
+            ]);
+            slot_json.push(Json::obj(vec![
+                ("slot", Json::num(i as f64)),
+                ("completions", Json::num(*completions as f64)),
+                ("mean_latency_ns", Json::num(*mean_ns)),
+            ]));
+        }
         ring_points.push(Json::obj(vec![
             ("launch_slots", Json::num(slots as f64)),
             ("launches_per_sec", Json::num(lps)),
             ("speedup_vs_single_slot", Json::num(speedup)),
             ("ring_peak", Json::num(peak as f64)),
+            ("per_slot", Json::Arr(slot_json)),
         ]));
     }
     ring_table.print();
+    slot_table.print();
 
     let report = Json::obj(vec![
         ("bench", Json::str("fig07_rpc_sweep")),
@@ -409,8 +432,8 @@ fn sweep(legacy_modeled_total_ns: f64) {
 /// One launch-ring sweep point: 4 launch sessions issue `per_session`
 /// kernel-split launches each (1 ms pads) over a `slots`-wide ring with
 /// a matching executor pool. Returns (launches/sec, ring-occupancy
-/// peak).
-fn ring_point(slots: usize, per_session: usize) -> (f64, u64) {
+/// peak, per-slot (completions, mean latency ns) gauges).
+fn ring_point(slots: usize, per_session: usize) -> (f64, u64, Vec<(u64, f64)>) {
     const SESSIONS: usize = 4;
     let mem = Arc::new(DeviceMemory::new(MemConfig::default()));
     let arena = ArenaLayout::for_shape(1, slots);
@@ -448,6 +471,13 @@ fn ring_point(slots: usize, per_session: usize) -> (f64, u64) {
     let secs = t0.elapsed().as_secs_f64();
     let snap = engine.metrics.snapshot();
     assert_eq!(snap.launches as usize, SESSIONS * per_session, "every launch completed");
+    let gauges = engine.metrics.ring_slot_gauges();
+    assert_eq!(gauges.len(), slots);
+    assert_eq!(
+        gauges.iter().map(|(n, _)| *n).sum::<u64>() as usize,
+        SESSIONS * per_session,
+        "per-slot completions account for every launch"
+    );
     engine.stop();
-    ((SESSIONS * per_session) as f64 / secs, snap.ring_peak)
+    ((SESSIONS * per_session) as f64 / secs, snap.ring_peak, gauges)
 }

@@ -8,8 +8,18 @@
 //!   dynamic lookup.
 //! * [`callgraph`] — call-graph construction over the module (used to
 //!   decide which calls are library calls and for multi-team eligibility).
+//! * [`resolution`] — the libc/RPC symbol-resolution table (paper
+//!   §3.2/§3.4): every external callee classified device-native,
+//!   host-RPC, or unresolved. Materialized by the `libcres` pass,
+//!   consumed by `rpcgen` and the interpreter's dispatch.
+//!
+//! These analyses are cached by the pass manager's
+//! [`crate::transform::AnalysisCache`]: computed once per module state
+//! and invalidated only when a pass reports mutating the module.
 
 pub mod objects;
 pub mod callgraph;
+pub mod resolution;
 
-pub use objects::{classify_operand, ObjClass, ObjOrigin, OffKind};
+pub use objects::{classify_operand, def_map, ObjClass, ObjOrigin, OffKind};
+pub use resolution::{resolve_module, ResolutionTable, SymbolClass};

@@ -185,8 +185,12 @@ fn classify_rec(
                 Expr::Tid | Expr::NumThreads => ObjClass::Value,
                 _ => ObjClass::Value,
             },
-            // malloc-like results: tracked at runtime by the allocator.
-            Some(Instr::Intrinsic { name, .. }) if name == "malloc" || name == "realloc" => {
+            // malloc-like results: tracked at runtime by the allocator
+            // (per the device-native registry, not a name match).
+            Some(Instr::Intrinsic { name, .. })
+                if crate::libc_gpu::registry::lookup(name)
+                    .is_some_and(|f| f.returns_tracked_pointer()) =>
+            {
                 ObjClass::Dynamic
             }
             Some(Instr::Intrinsic { .. }) => ObjClass::Value,

@@ -1,0 +1,250 @@
+//! The libc/RPC symbol-resolution analysis.
+//!
+//! Paper §3.2: every library call is "either resolved through our partial
+//! libc GPU implementation or via automatically generated remote procedure
+//! calls to the host". [`resolve_module`] makes that dichotomy a
+//! first-class compile-time artifact: a module-wide [`ResolutionTable`]
+//! classifying every external callee as
+//!
+//! * **device-native** — backed by the [`crate::libc_gpu::registry`]
+//!   resolvable-symbol table (paper §3.4; never an RPC),
+//! * **host-RPC** — a host function `rpcgen` can synthesize a landing pad
+//!   for ([`crate::rpc::wrappers::host_function`]),
+//! * **unresolved** — known to neither side (the paper's "not infallible"
+//!   caveat).
+//!
+//! This is pure analysis over the module — the `libcres` *pass*
+//! ([`crate::transform::libcres`]) materializes the table into the
+//! compile report and owns the diagnostics, `rpcgen` consumes it (only
+//! host-RPC callees get landing pads), and the interpreter dispatches
+//! every external symbol through it
+//! ([`crate::ir::interp::ProgramEnv`]).
+
+use crate::analysis::callgraph::walk;
+use crate::ir::{Instr, Module};
+use crate::libc_gpu::registry::{self, DeviceFn};
+use crate::rpc::wrappers::{host_function, HostFnKind};
+use std::collections::BTreeMap;
+
+/// How one external symbol is satisfied (the per-callee verdict).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SymbolClass {
+    /// Resolved by the device-native partial libc — never an RPC.
+    Device(DeviceFn),
+    /// Resolved by a synthesized host landing pad.
+    HostRpc(HostFnKind),
+    /// Known to neither side; call sites will trap (reported at compile
+    /// time, counted at runtime).
+    Unresolved,
+}
+
+impl SymbolClass {
+    /// Short label for reports (`--explain`, JSON).
+    pub fn label(&self) -> &'static str {
+        match self {
+            SymbolClass::Device(_) => "device",
+            SymbolClass::HostRpc(_) => "host-rpc",
+            SymbolClass::Unresolved => "unresolved",
+        }
+    }
+}
+
+/// Everything the table records about one external symbol.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SymbolInfo {
+    pub class: SymbolClass,
+    /// Call sites across the module (0 for `extern`-declared but uncalled
+    /// symbols).
+    pub call_sites: u64,
+    /// Functions containing at least one call site, sorted.
+    pub callers: Vec<String>,
+}
+
+/// The module-wide symbol-resolution table: external symbol name →
+/// classification. Built by [`resolve_module`]; deterministic (sorted by
+/// name).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ResolutionTable {
+    pub symbols: BTreeMap<String, SymbolInfo>,
+}
+
+impl ResolutionTable {
+    /// The classification of `name`, if it is an external symbol of the
+    /// module this table was built from.
+    pub fn class_of(&self, name: &str) -> Option<SymbolClass> {
+        self.symbols.get(name).map(|s| s.class)
+    }
+
+    /// The device-native id `name` resolves to, if any.
+    pub fn device_fn(&self, name: &str) -> Option<DeviceFn> {
+        match self.class_of(name) {
+            Some(SymbolClass::Device(f)) => Some(f),
+            _ => None,
+        }
+    }
+
+    /// The host-function model `name` resolves to, if any — `rpcgen`'s
+    /// landing-pad filter.
+    pub fn host_kind(&self, name: &str) -> Option<HostFnKind> {
+        match self.class_of(name) {
+            Some(SymbolClass::HostRpc(k)) => Some(k),
+            _ => None,
+        }
+    }
+
+    /// Symbols known to neither the device libc nor the host wrapper
+    /// registry — the `libcres` pass's compile-time diagnostics.
+    pub fn unresolved(&self) -> Vec<&str> {
+        self.symbols
+            .iter()
+            .filter(|(_, i)| i.class == SymbolClass::Unresolved)
+            .map(|(n, _)| n.as_str())
+            .collect()
+    }
+
+    /// (device-native, host-RPC, unresolved) symbol counts.
+    pub fn counts(&self) -> (usize, usize, usize) {
+        let mut c = (0, 0, 0);
+        for i in self.symbols.values() {
+            match i.class {
+                SymbolClass::Device(_) => c.0 += 1,
+                SymbolClass::HostRpc(_) => c.1 += 1,
+                SymbolClass::Unresolved => c.2 += 1,
+            }
+        }
+        c
+    }
+
+    /// One human-readable line per symbol (`--explain`'s resolution
+    /// section).
+    pub fn lines(&self) -> Vec<String> {
+        self.symbols
+            .iter()
+            .map(|(name, i)| {
+                format!(
+                    "{name:<24} {:<10} {} call site(s) in {:?}",
+                    i.class.label(),
+                    i.call_sites,
+                    i.callers
+                )
+            })
+            .collect()
+    }
+
+    /// One-line summary for pass reports.
+    pub fn summary(&self) -> String {
+        let (d, h, u) = self.counts();
+        format!("{d} device-native, {h} host-rpc, {u} unresolved")
+    }
+}
+
+/// Build the resolution table for `m`: every undefined callee (calls to
+/// names with no definition in the module), every device intrinsic, and
+/// every `extern` declaration, classified against the device registry
+/// and the host wrapper table. Pure analysis — the module is not
+/// mutated — so the pass manager caches it until a pass invalidates the
+/// module.
+pub fn resolve_module(m: &Module) -> ResolutionTable {
+    let mut table = ResolutionTable::default();
+    let mut note = |name: &str, caller: Option<&str>| {
+        let info = table.symbols.entry(name.to_string()).or_insert_with(|| SymbolInfo {
+            class: classify(name),
+            call_sites: 0,
+            callers: Vec::new(),
+        });
+        if let Some(caller) = caller {
+            info.call_sites += 1;
+            if !info.callers.iter().any(|c| c == caller) {
+                info.callers.push(caller.to_string());
+            }
+        }
+    };
+    for (fname, f) in &m.functions {
+        walk(&f.body, &mut |ins| match ins {
+            Instr::Call { callee, .. } if !m.is_defined(callee) => note(callee, Some(fname)),
+            Instr::Intrinsic { name, .. } => note(name, Some(fname)),
+            _ => {}
+        });
+    }
+    for ext in &m.externals {
+        if !m.is_defined(ext) {
+            note(ext, None);
+        }
+    }
+    for info in table.symbols.values_mut() {
+        info.callers.sort_unstable();
+    }
+    table
+}
+
+fn classify(name: &str) -> SymbolClass {
+    if let Some(f) = registry::lookup(name) {
+        SymbolClass::Device(f)
+    } else if let Some(k) = host_function(name) {
+        SymbolClass::HostRpc(k)
+    } else {
+        SymbolClass::Unresolved
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    const SRC: &str = r#"
+extern sincos
+
+func @helper() -> void {
+  call fprintf(2)
+  return
+}
+
+func @main() -> i64 {
+  %p = call malloc(32)
+  call fprintf(2)
+  call dgemm(1)
+  call free(%p)
+  call helper()
+  return 0
+}
+"#;
+
+    #[test]
+    fn classifies_all_three_kinds() {
+        let m = parse_module(SRC).unwrap();
+        let t = resolve_module(&m);
+        assert_eq!(t.device_fn("malloc"), Some(DeviceFn::Malloc));
+        assert_eq!(t.device_fn("free"), Some(DeviceFn::Free));
+        assert!(matches!(t.host_kind("fprintf"), Some(HostFnKind::Printf { has_fd: true })));
+        assert_eq!(t.class_of("dgemm"), Some(SymbolClass::Unresolved));
+        assert_eq!(t.unresolved(), vec!["dgemm", "sincos"]);
+        assert_eq!(t.counts(), (2, 1, 2));
+        // Defined functions never appear.
+        assert_eq!(t.class_of("helper"), None);
+        assert_eq!(t.class_of("main"), None);
+    }
+
+    #[test]
+    fn call_sites_and_callers_are_counted() {
+        let m = parse_module(SRC).unwrap();
+        let t = resolve_module(&m);
+        let fp = &t.symbols["fprintf"];
+        assert_eq!(fp.call_sites, 2);
+        assert_eq!(fp.callers, vec!["helper".to_string(), "main".into()]);
+        // extern-declared but uncalled: present with zero sites.
+        assert_eq!(t.symbols["sincos"].call_sites, 0);
+        assert!(t.symbols["sincos"].callers.is_empty());
+    }
+
+    #[test]
+    fn table_is_deterministic_and_reportable() {
+        let m = parse_module(SRC).unwrap();
+        let t = resolve_module(&m);
+        assert_eq!(t, resolve_module(&m));
+        let lines = t.lines();
+        assert_eq!(lines.len(), t.symbols.len());
+        assert!(lines.iter().any(|l| l.contains("dgemm") && l.contains("unresolved")));
+        assert!(t.summary().contains("2 device-native"));
+    }
+}

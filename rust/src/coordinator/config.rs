@@ -14,7 +14,9 @@ pub struct Config {
     /// RPC mailbox lanes (`--rpc-lanes`, or `--rpc-lanes auto` to size
     /// from the team count); 1 = the paper's single slot.
     pub rpc_lanes: usize,
-    /// Host RPC poll worker threads (`--rpc-workers`).
+    /// Host RPC poll worker threads (`--rpc-workers`, or `--rpc-workers
+    /// auto` to run one worker per resolved lane, clamped to the host's
+    /// available parallelism).
     pub rpc_workers: usize,
     /// Dedicated kernel-split launch executor threads
     /// (`--rpc-launch-threads`).
@@ -54,7 +56,7 @@ impl Default for Config {
 impl Config {
     /// Build from CLI arguments:
     /// `--teams N --threads N --allocator generic|vendor|balanced[N,M]
-    ///  --heap-mb N --rpc-lanes N|auto --rpc-workers N
+    ///  --heap-mb N --rpc-lanes N|auto --rpc-workers N|auto
     ///  --rpc-launch-threads N --rpc-launch-slots N
     ///  --rpc-data-cap BYTES --no-rpc-batch --verbose`.
     pub fn from_args(args: &Args) -> Result<Self, String> {
@@ -70,7 +72,6 @@ impl Config {
         }
         let heap_mb = int("heap-mb")?.unwrap_or(256);
         cfg.mem.global_size = (heap_mb as u64) << 20;
-        cfg.rpc_workers = int("rpc-workers")?.unwrap_or(cfg.rpc_workers);
         cfg.rpc_launch_threads = int("rpc-launch-threads")?.unwrap_or(cfg.rpc_launch_threads);
         cfg.rpc_launch_slots = int("rpc-launch-slots")?.unwrap_or(cfg.rpc_launch_slots);
         cfg.rpc_data_cap = args.try_get::<u64>("rpc-data-cap", "a byte count")?;
@@ -85,30 +86,33 @@ impl Config {
                 ));
             }
         }
-        if cfg.rpc_workers == 0 || cfg.rpc_launch_threads == 0 || cfg.rpc_launch_slots == 0 {
-            return Err(
-                "rpc-lanes/rpc-workers/rpc-launch-threads/rpc-launch-slots must be positive"
-                    .into(),
-            );
+        if cfg.rpc_launch_threads == 0 || cfg.rpc_launch_slots == 0 {
+            return Err("--rpc-launch-threads/--rpc-launch-slots must be positive".into());
         }
-        // Lanes last among the engine knobs: `auto` sizes from the team
-        // count and needs the (validated) ring width and data cap.
+        // Lanes before workers among the engine knobs: both `auto`
+        // resolvers need earlier values — lanes sizes from the team count
+        // against the (validated) ring width and data cap, workers size
+        // from the resolved lane count.
         cfg.rpc_lanes = match args.get("rpc-lanes") {
             Some("auto") => {
                 auto_lanes(cfg.teams, &cfg.mem, cfg.rpc_launch_slots, cfg.rpc_data_cap)
             }
             _ => int("rpc-lanes")?.unwrap_or(cfg.rpc_lanes),
         };
+        cfg.rpc_workers = match args.get("rpc-workers") {
+            Some("auto") => auto_workers(cfg.rpc_lanes),
+            _ => int("rpc-workers")?.unwrap_or(cfg.rpc_workers),
+        };
+        // Lanes and workers validate together once both are resolved
+        // (the launch knobs were checked above, before the `auto` lane
+        // resolver fed them into the arena constructors).
+        if cfg.rpc_lanes == 0 || cfg.rpc_workers == 0 {
+            return Err("--rpc-lanes/--rpc-workers must be positive".into());
+        }
         cfg.rpc_batch = !args.flag("no-rpc-batch");
         cfg.verbose = args.flag("verbose");
         if cfg.teams == 0 || cfg.threads_per_team == 0 {
             return Err("teams/threads must be positive".into());
-        }
-        if cfg.rpc_lanes == 0 {
-            return Err(
-                "rpc-lanes/rpc-workers/rpc-launch-threads/rpc-launch-slots must be positive"
-                    .into(),
-            );
         }
         // Reject arena shapes the device cannot reserve here, where it is
         // a clean CLI error rather than a panic in Device::with_arena.
@@ -154,6 +158,15 @@ fn arena_for(
         Some(cap) => crate::rpc::engine::ArenaLayout::with_ring(lanes, cap, launch_slots),
         None => crate::rpc::engine::ArenaLayout::for_shape(lanes, launch_slots),
     }
+}
+
+/// Resolve `--rpc-workers auto`: one poll worker per lane — the widest
+/// shape where workers never outnumber lanes (extra pollers only add
+/// steal contention; see the fig07 sweep) — clamped to the host's
+/// available parallelism, and never below 1.
+pub fn auto_workers(lanes: usize) -> usize {
+    let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    lanes.clamp(1, avail.max(1))
 }
 
 /// Resolve `--rpc-lanes auto`: one lane per team — a team never waits
@@ -273,6 +286,37 @@ mod tests {
         let cfg = Config::from_args(&args).unwrap();
         assert_eq!(cfg.rpc_lanes, 1);
         assert_eq!(cfg.arena(), crate::rpc::engine::ArenaLayout::legacy());
+    }
+
+    #[test]
+    fn auto_workers_follow_lanes_clamped_to_parallelism() {
+        let avail = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+        assert_eq!(auto_workers(1), 1);
+        assert_eq!(auto_workers(4), 4.min(avail).max(1));
+        assert_eq!(auto_workers(1 << 20), avail.max(1), "huge lane counts clamp to the host");
+        assert!(auto_workers(0) >= 1, "never resolves to zero workers");
+
+        let args = Args::parse(&sv(&["--rpc-lanes", "4", "--rpc-workers", "auto"]), &[]);
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.rpc_workers, auto_workers(4));
+        assert!(cfg.rpc_workers >= 1 && cfg.rpc_workers <= 4);
+
+        // `auto` workers compose with `auto` lanes (lanes resolve first).
+        let args =
+            Args::parse(&sv(&["--teams", "6", "--rpc-lanes", "auto", "--rpc-workers", "auto"]), &[]);
+        let cfg = Config::from_args(&args).unwrap();
+        assert_eq!(cfg.rpc_lanes, 6);
+        assert_eq!(cfg.rpc_workers, auto_workers(6));
+    }
+
+    #[test]
+    fn malformed_rpc_workers_is_a_clean_usage_err() {
+        for bad in ["lots", "-2", "1.5"] {
+            let args = Args::parse(&sv(&["--rpc-workers", bad]), &[]);
+            let err = Config::from_args(&args).unwrap_err();
+            assert!(err.contains("--rpc-workers"), "names the flag: {err}");
+            assert!(err.contains(bad), "echoes the value: {err}");
+        }
     }
 
     #[test]

@@ -19,7 +19,7 @@ use crate::ir::Module;
 use crate::rpc::engine::{EngineConfig, RpcEngine};
 use crate::rpc::wrappers::register_common;
 use crate::rpc::{EngineSnapshot, HostEnv, WrapperRegistry};
-use crate::transform::{compile, CompileOptions, CompileReport};
+use crate::transform::{compile, compile_with_spec, CompileOptions, CompileReport, PipelineSpec};
 use std::sync::atomic::Ordering;
 use std::sync::Arc;
 
@@ -80,6 +80,15 @@ impl GpuFirstSession {
         Ok(())
     }
 
+    /// `compile` with an explicit pass list (the `--passes` /
+    /// `GPU_FIRST_PASSES` override).
+    pub fn compile_spec(&mut self, module: &mut Module, spec: &PipelineSpec) -> Result<(), String> {
+        let report = compile_with_spec(module, &self.registry, spec)
+            .map_err(|errs| format!("verification failed:\n  {}", errs.join("\n  ")))?;
+        self.report = Some(report);
+        Ok(())
+    }
+
     /// Materialize the compiled module on the device.
     pub fn load(&mut self, module: Module) {
         let env = ProgramEnv::load_with_grid(
@@ -110,6 +119,8 @@ impl GpuFirstSession {
             grid: (self.cfg.teams, self.cfg.threads_per_team),
             rpc_engine: self.engine_snapshot(),
             host_io: self.host.io_snapshot(),
+            passes: self.report.as_ref().map(|r| r.timings.clone()).unwrap_or_default(),
+            unresolved_calls: env.unresolved_calls.load(Ordering::Relaxed),
         };
         (ret, metrics)
     }
@@ -122,6 +133,18 @@ impl GpuFirstSession {
         argv: &[i64],
     ) -> Result<(i64, RunMetrics), String> {
         self.compile(&mut module, opts)?;
+        self.load(module);
+        Ok(self.run(argv))
+    }
+
+    /// `execute` with an explicit pass list.
+    pub fn execute_spec(
+        &mut self,
+        mut module: Module,
+        spec: &PipelineSpec,
+        argv: &[i64],
+    ) -> Result<(i64, RunMetrics), String> {
+        self.compile_spec(&mut module, spec)?;
         self.load(module);
         Ok(self.run(argv))
     }
@@ -172,6 +195,38 @@ func @main() -> i64 {
         assert_eq!(snap.launches, 0, "no parallel region, no kernel-split launch");
         assert_eq!(metrics.host_io.shards, 0, "single-lane session stays unsharded");
         assert_eq!(session.rpc_served(), 1);
+        // The pass manager's timings ride into RunMetrics.
+        let names: Vec<&str> = metrics.passes.iter().map(|t| t.pass.as_str()).collect();
+        assert_eq!(names, vec!["libcres", "rpcgen", "multiteam"]);
+        assert!(metrics.compile_ns() > 0.0);
+        assert_eq!(metrics.unresolved_calls, 0);
+        session.stop();
+    }
+
+    #[test]
+    fn session_honours_explicit_pipeline_spec() {
+        let src = r#"
+global @fmt const 6 "x=%d\n"
+
+func @main() -> i64 {
+  parallel {
+    for.team %i = 0 to 16 step 1 {
+      %x = mul %i, 2
+    }
+  }
+  call printf(@fmt, 7)
+  return 0
+}
+"#;
+        let module = crate::ir::parser::parse_module(src).unwrap();
+        let spec = crate::transform::PipelineSpec::parse("libcres,rpcgen").unwrap();
+        let mut session = GpuFirstSession::start(small_cfg());
+        let (ret, metrics) = session.execute_spec(module, &spec, &[]).unwrap();
+        assert_eq!(ret, 0);
+        assert_eq!(session.host.stdout_string(), "x=7\n");
+        assert_eq!(metrics.kernel_launches, 0, "multiteam dropped from the pipeline");
+        let names: Vec<&str> = metrics.passes.iter().map(|t| t.pass.as_str()).collect();
+        assert_eq!(names, vec!["libcres", "rpcgen"]);
         session.stop();
     }
 

@@ -1,12 +1,15 @@
 //! Per-run metrics: real wallclock + modeled device time decomposition,
-//! plus the RPC engine's occupancy/batching/launch-executor counters and
-//! the host environment's file-table shard counters.
+//! the RPC engine's occupancy/batching/launch-executor counters, the
+//! host environment's file-table shard counters, and the middle-end's
+//! per-pass wall times from the pass manager.
 
 use crate::gpu::stats::LaunchStats;
 use crate::perfmodel::a100;
 use crate::rpc::{EngineSnapshot, HostIoSnapshot};
+use crate::transform::PassTiming;
+use crate::util::json::Json;
 
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone)]
 pub struct RunMetrics {
     pub exit_code: i64,
     /// Real wallclock of the whole simulated run on this host.
@@ -23,6 +26,12 @@ pub struct RunMetrics {
     /// HostEnv file-table shard counters (opens per table class, lock
     /// contention).
     pub host_io: HostIoSnapshot,
+    /// Per-pass wall time + summaries from the compile that produced the
+    /// executed module (empty for hand-built metrics).
+    pub passes: Vec<PassTiming>,
+    /// Runtime hits on symbols `libcres` classified unresolved (each
+    /// degraded to a no-op).
+    pub unresolved_calls: u64,
 }
 
 impl RunMetrics {
@@ -39,6 +48,11 @@ impl RunMetrics {
         serial + par + self.kernel_launches as f64 * a100::KERNEL_SPLIT_RPC_NS
     }
 
+    /// Total middle-end wall time across the recorded passes.
+    pub fn compile_ns(&self) -> f64 {
+        self.passes.iter().map(|t| t.wall_ns).sum()
+    }
+
     pub fn summary(&self) -> String {
         let mut s = format!(
             "exit={} wall={} modeled_device={} launches={} grid={}x{} rpcs={}",
@@ -50,6 +64,20 @@ impl RunMetrics {
             self.grid.1,
             self.main_stats.rpc_calls + self.kernel_stats.rpc_calls,
         );
+        if !self.passes.is_empty() {
+            s.push_str(&format!(
+                " compile={} passes=[{}]",
+                crate::util::fmt_ns(self.compile_ns()),
+                self.passes
+                    .iter()
+                    .map(|t| format!("{}:{}", t.pass, crate::util::fmt_ns(t.wall_ns)))
+                    .collect::<Vec<_>>()
+                    .join(","),
+            ));
+        }
+        if self.unresolved_calls > 0 {
+            s.push_str(&format!(" unresolved_calls={}", self.unresolved_calls));
+        }
         if let Some(e) = &self.rpc_engine {
             s.push(' ');
             s.push_str(&e.summary());
@@ -67,39 +95,72 @@ impl RunMetrics {
         }
         s
     }
+
+    /// Machine-readable report (mirrors `summary()`, adds the per-pass
+    /// breakdown for trajectory tracking).
+    pub fn to_json(&self) -> Json {
+        let passes: Vec<Json> = self
+            .passes
+            .iter()
+            .map(|t| {
+                Json::obj(vec![
+                    ("pass", Json::str(t.pass.as_str())),
+                    ("wall_ns", Json::num(t.wall_ns)),
+                    ("changed", Json::num(if t.changed { 1.0 } else { 0.0 })),
+                    ("summary", Json::str(t.summary.as_str())),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("exit_code", Json::num(self.exit_code as f64)),
+            ("wall_ns", Json::num(self.wall_ns)),
+            ("modeled_device_ns", Json::num(self.modeled_device_ns())),
+            ("compile_ns", Json::num(self.compile_ns())),
+            ("kernel_launches", Json::num(self.kernel_launches as f64)),
+            ("teams", Json::num(self.grid.0 as f64)),
+            ("threads_per_team", Json::num(self.grid.1 as f64)),
+            (
+                "rpcs",
+                Json::num((self.main_stats.rpc_calls + self.kernel_stats.rpc_calls) as f64),
+            ),
+            ("unresolved_calls", Json::num(self.unresolved_calls as f64)),
+            ("passes", Json::Arr(passes)),
+        ])
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    #[test]
-    fn modeled_time_includes_launch_rpc() {
-        let m = RunMetrics {
-            exit_code: 0,
-            wall_ns: 0.0,
-            main_stats: LaunchStats::default(),
-            kernel_stats: LaunchStats::default(),
-            kernel_launches: 3,
-            grid: (4, 32),
-            rpc_engine: None,
-            host_io: HostIoSnapshot::default(),
-        };
-        assert!(m.modeled_device_ns() >= 3.0 * a100::KERNEL_SPLIT_RPC_NS);
-        assert!(m.summary().contains("launches=3"));
-        assert!(!m.summary().contains("rpc_engine"));
-        assert!(!m.summary().contains("host_io"), "unsharded runs stay quiet");
-    }
-
-    #[test]
-    fn summary_appends_engine_and_host_io_counters() {
-        let m = RunMetrics {
+    fn base() -> RunMetrics {
+        RunMetrics {
             exit_code: 0,
             wall_ns: 0.0,
             main_stats: LaunchStats::default(),
             kernel_stats: LaunchStats::default(),
             kernel_launches: 0,
             grid: (1, 1),
+            rpc_engine: None,
+            host_io: HostIoSnapshot::default(),
+            passes: Vec::new(),
+            unresolved_calls: 0,
+        }
+    }
+
+    #[test]
+    fn modeled_time_includes_launch_rpc() {
+        let m = RunMetrics { kernel_launches: 3, grid: (4, 32), ..base() };
+        assert!(m.modeled_device_ns() >= 3.0 * a100::KERNEL_SPLIT_RPC_NS);
+        assert!(m.summary().contains("launches=3"));
+        assert!(!m.summary().contains("rpc_engine"));
+        assert!(!m.summary().contains("host_io"), "unsharded runs stay quiet");
+        assert!(!m.summary().contains("passes"), "hand-built metrics carry no pass data");
+    }
+
+    #[test]
+    fn summary_appends_engine_and_host_io_counters() {
+        let m = RunMetrics {
             rpc_engine: Some(EngineSnapshot {
                 lanes: 4,
                 workers: 2,
@@ -129,6 +190,7 @@ mod tests {
                 content_shards: 16,
                 content_contention: 5,
             },
+            ..base()
         };
         let s = m.summary();
         assert!(s.contains("rpc_engine lanes=4 workers=2 served=10"));
@@ -138,5 +200,35 @@ mod tests {
         assert!(s.contains("host_io shards=4 opens=7+1 contention=3"), "{s}");
         assert!(s.contains("files_contention=5/16shards"), "content-map counters: {s}");
         assert_eq!(m.rpc_engine.unwrap().launch_latency_ns(), 1000.0);
+    }
+
+    #[test]
+    fn summary_and_json_carry_pass_timings() {
+        let m = RunMetrics {
+            passes: vec![
+                PassTiming {
+                    pass: "libcres".into(),
+                    wall_ns: 1000.0,
+                    summary: "1 host-rpc".into(),
+                    changed: false,
+                },
+                PassTiming {
+                    pass: "rpcgen".into(),
+                    wall_ns: 2000.0,
+                    summary: "1 call sites rewritten".into(),
+                    changed: true,
+                },
+            ],
+            unresolved_calls: 3,
+            ..base()
+        };
+        assert_eq!(m.compile_ns(), 3000.0);
+        let s = m.summary();
+        assert!(s.contains("passes=[libcres:"), "{s}");
+        assert!(s.contains("unresolved_calls=3"), "{s}");
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"compile_ns\""), "{j}");
+        assert!(j.contains("\"rpcgen\""), "{j}");
+        assert!(j.contains("\"unresolved_calls\":3"), "{j}");
     }
 }

@@ -9,6 +9,6 @@ pub mod config;
 pub mod loader;
 pub mod metrics;
 
-pub use config::{auto_lanes, Config};
+pub use config::{auto_lanes, auto_workers, Config};
 pub use loader::GpuFirstSession;
 pub use metrics::RunMetrics;

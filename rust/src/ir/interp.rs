@@ -19,9 +19,11 @@ use super::*;
 use crate::gpu::grid::{Device, GridCtx, LaunchConfig};
 use crate::gpu::stats::{LaunchStats, Pattern};
 use crate::libc_gpu::rand::DeviceRand;
+use crate::libc_gpu::registry::DeviceFn;
 use crate::libc_gpu::{stdlib as dstdlib, string as dstring};
+use crate::analysis::resolution::{resolve_module, ResolutionTable, SymbolClass};
 use crate::rpc::{RpcArgInfo, RpcClient, WrapperRegistry};
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -36,6 +38,15 @@ pub struct ProgramEnv {
     pub host: Arc<crate::rpc::HostEnv>,
     /// name -> (base address, size) of materialized globals.
     pub globals: HashMap<String, (u64, u64)>,
+    /// The compile-time symbol-resolution table (libcres): every external
+    /// callee classified device-native / host-RPC / unresolved. The
+    /// interpreter dispatches through it — no string matching on the
+    /// execution path.
+    pub resolution: ResolutionTable,
+    /// Call sites that reached an unresolved symbol at runtime (each
+    /// degrades to a no-op returning 0, warned once per symbol).
+    pub unresolved_calls: AtomicU64,
+    unresolved_warned: Mutex<BTreeSet<String>>,
     /// Kernel-region name -> launch id used in the launch RPC.
     pub region_ids: HashMap<String, u64>,
     region_names: Vec<String>,
@@ -138,12 +149,20 @@ impl ProgramEnv {
             }
         }
         let stack_slots = device.mem.config().stack_size / PER_THREAD_STACK;
+        // The load-time resolution table: identical to the one the
+        // `libcres` pass reports at compile time (same pure analysis), so
+        // dispatch agrees with the compile-time classification even for
+        // modules loaded without the full pipeline.
+        let resolution = resolve_module(&module);
         let env = Arc::new(Self {
             module,
             device,
             registry,
             host,
             globals,
+            resolution,
+            unresolved_calls: AtomicU64::new(0),
+            unresolved_warned: Mutex::new(BTreeSet::new()),
             region_ids,
             region_names,
             pending: Mutex::new(None),
@@ -171,6 +190,20 @@ impl ProgramEnv {
     /// Kernel-region names in launch-id order.
     pub fn region_names(&self) -> &[String] {
         &self.region_names
+    }
+
+    /// Record one runtime hit on an unresolved symbol: count it and warn
+    /// once per symbol. The call degrades to a no-op returning 0 (the
+    /// PR 2 `snprintf` idiom) instead of panicking — `libcres` already
+    /// reported the symbol at compile time.
+    fn unresolved_trap(&self, name: &str) {
+        self.unresolved_calls.fetch_add(1, Ordering::Relaxed);
+        if self.unresolved_warned.lock().unwrap().insert(name.to_string()) {
+            eprintln!(
+                ";; gpu-first: call to unresolved symbol '{name}' degraded to a no-op \
+                 (libcres classifies it neither device-native nor host-RPC)"
+            );
+        }
     }
 
     fn global_addr(&self, name: &str) -> u64 {
@@ -302,17 +335,36 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
     }
 
     pub fn call_function(&mut self, name: &str, args: Vec<Value>) -> Option<Value> {
-        let f = self
-            .env
-            .module
-            .functions
-            .get(name)
-            .unwrap_or_else(|| panic!("call to undefined function {name} (missing rpcgen?)"))
-            .clone();
+        let Some(f) = self.env.module.functions.get(name) else {
+            // Undefined callee: dispatch through the compile-time
+            // resolution table instead of panicking on an unknown name.
+            return self.external_call(name, &args);
+        };
+        let f = f.clone();
         assert_eq!(f.params.len(), args.len(), "arity mismatch calling {name}");
         let bindings: Vec<(String, Value)> =
             f.params.iter().zip(args).map(|(p, v)| (p.name.clone(), v)).collect();
         self.exec_function_body(&f.body, bindings)
+    }
+
+    /// A call to a function the module does not define, resolved through
+    /// the `libcres` table: device-native symbols run on the device,
+    /// host-RPC symbols trap (they should have been lowered to
+    /// [`Instr::RpcCall`] by the `rpcgen` pass — leaving them direct is
+    /// the Tian et al. baseline where such calls trap), and unresolved
+    /// symbols degrade to a counted, warned no-op.
+    fn external_call(&mut self, name: &str, args: &[Value]) -> Option<Value> {
+        match self.env.resolution.class_of(name) {
+            Some(SymbolClass::Device(dev)) => Some(self.device_fn(dev, args)),
+            Some(SymbolClass::HostRpc(_)) => panic!(
+                "host-RPC callee {name} reached the interpreter unlowered \
+                 (run the 'rpcgen' pass; direct library calls trap in the baseline)"
+            ),
+            Some(SymbolClass::Unresolved) | None => {
+                self.env.unresolved_trap(name);
+                Some(Value::I(0))
+            }
+        }
     }
 
     fn exec_function_body(
@@ -396,7 +448,22 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
             }
             Instr::Intrinsic { dst, name, args } => {
                 let vals: Vec<Value> = args.iter().map(|a| self.eval(a)).collect();
-                let ret = self.intrinsic(name, &vals);
+                // Resolved through the table built at load time — never a
+                // string match with a panic fallback. (Host-RPC symbols
+                // cannot legally appear as intrinsics — verify() rejects
+                // them — so that arm is a loud malformed-module trap, not
+                // a silent no-op with a false "unresolved" diagnostic.)
+                let ret = match self.env.resolution.class_of(name) {
+                    Some(SymbolClass::Device(dev)) => self.device_fn(dev, &vals),
+                    Some(SymbolClass::HostRpc(_)) => panic!(
+                        "intrinsic {name} resolves host-RPC, not device-native \
+                         (malformed module: verify() would reject it)"
+                    ),
+                    Some(SymbolClass::Unresolved) | None => {
+                        self.env.unresolved_trap(name);
+                        Value::I(0)
+                    }
+                };
                 if let Some(d) = dst {
                     self.set(d, ret);
                 }
@@ -547,22 +614,25 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         }
     }
 
-    fn intrinsic(&mut self, name: &str, args: &[Value]) -> Value {
+    /// Execute one device-native libc function (paper §3.4). The match is
+    /// total over [`DeviceFn`] — a symbol that resolves device-native can
+    /// never trap here.
+    fn device_fn(&mut self, f: DeviceFn, args: &[Value]) -> Value {
         let mem = &self.env.device.mem;
-        match name {
-            "malloc" => {
+        match f {
+            DeviceFn::Malloc => {
                 let size = args[0].as_i().max(0) as u64;
                 let addr = self.g.malloc(size).unwrap_or_else(|e| panic!("malloc: {e}"));
                 Value::I(addr as i64)
             }
-            "free" => {
+            DeviceFn::Free => {
                 let addr = args[0].as_addr();
                 if addr != 0 {
                     self.g.free(addr).unwrap_or_else(|e| panic!("free: {e}"));
                 }
                 Value::I(0)
             }
-            "realloc" => {
+            DeviceFn::Realloc => {
                 let old = args[0].as_addr();
                 let new_size = args[1].as_i().max(0) as u64;
                 let new = self.g.malloc(new_size).unwrap_or_else(|e| panic!("realloc: {e}"));
@@ -574,33 +644,38 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
                 }
                 Value::I(new as i64)
             }
-            "strlen" => Value::I(dstring::strlen(mem, args[0].as_addr()) as i64),
-            "strcpy" => Value::I(dstring::strcpy(mem, args[0].as_addr(), args[1].as_addr()) as i64),
-            "strcmp" => Value::I(dstring::strcmp(mem, args[0].as_addr(), args[1].as_addr()) as i64),
-            "strcat" => Value::I(dstring::strcat(mem, args[0].as_addr(), args[1].as_addr()) as i64),
-            "memcpy" => Value::I(dstring::memcpy(
+            DeviceFn::Strlen => Value::I(dstring::strlen(mem, args[0].as_addr()) as i64),
+            DeviceFn::Strcpy => {
+                Value::I(dstring::strcpy(mem, args[0].as_addr(), args[1].as_addr()) as i64)
+            }
+            DeviceFn::Strcmp => {
+                Value::I(dstring::strcmp(mem, args[0].as_addr(), args[1].as_addr()) as i64)
+            }
+            DeviceFn::Strcat => {
+                Value::I(dstring::strcat(mem, args[0].as_addr(), args[1].as_addr()) as i64)
+            }
+            DeviceFn::Memcpy => Value::I(dstring::memcpy(
                 mem,
                 args[0].as_addr(),
                 args[1].as_addr(),
                 args[2].as_i() as u64,
             ) as i64),
-            "memset" => Value::I(dstring::memset(
+            DeviceFn::Memset => Value::I(dstring::memset(
                 mem,
                 args[0].as_addr(),
                 args[1].as_i() as u8,
                 args[2].as_i() as u64,
             ) as i64),
-            "strtod" => Value::F(dstdlib::strtod(mem, args[0].as_addr()).0),
-            "atoi" => Value::I(dstdlib::atoi(mem, args[0].as_addr())),
-            "rand" => Value::I(self.rand.rand() as i64),
-            "srand" => {
+            DeviceFn::Strtod => Value::F(dstdlib::strtod(mem, args[0].as_addr()).0),
+            DeviceFn::Atoi => Value::I(dstdlib::atoi(mem, args[0].as_addr())),
+            DeviceFn::Rand => Value::I(self.rand.rand() as i64),
+            DeviceFn::Srand => {
                 self.rand =
                     DeviceRand::for_thread(args[0].as_i() as u64, self.g.global_tid() as u64);
                 Value::I(0)
             }
-            "sqrt" => Value::F(args[0].as_f().sqrt()),
-            "fabs" => Value::F(args[0].as_f().abs()),
-            other => panic!("unknown intrinsic {other}"),
+            DeviceFn::Sqrt => Value::F(args[0].as_f().sqrt()),
+            DeviceFn::Fabs => Value::F(args[0].as_f().abs()),
         }
     }
 
@@ -897,8 +972,10 @@ func @main() -> i64 {
         let (multi, _) = env.run_main(&[]);
         server.stop();
 
-        let opts_single =
-            crate::transform::CompileOptions { rpcgen: true, multiteam: false };
+        let opts_single = crate::transform::CompileOptions {
+            multiteam: false,
+            ..Default::default()
+        };
         let (env2, server2) = setup(src, opts_single);
         let (single, _) = env2.run_main(&[]);
         server2.stop();
@@ -906,6 +983,49 @@ func @main() -> i64 {
         assert_eq!(multi, 1022 * 3);
         assert_eq!(single, multi, "expansion must preserve semantics");
         assert_eq!(env2.kernel_launches.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn unresolved_symbol_degrades_to_counted_noop() {
+        // Pre-refactor this panicked ("call to undefined function");
+        // now libcres reports it at compile time and the runtime hit is
+        // a counted no-op returning 0.
+        let src = "func @main() -> i64 {\n  %r = call dgemm(1)\n  %x = call dgemm(2)\n  return %r\n}\n";
+        let (env, server) = setup(src, crate::transform::CompileOptions::default());
+        assert!(matches!(
+            env.resolution.class_of("dgemm"),
+            Some(crate::transform::SymbolClass::Unresolved)
+        ));
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 0);
+        assert_eq!(env.unresolved_calls.load(Ordering::Relaxed), 2);
+        server.stop();
+    }
+
+    #[test]
+    fn device_native_direct_call_dispatches_through_table() {
+        // A hand-built module can carry Instr::Call to a device symbol
+        // (bypassing the parser's intrinsic lowering); the table routes
+        // it to the device libc rather than panicking.
+        let src = "func @main() -> i64 {\n  %p = call malloc(32)\n  store.8 7, %p\n  %v = load.8 %p\n  call free(%p)\n  return %v\n}\n";
+        let mut m = crate::ir::parser::parse_module(src).unwrap();
+        // Re-introduce direct calls in place of the parsed intrinsics.
+        let body = &mut m.functions.get_mut("main").unwrap().body;
+        for ins in body.iter_mut() {
+            if let Instr::Intrinsic { dst, name, args } = ins {
+                *ins = Instr::Call { dst: dst.clone(), callee: name.clone(), args: args.clone() };
+            }
+        }
+        let registry = Arc::new(WrapperRegistry::new());
+        let device = Arc::new(Device::new(
+            crate::gpu::memory::MemConfig::small(),
+            crate::gpu::grid::AllocatorKind::Generic,
+        ));
+        let host = Arc::new(crate::rpc::HostEnv::new());
+        let env = ProgramEnv::load(m, device, registry, host);
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 7);
+        assert_eq!(env.unresolved_calls.load(Ordering::Relaxed), 0);
     }
 
     #[test]

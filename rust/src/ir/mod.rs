@@ -249,26 +249,12 @@ impl Module {
         self.functions.contains_key(name)
     }
 
-    /// Device-native libc (paper §3.4): these never become RPCs.
+    /// Device-native libc (paper §3.4): these never become RPCs. Backed
+    /// by the [`crate::libc_gpu::registry`] resolvable-symbol table —
+    /// the same table the `libcres` pass and the interpreter's intrinsic
+    /// dispatch consult, so the three can never disagree.
     pub fn is_native_intrinsic(name: &str) -> bool {
-        matches!(
-            name,
-            "malloc"
-                | "free"
-                | "realloc"
-                | "strlen"
-                | "strcpy"
-                | "strcmp"
-                | "strcat"
-                | "memcpy"
-                | "memset"
-                | "strtod"
-                | "atoi"
-                | "rand"
-                | "srand"
-                | "sqrt"
-                | "fabs"
-        )
+        crate::libc_gpu::registry::lookup(name).is_some()
     }
 
     /// Verify structural invariants; returns human-readable errors.

@@ -6,8 +6,16 @@
 //! IR programs as interpreter intrinsics and to the hand-ported apps as
 //! plain calls. Functions that need OS support (file I/O, `exit`) are NOT
 //! here — they go through the RPC layer.
+//!
+//! [`registry`] is the compile-time face of this module: the enumerable
+//! table of symbols the device resolves natively, queried by the
+//! `libcres` pass and used by the interpreter for panic-free intrinsic
+//! dispatch.
 
 pub mod string;
 pub mod stdlib;
 pub mod rand;
 pub mod stdio;
+pub mod registry;
+
+pub use registry::DeviceFn;

@@ -1,0 +1,114 @@
+//! The resolvable-symbol registry of the device-native partial libc.
+//!
+//! Paper §3.2: every library call is "either resolved through our partial
+//! libc GPU implementation or via automatically generated remote procedure
+//! calls to the host". This module is the compile-time table backing the
+//! first half of that sentence: the complete, enumerable set of symbols
+//! the device can satisfy without host involvement.
+//!
+//! The `libcres` pass ([`crate::transform::libcres`]) queries [`lookup`]
+//! to classify callees as *device-native*, the parser uses it (through
+//! [`crate::ir::Module::is_native_intrinsic`]) to lower calls to
+//! [`crate::ir::Instr::Intrinsic`], and the interpreter dispatches
+//! intrinsics on the [`DeviceFn`] id resolved at load time — there is no
+//! string matching (and no "unknown intrinsic" panic) on the execution
+//! path.
+
+/// A device-native libc function, identified at compile time.
+///
+/// The variants are exactly the functions implemented by the sibling
+/// modules ([`super::string`], [`super::stdlib`], [`super::rand`]) plus
+/// the allocator entry points; the interpreter's dispatch is a total
+/// match over this enum, so a symbol that resolves here can never trap
+/// at runtime.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum DeviceFn {
+    Malloc,
+    Free,
+    Realloc,
+    Strlen,
+    Strcpy,
+    Strcmp,
+    Strcat,
+    Memcpy,
+    Memset,
+    Strtod,
+    Atoi,
+    Rand,
+    Srand,
+    Sqrt,
+    Fabs,
+}
+
+/// Every registered device-native symbol, in stable name order.
+pub const ALL: &[(&str, DeviceFn)] = &[
+    ("atoi", DeviceFn::Atoi),
+    ("fabs", DeviceFn::Fabs),
+    ("free", DeviceFn::Free),
+    ("malloc", DeviceFn::Malloc),
+    ("memcpy", DeviceFn::Memcpy),
+    ("memset", DeviceFn::Memset),
+    ("rand", DeviceFn::Rand),
+    ("realloc", DeviceFn::Realloc),
+    ("srand", DeviceFn::Srand),
+    ("sqrt", DeviceFn::Sqrt),
+    ("strcat", DeviceFn::Strcat),
+    ("strcmp", DeviceFn::Strcmp),
+    ("strcpy", DeviceFn::Strcpy),
+    ("strlen", DeviceFn::Strlen),
+    ("strtod", DeviceFn::Strtod),
+];
+
+impl DeviceFn {
+    /// The libc symbol name this id resolves.
+    pub fn name(self) -> &'static str {
+        ALL.iter().find(|(_, f)| *f == self).map(|(n, _)| *n).unwrap()
+    }
+
+    /// Does the function return a pointer the allocator tracks (so the
+    /// underlying-object analysis must classify its result as dynamic)?
+    pub fn returns_tracked_pointer(self) -> bool {
+        matches!(self, DeviceFn::Malloc | DeviceFn::Realloc)
+    }
+}
+
+/// Resolve `name` against the device-native registry.
+pub fn lookup(name: &str) -> Option<DeviceFn> {
+    ALL.iter().find(|(n, _)| *n == name).map(|(_, f)| *f)
+}
+
+/// All registered symbol names (stable order, for reports and docs).
+pub fn names() -> impl Iterator<Item = &'static str> {
+    ALL.iter().map(|(n, _)| *n)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lookup_finds_every_registered_symbol() {
+        for (name, f) in ALL {
+            assert_eq!(lookup(name), Some(*f), "{name}");
+            assert_eq!(f.name(), *name);
+        }
+        assert_eq!(lookup("fscanf"), None, "host-RPC symbols are not device-native");
+        assert_eq!(lookup("dgemm"), None);
+    }
+
+    #[test]
+    fn registry_is_sorted_and_duplicate_free() {
+        let names: Vec<&str> = names().collect();
+        let mut sorted = names.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(names, sorted, "ALL must stay in stable sorted order");
+    }
+
+    #[test]
+    fn allocator_entry_points_are_tracked() {
+        assert!(DeviceFn::Malloc.returns_tracked_pointer());
+        assert!(DeviceFn::Realloc.returns_tracked_pointer());
+        assert!(!DeviceFn::Strlen.returns_tracked_pointer());
+    }
+}

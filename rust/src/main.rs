@@ -2,15 +2,23 @@
 //! simulated GPU, run the evaluation apps, and inspect pass output.
 //!
 //! ```text
-//! gpu-first compile <prog.ir> [--no-rpcgen] [--no-multiteam]
+//! gpu-first compile <prog.ir> [--no-libcres] [--no-rpcgen] [--no-multiteam]
+//!                   [--passes p1,p2,...]
 //! gpu-first run     <prog.ir> [--teams N] [--threads N] [--allocator K]
-//!                   [--rpc-lanes N|auto] [--rpc-workers N]
+//!                   [--rpc-lanes N|auto] [--rpc-workers N|auto]
 //!                   [--rpc-launch-threads N] [--rpc-launch-slots N]
-//!                   [--rpc-data-cap BYTES] [--no-rpc-batch]
-//! gpu-first explain <prog.ir>          # RPC argument classification
+//!                   [--rpc-data-cap BYTES] [--no-rpc-batch] [--passes ...]
+//! gpu-first explain <prog.ir>          # symbol resolution + RPC argument
+//!                                      # classification + per-pass timings
 //! gpu-first apps                        # list evaluation apps
 //! gpu-first artifacts [--dir artifacts] # load + smoke the AOT artifacts
 //! ```
+//!
+//! The middle-end pipeline is an ordered pass list (default
+//! `libcres,rpcgen,multiteam`). `--passes` overrides it explicitly;
+//! below that, the `GPU_FIRST_PASSES` environment variable (the CI
+//! pass-shape matrix) applies; below that, the `--no-*` flags drop
+//! individual passes from the default order.
 //!
 //! `--rpc-lanes`/`--rpc-workers` shape the multi-lane RPC engine
 //! (`rpc::engine`); the default `1/1` reproduces the paper's
@@ -26,7 +34,7 @@
 use gpu_first::coordinator::{Config, GpuFirstSession};
 use gpu_first::ir::parser::parse_module;
 use gpu_first::ir::printer::print_module;
-use gpu_first::transform::CompileOptions;
+use gpu_first::transform::{CompileOptions, PipelineSpec};
 use gpu_first::util::cli::Args;
 
 fn main() {
@@ -41,9 +49,12 @@ fn main() {
             eprintln!(
                 "usage: gpu-first <compile|run|explain|apps|artifacts> [...]\n\
                  run options: --teams N --threads N --allocator generic|vendor|balanced[N,M]\n\
-                              --heap-mb N --rpc-lanes N|auto --rpc-workers N\n\
+                              --heap-mb N --rpc-lanes N|auto --rpc-workers N|auto\n\
                               --rpc-launch-threads N --rpc-launch-slots N\n\
                               --rpc-data-cap BYTES --no-rpc-batch --verbose\n\
+                 pipeline:    --passes p1,p2,... (known: libcres, rpcgen, multiteam;\n\
+                              default all three; GPU_FIRST_PASSES env applies below it)\n\
+                              --no-libcres --no-rpcgen --no-multiteam\n\
                  see README.md"
             );
             std::process::exit(2);
@@ -63,17 +74,50 @@ fn read_module(args: &Args) -> Result<gpu_first::ir::Module, String> {
 
 fn opts(args: &Args) -> CompileOptions {
     CompileOptions {
+        libcres: !args.flag("no-libcres"),
         rpcgen: !args.flag("no-rpcgen"),
         multiteam: !args.flag("no-multiteam"),
     }
 }
 
+/// The pipeline this invocation selects: `--passes` wins, then the
+/// `GPU_FIRST_PASSES` environment override, then `fallback`. A
+/// malformed env value is the same clean usage error a malformed
+/// `--passes` gets (the panicking `PipelineSpec::from_env` is for test
+/// suites, where a matrix leg must never silently fall back).
+fn pipeline_spec_or(args: &Args, fallback: PipelineSpec) -> Result<PipelineSpec, String> {
+    if let Some(list) = args.get("passes") {
+        return PipelineSpec::parse(list);
+    }
+    if let Ok(list) = std::env::var(PipelineSpec::ENV) {
+        return PipelineSpec::parse(&list).map_err(|e| format!("{}: {e}", PipelineSpec::ENV));
+    }
+    Ok(fallback)
+}
+
+/// `pipeline_spec_or` with the `--no-*` flags applied to the default
+/// order as the fallback (compile/run).
+fn pipeline_spec(args: &Args) -> Result<PipelineSpec, String> {
+    pipeline_spec_or(args, PipelineSpec::from_options(opts(args)))
+}
+
 fn cmd_compile(args: &Args) -> Result<(), String> {
     let mut module = read_module(args)?;
+    let spec = pipeline_spec(args)?;
     let mut session = GpuFirstSession::start(Config::from_args(args)?);
-    session.compile(&mut module, opts(args))?;
+    session.compile_spec(&mut module, &spec)?;
     let report = session.report.as_ref().unwrap();
     println!("{}", print_module(&module));
+    eprintln!(";; --- pipeline: {} ---", report.pipeline.join(" -> "));
+    for line in report.timing_lines() {
+        eprintln!(";;   {line}");
+    }
+    if !report.resolution.symbols.is_empty() {
+        eprintln!(";; --- libcres: {} ---", report.resolution.summary());
+        for u in report.resolution.unresolved() {
+            eprintln!(";;   warning: unresolved symbol '{u}' (call sites will trap)");
+        }
+    }
     eprintln!(";; --- rpcgen: {} call sites rewritten ---", report.rpc.rewritten.len());
     for (f, callee, mangled, _) in &report.rpc.rewritten {
         eprintln!(";;   {f}: {callee} -> {mangled}");
@@ -91,15 +135,17 @@ fn cmd_compile(args: &Args) -> Result<(), String> {
 
 fn cmd_run(args: &Args) -> Result<(), String> {
     let module = read_module(args)?;
+    let spec = pipeline_spec(args)?;
     let cfg = Config::from_args(args)?;
     let verbose = cfg.verbose;
     let mut session = GpuFirstSession::start(cfg);
-    let (ret, metrics) = session.execute(module, opts(args), &[])?;
+    let (ret, metrics) = session.execute_spec(module, &spec, &[])?;
     // Host-side streams reach the real terminal.
     print!("{}", session.host.stdout_string());
     eprint!("{}", session.host.stderr_string());
     if verbose {
         eprintln!(";; {}", metrics.summary());
+        eprintln!(";; JSON {}", metrics.to_json());
     }
     session.stop();
     std::process::exit(ret as i32);
@@ -107,10 +153,25 @@ fn cmd_run(args: &Args) -> Result<(), String> {
 
 fn cmd_explain(args: &Args) -> Result<(), String> {
     let mut module = read_module(args)?;
+    // Explain compiles without region expansion by default (the module
+    // stays closest to the source); `--passes` and the GPU_FIRST_PASSES
+    // env still override, with the same precedence as compile/run.
+    let spec = pipeline_spec_or(args, PipelineSpec::parse("libcres,rpcgen").unwrap())?;
     let mut session = GpuFirstSession::start(Config::from_args(args)?);
-    session.compile(&mut module, CompileOptions { rpcgen: true, multiteam: false })?;
+    session.compile_spec(&mut module, &spec)?;
     let report = session.report.as_ref().unwrap();
-    println!("RPC argument classification (paper §3.2):");
+    println!("pass pipeline ({}):", report.pipeline.join(" -> "));
+    for line in report.timing_lines() {
+        println!("  {line}");
+    }
+    println!(
+        "\nsymbol resolution (paper §3.2/§3.4: device-native libc vs host RPC): {}",
+        report.resolution.summary()
+    );
+    for line in report.resolution.lines() {
+        println!("  {line}");
+    }
+    println!("\nRPC argument classification (paper §3.2):");
     for (f, callee, mangled, summary) in &report.rpc.rewritten {
         println!("  in @{f}: call {callee} -> landing pad {mangled}");
         for (i, s) in summary.iter().enumerate() {

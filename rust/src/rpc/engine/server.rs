@@ -180,6 +180,20 @@ impl EngineMetrics {
         self.ring.iter().map(|s| s.completions.load(Ordering::Relaxed)).collect()
     }
 
+    /// Per-ring-slot (completions, mean end-to-end latency ns) gauges —
+    /// what the fig07 bench table and `BENCH_fig07.json` print per slot.
+    pub fn ring_slot_gauges(&self) -> Vec<(u64, f64)> {
+        let r = Ordering::Relaxed;
+        self.ring
+            .iter()
+            .map(|s| {
+                let n = s.completions.load(r);
+                let total = (s.wait_ns.load(r) + s.run_ns.load(r)) as f64;
+                (n, if n == 0 { 0.0 } else { total / n as f64 })
+            })
+            .collect()
+    }
+
     pub fn lane_served(&self) -> Vec<u64> {
         self.lanes.iter().map(|l| l.served.load(Ordering::Relaxed)).collect()
     }
@@ -206,19 +220,14 @@ impl EngineMetrics {
             })
             .collect();
         let ring: Vec<Json> = self
-            .ring
+            .ring_slot_gauges()
             .iter()
             .enumerate()
-            .map(|(i, c)| {
-                let n = c.completions.load(r);
-                let total_ns = (c.wait_ns.load(r) + c.run_ns.load(r)) as f64;
+            .map(|(i, (n, mean_ns))| {
                 Json::obj(vec![
                     ("slot", Json::num(i as f64)),
-                    ("completions", Json::num(n as f64)),
-                    (
-                        "mean_latency_ns",
-                        Json::num(if n == 0 { 0.0 } else { total_ns / n as f64 }),
-                    ),
+                    ("completions", Json::num(*n as f64)),
+                    ("mean_latency_ns", Json::num(*mean_ns)),
                 ])
             })
             .collect();

@@ -671,24 +671,29 @@ pub enum HostFnKind {
 }
 
 /// The library-knowledge table the pass consults (the reproduction's
-/// stand-in for annotated headers / libc knowledge in LLVM).
+/// stand-in for annotated headers / libc knowledge in LLVM) — the
+/// host-RPC half of the `libcres` resolution table (the device-native
+/// half lives in [`crate::libc_gpu::registry`]). The single source both
+/// [`host_function`] and name listings derive from.
+pub const HOST_FUNCTIONS: &[(&str, HostFnKind)] = &[
+    ("printf", HostFnKind::Printf { has_fd: false }),
+    ("fprintf", HostFnKind::Printf { has_fd: true }),
+    ("scanf", HostFnKind::Scanf { has_fd: false }),
+    ("fscanf", HostFnKind::Scanf { has_fd: true }),
+    ("fopen", HostFnKind::Fopen),
+    ("fclose", HostFnKind::Fclose),
+    ("fread", HostFnKind::Fread),
+    ("fwrite", HostFnKind::Fwrite),
+    ("puts", HostFnKind::Puts),
+    ("exit", HostFnKind::Exit),
+    ("time", HostFnKind::Time),
+    ("getenv", HostFnKind::Getenv),
+    ("__gpu_first_launch_kernel", HostFnKind::LaunchKernel),
+];
+
+/// Look up `name` in [`HOST_FUNCTIONS`].
 pub fn host_function(name: &str) -> Option<HostFnKind> {
-    Some(match name {
-        "printf" => HostFnKind::Printf { has_fd: false },
-        "fprintf" => HostFnKind::Printf { has_fd: true },
-        "scanf" => HostFnKind::Scanf { has_fd: false },
-        "fscanf" => HostFnKind::Scanf { has_fd: true },
-        "fopen" => HostFnKind::Fopen,
-        "fclose" => HostFnKind::Fclose,
-        "fread" => HostFnKind::Fread,
-        "fwrite" => HostFnKind::Fwrite,
-        "puts" => HostFnKind::Puts,
-        "exit" => HostFnKind::Exit,
-        "time" => HostFnKind::Time,
-        "getenv" => HostFnKind::Getenv,
-        "__gpu_first_launch_kernel" => HostFnKind::LaunchKernel,
-        _ => return None,
-    })
+    HOST_FUNCTIONS.iter().find(|(n, _)| *n == name).map(|(_, k)| *k)
 }
 
 /// Synthesize the landing pad for `kind`.
@@ -869,6 +874,19 @@ mod tests {
 
     fn buf_arg(bytes: &[u8]) -> HostArg {
         HostArg::Buf { bytes: bytes.to_vec(), offset: 0, mode: ArgMode::ReadWrite }
+    }
+
+    #[test]
+    fn host_function_table_is_duplicate_free_and_disjoint_from_device_libc() {
+        let mut names: Vec<&str> = HOST_FUNCTIONS.iter().map(|(n, _)| *n).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), HOST_FUNCTIONS.len(), "duplicate host-function entry");
+        // The two tables of the libcres dichotomy are disjoint: a symbol
+        // is device-native or host-RPC, never both.
+        for name in crate::libc_gpu::registry::names() {
+            assert!(host_function(name).is_none(), "{name} is device-native AND host-RPC");
+        }
     }
 
     fn cstr_arg(s: &str) -> HostArg {

@@ -1,0 +1,23 @@
+//! `libcres` — the unified libc/RPC symbol-resolution *pass*.
+//!
+//! The paper's §3.2 dichotomy ("either resolved through our partial libc
+//! GPU implementation or via automatically generated remote procedure
+//! calls to the host") used to live in three disconnected places: the
+//! parser's intrinsic check, `rpcgen`'s landing-pad lookup, and the
+//! interpreter's string-matched intrinsic dispatch. The underlying
+//! analysis — [`resolve_module`] building a module-wide
+//! [`ResolutionTable`] — lives with the other interprocedural analyses
+//! in [`crate::analysis::resolution`] (so the interpreter can dispatch
+//! through it without depending on the middle-end); this module re-exports
+//! it for the pass layer.
+//!
+//! The pass itself (`libcres` in [`super::pm`]) materializes the cached
+//! table into the [`CompileReport`](super::CompileReport): each external
+//! callee is classified *device-native* / *host-RPC* / *unresolved*,
+//! unresolved symbols become compile-time diagnostics (listed in the
+//! report and `--explain` instead of a runtime panic), and `rpcgen`
+//! consumes the table so only host-RPC callees get landing pads.
+
+pub use crate::analysis::resolution::{
+    resolve_module, ResolutionTable, SymbolClass, SymbolInfo,
+};

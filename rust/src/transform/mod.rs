@@ -5,11 +5,23 @@
 //! * [`multiteam`] — multi-team execution & kernel split (paper §3.3,
 //!   Fig. 4): expands eligible `parallel` regions into grid-wide kernels
 //!   launched from the host via RPC.
-//! * [`pipeline`] — the "LTO pass pipeline": verify → rpcgen → multiteam →
-//!   verify, i.e. what the paper's augmented compiler driver runs.
+//! * [`libcres`] — the unified libc/RPC symbol-resolution pass: builds
+//!   the module-wide table classifying every external callee as
+//!   device-native / host-RPC / unresolved (paper §3.2's dichotomy made
+//!   a first-class compile-time artifact).
+//! * [`pm`] — the pass manager: the [`pm::Pass`] trait, the shared
+//!   [`pm::AnalysisCache`], pipeline specs (`--passes` /
+//!   `GPU_FIRST_PASSES`) and per-pass timing.
+//! * [`pipeline`] — the "LTO pass pipeline" façade: verify → libcres →
+//!   rpcgen → multiteam → verify, i.e. what the paper's augmented
+//!   compiler driver runs.
 
 pub mod rpcgen;
 pub mod multiteam;
+pub mod libcres;
+pub mod pm;
 pub mod pipeline;
 
-pub use pipeline::{compile, CompileOptions, CompileReport};
+pub use libcres::{ResolutionTable, SymbolClass};
+pub use pipeline::{compile, compile_with_spec, CompileOptions, CompileReport};
+pub use pm::{AnalysisCache, CacheStats, Pass, PassManager, PassTiming, PipelineSpec};

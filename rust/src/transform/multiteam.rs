@@ -19,7 +19,7 @@
 //! * `barrier` becomes a cross-team barrier (global atomic counters on
 //!   real GPUs; a true barrier in the simulator).
 
-use crate::analysis::callgraph::CallGraph;
+use super::pm::AnalysisCache;
 use crate::ir::{expr_operands, Function, Instr, Module, Operand, Param, Schedule, Ty};
 
 #[derive(Debug, Default, Clone)]
@@ -40,18 +40,27 @@ pub struct RegionInfo {
     pub num_threads: Option<Operand>,
 }
 
-/// Run the pass. Every eligible `parallel` region is outlined and split.
+/// Run the pass standalone (builds its own analysis cache). The
+/// pass-manager path goes through [`run_with`].
 pub fn run(m: &mut Module) -> MultiTeamReport {
-    let cg = CallGraph::build(m);
+    run_with(m, &mut AnalysisCache::default())
+}
+
+/// Run the pass with a shared analysis cache: eligibility is judged
+/// against the cached call graph. Every eligible `parallel` region is
+/// outlined and split.
+pub fn run_with(m: &mut Module, cache: &mut AnalysisCache) -> MultiTeamReport {
     // Eligibility is judged against the ORIGINAL module: once a function's
     // own region is outlined it no longer "contains parallel", but callers
     // must still treat it as parallel (its kernel launch would nest).
-    let parallel_fns: std::collections::BTreeSet<String> = m
-        .functions
-        .keys()
-        .filter(|f| cg.transitively_parallel(m, f))
-        .cloned()
-        .collect();
+    let parallel_fns: std::collections::BTreeSet<String> = {
+        let cg = cache.callgraph(m);
+        m.functions
+            .keys()
+            .filter(|f| cg.transitively_parallel(m, f))
+            .cloned()
+            .collect()
+    };
     let mut report = MultiTeamReport::default();
     let fnames: Vec<String> = m.functions.keys().cloned().collect();
     let mut new_fns: Vec<Function> = Vec::new();

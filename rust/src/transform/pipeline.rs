@@ -1,12 +1,26 @@
 //! The "augmented compilation path" of paper Fig. 2: the driver that a
 //! `clang --gpu-first` invocation would run at link time.
+//!
+//! Since the pass-manager refactor this file is a thin façade: the
+//! pipeline itself is an ordered [`PassManager`](super::pm::PassManager)
+//! built either from [`CompileOptions`] (the historical boolean knobs)
+//! or from an explicit [`PipelineSpec`](super::pm::PipelineSpec)
+//! (`--passes` / `GPU_FIRST_PASSES`). The default pipeline is
+//! `verify → libcres → rpcgen → multiteam → verify` and is behaviorally
+//! identical to the pre-refactor fixed sequence.
 
-use super::{multiteam, rpcgen};
+use super::multiteam::MultiTeamReport;
+use super::pm::{CacheStats, PassManager, PassTiming, PipelineSpec};
+use super::rpcgen::RpcGenReport;
 use crate::ir::Module;
 use crate::rpc::WrapperRegistry;
+use crate::transform::libcres::ResolutionTable;
 
 #[derive(Debug, Clone, Copy)]
 pub struct CompileOptions {
+    /// Build the libc/RPC symbol-resolution table and report unresolved
+    /// callees at compile time.
+    pub libcres: bool,
     /// Generate RPCs for library calls (§3.2). Off = Tian et al. baseline
     /// where such calls trap.
     pub rpcgen: bool,
@@ -17,32 +31,66 @@ pub struct CompileOptions {
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        Self { rpcgen: true, multiteam: true }
+        Self { libcres: true, rpcgen: true, multiteam: true }
     }
 }
 
+/// Everything the pipeline run produced: per-pass sections, the
+/// symbol-resolution table, per-pass wall times and the analysis-cache
+/// counters.
 #[derive(Debug, Default, Clone)]
 pub struct CompileReport {
-    pub rpc: rpcgen::RpcGenReport,
-    pub multiteam: multiteam::MultiTeamReport,
+    pub rpc: RpcGenReport,
+    pub multiteam: MultiTeamReport,
+    /// The `libcres` table (empty when the pass did not run).
+    pub resolution: ResolutionTable,
+    /// Executed pass names in order.
+    pub pipeline: Vec<String>,
+    /// Per-pass wall time + one-line summaries.
+    pub timings: Vec<PassTiming>,
+    /// Analysis-cache build/hit/invalidation counters.
+    pub cache: CacheStats,
 }
 
-/// Verify → rpcgen → multi-team expansion → verify.
+impl CompileReport {
+    /// Total middle-end wall time across all passes.
+    pub fn total_pass_ns(&self) -> f64 {
+        self.timings.iter().map(|t| t.wall_ns).sum()
+    }
+
+    /// Human-readable per-pass lines (`--explain`, verbose runs).
+    pub fn timing_lines(&self) -> Vec<String> {
+        self.timings
+            .iter()
+            .map(|t| {
+                format!(
+                    "{:<10} {:>10}  {}",
+                    t.pass,
+                    crate::util::fmt_ns(t.wall_ns),
+                    t.summary
+                )
+            })
+            .collect()
+    }
+}
+
+/// Compile with the pipeline [`CompileOptions`] selects (the default:
+/// verify → libcres → rpcgen → multiteam → verify).
 pub fn compile(
     m: &mut Module,
     registry: &WrapperRegistry,
     opts: CompileOptions,
 ) -> Result<CompileReport, Vec<String>> {
-    m.verify()?;
-    let mut report = CompileReport::default();
-    if opts.rpcgen {
-        report.rpc = rpcgen::run(m, registry);
-    }
-    if opts.multiteam {
-        report.multiteam = multiteam::run(m);
-    }
-    m.verify()?;
-    Ok(report)
+    PassManager::from_options(opts).run(m, registry)
+}
+
+/// Compile with an explicit pass list (the `--passes` override).
+pub fn compile_with_spec(
+    m: &mut Module,
+    registry: &WrapperRegistry,
+    spec: &PipelineSpec,
+) -> Result<CompileReport, Vec<String>> {
+    PassManager::from_spec(spec).run(m, registry)
 }
 
 #[cfg(test)]
@@ -79,18 +127,40 @@ func @main() -> i64 {
         let body = &m.functions["main"].body;
         assert!(body.iter().any(|i| matches!(i, Instr::KernelLaunch { .. })));
         assert!(body.iter().any(|i| matches!(i, Instr::RpcCall { .. })));
+        // The pass-manager surface: executed passes, timings, resolution.
+        assert_eq!(report.pipeline, vec!["libcres", "rpcgen", "multiteam"]);
+        assert_eq!(report.timings.len(), 3);
+        assert!(report.total_pass_ns() >= 0.0);
+        assert!(report.resolution.host_kind("printf").is_some());
     }
 
     #[test]
     fn options_disable_passes() {
         let mut m = parse_module(SRC).unwrap();
         let reg = WrapperRegistry::new();
-        let report =
-            compile(&mut m, &reg, CompileOptions { rpcgen: false, multiteam: false }).unwrap();
+        let report = compile(
+            &mut m,
+            &reg,
+            CompileOptions { libcres: false, rpcgen: false, multiteam: false },
+        )
+        .unwrap();
         assert!(report.rpc.rewritten.is_empty());
         assert!(report.multiteam.regions.is_empty());
+        assert!(report.pipeline.is_empty());
+        assert!(report.resolution.symbols.is_empty());
         let body = &m.functions["main"].body;
         assert!(body.iter().any(|i| matches!(i, Instr::Parallel { .. })));
+    }
+
+    #[test]
+    fn spec_pipeline_equals_options_pipeline() {
+        let reg = WrapperRegistry::new();
+        let mut m_opts = parse_module(SRC).unwrap();
+        compile(&mut m_opts, &reg, CompileOptions::default()).unwrap();
+        let reg2 = WrapperRegistry::new();
+        let mut m_spec = parse_module(SRC).unwrap();
+        compile_with_spec(&mut m_spec, &reg2, &PipelineSpec::default()).unwrap();
+        assert_eq!(m_opts, m_spec, "options and spec construction must agree");
     }
 
     #[test]
@@ -98,5 +168,15 @@ func @main() -> i64 {
         let mut m = parse_module("func @main() -> i64 {\n  return %undef\n}\n").unwrap();
         let reg = WrapperRegistry::new();
         assert!(compile(&mut m, &reg, CompileOptions::default()).is_err());
+    }
+
+    #[test]
+    fn unresolved_symbols_are_compile_time_diagnostics() {
+        let src = "func @main() -> i64 {\n  call dgemm(1)\n  return 0\n}\n";
+        let mut m = parse_module(src).unwrap();
+        let reg = WrapperRegistry::new();
+        let report = compile(&mut m, &reg, CompileOptions::default()).unwrap();
+        assert_eq!(report.resolution.unresolved(), vec!["dgemm"]);
+        assert_eq!(report.rpc.unsupported, vec!["dgemm".to_string()]);
     }
 }

@@ -1,0 +1,489 @@
+//! The pass manager — the middle-end that replaces the hardcoded
+//! rpcgen→multiteam sequence of the early reproduction.
+//!
+//! * [`Pass`] — one compile-time transformation or analysis
+//!   materialization with a stable name, run over the module with access
+//!   to a [`PassCx`] (the landing-pad registry, the shared
+//!   [`AnalysisCache`], and the [`CompileReport`](super::CompileReport)
+//!   under construction).
+//! * [`AnalysisCache`] — lazily computed module analyses
+//!   ([`CallGraph`], per-function def maps, the `libcres`
+//!   [`ResolutionTable`]) shared across passes and invalidated when a
+//!   pass reports it changed the module; build/hit/invalidation counters
+//!   make the caching observable to tests and `--explain`.
+//! * [`PipelineSpec`] — an ordered pass list parsed from the `--passes`
+//!   CLI override or the `GPU_FIRST_PASSES` environment variable (the CI
+//!   pass-shape matrix), or derived from
+//!   [`CompileOptions`](super::CompileOptions).
+//! * [`PassManager`] — verifies the module, runs the pipeline in order
+//!   recording per-pass wall time and summaries, and verifies again.
+//!
+//! The default pipeline is `libcres → rpcgen → multiteam`; it is
+//! behaviorally identical to the historical fixed sequence (proved by
+//! the `pass_manager` equivalence suite).
+
+use super::libcres::ResolutionTable;
+use super::pipeline::{CompileOptions, CompileReport};
+use super::{libcres, multiteam, rpcgen};
+use crate::analysis::callgraph::CallGraph;
+use crate::analysis::objects::def_map;
+use crate::ir::{Instr, Module};
+use crate::rpc::WrapperRegistry;
+use std::collections::HashMap;
+
+/// The pass names the manager knows, in default pipeline order.
+pub const KNOWN_PASSES: &[&str] = &["libcres", "rpcgen", "multiteam"];
+
+/// What one pass invocation reports back to the manager.
+#[derive(Debug, Clone)]
+pub struct PassOutcome {
+    /// One-line, human-readable result ("3 call sites rewritten").
+    pub summary: String,
+    /// Did the pass mutate the module? Cached analyses are invalidated
+    /// only when true.
+    pub changed: bool,
+}
+
+/// Wall time + outcome of one executed pass (surfaced through
+/// [`CompileReport::timings`], `--explain` and `RunMetrics`).
+#[derive(Debug, Clone)]
+pub struct PassTiming {
+    pub pass: String,
+    pub wall_ns: f64,
+    pub summary: String,
+    pub changed: bool,
+}
+
+/// One middle-end pass: a named unit of work over the module.
+pub trait Pass {
+    /// Stable name (what `--passes` and reports refer to).
+    fn name(&self) -> &'static str;
+    /// Run over `m`. Errors are verification-style human-readable lines.
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>>;
+}
+
+/// Build/hit/invalidation counters of the [`AnalysisCache`] — the
+/// observable half of the caching contract.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub callgraph_builds: u64,
+    pub resolution_builds: u64,
+    pub def_map_builds: u64,
+    /// Requests answered from cache without recomputation.
+    pub hits: u64,
+    /// Whole-cache invalidations (one per module-mutating pass).
+    pub invalidations: u64,
+}
+
+/// Lazily computed, invalidation-tracked module analyses. `CallGraph`
+/// and `objects::def_map` used to be recomputed by every pass that
+/// wanted them; here they are computed once and dropped only when a
+/// pass actually mutates the module.
+#[derive(Default)]
+pub struct AnalysisCache {
+    callgraph: Option<CallGraph>,
+    resolution: Option<ResolutionTable>,
+    def_maps: HashMap<String, HashMap<String, Instr>>,
+    pub stats: CacheStats,
+}
+
+impl AnalysisCache {
+    /// The module call graph, computed on first use.
+    pub fn callgraph(&mut self, m: &Module) -> &CallGraph {
+        if self.callgraph.is_none() {
+            self.callgraph = Some(CallGraph::build(m));
+            self.stats.callgraph_builds += 1;
+        } else {
+            self.stats.hits += 1;
+        }
+        self.callgraph.as_ref().unwrap()
+    }
+
+    /// The `libcres` symbol-resolution table, computed on first use.
+    pub fn resolution(&mut self, m: &Module) -> &ResolutionTable {
+        if self.resolution.is_none() {
+            self.resolution = Some(libcres::resolve_module(m));
+            self.stats.resolution_builds += 1;
+        } else {
+            self.stats.hits += 1;
+        }
+        self.resolution.as_ref().unwrap()
+    }
+
+    /// The def map of function `fname`, computed on first use. Returns
+    /// `None` for functions the module does not define.
+    pub fn def_map(&mut self, m: &Module, fname: &str) -> Option<&HashMap<String, Instr>> {
+        if !self.def_maps.contains_key(fname) {
+            let f = m.functions.get(fname)?;
+            self.def_maps.insert(fname.to_string(), def_map(f));
+            self.stats.def_map_builds += 1;
+        } else {
+            self.stats.hits += 1;
+        }
+        self.def_maps.get(fname)
+    }
+
+    /// Drop every cached analysis (a pass mutated the module).
+    pub fn invalidate(&mut self) {
+        self.callgraph = None;
+        self.resolution = None;
+        self.def_maps.clear();
+        self.stats.invalidations += 1;
+    }
+}
+
+/// What a running pass sees besides the module.
+pub struct PassCx<'a> {
+    /// Landing-pad registry (rpcgen registers synthesized pads here).
+    pub registry: &'a WrapperRegistry,
+    pub cache: AnalysisCache,
+    /// The report under construction; each pass fills its section.
+    pub report: CompileReport,
+}
+
+/// An ordered, validated pass list.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct PipelineSpec {
+    names: Vec<&'static str>,
+}
+
+impl Default for PipelineSpec {
+    /// The full default pipeline: `libcres → rpcgen → multiteam`.
+    fn default() -> Self {
+        Self { names: KNOWN_PASSES.to_vec() }
+    }
+}
+
+impl PipelineSpec {
+    /// Environment override consumed by the CI pass-shape matrix (and
+    /// honoured by the `gpu-first` CLI below `--passes`).
+    pub const ENV: &'static str = "GPU_FIRST_PASSES";
+
+    /// Parse a comma-separated pass list (`"libcres,rpcgen"`). The
+    /// keyword `default` selects the full pipeline; an empty string is
+    /// the empty pipeline (verify only). Unknown and duplicate names are
+    /// errors listing the known passes.
+    pub fn parse(s: &str) -> Result<Self, String> {
+        let s = s.trim();
+        if s == "default" {
+            return Ok(Self::default());
+        }
+        let mut names: Vec<&'static str> = Vec::new();
+        for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let Some(known) = KNOWN_PASSES.iter().find(|k| **k == part) else {
+                return Err(format!(
+                    "unknown pass {part:?} (known passes: {})",
+                    KNOWN_PASSES.join(", ")
+                ));
+            };
+            if names.contains(known) {
+                return Err(format!("pass {part:?} listed twice"));
+            }
+            names.push(*known);
+        }
+        Ok(Self { names })
+    }
+
+    /// The pipeline [`CompileOptions`] selects: the default order with
+    /// disabled passes dropped.
+    pub fn from_options(opts: CompileOptions) -> Self {
+        let mut names = Vec::new();
+        if opts.libcres {
+            names.push("libcres");
+        }
+        if opts.rpcgen {
+            names.push("rpcgen");
+        }
+        if opts.multiteam {
+            names.push("multiteam");
+        }
+        Self { names }
+    }
+
+    /// The spec `GPU_FIRST_PASSES` selects, or `None` when unset. A
+    /// malformed value panics — a CI matrix leg silently falling back to
+    /// the default pipeline would defeat the matrix (mirrors
+    /// [`crate::util::cli::EngineShape::from_env`]).
+    pub fn from_env() -> Option<Self> {
+        let v = std::env::var(Self::ENV).ok()?;
+        Some(Self::parse(&v).unwrap_or_else(|e| panic!("{}: {e}", Self::ENV)))
+    }
+
+    /// `from_env`, defaulting to the full pipeline.
+    pub fn from_env_or_default() -> Self {
+        Self::from_env().unwrap_or_default()
+    }
+
+    /// Pass names in execution order.
+    pub fn names(&self) -> &[&'static str] {
+        &self.names
+    }
+
+    pub fn contains(&self, pass: &str) -> bool {
+        self.names.iter().any(|n| *n == pass)
+    }
+}
+
+/// Instantiate the pass `name` refers to. `None` for unknown names
+/// (already rejected by [`PipelineSpec::parse`]).
+fn make_pass(name: &str) -> Option<Box<dyn Pass>> {
+    match name {
+        "libcres" => Some(Box::new(LibcResPass)),
+        "rpcgen" => Some(Box::new(RpcGenPass)),
+        "multiteam" => Some(Box::new(MultiTeamPass)),
+        _ => None,
+    }
+}
+
+/// The ordered pipeline runner.
+pub struct PassManager {
+    passes: Vec<Box<dyn Pass>>,
+}
+
+impl PassManager {
+    pub fn from_spec(spec: &PipelineSpec) -> Self {
+        Self {
+            passes: spec
+                .names()
+                .iter()
+                .map(|n| make_pass(n).expect("spec names are validated"))
+                .collect(),
+        }
+    }
+
+    pub fn from_options(opts: CompileOptions) -> Self {
+        Self::from_spec(&PipelineSpec::from_options(opts))
+    }
+
+    /// Verify → run each pass in order (timing it, invalidating cached
+    /// analyses after module-mutating passes) → verify. Returns the
+    /// assembled report.
+    pub fn run(
+        &self,
+        m: &mut Module,
+        registry: &WrapperRegistry,
+    ) -> Result<CompileReport, Vec<String>> {
+        m.verify()?;
+        let mut cx =
+            PassCx { registry, cache: AnalysisCache::default(), report: CompileReport::default() };
+        for pass in &self.passes {
+            let t0 = std::time::Instant::now();
+            let outcome = pass.run(m, &mut cx)?;
+            if outcome.changed {
+                cx.cache.invalidate();
+            }
+            cx.report.pipeline.push(pass.name().to_string());
+            cx.report.timings.push(PassTiming {
+                pass: pass.name().to_string(),
+                wall_ns: t0.elapsed().as_nanos() as f64,
+                summary: outcome.summary,
+                changed: outcome.changed,
+            });
+        }
+        m.verify()?;
+        cx.report.cache = cx.cache.stats;
+        Ok(cx.report)
+    }
+}
+
+// ---- the three ported passes ----
+
+/// Materializes the module-wide symbol-resolution table into the report
+/// (pure analysis; see [`libcres`]).
+struct LibcResPass;
+
+impl Pass for LibcResPass {
+    fn name(&self) -> &'static str {
+        "libcres"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let table = cx.cache.resolution(m).clone();
+        let summary = table.summary();
+        cx.report.resolution = table;
+        Ok(PassOutcome { summary, changed: false })
+    }
+}
+
+/// Automatic RPC generation (paper §3.2) on the manager: consumes the
+/// cached resolution table so only host-RPC callees get landing pads.
+struct RpcGenPass;
+
+impl Pass for RpcGenPass {
+    fn name(&self) -> &'static str {
+        "rpcgen"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let table = cx.cache.resolution(m).clone();
+        let report = rpcgen::run_with(m, cx.registry, &table, &mut cx.cache);
+        let changed = !report.rewritten.is_empty();
+        let summary = format!(
+            "{} call sites rewritten, {} unsupported",
+            report.rewritten.len(),
+            report.unsupported.len()
+        );
+        cx.report.rpc = report;
+        Ok(PassOutcome { summary, changed })
+    }
+}
+
+/// Multi-team expansion / kernel split (paper §3.3) on the manager:
+/// judges eligibility against the cached call graph.
+struct MultiTeamPass;
+
+impl Pass for MultiTeamPass {
+    fn name(&self) -> &'static str {
+        "multiteam"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let report = multiteam::run_with(m, &mut cx.cache);
+        let changed = !report.regions.is_empty();
+        let summary = format!(
+            "{} regions expanded, {} skipped",
+            report.regions.len(),
+            report.skipped.len()
+        );
+        cx.report.multiteam = report;
+        Ok(PassOutcome { summary, changed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    const SRC: &str = r#"
+global @fmt const 14 "result: %d%c"
+
+func @main() -> i64 {
+  %sum = alloca 8
+  store.8 0, %sum
+  parallel num_threads(64) {
+    for.team %i = 0 to 4096 step 1 {
+      %v = load.8 %sum
+    }
+  }
+  %r = load.8 %sum
+  call printf(@fmt, %r, 10)
+  return %r
+}
+"#;
+
+    #[test]
+    fn spec_parses_orders_and_rejects_unknown() {
+        assert_eq!(PipelineSpec::default().names(), KNOWN_PASSES);
+        assert_eq!(PipelineSpec::parse("default").unwrap(), PipelineSpec::default());
+        let spec = PipelineSpec::parse("rpcgen, multiteam").unwrap();
+        assert_eq!(spec.names(), &["rpcgen", "multiteam"]);
+        // Order is preserved verbatim, not canonicalized.
+        let spec = PipelineSpec::parse("multiteam,rpcgen").unwrap();
+        assert_eq!(spec.names(), &["multiteam", "rpcgen"]);
+        // Empty spec = verify-only pipeline.
+        assert!(PipelineSpec::parse("").unwrap().names().is_empty());
+        let err = PipelineSpec::parse("rpcgen,frobnicate").unwrap_err();
+        assert!(err.contains("frobnicate") && err.contains("libcres"), "{err}");
+        let err = PipelineSpec::parse("rpcgen,rpcgen").unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn spec_from_options_drops_disabled_passes() {
+        let opts =
+            CompileOptions { libcres: true, rpcgen: true, multiteam: false };
+        assert_eq!(PipelineSpec::from_options(opts).names(), &["libcres", "rpcgen"]);
+        let none = CompileOptions { libcres: false, rpcgen: false, multiteam: false };
+        assert!(PipelineSpec::from_options(none).names().is_empty());
+        assert_eq!(PipelineSpec::from_options(CompileOptions::default()), PipelineSpec::default());
+    }
+
+    #[test]
+    fn manager_times_every_pass_in_order() {
+        let mut m = parse_module(SRC).unwrap();
+        let reg = WrapperRegistry::new();
+        let report = PassManager::from_spec(&PipelineSpec::default()).run(&mut m, &reg).unwrap();
+        assert_eq!(report.pipeline, KNOWN_PASSES.to_vec());
+        assert_eq!(report.timings.len(), 3);
+        for t in &report.timings {
+            assert!(t.wall_ns >= 0.0);
+            assert!(!t.summary.is_empty());
+        }
+        assert!(!report.timings[0].changed, "libcres is pure analysis");
+        assert!(report.timings[1].changed, "rpcgen rewrote the printf site");
+        assert!(report.timings[2].changed, "multiteam expanded the region");
+    }
+
+    #[test]
+    fn cache_is_reused_until_a_pass_mutates_the_module() {
+        let mut m = parse_module(SRC).unwrap();
+        let reg = WrapperRegistry::new();
+        let report = PassManager::from_spec(&PipelineSpec::default()).run(&mut m, &reg).unwrap();
+        // libcres builds the resolution table; rpcgen re-reads it from
+        // cache (libcres did not mutate) — exactly one build, >= 1 hit.
+        assert_eq!(report.cache.resolution_builds, 1);
+        assert!(report.cache.hits >= 1, "rpcgen must hit the cached table: {:?}", report.cache);
+        // rpcgen and multiteam both mutated -> two invalidations.
+        assert_eq!(report.cache.invalidations, 2);
+        // multiteam's call graph was built after rpcgen's invalidation.
+        assert_eq!(report.cache.callgraph_builds, 1);
+    }
+
+    #[test]
+    fn analysis_cache_invalidation_contract() {
+        let m = parse_module(SRC).unwrap();
+        let mut cache = AnalysisCache::default();
+        cache.callgraph(&m);
+        cache.callgraph(&m);
+        assert_eq!(cache.stats.callgraph_builds, 1);
+        assert_eq!(cache.stats.hits, 1);
+        cache.def_map(&m, "main").unwrap();
+        cache.def_map(&m, "main").unwrap();
+        assert_eq!(cache.stats.def_map_builds, 1);
+        assert!(cache.def_map(&m, "nope").is_none());
+        cache.invalidate();
+        assert_eq!(cache.stats.invalidations, 1);
+        cache.callgraph(&m);
+        assert_eq!(cache.stats.callgraph_builds, 2, "invalidate drops the graph");
+    }
+
+    #[test]
+    fn empty_pipeline_only_verifies() {
+        let mut m = parse_module(SRC).unwrap();
+        let before = m.clone();
+        let reg = WrapperRegistry::new();
+        let report =
+            PassManager::from_spec(&PipelineSpec::parse("").unwrap()).run(&mut m, &reg).unwrap();
+        assert_eq!(m, before, "no pass ran, no mutation");
+        assert!(report.timings.is_empty());
+        let mut bad = parse_module("func @main() -> i64 {\n  return %undef\n}\n").unwrap();
+        assert!(PassManager::from_spec(&PipelineSpec::parse("").unwrap())
+            .run(&mut bad, &reg)
+            .is_err());
+    }
+
+    #[test]
+    fn reordered_pipeline_still_verifies() {
+        // multiteam before rpcgen: the region's printf call makes it
+        // ineligible (RPC-ish), so it stays single-team — a valid, if
+        // baseline, compilation.
+        let src = r#"
+global @fmt const 4 "%d\n"
+
+func @main() -> i64 {
+  parallel {
+    call printf(@fmt, 1)
+  }
+  return 0
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let reg = WrapperRegistry::new();
+        let spec = PipelineSpec::parse("multiteam,rpcgen").unwrap();
+        let report = PassManager::from_spec(&spec).run(&mut m, &reg).unwrap();
+        assert_eq!(report.pipeline, vec!["multiteam".to_string(), "rpcgen".into()]);
+        assert!(report.multiteam.regions.is_empty());
+        assert_eq!(report.rpc.rewritten.len(), 1, "rpcgen still rewrites afterwards");
+    }
+}

@@ -1,14 +1,19 @@
 //! Automatic RPC generation (paper §3.2, Fig. 3).
 //!
-//! A link-time pass with the complete world view: every call to an
-//! *undefined, non-intrinsic* function is replaced by an [`Instr::RpcCall`]
-//! whose argument descriptors encode the underlying-object analysis
-//! results, and a non-variadic host landing pad is synthesized and
-//! registered per `(callee × argument-type-signature)` — variadic call
-//! sites that disagree on argument types get distinct landing pads
-//! (`__fscanf_ip_fp_ip`-style mangling).
+//! A link-time pass with the complete world view: every call site whose
+//! callee the [`libcres`](super::libcres) resolution table classifies as
+//! **host-RPC** is replaced by an [`Instr::RpcCall`] whose argument
+//! descriptors encode the underlying-object analysis results, and a
+//! non-variadic host landing pad is synthesized and registered per
+//! `(callee × argument-type-signature)` — variadic call sites that
+//! disagree on argument types get distinct landing pads
+//! (`__fscanf_ip_fp_ip`-style mangling). Device-native callees are left
+//! alone (they never become RPCs) and unresolved callees are reported,
+//! mirroring the table's compile-time diagnostics.
 
-use crate::analysis::objects::{classify_operand, def_map, ObjClass, OffKind, StaticObj};
+use super::libcres::{resolve_module, ResolutionTable, SymbolClass};
+use super::pm::AnalysisCache;
+use crate::analysis::objects::{classify_operand, ObjClass, OffKind, StaticObj};
 use crate::ir::{Instr, Module, OffsetSpec, Operand, RpcArgSpec};
 use crate::rpc::wrappers::{self, Conv, HostFnKind};
 use crate::rpc::{ArgMode, WrapperRegistry};
@@ -26,39 +31,66 @@ pub struct RpcGenReport {
     pub unsupported: Vec<String>,
 }
 
-/// Run RPC generation over the module, registering landing pads in
-/// `registry`. Returns the report.
+/// Run RPC generation standalone: builds its own resolution table and
+/// analysis cache. The pass-manager path goes through [`run_with`].
 pub fn run(m: &mut Module, registry: &WrapperRegistry) -> RpcGenReport {
+    let table = resolve_module(m);
+    run_with(m, registry, &table, &mut AnalysisCache::default())
+}
+
+/// Run RPC generation over the module, rewriting exactly the call sites
+/// `table` classifies as host-RPC and registering landing pads in
+/// `registry`. Def maps come from `cache` (shared with the other passes
+/// under the pass manager). Returns the report.
+pub fn run_with(
+    m: &mut Module,
+    registry: &WrapperRegistry,
+    table: &ResolutionTable,
+    cache: &mut AnalysisCache,
+) -> RpcGenReport {
     let mut report = RpcGenReport::default();
     let fnames: Vec<String> = m.functions.keys().cloned().collect();
     for fname in fnames {
-        let f = m.functions.get(&fname).unwrap().clone();
-        let defs = def_map(&f);
-        let mut f = f;
-        rewrite_body(m, &mut f.body, &defs, registry, &fname, &mut report);
+        let mut f = m.functions.get(&fname).unwrap().clone();
+        // The cached def map reflects the pre-rewrite body; rewriting
+        // replaces Call with RpcCall, which classifies identically (both
+        // are dynamic-origin results), so it stays valid for the whole
+        // rewrite of this function. Borrowed, not cloned — the cache and
+        // the module are separate objects.
+        let Some(defs) = cache.def_map(m, &fname) else { continue };
+        rewrite_body(m, &mut f.body, defs, registry, table, &fname, &mut report);
         m.functions.insert(fname, f);
     }
     report
 }
 
+#[allow(clippy::too_many_arguments)]
 fn rewrite_body(
     m: &Module,
     body: &mut Vec<Instr>,
     defs: &HashMap<String, Instr>,
     registry: &WrapperRegistry,
+    table: &ResolutionTable,
     fname: &str,
     report: &mut RpcGenReport,
 ) {
     for ins in body.iter_mut() {
         match ins {
-            Instr::Call { dst, callee, args }
-                if !m.is_defined(callee) && !Module::is_native_intrinsic(callee) =>
-            {
-                let Some(kind) = wrappers::host_function(callee) else {
-                    if !report.unsupported.contains(callee) {
-                        report.unsupported.push(callee.clone());
+            Instr::Call { dst, callee, args } if !m.is_defined(callee) => {
+                let kind = match table.class_of(callee) {
+                    Some(SymbolClass::HostRpc(kind)) => kind,
+                    // Device-native callees never become RPCs (§3.4).
+                    Some(SymbolClass::Device(_)) => continue,
+                    // Unresolved (or missing from a stale table): the
+                    // compile-time diagnostic; the call site is left as a
+                    // direct call the interpreter traps on, mirroring the
+                    // paper's "not infallible" caveat.
+                    Some(SymbolClass::Unresolved) | None => {
+                        if !report.unsupported.contains(callee) {
+                            report.unsupported.push(callee.clone());
+                        }
+                        continue;
                     }
-                    continue;
                 };
                 let (specs, tags, summary) = build_specs(m, defs, callee, kind, args);
                 let mangled = mangle(callee, &tags);
@@ -75,15 +107,15 @@ fn rewrite_body(
                 *ins = Instr::RpcCall { dst: dst.clone(), mangled, callee_id, args: specs };
             }
             Instr::If { then_body, else_body, .. } => {
-                rewrite_body(m, then_body, defs, registry, fname, report);
-                rewrite_body(m, else_body, defs, registry, fname, report);
+                rewrite_body(m, then_body, defs, registry, table, fname, report);
+                rewrite_body(m, else_body, defs, registry, table, fname, report);
             }
             Instr::While { cond, body, .. } => {
-                rewrite_body(m, cond, defs, registry, fname, report);
-                rewrite_body(m, body, defs, registry, fname, report);
+                rewrite_body(m, cond, defs, registry, table, fname, report);
+                rewrite_body(m, body, defs, registry, table, fname, report);
             }
             Instr::For { body, .. } | Instr::Parallel { body, .. } => {
-                rewrite_body(m, body, defs, registry, fname, report)
+                rewrite_body(m, body, defs, registry, table, fname, report)
             }
             _ => {}
         }

@@ -3,6 +3,10 @@
 //!
 //! Supports `--flag`, `--key value`, `--key=value`, positional arguments and
 //! subcommands. Typed accessors with defaults; unknown-option detection.
+//!
+//! The middle-end analogue of [`EngineShape`] — the `GPU_FIRST_PASSES`
+//! pipeline override the CI pass-shape matrix drives — lives with the
+//! pass manager as [`crate::transform::PipelineSpec`].
 
 use std::collections::BTreeMap;
 

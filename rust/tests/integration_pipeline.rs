@@ -161,7 +161,7 @@ func @main() -> i64 {
         let module = parse_module(src).unwrap();
         let mut s = session();
         let (ret, metrics) = s
-            .execute(module, CompileOptions { rpcgen: true, multiteam }, &[])
+            .execute(module, CompileOptions { multiteam, ..Default::default() }, &[])
             .unwrap();
         s.stop();
         (ret, metrics)
@@ -198,6 +198,8 @@ fn unsupported_library_call_reported_not_miscompiled() {
     s.compile(&mut module, CompileOptions::default()).unwrap();
     let report = s.report.as_ref().unwrap();
     assert_eq!(report.rpc.unsupported, vec!["cublasDgemm".to_string()]);
+    // libcres reports the same symbol as a compile-time diagnostic.
+    assert_eq!(report.resolution.unresolved(), vec!["cublasDgemm"]);
     s.stop();
 }
 
