@@ -223,6 +223,63 @@ fn sweep_point(lanes: usize, workers: usize) -> (f64, Option<EngineSnapshot>) {
     (calls as f64 / secs, snap)
 }
 
+/// One fwrite sweep point: 8 callers stream per-thread
+/// `fwrite(buf, 1, 64, stderr)` RPCs through a 4-lane engine with
+/// per-sweep batching on or off. Returns (calls/s, coalesced batch
+/// dispatches, frames committed through the batched fwrite pad).
+fn fwrite_point(batch: bool) -> (f64, u64, u64) {
+    let mem = Arc::new(DeviceMemory::new(MemConfig::default()));
+    let arena = ArenaLayout::for_lanes(4);
+    let registry = Arc::new(WrapperRegistry::new());
+    let ids = register_common(&registry);
+    let env = Arc::new(HostEnv::new());
+    let id = ids["__fwrite_vp_i_i_p"];
+    let engine = RpcEngine::start(
+        Arc::clone(&mem),
+        arena,
+        Arc::clone(&registry),
+        Arc::clone(&env),
+        EngineConfig { lanes: 4, workers: 2, batch, ..EngineConfig::default() },
+    );
+    let t0 = std::time::Instant::now();
+    std::thread::scope(|s| {
+        for t in 0..SWEEP_CALLERS {
+            let mem = &mem;
+            s.spawn(move || {
+                let buf_a = GLOBAL_BASE + 81920 + t as u64 * 4096;
+                mem.write_cstr(buf_a, &"y".repeat(63));
+                let mut client = RpcClient::for_team(mem, arena, t);
+                for _ in 0..sweep_calls() {
+                    let mut info = RpcArgInfo::new();
+                    info.add_ref(buf_a, ArgMode::Read, 64, 0);
+                    info.add_val(1); // size
+                    info.add_val(64); // count
+                    info.add_val(2); // stderr
+                    assert_eq!(client.call(id, &info, None), 64);
+                }
+            });
+        }
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let calls = SWEEP_CALLERS * sweep_calls();
+    assert_eq!(
+        env.stderr.lock().unwrap().len(),
+        64 * calls,
+        "lost or duplicated fwrite bytes (batch={batch})"
+    );
+    let snap = engine.metrics.snapshot();
+    let batched_writes = env.io_snapshot().batched_writes;
+    engine.stop();
+    if !batch {
+        assert_eq!(batched_writes, 0, "no-batch engines never touch the batch pad");
+    } else if snap.batches == 0 {
+        // Possible only on a host so uncontended no sweep ever saw two
+        // ready lanes; correctness is the byte-count assert above.
+        println!("note: no fwrite sweep coalesced on this host");
+    }
+    (calls as f64 / secs, snap.batches, batched_writes)
+}
+
 /// The lane/worker sweep (1/2/4/8 lanes × 1/2/4 workers) with a JSON
 /// report line for BENCH_*.json trajectory tracking.
 fn sweep(legacy_modeled_total_ns: f64) {
@@ -410,6 +467,46 @@ fn sweep(legacy_modeled_total_ns: f64) {
     ring_table.print();
     slot_table.print();
 
+    // Batched-vs-scalar fwrite: the same 8-caller storm through the
+    // fwrite landing pad with per-sweep coalescing on vs off — the
+    // batch pad amortizes the registry dispatch and the stream lock
+    // over every frame of a sweep.
+    println!(
+        "\n== fwrite batch sweep: {SWEEP_CALLERS} callers × {} fwrite(64B) RPCs ==",
+        sweep_calls()
+    );
+    let mut fwrite_table = Table::new(
+        "fwrite throughput: batched vs scalar dispatch",
+        &["dispatch", "calls/s", "speedup", "batches", "batched_writes"],
+    );
+    let (scalar_cps, _, _) = fwrite_point(false);
+    let (batched_cps, batches, batched_writes) = fwrite_point(true);
+    for (label, cps, b, bw) in
+        [("scalar", scalar_cps, 0, 0), ("batched", batched_cps, batches, batched_writes)]
+    {
+        fwrite_table.row(&[
+            label.into(),
+            format!("{cps:.0}"),
+            format!("{:.2}x", cps / scalar_cps),
+            b.to_string(),
+            bw.to_string(),
+        ]);
+    }
+    fwrite_table.print();
+    let fwrite_points = vec![
+        Json::obj(vec![
+            ("dispatch", Json::str("scalar")),
+            ("calls_per_sec", Json::num(scalar_cps)),
+        ]),
+        Json::obj(vec![
+            ("dispatch", Json::str("batched")),
+            ("calls_per_sec", Json::num(batched_cps)),
+            ("speedup_vs_scalar", Json::num(batched_cps / scalar_cps)),
+            ("batches", Json::num(batches as f64)),
+            ("batched_writes", Json::num(batched_writes as f64)),
+        ]),
+    ];
+
     let report = Json::obj(vec![
         ("bench", Json::str("fig07_rpc_sweep")),
         ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
@@ -419,6 +516,7 @@ fn sweep(legacy_modeled_total_ns: f64) {
         ("launch_liveness_1x1_ns", Json::num(launch_1x1_ns)),
         ("points", Json::Arr(points)),
         ("launch_ring_points", Json::Arr(ring_points)),
+        ("fwrite_points", Json::Arr(fwrite_points)),
     ]);
     println!("\nJSON {report}");
     // CI's bench-smoke job exports FIG07_JSON=BENCH_fig07.json and

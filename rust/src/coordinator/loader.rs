@@ -75,7 +75,7 @@ impl GpuFirstSession {
     /// landing pads against this session's registry.
     pub fn compile(&mut self, module: &mut Module, opts: CompileOptions) -> Result<(), String> {
         let report = compile(module, &self.registry, opts)
-            .map_err(|errs| format!("verification failed:\n  {}", errs.join("\n  ")))?;
+            .map_err(|errs| format!("compile failed:\n  {}", errs.join("\n  ")))?;
         self.report = Some(report);
         Ok(())
     }
@@ -84,7 +84,7 @@ impl GpuFirstSession {
     /// `GPU_FIRST_PASSES` override).
     pub fn compile_spec(&mut self, module: &mut Module, spec: &PipelineSpec) -> Result<(), String> {
         let report = compile_with_spec(module, &self.registry, spec)
-            .map_err(|errs| format!("verification failed:\n  {}", errs.join("\n  ")))?;
+            .map_err(|errs| format!("compile failed:\n  {}", errs.join("\n  ")))?;
         self.report = Some(report);
         Ok(())
     }
@@ -121,6 +121,8 @@ impl GpuFirstSession {
             host_io: self.host.io_snapshot(),
             passes: self.report.as_ref().map(|r| r.timings.clone()).unwrap_or_default(),
             unresolved_calls: env.unresolved_calls.load(Ordering::Relaxed),
+            folded_formats: self.report.as_ref().map_or(0, |r| r.constfold.count()),
+            rpc_rw_intents: self.report.as_ref().map_or(0, |r| r.rpc.rw_buffer_intents),
         };
         (ret, metrics)
     }
@@ -197,9 +199,10 @@ func @main() -> i64 {
         assert_eq!(session.rpc_served(), 1);
         // The pass manager's timings ride into RunMetrics.
         let names: Vec<&str> = metrics.passes.iter().map(|t| t.pass.as_str()).collect();
-        assert_eq!(names, vec!["libcres", "rpcgen", "multiteam"]);
+        assert_eq!(names, vec!["constfold", "libcres", "rpcgen", "multiteam"]);
         assert!(metrics.compile_ns() > 0.0);
         assert_eq!(metrics.unresolved_calls, 0);
+        assert_eq!(metrics.folded_formats, 0, "direct @fmt: nothing to fold");
         session.stop();
     }
 

@@ -32,6 +32,13 @@ pub struct RunMetrics {
     /// Runtime hits on symbols `libcres` classified unresolved (each
     /// degraded to a no-op).
     pub unresolved_calls: u64,
+    /// Format operands the `constfold` pass folded to constant globals
+    /// at compile time (each widens the §3.2 precise-intent path).
+    pub folded_formats: u64,
+    /// Arguments `rpcgen` lowered with the pessimistic read-write
+    /// (copy both ways) buffer intent — the fig07 format corpus asserts
+    /// the folded pipeline yields strictly fewer of these.
+    pub rpc_rw_intents: u64,
 }
 
 impl RunMetrics {
@@ -78,6 +85,12 @@ impl RunMetrics {
         if self.unresolved_calls > 0 {
             s.push_str(&format!(" unresolved_calls={}", self.unresolved_calls));
         }
+        if self.folded_formats > 0 {
+            s.push_str(&format!(" folded_formats={}", self.folded_formats));
+        }
+        if self.rpc_rw_intents > 0 {
+            s.push_str(&format!(" rw_intents={}", self.rpc_rw_intents));
+        }
         if let Some(e) = &self.rpc_engine {
             s.push(' ');
             s.push_str(&e.summary());
@@ -92,6 +105,12 @@ impl RunMetrics {
                 self.host_io.content_contention,
                 self.host_io.content_shards,
             ));
+        }
+        if self.host_io.batched_writes > 0 {
+            s.push_str(&format!(" batched_writes={}", self.host_io.batched_writes));
+        }
+        if self.host_io.poison_recoveries > 0 {
+            s.push_str(&format!(" poison_recoveries={}", self.host_io.poison_recoveries));
         }
         s
     }
@@ -124,6 +143,10 @@ impl RunMetrics {
                 Json::num((self.main_stats.rpc_calls + self.kernel_stats.rpc_calls) as f64),
             ),
             ("unresolved_calls", Json::num(self.unresolved_calls as f64)),
+            ("folded_formats", Json::num(self.folded_formats as f64)),
+            ("rpc_rw_intents", Json::num(self.rpc_rw_intents as f64)),
+            ("batched_writes", Json::num(self.host_io.batched_writes as f64)),
+            ("poison_recoveries", Json::num(self.host_io.poison_recoveries as f64)),
             ("passes", Json::Arr(passes)),
         ])
     }
@@ -145,6 +168,8 @@ mod tests {
             host_io: HostIoSnapshot::default(),
             passes: Vec::new(),
             unresolved_calls: 0,
+            folded_formats: 0,
+            rpc_rw_intents: 0,
         }
     }
 
@@ -189,6 +214,8 @@ mod tests {
                 lock_contention: 3,
                 content_shards: 16,
                 content_contention: 5,
+                poison_recoveries: 2,
+                batched_writes: 9,
             },
             ..base()
         };
@@ -199,7 +226,25 @@ mod tests {
         assert!(s.contains("ring_peak=2/2"), "ring occupancy surfaces: {s}");
         assert!(s.contains("host_io shards=4 opens=7+1 contention=3"), "{s}");
         assert!(s.contains("files_contention=5/16shards"), "content-map counters: {s}");
+        assert!(s.contains("batched_writes=9"), "fwrite batch counter surfaces: {s}");
+        assert!(s.contains("poison_recoveries=2"), "recoveries surface: {s}");
         assert_eq!(m.rpc_engine.unwrap().launch_latency_ns(), 1000.0);
+    }
+
+    #[test]
+    fn summary_and_json_carry_constfold_and_intent_counters() {
+        let m = RunMetrics { folded_formats: 2, rpc_rw_intents: 3, ..base() };
+        let s = m.summary();
+        assert!(s.contains("folded_formats=2"), "{s}");
+        assert!(s.contains("rw_intents=3"), "{s}");
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"folded_formats\":2"), "{j}");
+        assert!(j.contains("\"rpc_rw_intents\":3"), "{j}");
+        assert!(j.contains("\"batched_writes\":0"), "{j}");
+        // Quiet runs keep the summary quiet.
+        let quiet = base().summary();
+        assert!(!quiet.contains("folded_formats"), "{quiet}");
+        assert!(!quiet.contains("poison_recoveries"), "{quiet}");
     }
 
     #[test]

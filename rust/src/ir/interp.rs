@@ -29,6 +29,13 @@ use std::sync::{Arc, Mutex};
 
 pub const PER_THREAD_STACK: u64 = 8 << 10;
 
+/// Process-wide monotonic launch-session mint. Launch clients used to
+/// key their home ring slot by the issuing *team* id, so two sessions
+/// sharing one device aliased the same slot whenever their team ids
+/// collided; every loaded program now draws a distinct session id here
+/// and consecutive sessions spread over the launch ring by construction.
+static NEXT_LAUNCH_SESSION: AtomicU64 = AtomicU64::new(0);
+
 /// A loaded program: module + device + host-side registry, with globals
 /// materialized in device memory. Shared by every simulated thread.
 pub struct ProgramEnv {
@@ -47,6 +54,10 @@ pub struct ProgramEnv {
     /// degrades to a no-op returning 0, warned once per symbol).
     pub unresolved_calls: AtomicU64,
     unresolved_warned: Mutex<BTreeSet<String>>,
+    /// This loaded program's launch-session id (minted by the loader
+    /// from [`NEXT_LAUNCH_SESSION`]); keys the home launch-ring slot so
+    /// concurrent sessions sharing a device never alias one slot.
+    pub launch_session: u64,
     /// Kernel-region name -> launch id used in the launch RPC.
     pub region_ids: HashMap<String, u64>,
     region_names: Vec<String>,
@@ -163,6 +174,7 @@ impl ProgramEnv {
             resolution,
             unresolved_calls: AtomicU64::new(0),
             unresolved_warned: Mutex::new(BTreeSet::new()),
+            launch_session: NEXT_LAUNCH_SESSION.fetch_add(1, Ordering::Relaxed),
             region_ids,
             region_names,
             pending: Mutex::new(None),
@@ -763,9 +775,11 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         // Fig. 4 ①: RPC to the host to launch the parallel kernel. The
         // launch rides the arena's *launch ring* — never a regular
         // lane — so every lane stays free for the RPCs the kernel
-        // itself issues (live even at `--rpc-lanes 1`). The issuing
-        // team picks its home ring slot, so concurrent launch sessions
-        // spread over the ring instead of all contending for slot 0.
+        // itself issues (live even at `--rpc-lanes 1`). The home ring
+        // slot is keyed by the program's loader-minted session id (NOT
+        // the issuing team: team ids restart at 0 in every session, so
+        // two sessions sharing a device would always collide on slot 0),
+        // spreading concurrent sessions over the ring.
         let launch_id = self
             .env
             .registry
@@ -778,7 +792,7 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         let mut client = RpcClient::for_launch_session(
             &self.env.device.mem,
             self.env.device.arena(),
-            self.g.team_id,
+            self.env.launch_session as usize,
         );
         let ret = client.call(launch_id, &info, Some(&mut self.g.counters));
         assert_eq!(ret, 0, "kernel launch RPC failed for {region}");
@@ -1026,6 +1040,33 @@ func @main() -> i64 {
         let (ret, _) = env.run_main(&[]);
         assert_eq!(ret, 7);
         assert_eq!(env.unresolved_calls.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn loaded_sessions_mint_distinct_launch_sessions() {
+        // Two programs loaded against one device must not alias a launch
+        // ring slot: the loader mints a fresh monotonic session id per
+        // load (pre-fix both were keyed by team id, which restarts at 0
+        // in every session).
+        let src = "func @main() -> i64 {\n  return 0\n}\n";
+        let registry = Arc::new(WrapperRegistry::new());
+        let device = Arc::new(Device::new(MemConfig::small(), AllocatorKind::Generic));
+        let host = Arc::new(crate::rpc::HostEnv::new());
+        let m1 = crate::ir::parser::parse_module(src).unwrap();
+        let m2 = crate::ir::parser::parse_module(src).unwrap();
+        let e1 =
+            ProgramEnv::load(m1, Arc::clone(&device), Arc::clone(&registry), Arc::clone(&host));
+        let e2 = ProgramEnv::load(m2, device, registry, host);
+        // Strictly monotonic (other tests may mint concurrently, so the
+        // gap can exceed 1 — never zero).
+        assert!(e2.launch_session > e1.launch_session, "monotonic mint");
+        // Consecutive session ids home onto distinct slots of a
+        // multi-slot ring by construction (session % launch_slots).
+        let mem = crate::gpu::memory::DeviceMemory::new(MemConfig::small());
+        let arena = crate::rpc::engine::ArenaLayout::for_shape(1, 2);
+        let c1 = RpcClient::for_launch_session(&mem, arena, 6);
+        let c2 = RpcClient::for_launch_session(&mem, arena, 7);
+        assert_ne!(c1.home_lane(), c2.home_lane(), "sessions spread over the ring");
     }
 
     #[test]

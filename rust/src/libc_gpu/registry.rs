@@ -60,9 +60,50 @@ pub const ALL: &[(&str, DeviceFn)] = &[
 ];
 
 impl DeviceFn {
-    /// The libc symbol name this id resolves.
+    /// Every variant, for both-direction coverage checks against
+    /// [`ALL`]. `name()`'s exhaustive match makes the compiler reject a
+    /// new variant until it is named here and registered there.
+    pub const VARIANTS: &'static [DeviceFn] = &[
+        DeviceFn::Malloc,
+        DeviceFn::Free,
+        DeviceFn::Realloc,
+        DeviceFn::Strlen,
+        DeviceFn::Strcpy,
+        DeviceFn::Strcmp,
+        DeviceFn::Strcat,
+        DeviceFn::Memcpy,
+        DeviceFn::Memset,
+        DeviceFn::Strtod,
+        DeviceFn::Atoi,
+        DeviceFn::Rand,
+        DeviceFn::Srand,
+        DeviceFn::Sqrt,
+        DeviceFn::Fabs,
+    ];
+
+    /// The libc symbol name this id resolves. A total match — a variant
+    /// missing from [`ALL`] used to make the former
+    /// `ALL.iter().find(...).unwrap()` panic at the first `name()` call;
+    /// now the registry test asserts `ALL` covers every variant both
+    /// directions and this function cannot fail.
     pub fn name(self) -> &'static str {
-        ALL.iter().find(|(_, f)| *f == self).map(|(n, _)| *n).unwrap()
+        match self {
+            DeviceFn::Malloc => "malloc",
+            DeviceFn::Free => "free",
+            DeviceFn::Realloc => "realloc",
+            DeviceFn::Strlen => "strlen",
+            DeviceFn::Strcpy => "strcpy",
+            DeviceFn::Strcmp => "strcmp",
+            DeviceFn::Strcat => "strcat",
+            DeviceFn::Memcpy => "memcpy",
+            DeviceFn::Memset => "memset",
+            DeviceFn::Strtod => "strtod",
+            DeviceFn::Atoi => "atoi",
+            DeviceFn::Rand => "rand",
+            DeviceFn::Srand => "srand",
+            DeviceFn::Sqrt => "sqrt",
+            DeviceFn::Fabs => "fabs",
+        }
     }
 
     /// Does the function return a pointer the allocator tracks (so the
@@ -94,6 +135,18 @@ mod tests {
         }
         assert_eq!(lookup("fscanf"), None, "host-RPC symbols are not device-native");
         assert_eq!(lookup("dgemm"), None);
+    }
+
+    #[test]
+    fn all_covers_every_variant_both_directions() {
+        // Every variant resolves to a name and back through ALL...
+        for v in DeviceFn::VARIANTS {
+            assert_eq!(lookup(v.name()), Some(*v), "{v:?} missing from ALL");
+            assert!(ALL.iter().any(|(n, f)| *n == v.name() && f == v), "{v:?}");
+        }
+        // ...and ALL carries nothing VARIANTS does not (same cardinality
+        // + injective names, checked by the sorted/dup test below).
+        assert_eq!(ALL.len(), DeviceFn::VARIANTS.len());
     }
 
     #[test]

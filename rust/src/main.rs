@@ -2,8 +2,8 @@
 //! simulated GPU, run the evaluation apps, and inspect pass output.
 //!
 //! ```text
-//! gpu-first compile <prog.ir> [--no-libcres] [--no-rpcgen] [--no-multiteam]
-//!                   [--passes p1,p2,...]
+//! gpu-first compile <prog.ir> [--no-constfold] [--no-libcres]
+//!                   [--no-rpcgen] [--no-multiteam] [--passes p1,p2,...]
 //! gpu-first run     <prog.ir> [--teams N] [--threads N] [--allocator K]
 //!                   [--rpc-lanes N|auto] [--rpc-workers N|auto]
 //!                   [--rpc-launch-threads N] [--rpc-launch-slots N]
@@ -15,7 +15,7 @@
 //! ```
 //!
 //! The middle-end pipeline is an ordered pass list (default
-//! `libcres,rpcgen,multiteam`). `--passes` overrides it explicitly;
+//! `constfold,libcres,rpcgen,multiteam`). `--passes` overrides it explicitly;
 //! below that, the `GPU_FIRST_PASSES` environment variable (the CI
 //! pass-shape matrix) applies; below that, the `--no-*` flags drop
 //! individual passes from the default order.
@@ -52,9 +52,10 @@ fn main() {
                               --heap-mb N --rpc-lanes N|auto --rpc-workers N|auto\n\
                               --rpc-launch-threads N --rpc-launch-slots N\n\
                               --rpc-data-cap BYTES --no-rpc-batch --verbose\n\
-                 pipeline:    --passes p1,p2,... (known: libcres, rpcgen, multiteam;\n\
-                              default all three; GPU_FIRST_PASSES env applies below it)\n\
-                              --no-libcres --no-rpcgen --no-multiteam\n\
+                 pipeline:    --passes p1,p2,... (known: constfold, libcres, rpcgen,\n\
+                              multiteam; default all four; GPU_FIRST_PASSES env applies\n\
+                              below it) --no-constfold --no-libcres --no-rpcgen\n\
+                              --no-multiteam\n\
                  see README.md"
             );
             std::process::exit(2);
@@ -74,6 +75,7 @@ fn read_module(args: &Args) -> Result<gpu_first::ir::Module, String> {
 
 fn opts(args: &Args) -> CompileOptions {
     CompileOptions {
+        constfold: !args.flag("no-constfold"),
         libcres: !args.flag("no-libcres"),
         rpcgen: !args.flag("no-rpcgen"),
         multiteam: !args.flag("no-multiteam"),
@@ -118,10 +120,17 @@ fn cmd_compile(args: &Args) -> Result<(), String> {
             eprintln!(";;   warning: unresolved symbol '{u}' (call sites will trap)");
         }
     }
+    if !report.constfold.folded.is_empty() {
+        eprintln!(";; --- constfold: {} ---", report.constfold.summary());
+        for (f, callee, from, g) in &report.constfold.folded {
+            eprintln!(";;   {f}: {callee} format {from} -> @{g}");
+        }
+    }
     eprintln!(";; --- rpcgen: {} call sites rewritten ---", report.rpc.rewritten.len());
     for (f, callee, mangled, _) in &report.rpc.rewritten {
         eprintln!(";;   {f}: {callee} -> {mangled}");
     }
+    eprintln!(";; --- pad coverage (AOT): {} ---", report.pad_coverage.summary());
     eprintln!(";; --- multiteam: {} regions expanded ---", report.multiteam.regions.len());
     for r in &report.multiteam.regions {
         eprintln!(
@@ -156,7 +165,7 @@ fn cmd_explain(args: &Args) -> Result<(), String> {
     // Explain compiles without region expansion by default (the module
     // stays closest to the source); `--passes` and the GPU_FIRST_PASSES
     // env still override, with the same precedence as compile/run.
-    let spec = pipeline_spec_or(args, PipelineSpec::parse("libcres,rpcgen").unwrap())?;
+    let spec = pipeline_spec_or(args, PipelineSpec::parse("constfold,libcres,rpcgen").unwrap())?;
     let mut session = GpuFirstSession::start(Config::from_args(args)?);
     session.compile_spec(&mut module, &spec)?;
     let report = session.report.as_ref().unwrap();
@@ -171,6 +180,12 @@ fn cmd_explain(args: &Args) -> Result<(), String> {
     for line in report.resolution.lines() {
         println!("  {line}");
     }
+    if !report.constfold.folded.is_empty() {
+        println!("\nformat-string constant folding (constfold): {}", report.constfold.summary());
+        for (f, callee, from, g) in &report.constfold.folded {
+            println!("  in @{f}: {callee} format {from} folded to @{g}");
+        }
+    }
     println!("\nRPC argument classification (paper §3.2):");
     for (f, callee, mangled, summary) in &report.rpc.rewritten {
         println!("  in @{f}: call {callee} -> landing pad {mangled}");
@@ -181,6 +196,10 @@ fn cmd_explain(args: &Args) -> Result<(), String> {
     if !report.rpc.unsupported.is_empty() {
         println!("  unsupported library callees: {:?}", report.rpc.unsupported);
     }
+    println!(
+        "\npad coverage (AOT, every RPC site verified against the registry): {}",
+        report.pad_coverage.summary()
+    );
     session.stop();
     Ok(())
 }

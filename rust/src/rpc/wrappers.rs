@@ -12,7 +12,22 @@ use super::server::{BatchWrapperFn, RpcFrame, WrapperFn, WrapperRegistry};
 use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Mutex, MutexGuard};
+use std::sync::{Mutex, MutexGuard, TryLockError};
+
+/// Lock `m`, recovering from a poisoned mutex instead of cascading the
+/// panic: a landing pad that panicked while holding a `HostEnv` lock
+/// used to turn every later RPC on that lock into a permanent
+/// `PoisonError` panic — one bad wrapper poisoned the whole host
+/// environment. The data under these locks (byte streams, maps,
+/// counters) stays structurally valid across an unwound wrapper, so the
+/// inner guard is safe to hand out; `recoveries` counts how often it
+/// happened (surfaced through [`HostIoSnapshot::poison_recoveries`]).
+fn lock_or_recover<'a, T>(m: &'a Mutex<T>, recoveries: &AtomicU64) -> MutexGuard<'a, T> {
+    m.lock().unwrap_or_else(|poisoned| {
+        recoveries.fetch_add(1, Ordering::Relaxed);
+        poisoned.into_inner()
+    })
+}
 
 pub const FD_STDIN: u64 = 0;
 pub const FD_STDOUT: u64 = 1;
@@ -90,14 +105,23 @@ impl ContentMap {
     }
 
     /// Lock the shard holding `path`, counting acquisitions that had to
-    /// wait (the per-shard lock-contention metric).
-    fn lock(&self, path: &str) -> MutexGuard<'_, HashMap<String, Vec<u8>>> {
+    /// wait (the per-shard lock-contention metric) and recovering from
+    /// poisoned locks (`recoveries`).
+    fn lock(
+        &self,
+        path: &str,
+        recoveries: &AtomicU64,
+    ) -> MutexGuard<'_, HashMap<String, Vec<u8>>> {
         let shard = &self.shards[Self::shard_of(path)];
         match shard.map.try_lock() {
             Ok(g) => g,
-            Err(_) => {
+            Err(TryLockError::Poisoned(poisoned)) => {
+                recoveries.fetch_add(1, Ordering::Relaxed);
+                poisoned.into_inner()
+            }
+            Err(TryLockError::WouldBlock) => {
                 shard.contended.fetch_add(1, Ordering::Relaxed);
-                shard.map.lock().unwrap()
+                lock_or_recover(&shard.map, recoveries)
             }
         }
     }
@@ -118,13 +142,18 @@ struct FdTable {
 
 impl FdTable {
     /// Lock the table, counting the acquisitions that had to wait (the
-    /// per-shard lock-contention metric).
-    fn lock(&self) -> MutexGuard<'_, HashMap<u64, OpenFile>> {
+    /// per-shard lock-contention metric) and recovering from poisoned
+    /// locks (`recoveries`).
+    fn lock(&self, recoveries: &AtomicU64) -> MutexGuard<'_, HashMap<u64, OpenFile>> {
         match self.open.try_lock() {
             Ok(g) => g,
-            Err(_) => {
+            Err(TryLockError::Poisoned(poisoned)) => {
+                recoveries.fetch_add(1, Ordering::Relaxed);
+                poisoned.into_inner()
+            }
+            Err(TryLockError::WouldBlock) => {
                 self.contended.fetch_add(1, Ordering::Relaxed);
-                self.open.lock().unwrap()
+                lock_or_recover(&self.open, recoveries)
             }
         }
     }
@@ -149,6 +178,13 @@ pub struct HostIoSnapshot {
     /// Content-map lock acquisitions that had to wait, summed over
     /// every shard (0 ⇒ concurrent file traffic never collided).
     pub content_contention: u64,
+    /// Poisoned-lock recoveries: a landing pad panicked while holding a
+    /// `HostEnv` lock and a later RPC recovered the inner guard instead
+    /// of cascading the panic.
+    pub poison_recoveries: u64,
+    /// Writes committed through the batched `fwrite` landing pad
+    /// (engine per-sweep coalescing; each counts one frame).
+    pub batched_writes: u64,
 }
 
 /// Host process state backing the landing pads: an in-memory filesystem,
@@ -183,6 +219,11 @@ pub struct HostEnv {
     pub exited: Mutex<Option<i32>>,
     env_vars: Mutex<HashMap<String, String>>,
     clock_ns: AtomicU64,
+    /// Poisoned-lock recoveries across every `HostEnv` lock (a panicked
+    /// wrapper no longer condemns later RPCs — see [`lock_or_recover`]).
+    poison_recoveries: AtomicU64,
+    /// Frames committed through the batched `fwrite` landing pad.
+    batched_writes: AtomicU64,
     /// Kernel-split hook: `(region_id, arg_ptr) -> ret`. The coordinator
     /// installs a closure that launches the multi-team parallel kernel.
     #[allow(clippy::type_complexity)]
@@ -215,6 +256,8 @@ impl HostEnv {
             exited: Mutex::new(None),
             env_vars: Mutex::new(HashMap::new()),
             clock_ns: AtomicU64::new(1_700_000_000_000_000_000),
+            poison_recoveries: AtomicU64::new(0),
+            batched_writes: AtomicU64::new(0),
             region_launcher: Mutex::new(None),
         }
     }
@@ -239,6 +282,8 @@ impl HostEnv {
                 + self.shards.iter().map(|s| s.contended.load(r)).sum::<u64>(),
             content_shards: CONTENT_SHARDS,
             content_contention: self.files.contention(),
+            poison_recoveries: self.poison_recoveries.load(r),
+            batched_writes: self.batched_writes.load(r),
         }
     }
 
@@ -261,83 +306,112 @@ impl HostEnv {
     }
 
     pub fn put_file(&self, path: &str, content: &[u8]) {
-        self.files.lock(path).insert(path.to_string(), content.to_vec());
+        self.files
+            .lock(path, &self.poison_recoveries)
+            .insert(path.to_string(), content.to_vec());
     }
 
     pub fn file(&self, path: &str) -> Option<Vec<u8>> {
-        self.files.lock(path).get(path).cloned()
+        self.files.lock(path, &self.poison_recoveries).get(path).cloned()
     }
 
     pub fn set_env(&self, k: &str, v: &str) {
-        self.env_vars.lock().unwrap().insert(k.to_string(), v.to_string());
+        lock_or_recover(&self.env_vars, &self.poison_recoveries)
+            .insert(k.to_string(), v.to_string());
     }
 
     pub fn stdout_string(&self) -> String {
-        String::from_utf8_lossy(&self.stdout.lock().unwrap()).into_owned()
+        String::from_utf8_lossy(&lock_or_recover(&self.stdout, &self.poison_recoveries))
+            .into_owned()
     }
 
     pub fn stderr_string(&self) -> String {
-        String::from_utf8_lossy(&self.stderr.lock().unwrap()).into_owned()
+        String::from_utf8_lossy(&lock_or_recover(&self.stderr, &self.poison_recoveries))
+            .into_owned()
+    }
+
+    /// Record `frames` committed through a batched write pad.
+    fn count_batched_writes(&self, frames: u64) {
+        self.batched_writes.fetch_add(frames, Ordering::Relaxed);
     }
 
     fn write_stream(&self, fd: u64, bytes: &[u8]) -> i64 {
         match fd {
-            FD_STDOUT => self.stdout.lock().unwrap().extend_from_slice(bytes),
-            FD_STDERR => self.stderr.lock().unwrap().extend_from_slice(bytes),
+            FD_STDOUT => lock_or_recover(&self.stdout, &self.poison_recoveries)
+                .extend_from_slice(bytes),
+            FD_STDERR => lock_or_recover(&self.stderr, &self.poison_recoveries)
+                .extend_from_slice(bytes),
             fd => {
                 let Some(table) = self.table_for(fd) else { return -1 };
-                let mut open = table.lock();
+                let mut open = table.lock(&self.poison_recoveries);
                 let Some(of) = open.get_mut(&fd) else { return -1 };
                 if !of.writable {
                     return -1;
                 }
-                let mut files = self.files.lock(&of.path);
+                let mut files = self.files.lock(&of.path, &self.poison_recoveries);
                 let content = files.entry(of.path.clone()).or_default();
-                if of.pos > content.len() {
-                    content.resize(of.pos, 0);
-                }
-                // Overwrite-at-position semantics.
-                let end = of.pos + bytes.len();
-                if end > content.len() {
-                    content.resize(end, 0);
-                }
-                content[of.pos..end].copy_from_slice(bytes);
-                of.pos = end;
+                write_at(content, of, bytes);
             }
         }
         bytes.len() as i64
     }
 
-    /// Batched stream append: when every item targets the standard
-    /// streams, both stream locks are taken **once** for the whole batch
-    /// instead of once per call — the host-side win of the engine's
-    /// coalesced printf dispatch. Mixed fds fall back to per-item writes.
-    pub fn write_stream_many(&self, items: &[(u64, String)]) -> Vec<i64> {
-        let all_std = items.iter().all(|(fd, _)| *fd == FD_STDOUT || *fd == FD_STDERR);
-        if all_std {
-            let mut out = self.stdout.lock().unwrap();
-            let mut err = self.stderr.lock().unwrap();
-            items
-                .iter()
-                .map(|(fd, s)| {
-                    if *fd == FD_STDOUT {
-                        out.extend_from_slice(s.as_bytes());
-                    } else {
-                        err.extend_from_slice(s.as_bytes());
+    /// Batched stream/file append: items commit **in order**, with lock
+    /// acquisitions amortized over runs of consecutive same-fd items —
+    /// a run to a standard stream takes that stream's lock once, and a
+    /// run to a file fd resolves its open-handle table and content
+    /// shard once instead of once per call. This is the host-side win
+    /// of the engine's coalesced printf/fwrite dispatch; results are
+    /// identical to calling [`write_stream`](Self::write_stream) per
+    /// item.
+    pub fn write_stream_many(&self, items: &[(u64, Vec<u8>)]) -> Vec<i64> {
+        let mut rets = Vec::with_capacity(items.len());
+        let mut i = 0;
+        while i < items.len() {
+            let fd = items[i].0;
+            let mut j = i + 1;
+            while j < items.len() && items[j].0 == fd {
+                j += 1;
+            }
+            let run = &items[i..j];
+            match fd {
+                FD_STDOUT | FD_STDERR => {
+                    let stream = if fd == FD_STDOUT { &self.stdout } else { &self.stderr };
+                    let mut guard = lock_or_recover(stream, &self.poison_recoveries);
+                    for (_, bytes) in run {
+                        guard.extend_from_slice(bytes);
+                        rets.push(bytes.len() as i64);
                     }
-                    s.len() as i64
-                })
-                .collect()
-        } else {
-            items.iter().map(|(fd, s)| self.write_stream(*fd, s.as_bytes())).collect()
+                }
+                fd => match self.table_for(fd) {
+                    None => rets.extend(run.iter().map(|_| -1)),
+                    Some(table) => {
+                        let mut open = table.lock(&self.poison_recoveries);
+                        match open.get_mut(&fd) {
+                            Some(of) if of.writable => {
+                                let mut files =
+                                    self.files.lock(&of.path, &self.poison_recoveries);
+                                let content = files.entry(of.path.clone()).or_default();
+                                for (_, bytes) in run {
+                                    write_at(content, of, bytes);
+                                    rets.push(bytes.len() as i64);
+                                }
+                            }
+                            _ => rets.extend(run.iter().map(|_| -1)),
+                        }
+                    }
+                },
+            }
+            i = j;
         }
+        rets
     }
 
     fn read_stream(&self, fd: u64, out: &mut [u8]) -> i64 {
         let Some(table) = self.table_for(fd) else { return -1 };
-        let mut open = table.lock();
+        let mut open = table.lock(&self.poison_recoveries);
         let Some(of) = open.get_mut(&fd) else { return -1 };
-        let files = self.files.lock(&of.path);
+        let files = self.files.lock(&of.path, &self.poison_recoveries);
         let Some(content) = files.get(&of.path) else { return -1 };
         let avail = content.len().saturating_sub(of.pos);
         let n = avail.min(out.len());
@@ -349,7 +423,7 @@ impl HostEnv {
     fn fopen(&self, path: &str, mode: &str) -> i64 {
         let writable = mode.starts_with('w') || mode.starts_with('a');
         {
-            let mut files = self.files.lock(path);
+            let mut files = self.files.lock(path, &self.poison_recoveries);
             if writable && mode.starts_with('w') {
                 files.insert(path.to_string(), Vec::new());
             } else if !files.contains_key(path) {
@@ -357,7 +431,11 @@ impl HostEnv {
             }
         }
         let pos = if mode.starts_with('a') {
-            self.files.lock(path).get(path).map(|c| c.len()).unwrap_or(0)
+            self.files
+                .lock(path, &self.poison_recoveries)
+                .get(path)
+                .map(|c| c.len())
+                .unwrap_or(0)
         } else {
             0
         };
@@ -372,13 +450,15 @@ impl HostEnv {
             _ => (&self.shared, seq),
         };
         table.opens.fetch_add(1, Ordering::Relaxed);
-        table.lock().insert(fd, OpenFile { path: path.to_string(), pos, writable });
+        table
+            .lock(&self.poison_recoveries)
+            .insert(fd, OpenFile { path: path.to_string(), pos, writable });
         fd as i64
     }
 
     fn fclose(&self, fd: u64) -> i64 {
         match self.table_for(fd) {
-            Some(table) if table.lock().remove(&fd).is_some() => 0,
+            Some(table) if table.lock(&self.poison_recoveries).remove(&fd).is_some() => 0,
             _ => -1,
         }
     }
@@ -387,9 +467,9 @@ impl HostEnv {
     /// returning the consumed text for the scanner.
     fn remaining(&self, fd: u64) -> String {
         let Some(table) = self.table_for(fd) else { return String::new() };
-        let open = table.lock();
+        let open = table.lock(&self.poison_recoveries);
         let Some(of) = open.get(&fd) else { return String::new() };
-        let files = self.files.lock(&of.path);
+        let files = self.files.lock(&of.path, &self.poison_recoveries);
         files
             .get(&of.path)
             .map(|c| String::from_utf8_lossy(&c[of.pos.min(c.len())..]).into_owned())
@@ -398,11 +478,27 @@ impl HostEnv {
 
     fn advance(&self, fd: u64, by: usize) {
         if let Some(table) = self.table_for(fd) {
-            if let Some(of) = table.lock().get_mut(&fd) {
+            if let Some(of) = table.lock(&self.poison_recoveries).get_mut(&fd) {
                 of.pos += by;
             }
         }
     }
+}
+
+/// Overwrite-at-position write of `bytes` into `content` at the
+/// handle's position, growing (zero-filled) as needed and advancing the
+/// position — the one committed-write primitive [`HostEnv::write_stream`]
+/// and the batched [`HostEnv::write_stream_many`] share.
+fn write_at(content: &mut Vec<u8>, of: &mut OpenFile, bytes: &[u8]) {
+    if of.pos > content.len() {
+        content.resize(of.pos, 0);
+    }
+    let end = of.pos + bytes.len();
+    if end > content.len() {
+        content.resize(end, 0);
+    }
+    content[of.pos..end].copy_from_slice(bytes);
+    of.pos = end;
 }
 
 // ---- the C format machinery (printf/scanf subset the benchmarks use) ----
@@ -737,7 +833,12 @@ pub fn synthesize(kind: HostFnKind) -> WrapperFn {
             let size = f.val(1) as usize;
             let count = f.val(2) as usize;
             let fd = f.val(3);
-            let data = f.bytes(0)[..size * count].to_vec();
+            // Guest-controlled size×count: clamp to the staged object
+            // (rpcgen sizes the ref from the underlying object) so an
+            // oversized request is a short write, never a slice panic
+            // that would kill the serving worker.
+            let want = size.saturating_mul(count).min(f.bytes(0).len());
+            let data = f.bytes(0)[..want].to_vec();
             let n = env.write_stream(fd, &data);
             if n < 0 || size == 0 {
                 0
@@ -751,7 +852,7 @@ pub fn synthesize(kind: HostFnKind) -> WrapperFn {
             env.write_stream(FD_STDOUT, s.as_bytes())
         }),
         HostFnKind::Exit => Box::new(|f, env| {
-            *env.exited.lock().unwrap() = Some(f.val(0) as i32);
+            *lock_or_recover(&env.exited, &env.poison_recoveries) = Some(f.val(0) as i32);
             0
         }),
         HostFnKind::Time => Box::new(|_, env| {
@@ -759,7 +860,7 @@ pub fn synthesize(kind: HostFnKind) -> WrapperFn {
         }),
         HostFnKind::Getenv => Box::new(|f, env| {
             let k = f.cstr(0);
-            let vars = env.env_vars.lock().unwrap();
+            let vars = lock_or_recover(&env.env_vars, &env.poison_recoveries);
             match vars.get(&k) {
                 Some(v) => {
                     let buf = f.bytes_mut(1);
@@ -774,7 +875,7 @@ pub fn synthesize(kind: HostFnKind) -> WrapperFn {
         HostFnKind::LaunchKernel => Box::new(|f, env| {
             let region = f.val(0);
             let arg = f.val(1);
-            let launcher = env.region_launcher.lock().unwrap();
+            let launcher = lock_or_recover(&env.region_launcher, &env.poison_recoveries);
             match launcher.as_ref() {
                 Some(l) => l(region, arg),
                 None => -1,
@@ -786,34 +887,67 @@ pub fn synthesize(kind: HostFnKind) -> WrapperFn {
 /// Synthesize the *batched* landing pad for `kind`, if one exists.
 ///
 /// Only callees whose host effect is an order-preserving append benefit:
-/// the printf family renders every frame, then commits the whole batch
-/// to the streams under a single lock acquisition
-/// ([`HostEnv::write_stream_many`]). Stateful callees (fopen/fscanf/...)
-/// return `None` and keep their scalar pads — the engine then amortizes
-/// only the registry dispatch.
+/// the printf family and `puts` render every frame, and `fwrite` stages
+/// every frame's payload, then the whole batch commits through
+/// [`HostEnv::write_stream_many`] — runs of same-fd writes amortize the
+/// stream/file lock acquisitions to one per run instead of one per
+/// call. Stateful callees (fopen/fscanf/...) return `None` and keep
+/// their scalar pads — the engine then amortizes only the registry
+/// dispatch.
 pub fn synthesize_batch(kind: HostFnKind) -> Option<BatchWrapperFn> {
     match kind {
         HostFnKind::Printf { has_fd } => Some(Box::new(move |frames, env| {
-            let rendered: Vec<(u64, String)> = frames
+            let rendered: Vec<(u64, Vec<u8>)> = frames
                 .iter()
                 .map(|f| {
                     let (fd, fmt_i) = if has_fd { (f.val(0), 1) } else { (FD_STDOUT, 0) };
                     let fmt = f.cstr(fmt_i);
-                    (fd, format_c(f, &fmt, fmt_i + 1))
+                    (fd, format_c(f, &fmt, fmt_i + 1).into_bytes())
                 })
                 .collect();
             env.write_stream_many(&rendered)
         })),
         HostFnKind::Puts => Some(Box::new(|frames, env| {
-            let rendered: Vec<(u64, String)> = frames
+            let rendered: Vec<(u64, Vec<u8>)> = frames
                 .iter()
                 .map(|f| {
                     let mut s = f.cstr(0);
                     s.push('\n');
-                    (FD_STDOUT, s)
+                    (FD_STDOUT, s.into_bytes())
                 })
                 .collect();
             env.write_stream_many(&rendered)
+        })),
+        HostFnKind::Fwrite => Some(Box::new(|frames, env| {
+            // fwrite(buf, size, count, fd) per frame; same-fd runs of a
+            // sweep commit under one handle+content lock acquisition.
+            // size×count clamps to the staged object exactly like the
+            // scalar pad (short write, never a worker-killing panic).
+            let staged: Vec<(u64, Vec<u8>)> = frames
+                .iter()
+                .map(|f| {
+                    let size = f.val(1) as usize;
+                    let count = f.val(2) as usize;
+                    let want = size.saturating_mul(count).min(f.bytes(0).len());
+                    (f.val(3), f.bytes(0)[..want].to_vec())
+                })
+                .collect();
+            let ns = env.write_stream_many(&staged);
+            // Only frames that actually committed count as batched.
+            env.count_batched_writes(ns.iter().filter(|&&n| n >= 0).count() as u64);
+            frames
+                .iter()
+                .zip(ns)
+                .map(|(f, n)| {
+                    let size = f.val(1) as i64;
+                    // Item-return semantics identical to the scalar pad.
+                    if n < 0 || size == 0 {
+                        0
+                    } else {
+                        n / size
+                    }
+                })
+                .collect()
         })),
         _ => None,
     }
@@ -871,6 +1005,7 @@ mod tests {
     use super::*;
     use crate::rpc::server::HostArg;
     use crate::rpc::ArgMode;
+    use std::sync::Arc;
 
     fn buf_arg(bytes: &[u8]) -> HostArg {
         HostArg::Buf { bytes: bytes.to_vec(), offset: 0, mode: ArgMode::ReadWrite }
@@ -1033,6 +1168,124 @@ mod tests {
         assert!(synthesize_batch(HostFnKind::Fopen).is_none());
         assert!(synthesize_batch(HostFnKind::Scanf { has_fd: true }).is_none());
         assert!(synthesize_batch(HostFnKind::Exit).is_none());
+        // Order-preserving appends do batch.
+        assert!(synthesize_batch(HostFnKind::Fwrite).is_some());
+        assert!(synthesize_batch(HostFnKind::Puts).is_some());
+    }
+
+    fn fwrite_frame(payload: &[u8], fd: u64) -> RpcFrame {
+        RpcFrame {
+            args: vec![
+                buf_arg(payload),
+                HostArg::Val(1),
+                HostArg::Val(payload.len() as u64),
+                HostArg::Val(fd),
+            ],
+        }
+    }
+
+    #[test]
+    fn batch_fwrite_pad_matches_scalar_pads_byte_identically() {
+        // Interleaved writers into one shared file (two fds, "w" then
+        // "a") plus a third file and a bad fd, under a sharded HostEnv:
+        // the batched dispatch must produce byte-identical files and
+        // identical per-item returns to scalar dispatch in the same
+        // order.
+        let run = |batched: bool| {
+            let env = HostEnv::with_shards(4);
+            let fd_w = with_lane_ctx(1, || env.fopen("shared.txt", "w")) as u64;
+            env.write_stream(fd_w, b"0123456789"); // gives the appender a tail
+            let fd_a = with_lane_ctx(2, || env.fopen("shared.txt", "a")) as u64;
+            let fd_o = with_lane_ctx(3, || env.fopen("other.txt", "w")) as u64;
+            env.fclose(fd_w);
+            let fd_w = env.fopen("shared.txt", "r") as u64; // read-only: fwrite must fail
+            let mut frames = vec![
+                fwrite_frame(b"AA", fd_a),
+                fwrite_frame(b"BB", fd_a), // same-fd run of two
+                fwrite_frame(b"oo", fd_o),
+                fwrite_frame(b"xx", fd_w), // not writable -> 0 items written
+                fwrite_frame(b"CC", fd_a),
+            ];
+            let rets: Vec<i64> = if batched {
+                let pad = synthesize_batch(HostFnKind::Fwrite).unwrap();
+                pad(&mut frames, &env)
+            } else {
+                let pad = synthesize(HostFnKind::Fwrite);
+                frames.iter_mut().map(|f| pad(f, &env)).collect()
+            };
+            (env.file("shared.txt").unwrap(), env.file("other.txt").unwrap(), rets)
+        };
+        let (shared_b, other_b, rets_b) = run(true);
+        let (shared_s, other_s, rets_s) = run(false);
+        assert_eq!(shared_b, shared_s);
+        assert_eq!(other_b, other_s);
+        assert_eq!(rets_b, rets_s);
+        assert_eq!(shared_b, b"0123456789AABBCC");
+        assert_eq!(other_b, b"oo");
+        assert_eq!(rets_b, vec![2, 2, 2, 0, 2]);
+    }
+
+    #[test]
+    fn oversized_fwrite_clamps_to_the_staged_object() {
+        // size×count beyond the staged buffer is a short write (the C
+        // contract for a failed transfer), never a slice panic that
+        // would take down the serving engine worker.
+        let env = HostEnv::new();
+        let fd = env.fopen("clamp.bin", "w") as u64;
+        let scalar = synthesize(HostFnKind::Fwrite);
+        let mut f = RpcFrame {
+            args: vec![buf_arg(b"ab"), HostArg::Val(1), HostArg::Val(100), HostArg::Val(fd)],
+        };
+        assert_eq!(scalar(&mut f, &env), 2, "short write, not a panic");
+        let batch = synthesize_batch(HostFnKind::Fwrite).unwrap();
+        let mut frames = vec![RpcFrame {
+            args: vec![buf_arg(b"cd"), HostArg::Val(1), HostArg::Val(100), HostArg::Val(fd)],
+        }];
+        assert_eq!(batch(&mut frames, &env), vec![2]);
+        assert_eq!(env.file("clamp.bin").unwrap(), b"abcd");
+    }
+
+    #[test]
+    fn batched_fwrite_counter_rides_the_snapshot() {
+        let env = HostEnv::new();
+        let fd = env.fopen("log.bin", "w") as u64;
+        let pad = synthesize_batch(HostFnKind::Fwrite).unwrap();
+        let mut frames = vec![fwrite_frame(b"ab", fd), fwrite_frame(b"cd", fd)];
+        assert_eq!(pad(&mut frames, &env), vec![2, 2]);
+        assert_eq!(env.io_snapshot().batched_writes, 2, "one per committed frame");
+        assert_eq!(env.file("log.bin").unwrap(), b"abcd");
+    }
+
+    #[test]
+    fn poisoned_stream_lock_recovers_instead_of_cascading() {
+        let env = Arc::new(HostEnv::new());
+        // Poison the stdout lock: a "landing pad" panics while holding it.
+        let poisoner = Arc::clone(&env);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.stdout.lock().unwrap();
+            panic!("wrapper panicked mid-write");
+        })
+        .join();
+        assert!(env.stdout.lock().is_err(), "lock really is poisoned");
+        // Later RPCs recover the inner guard and keep serving.
+        assert_eq!(env.write_stream(FD_STDOUT, b"still alive"), 11);
+        assert_eq!(env.stdout_string(), "still alive");
+        let snap = env.io_snapshot();
+        assert!(snap.poison_recoveries >= 2, "recoveries are counted: {snap:?}");
+    }
+
+    #[test]
+    fn poisoned_content_shard_recovers_for_file_io() {
+        let env = Arc::new(HostEnv::new());
+        env.put_file("data.txt", b"payload");
+        let poisoner = Arc::clone(&env);
+        let _ = std::thread::spawn(move || {
+            let _guard = poisoner.files.lock("data.txt", &poisoner.poison_recoveries);
+            panic!("pad died holding the content shard");
+        })
+        .join();
+        assert_eq!(env.file("data.txt").unwrap(), b"payload", "shard usable again");
+        assert!(env.io_snapshot().poison_recoveries >= 1);
     }
 
     #[test]
@@ -1111,15 +1364,17 @@ mod tests {
     }
 
     #[test]
-    fn write_stream_many_mixed_fds_falls_back() {
+    fn write_stream_many_commits_mixed_fds_in_order() {
         let env = HostEnv::new();
         let fd = env.fopen("mix.txt", "w") as u64;
         let rets = env.write_stream_many(&[
-            (FD_STDOUT, "out".to_string()),
-            (fd, "file".to_string()),
-            (FD_STDERR, "err".to_string()),
+            (FD_STDOUT, b"out".to_vec()),
+            (fd, b"fi".to_vec()),
+            (fd, b"le".to_vec()), // same-fd run: one lock acquisition
+            (FD_STDERR, b"err".to_vec()),
+            (999, b"nope".to_vec()), // unknown fd: per-item -1, run intact
         ]);
-        assert_eq!(rets, vec![3, 4, 3]);
+        assert_eq!(rets, vec![3, 2, 2, 3, -1]);
         env.fclose(fd);
         assert_eq!(env.stdout_string(), "out");
         assert_eq!(env.stderr_string(), "err");

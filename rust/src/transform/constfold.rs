@@ -1,0 +1,502 @@
+//! `constfold` — format-string constant folding (widens the paper's
+//! §3.2 precise-intent path).
+//!
+//! `rpcgen` derives *precise* per-argument intents only when a variadic
+//! call's format string is a compile-time constant it can read; any
+//! format it cannot resolve drops the whole call site into the
+//! pessimistic "copy every buffer both ways" path (the Fig. 7 `fprintf`
+//! case). The underlying-object analysis already follows plain
+//! single-assignment chains, so what actually escapes precision today
+//! is:
+//!
+//! * `select` between constant globals whose condition is itself a
+//!   compile-time constant (the analysis enumerates both candidates and
+//!   refuses to pick, so the format text stays unknown), and
+//! * **pass-through arguments**: a wrapper function receiving the format
+//!   as a parameter (`log(fmt, x)` called with a constant global at
+//!   every site) — parameters classify as dynamic-origin.
+//!
+//! This pass folds exactly those shapes: for every call site the
+//! resolution table classifies as a printf/scanf-family host RPC, the
+//! format operand's def chain is folded through copies, zero-offset
+//! `gep`s and constant-condition `select`s; interprocedurally, a
+//! parameter that every caller binds to the *same* constant global is
+//! folded inside the callee. A successful fold rewrites the format
+//! operand to the global itself, so `rpcgen`'s `parse_format` sees
+//! literal text and classifies the trailing buffers precisely instead of
+//! read-write. The parameter bindings are iterated to a fixed point, so
+//! constants flow through nested wrappers before the single rewrite
+//! round.
+//!
+//! Only format operands of format-taking host-RPC callees are rewritten;
+//! the pass never touches computation, so a program where nothing folds
+//! is byte-identical to its unfolded compilation (the `constfold`
+//! equivalence suite proves outputs match either way).
+
+use super::libcres::{resolve_module, ResolutionTable};
+use crate::analysis::callgraph::walk;
+use crate::analysis::objects::def_map;
+use crate::ir::{Expr, Instr, Module, Operand};
+use crate::rpc::wrappers::HostFnKind;
+use std::collections::HashMap;
+
+/// What the pass did — consumed by tests, `--explain` and `RunMetrics`.
+#[derive(Debug, Default, Clone)]
+pub struct ConstFoldReport {
+    /// (function, callee, folded operand rendering, global it folded to).
+    pub folded: Vec<(String, String, String, String)>,
+}
+
+impl ConstFoldReport {
+    /// Format operands folded to constant globals.
+    pub fn count(&self) -> u64 {
+        self.folded.len() as u64
+    }
+
+    /// One-line summary for pass reports.
+    pub fn summary(&self) -> String {
+        format!("{} format operand(s) folded to constant globals", self.folded.len())
+    }
+}
+
+/// Run standalone: builds its own resolution table. The pass-manager
+/// path goes through [`run_with`] with the cached table.
+pub fn run(m: &mut Module) -> ConstFoldReport {
+    let table = resolve_module(m);
+    run_with(m, &table)
+}
+
+/// The argument position of the format string for `kind`, for the
+/// format-taking host functions (`printf`/`fprintf`/`scanf`/`fscanf`).
+fn fmt_index(kind: HostFnKind) -> Option<usize> {
+    match kind {
+        HostFnKind::Printf { has_fd } | HostFnKind::Scanf { has_fd } => Some(usize::from(has_fd)),
+        _ => None,
+    }
+}
+
+/// Fold format operands across the module: compute the fixed point of
+/// the pass-through parameter bindings (so constants flow through
+/// nested wrappers), then rewrite every resolvable format operand.
+pub fn run_with(m: &mut Module, table: &ResolutionTable) -> ConstFoldReport {
+    let mut report = ConstFoldReport::default();
+    let bindings = param_bindings(m);
+    // Rewrites only touch format operands of *external* calls, which
+    // are never binding sources, so one rewrite round after the binding
+    // fixed point is complete (a folded operand becomes a direct
+    // `Operand::Global`, which a further round would skip anyway).
+    fold_round(m, table, &bindings, &mut report);
+    report
+}
+
+/// For every defined function, the parameters that *every* call site in
+/// the module binds to the same constant global: `(function, param
+/// name) -> global`. Iterated to a fixed point so a binding in a caller
+/// lets its own call sites fold (`main → outer(@fmt) → inner(%g)`
+/// binds `inner`'s parameter transitively). Parameters shadowed by a
+/// local definition in the callee are excluded.
+fn param_bindings(m: &Module) -> HashMap<(String, String), String> {
+    let mut bindings = HashMap::new();
+    // Each round propagates constants one call-graph level deeper; 16
+    // levels is far beyond any real wrapper nesting, and the early
+    // break fires as soon as the set is stable.
+    for _ in 0..16 {
+        let next = bindings_once(m, &bindings);
+        if next == bindings {
+            break;
+        }
+        bindings = next;
+    }
+    bindings
+}
+
+/// One binding round: judge every call site's arguments under the
+/// previous round's bindings (the caller's own parameters may already
+/// be bound to globals).
+fn bindings_once(
+    m: &Module,
+    prev: &HashMap<(String, String), String>,
+) -> HashMap<(String, String), String> {
+    // (callee, param index) -> Some(global) while consistent, None once
+    // two sites disagree (or a site passes something unfoldable).
+    let mut seen: HashMap<(String, usize), Option<String>> = HashMap::new();
+    for (caller, f) in &m.functions {
+        let defs = def_map(f);
+        let caller_params: HashMap<String, String> = prev
+            .iter()
+            .filter(|((func, _), _)| func == caller)
+            .map(|((_, param), global)| (param.clone(), global.clone()))
+            .collect();
+        walk(&f.body, &mut |ins| {
+            if let Instr::Call { callee, args, .. } = ins {
+                if !m.is_defined(callee) {
+                    return;
+                }
+                for (i, arg) in args.iter().enumerate() {
+                    let folded = fold_operand(m, &defs, &caller_params, arg, 0);
+                    seen.entry((callee.clone(), i))
+                        .and_modify(|entry| {
+                            if entry.as_deref() != folded.as_deref() {
+                                *entry = None;
+                            }
+                        })
+                        .or_insert(folded);
+                }
+            }
+        });
+    }
+    let mut out = HashMap::new();
+    for ((callee, i), global) in seen {
+        let Some(global) = global else { continue };
+        let Some(f) = m.functions.get(&callee) else { continue };
+        let Some(param) = f.params.get(i) else { continue };
+        // A body instruction redefining the parameter name shadows the
+        // binding — skip (the def map records instruction defs only, so
+        // membership is exactly "shadowed").
+        if def_map(f).contains_key(&param.name) {
+            continue;
+        }
+        out.insert((callee.clone(), param.name.clone()), global);
+    }
+    out
+}
+
+/// One fold round over every function body; returns the fold count.
+fn fold_round(
+    m: &mut Module,
+    table: &ResolutionTable,
+    bindings: &HashMap<(String, String), String>,
+    report: &mut ConstFoldReport,
+) -> u64 {
+    let mut folds = 0;
+    let fnames: Vec<String> = m.functions.keys().cloned().collect();
+    for fname in fnames {
+        let f = m.functions.get(&fname).unwrap();
+        let defs = def_map(f);
+        let my_params: HashMap<String, String> = bindings
+            .iter()
+            .filter(|((func, _), _)| *func == fname)
+            .map(|((_, param), global)| (param.clone(), global.clone()))
+            .collect();
+        let mut f = f.clone();
+        let n = fold_body(m, &mut f.body, &defs, &my_params, table, &fname, report);
+        if n > 0 {
+            // Unchanged functions keep their original storage.
+            m.functions.insert(fname, f);
+        }
+        folds += n;
+    }
+    folds
+}
+
+#[allow(clippy::too_many_arguments)]
+fn fold_body(
+    m: &Module,
+    body: &mut Vec<Instr>,
+    defs: &HashMap<String, Instr>,
+    params: &HashMap<String, String>,
+    table: &ResolutionTable,
+    fname: &str,
+    report: &mut ConstFoldReport,
+) -> u64 {
+    let mut folds = 0;
+    for ins in body.iter_mut() {
+        match ins {
+            Instr::Call { callee, args, .. } if !m.is_defined(callee) => {
+                let Some(i) = table.host_kind(callee).and_then(fmt_index) else { continue };
+                let Some(op) = args.get(i) else { continue };
+                if matches!(op, Operand::Global(_)) {
+                    continue; // already a direct constant reference
+                }
+                if let Some(g) = fold_operand(m, defs, params, op, 0) {
+                    report.folded.push((
+                        fname.to_string(),
+                        callee.clone(),
+                        render(op),
+                        g.clone(),
+                    ));
+                    args[i] = Operand::Global(g);
+                    folds += 1;
+                }
+            }
+            Instr::If { then_body, else_body, .. } => {
+                folds += fold_body(m, then_body, defs, params, table, fname, report);
+                folds += fold_body(m, else_body, defs, params, table, fname, report);
+            }
+            Instr::While { cond, body, .. } => {
+                folds += fold_body(m, cond, defs, params, table, fname, report);
+                folds += fold_body(m, body, defs, params, table, fname, report);
+            }
+            Instr::For { body, .. } | Instr::Parallel { body, .. } => {
+                folds += fold_body(m, body, defs, params, table, fname, report);
+            }
+            _ => {}
+        }
+    }
+    folds
+}
+
+fn render(op: &Operand) -> String {
+    match op {
+        Operand::Var(v) => format!("%{v}"),
+        Operand::Global(g) => format!("@{g}"),
+        Operand::ConstI(i) => i.to_string(),
+        Operand::ConstF(f) => f.to_string(),
+    }
+}
+
+/// Fold `op` down to a constant global it provably aliases at offset 0:
+/// follows plain copies, zero-offset `gep`s, constant-condition
+/// `select`s, and parameters bound by every caller (`params`).
+fn fold_operand(
+    m: &Module,
+    defs: &HashMap<String, Instr>,
+    params: &HashMap<String, String>,
+    op: &Operand,
+    depth: usize,
+) -> Option<String> {
+    if depth > 32 {
+        return None;
+    }
+    match op {
+        Operand::Global(g) if m.globals.get(g).is_some_and(|gl| gl.constant) => Some(g.clone()),
+        Operand::Var(v) => match defs.get(v) {
+            Some(Instr::Assign { expr, .. }) => match expr {
+                Expr::Op(inner) => fold_operand(m, defs, params, inner, depth + 1),
+                Expr::Gep(base, off) if fold_const_int(defs, off, 0) == Some(0) => {
+                    fold_operand(m, defs, params, base, depth + 1)
+                }
+                Expr::Select(c, a, b) => {
+                    let cv = fold_const_int(defs, c, 0)?;
+                    let side = if cv != 0 { a } else { b };
+                    fold_operand(m, defs, params, side, depth + 1)
+                }
+                _ => None,
+            },
+            Some(_) => None,
+            // No local definition: a parameter — foldable when every
+            // caller binds it to the same constant global.
+            None => params.get(v).cloned(),
+        },
+        _ => None,
+    }
+}
+
+/// Fold `op` to a compile-time integer (constants and copy chains).
+fn fold_const_int(defs: &HashMap<String, Instr>, op: &Operand, depth: usize) -> Option<i64> {
+    if depth > 32 {
+        return None;
+    }
+    match op {
+        Operand::ConstI(i) => Some(*i),
+        Operand::Var(v) => match defs.get(v) {
+            Some(Instr::Assign { expr: Expr::Op(inner), .. }) => {
+                fold_const_int(defs, inner, depth + 1)
+            }
+            _ => None,
+        },
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    fn fold(src: &str) -> (Module, ConstFoldReport) {
+        let mut m = parse_module(src).unwrap();
+        m.verify().unwrap();
+        let report = run(&mut m);
+        m.verify().unwrap();
+        (m, report)
+    }
+
+    fn fmt_arg_of_call(m: &Module, func: &str, callee: &str, i: usize) -> Operand {
+        let mut found = None;
+        walk(&m.functions[func].body, &mut |ins| {
+            if let Instr::Call { callee: c, args, .. } = ins {
+                if c == callee {
+                    found = Some(args[i].clone());
+                }
+            }
+        });
+        found.expect("call site present")
+    }
+
+    #[test]
+    fn const_select_between_constant_globals_folds() {
+        let src = r#"
+global @f1 const 3 "%s"
+global @f2 const 3 "%d"
+global @buf 64
+
+func @main() -> i64 {
+  %c = 1
+  %f = select %c, @f1, @f2
+  %p = gep @buf, 0
+  call printf(%f, %p)
+  return 0
+}
+"#;
+        let (m, report) = fold(src);
+        assert_eq!(report.count(), 1);
+        assert_eq!(fmt_arg_of_call(&m, "main", "printf", 0), Operand::Global("f1".into()));
+        // The false branch folds the other way.
+        let src0 = src.replace("%c = 1", "%c = 0");
+        let mut m = parse_module(&src0).unwrap();
+        run(&mut m);
+        assert_eq!(fmt_arg_of_call(&m, "main", "printf", 0), Operand::Global("f2".into()));
+    }
+
+    #[test]
+    fn copy_and_zero_gep_chains_fold() {
+        let src = r#"
+global @fmt const 6 "x=%d\n"
+
+func @main() -> i64 {
+  %a = gep @fmt, 0
+  %z = 0
+  %b = gep %a, %z
+  call printf(%b, 7)
+  return 0
+}
+"#;
+        let (m, report) = fold(src);
+        assert_eq!(report.count(), 1);
+        assert_eq!(fmt_arg_of_call(&m, "main", "printf", 0), Operand::Global("fmt".into()));
+    }
+
+    #[test]
+    fn pass_through_parameter_folds_when_all_sites_agree() {
+        let src = r#"
+global @fmt const 6 "v=%d\n"
+
+func @log(%f: ptr, %v: i64) -> void {
+  call printf(%f, %v)
+  return
+}
+
+func @main() -> i64 {
+  call log(@fmt, 1)
+  call log(@fmt, 2)
+  return 0
+}
+"#;
+        let (m, report) = fold(src);
+        assert_eq!(report.count(), 1);
+        assert_eq!(fmt_arg_of_call(&m, "log", "printf", 0), Operand::Global("fmt".into()));
+        let (f, callee, _, g) = &report.folded[0];
+        assert_eq!((f.as_str(), callee.as_str(), g.as_str()), ("log", "printf", "fmt"));
+    }
+
+    #[test]
+    fn pass_through_folds_transitively_through_two_wrappers() {
+        let src = r#"
+global @fmt const 6 "v=%d\n"
+
+func @inner(%f: ptr) -> void {
+  call printf(%f, 1)
+  return
+}
+
+func @outer(%g: ptr) -> void {
+  call inner(%g)
+  return
+}
+
+func @main() -> i64 {
+  call outer(@fmt)
+  return 0
+}
+"#;
+        let (m, report) = fold(src);
+        // Round 1 binds outer's %g; %g flows to inner's call site as a
+        // param reference, which binds inner's %f, folding the printf.
+        assert_eq!(report.count(), 1, "{:?}", report.folded);
+        assert_eq!(fmt_arg_of_call(&m, "inner", "printf", 0), Operand::Global("fmt".into()));
+    }
+
+    #[test]
+    fn disagreeing_call_sites_do_not_fold() {
+        let src = r#"
+global @f1 const 3 "%d"
+global @f2 const 3 "%f"
+
+func @log(%f: ptr) -> void {
+  call printf(%f, 1)
+  return
+}
+
+func @main() -> i64 {
+  call log(@f1)
+  call log(@f2)
+  return 0
+}
+"#;
+        let (m, report) = fold(src);
+        assert_eq!(report.count(), 0);
+        assert_eq!(fmt_arg_of_call(&m, "log", "printf", 0), Operand::var("f"));
+    }
+
+    #[test]
+    fn shadowed_parameter_and_dynamic_select_do_not_fold() {
+        let src = r#"
+global @fmt const 3 "%d"
+global @alt const 3 "%f"
+
+func @log(%f: ptr, %c: i64) -> void {
+  %f = select %c, @alt, @fmt
+  call printf(%f, 1)
+  return
+}
+
+func @main() -> i64 {
+  call log(@fmt, 0)
+  return 0
+}
+"#;
+        // %f is shadowed by the select, whose condition is a parameter:
+        // neither the binding nor the local chain may fold. (The local
+        // select *could* fold through %c's binding, but conditions fold
+        // through constants only — conservative by design.)
+        let (_, report) = fold(src);
+        assert_eq!(report.count(), 0, "{:?}", report.folded);
+    }
+
+    #[test]
+    fn non_constant_global_does_not_fold() {
+        let src = r#"
+global @mut 8
+
+func @log(%f: ptr) -> void {
+  call printf(%f, 1)
+  return
+}
+
+func @main() -> i64 {
+  call log(@mut)
+  return 0
+}
+"#;
+        let (_, report) = fold(src);
+        assert_eq!(report.count(), 0, "writable globals are not constant format text");
+    }
+
+    #[test]
+    fn direct_global_format_is_left_untouched() {
+        let src = r#"
+global @fmt const 3 "%d"
+
+func @main() -> i64 {
+  call printf(@fmt, 1)
+  return 0
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let before = m.clone();
+        let report = run(&mut m);
+        assert_eq!(report.count(), 0);
+        assert_eq!(m, before, "nothing to fold: module is untouched");
+    }
+}

@@ -5,6 +5,10 @@
 //! * [`multiteam`] — multi-team execution & kernel split (paper §3.3,
 //!   Fig. 4): expands eligible `parallel` regions into grid-wide kernels
 //!   launched from the host via RPC.
+//! * [`constfold`] — format-string constant folding: folds format
+//!   operands (copies, constant `select`s, pass-through parameters)
+//!   down to constant globals so `rpcgen` stays on the precise-intent
+//!   path of §3.2 instead of the copy-everything fallback.
 //! * [`libcres`] — the unified libc/RPC symbol-resolution pass: builds
 //!   the module-wide table classifying every external callee as
 //!   device-native / host-RPC / unresolved (paper §3.2's dichotomy made
@@ -16,12 +20,16 @@
 //!   rpcgen → multiteam → verify, i.e. what the paper's augmented
 //!   compiler driver runs.
 
+pub mod constfold;
 pub mod rpcgen;
 pub mod multiteam;
 pub mod libcres;
 pub mod pm;
 pub mod pipeline;
 
+pub use constfold::ConstFoldReport;
 pub use libcres::{ResolutionTable, SymbolClass};
 pub use pipeline::{compile, compile_with_spec, CompileOptions, CompileReport};
-pub use pm::{AnalysisCache, CacheStats, Pass, PassManager, PassTiming, PipelineSpec};
+pub use pm::{
+    AnalysisCache, CacheStats, PadCoverage, Pass, PassManager, PassTiming, PipelineSpec,
+};

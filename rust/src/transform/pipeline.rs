@@ -9,8 +9,9 @@
 //! `verify → libcres → rpcgen → multiteam → verify` and is behaviorally
 //! identical to the pre-refactor fixed sequence.
 
+use super::constfold::ConstFoldReport;
 use super::multiteam::MultiTeamReport;
-use super::pm::{CacheStats, PassManager, PassTiming, PipelineSpec};
+use super::pm::{CacheStats, PadCoverage, PassManager, PassTiming, PipelineSpec};
 use super::rpcgen::RpcGenReport;
 use crate::ir::Module;
 use crate::rpc::WrapperRegistry;
@@ -18,6 +19,9 @@ use crate::transform::libcres::ResolutionTable;
 
 #[derive(Debug, Clone, Copy)]
 pub struct CompileOptions {
+    /// Fold format-string expressions to constant globals ahead of
+    /// resolution so `rpcgen` derives precise buffer intents (§3.2).
+    pub constfold: bool,
     /// Build the libc/RPC symbol-resolution table and report unresolved
     /// callees at compile time.
     pub libcres: bool,
@@ -31,15 +35,16 @@ pub struct CompileOptions {
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        Self { libcres: true, rpcgen: true, multiteam: true }
+        Self { constfold: true, libcres: true, rpcgen: true, multiteam: true }
     }
 }
 
 /// Everything the pipeline run produced: per-pass sections, the
-/// symbol-resolution table, per-pass wall times and the analysis-cache
-/// counters.
+/// symbol-resolution table, per-pass wall times, the analysis-cache
+/// counters and the AOT pad-coverage verdict.
 #[derive(Debug, Default, Clone)]
 pub struct CompileReport {
+    pub constfold: ConstFoldReport,
     pub rpc: RpcGenReport,
     pub multiteam: MultiTeamReport,
     /// The `libcres` table (empty when the pass did not run).
@@ -50,6 +55,9 @@ pub struct CompileReport {
     pub timings: Vec<PassTiming>,
     /// Analysis-cache build/hit/invalidation counters.
     pub cache: CacheStats,
+    /// AOT pad-coverage check over the compiled module's RPC sites
+    /// (missing pads abort the compile instead of appearing here).
+    pub pad_coverage: PadCoverage,
 }
 
 impl CompileReport {
@@ -128,10 +136,13 @@ func @main() -> i64 {
         assert!(body.iter().any(|i| matches!(i, Instr::KernelLaunch { .. })));
         assert!(body.iter().any(|i| matches!(i, Instr::RpcCall { .. })));
         // The pass-manager surface: executed passes, timings, resolution.
-        assert_eq!(report.pipeline, vec!["libcres", "rpcgen", "multiteam"]);
-        assert_eq!(report.timings.len(), 3);
+        assert_eq!(report.pipeline, vec!["constfold", "libcres", "rpcgen", "multiteam"]);
+        assert_eq!(report.timings.len(), 4);
         assert!(report.total_pass_ns() >= 0.0);
         assert!(report.resolution.host_kind("printf").is_some());
+        // The AOT coverage check verified the rewritten site's pads.
+        assert_eq!(report.pad_coverage.sites, 1);
+        assert!(report.pad_coverage.missing.is_empty());
     }
 
     #[test]
@@ -141,7 +152,7 @@ func @main() -> i64 {
         let report = compile(
             &mut m,
             &reg,
-            CompileOptions { libcres: false, rpcgen: false, multiteam: false },
+            CompileOptions { constfold: false, libcres: false, rpcgen: false, multiteam: false },
         )
         .unwrap();
         assert!(report.rpc.rewritten.is_empty());

@@ -24,15 +24,16 @@
 
 use super::libcres::ResolutionTable;
 use super::pipeline::{CompileOptions, CompileReport};
-use super::{libcres, multiteam, rpcgen};
-use crate::analysis::callgraph::CallGraph;
+use super::{constfold, libcres, multiteam, rpcgen};
+use crate::analysis::callgraph::{walk, CallGraph};
 use crate::analysis::objects::def_map;
 use crate::ir::{Instr, Module};
+use crate::rpc::wrappers::{self, HostFnKind};
 use crate::rpc::WrapperRegistry;
 use std::collections::HashMap;
 
 /// The pass names the manager knows, in default pipeline order.
-pub const KNOWN_PASSES: &[&str] = &["libcres", "rpcgen", "multiteam"];
+pub const KNOWN_PASSES: &[&str] = &["constfold", "libcres", "rpcgen", "multiteam"];
 
 /// What one pass invocation reports back to the manager.
 #[derive(Debug, Clone)]
@@ -188,6 +189,9 @@ impl PipelineSpec {
     /// disabled passes dropped.
     pub fn from_options(opts: CompileOptions) -> Self {
         let mut names = Vec::new();
+        if opts.constfold {
+            names.push("constfold");
+        }
         if opts.libcres {
             names.push("libcres");
         }
@@ -228,6 +232,7 @@ impl PipelineSpec {
 /// (already rejected by [`PipelineSpec::parse`]).
 fn make_pass(name: &str) -> Option<Box<dyn Pass>> {
     match name {
+        "constfold" => Some(Box::new(ConstFoldPass)),
         "libcres" => Some(Box::new(LibcResPass)),
         "rpcgen" => Some(Box::new(RpcGenPass)),
         "multiteam" => Some(Box::new(MultiTeamPass)),
@@ -256,8 +261,10 @@ impl PassManager {
     }
 
     /// Verify → run each pass in order (timing it, invalidating cached
-    /// analyses after module-mutating passes) → verify. Returns the
-    /// assembled report.
+    /// analyses after module-mutating passes) → verify → AOT
+    /// pad-coverage check. Returns the assembled report; a generated RPC
+    /// call site whose landing pads are not registered is a compile-time
+    /// error here, never a runtime failure.
     pub fn run(
         &self,
         m: &mut Module,
@@ -266,6 +273,12 @@ impl PassManager {
         m.verify()?;
         let mut cx =
             PassCx { registry, cache: AnalysisCache::default(), report: CompileReport::default() };
+        // Snapshot the pre-pipeline resolution table: it names every
+        // host-RPC callee whose call sites the pipeline may lower, which
+        // is exactly what the AOT pad-coverage check below verifies
+        // against (post-pipeline tables no longer list fully-rewritten
+        // callees — RpcCall sites carry mangled names, not symbols).
+        let aot_table = cx.cache.resolution(m).clone();
         for pass in &self.passes {
             let t0 = std::time::Instant::now();
             let outcome = pass.run(m, &mut cx)?;
@@ -281,12 +294,150 @@ impl PassManager {
             });
         }
         m.verify()?;
+        let coverage = check_pad_coverage(m, registry, &aot_table);
+        if !coverage.missing.is_empty() {
+            return Err(coverage.missing);
+        }
+        cx.report.pad_coverage = coverage;
         cx.report.cache = cx.cache.stats;
         Ok(cx.report)
     }
 }
 
-// ---- the three ported passes ----
+// ---- AOT pad-coverage verification ----
+
+/// What the ahead-of-time pad-coverage check established about the
+/// compiled module (surfaced through [`CompileReport::pad_coverage`],
+/// `--explain` and the compile output).
+#[derive(Debug, Default, Clone)]
+pub struct PadCoverage {
+    /// `RpcCall` sites checked across the module.
+    pub sites: u64,
+    /// Distinct landing-pad names verified to have a scalar pad.
+    pub scalar_pads: u64,
+    /// Distinct landing-pad names additionally verified to have the
+    /// batched variant their [`HostFnKind`] model calls for.
+    pub batch_pads: u64,
+    /// Human-readable diagnostics; non-empty fails the compile.
+    pub missing: Vec<String>,
+}
+
+impl PadCoverage {
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} RPC site(s): {} scalar pad(s) verified, {} batched",
+            self.sites, self.scalar_pads, self.batch_pads
+        )
+    }
+}
+
+/// The host-function model a mangled landing-pad name resolves to:
+/// `__{callee}` or `__{callee}_{tags}` matched against the host-RPC
+/// names `table` classified (longest name wins), falling back to the
+/// [`wrappers::HOST_FUNCTIONS`] model table for pads whose call sites
+/// were already lowered before this compile.
+fn kind_of_mangled(mangled: &str, table: &ResolutionTable) -> Option<HostFnKind> {
+    let body = mangled.strip_prefix("__")?;
+    let mut best: Option<(usize, HostFnKind)> = None;
+    for (name, kind) in wrappers::HOST_FUNCTIONS {
+        let matches = body == *name || body.starts_with(&format!("{name}_"));
+        if matches && best.is_none_or(|(len, _)| name.len() > len) {
+            best = Some((name.len(), *kind));
+        }
+    }
+    // Prefer the table's classification when it names the symbol (the
+    // check is driven off the resolution table); the model table is the
+    // shared source both derive from, so they can never disagree.
+    if let Some((len, _)) = best {
+        if let Some(kind) = table.host_kind(&body[..len]) {
+            return Some(kind);
+        }
+    }
+    best.map(|(_, kind)| kind)
+}
+
+/// Verify every generated RPC call site against the wrapper registry:
+/// the mangled landing pad must be registered under the callee id the
+/// instruction carries, and — when the callee's [`HostFnKind`] has a
+/// batched model ([`wrappers::synthesize_batch`]) — the batched variant
+/// must be registered too, so the engine's per-sweep grouping never
+/// silently degrades. Previously an unregistered pad surfaced as a
+/// runtime `-1`/panic inside a kernel; now it is a compile diagnostic.
+pub fn check_pad_coverage(
+    m: &Module,
+    registry: &WrapperRegistry,
+    table: &ResolutionTable,
+) -> PadCoverage {
+    let mut cov = PadCoverage::default();
+    let mut seen: Vec<String> = Vec::new();
+    for (fname, f) in &m.functions {
+        walk(&f.body, &mut |ins| {
+            let Instr::RpcCall { mangled, callee_id, .. } = ins else { return };
+            cov.sites += 1;
+            let Some(id) = registry.id_of(mangled) else {
+                // Missing pads are reported once per name; the stale-id
+                // check below stays per *site* (two sites can share a
+                // name but disagree on the id).
+                if !seen.contains(mangled) {
+                    seen.push(mangled.clone());
+                    cov.missing.push(format!(
+                        "@{fname}: RPC call site targets {mangled} but no scalar landing pad \
+                         is registered (would fail at runtime inside the kernel)"
+                    ));
+                }
+                return;
+            };
+            if id != *callee_id {
+                cov.missing.push(format!(
+                    "@{fname}: RPC call site carries callee id {callee_id} but {mangled} \
+                     is registered as id {id} (stale compile against another registry)"
+                ));
+                return;
+            }
+            if seen.contains(mangled) {
+                return;
+            }
+            seen.push(mangled.clone());
+            cov.scalar_pads += 1;
+            if let Some(kind) = kind_of_mangled(mangled, table) {
+                if wrappers::synthesize_batch(kind).is_some() {
+                    if registry.get_batch(id).is_some() {
+                        cov.batch_pads += 1;
+                    } else {
+                        cov.missing.push(format!(
+                            "@{fname}: {mangled} ({kind:?}) coalesces per engine sweep but \
+                             has no batched landing pad registered"
+                        ));
+                    }
+                }
+            }
+        });
+    }
+    cov
+}
+
+// ---- the ported passes ----
+
+/// Format-string constant folding ahead of `libcres`/`rpcgen`: folds
+/// format operands down to constant globals so `rpcgen` derives precise
+/// buffer intents instead of pessimistic read-write (see [`constfold`]).
+struct ConstFoldPass;
+
+impl Pass for ConstFoldPass {
+    fn name(&self) -> &'static str {
+        "constfold"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let table = cx.cache.resolution(m).clone();
+        let report = constfold::run_with(m, &table);
+        let changed = !report.folded.is_empty();
+        let summary = report.summary();
+        cx.report.constfold = report;
+        Ok(PassOutcome { summary, changed })
+    }
+}
 
 /// Materializes the module-wide symbol-resolution table into the report
 /// (pure analysis; see [`libcres`]).
@@ -390,11 +541,119 @@ func @main() -> i64 {
     }
 
     #[test]
+    fn unregistered_pad_is_a_compile_time_diagnostic() {
+        // A module carrying an RpcCall whose landing pad was never
+        // registered (a recompile against a fresh registry) must fail at
+        // compile time with a diagnostic naming the pad — previously the
+        // kernel discovered this at runtime as a -1 return.
+        let mut m = Module::new();
+        m.functions.insert(
+            "main".into(),
+            crate::ir::Function {
+                name: "main".into(),
+                params: vec![],
+                ret: crate::ir::Ty::I64,
+                body: vec![
+                    Instr::RpcCall {
+                        dst: None,
+                        mangled: "__printf_cp".into(),
+                        callee_id: 0,
+                        args: vec![],
+                    },
+                    Instr::Return(Some(crate::ir::Operand::ConstI(0))),
+                ],
+                is_kernel_region: false,
+            },
+        );
+        let reg = WrapperRegistry::new();
+        let err = PassManager::from_spec(&PipelineSpec::parse("").unwrap())
+            .run(&mut m, &reg)
+            .unwrap_err();
+        assert!(err[0].contains("__printf_cp"), "{err:?}");
+        assert!(err[0].contains("no scalar landing pad"), "{err:?}");
+
+        // Registering only the scalar pad still fails: the printf model
+        // batches per sweep, so the batched variant is part of coverage.
+        let id = reg.register("__printf_cp", Box::new(|_, _| 0));
+        if let Some(Instr::RpcCall { callee_id, .. }) =
+            m.functions.get_mut("main").unwrap().body.first_mut()
+        {
+            *callee_id = id;
+        }
+        let err = PassManager::from_spec(&PipelineSpec::parse("").unwrap())
+            .run(&mut m, &reg)
+            .unwrap_err();
+        assert!(err[0].contains("no batched landing pad"), "{err:?}");
+
+        // The full registration (what register_pad does) passes.
+        let kind = HostFnKind::Printf { has_fd: false };
+        crate::rpc::wrappers::register_pad(&reg, "__printf_cp", kind);
+        let report = PassManager::from_spec(&PipelineSpec::parse("").unwrap())
+            .run(&mut m, &reg)
+            .unwrap();
+        assert_eq!(report.pad_coverage.sites, 1);
+        assert_eq!(report.pad_coverage.batch_pads, 1);
+    }
+
+    #[test]
+    fn stale_callee_id_is_a_compile_time_diagnostic() {
+        let reg = WrapperRegistry::new();
+        let good = crate::rpc::wrappers::register_pad(&reg, "__exit_i", HostFnKind::Exit);
+        // Two sites sharing the pad name: the FIRST carries the correct
+        // id, the second a stale one — the per-site check must still
+        // flag it (a name-level dedup before the id comparison hid it).
+        let mut m = Module::new();
+        m.functions.insert(
+            "main".into(),
+            crate::ir::Function {
+                name: "main".into(),
+                params: vec![],
+                ret: crate::ir::Ty::I64,
+                body: vec![
+                    Instr::RpcCall {
+                        dst: None,
+                        mangled: "__exit_i".into(),
+                        callee_id: good,
+                        args: vec![],
+                    },
+                    Instr::RpcCall {
+                        dst: None,
+                        mangled: "__exit_i".into(),
+                        callee_id: 99,
+                        args: vec![],
+                    },
+                    Instr::Return(Some(crate::ir::Operand::ConstI(0))),
+                ],
+                is_kernel_region: false,
+            },
+        );
+        let err = PassManager::from_spec(&PipelineSpec::parse("").unwrap())
+            .run(&mut m, &reg)
+            .unwrap_err();
+        assert_eq!(err.len(), 1, "{err:?}");
+        assert!(err[0].contains("stale"), "{err:?}");
+    }
+
+    #[test]
     fn spec_from_options_drops_disabled_passes() {
-        let opts =
-            CompileOptions { libcres: true, rpcgen: true, multiteam: false };
+        let opts = CompileOptions {
+            constfold: false,
+            libcres: true,
+            rpcgen: true,
+            multiteam: false,
+        };
         assert_eq!(PipelineSpec::from_options(opts).names(), &["libcres", "rpcgen"]);
-        let none = CompileOptions { libcres: false, rpcgen: false, multiteam: false };
+        let with_fold = CompileOptions { multiteam: false, ..CompileOptions::default() };
+        assert_eq!(
+            PipelineSpec::from_options(with_fold).names(),
+            &["constfold", "libcres", "rpcgen"]
+        );
+        let none = CompileOptions {
+            constfold: false,
+            libcres: false,
+            rpcgen: false,
+            multiteam: false,
+        };
         assert!(PipelineSpec::from_options(none).names().is_empty());
         assert_eq!(PipelineSpec::from_options(CompileOptions::default()), PipelineSpec::default());
     }
@@ -405,14 +664,20 @@ func @main() -> i64 {
         let reg = WrapperRegistry::new();
         let report = PassManager::from_spec(&PipelineSpec::default()).run(&mut m, &reg).unwrap();
         assert_eq!(report.pipeline, KNOWN_PASSES.to_vec());
-        assert_eq!(report.timings.len(), 3);
+        assert_eq!(report.timings.len(), 4);
         for t in &report.timings {
             assert!(t.wall_ns >= 0.0);
             assert!(!t.summary.is_empty());
         }
-        assert!(!report.timings[0].changed, "libcres is pure analysis");
-        assert!(report.timings[1].changed, "rpcgen rewrote the printf site");
-        assert!(report.timings[2].changed, "multiteam expanded the region");
+        assert!(!report.timings[0].changed, "direct @fmt format: nothing to fold");
+        assert!(!report.timings[1].changed, "libcres is pure analysis");
+        assert!(report.timings[2].changed, "rpcgen rewrote the printf site");
+        assert!(report.timings[3].changed, "multiteam expanded the region");
+        // The AOT coverage check verified the generated site's pads.
+        assert_eq!(report.pad_coverage.sites, 1);
+        assert_eq!(report.pad_coverage.scalar_pads, 1);
+        assert_eq!(report.pad_coverage.batch_pads, 1, "printf pads register batched variants");
+        assert!(report.pad_coverage.missing.is_empty());
     }
 
     #[test]

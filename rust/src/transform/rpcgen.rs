@@ -29,6 +29,11 @@ pub struct RpcGenReport {
     /// they will trap in the interpreter, mirroring the paper's
     /// "not infallible" caveat).
     pub unsupported: Vec<String>,
+    /// Arguments lowered with a read-write buffer intent — the
+    /// pessimistic "copy both ways" path a resolved format avoids. The
+    /// `constfold` equivalence suite asserts the folded pipeline yields
+    /// strictly fewer of these on fold-y programs.
+    pub rw_buffer_intents: u64,
 }
 
 /// Run RPC generation standalone: builds its own resolution table and
@@ -93,6 +98,7 @@ fn rewrite_body(
                     }
                 };
                 let (specs, tags, summary) = build_specs(m, defs, callee, kind, args);
+                report.rw_buffer_intents += specs.iter().filter(|s| spec_is_rw(s)).count() as u64;
                 let mangled = mangle(callee, &tags);
                 // Registers the scalar pad, the batched variant for
                 // order-preserving-append callees, and marks launch pads
@@ -119,6 +125,20 @@ fn rewrite_body(
             }
             _ => {}
         }
+    }
+}
+
+/// Does the lowered argument carry a read-write (copy both ways)
+/// buffer? `MultiRef` counts when any runtime candidate would round-trip.
+fn spec_is_rw(spec: &RpcArgSpec) -> bool {
+    match spec {
+        RpcArgSpec::Ref { mode, .. } | RpcArgSpec::DynRef { mode, .. } => {
+            *mode == ArgMode::ReadWrite
+        }
+        RpcArgSpec::MultiRef { candidates, .. } => {
+            candidates.iter().any(|(_, mode, _, _)| *mode == ArgMode::ReadWrite)
+        }
+        RpcArgSpec::Val(_) => false,
     }
 }
 
@@ -161,11 +181,22 @@ fn arg_intents(
     let fmt_convs = |fmt_idx: usize| -> Option<Vec<Conv>> {
         let op = args.get(fmt_idx)?;
         let defs_class = classify_operand(m, defs, op);
-        if let ObjClass::Static(StaticObj { origin, constant: true, .. }) = defs_class {
+        if let ObjClass::Static(StaticObj { origin, constant: true, offset, .. }) = defs_class {
             if let crate::analysis::objects::ObjOrigin::Global(g) = origin {
+                // Honor a constant pointer offset into the global (a
+                // `gep @fmt, N` format starts mid-string); a dynamic
+                // offset means the text is unknown. The string ends at
+                // its NUL, not at the (zero-filled) object size.
+                let start = match offset {
+                    OffKind::Const(c) => c as usize,
+                    OffKind::Dynamic => return None,
+                };
                 let init = &m.globals[&g].init;
-                let text =
-                    String::from_utf8_lossy(&init[..init.len().saturating_sub(1)]).into_owned();
+                let end = init.iter().position(|&b| b == 0).unwrap_or(init.len());
+                if start > end {
+                    return None;
+                }
+                let text = String::from_utf8_lossy(&init[start..end]).into_owned();
                 return Some(
                     wrappers::parse_format(&text)
                         .into_iter()
@@ -455,7 +486,7 @@ func @main(%fmt: ptr, %buf: ptr) -> i64 {
   return %r
 }
 "#;
-        let (m, _, _) = run_on(src);
+        let (m, report, _) = run_on(src);
         let body = &m.functions["main"].body;
         let Instr::RpcCall { args, mangled, .. } = &body[0] else { panic!() };
         // fd is opaque, the format itself is still read-only, but the
@@ -463,6 +494,52 @@ func @main(%fmt: ptr, %buf: ptr) -> i64 {
         assert_eq!(mangled, "__fprintf_p_cp_vp");
         assert!(matches!(&args[1], RpcArgSpec::DynRef { mode: ArgMode::Read, .. }));
         assert!(matches!(&args[2], RpcArgSpec::DynRef { mode: ArgMode::ReadWrite, .. }));
+        assert_eq!(report.rw_buffer_intents, 1, "the pessimistic buffer is counted");
+    }
+
+    #[test]
+    fn const_offset_gep_format_reads_the_suffix_text() {
+        // A format pointer at a constant offset into the global must
+        // classify from the text at that offset — reading from byte 0
+        // used to derive the prefix's conversions too, mis-typing the
+        // varargs (here: an extra %d that would swallow the buffer as a
+        // by-value int).
+        let src = r#"
+global @fmt const 9 "%d ok %s"
+global @buf const 16 "hello"
+
+func @main() -> i64 {
+  %f = gep @fmt, 3
+  %r = call printf(%f, @buf)
+  return %r
+}
+"#;
+        let (m, report, _) = run_on(src);
+        assert_eq!(report.rewritten[0].2, "__printf_cp_cp", "only the suffix's %s counts");
+        let Instr::RpcCall { args, .. } = &m.functions["main"].body[1] else { panic!() };
+        assert!(matches!(
+            &args[0],
+            RpcArgSpec::Ref { mode: ArgMode::Read, offset: OffsetSpec::Const(3), .. }
+        ));
+        assert!(matches!(&args[1], RpcArgSpec::Ref { mode: ArgMode::Read, .. }));
+        assert_eq!(report.rw_buffer_intents, 0);
+    }
+
+    #[test]
+    fn dynamic_offset_format_stays_pessimistic() {
+        let src = r#"
+global @fmt const 9 "%d ok %s"
+global @buf 16
+
+func @main(%i: i64) -> i64 {
+  %f = gep @fmt, %i
+  %r = call printf(%f, @buf)
+  return %r
+}
+"#;
+        let (_, report, _) = run_on(src);
+        assert_eq!(report.rewritten[0].2, "__printf_cp_vp");
+        assert_eq!(report.rw_buffer_intents, 1, "unknown text => copy both ways");
     }
 
     #[test]

@@ -20,6 +20,10 @@ use gpu_first::transform::{multiteam, rpcgen, CompileOptions, PipelineSpec};
 /// One corpus program: the classic legacy-app shapes the evaluation apps
 /// exercise (file I/O + parallel compute + report, select candidates,
 /// malloc'd buffers, device-native string ops, an unresolved callee).
+/// Every format string is a *direct* global reference, so `constfold`
+/// is a no-op here and the default pipeline stays byte-identical to the
+/// legacy fixed sequence; fold-y programs live in `tests/constfold.rs`,
+/// which proves output equivalence separately.
 struct Program {
     name: &'static str,
     src: &'static str,
@@ -144,6 +148,11 @@ fn session() -> GpuFirstSession {
         mem: MemConfig::small(),
         teams: 4,
         threads_per_team: 32,
+        // CI's rpcgen-only+no-batch matrix leg disables per-sweep
+        // coalescing; semantics must hold without the batch pads too.
+        // (An empty value counts as unset — the matrix exports "" on
+        // the legs that keep batching on.)
+        rpc_batch: std::env::var("GPU_FIRST_RPC_NO_BATCH").map_or(true, |v| v.is_empty()),
         ..Default::default()
     })
 }
@@ -278,8 +287,8 @@ fn report_carries_timings_resolution_and_cache_counters() {
     }
     s.compile_spec(&mut module, &PipelineSpec::default()).unwrap();
     let report = s.report.as_ref().unwrap();
-    assert_eq!(report.pipeline, vec!["libcres", "rpcgen", "multiteam"]);
-    assert_eq!(report.timings.len(), 3);
+    assert_eq!(report.pipeline, vec!["constfold", "libcres", "rpcgen", "multiteam"]);
+    assert_eq!(report.timings.len(), 4);
     // libcres built the table once; rpcgen reused it from cache.
     assert_eq!(report.cache.resolution_builds, 1);
     assert!(report.cache.hits >= 1, "{:?}", report.cache);
@@ -340,8 +349,9 @@ fn cli_passes_override_and_unknown_pass_error() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("launch @__region_0"), "{text}");
     let err = String::from_utf8_lossy(&out.stderr);
-    assert!(err.contains("libcres -> rpcgen -> multiteam"), "{err}");
+    assert!(err.contains("constfold -> libcres -> rpcgen -> multiteam"), "{err}");
     assert!(err.contains("unresolved symbol 'dgemm'"), "{err}");
+    assert!(err.contains("pad coverage (AOT)"), "coverage verdict in compile output: {err}");
 }
 
 #[test]
@@ -357,7 +367,8 @@ fn cli_explain_shows_timings_and_classification() {
         .unwrap();
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("pass pipeline (libcres -> rpcgen)"), "{text}");
+    assert!(text.contains("pass pipeline (constfold -> libcres -> rpcgen)"), "{text}");
+    assert!(text.contains("pad coverage (AOT"), "coverage verdict in explain output: {text}");
     assert!(text.contains("libcres"), "{text}");
     // Per-external-callee classification: device / host-rpc / unresolved.
     assert!(text.contains("puts") && text.contains("host-rpc"), "{text}");
