@@ -33,6 +33,10 @@ pub struct Config {
     pub rpc_batch: bool,
     /// Print pass reports and per-launch stats.
     pub verbose: bool,
+    /// Enable the span recorder (`--trace`, or implied by
+    /// `--trace-out FILE`). Off by default: `SpanRecorder::start` is a
+    /// single relaxed load when disabled.
+    pub trace: bool,
 }
 
 impl Default for Config {
@@ -49,6 +53,7 @@ impl Default for Config {
             rpc_data_cap: None,
             rpc_batch: true,
             verbose: false,
+            trace: false,
         }
     }
 }
@@ -58,7 +63,8 @@ impl Config {
     /// `--teams N --threads N --allocator generic|vendor|balanced[N,M]
     ///  --heap-mb N --rpc-lanes N|auto --rpc-workers N|auto
     ///  --rpc-launch-threads N --rpc-launch-slots N
-    ///  --rpc-data-cap BYTES --no-rpc-batch --verbose`.
+    ///  --rpc-data-cap BYTES --no-rpc-batch --verbose --trace`
+    /// (`--trace-out FILE` implies `--trace`).
     pub fn from_args(args: &Args) -> Result<Self, String> {
         // Numeric flags parse through the fallible accessor so every
         // malformed value surfaces as this function's Err (one clean
@@ -111,6 +117,7 @@ impl Config {
         }
         cfg.rpc_batch = !args.flag("no-rpc-batch");
         cfg.verbose = args.flag("verbose");
+        cfg.trace = args.flag("trace") || args.get("trace-out").is_some();
         if cfg.teams == 0 || cfg.threads_per_team == 0 {
             return Err("teams/threads must be positive".into());
         }

@@ -38,6 +38,9 @@ impl GpuFirstSession {
     pub fn start(cfg: Config) -> Self {
         let arena = cfg.arena();
         let device = Arc::new(Device::with_arena(cfg.mem, cfg.allocator, arena));
+        if cfg.trace {
+            device.mem.obs.spans.enable();
+        }
         let registry = Arc::new(WrapperRegistry::new());
         register_common(&registry);
         // The open-file table shards one-to-one with the lanes serving
@@ -76,6 +79,7 @@ impl GpuFirstSession {
     pub fn compile(&mut self, module: &mut Module, opts: CompileOptions) -> Result<(), String> {
         let report = compile(module, &self.registry, opts)
             .map_err(|errs| format!("compile failed:\n  {}", errs.join("\n  ")))?;
+        self.record_pass_spans(&report);
         self.report = Some(report);
         Ok(())
     }
@@ -85,8 +89,27 @@ impl GpuFirstSession {
     pub fn compile_spec(&mut self, module: &mut Module, spec: &PipelineSpec) -> Result<(), String> {
         let report = compile_with_spec(module, &self.registry, spec)
             .map_err(|errs| format!("compile failed:\n  {}", errs.join("\n  ")))?;
+        self.record_pass_spans(&report);
         self.report = Some(report);
         Ok(())
+    }
+
+    /// Synthesize back-to-back middle-end spans on the `passes` track
+    /// from the report's per-pass wall times (the pass manager already
+    /// timed them; the recorder just needs the layout). No-op unless
+    /// tracing is enabled.
+    fn record_pass_spans(&self, report: &CompileReport) {
+        let obs = &self.device.mem.obs;
+        if !obs.spans.is_enabled() {
+            return;
+        }
+        let total: u64 = report.timings.iter().map(|t| t.wall_ns as u64).sum();
+        let mut start = obs.spans.now_ns().saturating_sub(total);
+        for t in &report.timings {
+            let dur = t.wall_ns as u64;
+            obs.spans.record(&t.pass, crate::obs::SpanKind::Pass, 0, start, dur);
+            start += dur;
+        }
     }
 
     /// Materialize the compiled module on the device.
@@ -110,6 +133,16 @@ impl GpuFirstSession {
         let (ret, main_stats) = env.run_main(&args);
         let wall_ns = t0.elapsed().as_nanos() as f64;
         let kernel_stats = *env.kernel_stats.lock().unwrap();
+        let obs = &self.device.mem.obs;
+        let rpc_per_callee: Vec<(String, crate::obs::HistSnapshot)> = obs
+            .per_callee_rpc()
+            .into_iter()
+            .map(|(id, h)| {
+                let name =
+                    self.registry.name_of(id).unwrap_or_else(|| format!("callee {id}"));
+                (name, h)
+            })
+            .collect();
         let metrics = RunMetrics {
             exit_code: ret,
             wall_ns,
@@ -123,6 +156,13 @@ impl GpuFirstSession {
             unresolved_calls: env.unresolved_calls.load(Ordering::Relaxed),
             folded_formats: self.report.as_ref().map_or(0, |r| r.constfold.count()),
             rpc_rw_intents: self.report.as_ref().map_or(0, |r| r.rpc.rw_buffer_intents),
+            rpc_round_trip: obs.rpc_round_trip.snapshot(),
+            rpc_per_callee,
+            launch_queue_wait: obs.launch_queue_wait.snapshot(),
+            launch_run: obs.launch_run.snapshot(),
+            host_io_lock_wait: self.host.io_lock_wait(),
+            events: obs.events.snapshot(),
+            spans_dropped: obs.spans.dropped(),
         };
         (ret, metrics)
     }

@@ -4,6 +4,7 @@
 //! per-pass wall times from the pass manager.
 
 use crate::gpu::stats::LaunchStats;
+use crate::obs::{EventRecord, HistSnapshot};
 use crate::perfmodel::a100;
 use crate::rpc::{EngineSnapshot, HostIoSnapshot};
 use crate::transform::PassTiming;
@@ -39,6 +40,30 @@ pub struct RunMetrics {
     /// (copy both ways) buffer intent — the fig07 format corpus asserts
     /// the folded pipeline yields strictly fewer of these.
     pub rpc_rw_intents: u64,
+    /// Client-measured RPC round-trip latency over every callee
+    /// (claim → doorbell; the flat `real_ns` sum decomposed into a
+    /// log-bucketed histogram with percentiles).
+    pub rpc_round_trip: HistSnapshot,
+    /// Per-callee RPC round-trip histograms, keyed by registered
+    /// landing-pad name (sorted; unresolvable ids keyed `callee N`).
+    pub rpc_per_callee: Vec<(String, HistSnapshot)>,
+    /// Launch-executor queue wait (enqueue → an executor thread picks
+    /// the job up) as a histogram; the flat `launch_wait_ns` total in
+    /// [`EngineSnapshot`] is this histogram's sum.
+    pub launch_queue_wait: HistSnapshot,
+    /// Launch-executor wrapper run time as a histogram (flat total:
+    /// `launch_run_ns`).
+    pub launch_run: HistSnapshot,
+    /// Time landing pads spent blocked on contended `HostEnv` locks
+    /// (open-handle tables + content-map shards). Empty while
+    /// `host_io.lock_contention` and `host_io.content_contention` are 0.
+    pub host_io_lock_wait: HistSnapshot,
+    /// Leveled warn-once diagnostics this run raised (unresolved
+    /// symbols, format degradations), with per-code occurrence counts.
+    pub events: Vec<EventRecord>,
+    /// Spans the ring recorder dropped (oldest-first) because a shard
+    /// hit capacity; 0 whenever tracing is off.
+    pub spans_dropped: u64,
 }
 
 impl RunMetrics {
@@ -112,6 +137,21 @@ impl RunMetrics {
         if self.host_io.poison_recoveries > 0 {
             s.push_str(&format!(" poison_recoveries={}", self.host_io.poison_recoveries));
         }
+        if !self.rpc_round_trip.is_empty() {
+            s.push_str(&format!(" rpc_rt[{}]", self.rpc_round_trip.summary()));
+        }
+        if !self.launch_queue_wait.is_empty() {
+            s.push_str(&format!(" launch_wait[{}]", self.launch_queue_wait.summary()));
+        }
+        if !self.host_io_lock_wait.is_empty() {
+            s.push_str(&format!(" io_lock_wait[{}]", self.host_io_lock_wait.summary()));
+        }
+        for e in &self.events {
+            s.push_str(&format!(" event[{}:{}]={}", e.level.as_str(), e.code, e.count));
+        }
+        if self.spans_dropped > 0 {
+            s.push_str(&format!(" spans_dropped={}", self.spans_dropped));
+        }
         s
     }
 
@@ -148,6 +188,41 @@ impl RunMetrics {
             ("batched_writes", Json::num(self.host_io.batched_writes as f64)),
             ("poison_recoveries", Json::num(self.host_io.poison_recoveries as f64)),
             ("passes", Json::Arr(passes)),
+            (
+                "hists",
+                Json::obj(vec![
+                    ("rpc_round_trip", self.rpc_round_trip.to_json()),
+                    ("launch_queue_wait", self.launch_queue_wait.to_json()),
+                    ("launch_run", self.launch_run.to_json()),
+                    ("host_io_lock_wait", self.host_io_lock_wait.to_json()),
+                ]),
+            ),
+            (
+                "rpc_per_callee",
+                Json::Obj(
+                    self.rpc_per_callee
+                        .iter()
+                        .map(|(name, h)| (name.clone(), h.to_json()))
+                        .collect(),
+                ),
+            ),
+            (
+                "events",
+                Json::Arr(
+                    self.events
+                        .iter()
+                        .map(|e| {
+                            Json::obj(vec![
+                                ("level", Json::str(e.level.as_str())),
+                                ("code", Json::str(e.code.as_str())),
+                                ("detail", Json::str(e.detail.as_str())),
+                                ("count", Json::num(e.count as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("spans_dropped", Json::num(self.spans_dropped as f64)),
         ])
     }
 }
@@ -170,6 +245,13 @@ mod tests {
             unresolved_calls: 0,
             folded_formats: 0,
             rpc_rw_intents: 0,
+            rpc_round_trip: HistSnapshot::default(),
+            rpc_per_callee: Vec::new(),
+            launch_queue_wait: HistSnapshot::default(),
+            launch_run: HistSnapshot::default(),
+            host_io_lock_wait: HistSnapshot::default(),
+            events: Vec::new(),
+            spans_dropped: 0,
         }
     }
 
@@ -245,6 +327,45 @@ mod tests {
         let quiet = base().summary();
         assert!(!quiet.contains("folded_formats"), "{quiet}");
         assert!(!quiet.contains("poison_recoveries"), "{quiet}");
+    }
+
+    #[test]
+    fn summary_and_json_carry_latency_hists_and_events() {
+        use crate::obs::{EventLog, Hist, Level};
+        let h = Hist::new();
+        for v in [100u64, 200, 400, 800] {
+            h.record(v);
+        }
+        let events = EventLog::default();
+        events.emit(Level::Warn, "unresolved-symbol", "frobnicate", "call degraded");
+        events.emit(Level::Warn, "unresolved-symbol", "frobnicate", "call degraded");
+        let m = RunMetrics {
+            rpc_round_trip: h.snapshot(),
+            rpc_per_callee: vec![("__printf_cp".into(), h.snapshot())],
+            host_io_lock_wait: h.snapshot(),
+            events: events.snapshot(),
+            spans_dropped: 5,
+            ..base()
+        };
+        let s = m.summary();
+        assert!(s.contains("rpc_rt[n=4"), "round-trip hist surfaces: {s}");
+        assert!(s.contains("io_lock_wait[n=4"), "lock-wait hist surfaces: {s}");
+        assert!(s.contains("event[warn:unresolved-symbol]=2"), "{s}");
+        assert!(s.contains("spans_dropped=5"), "{s}");
+        let j = m.to_json();
+        let rt = j.get("hists").and_then(|h| h.get("rpc_round_trip")).unwrap();
+        assert_eq!(rt.get("count").and_then(Json::as_f64), Some(4.0));
+        assert!(rt.get("p50_ns").and_then(Json::as_f64).unwrap() >= 100.0);
+        assert!(rt.get("p99_ns").and_then(Json::as_f64).unwrap() >= 400.0);
+        let pc = j.get("rpc_per_callee").and_then(|p| p.get("__printf_cp")).unwrap();
+        assert_eq!(pc.get("count").and_then(Json::as_f64), Some(4.0));
+        let ev = j.get("events").and_then(Json::as_arr).unwrap();
+        assert_eq!(ev.len(), 1);
+        assert_eq!(ev[0].get("count").and_then(Json::as_f64), Some(2.0));
+        // Quiet runs add none of it to the summary.
+        let quiet = base().summary();
+        assert!(!quiet.contains("rpc_rt["), "{quiet}");
+        assert!(!quiet.contains("spans_dropped"), "{quiet}");
     }
 
     #[test]

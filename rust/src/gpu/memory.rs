@@ -75,6 +75,11 @@ pub struct DeviceMemory {
     global: Box<[AtomicU64]>,
     managed: Box<[AtomicU64]>,
     stack: Box<[AtomicU64]>,
+    /// The device's observability bundle (span recorder + latency
+    /// histograms + event log). Every layer that holds the memory — RPC
+    /// client, engine workers, launch executor, interpreter — records
+    /// through this shared handle.
+    pub obs: std::sync::Arc<crate::obs::Obs>,
 }
 
 fn alloc_words(bytes: u64) -> Box<[AtomicU64]> {
@@ -91,6 +96,7 @@ impl DeviceMemory {
             managed: alloc_words(cfg.managed_size),
             stack: alloc_words(cfg.stack_size),
             cfg,
+            obs: std::sync::Arc::new(crate::obs::Obs::new()),
         }
     }
 

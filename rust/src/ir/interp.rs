@@ -23,7 +23,7 @@ use crate::libc_gpu::registry::DeviceFn;
 use crate::libc_gpu::{stdlib as dstdlib, string as dstring};
 use crate::analysis::resolution::{resolve_module, ResolutionTable, SymbolClass};
 use crate::rpc::{RpcArgInfo, RpcClient, WrapperRegistry};
-use std::collections::{BTreeSet, HashMap};
+use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
@@ -51,9 +51,9 @@ pub struct ProgramEnv {
     /// execution path.
     pub resolution: ResolutionTable,
     /// Call sites that reached an unresolved symbol at runtime (each
-    /// degrades to a no-op returning 0, warned once per symbol).
+    /// degrades to a no-op returning 0, warned once per symbol through
+    /// the device's [`crate::obs::EventLog`]).
     pub unresolved_calls: AtomicU64,
-    unresolved_warned: Mutex<BTreeSet<String>>,
     /// This loaded program's launch-session id (minted by the loader
     /// from [`NEXT_LAUNCH_SESSION`]); keys the home launch-ring slot so
     /// concurrent sessions sharing a device never alias one slot.
@@ -173,7 +173,6 @@ impl ProgramEnv {
             globals,
             resolution,
             unresolved_calls: AtomicU64::new(0),
-            unresolved_warned: Mutex::new(BTreeSet::new()),
             launch_session: NEXT_LAUNCH_SESSION.fetch_add(1, Ordering::Relaxed),
             region_ids,
             region_names,
@@ -205,17 +204,21 @@ impl ProgramEnv {
     }
 
     /// Record one runtime hit on an unresolved symbol: count it and warn
-    /// once per symbol. The call degrades to a no-op returning 0 (the
-    /// PR 2 `snprintf` idiom) instead of panicking — `libcres` already
-    /// reported the symbol at compile time.
+    /// once per symbol through the device event log. The call degrades
+    /// to a no-op returning 0 (the PR 2 `snprintf` idiom) instead of
+    /// panicking — `libcres` already reported the symbol at compile
+    /// time.
     fn unresolved_trap(&self, name: &str) {
         self.unresolved_calls.fetch_add(1, Ordering::Relaxed);
-        if self.unresolved_warned.lock().unwrap().insert(name.to_string()) {
-            eprintln!(
-                ";; gpu-first: call to unresolved symbol '{name}' degraded to a no-op \
+        self.device.mem.obs.events.emit(
+            crate::obs::Level::Warn,
+            "unresolved-symbol",
+            name,
+            &format!(
+                "call to unresolved symbol '{name}' degraded to a no-op \
                  (libcres classifies it neither device-native nor host-RPC)"
-            );
-        }
+            ),
+        );
     }
 
     fn global_addr(&self, name: &str) -> u64 {
@@ -271,7 +274,9 @@ impl ProgramEnv {
                 .collect();
             interp.exec_function_body(&f.body, bindings);
         };
-        if has_barrier {
+        let obs = &self.device.mem.obs;
+        let span = obs.spans.start();
+        let stats = if has_barrier {
             let total = cfg.total_threads().min(1024);
             let cfg = LaunchConfig::new(
                 (total / cfg.threads_per_team).max(1),
@@ -280,7 +285,13 @@ impl ProgramEnv {
             self.device.launch_coop(cfg, body)
         } else {
             self.device.launch(cfg, body)
+        };
+        if span.is_some() {
+            let name = format!("kernel {region}");
+            let track = self.region_ids.get(region).copied().unwrap_or(0);
+            obs.spans.finish(span, &name, crate::obs::SpanKind::Interp, track);
         }
+        stats
     }
 }
 
@@ -559,11 +570,19 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
                         snapshot.iter().map(|(k, v)| (k.clone(), *v)).collect();
                     interp.exec_function_body(body, bindings);
                 };
+                let obs = &env.device.mem.obs;
+                let span = obs.spans.start();
                 let stats = if has_barrier {
                     env.device.launch_coop(cfg, runner)
                 } else {
                     env.device.launch(cfg, runner)
                 };
+                obs.spans.finish(
+                    span,
+                    "parallel-region",
+                    crate::obs::SpanKind::Interp,
+                    self.g.team_id as u64,
+                );
                 let mut agg = env.kernel_stats.lock().unwrap();
                 *agg = agg.add(&stats);
             }
@@ -747,9 +766,22 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         // Lane selection by team id: threads of different teams use
         // different arena lanes and only serialize when the arena is
         // narrower than the set of concurrently-calling teams.
+        let obs = &self.env.device.mem.obs;
+        let span = obs.spans.start();
         let mut client =
             RpcClient::for_team(&self.env.device.mem, self.env.device.arena(), self.g.team_id);
-        client.call(callee_id, &info, Some(&mut self.g.counters))
+        let ret = client.call(callee_id, &info, Some(&mut self.g.counters));
+        if span.is_some() {
+            // Spans are enabled: the name lookup is off the default path.
+            let label = self
+                .env
+                .registry
+                .name_of(callee_id)
+                .unwrap_or_else(|| format!("callee {callee_id}"));
+            let name = format!("rpc-wait {label}");
+            obs.spans.finish(span, &name, crate::obs::SpanKind::Interp, self.g.team_id as u64);
+        }
+        ret
     }
 
     fn kernel_launch(&mut self, region: &str, num_threads: Option<&Operand>) {
@@ -789,12 +821,18 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
         let mut info = RpcArgInfo::new();
         info.add_val(region_id);
         info.add_val(0);
+        let obs = &self.env.device.mem.obs;
+        let span = obs.spans.start();
         let mut client = RpcClient::for_launch_session(
             &self.env.device.mem,
             self.env.device.arena(),
             self.env.launch_session as usize,
         );
         let ret = client.call(launch_id, &info, Some(&mut self.g.counters));
+        if span.is_some() {
+            let name = format!("kernel-launch {region}");
+            obs.spans.finish(span, &name, crate::obs::SpanKind::Interp, self.g.team_id as u64);
+        }
         assert_eq!(ret, 0, "kernel launch RPC failed for {region}");
     }
 }

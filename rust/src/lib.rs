@@ -31,10 +31,14 @@
 //! * [`apps`] — the evaluation applications (XSBench, RSBench, HeCBench
 //!   micro benchmarks, SPEC-OMP-style kernels) in CPU / GPU-First / manual
 //!   offload variants.
+//! * [`obs`] — observability: span tracing (`--trace-out` Chrome
+//!   trace-event export), log-bucketed latency histograms, and the
+//!   structured warn-once event log.
 //! * [`util`] — offline substrate: RNG, CLI, JSON, stats, tables, property
 //!   testing, bench harness.
 
 pub mod util;
+pub mod obs;
 pub mod alloc;
 pub mod gpu;
 pub mod rpc;

@@ -30,12 +30,21 @@
 //! kernel-split launches can be in flight at once, `--rpc-data-cap`
 //! overrides the per-lane mailbox DATA bytes, and `--no-rpc-batch`
 //! disables same-callee coalescing per poll sweep.
+//!
+//! Observability: `--trace` enables the span recorder (off by default),
+//! `--trace-out FILE` additionally writes a Chrome trace-event JSON
+//! (load it in Perfetto / `chrome://tracing`), and `--metrics-out FILE`
+//! writes the full `RunMetrics` JSON including the latency histograms.
+//! A traced run prints the top slowest spans and the per-callee RPC
+//! round-trip table at the end.
 
 use gpu_first::coordinator::{Config, GpuFirstSession};
 use gpu_first::ir::parser::parse_module;
 use gpu_first::ir::printer::print_module;
+use gpu_first::obs::SpanKind;
 use gpu_first::transform::{CompileOptions, PipelineSpec};
 use gpu_first::util::cli::Args;
+use gpu_first::util::table::Table;
 
 fn main() {
     let args = Args::from_env(&["compile", "run", "explain", "apps", "artifacts"]);
@@ -52,6 +61,9 @@ fn main() {
                               --heap-mb N --rpc-lanes N|auto --rpc-workers N|auto\n\
                               --rpc-launch-threads N --rpc-launch-slots N\n\
                               --rpc-data-cap BYTES --no-rpc-batch --verbose\n\
+                 telemetry:   --trace (span recorder) --trace-out FILE (Chrome\n\
+                              trace-event JSON, implies --trace) --metrics-out FILE\n\
+                              (RunMetrics JSON with latency histograms)\n\
                  pipeline:    --passes p1,p2,... (known: constfold, libcres, rpcgen,\n\
                               multiteam; default all four; GPU_FIRST_PASSES env applies\n\
                               below it) --no-constfold --no-libcres --no-rpcgen\n\
@@ -143,11 +155,16 @@ fn cmd_compile(args: &Args) -> Result<(), String> {
 }
 
 fn cmd_run(args: &Args) -> Result<(), String> {
+    let t_parse = std::time::Instant::now();
     let module = read_module(args)?;
+    let parse_ns = t_parse.elapsed().as_nanos() as u64;
     let spec = pipeline_spec(args)?;
     let cfg = Config::from_args(args)?;
     let verbose = cfg.verbose;
     let mut session = GpuFirstSession::start(cfg);
+    // The recorder is born with the device, after parsing: the parse
+    // span lands at the origin of the trace timeline.
+    session.device.mem.obs.spans.record("parse", SpanKind::Pass, 0, 0, parse_ns);
     let (ret, metrics) = session.execute_spec(module, &spec, &[])?;
     // Host-side streams reach the real terminal.
     print!("{}", session.host.stdout_string());
@@ -156,8 +173,66 @@ fn cmd_run(args: &Args) -> Result<(), String> {
         eprintln!(";; {}", metrics.summary());
         eprintln!(";; JSON {}", metrics.to_json());
     }
+    export_telemetry(args, &session, &metrics)?;
     session.stop();
     std::process::exit(ret as i32);
+}
+
+/// `--trace-out` / `--metrics-out` export, plus the human end-of-run
+/// summary (top slowest spans, per-callee RPC round-trip histograms)
+/// whenever tracing was on.
+fn export_telemetry(
+    args: &Args,
+    session: &GpuFirstSession,
+    metrics: &gpu_first::coordinator::RunMetrics,
+) -> Result<(), String> {
+    if let Some(path) = args.get("metrics-out") {
+        std::fs::write(path, format!("{}\n", metrics.to_json()))
+            .map_err(|e| format!("{path}: {e}"))?;
+        eprintln!(";; gpu-first: wrote run metrics to {path}");
+    }
+    let obs = &session.device.mem.obs;
+    if !obs.spans.is_enabled() {
+        return Ok(());
+    }
+    let spans = obs.spans.drain();
+    if let Some(path) = args.get("trace-out") {
+        let json = gpu_first::obs::trace::chrome_trace(&spans);
+        std::fs::write(path, format!("{json}\n")).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!(";; gpu-first: wrote {} spans to {path} (Chrome trace JSON)", spans.len());
+    }
+    let mut top = Table::new("slowest spans", &["span", "track", "start", "duration"]);
+    for s in gpu_first::obs::trace::slowest(&spans, 10) {
+        top.row(&[
+            s.name.clone(),
+            gpu_first::obs::trace::track_label(s.kind, s.track),
+            gpu_first::util::fmt_ns(s.start_ns as f64),
+            gpu_first::util::fmt_ns(s.dur_ns as f64),
+        ]);
+    }
+    eprint!("{}", top.render());
+    if !metrics.rpc_per_callee.is_empty() {
+        let mut rpc =
+            Table::new("RPC round-trip by callee", &["callee", "n", "p50", "p90", "p99", "max"]);
+        for (name, h) in &metrics.rpc_per_callee {
+            rpc.row(&[
+                name.clone(),
+                h.count.to_string(),
+                gpu_first::util::fmt_ns(h.p50() as f64),
+                gpu_first::util::fmt_ns(h.p90() as f64),
+                gpu_first::util::fmt_ns(h.p99() as f64),
+                gpu_first::util::fmt_ns(h.max as f64),
+            ]);
+        }
+        eprint!("{}", rpc.render());
+    }
+    if metrics.spans_dropped > 0 {
+        eprintln!(
+            ";; gpu-first: span ring overflowed, {} oldest spans dropped",
+            metrics.spans_dropped
+        );
+    }
+    Ok(())
 }
 
 fn cmd_explain(args: &Args) -> Result<(), String> {

@@ -1,0 +1,136 @@
+//! Leveled, warn-once diagnostic events.
+//!
+//! Replaces the ad-hoc `eprintln!` warn-once idiom scattered through
+//! the runtime (unresolved-callee traps, unsupported format
+//! conversions) with one structured path: an event is keyed by
+//! `(code, detail)`, printed to stderr only on its first occurrence,
+//! and counted on every occurrence — so `RunMetrics` can report the
+//! totals and the message stream stays bounded.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, OnceLock, PoisonError};
+
+/// Event severity, ordered.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Level::Info => "info",
+            Level::Warn => "warn",
+            Level::Error => "error",
+        }
+    }
+}
+
+/// One distinct event with its occurrence count.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EventRecord {
+    pub level: Level,
+    /// Stable machine-readable class, e.g. `unresolved-symbol`.
+    pub code: String,
+    /// The instance within the class, e.g. the symbol name.
+    pub detail: String,
+    /// The human message printed on first occurrence.
+    pub message: String,
+    pub count: u64,
+}
+
+/// The structured warn-once log (see module docs).
+#[derive(Debug, Default)]
+pub struct EventLog {
+    entries: Mutex<BTreeMap<(String, String), EventRecord>>,
+}
+
+impl EventLog {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one occurrence of `(code, detail)`. The first occurrence
+    /// prints `message` to stderr (the warn-once contract) and returns
+    /// true; repeats only bump the count.
+    pub fn emit(&self, level: Level, code: &str, detail: &str, message: &str) -> bool {
+        let mut map = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        let key = (code.to_string(), detail.to_string());
+        if let Some(rec) = map.get_mut(&key) {
+            rec.count += 1;
+            return false;
+        }
+        eprintln!(";; gpu-first: [{}] {message}", level.as_str());
+        map.insert(
+            key,
+            EventRecord {
+                level,
+                code: code.to_string(),
+                detail: detail.to_string(),
+                message: message.to_string(),
+                count: 1,
+            },
+        );
+        true
+    }
+
+    /// Total occurrences across every `detail` of `code`.
+    pub fn count_code(&self, code: &str) -> u64 {
+        let map = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        map.values().filter(|r| r.code == code).map(|r| r.count).sum()
+    }
+
+    /// Total occurrences at `level` across all events.
+    pub fn count_level(&self, level: Level) -> u64 {
+        let map = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        map.values().filter(|r| r.level == level).map(|r| r.count).sum()
+    }
+
+    /// Every distinct event with counts, ordered by `(code, detail)`.
+    pub fn snapshot(&self) -> Vec<EventRecord> {
+        let map = self.entries.lock().unwrap_or_else(PoisonError::into_inner);
+        map.values().cloned().collect()
+    }
+}
+
+/// The process-global log for diagnostics raised from free functions
+/// with no device in scope (e.g. format-conversion warnings inside the
+/// host wrapper formatting core).
+pub fn global() -> &'static EventLog {
+    static GLOBAL: OnceLock<EventLog> = OnceLock::new();
+    GLOBAL.get_or_init(EventLog::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warn_once_counts_every_occurrence() {
+        let log = EventLog::new();
+        assert!(log.emit(Level::Warn, "unresolved-symbol", "dgemm", "dgemm degraded"));
+        assert!(!log.emit(Level::Warn, "unresolved-symbol", "dgemm", "dgemm degraded"));
+        assert!(log.emit(Level::Warn, "unresolved-symbol", "sgemm", "sgemm degraded"));
+        assert_eq!(log.count_code("unresolved-symbol"), 3);
+        assert_eq!(log.count_level(Level::Warn), 3);
+        assert_eq!(log.count_level(Level::Error), 0);
+        let snap = log.snapshot();
+        assert_eq!(snap.len(), 2, "one record per (code, detail)");
+        assert_eq!(snap[0].detail, "dgemm");
+        assert_eq!(snap[0].count, 2);
+        assert_eq!(snap[1].detail, "sgemm");
+        assert_eq!(snap[1].count, 1);
+    }
+
+    #[test]
+    fn distinct_codes_do_not_alias() {
+        let log = EventLog::new();
+        log.emit(Level::Warn, "a", "x", "m1");
+        log.emit(Level::Info, "b", "x", "m2");
+        assert_eq!(log.count_code("a"), 1);
+        assert_eq!(log.count_code("b"), 1);
+        assert_eq!(log.count_level(Level::Info), 1);
+    }
+}

@@ -1,0 +1,289 @@
+//! Log-bucketed latency histograms: lock-free to record, mergeable to
+//! report.
+//!
+//! A [`Hist`] is a fixed array of atomic counters with four buckets per
+//! octave (relative bucket width ≤ 25%), so recording is two relaxed
+//! `fetch_add`s plus a `fetch_max` — cheap enough to stay always-on in
+//! the RPC hot path. The exact maximum rides a separate atomic because
+//! the top bucket alone would quantize it.
+//!
+//! [`HistSnapshot`] is the plain-data form: mergeable across shards
+//! (the host-I/O lock tables keep one histogram per shard) and
+//! queryable for p50/p90/p99 quantiles, where a quantile resolves to
+//! the lower bound of the bucket containing that rank.
+
+use crate::util::json::Json;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count: values 0..3 exact, then 4 sub-buckets for each octave
+/// `[2^l, 2^(l+1))` up to `l = 63` (the full `u64` range — recording
+/// never saturates into a lossy overflow bucket).
+pub const BUCKETS: usize = 252;
+
+/// Bucket index of `v`: exact below 4, then `4·(l-1) + sub` where `l`
+/// is the octave and `sub` the top-two mantissa bits.
+pub fn bucket_of(v: u64) -> usize {
+    if v < 4 {
+        return v as usize;
+    }
+    let l = 63 - v.leading_zeros();
+    let sub = (v >> (l - 2)) & 3;
+    ((l - 1) * 4) as usize + sub as usize
+}
+
+/// Inclusive lower bound of bucket `idx` (the value a quantile falling
+/// in this bucket reports).
+pub fn bucket_lo(idx: usize) -> u64 {
+    if idx < 4 {
+        return idx as u64;
+    }
+    let l = idx as u32 / 4 + 1;
+    let sub = (idx % 4) as u64;
+    (4 + sub) << (l - 2)
+}
+
+/// A concurrent log-bucketed histogram (see module docs).
+#[derive(Debug)]
+pub struct Hist {
+    buckets: [AtomicU64; BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+    max: AtomicU64,
+}
+
+impl Default for Hist {
+    fn default() -> Self {
+        Self {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            max: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Hist {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one observation (relaxed atomics; safe from any thread).
+    pub fn record(&self, v: u64) {
+        self.buckets[bucket_of(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        self.max.fetch_max(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    /// Plain-data copy for merging / quantile queries.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            counts: self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.count.load(Ordering::Relaxed),
+            sum: self.sum.load(Ordering::Relaxed),
+            max: self.max.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// The mergeable, queryable form of a [`Hist`]. `Default` is the empty
+/// histogram (every quantile reports 0).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct HistSnapshot {
+    counts: Vec<u64>,
+    pub count: u64,
+    pub sum: u64,
+    pub max: u64,
+}
+
+impl HistSnapshot {
+    /// Combine two snapshots (shard merging; commutative, associative).
+    pub fn merge(&self, other: &HistSnapshot) -> HistSnapshot {
+        let n = self.counts.len().max(other.counts.len());
+        let mut counts = vec![0u64; n];
+        for (i, c) in self.counts.iter().enumerate() {
+            counts[i] += c;
+        }
+        for (i, c) in other.counts.iter().enumerate() {
+            counts[i] += c;
+        }
+        HistSnapshot {
+            counts,
+            count: self.count + other.count,
+            sum: self.sum.wrapping_add(other.sum),
+            max: self.max.max(other.max),
+        }
+    }
+
+    /// The value at percentile `p` (0..=100): the lower bound of the
+    /// bucket holding the `ceil(p% · count)`-th observation. 0 when
+    /// empty.
+    pub fn percentile(&self, p: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let rank = ((p / 100.0) * self.count as f64).ceil().max(1.0) as u64;
+        let mut seen = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return bucket_lo(i);
+            }
+        }
+        self.max
+    }
+
+    pub fn p50(&self) -> u64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p90(&self) -> u64 {
+        self.percentile(90.0)
+    }
+
+    pub fn p99(&self) -> u64 {
+        self.percentile(99.0)
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum as f64 / self.count as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+
+    /// One-line human form with adaptive units.
+    pub fn summary(&self) -> String {
+        format!(
+            "n={} p50={} p90={} p99={} max={}",
+            self.count,
+            crate::util::fmt_ns(self.p50() as f64),
+            crate::util::fmt_ns(self.p90() as f64),
+            crate::util::fmt_ns(self.p99() as f64),
+            crate::util::fmt_ns(self.max as f64),
+        )
+    }
+
+    /// The JSON form `RunMetrics::to_json` embeds per histogram.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("p50_ns", Json::num(self.p50() as f64)),
+            ("p90_ns", Json::num(self.p90() as f64)),
+            ("p99_ns", Json::num(self.p99() as f64)),
+            ("max_ns", Json::num(self.max as f64)),
+            ("mean_ns", Json::num(self.mean())),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_are_consistent() {
+        // Every value lands in a bucket whose lower bound is <= it, and
+        // the next bucket's bound is > it.
+        for v in [0u64, 1, 2, 3, 4, 5, 7, 8, 63, 64, 100, 1000, 1 << 20, u64::MAX] {
+            let i = bucket_of(v);
+            assert!(bucket_lo(i) <= v, "lo({i}) <= {v}");
+            if i + 1 < BUCKETS {
+                assert!(bucket_lo(i + 1) > v, "lo({}) > {v}", i + 1);
+            }
+        }
+        // Bucket lower bounds are strictly increasing.
+        for i in 1..BUCKETS {
+            assert!(bucket_lo(i) > bucket_lo(i - 1), "monotone at {i}");
+        }
+    }
+
+    #[test]
+    fn saturation_top_of_range() {
+        let h = Hist::new();
+        h.record(u64::MAX);
+        let s = h.snapshot();
+        assert_eq!(s.count, 1);
+        assert_eq!(s.max, u64::MAX);
+        assert_eq!(bucket_of(u64::MAX), BUCKETS - 1, "top value fits the last bucket");
+        assert!(s.p99() <= u64::MAX);
+    }
+
+    #[test]
+    fn empty_snapshot_reports_zeros() {
+        let s = HistSnapshot::default();
+        assert!(s.is_empty());
+        assert_eq!(s.p50(), 0);
+        assert_eq!(s.p99(), 0);
+        assert_eq!(s.max, 0);
+        assert_eq!(s.mean(), 0.0);
+    }
+
+    #[test]
+    fn percentiles_on_known_data() {
+        let h = Hist::new();
+        for v in 1..=100u64 {
+            h.record(v);
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 100);
+        assert_eq!(s.max, 100);
+        // Quantiles resolve to the containing bucket's lower bound: the
+        // relative error is bounded by the 25% bucket width.
+        let p50 = s.p50();
+        assert!((40..=50).contains(&p50), "p50 = {p50}");
+        let p99 = s.p99();
+        assert!((80..=99).contains(&p99), "p99 = {p99}");
+        assert_eq!(s.mean(), 50.5);
+    }
+
+    #[test]
+    fn merge_is_equivalent_to_single_recording() {
+        let a = Hist::new();
+        let b = Hist::new();
+        let all = Hist::new();
+        for v in 0..500u64 {
+            if v % 2 == 0 {
+                a.record(v * 3)
+            } else {
+                b.record(v * 3)
+            }
+            all.record(v * 3);
+        }
+        let merged = a.snapshot().merge(&b.snapshot());
+        assert_eq!(merged, all.snapshot());
+        // Merging with the empty snapshot is the identity.
+        assert_eq!(merged.merge(&HistSnapshot::default()), merged);
+        assert_eq!(HistSnapshot::default().merge(&merged), merged);
+    }
+
+    #[test]
+    fn concurrent_recording_loses_nothing() {
+        use std::sync::Arc;
+        let h = Arc::new(Hist::new());
+        let mut handles = Vec::new();
+        for t in 0..8u64 {
+            let h = Arc::clone(&h);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..1000u64 {
+                    h.record(t * 1000 + i);
+                }
+            }));
+        }
+        for hdl in handles {
+            hdl.join().unwrap();
+        }
+        let s = h.snapshot();
+        assert_eq!(s.count, 8000);
+        assert_eq!(s.max, 7999);
+    }
+}

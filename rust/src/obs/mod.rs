@@ -1,0 +1,90 @@
+//! Observability: span tracing, latency histograms, and leveled
+//! diagnostic events — the telemetry spine under `--trace-out` /
+//! `--metrics-out` and the `RunMetrics` histogram section.
+//!
+//! One [`Obs`] bundle lives on every
+//! [`DeviceMemory`](crate::gpu::memory::DeviceMemory) (every
+//! instrumented layer — RPC client, engine workers, launch executor,
+//! interpreter, loader — already holds the device memory), so
+//! instrumentation needs no extra plumbing:
+//!
+//! * [`SpanRecorder`] — the run timeline. **Disabled by default**; the
+//!   hot-path cost is then a single relaxed atomic load. `--trace` /
+//!   `--trace-out` enable it, and [`trace::chrome_trace`] exports the
+//!   recorded spans as Perfetto-loadable Chrome trace-event JSON.
+//! * [`Hist`] latency histograms — always on (lock-free relaxed
+//!   atomics): RPC round-trip (total and per callee), launch-executor
+//!   queue wait and kernel run time; the host-I/O lock tables keep
+//!   their own per-table histograms merged via [`HistSnapshot`].
+//! * [`EventLog`] — structured warn-once diagnostics with counts
+//!   (unresolved callees, unsupported format conversions).
+
+pub mod event;
+pub mod hist;
+pub mod span;
+pub mod trace;
+
+pub use event::{EventLog, EventRecord, Level};
+pub use hist::{Hist, HistSnapshot};
+pub use span::{Span, SpanKind, SpanRecorder};
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, PoisonError};
+
+/// The per-device observability bundle (see module docs).
+#[derive(Debug, Default)]
+pub struct Obs {
+    pub spans: SpanRecorder,
+    pub events: EventLog,
+    /// Device-observed RPC round-trip wall time (claim → writeback).
+    pub rpc_round_trip: Hist,
+    /// Launch-executor queue wait (submit → executor pickup).
+    pub launch_queue_wait: Hist,
+    /// Launch-executor kernel run time.
+    pub launch_run: Hist,
+    per_callee: Mutex<BTreeMap<u64, Hist>>,
+}
+
+impl Obs {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one RPC round trip, attributed to `callee_id`.
+    pub fn record_rpc(&self, callee_id: u64, dur_ns: u64) {
+        self.rpc_round_trip.record(dur_ns);
+        let mut map = self.per_callee.lock().unwrap_or_else(PoisonError::into_inner);
+        map.entry(callee_id).or_default().record(dur_ns);
+    }
+
+    /// Per-callee round-trip histograms, keyed by registry callee id.
+    pub fn per_callee_rpc(&self) -> BTreeMap<u64, HistSnapshot> {
+        let map = self.per_callee.lock().unwrap_or_else(PoisonError::into_inner);
+        map.iter().map(|(id, h)| (*id, h.snapshot())).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rpc_recording_feeds_total_and_per_callee() {
+        let obs = Obs::new();
+        obs.record_rpc(3, 100);
+        obs.record_rpc(3, 200);
+        obs.record_rpc(7, 50);
+        assert_eq!(obs.rpc_round_trip.count(), 3);
+        let per = obs.per_callee_rpc();
+        assert_eq!(per.len(), 2);
+        assert_eq!(per[&3].count, 2);
+        assert_eq!(per[&7].count, 1);
+        assert_eq!(per[&3].max, 200);
+    }
+
+    #[test]
+    fn spans_default_disabled() {
+        let obs = Obs::new();
+        assert!(!obs.spans.is_enabled());
+    }
+}

@@ -1,0 +1,232 @@
+//! Fixed-capacity span recording for the run timeline.
+//!
+//! A [`Span`] is one timed interval on a named track: an RPC round
+//! trip on its mailbox lane, a worker sweep, a launch-slot queue wait,
+//! an interpreter phase. The [`SpanRecorder`] keeps spans in sharded
+//! drop-oldest ring buffers (bounded memory however long the run) with
+//! a dropped-span counter, and is **disabled by default**: the only
+//! cost on the hot path is then one relaxed atomic load —
+//! [`SpanRecorder::start`] returns `None` without reading the clock.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, PoisonError};
+use std::time::Instant;
+
+/// Which track family a span belongs to (one Chrome-trace `cat` and
+/// `tid` block per kind — see [`super::trace`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// Device-side RPC lifecycle on a mailbox lane.
+    Lane,
+    /// Host poll-worker activity.
+    Worker,
+    /// Kernel-split launch executor activity per arena slot.
+    LaunchSlot,
+    /// Interpreter phases (per-callee RPC waits, kernel execution).
+    Interp,
+    /// Middle-end passes (parse + the pass-manager pipeline).
+    Pass,
+}
+
+impl SpanKind {
+    /// Chrome-trace category string.
+    pub fn category(self) -> &'static str {
+        match self {
+            SpanKind::Lane => "lane",
+            SpanKind::Worker => "worker",
+            SpanKind::LaunchSlot => "launch-slot",
+            SpanKind::Interp => "interp",
+            SpanKind::Pass => "pass",
+        }
+    }
+
+    /// Base of this kind's `tid` block in the exported trace (one
+    /// thousand ids per kind keeps tracks grouped and collision-free).
+    pub fn track_base(self) -> u64 {
+        match self {
+            SpanKind::Lane => 1000,
+            SpanKind::Worker => 2000,
+            SpanKind::LaunchSlot => 3000,
+            SpanKind::Interp => 4000,
+            SpanKind::Pass => 5000,
+        }
+    }
+}
+
+/// One recorded interval. `track` is the id within the kind (lane
+/// index, worker index, arena slot, team id, pass ordinal).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub name: String,
+    pub kind: SpanKind,
+    pub track: u64,
+    pub start_ns: u64,
+    pub dur_ns: u64,
+}
+
+const SHARDS: usize = 16;
+
+/// Default per-shard ring capacity (~64Ki spans total across shards).
+pub const DEFAULT_CAPACITY: usize = 4096;
+
+/// Sharded drop-oldest span storage (see module docs).
+#[derive(Debug)]
+pub struct SpanRecorder {
+    enabled: AtomicBool,
+    zero: Instant,
+    shards: Vec<Mutex<VecDeque<Span>>>,
+    capacity: usize,
+    dropped: AtomicU64,
+}
+
+impl Default for SpanRecorder {
+    fn default() -> Self {
+        Self::with_capacity(DEFAULT_CAPACITY)
+    }
+}
+
+impl SpanRecorder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// A recorder with an explicit per-shard ring capacity (tests use
+    /// tiny rings to exercise the drop-oldest path).
+    pub fn with_capacity(capacity: usize) -> Self {
+        Self {
+            enabled: AtomicBool::new(false),
+            zero: Instant::now(),
+            shards: (0..SHARDS).map(|_| Mutex::new(VecDeque::new())).collect(),
+            capacity: capacity.max(1),
+            dropped: AtomicU64::new(0),
+        }
+    }
+
+    pub fn enable(&self) {
+        self.enabled.store(true, Ordering::Relaxed);
+    }
+
+    pub fn disable(&self) {
+        self.enabled.store(false, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Nanoseconds since the recorder's epoch (device creation).
+    pub fn now_ns(&self) -> u64 {
+        self.zero.elapsed().as_nanos() as u64
+    }
+
+    /// Begin a gated measurement: `None` when disabled (the zero-cost
+    /// path — no clock read), else the span's prospective `start_ns`.
+    pub fn start(&self) -> Option<u64> {
+        if self.is_enabled() {
+            Some(self.now_ns())
+        } else {
+            None
+        }
+    }
+
+    /// Close a measurement opened by [`SpanRecorder::start`]; a no-op
+    /// for `None` (recorder was disabled at the open).
+    pub fn finish(&self, started: Option<u64>, name: &str, kind: SpanKind, track: u64) {
+        if let Some(start_ns) = started {
+            let dur_ns = self.now_ns().saturating_sub(start_ns);
+            self.record(name, kind, track, start_ns, dur_ns);
+        }
+    }
+
+    /// Record a fully-formed span (no-op when disabled).
+    pub fn record(&self, name: &str, kind: SpanKind, track: u64, start_ns: u64, dur_ns: u64) {
+        if !self.is_enabled() {
+            return;
+        }
+        self.push(Span { name: name.to_string(), kind, track, start_ns, dur_ns });
+    }
+
+    fn push(&self, span: Span) {
+        let shard = (span.kind.track_base() + span.track) as usize % SHARDS;
+        let mut ring = self.shards[shard].lock().unwrap_or_else(PoisonError::into_inner);
+        if ring.len() >= self.capacity {
+            ring.pop_front();
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+        ring.push_back(span);
+    }
+
+    /// Spans dropped to the ring bound so far.
+    pub fn dropped(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// Recorded spans so far (non-destructive), ordered by start time.
+    pub fn snapshot(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let ring = shard.lock().unwrap_or_else(PoisonError::into_inner);
+            out.extend(ring.iter().cloned());
+        }
+        out.sort_by(|a, b| a.start_ns.cmp(&b.start_ns).then(a.track.cmp(&b.track)));
+        out
+    }
+
+    /// Take every recorded span (export path), ordered by start time.
+    pub fn drain(&self) -> Vec<Span> {
+        let mut out = Vec::new();
+        for shard in &self.shards {
+            let mut ring = shard.lock().unwrap_or_else(PoisonError::into_inner);
+            out.extend(ring.drain(..));
+        }
+        out.sort_by(|a, b| a.start_ns.cmp(&b.start_ns).then(a.track.cmp(&b.track)));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_recorder_records_nothing() {
+        let r = SpanRecorder::new();
+        assert!(!r.is_enabled());
+        assert_eq!(r.start(), None, "no clock read when disabled");
+        r.record("x", SpanKind::Lane, 0, 0, 10);
+        r.finish(None, "x", SpanKind::Lane, 0);
+        assert!(r.snapshot().is_empty());
+        assert_eq!(r.dropped(), 0);
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let r = SpanRecorder::with_capacity(4);
+        r.enable();
+        // Same kind+track => one shard => the per-shard bound applies.
+        for i in 0..10u64 {
+            r.record("s", SpanKind::Worker, 0, i, 1);
+        }
+        assert_eq!(r.dropped(), 6);
+        let spans = r.snapshot();
+        assert_eq!(spans.len(), 4);
+        // Oldest were dropped: the survivors are the last four.
+        assert_eq!(spans.iter().map(|s| s.start_ns).collect::<Vec<_>>(), vec![6, 7, 8, 9]);
+    }
+
+    #[test]
+    fn start_finish_round_trip() {
+        let r = SpanRecorder::new();
+        r.enable();
+        let t0 = r.start();
+        assert!(t0.is_some());
+        r.finish(t0, "op", SpanKind::Interp, 3);
+        let spans = r.drain();
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].name, "op");
+        assert_eq!(spans[0].kind, SpanKind::Interp);
+        assert_eq!(spans[0].track, 3);
+        assert!(r.drain().is_empty(), "drain empties the rings");
+    }
+}

@@ -1,0 +1,122 @@
+//! Chrome trace-event export (Perfetto / `chrome://tracing` loadable).
+//!
+//! Every [`Span`] becomes one complete event (`"ph": "X"`) with
+//! microsecond `ts`/`dur`, `pid` 0, and a `tid` derived from the
+//! span's kind and track (`kind.track_base() + track`), so each lane,
+//! worker, launch slot, team and pass renders as its own named track.
+//! A `thread_name` metadata event (`"ph": "M"`) labels every distinct
+//! track.
+
+use super::span::{Span, SpanKind};
+use crate::util::json::Json;
+use std::collections::BTreeSet;
+
+/// Human label of one `(kind, track)` pair — the exported
+/// `thread_name` and the run-end summary table share it.
+pub fn track_label(kind: SpanKind, track: u64) -> String {
+    match kind {
+        SpanKind::Lane => format!("lane {track}"),
+        SpanKind::Worker => format!("worker {track}"),
+        SpanKind::LaunchSlot => format!("launch-slot {track}"),
+        SpanKind::Interp => format!("interp team {track}"),
+        SpanKind::Pass => "passes".to_string(),
+    }
+}
+
+/// Render `spans` as a Chrome trace-event JSON document.
+pub fn chrome_trace(spans: &[Span]) -> Json {
+    let mut events = Vec::new();
+    let mut tracks: BTreeSet<(SpanKind, u64)> = BTreeSet::new();
+    for s in spans {
+        tracks.insert((s.kind, s.track));
+    }
+    for (kind, track) in &tracks {
+        events.push(Json::obj(vec![
+            ("name", Json::str("thread_name")),
+            ("ph", Json::str("M")),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num((kind.track_base() + track) as f64)),
+            ("args", Json::obj(vec![("name", Json::str(track_label(*kind, *track)))])),
+        ]));
+    }
+    for s in spans {
+        events.push(Json::obj(vec![
+            ("name", Json::str(s.name.clone())),
+            ("cat", Json::str(s.kind.category())),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(s.start_ns as f64 / 1e3)),
+            ("dur", Json::num(s.dur_ns as f64 / 1e3)),
+            ("pid", Json::num(0.0)),
+            ("tid", Json::num((s.kind.track_base() + s.track) as f64)),
+        ]));
+    }
+    Json::obj(vec![
+        ("traceEvents", Json::Arr(events)),
+        ("displayTimeUnit", Json::str("ms")),
+    ])
+}
+
+/// The `n` slowest spans, longest first (the run-end summary table).
+pub fn slowest(spans: &[Span], n: usize) -> Vec<&Span> {
+    let mut by_dur: Vec<&Span> = spans.iter().collect();
+    by_dur.sort_by(|a, b| b.dur_ns.cmp(&a.dur_ns));
+    by_dur.truncate(n);
+    by_dur
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn span(name: &str, kind: SpanKind, track: u64, start: u64, dur: u64) -> Span {
+        Span { name: name.to_string(), kind, track, start_ns: start, dur_ns: dur }
+    }
+
+    #[test]
+    fn trace_round_trips_through_the_json_parser() {
+        let spans = vec![
+            span("rpc", SpanKind::Lane, 0, 1000, 500),
+            span("serve", SpanKind::Worker, 1, 1200, 200),
+            span("run", SpanKind::LaunchSlot, 2, 2000, 9000),
+            span("rpcgen", SpanKind::Pass, 2, 0, 700),
+        ];
+        let doc = chrome_trace(&spans);
+        let parsed = Json::parse(&doc.to_string()).unwrap();
+        let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+        // 4 spans + 4 distinct-track metadata events.
+        assert_eq!(events.len(), 8);
+        let complete: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+            .collect();
+        assert_eq!(complete.len(), 4);
+        let cats: BTreeSet<&str> = complete
+            .iter()
+            .filter_map(|e| e.get("cat").and_then(Json::as_str))
+            .collect();
+        assert_eq!(cats.len(), 4, "one category per kind: {cats:?}");
+        // ts/dur are microseconds.
+        assert_eq!(complete[0].get("ts").unwrap().as_f64(), Some(1.0));
+        assert_eq!(complete[0].get("dur").unwrap().as_f64(), Some(0.5));
+        // Metadata names every track.
+        let meta: Vec<&Json> = events
+            .iter()
+            .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+            .collect();
+        assert_eq!(meta.len(), 4);
+        assert!(meta
+            .iter()
+            .any(|e| e.get("args").unwrap().get("name").unwrap().as_str() == Some("lane 0")));
+    }
+
+    #[test]
+    fn slowest_orders_by_duration() {
+        let spans = vec![
+            span("a", SpanKind::Lane, 0, 0, 10),
+            span("b", SpanKind::Lane, 0, 0, 30),
+            span("c", SpanKind::Lane, 0, 0, 20),
+        ];
+        let top = slowest(&spans, 2);
+        assert_eq!(top.iter().map(|s| s.name.as_str()).collect::<Vec<_>>(), vec!["b", "c"]);
+    }
+}

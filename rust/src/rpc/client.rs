@@ -147,6 +147,8 @@ impl<'a> RpcClient<'a> {
         mut counters: Option<&mut Counters>,
     ) -> i64 {
         let t0 = std::time::Instant::now();
+        let obs = &self.mem.obs;
+        let span_claim = obs.spans.start();
         let mut bd = RpcBreakdown {
             init_ns: a100::RPC_TOTAL_NS * a100::RPC_ARGINFO_INIT_FRAC,
             ..Default::default()
@@ -172,6 +174,9 @@ impl<'a> RpcClient<'a> {
             }
         };
         bd.lane = lane;
+        let claim_name = if self.launch_only { "claim-ring" } else { "claim" };
+        obs.spans.finish(span_claim, claim_name, crate::obs::SpanKind::Lane, lane as u64);
+        let span_rpc = obs.spans.start();
 
         // ---- Stage 2: identify underlying objects, stage them in the
         // mailbox data region (paper: "copying the format string and buffer
@@ -287,6 +292,9 @@ impl<'a> RpcClient<'a> {
         mb.set_status(ST_IDLE);
 
         bd.real_ns = t0.elapsed().as_nanos() as f64;
+        let rpc_name = if self.launch_only { "launch-rpc" } else { "rpc" };
+        obs.spans.finish(span_rpc, rpc_name, crate::obs::SpanKind::Lane, lane as u64);
+        obs.record_rpc(callee, bd.real_ns as u64);
         if let Some(c) = counters.as_deref_mut() {
             c.rpc_calls += 1;
             c.charge_ns(bd.device_total_ns());

@@ -165,6 +165,21 @@ fn executor_loop(
         metrics.served.fetch_add(1, Ordering::Relaxed);
         metrics.launch_wait_ns.fetch_add(wait_ns, Ordering::Relaxed);
         metrics.launch_run_ns.fetch_add(run_ns, Ordering::Relaxed);
+        mem.obs.launch_queue_wait.record(wait_ns);
+        mem.obs.launch_run.record(run_ns);
+        if mem.obs.spans.is_enabled() {
+            let now = mem.obs.spans.now_ns();
+            let kind = crate::obs::SpanKind::LaunchSlot;
+            let track = job.slot as u64;
+            mem.obs.spans.record(
+                "queue-wait",
+                kind,
+                track,
+                now.saturating_sub(run_ns + wait_ns),
+                wait_ns,
+            );
+            mem.obs.spans.record("run", kind, track, now.saturating_sub(run_ns), run_ns);
+        }
         // Per-ring-slot completion/latency gauges (launch callees that
         // arrived on a regular lane count in launches/served only).
         if on_ring {

@@ -489,7 +489,7 @@ fn worker_loop(
             continue;
         }
         idle_sweeps = 0;
-        dispatch_sweep(mem, arena, registry, env, cfg.batch, metrics, &claimed, executor);
+        dispatch_sweep(worker, mem, arena, registry, env, cfg.batch, metrics, &claimed, executor);
     }
 }
 
@@ -498,6 +498,7 @@ fn worker_loop(
 /// everything else dispatches inline, coalescing same-callee groups.
 #[allow(clippy::too_many_arguments)]
 fn dispatch_sweep(
+    worker: usize,
     mem: &DeviceMemory,
     arena: ArenaLayout,
     registry: &WrapperRegistry,
@@ -548,6 +549,7 @@ fn dispatch_sweep(
     // under the (first) owning slot's lane context so HostEnv shard
     // selection follows the serving lane.
     for (callee, members) in groups {
+        let serve_span = mem.obs.spans.start();
         let coalesced = batch && members.len() > 1;
         if coalesced {
             metrics.batches.fetch_add(1, Ordering::Relaxed);
@@ -590,6 +592,12 @@ fn dispatch_sweep(
             }
             metrics.served.fetch_add(1, Ordering::Relaxed);
             mb.set_status(ST_DONE);
+        }
+        if serve_span.is_some() {
+            // Spans are enabled: the name lookup is off the default path.
+            let label = registry.name_of(callee).unwrap_or_else(|| format!("callee {callee}"));
+            let name = format!("serve {label}");
+            mem.obs.spans.finish(serve_span, &name, crate::obs::SpanKind::Worker, worker as u64);
         }
     }
 }

@@ -134,6 +134,12 @@ impl WrapperRegistry {
         v
     }
 
+    /// Reverse lookup: the landing-pad name registered under `id`
+    /// (telemetry labels per-callee histograms and spans with it).
+    pub fn name_of(&self, id: u64) -> Option<String> {
+        self.by_name.lock().unwrap().iter().find(|(_, v)| **v == id).map(|(k, _)| k.clone())
+    }
+
     /// Register the batched variant of an already-registered landing
     /// pad; returns its callee id, or `None` when no scalar pad exists
     /// under `mangled` (the batch pad would be unreachable).

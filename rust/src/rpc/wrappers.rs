@@ -80,6 +80,8 @@ pub const CONTENT_SHARDS: usize = 16;
 struct ContentShard {
     map: Mutex<HashMap<String, Vec<u8>>>,
     contended: AtomicU64,
+    /// Time spent blocked on this shard's lock (contended path only).
+    wait: crate::obs::Hist,
 }
 
 /// The per-file-key sharded content map behind `HostEnv`'s in-memory
@@ -121,7 +123,10 @@ impl ContentMap {
             }
             Err(TryLockError::WouldBlock) => {
                 shard.contended.fetch_add(1, Ordering::Relaxed);
-                lock_or_recover(&shard.map, recoveries)
+                let t0 = std::time::Instant::now();
+                let g = lock_or_recover(&shard.map, recoveries);
+                shard.wait.record(t0.elapsed().as_nanos() as u64);
+                g
             }
         }
     }
@@ -138,6 +143,8 @@ struct FdTable {
     open: Mutex<HashMap<u64, OpenFile>>,
     opens: AtomicU64,
     contended: AtomicU64,
+    /// Time spent blocked on this table's lock (contended path only).
+    wait: crate::obs::Hist,
 }
 
 impl FdTable {
@@ -153,7 +160,10 @@ impl FdTable {
             }
             Err(TryLockError::WouldBlock) => {
                 self.contended.fetch_add(1, Ordering::Relaxed);
-                lock_or_recover(&self.open, recoveries)
+                let t0 = std::time::Instant::now();
+                let g = lock_or_recover(&self.open, recoveries);
+                self.wait.record(t0.elapsed().as_nanos() as u64);
+                g
             }
         }
     }
@@ -285,6 +295,23 @@ impl HostEnv {
             poison_recoveries: self.poison_recoveries.load(r),
             batched_writes: self.batched_writes.load(r),
         }
+    }
+
+    /// Merged histogram of the time landing pads spent **blocked** on
+    /// `HostEnv` lock acquisitions that had to wait — every open-handle
+    /// table plus every content-map shard. Empty while
+    /// [`HostIoSnapshot::lock_contention`] and
+    /// [`HostIoSnapshot::content_contention`] are both 0 (the fast
+    /// `try_lock` path records nothing).
+    pub fn io_lock_wait(&self) -> crate::obs::HistSnapshot {
+        let mut snap = self.shared.wait.snapshot();
+        for t in &self.shards {
+            snap = snap.merge(&t.wait.snapshot());
+        }
+        for s in &self.files.shards {
+            snap = snap.merge(&s.wait.snapshot());
+        }
+        snap
     }
 
     /// Per-shard lock-contention counts (index = shard; shared fallback
@@ -516,9 +543,17 @@ pub fn format_warnings() -> u64 {
 }
 
 /// Record one degraded conversion (also used by the device-side
-/// `snprintf` on argument/conversion mismatches).
+/// `snprintf` on argument/conversion mismatches). The flat counter is
+/// the stable delta-based API; the process-global event log adds the
+/// warn-once diagnostic and per-code count for telemetry export.
 pub fn count_format_warning() {
     FORMAT_WARNINGS.fetch_add(1, Ordering::Relaxed);
+    crate::obs::event::global().emit(
+        crate::obs::Level::Warn,
+        "format-conversion",
+        "",
+        "unsupported format conversion degraded to its literal text",
+    );
 }
 
 /// One parsed `%` conversion.

@@ -1,0 +1,188 @@
+//! End-to-end observability: traced vs untraced equivalence, latency
+//! histograms riding `RunMetrics`, Chrome-trace export schema, and the
+//! leveled event log surfacing unresolved-callee diagnostics.
+
+use gpu_first::coordinator::{Config, GpuFirstSession, RunMetrics};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::obs::Span;
+use gpu_first::transform::CompileOptions;
+use gpu_first::util::json::Json;
+use std::collections::BTreeSet;
+
+fn small_cfg() -> Config {
+    Config { mem: MemConfig::small(), teams: 4, threads_per_team: 32, ..Default::default() }
+}
+
+/// A program that exercises every instrumented layer: a multiteam
+/// kernel (kernel-split launch → launch executor), device stores, a
+/// serial reduce, and a printf RPC (client lane → engine worker).
+const PROGRAM: &str = r#"
+global @out 32768
+global @fmt const 8 "sum=%d\n"
+
+func @main() -> i64 {
+  parallel {
+    for.team %i = 0 to 1024 step 1 {
+      %off = mul %i, 8
+      %p = gep @out, %off
+      store.8 %i, %p
+    }
+  }
+  %s = 0
+  for %i = 0 to 1024 step 128 {
+    %off = mul %i, 8
+    %p = gep @out, %off
+    %v = load.8 %p
+    %s = add %s, %v
+  }
+  call printf(@fmt, %s)
+  return %s
+}
+"#;
+
+/// 0 + 128 + 256 + ... + 896.
+const EXPECTED_SUM: i64 = 128 * (1 + 2 + 3 + 4 + 5 + 6 + 7);
+
+fn run(trace: bool) -> (i64, RunMetrics, String, Vec<Span>) {
+    let module = gpu_first::ir::parser::parse_module(PROGRAM).unwrap();
+    let cfg = Config { trace, ..small_cfg() };
+    let mut session = GpuFirstSession::start(cfg);
+    let (ret, metrics) = session.execute(module, CompileOptions::default(), &[]).unwrap();
+    let stdout = session.host.stdout_string();
+    let spans = session.device.mem.obs.spans.drain();
+    session.stop();
+    (ret, metrics, stdout, spans)
+}
+
+#[test]
+fn traced_run_is_equivalent_to_untraced() {
+    let (r_off, m_off, out_off, spans_off) = run(false);
+    let (r_on, m_on, out_on, spans_on) = run(true);
+    assert_eq!(r_off, EXPECTED_SUM);
+    assert_eq!(r_on, r_off, "tracing must not change results");
+    assert_eq!(out_on, out_off, "tracing must not change host output");
+    assert_eq!(out_off, format!("sum={EXPECTED_SUM}\n"));
+    assert!(spans_off.is_empty(), "disabled recorder stores nothing");
+    assert!(!spans_on.is_empty(), "enabled recorder captures the run");
+    assert_eq!(m_on.kernel_launches, m_off.kernel_launches);
+    assert_eq!(
+        m_on.main_stats.rpc_calls + m_on.kernel_stats.rpc_calls,
+        m_off.main_stats.rpc_calls + m_off.kernel_stats.rpc_calls,
+    );
+    assert_eq!(m_off.spans_dropped, 0);
+}
+
+#[test]
+fn latency_histograms_ride_run_metrics_even_untraced() {
+    let (_, m, _, _) = run(false);
+    // RPC round-trip: at least the printf and the kernel-split launch.
+    assert!(m.rpc_round_trip.count >= 2, "round trips: {}", m.rpc_round_trip.count);
+    assert!(m.rpc_round_trip.p50() > 0);
+    assert!(m.rpc_round_trip.p99() >= m.rpc_round_trip.p50());
+    assert!(m.rpc_round_trip.max >= m.rpc_round_trip.p99());
+    // Per-callee attribution under registered landing-pad names.
+    let names: Vec<&str> = m.rpc_per_callee.iter().map(|(n, _)| n.as_str()).collect();
+    assert!(names.iter().any(|n| n.contains("printf")), "per-callee names: {names:?}");
+    assert!(names.iter().any(|n| n.contains("launch")), "per-callee names: {names:?}");
+    let total: u64 = m.rpc_per_callee.iter().map(|(_, h)| h.count).sum();
+    assert_eq!(total, m.rpc_round_trip.count, "per-callee partitions the total");
+    // Launch-executor histograms agree with the engine's flat counters.
+    let launches = m.rpc_engine.as_ref().unwrap().launches;
+    assert_eq!(m.launch_queue_wait.count, launches);
+    assert_eq!(m.launch_run.count, launches);
+    // Single-threaded host I/O never waits on a lock.
+    assert!(m.host_io_lock_wait.is_empty());
+    // The JSON report carries the histogram section.
+    let j = m.to_json();
+    let hists = j.get("hists").expect("hists section");
+    for key in ["rpc_round_trip", "launch_queue_wait", "launch_run", "host_io_lock_wait"] {
+        let h = hists.get(key).unwrap_or_else(|| panic!("missing hists.{key}"));
+        for field in ["count", "p50_ns", "p90_ns", "p99_ns", "max_ns", "mean_ns"] {
+            assert!(h.get(field).and_then(Json::as_f64).is_some(), "hists.{key}.{field}");
+        }
+    }
+}
+
+#[test]
+fn chrome_trace_export_has_all_track_categories() {
+    let (_, _, _, spans) = run(true);
+    let doc = gpu_first::obs::trace::chrome_trace(&spans);
+    // The export round-trips through the crate's own JSON parser.
+    let parsed = Json::parse(&doc.to_string()).unwrap();
+    assert_eq!(parsed.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+    let events = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    assert!(!events.is_empty());
+    let complete: Vec<&Json> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("X"))
+        .collect();
+    let cats: BTreeSet<&str> =
+        complete.iter().filter_map(|e| e.get("cat").and_then(Json::as_str)).collect();
+    // Lane (client RPC), worker (engine serve), launch-slot (executor),
+    // interp (rpc-wait + kernel), pass (middle-end) all surface.
+    for want in ["lane", "worker", "launch-slot", "interp", "pass"] {
+        assert!(cats.contains(want), "missing category {want}: {cats:?}");
+    }
+    assert!(cats.len() >= 4, "acceptance floor: {cats:?}");
+    // Every complete event sits on a named track.
+    let named_tids: BTreeSet<u64> = events
+        .iter()
+        .filter(|e| e.get("ph").and_then(Json::as_str) == Some("M"))
+        .filter_map(|e| e.get("tid").and_then(Json::as_f64))
+        .map(|t| t as u64)
+        .collect();
+    for e in &complete {
+        let tid = e.get("tid").and_then(Json::as_f64).unwrap() as u64;
+        assert!(named_tids.contains(&tid), "unnamed track {tid}");
+    }
+    // The span names cover the RPC lifecycle and the kernel split.
+    let names: BTreeSet<&str> =
+        complete.iter().filter_map(|e| e.get("name").and_then(Json::as_str)).collect();
+    assert!(names.iter().any(|n| n.starts_with("rpc")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("serve")), "{names:?}");
+    assert!(names.iter().any(|n| n.starts_with("kernel")), "{names:?}");
+    assert!(names.contains("queue-wait") && names.contains("run"), "{names:?}");
+}
+
+#[test]
+fn unresolved_callee_routes_through_the_event_log() {
+    let src = "func @main() -> i64 {\n  %r = call dgemm(1)\n  %x = call dgemm(2)\n  return %r\n}\n";
+    let module = gpu_first::ir::parser::parse_module(src).unwrap();
+    let mut session = GpuFirstSession::start(small_cfg());
+    let (ret, metrics) = session.execute(module, CompileOptions::default(), &[]).unwrap();
+    assert_eq!(ret, 0, "unresolved call degrades to a no-op");
+    assert_eq!(metrics.unresolved_calls, 2);
+    let ev = metrics
+        .events
+        .iter()
+        .find(|e| e.code == "unresolved-symbol")
+        .expect("event surfaces in RunMetrics");
+    assert_eq!(ev.detail, "dgemm");
+    assert_eq!(ev.count, 2, "warn-once, counted every time");
+    assert_eq!(ev.level, gpu_first::obs::Level::Warn);
+    assert!(metrics.summary().contains("event[warn:unresolved-symbol]=2"));
+    session.stop();
+}
+
+#[test]
+fn traced_engine_shapes_match_untraced_output() {
+    // The equivalence holds on a wide engine too (parallel workers and
+    // ring slots recording concurrently).
+    let module = gpu_first::ir::parser::parse_module(PROGRAM).unwrap();
+    let cfg = Config {
+        rpc_lanes: 4,
+        rpc_workers: 2,
+        rpc_launch_slots: 2,
+        rpc_launch_threads: 2,
+        trace: true,
+        ..small_cfg()
+    };
+    let mut session = GpuFirstSession::start(cfg);
+    let (ret, metrics) = session.execute(module, CompileOptions::default(), &[]).unwrap();
+    assert_eq!(ret, EXPECTED_SUM);
+    assert_eq!(session.host.stdout_string(), format!("sum={EXPECTED_SUM}\n"));
+    assert!(metrics.rpc_round_trip.count >= 2);
+    let spans = session.device.mem.obs.spans.drain();
+    assert!(!spans.is_empty());
+    session.stop();
+}
