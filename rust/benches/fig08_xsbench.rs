@@ -1,11 +1,90 @@
 //! E3/E12 — Fig. 8a: XSBench GPU variants vs the CPU version, small and
 //! large unionized grids, event- and history-based lookup. Includes the
 //! paper's headline claim (up to 14.36x on the GPU).
+//!
+//! The trailing section benchmarks the interpreter itself on an
+//! XSBench-shaped IR lookup loop: tree-walk executor (no `lower` pass)
+//! vs the register-file core (default pipeline), the before/after of
+//! the slot-resolved lowering. `FIG08_QUICK=1` shrinks the loop for
+//! CI's bench-smoke job; `FIG08_JSON=FILE` writes the comparison as
+//! JSON (committed as `BENCH_fig08.json` on main).
 
 use gpu_first::apps::common::{close, Mode};
 use gpu_first::apps::xsbench::{run, LookupMode, XsWorkload};
+use gpu_first::coordinator::{Config, GpuFirstSession};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::ir::parser::parse_module;
+use gpu_first::transform::PipelineSpec;
+use gpu_first::util::bench::bb;
 use gpu_first::util::fmt_ratio;
+use gpu_first::util::json::Json;
 use gpu_first::util::table::Table;
+
+fn quick() -> bool {
+    std::env::var("FIG08_QUICK").is_ok()
+}
+
+/// XSBench-shaped IR: per-iteration index arithmetic into an energy
+/// grid, a gather, and an accumulate — the gep+load / bin+store chains
+/// the `fuse` pass targets.
+fn lookup_src(lookups: usize) -> String {
+    format!(
+        "
+global @grid 32768
+
+func @main() -> i64 {{
+  for %i = 0 to 4096 step 1 {{
+    %off = mul %i, 8
+    %p = gep @grid, %off
+    %v = mul %i, 13
+    store.8 %v, %p
+  }}
+  %acc = alloca 8
+  store.8 0, %acc
+  for %l = 0 to {lookups} step 1 {{
+    %h = mul %l, 2654435761
+    %idx = rem %h, 4096
+    %off = mul %idx, 8
+    %p = gep @grid, %off
+    %xs = load.8 %p
+    %a = load.8 %acc
+    %a2 = add %a, %xs
+    store.8 %a2, %acc
+  }}
+  %sum = load.8 %acc
+  return %sum
+}}
+"
+    )
+}
+
+/// Run the lookup program under `passes`; returns (mean ns/run, exit,
+/// lowered_fns, fused_instrs).
+fn interp_leg(passes: &str, lookups: usize) -> (f64, i64, u64, u64) {
+    let mut m = parse_module(&lookup_src(lookups)).unwrap();
+    let mut s = GpuFirstSession::start(Config {
+        mem: MemConfig::small(),
+        teams: 1,
+        threads_per_team: 1,
+        ..Default::default()
+    });
+    s.compile_spec(&mut m, &PipelineSpec::parse(passes).unwrap()).unwrap();
+    s.load(m);
+    let (warm, _) = s.run(&[]);
+    let reps = if quick() { 3 } else { 10 };
+    let t0 = std::time::Instant::now();
+    let mut metrics = None;
+    for _ in 0..reps {
+        let (ret, mt) = s.run(&[]);
+        assert_eq!(ret, warm, "interpreter runs must be deterministic");
+        bb(ret);
+        metrics = Some(mt);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    let mt = metrics.unwrap();
+    s.stop();
+    (ns, warm, mt.lowered_fns, mt.fused_instrs)
+}
 
 fn main() {
     println!("== E3 / Fig. 8a: XSBench compute-kernel performance relative to CPU ==");
@@ -40,4 +119,45 @@ fn main() {
          measured: {} (paper: up to 14.36x).",
         fmt_ratio(headline)
     );
+
+    // Interpreter before/after: tree-walk vs the register-file core on
+    // the XSBench-shaped lookup loop.
+    let lookups = if quick() { 2_000 } else { 50_000 };
+    let (tree_ns, tree_ret, tree_lowered, _) =
+        interp_leg("constfold,dce,libcres,rpcgen,multiteam", lookups);
+    let (core_ns, core_ret, lowered_fns, fused_instrs) =
+        interp_leg("constfold,dce,libcres,rpcgen,multiteam,lower,fuse", lookups);
+    assert_eq!(tree_ret, core_ret, "executors must agree on the result");
+    assert_eq!(tree_lowered, 0);
+    assert!(lowered_fns > 0 && fused_instrs > 0);
+    let speedup = tree_ns / core_ns;
+    let mut it = Table::new(
+        "interpreter executors — XSBench-shaped lookup loop (wallclock)",
+        &["series", "ns/run", "speedup"],
+    );
+    it.row(&["tree-walk".into(), format!("{tree_ns:.0}"), "1.00x".into()]);
+    it.row(&[
+        "register core (lower+fuse)".into(),
+        format!("{core_ns:.0}"),
+        format!("{speedup:.2}x"),
+    ]);
+    it.print();
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("fig08_xsbench_interp")),
+        ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
+        ("lookups", Json::num(lookups as f64)),
+        ("tree_walk_ns", Json::num(tree_ns)),
+        ("register_core_ns", Json::num(core_ns)),
+        ("speedup", Json::num(speedup)),
+        ("lowered_fns", Json::num(lowered_fns as f64)),
+        ("fused_instrs", Json::num(fused_instrs as f64)),
+    ]);
+    println!("\nJSON {report}");
+    // CI's bench-smoke job exports FIG08_JSON=BENCH_fig08.json and
+    // commits the file on main alongside BENCH_fig07.json.
+    if let Ok(path) = std::env::var("FIG08_JSON") {
+        std::fs::write(&path, format!("{report}\n")).expect("write bench JSON");
+        println!("wrote {path}");
+    }
 }

@@ -1,9 +1,96 @@
 //! E7 — Fig. 9c: AMGmk relax kernel and page-rank propagation step.
+//!
+//! The trailing section benchmarks the interpreter itself on a
+//! relax-shaped IR sweep (ELL-style row × width gather/accumulate):
+//! tree-walk executor vs the register-file core, the before/after of
+//! the slot-resolved lowering. `FIG09_QUICK=1` shrinks the sweep for
+//! CI's bench-smoke job; `FIG09_JSON=FILE` writes the comparison as
+//! JSON (committed as `BENCH_fig09.json` on main).
 
 use gpu_first::apps::common::{close, Mode};
 use gpu_first::apps::{amgmk, pagerank};
+use gpu_first::coordinator::{Config, GpuFirstSession};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::ir::parser::parse_module;
+use gpu_first::transform::PipelineSpec;
+use gpu_first::util::bench::bb;
 use gpu_first::util::fmt_ratio;
+use gpu_first::util::json::Json;
 use gpu_first::util::table::Table;
+
+fn quick() -> bool {
+    std::env::var("FIG09_QUICK").is_ok()
+}
+
+/// AMGmk-relax-shaped IR: for each row, gather `width` neighbors and
+/// accumulate into the row slot — gep+load chains inside a nested loop.
+fn relax_src(rows: usize) -> String {
+    format!(
+        "
+global @x 16384
+global @y 16384
+
+func @main() -> i64 {{
+  for %i = 0 to 2048 step 1 {{
+    %off = mul %i, 8
+    %p = gep @x, %off
+    %v = add %i, 1
+    store.8 %v, %p
+  }}
+  for %r = 0 to {rows} step 1 {{
+    %row = rem %r, 2048
+    %acc = alloca 8
+    store.8 0, %acc
+    for %k = 0 to 8 step 1 {{
+      %n = add %row, %k
+      %c = rem %n, 2048
+      %off = mul %c, 8
+      %p = gep @x, %off
+      %v = load.8 %p
+      %a = load.8 %acc
+      %a2 = add %a, %v
+      store.8 %a2, %acc
+    }}
+    %sum = load.8 %acc
+    %yoff = mul %row, 8
+    %q = gep @y, %yoff
+    store.8 %sum, %q
+  }}
+  %h = gep @y, 0
+  %out = load.8 %h
+  return %out
+}}
+"
+    )
+}
+
+/// Run the relax program under `passes`; returns (mean ns/run, exit,
+/// lowered_fns, fused_instrs).
+fn interp_leg(passes: &str, rows: usize) -> (f64, i64, u64, u64) {
+    let mut m = parse_module(&relax_src(rows)).unwrap();
+    let mut s = GpuFirstSession::start(Config {
+        mem: MemConfig::small(),
+        teams: 1,
+        threads_per_team: 1,
+        ..Default::default()
+    });
+    s.compile_spec(&mut m, &PipelineSpec::parse(passes).unwrap()).unwrap();
+    s.load(m);
+    let (warm, _) = s.run(&[]);
+    let reps = if quick() { 3 } else { 10 };
+    let t0 = std::time::Instant::now();
+    let mut metrics = None;
+    for _ in 0..reps {
+        let (ret, mt) = s.run(&[]);
+        assert_eq!(ret, warm, "interpreter runs must be deterministic");
+        bb(ret);
+        metrics = Some(mt);
+    }
+    let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
+    let mt = metrics.unwrap();
+    s.stop();
+    (ns, warm, mt.lowered_fns, mt.fused_instrs)
+}
 
 fn main() {
     println!("== E7 / Fig. 9c: AMGmk + page-rank, GPU relative to CPU ==");
@@ -37,4 +124,45 @@ fn main() {
     }
     t.print();
     println!("\nexpected shape (paper §5.3.4): GPU First tracks the manual offload on both.");
+
+    // Interpreter before/after: tree-walk vs the register-file core on
+    // the relax-shaped sweep.
+    let rows = if quick() { 500 } else { 10_000 };
+    let (tree_ns, tree_ret, tree_lowered, _) =
+        interp_leg("constfold,dce,libcres,rpcgen,multiteam", rows);
+    let (core_ns, core_ret, lowered_fns, fused_instrs) =
+        interp_leg("constfold,dce,libcres,rpcgen,multiteam,lower,fuse", rows);
+    assert_eq!(tree_ret, core_ret, "executors must agree on the result");
+    assert_eq!(tree_lowered, 0);
+    assert!(lowered_fns > 0 && fused_instrs > 0);
+    let speedup = tree_ns / core_ns;
+    let mut it = Table::new(
+        "interpreter executors — relax-shaped sweep (wallclock)",
+        &["series", "ns/run", "speedup"],
+    );
+    it.row(&["tree-walk".into(), format!("{tree_ns:.0}"), "1.00x".into()]);
+    it.row(&[
+        "register core (lower+fuse)".into(),
+        format!("{core_ns:.0}"),
+        format!("{speedup:.2}x"),
+    ]);
+    it.print();
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("fig09_relax_interp")),
+        ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
+        ("rows", Json::num(rows as f64)),
+        ("tree_walk_ns", Json::num(tree_ns)),
+        ("register_core_ns", Json::num(core_ns)),
+        ("speedup", Json::num(speedup)),
+        ("lowered_fns", Json::num(lowered_fns as f64)),
+        ("fused_instrs", Json::num(fused_instrs as f64)),
+    ]);
+    println!("\nJSON {report}");
+    // CI's bench-smoke job exports FIG09_JSON=BENCH_fig09.json and
+    // commits the file on main alongside BENCH_fig07.json.
+    if let Ok(path) = std::env::var("FIG09_JSON") {
+        std::fs::write(&path, format!("{report}\n")).expect("write bench JSON");
+        println!("wrote {path}");
+    }
 }

@@ -1,13 +1,60 @@
 //! §Perf — L3 hot-path microbenchmarks tracked across the optimization
 //! pass (EXPERIMENTS.md §Perf): RPC round-trip, allocator fast paths,
-//! simulator launch overhead, device-memory access, PJRT execution.
+//! simulator launch overhead, device-memory access, interpreter
+//! executors (tree-walk vs register-core), PJRT execution.
 
 use gpu_first::alloc::{AllocCtx, BalancedAllocator, BalancedConfig, DeviceAllocator};
+use gpu_first::coordinator::{Config, GpuFirstSession};
 use gpu_first::gpu::grid::{Device, LaunchConfig};
 use gpu_first::gpu::memory::{DeviceMemory, MemConfig, GLOBAL_BASE};
+use gpu_first::ir::parser::parse_module;
 use gpu_first::rpc::{ArgMode, HostEnv, RpcArgInfo, RpcClient, RpcServer, WrapperRegistry};
+use gpu_first::transform::PipelineSpec;
 use gpu_first::util::bench::{bb, Bencher};
 use std::sync::Arc;
+
+/// Dispatch-heavy IR (no RPC, no parallel region): the measured cost is
+/// the interpreter's per-instruction overhead, which is exactly what
+/// the register-file lowering attacks.
+const INTERP_SRC: &str = "
+global @data 8192
+
+func @main() -> i64 {
+  %acc = alloca 8
+  store.8 0, %acc
+  for %i = 0 to 512 step 1 {
+    %off = mul %i, 8
+    %p = gep @data, %off
+    %v = mul %i, 7
+    store.8 %v, %p
+    %q = gep @data, %off
+    %r = load.8 %q
+    %a = load.8 %acc
+    %a2 = add %a, %r
+    store.8 %a2, %acc
+  }
+  %sum = load.8 %acc
+  return %sum
+}
+";
+
+/// Benchmark one interpreter executor: compile `INTERP_SRC` under
+/// `passes` and time whole `run()` round trips.
+fn bench_interp(b: &mut Bencher, label: &str, passes: &str) {
+    let mut m = parse_module(INTERP_SRC).unwrap();
+    let mut s = GpuFirstSession::start(Config {
+        mem: MemConfig::small(),
+        teams: 1,
+        threads_per_team: 1,
+        ..Default::default()
+    });
+    s.compile_spec(&mut m, &PipelineSpec::parse(passes).unwrap()).unwrap();
+    s.load(m);
+    b.bench(label, || {
+        bb(s.run(&[]).0);
+    });
+    s.stop();
+}
 
 fn main() {
     println!("== §Perf: L3 hot paths ==");
@@ -43,6 +90,25 @@ fn main() {
     b.bench("launch 64x128 empty", || {
         bb(dev.launch(LaunchConfig::new(64, 128), |_| {}));
     });
+
+    // Interpreter executors over the same 512-iteration program: the
+    // tree-walk baseline against the slot-resolved register core, with
+    // and without superinstruction fusion.
+    bench_interp(
+        &mut b,
+        "interp tree-walk 512-iter loop",
+        "constfold,dce,libcres,rpcgen,multiteam",
+    );
+    bench_interp(
+        &mut b,
+        "interp register-core 512-iter loop",
+        "constfold,dce,libcres,rpcgen,multiteam,lower",
+    );
+    bench_interp(
+        &mut b,
+        "interp register-core+fuse 512-iter loop",
+        "constfold,dce,libcres,rpcgen,multiteam,lower,fuse",
+    );
 
     // Real RPC round-trip (protocol cost without the modeled wait).
     let mem = Arc::new(DeviceMemory::new(MemConfig::small()));

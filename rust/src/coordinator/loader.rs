@@ -156,6 +156,8 @@ impl GpuFirstSession {
             unresolved_calls: env.unresolved_calls.load(Ordering::Relaxed),
             folded_formats: self.report.as_ref().map_or(0, |r| r.constfold.count()),
             rpc_rw_intents: self.report.as_ref().map_or(0, |r| r.rpc.rw_buffer_intents),
+            lowered_fns: self.report.as_ref().map_or(0, |r| r.lower.lowered_fns),
+            fused_instrs: self.report.as_ref().map_or(0, |r| r.fuse.pairs),
             rpc_round_trip: obs.rpc_round_trip.snapshot(),
             rpc_per_callee,
             launch_queue_wait: obs.launch_queue_wait.snapshot(),
@@ -239,10 +241,16 @@ func @main() -> i64 {
         assert_eq!(session.rpc_served(), 1);
         // The pass manager's timings ride into RunMetrics.
         let names: Vec<&str> = metrics.passes.iter().map(|t| t.pass.as_str()).collect();
-        assert_eq!(names, vec!["constfold", "libcres", "rpcgen", "multiteam"]);
+        assert_eq!(
+            names,
+            vec!["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse"]
+        );
         assert!(metrics.compile_ns() > 0.0);
         assert_eq!(metrics.unresolved_calls, 0);
         assert_eq!(metrics.folded_formats, 0, "direct @fmt: nothing to fold");
+        // The default pipeline ran `main` on the register core.
+        assert_eq!(metrics.lowered_fns, 1);
+        assert!(metrics.summary().contains("register_core fns=1"));
         session.stop();
     }
 

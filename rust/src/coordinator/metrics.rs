@@ -40,6 +40,11 @@ pub struct RunMetrics {
     /// (copy both ways) buffer intent — the fig07 format corpus asserts
     /// the folded pipeline yields strictly fewer of these.
     pub rpc_rw_intents: u64,
+    /// Functions the `lower` pass compiled to the register-file form
+    /// (the executor the interpreter prefers); 0 = tree-walk run.
+    pub lowered_fns: u64,
+    /// Superinstructions the `fuse` pass created across the module.
+    pub fused_instrs: u64,
     /// Client-measured RPC round-trip latency over every callee
     /// (claim → doorbell; the flat `real_ns` sum decomposed into a
     /// log-bucketed histogram with percentiles).
@@ -116,6 +121,12 @@ impl RunMetrics {
         if self.rpc_rw_intents > 0 {
             s.push_str(&format!(" rw_intents={}", self.rpc_rw_intents));
         }
+        if self.lowered_fns > 0 {
+            s.push_str(&format!(
+                " register_core fns={} fused={}",
+                self.lowered_fns, self.fused_instrs
+            ));
+        }
         if let Some(e) = &self.rpc_engine {
             s.push(' ');
             s.push_str(&e.summary());
@@ -133,6 +144,9 @@ impl RunMetrics {
         }
         if self.host_io.batched_writes > 0 {
             s.push_str(&format!(" batched_writes={}", self.host_io.batched_writes));
+        }
+        if self.host_io.batched_reads > 0 {
+            s.push_str(&format!(" batched_reads={}", self.host_io.batched_reads));
         }
         if self.host_io.poison_recoveries > 0 {
             s.push_str(&format!(" poison_recoveries={}", self.host_io.poison_recoveries));
@@ -185,7 +199,10 @@ impl RunMetrics {
             ("unresolved_calls", Json::num(self.unresolved_calls as f64)),
             ("folded_formats", Json::num(self.folded_formats as f64)),
             ("rpc_rw_intents", Json::num(self.rpc_rw_intents as f64)),
+            ("lowered_fns", Json::num(self.lowered_fns as f64)),
+            ("fused_instrs", Json::num(self.fused_instrs as f64)),
             ("batched_writes", Json::num(self.host_io.batched_writes as f64)),
+            ("batched_reads", Json::num(self.host_io.batched_reads as f64)),
             ("poison_recoveries", Json::num(self.host_io.poison_recoveries as f64)),
             ("passes", Json::Arr(passes)),
             (
@@ -245,6 +262,8 @@ mod tests {
             unresolved_calls: 0,
             folded_formats: 0,
             rpc_rw_intents: 0,
+            lowered_fns: 0,
+            fused_instrs: 0,
             rpc_round_trip: HistSnapshot::default(),
             rpc_per_callee: Vec::new(),
             launch_queue_wait: HistSnapshot::default(),
@@ -298,6 +317,7 @@ mod tests {
                 content_contention: 5,
                 poison_recoveries: 2,
                 batched_writes: 9,
+                batched_reads: 4,
             },
             ..base()
         };
@@ -309,6 +329,7 @@ mod tests {
         assert!(s.contains("host_io shards=4 opens=7+1 contention=3"), "{s}");
         assert!(s.contains("files_contention=5/16shards"), "content-map counters: {s}");
         assert!(s.contains("batched_writes=9"), "fwrite batch counter surfaces: {s}");
+        assert!(s.contains("batched_reads=4"), "fread batch counter surfaces: {s}");
         assert!(s.contains("poison_recoveries=2"), "recoveries surface: {s}");
         assert_eq!(m.rpc_engine.unwrap().launch_latency_ns(), 1000.0);
     }
@@ -323,10 +344,24 @@ mod tests {
         assert!(j.contains("\"folded_formats\":2"), "{j}");
         assert!(j.contains("\"rpc_rw_intents\":3"), "{j}");
         assert!(j.contains("\"batched_writes\":0"), "{j}");
+        assert!(j.contains("\"batched_reads\":0"), "{j}");
         // Quiet runs keep the summary quiet.
         let quiet = base().summary();
         assert!(!quiet.contains("folded_formats"), "{quiet}");
         assert!(!quiet.contains("poison_recoveries"), "{quiet}");
+    }
+
+    #[test]
+    fn summary_and_json_carry_register_core_counters() {
+        let m = RunMetrics { lowered_fns: 3, fused_instrs: 17, ..base() };
+        let s = m.summary();
+        assert!(s.contains("register_core fns=3 fused=17"), "{s}");
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"lowered_fns\":3"), "{j}");
+        assert!(j.contains("\"fused_instrs\":17"), "{j}");
+        // A tree-walk run (nothing lowered) stays quiet.
+        let quiet = base().summary();
+        assert!(!quiet.contains("register_core"), "{quiet}");
     }
 
     #[test]

@@ -14,7 +14,22 @@
 //!   descriptors, resolving `MultiRef` candidates by pointer comparison
 //!   and `DynRef` via the allocator's `_FindObj` lookup, then block on the
 //!   mailbox.
+//!
+//! Two executors share this model. The historical **tree-walk** path
+//! resolves operands through `HashMap<String, Value>` frames; the
+//! **register-file** path executes the [`lowered`] form the `lower`
+//! pass produces — `Vec<Value>` frames indexed by slot, constants
+//! fetched from a pool resolved once at load, superinstructions from
+//! the `fuse` pass dispatched in one step. A function runs on the
+//! register core whenever [`Module::lowered`] has its body (the default
+//! pipeline); otherwise it tree-walks. Both paths charge identical
+//! instruction/flop/memory counters — a superinstruction charges both
+//! of its component instructions — so modeled device time is the same,
+//! and `tests/lowering.rs` holds the outputs equal.
 
+use super::lowered::{
+    low_body_has_barrier, LowExpr, LowInstr, LowOp, LowRpcArg, LoweredFunction, PoolConst,
+};
 use super::*;
 use crate::gpu::grid::{Device, GridCtx, LaunchConfig};
 use crate::gpu::stats::{LaunchStats, Pattern};
@@ -61,6 +76,11 @@ pub struct ProgramEnv {
     /// Kernel-region name -> launch id used in the launch RPC.
     pub region_ids: HashMap<String, u64>,
     region_names: Vec<String>,
+    /// Per-function constant pools of the lowered form, resolved at load
+    /// time (`PoolConst::Global` entries become device base addresses).
+    /// Keyed like [`Module::lowered`]; empty when the `lower` pass did
+    /// not run.
+    pub pools: HashMap<String, Vec<Value>>,
     /// Captures for the in-flight kernel launch (single RPC slot ⇒ one).
     pending: Mutex<Option<PendingLaunch>>,
     stack_bump: AtomicU64,
@@ -165,6 +185,27 @@ impl ProgramEnv {
         // dispatch agrees with the compile-time classification even for
         // modules loaded without the full pipeline.
         let resolution = resolve_module(&module);
+        // Resolve each lowered function's constant pool once, here, so
+        // the register-file executor never touches the globals map (or
+        // any other string-keyed table) on the hot path.
+        let mut pools = HashMap::new();
+        for (name, lf) in &module.lowered {
+            let pool: Vec<Value> = lf
+                .pool
+                .iter()
+                .map(|c| match c {
+                    PoolConst::I(i) => Value::I(*i),
+                    PoolConst::F(f) => Value::F(*f),
+                    PoolConst::Global(g) => Value::I(
+                        globals
+                            .get(g)
+                            .unwrap_or_else(|| panic!("unknown global @{g} in pool"))
+                            .0 as i64,
+                    ),
+                })
+                .collect();
+            pools.insert(name.clone(), pool);
+        }
         let env = Arc::new(Self {
             module,
             device,
@@ -176,6 +217,7 @@ impl ProgramEnv {
             launch_session: NEXT_LAUNCH_SESSION.fetch_add(1, Ordering::Relaxed),
             region_ids,
             region_names,
+            pools,
             pending: Mutex::new(None),
             stack_bump: AtomicU64::new(0),
             stack_slots,
@@ -263,16 +305,34 @@ impl ProgramEnv {
         cfg: LaunchConfig,
     ) -> LaunchStats {
         let f = &self.module.functions[region];
-        let has_barrier = body_has_barrier(&f.body);
+        // Kernel threads run the register core when the region was
+        // lowered (the default pipeline); else they tree-walk.
+        let lowered = self.module.lowered.get(region);
+        let has_barrier = match lowered {
+            Some(lf) => low_body_has_barrier(&lf.body),
+            None => body_has_barrier(&f.body),
+        };
         let body = |g: &mut GridCtx| {
             let mut interp = Interp::new(self, g);
-            let bindings: Vec<(String, Value)> = f
-                .params
-                .iter()
-                .zip(values.iter())
-                .map(|(p, v)| (p.name.clone(), *v))
-                .collect();
-            interp.exec_function_body(&f.body, bindings);
+            match lowered {
+                Some(lf) => {
+                    let pool = self.pools[region].as_slice();
+                    let mut regs = vec![Value::I(0); lf.nslots as usize];
+                    for (slot, v) in lf.param_slots.iter().zip(values.iter()) {
+                        regs[*slot as usize] = *v;
+                    }
+                    interp.enter_lowered(pool, &mut regs, &lf.body);
+                }
+                None => {
+                    let bindings: Vec<(String, Value)> = f
+                        .params
+                        .iter()
+                        .zip(values.iter())
+                        .map(|(p, v)| (p.name.clone(), *v))
+                        .collect();
+                    interp.exec_function_body(&f.body, bindings);
+                }
+            }
         };
         let obs = &self.device.mem.obs;
         let span = obs.spans.start();
@@ -358,7 +418,15 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
     }
 
     pub fn call_function(&mut self, name: &str, args: Vec<Value>) -> Option<Value> {
-        let Some(f) = self.env.module.functions.get(name) else {
+        // Prefer the register-file form: slot-indexed frame, pool
+        // constants, zero string hashing for the whole call.
+        let env = self.env;
+        if let Some(lf) = env.module.lowered.get(name) {
+            assert_eq!(lf.param_slots.len(), args.len(), "arity mismatch calling {name}");
+            let pool = env.pools.get(name).map_or(&[][..], |p| p.as_slice());
+            return self.call_lowered(lf, pool, args);
+        }
+        let Some(f) = env.module.functions.get(name) else {
             // Undefined callee: dispatch through the compile-time
             // resolution table instead of panicking on an unknown name.
             return self.external_call(name, &args);
@@ -439,27 +507,11 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
             Instr::Store { addr, val, width } => {
                 let a = self.eval(addr).as_addr();
                 let v = self.eval(val);
-                self.g.mem(*width as u64, Pattern::Strided);
-                match (v, width) {
-                    (Value::F(f), 8) => self.env.device.mem.write_f64(a, f),
-                    (Value::F(f), 4) => self.env.device.mem.write_f32(a, f as f32),
-                    (v, 8) => self.env.device.mem.write_i64(a, v.as_i()),
-                    (v, 4) => self.env.device.mem.write_u32(a, v.as_i() as u32),
-                    (v, 1) => self.env.device.mem.write_u8(a, v.as_i() as u8),
-                    (_, w) => panic!("bad store width {w}"),
-                }
+                self.mem_store(a, v, *width);
             }
             Instr::Load { dst, addr, width, ty } => {
                 let a = self.eval(addr).as_addr();
-                self.g.mem(*width as u64, Pattern::Strided);
-                let v = match (ty, width) {
-                    (Ty::F64, 8) => Value::F(self.env.device.mem.read_f64(a)),
-                    (Ty::F64, 4) => Value::F(self.env.device.mem.read_f32(a) as f64),
-                    (_, 8) => Value::I(self.env.device.mem.read_i64(a)),
-                    (_, 4) => Value::I(self.env.device.mem.read_u32(a) as i32 as i64),
-                    (_, 1) => Value::I(self.env.device.mem.read_u8(a) as i64),
-                    (_, w) => panic!("bad load width {w}"),
-                };
+                let v = self.mem_load(a, *width, *ty);
                 self.set(dst, v);
             }
             Instr::Call { dst, callee, args } => {
@@ -763,14 +815,19 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
                 }
             }
         }
-        // Lane selection by team id: threads of different teams use
-        // different arena lanes and only serialize when the arena is
-        // narrower than the set of concurrently-calling teams.
+        self.dispatch_rpc(callee_id, &info)
+    }
+
+    /// Shared RPC tail of both executors: lane selection by team id —
+    /// threads of different teams use different arena lanes and only
+    /// serialize when the arena is narrower than the set of
+    /// concurrently-calling teams.
+    fn dispatch_rpc(&mut self, callee_id: u64, info: &RpcArgInfo) -> i64 {
         let obs = &self.env.device.mem.obs;
         let span = obs.spans.start();
         let mut client =
             RpcClient::for_team(&self.env.device.mem, self.env.device.arena(), self.g.team_id);
-        let ret = client.call(callee_id, &info, Some(&mut self.g.counters));
+        let ret = client.call(callee_id, info, Some(&mut self.g.counters));
         if span.is_some() {
             // Spans are enabled: the name lookup is off the default path.
             let label = self
@@ -787,6 +844,13 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
     fn kernel_launch(&mut self, region: &str, num_threads: Option<&Operand>) {
         let f = &self.env.module.functions[region];
         let requested = num_threads.map(|o| self.eval(o).as_i() as usize);
+        let values: Vec<Value> = f.params.iter().map(|p| self.get(&p.name)).collect();
+        self.kernel_launch_with(region, values, requested);
+    }
+
+    /// Shared kernel-launch tail of both executors: grid selection,
+    /// pending-capture hand-off, and the launch RPC itself.
+    fn kernel_launch_with(&mut self, region: &str, values: Vec<Value>, requested: Option<usize>) {
         let cfg = match requested {
             Some(n) if n > 0 => {
                 let per_team = n.min(self.env.default_team_size);
@@ -794,11 +858,6 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
             }
             _ => LaunchConfig::new(self.env.default_teams, self.env.default_team_size),
         };
-        let values: Vec<Value> = f
-            .params
-            .iter()
-            .map(|p| self.get(&p.name))
-            .collect();
         *self.env.pending.lock().unwrap() = Some(PendingLaunch {
             region: region.to_string(),
             values,
@@ -834,6 +893,410 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
             obs.spans.finish(span, &name, crate::obs::SpanKind::Interp, self.g.team_id as u64);
         }
         assert_eq!(ret, 0, "kernel launch RPC failed for {region}");
+    }
+
+    /// Width-dispatched device store shared by both executors (the
+    /// memory-traffic counter charge included).
+    fn mem_store(&mut self, a: u64, v: Value, width: Width) {
+        self.g.mem(width as u64, Pattern::Strided);
+        match (v, width) {
+            (Value::F(f), 8) => self.env.device.mem.write_f64(a, f),
+            (Value::F(f), 4) => self.env.device.mem.write_f32(a, f as f32),
+            (v, 8) => self.env.device.mem.write_i64(a, v.as_i()),
+            (v, 4) => self.env.device.mem.write_u32(a, v.as_i() as u32),
+            (v, 1) => self.env.device.mem.write_u8(a, v.as_i() as u8),
+            (_, w) => panic!("bad store width {w}"),
+        }
+    }
+
+    /// Width/type-dispatched device load shared by both executors.
+    fn mem_load(&mut self, a: u64, width: Width, ty: Ty) -> Value {
+        self.g.mem(width as u64, Pattern::Strided);
+        match (ty, width) {
+            (Ty::F64, 8) => Value::F(self.env.device.mem.read_f64(a)),
+            (Ty::F64, 4) => Value::F(self.env.device.mem.read_f32(a) as f64),
+            (_, 8) => Value::I(self.env.device.mem.read_i64(a)),
+            (_, 4) => Value::I(self.env.device.mem.read_u32(a) as i32 as i64),
+            (_, 1) => Value::I(self.env.device.mem.read_u8(a) as i64),
+            (_, w) => panic!("bad load width {w}"),
+        }
+    }
+
+    // ----- the register-file executor -------------------------------
+
+    /// Call a lowered function: allocate its register file, bind
+    /// parameters by slot, and run the body.
+    fn call_lowered(
+        &mut self,
+        lf: &LoweredFunction,
+        pool: &[Value],
+        args: Vec<Value>,
+    ) -> Option<Value> {
+        let mut regs = vec![Value::I(0); lf.nslots as usize];
+        for (slot, v) in lf.param_slots.iter().zip(args) {
+            regs[*slot as usize] = v;
+        }
+        self.enter_lowered(pool, &mut regs, &lf.body)
+    }
+
+    /// The lowered twin of [`Self::exec_function_body`]: same call-depth
+    /// and stack-pointer bookkeeping, but the frame is the caller-built
+    /// register file instead of a fresh `HashMap`.
+    fn enter_lowered(
+        &mut self,
+        pool: &[Value],
+        regs: &mut [Value],
+        body: &[LowInstr],
+    ) -> Option<Value> {
+        self.depth += 1;
+        assert!(self.depth < 128, "interpreter call depth exceeded");
+        let saved_sp = self.sp;
+        let flow = self.exec_low_body(pool, regs, body);
+        self.sp = saved_sp;
+        self.depth -= 1;
+        match flow {
+            Flow::Returned(v) => v,
+            Flow::Normal => None,
+        }
+    }
+
+    fn exec_low_body(&mut self, pool: &[Value], regs: &mut [Value], body: &[LowInstr]) -> Flow {
+        for ins in body {
+            match self.exec_low_instr(pool, regs, ins) {
+                Flow::Normal => {}
+                ret => return ret,
+            }
+        }
+        Flow::Normal
+    }
+
+    /// One lowered instruction. Counter discipline mirrors
+    /// [`Self::exec_instr`] exactly: one `int_ops` charge per
+    /// instruction up front, and each superinstruction charges its
+    /// *second* component too, so fused and unfused runs model the same
+    /// device time.
+    fn exec_low_instr(&mut self, pool: &[Value], regs: &mut [Value], ins: &LowInstr) -> Flow {
+        self.g.counters.int_ops += 1;
+        match ins {
+            LowInstr::Assign { dst, expr } => {
+                let v = self.eval_low_expr(pool, regs, expr);
+                regs[*dst as usize] = v;
+            }
+            LowInstr::Alloca { dst, size } => {
+                let addr = crate::alloc::align_up(self.sp, 16);
+                assert!(addr + size <= self.stack_end, "device stack overflow");
+                self.sp = addr + size;
+                regs[*dst as usize] = Value::I(addr as i64);
+            }
+            LowInstr::Store { addr, val, width } => {
+                let a = lv(pool, regs, *addr).as_addr();
+                let v = lv(pool, regs, *val);
+                self.mem_store(a, v, *width);
+            }
+            LowInstr::Load { dst, addr, width, ty } => {
+                let a = lv(pool, regs, *addr).as_addr();
+                let v = self.mem_load(a, *width, *ty);
+                regs[*dst as usize] = v;
+            }
+            LowInstr::Call { dst, callee, args } => {
+                let vals: Vec<Value> = args.iter().map(|&a| lv(pool, regs, a)).collect();
+                let ret = self.call_function(callee, vals);
+                if let Some(d) = dst {
+                    regs[*d as usize] = ret.unwrap_or(Value::I(0));
+                }
+            }
+            LowInstr::Intrinsic { dst, name, args } => {
+                let vals: Vec<Value> = args.iter().map(|&a| lv(pool, regs, a)).collect();
+                let ret = match self.env.resolution.class_of(name) {
+                    Some(SymbolClass::Device(dev)) => self.device_fn(dev, &vals),
+                    Some(SymbolClass::HostRpc(_)) => panic!(
+                        "intrinsic {name} resolves host-RPC, not device-native \
+                         (malformed module: verify() would reject it)"
+                    ),
+                    Some(SymbolClass::Unresolved) | None => {
+                        self.env.unresolved_trap(name);
+                        Value::I(0)
+                    }
+                };
+                if let Some(d) = dst {
+                    regs[*d as usize] = ret;
+                }
+            }
+            LowInstr::RpcCall { dst, callee_id, args } => {
+                let ret = self.issue_rpc_lowered(pool, regs, *callee_id, args);
+                if let Some(d) = dst {
+                    regs[*d as usize] = Value::I(ret);
+                }
+            }
+            LowInstr::KernelLaunch { region, arg, params } => {
+                let values: Vec<Value> = params.iter().map(|&p| lv(pool, regs, p)).collect();
+                let requested = arg.as_ref().map(|&o| lv(pool, regs, o).as_i() as usize);
+                self.kernel_launch_with(region, values, requested);
+            }
+            LowInstr::If { cond, then_body, else_body } => {
+                let c = lv(pool, regs, *cond).truthy();
+                let flow = if c {
+                    self.exec_low_body(pool, regs, then_body)
+                } else {
+                    self.exec_low_body(pool, regs, else_body)
+                };
+                if let Flow::Returned(_) = flow {
+                    return flow;
+                }
+            }
+            LowInstr::While { cond_var, cond, body } => loop {
+                if let Flow::Returned(v) = self.exec_low_body(pool, regs, cond) {
+                    return Flow::Returned(v);
+                }
+                if !regs[*cond_var as usize].truthy() {
+                    break;
+                }
+                if let Flow::Returned(v) = self.exec_low_body(pool, regs, body) {
+                    return Flow::Returned(v);
+                }
+            },
+            LowInstr::For { var, lo, hi, step, schedule, body } => {
+                let lo = lv(pool, regs, *lo).as_i();
+                let hi = lv(pool, regs, *hi).as_i();
+                let step = lv(pool, regs, *step).as_i().max(1);
+                let (start, stride) = match schedule {
+                    Schedule::Seq => (lo, step),
+                    Schedule::Team => {
+                        let t = self.g.thread_id as i64;
+                        let n = self.g.cfg.threads_per_team as i64;
+                        (lo + t * step, n * step)
+                    }
+                    Schedule::Grid => {
+                        let t = self.g.global_tid() as i64;
+                        let n = self.g.num_threads_global() as i64;
+                        (lo + t * step, n * step)
+                    }
+                };
+                let mut i = start;
+                while i < hi {
+                    regs[*var as usize] = Value::I(i);
+                    if let Flow::Returned(v) = self.exec_low_body(pool, regs, body) {
+                        return Flow::Returned(v);
+                    }
+                    i += stride;
+                }
+            }
+            LowInstr::Parallel { num_threads, body } => {
+                let n = num_threads
+                    .as_ref()
+                    .map(|&o| lv(pool, regs, o).as_i() as usize)
+                    .unwrap_or(128)
+                    .clamp(1, 1024);
+                // The register-file analogue of the tree-walk frame
+                // snapshot: every thread starts from a copy of the
+                // current registers (verify() guarantees the body only
+                // reads names in scope, i.e. slots of this function).
+                let snapshot: Vec<Value> = regs.to_vec();
+                let env = self.env;
+                let has_barrier = low_body_has_barrier(body);
+                let cfg = LaunchConfig::new(1, n);
+                let runner = |g: &mut GridCtx| {
+                    let mut interp = Interp::new(env, g);
+                    let mut thread_regs = snapshot.clone();
+                    interp.enter_lowered(pool, &mut thread_regs, body);
+                };
+                let obs = &env.device.mem.obs;
+                let span = obs.spans.start();
+                let stats = if has_barrier {
+                    env.device.launch_coop(cfg, runner)
+                } else {
+                    env.device.launch(cfg, runner)
+                };
+                obs.spans.finish(
+                    span,
+                    "parallel-region",
+                    crate::obs::SpanKind::Interp,
+                    self.g.team_id as u64,
+                );
+                let mut agg = env.kernel_stats.lock().unwrap();
+                *agg = agg.add(&stats);
+            }
+            LowInstr::Barrier => {
+                if self.g.num_threads_global() > 1 {
+                    self.g.barrier_global();
+                } else {
+                    self.g.counters.barriers_global += 1;
+                }
+            }
+            LowInstr::Return(v) => {
+                let val = v.as_ref().map(|&o| lv(pool, regs, o));
+                return Flow::Returned(val);
+            }
+            LowInstr::CmpIf { tmp, op, a, b, then_body, else_body } => {
+                let x = lv(pool, regs, *a);
+                let y = lv(pool, regs, *b);
+                if op.is_float() {
+                    self.g.counters.flops_f64 += 1;
+                } else {
+                    self.g.counters.int_ops += 1;
+                }
+                let c = eval_bin(*op, x, y);
+                regs[*tmp as usize] = c;
+                // The fused branch still charges its instruction slot.
+                self.g.counters.int_ops += 1;
+                let flow = if c.truthy() {
+                    self.exec_low_body(pool, regs, then_body)
+                } else {
+                    self.exec_low_body(pool, regs, else_body)
+                };
+                if let Flow::Returned(_) = flow {
+                    return flow;
+                }
+            }
+            LowInstr::GepLoad { tmp, base, off, dst, width, ty } => {
+                let b = lv(pool, regs, *base).as_i();
+                let o = lv(pool, regs, *off).as_i();
+                let addr = Value::I(b + o);
+                regs[*tmp as usize] = addr;
+                // The fused load's instruction charge.
+                self.g.counters.int_ops += 1;
+                let v = self.mem_load(addr.as_addr(), *width, *ty);
+                regs[*dst as usize] = v;
+            }
+            LowInstr::GepStore { tmp, base, off, val, width } => {
+                let b = lv(pool, regs, *base).as_i();
+                let o = lv(pool, regs, *off).as_i();
+                let addr = Value::I(b + o);
+                regs[*tmp as usize] = addr;
+                // The fused store's instruction charge. `val` is read
+                // *after* tmp is written, matching the unfused order
+                // (the assign retires before the store evaluates).
+                self.g.counters.int_ops += 1;
+                let v = lv(pool, regs, *val);
+                self.mem_store(addr.as_addr(), v, *width);
+            }
+            LowInstr::BinStore { tmp, op, a, b, addr, width } => {
+                let x = lv(pool, regs, *a);
+                let y = lv(pool, regs, *b);
+                if op.is_float() {
+                    self.g.counters.flops_f64 += 1;
+                } else {
+                    self.g.counters.int_ops += 1;
+                }
+                let v = eval_bin(*op, x, y);
+                regs[*tmp as usize] = v;
+                // The fused store's instruction charge; the address is
+                // evaluated after tmp is written (unfused order).
+                self.g.counters.int_ops += 1;
+                let a_addr = lv(pool, regs, *addr).as_addr();
+                self.mem_store(a_addr, v, *width);
+            }
+        }
+        Flow::Normal
+    }
+
+    /// The lowered twin of [`Self::eval_expr`]: identical flop/int
+    /// charges, operand fetches are two array indexes.
+    fn eval_low_expr(&mut self, pool: &[Value], regs: &[Value], e: &LowExpr) -> Value {
+        match e {
+            LowExpr::Op(o) => lv(pool, regs, *o),
+            LowExpr::Bin(op, a, b) => {
+                let x = lv(pool, regs, *a);
+                let y = lv(pool, regs, *b);
+                if op.is_float() {
+                    self.g.counters.flops_f64 += 1;
+                } else {
+                    self.g.counters.int_ops += 1;
+                }
+                eval_bin(*op, x, y)
+            }
+            LowExpr::Gep(base, off) => {
+                Value::I(lv(pool, regs, *base).as_i() + lv(pool, regs, *off).as_i())
+            }
+            LowExpr::Select(c, a, b) => {
+                if lv(pool, regs, *c).truthy() {
+                    lv(pool, regs, *a)
+                } else {
+                    lv(pool, regs, *b)
+                }
+            }
+            LowExpr::SiToFp(a) => Value::F(lv(pool, regs, *a).as_i() as f64),
+            LowExpr::FpToSi(a) => Value::I(lv(pool, regs, *a).as_f() as i64),
+            LowExpr::Tid => Value::I(self.g.global_tid() as i64),
+            LowExpr::NumThreads => Value::I(self.g.num_threads_global() as i64),
+            LowExpr::Sqrt(a) => {
+                self.g.counters.flops_f64 += 4;
+                Value::F(lv(pool, regs, *a).as_f().sqrt())
+            }
+            LowExpr::Exp(a) => {
+                self.g.counters.flops_f64 += 8;
+                Value::F(lv(pool, regs, *a).as_f().exp())
+            }
+            LowExpr::Log(a) => {
+                self.g.counters.flops_f64 += 8;
+                Value::F(lv(pool, regs, *a).as_f().ln())
+            }
+        }
+    }
+
+    /// The lowered twin of [`Self::issue_rpc`]: identical marshaling
+    /// (MultiRef candidate matching, DynRef `_FindObj` fallback), then
+    /// the shared [`Self::dispatch_rpc`] tail.
+    fn issue_rpc_lowered(
+        &mut self,
+        pool: &[Value],
+        regs: &[Value],
+        callee_id: u64,
+        specs: &[LowRpcArg],
+    ) -> i64 {
+        let mut info = RpcArgInfo::with_capacity(specs.len());
+        for spec in specs {
+            match spec {
+                LowRpcArg::Val(op) => {
+                    let bits = match lv(pool, regs, *op) {
+                        Value::I(i) => i as u64,
+                        Value::F(f) => f.to_bits(),
+                    };
+                    info.add_val(bits);
+                }
+                LowRpcArg::Ref { ptr, mode, obj_size, offset } => {
+                    let p = lv(pool, regs, *ptr).as_addr();
+                    info.add_ref(p, *mode, *obj_size, *offset);
+                }
+                LowRpcArg::MultiRef { ptr, candidates } => {
+                    let p = lv(pool, regs, *ptr).as_addr();
+                    let mut matched = false;
+                    for (cand, mode, size) in candidates {
+                        let base = lv(pool, regs, *cand).as_addr();
+                        if p >= base && p < base + size.max(&1) {
+                            info.add_ref(p, *mode, *size, p - base);
+                            matched = true;
+                            break;
+                        }
+                    }
+                    if !matched {
+                        info.add_val(p);
+                    }
+                }
+                LowRpcArg::DynRef { ptr, mode } => {
+                    let p = lv(pool, regs, *ptr).as_addr();
+                    match self.env.find_object(p) {
+                        Some((base, size)) => {
+                            info.add_ref(p, *mode, size, p - base);
+                        }
+                        None => {
+                            info.add_val(p);
+                        }
+                    }
+                }
+            }
+        }
+        self.dispatch_rpc(callee_id, &info)
+    }
+}
+
+/// Lowered-operand fetch: a slot read or a pool read — two array
+/// indexes, no string hashing (the point of the register-file core).
+#[inline(always)]
+fn lv(pool: &[Value], regs: &[Value], op: LowOp) -> Value {
+    match op {
+        LowOp::Slot(s) => regs[s as usize],
+        LowOp::Pool(p) => pool[p as usize],
     }
 }
 
@@ -1131,6 +1594,114 @@ func @main() -> i64 {
         env.host.put_file("input.txt", b"30 12");
         let (ret, _) = env.run_main(&[]);
         assert_eq!(ret, (30 + 12) * 2);
+        server.stop();
+    }
+
+    /// A sequential corpus that exercises every fusion kind plus calls,
+    /// loops, floats and intrinsics — deterministic counters, so the
+    /// tree-walk and register-file executors must agree *exactly*.
+    const EQUIV_SRC: &str = r#"
+global @acc 800
+
+func @step(%x: i64) -> i64 {
+  %d = mul %x, 2
+  return %d
+}
+
+func @main() -> i64 {
+  %sum = alloca 8
+  store.8 0, %sum
+  for %i = 0 to 100 step 1 {
+    %off = mul %i, 8
+    %p = gep @acc, %off
+    %v = call step(%i)
+    store.8 %v, %p
+    %q = gep @acc, %off
+    %w = load.8 %q
+    %s = load.8 %sum
+    %s2 = add %s, %w
+    store.8 %s2, %sum
+  }
+  %c = lt 1, 2
+  if %c {
+    %f = sitofp 9
+    %r = sqrt %f
+  }
+  %total = load.8 %sum
+  return %total
+}
+"#;
+
+    #[test]
+    fn register_core_matches_tree_walk_exactly() {
+        let lowered = crate::transform::CompileOptions::default();
+        let (env, server) = setup(EQUIV_SRC, lowered);
+        assert!(env.module.lowered.contains_key("main"), "default pipeline lowers");
+        assert!(env.pools.contains_key("main"), "pool resolved at load");
+        assert!(env.module.lowered["main"].fused > 0, "fusable corpus fused");
+        let (reg_ret, reg_stats) = env.run_main(&[]);
+        server.stop();
+
+        let tree = crate::transform::CompileOptions {
+            lower: false,
+            fuse: false,
+            ..Default::default()
+        };
+        let (env2, server2) = setup(EQUIV_SRC, tree);
+        assert!(env2.module.lowered.is_empty(), "no-lower leg stays tree-walk");
+        let (tree_ret, tree_stats) = env2.run_main(&[]);
+        server2.stop();
+
+        assert_eq!(reg_ret, 2 * (99 * 100 / 2));
+        assert_eq!(reg_ret, tree_ret, "executors must agree on the result");
+        // Counter discipline is mirrored exactly (superinstructions
+        // charge both components), so modeled work is identical too.
+        assert_eq!(reg_stats.int_ops, tree_stats.int_ops, "int-op parity");
+        assert_eq!(reg_stats.flops_f64, tree_stats.flops_f64, "flop parity");
+        assert_eq!(
+            reg_stats.bytes_strided, tree_stats.bytes_strided,
+            "memory-traffic parity"
+        );
+    }
+
+    #[test]
+    fn fusion_off_still_runs_the_register_core() {
+        let opts = crate::transform::CompileOptions { fuse: false, ..Default::default() };
+        let (env, server) = setup(EQUIV_SRC, opts);
+        assert_eq!(env.module.lowered["main"].fused, 0);
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 2 * (99 * 100 / 2));
+        server.stop();
+    }
+
+    #[test]
+    fn lowered_parallel_region_and_launch_resolve_slots() {
+        // The multiteam pass extracts the region *before* lowering, so
+        // the launch site carries params pre-resolved to caller slots
+        // and the region itself runs on the register core per-thread.
+        let src = r#"
+global @out 2048
+
+func @main() -> i64 {
+  %n = 256
+  parallel num_threads(64) {
+    for.team %i = 0 to %n step 1 {
+      %off = mul %i, 8
+      %p = gep @out, %off
+      store.8 %i, %p
+    }
+  }
+  %p = gep @out, 2040
+  %r = load.8 %p
+  return %r
+}
+"#;
+        let (env, server) = setup(src, crate::transform::CompileOptions::default());
+        // Both main and the extracted region are lowered.
+        assert_eq!(env.module.lowered.len(), env.module.functions.len());
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 255);
+        assert_eq!(env.kernel_launches.load(Ordering::Relaxed), 1);
         server.stop();
     }
 }

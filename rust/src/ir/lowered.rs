@@ -1,0 +1,202 @@
+//! The lowered (register-file) execution form.
+//!
+//! The tree-walk IR resolves every operand through a
+//! `HashMap<String, Value>` frame — a string hash per operand on the
+//! interpreter's hottest path. The `lower` pass
+//! ([`crate::transform::lower`]) compiles each function into this form
+//! instead: every local gets a dense **register slot** (an index into a
+//! per-call `Vec<Value>`), constants and global addresses are interned
+//! into a per-function **constant pool** resolved once at load time, and
+//! operands become [`LowOp`]s — two machine words, no strings, no
+//! hashing. A follow-on `fuse` pass ([`crate::transform::fuse`]) folds
+//! the common adjacent pairs (cmp+branch, gep+load, gep+store,
+//! bin+store) into superinstructions so one dispatch covers two
+//! instructions.
+//!
+//! The lowered form lives *alongside* the tree IR
+//! ([`super::Module::lowered`]): the printer round-trip and every
+//! tree-level pass are untouched, the interpreter simply prefers the
+//! lowered body when one exists, and the tree-walk path remains the
+//! equivalence baseline (`tests/lowering.rs`). Instruction/flop/memory
+//! counters are mirrored exactly — a superinstruction charges both of
+//! its component instructions — so modeled device time is identical
+//! between the two executors. HetGPU-style portable bytecode is the
+//! intended follow-on consumer of this boundary.
+
+use super::{Schedule, Ty, Width};
+use crate::rpc::ArgMode;
+
+/// A lowered operand: a register slot or a constant-pool index.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LowOp {
+    /// Index into the call frame's register file.
+    Slot(u32),
+    /// Index into the function's constant pool.
+    Pool(u32),
+}
+
+/// One interned constant-pool entry. `Global` is resolved to the
+/// global's device base address when the program is loaded
+/// ([`crate::ir::interp::ProgramEnv`] materializes the pool as
+/// `Vec<Value>` per function).
+#[derive(Debug, Clone, PartialEq)]
+pub enum PoolConst {
+    I(i64),
+    F(f64),
+    /// Address of a module global, by name.
+    Global(String),
+}
+
+/// [`super::Expr`] with slot/pool leaves.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LowExpr {
+    Op(LowOp),
+    Bin(super::BinOp, LowOp, LowOp),
+    Gep(LowOp, LowOp),
+    Select(LowOp, LowOp, LowOp),
+    SiToFp(LowOp),
+    FpToSi(LowOp),
+    Tid,
+    NumThreads,
+    Sqrt(LowOp),
+    Exp(LowOp),
+    Log(LowOp),
+}
+
+/// A lowered RPC argument descriptor. `Ref` offsets are always constant
+/// here — a dynamic-offset `Ref` makes the whole function unlowerable
+/// (it stays on the tree-walk path; the tree-walk arm treats it as
+/// unreachable too). `MultiRef` candidate offsets are dropped: the
+/// runtime recomputes `ptr - base` for the matching candidate exactly
+/// like the tree-walk executor.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LowRpcArg {
+    Val(LowOp),
+    Ref { ptr: LowOp, mode: ArgMode, obj_size: u64, offset: u64 },
+    MultiRef { ptr: LowOp, candidates: Vec<(LowOp, ArgMode, u64)> },
+    DynRef { ptr: LowOp, mode: ArgMode },
+}
+
+/// Lowered instructions: [`super::Instr`] with slot destinations and
+/// [`LowOp`] operands, plus the fused superinstructions the `fuse` pass
+/// produces. Every superinstruction still writes its intermediate
+/// `tmp` slot (a plain `Vec` store) so fusion never needs a liveness
+/// analysis to stay semantics-preserving.
+#[derive(Debug, Clone, PartialEq)]
+pub enum LowInstr {
+    Assign { dst: u32, expr: LowExpr },
+    Alloca { dst: u32, size: u64 },
+    Store { addr: LowOp, val: LowOp, width: Width },
+    Load { dst: u32, addr: LowOp, width: Width, ty: Ty },
+    /// Direct call, dispatched by name (the callee may itself be lowered,
+    /// tree-walk, device-native, or unresolved — `call_function` decides).
+    Call { dst: Option<u32>, callee: String, args: Vec<LowOp> },
+    RpcCall { dst: Option<u32>, callee_id: u64, args: Vec<LowRpcArg> },
+    /// Kernel-split launch with the region's parameters pre-resolved to
+    /// caller slots (the tree-walk executor reads them back by *name*
+    /// from the caller's scope; lowering resolves that lookup once).
+    KernelLaunch { region: String, arg: Option<LowOp>, params: Vec<LowOp> },
+    If { cond: LowOp, then_body: Vec<LowInstr>, else_body: Vec<LowInstr> },
+    While { cond_var: u32, cond: Vec<LowInstr>, body: Vec<LowInstr> },
+    For { var: u32, lo: LowOp, hi: LowOp, step: LowOp, schedule: Schedule, body: Vec<LowInstr> },
+    Parallel { num_threads: Option<LowOp>, body: Vec<LowInstr> },
+    Barrier,
+    Return(Option<LowOp>),
+    Intrinsic { dst: Option<u32>, name: String, args: Vec<LowOp> },
+    /// `tmp = a <op> b; if tmp { then } else { else }` (cmp+br fusion).
+    CmpIf {
+        tmp: u32,
+        op: super::BinOp,
+        a: LowOp,
+        b: LowOp,
+        then_body: Vec<LowInstr>,
+        else_body: Vec<LowInstr>,
+    },
+    /// `tmp = gep base, off; dst = load.<w> tmp`.
+    GepLoad { tmp: u32, base: LowOp, off: LowOp, dst: u32, width: Width, ty: Ty },
+    /// `tmp = gep base, off; store.<w> val, tmp`.
+    GepStore { tmp: u32, base: LowOp, off: LowOp, val: LowOp, width: Width },
+    /// `tmp = a <op> b; store.<w> tmp, addr`.
+    BinStore { tmp: u32, op: super::BinOp, a: LowOp, b: LowOp, addr: LowOp, width: Width },
+}
+
+/// One function compiled to register-file form.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LoweredFunction {
+    /// Register-file size of one call frame.
+    pub nslots: u32,
+    /// Slot of each parameter, in declaration order.
+    pub param_slots: Vec<u32>,
+    /// Interned constants (deduplicated); `PoolConst::Global` entries
+    /// resolve to device addresses at program load.
+    pub pool: Vec<PoolConst>,
+    pub body: Vec<LowInstr>,
+    /// Diagnostics side table: `names[slot]` is the source-level name
+    /// the slot was assigned for (`--explain` and the lowered printer
+    /// read it; execution never does).
+    pub names: Vec<String>,
+    /// Superinstructions the `fuse` pass created in this function.
+    pub fused: u32,
+}
+
+/// Depth-first visit of every lowered instruction, recursing into
+/// nested bodies (including superinstruction branch bodies).
+pub fn walk_low(body: &[LowInstr], f: &mut impl FnMut(&LowInstr)) {
+    for ins in body {
+        f(ins);
+        match ins {
+            LowInstr::If { then_body, else_body, .. }
+            | LowInstr::CmpIf { then_body, else_body, .. } => {
+                walk_low(then_body, f);
+                walk_low(else_body, f);
+            }
+            LowInstr::While { cond, body, .. } => {
+                walk_low(cond, f);
+                walk_low(body, f);
+            }
+            LowInstr::For { body, .. } | LowInstr::Parallel { body, .. } => walk_low(body, f),
+            _ => {}
+        }
+    }
+}
+
+/// Whether a lowered body (or anything nested in it) contains a
+/// barrier — the lowered twin of [`super::interp::body_has_barrier`],
+/// deciding cooperative vs independent launch for parallel regions.
+pub fn low_body_has_barrier(body: &[LowInstr]) -> bool {
+    let mut found = false;
+    walk_low(body, &mut |i| {
+        if matches!(i, LowInstr::Barrier) {
+            found = true;
+        }
+    });
+    found
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn walk_reaches_superinstruction_bodies() {
+        let body = vec![LowInstr::CmpIf {
+            tmp: 0,
+            op: crate::ir::BinOp::Lt,
+            a: LowOp::Slot(1),
+            b: LowOp::Pool(0),
+            then_body: vec![LowInstr::Barrier],
+            else_body: vec![],
+        }];
+        assert!(low_body_has_barrier(&body));
+        let mut n = 0;
+        walk_low(&body, &mut |_| n += 1);
+        assert_eq!(n, 2, "CmpIf + nested Barrier");
+    }
+
+    #[test]
+    fn barrier_detection_matches_plain_bodies() {
+        assert!(!low_body_has_barrier(&[LowInstr::Return(None)]));
+        let body = vec![LowInstr::Parallel { num_threads: None, body: vec![LowInstr::Barrier] }];
+        assert!(low_body_has_barrier(&body));
+    }
+}

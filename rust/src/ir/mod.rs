@@ -20,6 +20,7 @@
 pub mod parser;
 pub mod printer;
 pub mod interp;
+pub mod lowered;
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -238,6 +239,13 @@ pub struct Module {
     pub functions: BTreeMap<String, Function>,
     /// Declared-but-undefined functions (candidate library calls).
     pub externals: Vec<String>,
+    /// Register-file execution forms produced by the `lower` pass,
+    /// keyed by function name. Empty until the pass runs; the
+    /// interpreter prefers a function's lowered body when present. Not
+    /// part of the textual round-trip (the printer emits the tree IR
+    /// only), and cleared whenever a later pass mutates the tree so a
+    /// stale lowering can never execute.
+    pub lowered: BTreeMap<String, lowered::LoweredFunction>,
 }
 
 impl Module {

@@ -248,3 +248,308 @@ fn escape(s: &str) -> String {
         })
         .collect()
 }
+
+// ---------------------------------------------------------------------
+// Lowered (register-file) form dump. Diagnostics only — this is NOT
+// part of the parse/print round trip: the lowered form is a derived
+// artifact the `lower` pass re-creates from the tree IR, so
+// `print_module` never emits it.
+
+use super::lowered::{LowExpr, LowInstr, LowOp, LowRpcArg, LoweredFunction, PoolConst};
+
+/// Render every lowered function in `m` (slots as `rN`, pool operands
+/// as `cN`, superinstructions flagged `fused`) for `--explain` and
+/// `compile` diagnostics.
+pub fn print_lowered_module(m: &Module) -> String {
+    let mut out = String::new();
+    for (name, lf) in &m.lowered {
+        out.push_str(&print_lowered_fn(name, lf));
+    }
+    out
+}
+
+/// Render one function's lowered form, with a slot legend mapping each
+/// register back to the source-level name it was assigned for.
+pub fn print_lowered_fn(name: &str, lf: &LoweredFunction) -> String {
+    let mut out = String::new();
+    let params =
+        lf.param_slots.iter().map(|s| format!("r{s}")).collect::<Vec<_>>().join(", ");
+    out.push_str(&format!(
+        "lowered @{name}({params}) slots={} fused={} {{\n",
+        lf.nslots, lf.fused
+    ));
+    if !lf.names.is_empty() {
+        let legend = lf
+            .names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| format!("r{i}=%{n}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        out.push_str(&format!("  ; slots: {legend}\n"));
+    }
+    for (i, c) in lf.pool.iter().enumerate() {
+        let v = match c {
+            PoolConst::I(x) => x.to_string(),
+            PoolConst::F(x) => format!("{x}"),
+            PoolConst::Global(g) => format!("@{g}"),
+        };
+        out.push_str(&format!("  c{i} = {v}\n"));
+    }
+    print_low_body(&mut out, &lf.body, 1);
+    out.push_str("}\n");
+    out
+}
+
+fn lop(o: LowOp) -> String {
+    match o {
+        LowOp::Slot(s) => format!("r{s}"),
+        LowOp::Pool(p) => format!("c{p}"),
+    }
+}
+
+fn print_low_expr(e: &LowExpr) -> String {
+    match e {
+        LowExpr::Op(a) => lop(*a),
+        LowExpr::Bin(b, x, y) => format!("{} {}, {}", binop_name(*b), lop(*x), lop(*y)),
+        LowExpr::Gep(b, o) => format!("gep {}, {}", lop(*b), lop(*o)),
+        LowExpr::Select(c, a, b) => {
+            format!("select {}, {}, {}", lop(*c), lop(*a), lop(*b))
+        }
+        LowExpr::SiToFp(a) => format!("sitofp {}", lop(*a)),
+        LowExpr::FpToSi(a) => format!("fptosi {}", lop(*a)),
+        LowExpr::Tid => "tid".into(),
+        LowExpr::NumThreads => "nthreads".into(),
+        LowExpr::Sqrt(a) => format!("sqrt {}", lop(*a)),
+        LowExpr::Exp(a) => format!("exp {}", lop(*a)),
+        LowExpr::Log(a) => format!("log {}", lop(*a)),
+    }
+}
+
+fn print_low_spec(s: &LowRpcArg) -> String {
+    let mode = |m: crate::rpc::ArgMode| match m {
+        crate::rpc::ArgMode::Read => "r",
+        crate::rpc::ArgMode::Write => "w",
+        crate::rpc::ArgMode::ReadWrite => "rw",
+    };
+    match s {
+        LowRpcArg::Val(o) => format!("val {}", lop(*o)),
+        LowRpcArg::Ref { ptr, mode: m, obj_size, offset } => {
+            format!("ref {} {} {} +{}", lop(*ptr), mode(*m), obj_size, offset)
+        }
+        LowRpcArg::DynRef { ptr, mode: m } => format!("dyn {} {}", lop(*ptr), mode(*m)),
+        LowRpcArg::MultiRef { ptr, candidates } => {
+            let cands = candidates
+                .iter()
+                .map(|(c, m, s)| format!("{} {} {}", lop(*c), mode(*m), s))
+                .collect::<Vec<_>>()
+                .join(" ; ");
+            format!("multi {} [ {cands} ]", lop(*ptr))
+        }
+    }
+}
+
+fn print_low_body(out: &mut String, body: &[LowInstr], depth: usize) {
+    for ins in body {
+        ind(out, depth);
+        match ins {
+            LowInstr::Assign { dst, expr } => {
+                out.push_str(&format!("r{dst} = {}", print_low_expr(expr)))
+            }
+            LowInstr::Alloca { dst, size } => {
+                out.push_str(&format!("r{dst} = alloca {size}"))
+            }
+            LowInstr::Store { addr, val, width } => {
+                out.push_str(&format!("store.{width} {}, {}", lop(*val), lop(*addr)))
+            }
+            LowInstr::Load { dst, addr, width, ty } => {
+                let m = if *ty == Ty::F64 { "loadf" } else { "load" };
+                out.push_str(&format!("r{dst} = {m}.{width} {}", lop(*addr)));
+            }
+            LowInstr::Call { dst, callee, args } => {
+                if let Some(d) = dst {
+                    out.push_str(&format!("r{d} = "));
+                }
+                out.push_str(&format!("call {callee}("));
+                out.push_str(&args.iter().map(|a| lop(*a)).collect::<Vec<_>>().join(", "));
+                out.push(')');
+            }
+            LowInstr::RpcCall { dst, callee_id, args } => {
+                if let Some(d) = dst {
+                    out.push_str(&format!("r{d} = "));
+                }
+                out.push_str(&format!("rpc {callee_id} ("));
+                out.push_str(&args.iter().map(print_low_spec).collect::<Vec<_>>().join(", "));
+                out.push(')');
+            }
+            LowInstr::KernelLaunch { region, arg, params } => {
+                out.push_str(&format!("launch @{region}"));
+                if let Some(a) = arg {
+                    out.push_str(&format!(" ({})", lop(*a)));
+                }
+                if !params.is_empty() {
+                    let ps = params.iter().map(|p| lop(*p)).collect::<Vec<_>>().join(", ");
+                    out.push_str(&format!(" params [{ps}]"));
+                }
+            }
+            LowInstr::If { cond, then_body, else_body } => {
+                out.push_str(&format!("if {} {{\n", lop(*cond)));
+                print_low_body(out, then_body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+                if !else_body.is_empty() {
+                    out.push_str(" else {\n");
+                    print_low_body(out, else_body, depth + 1);
+                    ind(out, depth);
+                    out.push('}');
+                }
+            }
+            LowInstr::While { cond_var, cond, body } => {
+                out.push_str(&format!("while r{cond_var} {{\n"));
+                print_low_body(out, cond, depth + 1);
+                ind(out, depth);
+                out.push_str("} {\n");
+                print_low_body(out, body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+            }
+            LowInstr::For { var, lo, hi, step, schedule, body } => {
+                let sched = match schedule {
+                    Schedule::Seq => "for",
+                    Schedule::Team => "for.team",
+                    Schedule::Grid => "for.grid",
+                };
+                out.push_str(&format!(
+                    "{sched} r{var} = {} to {} step {} {{\n",
+                    lop(*lo),
+                    lop(*hi),
+                    lop(*step)
+                ));
+                print_low_body(out, body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+            }
+            LowInstr::Parallel { num_threads, body } => {
+                out.push_str("parallel");
+                if let Some(n) = num_threads {
+                    out.push_str(&format!(" num_threads({})", lop(*n)));
+                }
+                out.push_str(" {\n");
+                print_low_body(out, body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+            }
+            LowInstr::Barrier => out.push_str("barrier"),
+            LowInstr::Return(v) => match v {
+                Some(v) => out.push_str(&format!("return {}", lop(*v))),
+                None => out.push_str("return"),
+            },
+            LowInstr::Intrinsic { dst, name, args } => {
+                if let Some(d) = dst {
+                    out.push_str(&format!("r{d} = "));
+                }
+                out.push_str(&format!("call {name}("));
+                out.push_str(&args.iter().map(|a| lop(*a)).collect::<Vec<_>>().join(", "));
+                out.push(')');
+            }
+            LowInstr::CmpIf { tmp, op, a, b, then_body, else_body } => {
+                out.push_str(&format!(
+                    "fused cmp.if r{tmp} = {} {}, {} {{\n",
+                    binop_name(*op),
+                    lop(*a),
+                    lop(*b)
+                ));
+                print_low_body(out, then_body, depth + 1);
+                ind(out, depth);
+                out.push('}');
+                if !else_body.is_empty() {
+                    out.push_str(" else {\n");
+                    print_low_body(out, else_body, depth + 1);
+                    ind(out, depth);
+                    out.push('}');
+                }
+            }
+            LowInstr::GepLoad { tmp, base, off, dst, width, ty } => {
+                let m = if *ty == Ty::F64 { "loadf" } else { "load" };
+                out.push_str(&format!(
+                    "fused r{dst} = {m}.{width} [{} + {}] via r{tmp}",
+                    lop(*base),
+                    lop(*off)
+                ));
+            }
+            LowInstr::GepStore { tmp, base, off, val, width } => {
+                out.push_str(&format!(
+                    "fused store.{width} {}, [{} + {}] via r{tmp}",
+                    lop(*val),
+                    lop(*base),
+                    lop(*off)
+                ));
+            }
+            LowInstr::BinStore { tmp, op, a, b, addr, width } => {
+                out.push_str(&format!(
+                    "fused store.{width} ({} {}, {} -> r{tmp}), {}",
+                    binop_name(*op),
+                    lop(*a),
+                    lop(*b),
+                    lop(*addr)
+                ));
+            }
+        }
+        out.push('\n');
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lowered_dump_shows_slots_pool_and_superinstructions() {
+        let lf = LoweredFunction {
+            nslots: 3,
+            param_slots: vec![0],
+            pool: vec![PoolConst::I(7), PoolConst::Global("buf".into())],
+            body: vec![
+                LowInstr::Assign {
+                    dst: 1,
+                    expr: LowExpr::Bin(BinOp::Add, LowOp::Slot(0), LowOp::Pool(0)),
+                },
+                LowInstr::GepLoad {
+                    tmp: 2,
+                    base: LowOp::Pool(1),
+                    off: LowOp::Slot(1),
+                    dst: 1,
+                    width: 8,
+                    ty: Ty::I64,
+                },
+                LowInstr::Return(Some(LowOp::Slot(1))),
+            ],
+            names: vec!["n".into(), "x".into(), "t".into()],
+            fused: 1,
+        };
+        let s = print_lowered_fn("f", &lf);
+        assert!(s.contains("lowered @f(r0) slots=3 fused=1 {"), "{s}");
+        assert!(s.contains("; slots: r0=%n r1=%x r2=%t"), "{s}");
+        assert!(s.contains("c0 = 7"), "{s}");
+        assert!(s.contains("c1 = @buf"), "{s}");
+        assert!(s.contains("r1 = add r0, c0"), "{s}");
+        assert!(s.contains("fused r1 = load.8 [c1 + r1] via r2"), "{s}");
+        assert!(s.contains("return r1"), "{s}");
+    }
+
+    #[test]
+    fn round_trip_output_never_includes_lowered_form() {
+        // The lowered form is a derived artifact: print_module must stay
+        // parseable, so the dump lives only in print_lowered_module.
+        let src = "func @main() -> i64 {\n  %a = add 1, 2\n  return %a\n}\n";
+        let mut m = crate::ir::parser::parse_module(src).unwrap();
+        crate::transform::lower::run(&mut m);
+        assert!(!m.lowered.is_empty());
+        let printed = print_module(&m);
+        assert!(!printed.contains("lowered"), "{printed}");
+        assert!(!printed.contains("slots"), "{printed}");
+        let dump = print_lowered_module(&m);
+        assert!(dump.contains("lowered @main"), "{dump}");
+        crate::ir::parser::parse_module(&printed).unwrap();
+    }
+}

@@ -2,20 +2,24 @@
 //! simulated GPU, run the evaluation apps, and inspect pass output.
 //!
 //! ```text
-//! gpu-first compile <prog.ir> [--no-constfold] [--no-libcres]
-//!                   [--no-rpcgen] [--no-multiteam] [--passes p1,p2,...]
+//! gpu-first compile <prog.ir> [--no-constfold] [--no-dce] [--no-libcres]
+//!                   [--no-rpcgen] [--no-multiteam] [--no-lower] [--no-fuse]
+//!                   [--passes p1,p2,...]
 //! gpu-first run     <prog.ir> [--teams N] [--threads N] [--allocator K]
 //!                   [--rpc-lanes N|auto] [--rpc-workers N|auto]
 //!                   [--rpc-launch-threads N] [--rpc-launch-slots N]
 //!                   [--rpc-data-cap BYTES] [--no-rpc-batch] [--passes ...]
 //! gpu-first explain <prog.ir>          # symbol resolution + RPC argument
 //!                                      # classification + per-pass timings
+//!                                      # + lowered (register-file) dump
 //! gpu-first apps                        # list evaluation apps
 //! gpu-first artifacts [--dir artifacts] # load + smoke the AOT artifacts
 //! ```
 //!
 //! The middle-end pipeline is an ordered pass list (default
-//! `constfold,libcres,rpcgen,multiteam`). `--passes` overrides it explicitly;
+//! `constfold,dce,libcres,rpcgen,multiteam,lower,fuse`; the trailing
+//! `lower`+`fuse` compile every function to the register-file execution
+//! form the interpreter prefers). `--passes` overrides it explicitly;
 //! below that, the `GPU_FIRST_PASSES` environment variable (the CI
 //! pass-shape matrix) applies; below that, the `--no-*` flags drop
 //! individual passes from the default order.
@@ -40,7 +44,7 @@
 
 use gpu_first::coordinator::{Config, GpuFirstSession};
 use gpu_first::ir::parser::parse_module;
-use gpu_first::ir::printer::print_module;
+use gpu_first::ir::printer::{print_lowered_module, print_module};
 use gpu_first::obs::SpanKind;
 use gpu_first::transform::{CompileOptions, PipelineSpec};
 use gpu_first::util::cli::Args;
@@ -64,10 +68,11 @@ fn main() {
                  telemetry:   --trace (span recorder) --trace-out FILE (Chrome\n\
                               trace-event JSON, implies --trace) --metrics-out FILE\n\
                               (RunMetrics JSON with latency histograms)\n\
-                 pipeline:    --passes p1,p2,... (known: constfold, libcres, rpcgen,\n\
-                              multiteam; default all four; GPU_FIRST_PASSES env applies\n\
-                              below it) --no-constfold --no-libcres --no-rpcgen\n\
-                              --no-multiteam\n\
+                 pipeline:    --passes p1,p2,... (known: constfold, dce, libcres,\n\
+                              rpcgen, multiteam, lower, fuse; default all seven;\n\
+                              GPU_FIRST_PASSES env applies below it) --no-constfold\n\
+                              --no-dce --no-libcres --no-rpcgen --no-multiteam\n\
+                              --no-lower --no-fuse\n\
                  see README.md"
             );
             std::process::exit(2);
@@ -88,9 +93,12 @@ fn read_module(args: &Args) -> Result<gpu_first::ir::Module, String> {
 fn opts(args: &Args) -> CompileOptions {
     CompileOptions {
         constfold: !args.flag("no-constfold"),
+        dce: !args.flag("no-dce"),
         libcres: !args.flag("no-libcres"),
         rpcgen: !args.flag("no-rpcgen"),
         multiteam: !args.flag("no-multiteam"),
+        lower: !args.flag("no-lower"),
+        fuse: !args.flag("no-fuse"),
     }
 }
 
@@ -149,6 +157,13 @@ fn cmd_compile(args: &Args) -> Result<(), String> {
             ";;   {} -> {} (captures: {:?}, barrier: {})",
             r.in_function, r.region, r.captures, r.has_barrier
         );
+    }
+    if report.lower.lowered_fns > 0 || !report.lower.skipped.is_empty() {
+        eprintln!(";; --- lower: {} ---", report.lower.summary());
+        for (f, reason) in &report.lower.skipped {
+            eprintln!(";;   {f}: kept on tree-walk ({reason})");
+        }
+        eprintln!(";; --- fuse: {} ---", report.fuse.summary());
     }
     session.stop();
     Ok(())
@@ -238,9 +253,14 @@ fn export_telemetry(
 fn cmd_explain(args: &Args) -> Result<(), String> {
     let mut module = read_module(args)?;
     // Explain compiles without region expansion by default (the module
-    // stays closest to the source); `--passes` and the GPU_FIRST_PASSES
-    // env still override, with the same precedence as compile/run.
-    let spec = pipeline_spec_or(args, PipelineSpec::parse("constfold,libcres,rpcgen").unwrap())?;
+    // stays closest to the source) but does run lower+fuse so the
+    // register-file dump reflects what execution would use; `--passes`
+    // and the GPU_FIRST_PASSES env still override, with the same
+    // precedence as compile/run.
+    let spec = pipeline_spec_or(
+        args,
+        PipelineSpec::parse("constfold,dce,libcres,rpcgen,lower,fuse").unwrap(),
+    )?;
     let mut session = GpuFirstSession::start(Config::from_args(args)?);
     session.compile_spec(&mut module, &spec)?;
     let report = session.report.as_ref().unwrap();
@@ -275,6 +295,14 @@ fn cmd_explain(args: &Args) -> Result<(), String> {
         "\npad coverage (AOT, every RPC site verified against the registry): {}",
         report.pad_coverage.summary()
     );
+    if !module.lowered.is_empty() {
+        println!("\nregister-file execution form (lower): {}", report.lower.summary());
+        for (f, reason) in &report.lower.skipped {
+            println!("  @{f}: kept on tree-walk ({reason})");
+        }
+        println!("superinstruction fusion (fuse): {}", report.fuse.summary());
+        print!("\n{}", print_lowered_module(&module));
+    }
     session.stop();
     Ok(())
 }

@@ -195,6 +195,9 @@ pub struct HostIoSnapshot {
     /// Writes committed through the batched `fwrite` landing pad
     /// (engine per-sweep coalescing; each counts one frame).
     pub batched_writes: u64,
+    /// Reads served through the batched `fread` landing pad
+    /// (engine per-sweep coalescing; each counts one frame).
+    pub batched_reads: u64,
 }
 
 /// Host process state backing the landing pads: an in-memory filesystem,
@@ -234,6 +237,8 @@ pub struct HostEnv {
     poison_recoveries: AtomicU64,
     /// Frames committed through the batched `fwrite` landing pad.
     batched_writes: AtomicU64,
+    /// Frames served through the batched `fread` landing pad.
+    batched_reads: AtomicU64,
     /// Kernel-split hook: `(region_id, arg_ptr) -> ret`. The coordinator
     /// installs a closure that launches the multi-team parallel kernel.
     #[allow(clippy::type_complexity)]
@@ -268,6 +273,7 @@ impl HostEnv {
             clock_ns: AtomicU64::new(1_700_000_000_000_000_000),
             poison_recoveries: AtomicU64::new(0),
             batched_writes: AtomicU64::new(0),
+            batched_reads: AtomicU64::new(0),
             region_launcher: Mutex::new(None),
         }
     }
@@ -294,6 +300,7 @@ impl HostEnv {
             content_contention: self.files.contention(),
             poison_recoveries: self.poison_recoveries.load(r),
             batched_writes: self.batched_writes.load(r),
+            batched_reads: self.batched_reads.load(r),
         }
     }
 
@@ -360,6 +367,11 @@ impl HostEnv {
     /// Record `frames` committed through a batched write pad.
     fn count_batched_writes(&self, frames: u64) {
         self.batched_writes.fetch_add(frames, Ordering::Relaxed);
+    }
+
+    /// Record `frames` served through a batched read pad.
+    fn count_batched_reads(&self, frames: u64) {
+        self.batched_reads.fetch_add(frames, Ordering::Relaxed);
     }
 
     fn write_stream(&self, fd: u64, bytes: &[u8]) -> i64 {
@@ -445,6 +457,54 @@ impl HostEnv {
         out[..n].copy_from_slice(&content[of.pos..of.pos + n]);
         of.pos += n;
         n as i64
+    }
+
+    /// Batched stream read, the symmetric twin of
+    /// [`write_stream_many`](Self::write_stream_many): items fill **in
+    /// order**, with handle-table and content-shard lock acquisitions
+    /// amortized over runs of consecutive same-fd items. Each item
+    /// advances the handle's shared position exactly like a scalar
+    /// [`read_stream`](Self::read_stream) call would, so a short file
+    /// splits across the items byte-identically to scalar dispatch.
+    pub fn read_stream_many(&self, items: &mut [(u64, &mut [u8])]) -> Vec<i64> {
+        let mut rets = Vec::with_capacity(items.len());
+        let mut i = 0;
+        while i < items.len() {
+            let fd = items[i].0;
+            let mut j = i + 1;
+            while j < items.len() && items[j].0 == fd {
+                j += 1;
+            }
+            let run = &mut items[i..j];
+            match self.table_for(fd) {
+                None => rets.extend(run.iter().map(|_| -1)),
+                Some(table) => {
+                    let mut open = table.lock(&self.poison_recoveries);
+                    match open.get_mut(&fd) {
+                        None => rets.extend(run.iter().map(|_| -1)),
+                        Some(of) => {
+                            let files = self.files.lock(&of.path, &self.poison_recoveries);
+                            match files.get(&of.path) {
+                                None => rets.extend(run.iter().map(|_| -1)),
+                                Some(content) => {
+                                    for (_, out) in run.iter_mut() {
+                                        let avail = content.len().saturating_sub(of.pos);
+                                        let n = avail.min(out.len());
+                                        out[..n].copy_from_slice(
+                                            &content[of.pos..of.pos + n],
+                                        );
+                                        of.pos += n;
+                                        rets.push(n as i64);
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            i = j;
+        }
+        rets
     }
 
     fn fopen(&self, path: &str, mode: &str) -> i64 {
@@ -921,14 +981,16 @@ pub fn synthesize(kind: HostFnKind) -> WrapperFn {
 
 /// Synthesize the *batched* landing pad for `kind`, if one exists.
 ///
-/// Only callees whose host effect is an order-preserving append benefit:
-/// the printf family and `puts` render every frame, and `fwrite` stages
-/// every frame's payload, then the whole batch commits through
-/// [`HostEnv::write_stream_many`] — runs of same-fd writes amortize the
-/// stream/file lock acquisitions to one per run instead of one per
-/// call. Stateful callees (fopen/fscanf/...) return `None` and keep
-/// their scalar pads — the engine then amortizes only the registry
-/// dispatch.
+/// Only callees whose host effect is an order-preserving stream access
+/// benefit: the printf family and `puts` render every frame, and
+/// `fwrite` stages every frame's payload, then the whole batch commits
+/// through [`HostEnv::write_stream_many`]; `fread` stages every frame's
+/// destination buffer and fills the batch through
+/// [`HostEnv::read_stream_many`]. In both directions, runs of same-fd
+/// items amortize the stream/file lock acquisitions to one per run
+/// instead of one per call. Stateful callees (fopen/fscanf/...) return
+/// `None` and keep their scalar pads — the engine then amortizes only
+/// the registry dispatch.
 pub fn synthesize_batch(kind: HostFnKind) -> Option<BatchWrapperFn> {
     match kind {
         HostFnKind::Printf { has_fd } => Some(Box::new(move |frames, env| {
@@ -952,6 +1014,40 @@ pub fn synthesize_batch(kind: HostFnKind) -> Option<BatchWrapperFn> {
                 })
                 .collect();
             env.write_stream_many(&rendered)
+        })),
+        HostFnKind::Fread => Some(Box::new(|frames, env| {
+            // fread(buf, size, count, fd) per frame; same-fd runs of a
+            // sweep fill under one handle+content lock acquisition.
+            // The request clamps exactly like the scalar pad, and each
+            // item advances the handle's shared position in frame
+            // order, so the bytes landing in every buffer — and every
+            // return value — are identical to scalar dispatch.
+            let mut sizes = Vec::with_capacity(frames.len());
+            let mut staged: Vec<(u64, &mut [u8])> = Vec::with_capacity(frames.len());
+            for f in frames.iter_mut() {
+                let size = f.val(1) as usize;
+                let count = f.val(2) as usize;
+                let fd = f.val(3);
+                sizes.push(size as i64);
+                let buf = f.bytes_mut(0);
+                let want = (size * count).min(buf.len());
+                staged.push((fd, &mut buf[..want]));
+            }
+            let ns = env.read_stream_many(&mut staged);
+            // Only frames that actually filled count as batched.
+            env.count_batched_reads(ns.iter().filter(|&&n| n >= 0).count() as u64);
+            sizes
+                .iter()
+                .zip(ns)
+                .map(|(&size, n)| {
+                    // Item-return semantics identical to the scalar pad.
+                    if n < 0 || size == 0 {
+                        0
+                    } else {
+                        n / size
+                    }
+                })
+                .collect()
         })),
         HostFnKind::Fwrite => Some(Box::new(|frames, env| {
             // fwrite(buf, size, count, fd) per frame; same-fd runs of a
@@ -1203,8 +1299,9 @@ mod tests {
         assert!(synthesize_batch(HostFnKind::Fopen).is_none());
         assert!(synthesize_batch(HostFnKind::Scanf { has_fd: true }).is_none());
         assert!(synthesize_batch(HostFnKind::Exit).is_none());
-        // Order-preserving appends do batch.
+        // Order-preserving stream accesses do batch.
         assert!(synthesize_batch(HostFnKind::Fwrite).is_some());
+        assert!(synthesize_batch(HostFnKind::Fread).is_some());
         assert!(synthesize_batch(HostFnKind::Puts).is_some());
     }
 
@@ -1289,6 +1386,75 @@ mod tests {
         assert_eq!(pad(&mut frames, &env), vec![2, 2]);
         assert_eq!(env.io_snapshot().batched_writes, 2, "one per committed frame");
         assert_eq!(env.file("log.bin").unwrap(), b"abcd");
+    }
+
+    fn fread_frame(cap: usize, size: u64, count: u64, fd: u64) -> RpcFrame {
+        RpcFrame {
+            args: vec![
+                buf_arg(&vec![0u8; cap]),
+                HostArg::Val(size),
+                HostArg::Val(count),
+                HostArg::Val(fd),
+            ],
+        }
+    }
+
+    #[test]
+    fn batch_fread_pad_matches_scalar_pads_byte_identically() {
+        // Two independent handles on one file (separate positions), a
+        // second file that runs dry mid-batch, and a bad fd, under a
+        // sharded HostEnv: batched dispatch must fill every buffer,
+        // advance every position, and return per-item counts identical
+        // to scalar dispatch in the same order.
+        let run = |batched: bool| {
+            let env = HostEnv::with_shards(4);
+            env.put_file("data.bin", b"abcdefghij");
+            env.put_file("tiny.bin", b"xyz");
+            let fd_a = with_lane_ctx(1, || env.fopen("data.bin", "r")) as u64;
+            let fd_b = with_lane_ctx(2, || env.fopen("data.bin", "r")) as u64;
+            let fd_t = env.fopen("tiny.bin", "r") as u64;
+            let mut frames = vec![
+                fread_frame(4, 1, 4, fd_a),
+                fread_frame(4, 1, 4, fd_a), // same-fd run of two
+                fread_frame(6, 2, 3, fd_b), // independent position, same file
+                fread_frame(4, 1, 4, fd_t), // short read: 3 bytes left...
+                fread_frame(4, 1, 4, fd_t), // ...then dry (0 items)
+                fread_frame(4, 1, 4, 9999), // bad fd -> 0 items
+            ];
+            let rets: Vec<i64> = if batched {
+                let pad = synthesize_batch(HostFnKind::Fread).unwrap();
+                pad(&mut frames, &env)
+            } else {
+                let pad = synthesize(HostFnKind::Fread);
+                frames.iter_mut().map(|f| pad(f, &env)).collect()
+            };
+            let bufs: Vec<Vec<u8>> = frames.iter().map(|f| f.bytes(0).to_vec()).collect();
+            (rets, bufs)
+        };
+        let (rets_b, bufs_b) = run(true);
+        let (rets_s, bufs_s) = run(false);
+        assert_eq!(rets_b, rets_s);
+        assert_eq!(bufs_b, bufs_s);
+        assert_eq!(rets_b, vec![4, 4, 3, 3, 0, 0]);
+        assert_eq!(bufs_b[0], b"abcd");
+        assert_eq!(bufs_b[1], b"efgh");
+        assert_eq!(bufs_b[2], b"abcdef");
+        assert_eq!(bufs_b[3], b"xyz\0", "short read leaves the tail untouched");
+    }
+
+    #[test]
+    fn batched_fread_counter_rides_the_snapshot() {
+        let env = HostEnv::new();
+        env.put_file("in.bin", b"abcd");
+        let fd = env.fopen("in.bin", "r") as u64;
+        let pad = synthesize_batch(HostFnKind::Fread).unwrap();
+        // count=50 over a 2-byte buffer: the request clamps to the
+        // staged object exactly like the scalar pad.
+        let mut frames = vec![fread_frame(2, 1, 50, fd), fread_frame(2, 1, 50, fd)];
+        assert_eq!(pad(&mut frames, &env), vec![2, 2]);
+        assert_eq!(env.io_snapshot().batched_reads, 2, "one per served frame");
+        assert_eq!(frames[0].bytes(0), b"ab");
+        assert_eq!(frames[1].bytes(0), b"cd");
     }
 
     #[test]

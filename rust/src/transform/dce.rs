@@ -1,0 +1,220 @@
+//! Dead-code elimination ahead of `rpcgen`: drop functions no execution
+//! path can reach, and truncate straight-line code after a `return`.
+//!
+//! Reachability is seeded from `@main` plus every extracted kernel
+//! region (launched by id through the RPC executor, so they must
+//! survive even when the launch site is in another function), and
+//! closed over the cached [`CallGraph`] `Call` edges *plus*
+//! `KernelLaunch` targets (the call graph deliberately records only
+//! direct calls, so launch edges are collected by a walk here).
+//!
+//! The payoff is smaller than "less code runs": `rpcgen` synthesizes a
+//! landing pad per library call site it sees, so removing an
+//! unreachable function removes host pads from the registry's working
+//! set and the AOT coverage check.
+//!
+//! A module with no `@main` is left untouched — bare-function corpora
+//! (unit tests, benches) define no entry point, and guessing roots
+//! there would delete everything.
+
+use super::pm::AnalysisCache;
+use crate::analysis::callgraph::walk;
+use crate::ir::{Instr, Module};
+use std::collections::BTreeSet;
+
+/// What the pass removed (→ `CompileReport.dce`, `--explain`).
+#[derive(Debug, Default, Clone)]
+pub struct DceReport {
+    /// Unreachable functions dropped, by name.
+    pub removed_fns: Vec<String>,
+    /// Instructions truncated after a straight-line `return`.
+    pub removed_instrs: u64,
+}
+
+impl DceReport {
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} unreachable function(s) removed, {} post-return instr(s) truncated",
+            self.removed_fns.len(),
+            self.removed_instrs
+        )
+    }
+
+    pub fn changed(&self) -> bool {
+        !self.removed_fns.is_empty() || self.removed_instrs > 0
+    }
+}
+
+/// Run DCE over `m` using the shared analysis cache for the call graph.
+pub fn run_with(m: &mut Module, cache: &mut AnalysisCache) -> DceReport {
+    let mut report = DceReport::default();
+    if !m.functions.contains_key("main") {
+        return report;
+    }
+    let edges = cache.callgraph(m).edges.clone();
+    let mut reachable: BTreeSet<String> = BTreeSet::new();
+    let mut stack: Vec<String> = m
+        .functions
+        .iter()
+        .filter(|(n, f)| n.as_str() == "main" || f.is_kernel_region)
+        .map(|(n, _)| n.clone())
+        .collect();
+    while let Some(cur) = stack.pop() {
+        if !reachable.insert(cur.clone()) {
+            continue;
+        }
+        if let Some(callees) = edges.get(&cur) {
+            stack.extend(callees.iter().cloned());
+        }
+        // Launch edges are not in the call graph; collect them here.
+        if let Some(f) = m.functions.get(&cur) {
+            walk(&f.body, &mut |ins| {
+                if let Instr::KernelLaunch { region, .. } = ins {
+                    stack.push(region.clone());
+                }
+            });
+        }
+    }
+    report.removed_fns =
+        m.functions.keys().filter(|n| !reachable.contains(*n)).cloned().collect();
+    for name in &report.removed_fns {
+        m.functions.remove(name);
+        m.lowered.remove(name);
+    }
+    for f in m.functions.values_mut() {
+        report.removed_instrs += truncate_after_return(&mut f.body, true);
+    }
+    report
+}
+
+/// Count every instruction in `body`, including nested ones.
+fn count_instrs(body: &[Instr]) -> u64 {
+    let mut n = 0;
+    walk(body, &mut |_| n += 1);
+    n
+}
+
+/// Drop everything after the first top-level `return` of each body
+/// list, recursively. `allow_top` is false for `while` condition blocks:
+/// their top level must keep defining the condition variable even after
+/// an (unreachable) early return, or the verifier rejects the result.
+fn truncate_after_return(body: &mut Vec<Instr>, allow_top: bool) -> u64 {
+    let mut removed = 0;
+    if allow_top {
+        if let Some(pos) = body.iter().position(|i| matches!(i, Instr::Return(_))) {
+            if pos + 1 < body.len() {
+                let tail = body.split_off(pos + 1);
+                removed += count_instrs(&tail);
+            }
+        }
+    }
+    for ins in body.iter_mut() {
+        match ins {
+            Instr::If { then_body, else_body, .. } => {
+                removed += truncate_after_return(then_body, true);
+                removed += truncate_after_return(else_body, true);
+            }
+            Instr::While { cond, body, .. } => {
+                removed += truncate_after_return(cond, false);
+                removed += truncate_after_return(body, true);
+            }
+            Instr::For { body, .. } | Instr::Parallel { body, .. } => {
+                removed += truncate_after_return(body, true);
+            }
+            _ => {}
+        }
+    }
+    removed
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    #[test]
+    fn unreachable_functions_are_removed() {
+        let src = r#"
+func @used() -> i64 {
+  return 1
+}
+
+func @dead() -> i64 {
+  call fprintf(2)
+  return 2
+}
+
+func @also_dead() -> i64 {
+  %x = call dead()
+  return %x
+}
+
+func @main() -> i64 {
+  %r = call used()
+  return %r
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let mut cache = AnalysisCache::default();
+        let report = run_with(&mut m, &mut cache);
+        assert_eq!(report.removed_fns, vec!["also_dead".to_string(), "dead".into()]);
+        assert!(report.changed());
+        assert!(m.functions.contains_key("used"));
+        assert!(!m.functions.contains_key("dead"));
+        assert!(m.verify().is_ok());
+    }
+
+    #[test]
+    fn kernel_regions_and_launch_targets_survive() {
+        let src = r#"
+func @region(%n: i64) -> void kernel {
+  return
+}
+
+func @main() -> i64 {
+  %n = 4
+  launch @region
+  return 0
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let mut cache = AnalysisCache::default();
+        let report = run_with(&mut m, &mut cache);
+        assert!(report.removed_fns.is_empty(), "{report:?}");
+        assert!(!report.changed());
+        assert!(m.functions.contains_key("region"));
+    }
+
+    #[test]
+    fn post_return_code_is_truncated() {
+        let src = r#"
+func @main() -> i64 {
+  if 1 {
+    return 1
+    %x = 2
+    %y = add %x, 1
+  }
+  return 0
+  %dead = 3
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let mut cache = AnalysisCache::default();
+        let report = run_with(&mut m, &mut cache);
+        assert_eq!(report.removed_instrs, 3, "{report:?}");
+        assert!(m.verify().is_ok());
+        assert_eq!(m.functions["main"].body.len(), 2, "if + return survive");
+    }
+
+    #[test]
+    fn modules_without_main_are_untouched() {
+        let src = "func @helper() -> i64 {\n  return 0\n}\n";
+        let mut m = parse_module(src).unwrap();
+        let before = m.clone();
+        let mut cache = AnalysisCache::default();
+        let report = run_with(&mut m, &mut cache);
+        assert!(!report.changed());
+        assert_eq!(m, before);
+    }
+}

@@ -1,0 +1,250 @@
+//! The `fuse` pass: fold common adjacent lowered-instruction pairs into
+//! superinstructions so the register-file executor pays one dispatch
+//! for two instructions.
+//!
+//! Fused pairs (greedy, left-to-right, recursing into nested bodies):
+//!
+//! * `%t = <cmp> a, b` + `if %t {..} else {..}` → [`LowInstr::CmpIf`]
+//! * `%t = gep base, off` + `%d = load.<w> %t` → [`LowInstr::GepLoad`]
+//! * `%t = gep base, off` + `store.<w> v, %t` → [`LowInstr::GepStore`]
+//! * `%t = <bin> a, b` + `store.<w> %t, addr` → [`LowInstr::BinStore`]
+//!
+//! Fusion needs no liveness analysis: every superinstruction still
+//! writes its intermediate `%t` slot, and the executor charges *both*
+//! component instructions to the device counters, so fused and unfused
+//! execution are observationally identical (the `tests/lowering.rs`
+//! equivalence corpus proves it). The pass only rewrites
+//! [`Module::lowered`] — the tree IR is untouched and `changed` stays
+//! false so cached analyses survive.
+
+use crate::ir::lowered::{LowExpr, LowInstr, LowOp};
+use crate::ir::{BinOp, Module};
+
+/// What the pass did (→ `CompileReport.fuse`, `--explain`,
+/// `RunMetrics.fused_instrs`).
+#[derive(Debug, Default, Clone)]
+pub struct FuseReport {
+    /// Total pairs folded (sum of the per-kind counters).
+    pub pairs: u64,
+    pub cmp_br: u64,
+    pub gep_load: u64,
+    pub gep_store: u64,
+    pub bin_store: u64,
+}
+
+impl FuseReport {
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} pair(s) fused ({} cmp+br, {} gep+load, {} gep+store, {} bin+store)",
+            self.pairs, self.cmp_br, self.gep_load, self.gep_store, self.bin_store
+        )
+    }
+}
+
+/// Is `op` a comparison (result used as a branch condition)?
+fn is_cmp(op: BinOp) -> bool {
+    matches!(
+        op,
+        BinOp::Eq
+            | BinOp::Ne
+            | BinOp::Lt
+            | BinOp::Le
+            | BinOp::Gt
+            | BinOp::Ge
+            | BinOp::FEq
+            | BinOp::FLt
+            | BinOp::FLe
+            | BinOp::FGt
+            | BinOp::FGe
+    )
+}
+
+/// Fuse every lowered function of `m` in place. A no-op (all-zero
+/// report) when the `lower` pass has not run.
+pub fn run(m: &mut Module) -> FuseReport {
+    let mut report = FuseReport::default();
+    for lf in m.lowered.values_mut() {
+        let mut fused = 0u32;
+        fuse_body(&mut lf.body, &mut report, &mut fused);
+        lf.fused = fused;
+    }
+    report
+}
+
+fn fuse_body(body: &mut Vec<LowInstr>, r: &mut FuseReport, fused: &mut u32) {
+    enum Kind {
+        CmpIf,
+        GepLoad,
+        GepStore,
+        BinStore,
+    }
+    let old = std::mem::take(body);
+    let mut out: Vec<LowInstr> = Vec::with_capacity(old.len());
+    let mut it = old.into_iter().peekable();
+    while let Some(a) = it.next() {
+        let kind = match (&a, it.peek()) {
+            (
+                LowInstr::Assign { dst, expr: LowExpr::Bin(op, _, _) },
+                Some(LowInstr::If { cond: LowOp::Slot(c), .. }),
+            ) if c == dst && is_cmp(*op) => Some(Kind::CmpIf),
+            (
+                LowInstr::Assign { dst, expr: LowExpr::Gep(_, _) },
+                Some(LowInstr::Load { addr: LowOp::Slot(c), .. }),
+            ) if c == dst => Some(Kind::GepLoad),
+            (
+                LowInstr::Assign { dst, expr: LowExpr::Gep(_, _) },
+                Some(LowInstr::Store { addr: LowOp::Slot(c), .. }),
+            ) if c == dst => Some(Kind::GepStore),
+            (
+                LowInstr::Assign { dst, expr: LowExpr::Bin(_, _, _) },
+                Some(LowInstr::Store { val: LowOp::Slot(c), .. }),
+            ) if c == dst => Some(Kind::BinStore),
+            _ => None,
+        };
+        let Some(kind) = kind else {
+            out.push(a);
+            continue;
+        };
+        let b = it.next().expect("peeked");
+        *fused += 1;
+        r.pairs += 1;
+        out.push(match (kind, a, b) {
+            (
+                Kind::CmpIf,
+                LowInstr::Assign { dst, expr: LowExpr::Bin(op, x, y) },
+                LowInstr::If { then_body, else_body, .. },
+            ) => {
+                r.cmp_br += 1;
+                LowInstr::CmpIf { tmp: dst, op, a: x, b: y, then_body, else_body }
+            }
+            (
+                Kind::GepLoad,
+                LowInstr::Assign { dst: t, expr: LowExpr::Gep(base, off) },
+                LowInstr::Load { dst, width, ty, .. },
+            ) => {
+                r.gep_load += 1;
+                LowInstr::GepLoad { tmp: t, base, off, dst, width, ty }
+            }
+            (
+                Kind::GepStore,
+                LowInstr::Assign { dst: t, expr: LowExpr::Gep(base, off) },
+                LowInstr::Store { val, width, .. },
+            ) => {
+                r.gep_store += 1;
+                LowInstr::GepStore { tmp: t, base, off, val, width }
+            }
+            (
+                Kind::BinStore,
+                LowInstr::Assign { dst: t, expr: LowExpr::Bin(op, x, y) },
+                LowInstr::Store { addr, width, .. },
+            ) => {
+                r.bin_store += 1;
+                LowInstr::BinStore { tmp: t, op, a: x, b: y, addr, width }
+            }
+            _ => unreachable!("kind decided by the same patterns"),
+        });
+    }
+    for ins in &mut out {
+        match ins {
+            LowInstr::If { then_body, else_body, .. }
+            | LowInstr::CmpIf { then_body, else_body, .. } => {
+                fuse_body(then_body, r, fused);
+                fuse_body(else_body, r, fused);
+            }
+            LowInstr::While { cond, body, .. } => {
+                fuse_body(cond, r, fused);
+                fuse_body(body, r, fused);
+            }
+            LowInstr::For { body, .. } | LowInstr::Parallel { body, .. } => {
+                fuse_body(body, r, fused);
+            }
+            _ => {}
+        }
+    }
+    *body = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::lowered::walk_low;
+    use crate::ir::parser::parse_module;
+
+    const SRC: &str = r#"
+global @arr 64
+
+func @main() -> i64 {
+  %sum = alloca 8
+  store.8 0, %sum
+  for %i = 0 to 8 step 1 {
+    %off = mul %i, 8
+    %p = gep @arr, %off
+    %v = load.8 %p
+    %q = gep @arr, %off
+    store.8 %v, %q
+    %acc = load.8 %sum
+    %acc2 = add %acc, %v
+    store.8 %acc2, %sum
+    %big = gt %v, 100
+    if %big {
+      %t = tid
+    }
+  }
+  return 0
+}
+"#;
+
+    #[test]
+    fn all_four_pair_kinds_fuse() {
+        let mut m = parse_module(SRC).unwrap();
+        super::super::lower::run(&mut m);
+        let report = run(&mut m);
+        assert_eq!(report.gep_load, 1, "{report:?}");
+        assert_eq!(report.gep_store, 1, "{report:?}");
+        assert_eq!(report.bin_store, 1, "{report:?}");
+        assert_eq!(report.cmp_br, 1, "{report:?}");
+        assert_eq!(report.pairs, 4);
+        assert_eq!(m.lowered["main"].fused, 4);
+
+        // The fused body carries the superinstructions and no longer the
+        // plain pairs they replaced.
+        let mut supers = 0;
+        walk_low(&m.lowered["main"].body, &mut |i| {
+            if matches!(
+                i,
+                LowInstr::CmpIf { .. }
+                    | LowInstr::GepLoad { .. }
+                    | LowInstr::GepStore { .. }
+                    | LowInstr::BinStore { .. }
+            ) {
+                supers += 1;
+            }
+        });
+        assert_eq!(supers, 4);
+        let body = &m.lowered["main"].body;
+        assert!(
+            matches!(body[2], LowInstr::For { .. }),
+            "shape preserved around the loop: {body:?}"
+        );
+    }
+
+    #[test]
+    fn no_lowered_form_is_a_noop() {
+        let mut m = parse_module("func @main() -> i64 {\n  return 0\n}\n").unwrap();
+        let report = run(&mut m);
+        assert_eq!(report.pairs, 0);
+    }
+
+    #[test]
+    fn non_cmp_bin_does_not_fuse_with_if() {
+        // `%t = add ...; if %t` must stay unfused: CmpIf re-evaluates the
+        // comparison, so only comparison ops are eligible.
+        let src = "func @main() -> i64 {\n  %t = add 1, 0\n  if %t {\n    barrier\n  }\n  return 0\n}\n";
+        let mut m = parse_module(src).unwrap();
+        super::super::lower::run(&mut m);
+        let report = run(&mut m);
+        assert_eq!(report.cmp_br, 0);
+        assert!(matches!(m.lowered["main"].body[0], LowInstr::Assign { .. }));
+    }
+}

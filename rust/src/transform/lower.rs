@@ -1,0 +1,413 @@
+//! The `lower` pass: compile each function into the register-file
+//! execution form ([`crate::ir::lowered`]).
+//!
+//! Slot assignment is a flat, per-function scan in program order: the
+//! parameters first, then every definition site (`Assign`, `Alloca`,
+//! `Load`, `Call`/`RpcCall`/`Intrinsic` destinations, `for` induction
+//! variables) as the body is walked depth-first; a name re-defined
+//! later reuses its slot. This is semantics-preserving because the
+//! tree-walk interpreter pushes a value frame only per *function call*
+//! (`If`/`While`/`For` share the caller frame) and the verifier rejects
+//! any use outside the defining scope, so two sibling-arm locals
+//! sharing one slot can never observe each other.
+//!
+//! Constants and global addresses are interned into a deduplicated
+//! per-function pool; [`crate::ir::interp::ProgramEnv`] resolves
+//! `PoolConst::Global` entries to device base addresses once at load.
+//!
+//! Not everything lowers. A function stays on the tree-walk path (with
+//! the reason in [`LowerReport::skipped`]) when it carries an RPC ref
+//! with a dynamic offset — the tree-walk arm treats that as
+//! unreachable, so the lowered form refuses rather than guessing — or
+//! a `launch` whose region parameters are not all visible in the
+//! caller's scope (the tree-walk executor reads them back by name at
+//! launch time; lowering must resolve that lookup statically).
+
+use crate::ir::lowered::{LowExpr, LowInstr, LowOp, LowRpcArg, LoweredFunction, PoolConst};
+use crate::ir::{Expr, Function, Instr, Module, OffsetSpec, Operand, RpcArgSpec};
+use std::collections::{BTreeMap, HashMap};
+
+/// What the pass did (→ `CompileReport.lower`, `--explain`,
+/// `RunMetrics.lowered_fns`).
+#[derive(Debug, Default, Clone)]
+pub struct LowerReport {
+    /// Functions compiled to register-file form.
+    pub lowered_fns: u64,
+    /// Register slots allocated across all lowered functions.
+    pub total_slots: u64,
+    /// Constant-pool entries interned (post-dedup) across all functions.
+    pub pool_consts: u64,
+    /// Functions kept on the tree-walk path: `(name, reason)`.
+    pub skipped: Vec<(String, String)>,
+}
+
+impl LowerReport {
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} function(s) lowered ({} slots, {} pool consts), {} kept on tree-walk",
+            self.lowered_fns, self.total_slots, self.pool_consts, self.skipped.len()
+        )
+    }
+}
+
+/// Lower every function of `m` into [`Module::lowered`], replacing any
+/// previous lowering wholesale. The tree bodies are untouched — the
+/// lowered form lives alongside them.
+pub fn run(m: &mut Module) -> LowerReport {
+    let mut report = LowerReport::default();
+    let mut out = BTreeMap::new();
+    for (name, f) in &m.functions {
+        match lower_function(m, f) {
+            Ok(lf) => {
+                report.lowered_fns += 1;
+                report.total_slots += u64::from(lf.nslots);
+                report.pool_consts += lf.pool.len() as u64;
+                out.insert(name.clone(), lf);
+            }
+            Err(reason) => report.skipped.push((name.clone(), reason)),
+        }
+    }
+    m.lowered = out;
+    report
+}
+
+/// Dedup key for pool interning (`f64` keyed by bit pattern so `-0.0`
+/// and `NaN` payloads intern exactly).
+#[derive(Hash, PartialEq, Eq)]
+enum PoolKey {
+    I(i64),
+    F(u64),
+    G(String),
+}
+
+struct Lowerer<'m> {
+    m: &'m Module,
+    slots: HashMap<String, u32>,
+    names: Vec<String>,
+    pool: Vec<PoolConst>,
+    pool_index: HashMap<PoolKey, u32>,
+}
+
+fn lower_function(m: &Module, f: &Function) -> Result<LoweredFunction, String> {
+    let mut lw = Lowerer {
+        m,
+        slots: HashMap::new(),
+        names: Vec::new(),
+        pool: Vec::new(),
+        pool_index: HashMap::new(),
+    };
+    let param_slots: Vec<u32> = f.params.iter().map(|p| lw.def(&p.name)).collect();
+    lw.collect_defs(&f.body);
+    let body = lw.lower_body(&f.body)?;
+    Ok(LoweredFunction {
+        nslots: lw.names.len() as u32,
+        param_slots,
+        pool: lw.pool,
+        body,
+        names: lw.names,
+        fused: 0,
+    })
+}
+
+impl Lowerer<'_> {
+    /// Slot of `name`, allocating on first definition.
+    fn def(&mut self, name: &str) -> u32 {
+        if let Some(&s) = self.slots.get(name) {
+            return s;
+        }
+        let s = self.names.len() as u32;
+        self.slots.insert(name.to_string(), s);
+        self.names.push(name.to_string());
+        s
+    }
+
+    /// Phase 1: visit every definition site in program order so phase 2
+    /// rewrites operands against a complete slot map.
+    fn collect_defs(&mut self, body: &[Instr]) {
+        for ins in body {
+            match ins {
+                Instr::Assign { dst, .. } | Instr::Alloca { dst, .. } | Instr::Load { dst, .. } => {
+                    self.def(dst);
+                }
+                Instr::Call { dst, .. }
+                | Instr::RpcCall { dst, .. }
+                | Instr::Intrinsic { dst, .. } => {
+                    if let Some(d) = dst {
+                        self.def(d);
+                    }
+                }
+                Instr::If { then_body, else_body, .. } => {
+                    self.collect_defs(then_body);
+                    self.collect_defs(else_body);
+                }
+                Instr::While { cond, body, .. } => {
+                    self.collect_defs(cond);
+                    self.collect_defs(body);
+                }
+                Instr::For { var, body, .. } => {
+                    self.def(var);
+                    self.collect_defs(body);
+                }
+                Instr::Parallel { body, .. } => self.collect_defs(body),
+                Instr::Store { .. }
+                | Instr::KernelLaunch { .. }
+                | Instr::Barrier
+                | Instr::Return(_) => {}
+            }
+        }
+    }
+
+    fn intern(&mut self, c: PoolConst) -> u32 {
+        let key = match &c {
+            PoolConst::I(i) => PoolKey::I(*i),
+            PoolConst::F(f) => PoolKey::F(f.to_bits()),
+            PoolConst::Global(g) => PoolKey::G(g.clone()),
+        };
+        if let Some(&idx) = self.pool_index.get(&key) {
+            return idx;
+        }
+        let idx = self.pool.len() as u32;
+        self.pool.push(c);
+        self.pool_index.insert(key, idx);
+        idx
+    }
+
+    fn op(&mut self, o: &Operand) -> Result<LowOp, String> {
+        Ok(match o {
+            Operand::Var(v) => {
+                let Some(&s) = self.slots.get(v) else {
+                    return Err(format!("operand %{v} has no register slot"));
+                };
+                LowOp::Slot(s)
+            }
+            Operand::ConstI(i) => LowOp::Pool(self.intern(PoolConst::I(*i))),
+            Operand::ConstF(f) => LowOp::Pool(self.intern(PoolConst::F(*f))),
+            Operand::Global(g) => LowOp::Pool(self.intern(PoolConst::Global(g.clone()))),
+        })
+    }
+
+    fn slot(&self, name: &str) -> Result<u32, String> {
+        self.slots
+            .get(name)
+            .copied()
+            .ok_or_else(|| format!("%{name} has no register slot"))
+    }
+
+    fn expr(&mut self, e: &Expr) -> Result<LowExpr, String> {
+        Ok(match e {
+            Expr::Op(a) => LowExpr::Op(self.op(a)?),
+            Expr::Bin(op, a, b) => LowExpr::Bin(*op, self.op(a)?, self.op(b)?),
+            Expr::Gep(a, b) => LowExpr::Gep(self.op(a)?, self.op(b)?),
+            Expr::Select(c, a, b) => LowExpr::Select(self.op(c)?, self.op(a)?, self.op(b)?),
+            Expr::SiToFp(a) => LowExpr::SiToFp(self.op(a)?),
+            Expr::FpToSi(a) => LowExpr::FpToSi(self.op(a)?),
+            Expr::Tid => LowExpr::Tid,
+            Expr::NumThreads => LowExpr::NumThreads,
+            Expr::Sqrt(a) => LowExpr::Sqrt(self.op(a)?),
+            Expr::Exp(a) => LowExpr::Exp(self.op(a)?),
+            Expr::Log(a) => LowExpr::Log(self.op(a)?),
+        })
+    }
+
+    fn rpc_arg(&mut self, a: &RpcArgSpec) -> Result<LowRpcArg, String> {
+        Ok(match a {
+            RpcArgSpec::Val(o) => LowRpcArg::Val(self.op(o)?),
+            RpcArgSpec::Ref { ptr, mode, obj_size, offset } => {
+                let OffsetSpec::Const(off) = offset else {
+                    // The tree-walk arm treats a dynamic Ref offset as
+                    // unreachable; refuse to lower rather than guess.
+                    return Err("RPC ref with dynamic offset".into());
+                };
+                LowRpcArg::Ref { ptr: self.op(ptr)?, mode: *mode, obj_size: *obj_size, offset: *off }
+            }
+            RpcArgSpec::MultiRef { ptr, candidates } => LowRpcArg::MultiRef {
+                ptr: self.op(ptr)?,
+                candidates: candidates
+                    .iter()
+                    .map(|(c, mode, size, _)| Ok((self.op(c)?, *mode, *size)))
+                    .collect::<Result<Vec<_>, String>>()?,
+            },
+            RpcArgSpec::DynRef { ptr, mode } => {
+                LowRpcArg::DynRef { ptr: self.op(ptr)?, mode: *mode }
+            }
+        })
+    }
+
+    fn lower_body(&mut self, body: &[Instr]) -> Result<Vec<LowInstr>, String> {
+        let mut out = Vec::with_capacity(body.len());
+        for ins in body {
+            out.push(match ins {
+                Instr::Assign { dst, expr } => {
+                    let expr = self.expr(expr)?;
+                    LowInstr::Assign { dst: self.slot(dst)?, expr }
+                }
+                Instr::Alloca { dst, size } => {
+                    LowInstr::Alloca { dst: self.slot(dst)?, size: *size }
+                }
+                Instr::Store { addr, val, width } => {
+                    LowInstr::Store { addr: self.op(addr)?, val: self.op(val)?, width: *width }
+                }
+                Instr::Load { dst, addr, width, ty } => LowInstr::Load {
+                    dst: self.slot(dst)?,
+                    addr: self.op(addr)?,
+                    width: *width,
+                    ty: *ty,
+                },
+                Instr::Call { dst, callee, args } => LowInstr::Call {
+                    dst: dst.as_deref().map(|d| self.slot(d)).transpose()?,
+                    callee: callee.clone(),
+                    args: args.iter().map(|a| self.op(a)).collect::<Result<_, _>>()?,
+                },
+                Instr::RpcCall { dst, callee_id, args, .. } => LowInstr::RpcCall {
+                    dst: dst.as_deref().map(|d| self.slot(d)).transpose()?,
+                    callee_id: *callee_id,
+                    args: args.iter().map(|a| self.rpc_arg(a)).collect::<Result<_, _>>()?,
+                },
+                Instr::KernelLaunch { region, arg } => {
+                    let Some(rf) = self.m.functions.get(region) else {
+                        return Err(format!("launch of undefined region @{region}"));
+                    };
+                    // The tree-walk executor reads the region's params
+                    // back from the caller scope *by name* at launch
+                    // time; resolve that lookup to caller slots now.
+                    let params = rf
+                        .params
+                        .iter()
+                        .map(|p| {
+                            self.slots.get(&p.name).map(|&s| LowOp::Slot(s)).ok_or_else(|| {
+                                format!(
+                                    "launch region @{region} param %{} not in caller scope",
+                                    p.name
+                                )
+                            })
+                        })
+                        .collect::<Result<Vec<_>, String>>()?;
+                    LowInstr::KernelLaunch {
+                        region: region.clone(),
+                        arg: arg.as_ref().map(|a| self.op(a)).transpose()?,
+                        params,
+                    }
+                }
+                Instr::If { cond, then_body, else_body } => LowInstr::If {
+                    cond: self.op(cond)?,
+                    then_body: self.lower_body(then_body)?,
+                    else_body: self.lower_body(else_body)?,
+                },
+                Instr::While { cond_var, cond, body } => LowInstr::While {
+                    cond_var: self.slot(cond_var)?,
+                    cond: self.lower_body(cond)?,
+                    body: self.lower_body(body)?,
+                },
+                Instr::For { var, lo, hi, step, schedule, body } => LowInstr::For {
+                    var: self.slot(var)?,
+                    lo: self.op(lo)?,
+                    hi: self.op(hi)?,
+                    step: self.op(step)?,
+                    schedule: *schedule,
+                    body: self.lower_body(body)?,
+                },
+                Instr::Parallel { num_threads, body } => LowInstr::Parallel {
+                    num_threads: num_threads.as_ref().map(|n| self.op(n)).transpose()?,
+                    body: self.lower_body(body)?,
+                },
+                Instr::Barrier => LowInstr::Barrier,
+                Instr::Return(op) => {
+                    LowInstr::Return(op.as_ref().map(|o| self.op(o)).transpose()?)
+                }
+                Instr::Intrinsic { dst, name, args } => LowInstr::Intrinsic {
+                    dst: dst.as_deref().map(|d| self.slot(d)).transpose()?,
+                    name: name.clone(),
+                    args: args.iter().map(|a| self.op(a)).collect::<Result<_, _>>()?,
+                },
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+    use crate::rpc::ArgMode;
+
+    const SRC: &str = r#"
+global @buf 16
+
+func @add(%a: i64, %b: i64) -> i64 {
+  %s = add %a, %b
+  return %s
+}
+
+func @main() -> i64 {
+  %x = 5
+  %y = call add(%x, 2)
+  %p = gep @buf, 0
+  store.8 %y, %p
+  %z = load.8 %p
+  %q = gep @buf, 0
+  return %z
+}
+"#;
+
+    #[test]
+    fn slots_pool_and_names_line_up() {
+        let mut m = parse_module(SRC).unwrap();
+        let report = run(&mut m);
+        assert_eq!(report.lowered_fns, 2);
+        assert!(report.skipped.is_empty(), "{:?}", report.skipped);
+
+        let add = &m.lowered["add"];
+        assert_eq!(add.param_slots, vec![0, 1]);
+        assert_eq!(add.nslots, 3, "a, b, s");
+        assert_eq!(add.names, vec!["a", "b", "s"]);
+        assert_eq!(add.fused, 0, "lowering never fuses");
+
+        let main = &m.lowered["main"];
+        assert_eq!(main.nslots as usize, main.names.len());
+        // @buf and the two 0 constants intern once each; 5 and 2 once.
+        let globals = main
+            .pool
+            .iter()
+            .filter(|c| matches!(c, PoolConst::Global(g) if g == "buf"))
+            .count();
+        assert_eq!(globals, 1, "@buf interned once: {:?}", main.pool);
+        let zeros = main.pool.iter().filter(|c| matches!(c, PoolConst::I(0))).count();
+        assert_eq!(zeros, 1, "constant 0 deduplicated: {:?}", main.pool);
+    }
+
+    #[test]
+    fn dynamic_ref_offset_skips_the_function() {
+        let mut m = parse_module("func @main() -> i64 {\n  %p = alloca 8\n  return 0\n}\n").unwrap();
+        let f = m.functions.get_mut("main").unwrap();
+        f.body.insert(
+            1,
+            Instr::RpcCall {
+                dst: None,
+                mangled: "__fwrite_vp".into(),
+                callee_id: 7,
+                args: vec![RpcArgSpec::Ref {
+                    ptr: Operand::var("p"),
+                    mode: ArgMode::In,
+                    obj_size: 8,
+                    offset: OffsetSpec::Dynamic,
+                }],
+            },
+        );
+        let report = run(&mut m);
+        assert_eq!(report.lowered_fns, 0);
+        assert_eq!(report.skipped.len(), 1);
+        assert!(report.skipped[0].1.contains("dynamic offset"), "{:?}", report.skipped);
+        assert!(m.lowered.is_empty());
+    }
+
+    #[test]
+    fn rerun_replaces_previous_lowering() {
+        let mut m = parse_module(SRC).unwrap();
+        run(&mut m);
+        let before = m.lowered.clone();
+        run(&mut m);
+        assert_eq!(m.lowered, before, "lowering is deterministic");
+    }
+}

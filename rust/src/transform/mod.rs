@@ -13,14 +13,25 @@
 //!   the module-wide table classifying every external callee as
 //!   device-native / host-RPC / unresolved (paper §3.2's dichotomy made
 //!   a first-class compile-time artifact).
+//! * [`dce`] — dead-code elimination ahead of `rpcgen`: unreachable
+//!   functions and post-return code are dropped so dead library call
+//!   sites never get landing pads.
+//! * [`lower`] — compiles each function to the register-file execution
+//!   form ([`crate::ir::lowered`]): dense slot-indexed frames and a
+//!   per-function constant pool instead of string-keyed lookups.
+//! * [`fuse`] — folds adjacent lowered pairs (cmp+br, gep+load,
+//!   gep+store, bin+store) into superinstructions.
 //! * [`pm`] — the pass manager: the [`pm::Pass`] trait, the shared
 //!   [`pm::AnalysisCache`], pipeline specs (`--passes` /
 //!   `GPU_FIRST_PASSES`) and per-pass timing.
-//! * [`pipeline`] — the "LTO pass pipeline" façade: verify → libcres →
-//!   rpcgen → multiteam → verify, i.e. what the paper's augmented
-//!   compiler driver runs.
+//! * [`pipeline`] — the "LTO pass pipeline" façade: verify → constfold
+//!   → dce → libcres → rpcgen → multiteam → lower → fuse → verify,
+//!   i.e. what the paper's augmented compiler driver runs.
 
 pub mod constfold;
+pub mod dce;
+pub mod fuse;
+pub mod lower;
 pub mod rpcgen;
 pub mod multiteam;
 pub mod libcres;
@@ -28,7 +39,10 @@ pub mod pm;
 pub mod pipeline;
 
 pub use constfold::ConstFoldReport;
+pub use dce::DceReport;
+pub use fuse::FuseReport;
 pub use libcres::{ResolutionTable, SymbolClass};
+pub use lower::LowerReport;
 pub use pipeline::{compile, compile_with_spec, CompileOptions, CompileReport};
 pub use pm::{
     AnalysisCache, CacheStats, PadCoverage, Pass, PassManager, PassTiming, PipelineSpec,

@@ -6,10 +6,15 @@
 //! built either from [`CompileOptions`] (the historical boolean knobs)
 //! or from an explicit [`PipelineSpec`](super::pm::PipelineSpec)
 //! (`--passes` / `GPU_FIRST_PASSES`). The default pipeline is
-//! `verify → libcres → rpcgen → multiteam → verify` and is behaviorally
-//! identical to the pre-refactor fixed sequence.
+//! `verify → constfold → dce → libcres → rpcgen → multiteam → lower →
+//! fuse → verify`; its tree-transforming prefix is behaviorally
+//! identical to the pre-refactor fixed sequence, and the `lower`/`fuse`
+//! tail produces the register-file sidecar the interpreter prefers.
 
 use super::constfold::ConstFoldReport;
+use super::dce::DceReport;
+use super::fuse::FuseReport;
+use super::lower::LowerReport;
 use super::multiteam::MultiTeamReport;
 use super::pm::{CacheStats, PadCoverage, PassManager, PassTiming, PipelineSpec};
 use super::rpcgen::RpcGenReport;
@@ -22,6 +27,9 @@ pub struct CompileOptions {
     /// Fold format-string expressions to constant globals ahead of
     /// resolution so `rpcgen` derives precise buffer intents (§3.2).
     pub constfold: bool,
+    /// Drop unreachable functions and post-return code before `rpcgen`
+    /// so dead library call sites never get landing pads.
+    pub dce: bool,
     /// Build the libc/RPC symbol-resolution table and report unresolved
     /// callees at compile time.
     pub libcres: bool,
@@ -31,11 +39,26 @@ pub struct CompileOptions {
     /// Expand parallel regions to the whole device (§3.3). Off = original
     /// single-team direct GPU compilation.
     pub multiteam: bool,
+    /// Compile functions to the register-file execution form the
+    /// interpreter prefers (slot-indexed frames, interned constants).
+    /// Off = tree-walk execution throughout.
+    pub lower: bool,
+    /// Fold adjacent lowered pairs (cmp+br, gep+load, gep+store,
+    /// bin+store) into superinstructions.
+    pub fuse: bool,
 }
 
 impl Default for CompileOptions {
     fn default() -> Self {
-        Self { constfold: true, libcres: true, rpcgen: true, multiteam: true }
+        Self {
+            constfold: true,
+            dce: true,
+            libcres: true,
+            rpcgen: true,
+            multiteam: true,
+            lower: true,
+            fuse: true,
+        }
     }
 }
 
@@ -45,8 +68,13 @@ impl Default for CompileOptions {
 #[derive(Debug, Default, Clone)]
 pub struct CompileReport {
     pub constfold: ConstFoldReport,
+    pub dce: DceReport,
     pub rpc: RpcGenReport,
     pub multiteam: MultiTeamReport,
+    /// Register-file lowering counts (functions, slots, pool size).
+    pub lower: LowerReport,
+    /// Superinstruction fusion counts per pair kind.
+    pub fuse: FuseReport,
     /// The `libcres` table (empty when the pass did not run).
     pub resolution: ResolutionTable,
     /// Executed pass names in order.
@@ -83,7 +111,8 @@ impl CompileReport {
 }
 
 /// Compile with the pipeline [`CompileOptions`] selects (the default:
-/// verify → libcres → rpcgen → multiteam → verify).
+/// verify → constfold → dce → libcres → rpcgen → multiteam → lower →
+/// fuse → verify).
 pub fn compile(
     m: &mut Module,
     registry: &WrapperRegistry,
@@ -136,10 +165,16 @@ func @main() -> i64 {
         assert!(body.iter().any(|i| matches!(i, Instr::KernelLaunch { .. })));
         assert!(body.iter().any(|i| matches!(i, Instr::RpcCall { .. })));
         // The pass-manager surface: executed passes, timings, resolution.
-        assert_eq!(report.pipeline, vec!["constfold", "libcres", "rpcgen", "multiteam"]);
-        assert_eq!(report.timings.len(), 4);
+        assert_eq!(
+            report.pipeline,
+            vec!["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse"]
+        );
+        assert_eq!(report.timings.len(), 7);
         assert!(report.total_pass_ns() >= 0.0);
         assert!(report.resolution.host_kind("printf").is_some());
+        // The register-file sidecar exists for every surviving function.
+        assert_eq!(report.lower.lowered_fns as usize, m.functions.len());
+        assert!(m.lowered.contains_key("main"));
         // The AOT coverage check verified the rewritten site's pads.
         assert_eq!(report.pad_coverage.sites, 1);
         assert!(report.pad_coverage.missing.is_empty());
@@ -152,7 +187,15 @@ func @main() -> i64 {
         let report = compile(
             &mut m,
             &reg,
-            CompileOptions { constfold: false, libcres: false, rpcgen: false, multiteam: false },
+            CompileOptions {
+                constfold: false,
+                dce: false,
+                libcres: false,
+                rpcgen: false,
+                multiteam: false,
+                lower: false,
+                fuse: false,
+            },
         )
         .unwrap();
         assert!(report.rpc.rewritten.is_empty());

@@ -18,13 +18,16 @@
 //! * [`PassManager`] — verifies the module, runs the pipeline in order
 //!   recording per-pass wall time and summaries, and verifies again.
 //!
-//! The default pipeline is `libcres → rpcgen → multiteam`; it is
+//! The default pipeline is `constfold → dce → libcres → rpcgen →
+//! multiteam → lower → fuse`; its tree-transforming prefix is
 //! behaviorally identical to the historical fixed sequence (proved by
-//! the `pass_manager` equivalence suite).
+//! the `pass_manager` equivalence suite), and the `lower`/`fuse` tail
+//! only produces the sidecar register-file form the interpreter
+//! prefers (proved equivalent by `tests/lowering.rs`).
 
 use super::libcres::ResolutionTable;
 use super::pipeline::{CompileOptions, CompileReport};
-use super::{constfold, libcres, multiteam, rpcgen};
+use super::{constfold, dce, fuse, libcres, lower, multiteam, rpcgen};
 use crate::analysis::callgraph::{walk, CallGraph};
 use crate::analysis::objects::def_map;
 use crate::ir::{Instr, Module};
@@ -33,7 +36,8 @@ use crate::rpc::WrapperRegistry;
 use std::collections::HashMap;
 
 /// The pass names the manager knows, in default pipeline order.
-pub const KNOWN_PASSES: &[&str] = &["constfold", "libcres", "rpcgen", "multiteam"];
+pub const KNOWN_PASSES: &[&str] =
+    &["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse"];
 
 /// What one pass invocation reports back to the manager.
 #[derive(Debug, Clone)]
@@ -149,7 +153,8 @@ pub struct PipelineSpec {
 }
 
 impl Default for PipelineSpec {
-    /// The full default pipeline: `libcres → rpcgen → multiteam`.
+    /// The full default pipeline: `constfold → dce → libcres → rpcgen →
+    /// multiteam → lower → fuse`.
     fn default() -> Self {
         Self { names: KNOWN_PASSES.to_vec() }
     }
@@ -192,6 +197,9 @@ impl PipelineSpec {
         if opts.constfold {
             names.push("constfold");
         }
+        if opts.dce {
+            names.push("dce");
+        }
         if opts.libcres {
             names.push("libcres");
         }
@@ -200,6 +208,12 @@ impl PipelineSpec {
         }
         if opts.multiteam {
             names.push("multiteam");
+        }
+        if opts.lower {
+            names.push("lower");
+        }
+        if opts.fuse {
+            names.push("fuse");
         }
         Self { names }
     }
@@ -233,9 +247,12 @@ impl PipelineSpec {
 fn make_pass(name: &str) -> Option<Box<dyn Pass>> {
     match name {
         "constfold" => Some(Box::new(ConstFoldPass)),
+        "dce" => Some(Box::new(DcePass)),
         "libcres" => Some(Box::new(LibcResPass)),
         "rpcgen" => Some(Box::new(RpcGenPass)),
         "multiteam" => Some(Box::new(MultiTeamPass)),
+        "lower" => Some(Box::new(LowerPass)),
+        "fuse" => Some(Box::new(FusePass)),
         _ => None,
     }
 }
@@ -284,6 +301,13 @@ impl PassManager {
             let outcome = pass.run(m, &mut cx)?;
             if outcome.changed {
                 cx.cache.invalidate();
+                // A tree-mutating pass makes any existing lowering
+                // stale; drop it so the interpreter can never execute a
+                // lowered body that disagrees with the tree (matters
+                // only for explicit specs that order `lower` early).
+                if !matches!(pass.name(), "lower" | "fuse") {
+                    m.lowered.clear();
+                }
             }
             cx.report.pipeline.push(pass.name().to_string());
             cx.report.timings.push(PassTiming {
@@ -439,6 +463,25 @@ impl Pass for ConstFoldPass {
     }
 }
 
+/// Dead-code elimination ahead of `rpcgen` (see [`dce`]): unreachable
+/// functions never reach pad synthesis, shrinking the registry's
+/// working set and the AOT coverage surface.
+struct DcePass;
+
+impl Pass for DcePass {
+    fn name(&self) -> &'static str {
+        "dce"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let report = dce::run_with(m, &mut cx.cache);
+        let changed = report.changed();
+        let summary = report.summary();
+        cx.report.dce = report;
+        Ok(PassOutcome { summary, changed })
+    }
+}
+
 /// Materializes the module-wide symbol-resolution table into the report
 /// (pure analysis; see [`libcres`]).
 struct LibcResPass;
@@ -498,6 +541,42 @@ impl Pass for MultiTeamPass {
         );
         cx.report.multiteam = report;
         Ok(PassOutcome { summary, changed })
+    }
+}
+
+/// Compiles every function to the register-file form the interpreter
+/// prefers (see [`lower`]). Reports `changed: false` — the tree is
+/// untouched and the lowered form is a sidecar, so cached tree analyses
+/// stay valid.
+struct LowerPass;
+
+impl Pass for LowerPass {
+    fn name(&self) -> &'static str {
+        "lower"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let report = lower::run(m);
+        let summary = report.summary();
+        cx.report.lower = report;
+        Ok(PassOutcome { summary, changed: false })
+    }
+}
+
+/// Folds adjacent lowered pairs into superinstructions (see [`fuse`]).
+/// Also `changed: false`: only the sidecar is rewritten.
+struct FusePass;
+
+impl Pass for FusePass {
+    fn name(&self) -> &'static str {
+        "fuse"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let report = fuse::run(m);
+        let summary = report.summary();
+        cx.report.fuse = report;
+        Ok(PassOutcome { summary, changed: false })
     }
 }
 
@@ -638,21 +717,32 @@ func @main() -> i64 {
     fn spec_from_options_drops_disabled_passes() {
         let opts = CompileOptions {
             constfold: false,
+            dce: false,
             libcres: true,
             rpcgen: true,
             multiteam: false,
+            lower: false,
+            fuse: false,
         };
         assert_eq!(PipelineSpec::from_options(opts).names(), &["libcres", "rpcgen"]);
-        let with_fold = CompileOptions { multiteam: false, ..CompileOptions::default() };
+        let with_fold = CompileOptions {
+            multiteam: false,
+            lower: false,
+            fuse: false,
+            ..CompileOptions::default()
+        };
         assert_eq!(
             PipelineSpec::from_options(with_fold).names(),
-            &["constfold", "libcres", "rpcgen"]
+            &["constfold", "dce", "libcres", "rpcgen"]
         );
         let none = CompileOptions {
             constfold: false,
+            dce: false,
             libcres: false,
             rpcgen: false,
             multiteam: false,
+            lower: false,
+            fuse: false,
         };
         assert!(PipelineSpec::from_options(none).names().is_empty());
         assert_eq!(PipelineSpec::from_options(CompileOptions::default()), PipelineSpec::default());
@@ -664,15 +754,19 @@ func @main() -> i64 {
         let reg = WrapperRegistry::new();
         let report = PassManager::from_spec(&PipelineSpec::default()).run(&mut m, &reg).unwrap();
         assert_eq!(report.pipeline, KNOWN_PASSES.to_vec());
-        assert_eq!(report.timings.len(), 4);
+        assert_eq!(report.timings.len(), 7);
         for t in &report.timings {
             assert!(t.wall_ns >= 0.0);
             assert!(!t.summary.is_empty());
         }
         assert!(!report.timings[0].changed, "direct @fmt format: nothing to fold");
-        assert!(!report.timings[1].changed, "libcres is pure analysis");
-        assert!(report.timings[2].changed, "rpcgen rewrote the printf site");
-        assert!(report.timings[3].changed, "multiteam expanded the region");
+        assert!(!report.timings[1].changed, "no dead code in SRC");
+        assert!(!report.timings[2].changed, "libcres is pure analysis");
+        assert!(report.timings[3].changed, "rpcgen rewrote the printf site");
+        assert!(report.timings[4].changed, "multiteam expanded the region");
+        assert!(!report.timings[5].changed, "lower only writes the sidecar");
+        assert!(!report.timings[6].changed, "fuse only rewrites the sidecar");
+        assert!(report.lower.lowered_fns >= 1, "{:?}", report.lower);
         // The AOT coverage check verified the generated site's pads.
         assert_eq!(report.pad_coverage.sites, 1);
         assert_eq!(report.pad_coverage.scalar_pads, 1);
@@ -689,10 +783,12 @@ func @main() -> i64 {
         // cache (libcres did not mutate) — exactly one build, >= 1 hit.
         assert_eq!(report.cache.resolution_builds, 1);
         assert!(report.cache.hits >= 1, "rpcgen must hit the cached table: {:?}", report.cache);
-        // rpcgen and multiteam both mutated -> two invalidations.
+        // rpcgen and multiteam both mutated -> two invalidations (dce,
+        // lower and fuse change nothing on this corpus).
         assert_eq!(report.cache.invalidations, 2);
-        // multiteam's call graph was built after rpcgen's invalidation.
-        assert_eq!(report.cache.callgraph_builds, 1);
+        // dce built the call graph once up front; multiteam rebuilt it
+        // after rpcgen's invalidation.
+        assert_eq!(report.cache.callgraph_builds, 2);
     }
 
     #[test]

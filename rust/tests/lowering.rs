@@ -1,0 +1,269 @@
+//! Tree-walk ↔ register-core equivalence corpus.
+//!
+//! The `lower` pass makes the register-file executor the default
+//! execution path; this suite is the proof obligation that came with
+//! it. Every corpus program — loops with fusable gep/load/store
+//! chains, nested control flow, recursion, parallel regions with
+//! barriers, host RPC I/O — runs under three pipelines:
+//!
+//! * **no-lower** (`constfold,dce,libcres,rpcgen,multiteam`): the
+//!   tree-walk executor, the pre-register-core behaviour (and CI's
+//!   no-lower pass-shape leg);
+//! * **lower** (… + `lower`): the register core, unfused;
+//! * **default** (… + `lower,fuse`): the register core with
+//!   superinstructions.
+//!
+//! All three must agree on exit code, stdout, and the modeled device
+//! counters (`int_ops`, `flops_f64` — a superinstruction charges both
+//! of its component instructions, so fusion is invisible to modeled
+//! time), at the paper's 1×1×1×1 engine shape **and** at a wide
+//! multi-lane shape.
+
+use gpu_first::coordinator::{Config, GpuFirstSession, RunMetrics};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::ir::parser::parse_module;
+use gpu_first::transform::PipelineSpec;
+
+struct Program {
+    name: &'static str,
+    src: &'static str,
+    files: &'static [(&'static str, &'static [u8])],
+    /// Whether the default pipeline must find fusable pairs here.
+    fusable: bool,
+}
+
+const CORPUS: &[Program] = &[
+    Program {
+        name: "fusable_loop_sum",
+        src: r#"
+global @data 1600
+global @rep const 7 "sum=%d"
+
+func @main() -> i64 {
+  %acc = alloca 8
+  store.8 0, %acc
+  for %i = 0 to 100 step 1 {
+    %v = mul %i, 3
+    %off = mul %i, 8
+    %p = gep @data, %off
+    store.8 %v, %p
+    %q = gep @data, %off
+    %r = load.8 %q
+    %a = load.8 %acc
+    %a2 = add %a, %r
+    store.8 %a2, %acc
+  }
+  %sum = load.8 %acc
+  %big = gt %sum, 10000
+  if %big {
+    call printf(@rep, %sum)
+  }
+  return %sum
+}
+"#,
+        files: &[],
+        fusable: true,
+    },
+    Program {
+        name: "control_flow_and_recursion",
+        src: r#"
+func @fib(%n: i64) -> i64 {
+  %c = lt %n, 2
+  if %c {
+    return %n
+  }
+  %n1 = sub %n, 1
+  %n2 = sub %n, 2
+  %a = call fib(%n1)
+  %b = call fib(%n2)
+  %r = add %a, %b
+  return %r
+}
+
+func @main() -> i64 {
+  %i = alloca 8
+  store.8 0, %i
+  %acc = alloca 8
+  store.8 0, %acc
+  while %c {
+    %iv = load.8 %i
+    %c = lt %iv, 12
+  } {
+    %iv2 = load.8 %i
+    %f = call fib(%iv2)
+    %a = load.8 %acc
+    %a2 = add %a, %f
+    store.8 %a2, %acc
+    %iv3 = add %iv2, 1
+    store.8 %iv3, %i
+    %odd = rem %iv3, 2
+    if %odd {
+      %fv = sitofp %a2
+      %s = sqrt %fv
+      %back = fptosi %s
+    }
+  }
+  %sum = load.8 %acc
+  %pick = select %sum, %sum, 7
+  return %pick
+}
+"#,
+        files: &[],
+        fusable: true,
+    },
+    Program {
+        name: "parallel_barrier_reduction",
+        src: r#"
+global @part 2048
+
+func @main() -> i64 {
+  parallel num_threads(64) {
+    %t = tid
+    %off = mul %t, 8
+    %p = gep @part, %off
+    %v = mul %t, 2
+    store.8 %v, %p
+    barrier
+    %z = eq %t, 0
+    if %z {
+      for %i = 1 to 64 step 1 {
+        %o2 = mul %i, 8
+        %q = gep @part, %o2
+        %w = load.8 %q
+        %h = gep @part, 0
+        %cur = load.8 %h
+        %nx = add %cur, %w
+        store.8 %nx, %h
+      }
+    }
+  }
+  %head = gep @part, 0
+  %sum = load.8 %head
+  return %sum
+}
+"#,
+        files: &[],
+        fusable: true,
+    },
+    Program {
+        name: "host_io_round_trip",
+        src: r#"
+global @path const 6 "n.txt"
+global @mode const 2 "r"
+global @fmt const 3 "%d"
+global @rep const 11 "scaled %d\n"
+
+func @main() -> i64 {
+  %fd = call fopen(@path, @mode)
+  %np = alloca 4
+  %r = call fscanf(%fd, @fmt, %np)
+  call fclose(%fd)
+  %n = load.4 %np
+  %scaled = mul %n, 10
+  call printf(@rep, %scaled)
+  return %scaled
+}
+"#,
+        files: &[("n.txt", b"123")],
+        fusable: true,
+    },
+];
+
+fn config(wide: bool) -> Config {
+    if wide {
+        Config {
+            mem: MemConfig::small(),
+            teams: 8,
+            threads_per_team: 64,
+            rpc_lanes: 4,
+            rpc_workers: 2,
+            rpc_launch_threads: 2,
+            rpc_launch_slots: 2,
+            ..Default::default()
+        }
+    } else {
+        // The paper's 1×1×1×1 single-slot shape.
+        Config { mem: MemConfig::small(), teams: 4, threads_per_team: 32, ..Default::default() }
+    }
+}
+
+fn run_with(p: &Program, spec: &PipelineSpec, wide: bool) -> (i64, String, RunMetrics) {
+    let module = parse_module(p.src).unwrap();
+    let mut s = GpuFirstSession::start(config(wide));
+    for (path, content) in p.files {
+        s.host.put_file(path, content);
+    }
+    let (exit, metrics) = s.execute_spec(module, spec, &[]).unwrap();
+    let stdout = s.host.stdout_string();
+    s.stop();
+    (exit, stdout, metrics)
+}
+
+fn no_lower() -> PipelineSpec {
+    PipelineSpec::parse("constfold,dce,libcres,rpcgen,multiteam").unwrap()
+}
+
+fn lower_only() -> PipelineSpec {
+    PipelineSpec::parse("constfold,dce,libcres,rpcgen,multiteam,lower").unwrap()
+}
+
+#[test]
+fn register_core_matches_tree_walk_across_the_corpus() {
+    for p in CORPUS {
+        for wide in [false, true] {
+            let (exit_t, out_t, m_t) = run_with(p, &no_lower(), wide);
+            let (exit_l, out_l, m_l) = run_with(p, &lower_only(), wide);
+            let (exit_f, out_f, m_f) = run_with(p, &PipelineSpec::default(), wide);
+
+            assert_eq!(exit_t, exit_l, "{} (wide={wide}): exit, tree vs lowered", p.name);
+            assert_eq!(exit_t, exit_f, "{} (wide={wide}): exit, tree vs fused", p.name);
+            assert_eq!(out_t, out_l, "{} (wide={wide}): stdout, tree vs lowered", p.name);
+            assert_eq!(out_t, out_f, "{} (wide={wide}): stdout, tree vs fused", p.name);
+
+            // The executors mirror the device counters exactly (a
+            // superinstruction charges both component instructions).
+            assert_eq!(
+                m_t.main_stats.int_ops, m_l.main_stats.int_ops,
+                "{} (wide={wide}): int_ops, tree vs lowered",
+                p.name
+            );
+            assert_eq!(
+                m_t.main_stats.int_ops, m_f.main_stats.int_ops,
+                "{} (wide={wide}): int_ops, tree vs fused",
+                p.name
+            );
+            assert_eq!(
+                m_t.main_stats.flops_f64, m_f.main_stats.flops_f64,
+                "{} (wide={wide}): flops, tree vs fused",
+                p.name
+            );
+            assert_eq!(m_t.kernel_launches, m_f.kernel_launches, "{} (wide={wide})", p.name);
+            assert_eq!(m_t.unresolved_calls, m_f.unresolved_calls, "{} (wide={wide})", p.name);
+
+            // Which executor actually ran is visible in the metrics.
+            assert_eq!(m_t.lowered_fns, 0, "{}: no-lower leg stays tree-walk", p.name);
+            assert_eq!(m_t.fused_instrs, 0, "{}", p.name);
+            assert!(m_l.lowered_fns > 0, "{}: lowered leg uses the register core", p.name);
+            assert_eq!(m_l.fused_instrs, 0, "{}: no fuse pass, no pairs", p.name);
+            assert!(m_f.lowered_fns > 0, "{}", p.name);
+            if p.fusable {
+                assert!(
+                    m_f.fused_instrs > 0,
+                    "{}: fusable corpus must produce superinstructions",
+                    p.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn default_pipeline_runs_the_register_core() {
+    // The register core is the *default* execution path: an unqualified
+    // default-spec run must report lowered functions.
+    let p = &CORPUS[0];
+    let (_, _, m) = run_with(p, &PipelineSpec::default(), false);
+    assert!(m.lowered_fns > 0, "default pipeline must lower: {}", m.summary());
+    assert!(m.fused_instrs > 0, "default pipeline must fuse: {}", m.summary());
+    assert!(m.summary().contains("register_core"), "{}", m.summary());
+}

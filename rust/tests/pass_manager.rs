@@ -3,11 +3,13 @@
 //! * **Equivalence**: the pass-manager default pipeline must be
 //!   behaviorally identical to the historical fixed rpcgen→multiteam
 //!   sequence — same compiled module text, same execution output, same
-//!   key `RunMetrics` — over an app-shaped IR corpus.
+//!   key `RunMetrics` — over an app-shaped IR corpus. (The default
+//!   pipeline now ends in `lower,fuse`, so this equivalence also pins
+//!   the register-file executor against the legacy tree-walk runs.)
 //! * **Pass-shape matrix**: `GPU_FIRST_PASSES` (exported by CI's
 //!   pass-shape matrix job: default / no-libcres / no-multiteam /
-//!   rpcgen-only) selects the pipeline the corpus re-runs under; every
-//!   shape must preserve program semantics.
+//!   no-lower / rpcgen-only) selects the pipeline the corpus re-runs
+//!   under; every shape must preserve program semantics.
 //! * **CLI**: `--passes` ordering, unknown-pass usage errors, and the
 //!   `--explain` resolution/timing output.
 
@@ -287,8 +289,12 @@ fn report_carries_timings_resolution_and_cache_counters() {
     }
     s.compile_spec(&mut module, &PipelineSpec::default()).unwrap();
     let report = s.report.as_ref().unwrap();
-    assert_eq!(report.pipeline, vec!["constfold", "libcres", "rpcgen", "multiteam"]);
-    assert_eq!(report.timings.len(), 4);
+    assert_eq!(
+        report.pipeline,
+        vec!["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse"]
+    );
+    assert_eq!(report.timings.len(), 7);
+    assert_eq!(report.lower.lowered_fns as usize, module.functions.len());
     // libcres built the table once; rpcgen reused it from cache.
     assert_eq!(report.cache.resolution_builds, 1);
     assert!(report.cache.hits >= 1, "{:?}", report.cache);
@@ -349,9 +355,13 @@ fn cli_passes_override_and_unknown_pass_error() {
     let text = String::from_utf8_lossy(&out.stdout);
     assert!(text.contains("launch @__region_0"), "{text}");
     let err = String::from_utf8_lossy(&out.stderr);
-    assert!(err.contains("constfold -> libcres -> rpcgen -> multiteam"), "{err}");
+    assert!(
+        err.contains("constfold -> dce -> libcres -> rpcgen -> multiteam -> lower -> fuse"),
+        "{err}"
+    );
     assert!(err.contains("unresolved symbol 'dgemm'"), "{err}");
     assert!(err.contains("pad coverage (AOT)"), "coverage verdict in compile output: {err}");
+    assert!(err.contains("lower:"), "register-core counters in compile output: {err}");
 }
 
 #[test]
@@ -367,11 +377,18 @@ fn cli_explain_shows_timings_and_classification() {
         .unwrap();
     assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
     let text = String::from_utf8_lossy(&out.stdout);
-    assert!(text.contains("pass pipeline (constfold -> libcres -> rpcgen)"), "{text}");
+    assert!(
+        text.contains("pass pipeline (constfold -> dce -> libcres -> rpcgen -> lower -> fuse)"),
+        "{text}"
+    );
     assert!(text.contains("pad coverage (AOT"), "coverage verdict in explain output: {text}");
     assert!(text.contains("libcres"), "{text}");
     // Per-external-callee classification: device / host-rpc / unresolved.
     assert!(text.contains("puts") && text.contains("host-rpc"), "{text}");
     assert!(text.contains("dgemm") && text.contains("unresolved"), "{text}");
     assert!(text.contains("__puts_cp"), "RPC arg classification intact: {text}");
+    // Register-file dump: slots, pool constants, and the slot legend.
+    assert!(text.contains("register-file execution form"), "{text}");
+    assert!(text.contains("lowered @main("), "{text}");
+    assert!(text.contains("; slots:"), "{text}");
 }
