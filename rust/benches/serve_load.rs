@@ -1,0 +1,175 @@
+//! Serving-daemon load bench: the sessions-per-second saturation curve
+//! behind `BENCH_serve.json`.
+//!
+//! One resident [`ServeDaemon`] per load level; `opens` concurrent
+//! clients race `open_session` on the same module (so every open after
+//! the first is a cache hit), run it a few times, and close. Stepping
+//! `opens` past `max_sessions + queue_depth` drives the daemon through
+//! its whole admission regime — uncontended, queued, and rejecting —
+//! while the per-level snapshot records cache hits, tenant counters,
+//! and the per-session p50/p99 latency.
+
+use gpu_first::coordinator::{Config, ServeConfig, ServeDaemon, ServeError};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::util::fmt_ns;
+use gpu_first::util::json::Json;
+use gpu_first::util::table::Table;
+
+/// Quick mode (`SERVE_QUICK=1`): CI's serve-smoke job shrinks the load
+/// levels and per-session run counts so the curve lands in seconds.
+fn quick() -> bool {
+    std::env::var("SERVE_QUICK").is_ok()
+}
+
+/// Concurrent-open load levels. The daemon admits `MAX_SESSIONS` and
+/// queues `QUEUE_DEPTH`, so the top levels run it saturated.
+fn load_levels() -> &'static [usize] {
+    if quick() {
+        &[2, 4, 8, 16]
+    } else {
+        &[2, 4, 8, 16, 32, 64]
+    }
+}
+
+fn runs_per_session() -> usize {
+    if quick() {
+        2
+    } else {
+        8
+    }
+}
+
+const MAX_SESSIONS: usize = 4;
+const QUEUE_DEPTH: usize = 8;
+const TENANTS: usize = 2;
+
+/// The served module: the Fig. 7 printf shape, small enough that the
+/// curve measures the serving machinery rather than the kernel.
+const SRC: &str = r#"
+global @fmt const 11 "served %d\n"
+
+func @main(%n: i64) -> i64 {
+  call printf(@fmt, %n)
+  return %n
+}
+"#;
+
+struct Level {
+    opens: usize,
+    sessions_per_sec: f64,
+    served: usize,
+    rejected_opens: usize,
+    snap: gpu_first::coordinator::ServeSnapshot,
+}
+
+/// One saturation point: `opens` scoped threads each open / run / close
+/// one session against a fresh daemon. Returns the measured throughput
+/// and the daemon's final counter snapshot.
+fn level(opens: usize) -> Level {
+    let daemon = ServeDaemon::start(ServeConfig {
+        base: Config {
+            mem: MemConfig::small(),
+            teams: 2,
+            threads_per_team: 16,
+            ..Default::default()
+        },
+        max_sessions: MAX_SESSIONS,
+        queue_depth: QUEUE_DEPTH,
+    });
+    let runs = runs_per_session();
+    let t0 = std::time::Instant::now();
+    let (served, rejected) = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..opens)
+            .map(|i| {
+                let daemon = &daemon;
+                s.spawn(move || {
+                    let tenant = format!("tenant-{}", i % TENANTS);
+                    match daemon.open_session(&tenant, SRC) {
+                        Ok(mut session) => {
+                            for k in 0..runs {
+                                let (ret, _) = session.run(&[k as i64]);
+                                assert_eq!(ret, k as i64);
+                            }
+                            session.close();
+                            (1usize, 0usize)
+                        }
+                        // Saturation is the point of the top levels: a
+                        // rejected open is a data point, not a failure.
+                        Err(ServeError::Saturated { .. }) => (0, 1),
+                        Err(e) => panic!("open failed: {e}"),
+                    }
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).fold((0, 0), |a, b| (a.0 + b.0, a.1 + b.1))
+    });
+    let secs = t0.elapsed().as_secs_f64();
+    let snap = daemon.snapshot();
+    assert_eq!(served + rejected, opens, "every open either served or rejected");
+    assert_eq!(snap.admitted as usize, served);
+    assert_eq!(snap.rejected as usize, rejected);
+    assert!(snap.cache_misses <= 1, "the module compiles at most once per daemon");
+    daemon.shutdown();
+    Level { opens, sessions_per_sec: served as f64 / secs, served, rejected_opens: rejected, snap }
+}
+
+fn main() {
+    println!("== serve load: sessions/sec saturation curve ==");
+    println!(
+        "daemon: max_sessions={MAX_SESSIONS} queue_depth={QUEUE_DEPTH}, {} runs per session, {} tenants",
+        runs_per_session(),
+        TENANTS,
+    );
+
+    let mut t = Table::new(
+        "serving throughput vs concurrent opens",
+        &[
+            "opens",
+            "sessions/s",
+            "served",
+            "queued",
+            "rejected",
+            "cache_hits",
+            "run p50",
+            "run p99",
+        ],
+    );
+    let mut points: Vec<Json> = Vec::new();
+    for &opens in load_levels() {
+        let lv = level(opens);
+        let lat = &lv.snap.session_latency;
+        t.row(&[
+            lv.opens.to_string(),
+            format!("{:.0}", lv.sessions_per_sec),
+            lv.served.to_string(),
+            lv.snap.queued.to_string(),
+            lv.rejected_opens.to_string(),
+            lv.snap.cache_hits.to_string(),
+            fmt_ns(lat.p50() as f64),
+            fmt_ns(lat.p99() as f64),
+        ]);
+        points.push(Json::obj(vec![
+            ("opens", Json::uint(lv.opens as u64)),
+            ("sessions_per_sec", Json::num(lv.sessions_per_sec)),
+            ("snapshot", lv.snap.to_json()),
+        ]));
+    }
+    t.print();
+
+    let report = Json::obj(vec![
+        ("bench", Json::str("serve_load")),
+        ("quick", Json::bool(quick())),
+        ("max_sessions", Json::uint(MAX_SESSIONS as u64)),
+        ("queue_depth", Json::uint(QUEUE_DEPTH as u64)),
+        ("runs_per_session", Json::uint(runs_per_session() as u64)),
+        ("tenants", Json::uint(TENANTS as u64)),
+        ("points", Json::Arr(points)),
+    ]);
+    println!("\nJSON {report}");
+    // CI's serve-smoke job exports SERVE_JSON=BENCH_serve.json and
+    // commits the file next to the fig07/08/09 trajectories.
+    if let Ok(path) = std::env::var("SERVE_JSON") {
+        std::fs::write(&path, format!("{report}\n")).expect("write bench JSON");
+        println!("wrote {path}");
+    }
+}

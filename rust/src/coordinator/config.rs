@@ -1,9 +1,84 @@
 //! Runtime configuration (the paper's environment knobs: allocator flag,
 //! grid shape, memory sizes, RPC engine shape).
+//!
+//! Construction is a validating builder: [`Config::builder`] returns a
+//! [`ConfigBuilder`] whose `build()` performs every cross-field check
+//! (data-cap alignment, positive engine knobs, `auto` lane/worker
+//! resolution, arena-vs-managed-segment fit) and reports failures as
+//! the typed [`ConfigError`] enum instead of ad-hoc strings or process
+//! exits. [`Config::from_args`] survives as the CLI shim: it maps
+//! `Args` parse failures onto `ConfigError` via the typed
+//! [`FlagParseError`] accessor and renders the result to the historical
+//! usage strings (byte-identical messages, exit codes preserved in
+//! `main`).
 
 use crate::gpu::grid::AllocatorKind;
 use crate::gpu::memory::MemConfig;
-use crate::util::cli::Args;
+use crate::util::cli::{Args, FlagParseError};
+use std::fmt;
+
+/// Why a [`ConfigBuilder::build`] (or `Config::from_args`) was refused.
+/// `Display` renders the exact usage strings the string-returning
+/// `from_args` always produced, so the shim is byte-compatible.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ConfigError {
+    /// A flag value failed to parse (`--teams lots`).
+    Flag(FlagParseError),
+    /// A knob that must be >= 1 was zero. Holds the flag-group prefix of
+    /// the historical message ("teams/threads", "--rpc-lanes/--rpc-workers",
+    /// "--rpc-launch-threads/--rpc-launch-slots").
+    NotPositive { what: &'static str },
+    /// `--rpc-data-cap` must be a positive multiple of 64 bytes.
+    DataCapAlignment { cap: u64 },
+    /// `--allocator` value not recognized (message from
+    /// [`AllocatorKind::parse`]).
+    Allocator(String),
+    /// The selected mailbox arena cannot be reserved inside the managed
+    /// segment.
+    ArenaTooLarge {
+        lanes: usize,
+        launch_slots: usize,
+        lane_stride: u64,
+        reserved: u64,
+        managed: u64,
+    },
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Flag(e) => write!(f, "{e}"),
+            ConfigError::NotPositive { what } => write!(f, "{what} must be positive"),
+            ConfigError::DataCapAlignment { cap } => {
+                write!(f, "--rpc-data-cap {cap} must be a positive multiple of 64 bytes")
+            }
+            ConfigError::Allocator(msg) => write!(f, "{msg}"),
+            ConfigError::ArenaTooLarge { lanes, launch_slots, lane_stride, reserved, managed } => {
+                write!(
+                    f,
+                    "the RPC arena ({lanes} lanes + a {launch_slots}-slot launch ring at \
+                     {lane_stride} B each) needs {reserved} B of managed memory (plus 1 MiB \
+                     headroom) but the managed segment is {managed} B; lower --rpc-lanes, \
+                     --rpc-launch-slots or --rpc-data-cap"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
+impl From<FlagParseError> for ConfigError {
+    fn from(e: FlagParseError) -> Self {
+        ConfigError::Flag(e)
+    }
+}
+
+impl From<ConfigError> for String {
+    fn from(e: ConfigError) -> Self {
+        e.to_string()
+    }
+}
 
 #[derive(Debug, Clone, Copy)]
 pub struct Config {
@@ -58,85 +133,226 @@ impl Default for Config {
     }
 }
 
+/// Fixed vs `auto` sizing for the lane/worker knobs (`auto` resolves at
+/// [`ConfigBuilder::build`] time, after every input it depends on is
+/// known).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Sizing {
+    Fixed(usize),
+    Auto,
+}
+
+/// Validating builder for [`Config`]. Setters never fail; `build()`
+/// runs every check once, in dependency order, and returns a typed
+/// [`ConfigError`] on the first violation.
+#[derive(Debug, Clone)]
+pub struct ConfigBuilder {
+    cfg: Config,
+    lanes: Sizing,
+    workers: Sizing,
+}
+
+impl Default for ConfigBuilder {
+    fn default() -> Self {
+        let cfg = Config::default();
+        Self { lanes: Sizing::Fixed(cfg.rpc_lanes), workers: Sizing::Fixed(cfg.rpc_workers), cfg }
+    }
+}
+
+impl ConfigBuilder {
+    pub fn teams(mut self, n: usize) -> Self {
+        self.cfg.teams = n;
+        self
+    }
+
+    pub fn threads_per_team(mut self, n: usize) -> Self {
+        self.cfg.threads_per_team = n;
+        self
+    }
+
+    pub fn allocator(mut self, a: AllocatorKind) -> Self {
+        self.cfg.allocator = a;
+        self
+    }
+
+    pub fn mem(mut self, mem: MemConfig) -> Self {
+        self.cfg.mem = mem;
+        self
+    }
+
+    /// Size the global heap segment in MiB (the `--heap-mb` knob).
+    pub fn heap_mb(mut self, mb: u64) -> Self {
+        self.cfg.mem.global_size = mb << 20;
+        self
+    }
+
+    pub fn rpc_lanes(mut self, n: usize) -> Self {
+        self.lanes = Sizing::Fixed(n);
+        self
+    }
+
+    /// Size the lanes from the team count at build time (`--rpc-lanes
+    /// auto`).
+    pub fn rpc_lanes_auto(mut self) -> Self {
+        self.lanes = Sizing::Auto;
+        self
+    }
+
+    pub fn rpc_workers(mut self, n: usize) -> Self {
+        self.workers = Sizing::Fixed(n);
+        self
+    }
+
+    /// One worker per resolved lane, clamped to the host (`--rpc-workers
+    /// auto`).
+    pub fn rpc_workers_auto(mut self) -> Self {
+        self.workers = Sizing::Auto;
+        self
+    }
+
+    pub fn rpc_launch_threads(mut self, n: usize) -> Self {
+        self.cfg.rpc_launch_threads = n;
+        self
+    }
+
+    pub fn rpc_launch_slots(mut self, n: usize) -> Self {
+        self.cfg.rpc_launch_slots = n;
+        self
+    }
+
+    pub fn rpc_data_cap(mut self, cap: u64) -> Self {
+        self.cfg.rpc_data_cap = Some(cap);
+        self
+    }
+
+    pub fn rpc_batch(mut self, on: bool) -> Self {
+        self.cfg.rpc_batch = on;
+        self
+    }
+
+    pub fn verbose(mut self, on: bool) -> Self {
+        self.cfg.verbose = on;
+        self
+    }
+
+    pub fn trace(mut self, on: bool) -> Self {
+        self.cfg.trace = on;
+        self
+    }
+
+    /// Validate every field and resolve the `auto` sizings. The check
+    /// order is load-bearing: the data cap validates before the `auto`
+    /// lane resolver feeds it into the arena constructors (whose
+    /// alignment assert would otherwise turn a usage error into a
+    /// panic), and lanes resolve before workers so `auto` workers size
+    /// from the resolved lane count.
+    pub fn build(self) -> Result<Config, ConfigError> {
+        let mut cfg = self.cfg;
+        if let Some(cap) = cfg.rpc_data_cap {
+            if cap == 0 || cap % 64 != 0 {
+                return Err(ConfigError::DataCapAlignment { cap });
+            }
+        }
+        if cfg.rpc_launch_threads == 0 || cfg.rpc_launch_slots == 0 {
+            return Err(ConfigError::NotPositive {
+                what: "--rpc-launch-threads/--rpc-launch-slots",
+            });
+        }
+        cfg.rpc_lanes = match self.lanes {
+            Sizing::Auto => {
+                auto_lanes(cfg.teams, &cfg.mem, cfg.rpc_launch_slots, cfg.rpc_data_cap)
+            }
+            Sizing::Fixed(n) => n,
+        };
+        cfg.rpc_workers = match self.workers {
+            Sizing::Auto => auto_workers(cfg.rpc_lanes),
+            Sizing::Fixed(n) => n,
+        };
+        if cfg.rpc_lanes == 0 || cfg.rpc_workers == 0 {
+            return Err(ConfigError::NotPositive { what: "--rpc-lanes/--rpc-workers" });
+        }
+        if cfg.teams == 0 || cfg.threads_per_team == 0 {
+            return Err(ConfigError::NotPositive { what: "teams/threads" });
+        }
+        // Reject arena shapes the device cannot reserve here, where it
+        // is a clean typed error rather than a panic in
+        // Device::with_arena.
+        let arena = cfg.arena();
+        if arena.reserved_bytes() + (1 << 20) > cfg.mem.managed_size {
+            return Err(ConfigError::ArenaTooLarge {
+                lanes: cfg.rpc_lanes,
+                launch_slots: cfg.rpc_launch_slots,
+                lane_stride: arena.lane_stride(),
+                reserved: arena.reserved_bytes(),
+                managed: cfg.mem.managed_size,
+            });
+        }
+        Ok(cfg)
+    }
+}
+
 impl Config {
+    /// A validating builder over the default configuration.
+    pub fn builder() -> ConfigBuilder {
+        ConfigBuilder::default()
+    }
+
     /// Build from CLI arguments:
     /// `--teams N --threads N --allocator generic|vendor|balanced[N,M]
     ///  --heap-mb N --rpc-lanes N|auto --rpc-workers N|auto
     ///  --rpc-launch-threads N --rpc-launch-slots N
     ///  --rpc-data-cap BYTES --no-rpc-batch --verbose --trace`
     /// (`--trace-out FILE` implies `--trace`).
+    ///
+    /// The historical string-error shim over [`Config::try_from_args`]:
+    /// messages are byte-identical to the pre-builder implementation.
     pub fn from_args(args: &Args) -> Result<Self, String> {
-        // Numeric flags parse through the fallible accessor so every
-        // malformed value surfaces as this function's Err (one clean
-        // usage error in main), never a mid-parse process exit.
-        let int = |name| args.try_get::<usize>(name, "an integer");
-        let mut cfg = Config::default();
-        cfg.teams = int("teams")?.unwrap_or(cfg.teams);
-        cfg.threads_per_team = int("threads")?.unwrap_or(cfg.threads_per_team);
+        Self::try_from_args(args).map_err(String::from)
+    }
+
+    /// `from_args` with the typed [`ConfigError`]: every malformed flag
+    /// value surfaces as [`ConfigError::Flag`] (never a mid-parse
+    /// process exit) and every validation failure as its own variant.
+    pub fn try_from_args(args: &Args) -> Result<Self, ConfigError> {
+        let int = |name| args.try_get_typed::<usize>(name, "an integer");
+        let mut b = Config::builder();
+        if let Some(n) = int("teams")? {
+            b = b.teams(n);
+        }
+        if let Some(n) = int("threads")? {
+            b = b.threads_per_team(n);
+        }
         if let Some(a) = args.get("allocator") {
-            cfg.allocator = AllocatorKind::parse(a)?;
+            b = b.allocator(AllocatorKind::parse(a).map_err(ConfigError::Allocator)?);
         }
-        let heap_mb = int("heap-mb")?.unwrap_or(256);
-        cfg.mem.global_size = (heap_mb as u64) << 20;
-        cfg.rpc_launch_threads = int("rpc-launch-threads")?.unwrap_or(cfg.rpc_launch_threads);
-        cfg.rpc_launch_slots = int("rpc-launch-slots")?.unwrap_or(cfg.rpc_launch_slots);
-        cfg.rpc_data_cap = args.try_get::<u64>("rpc-data-cap", "a byte count")?;
-        // Validate the cap before anything consumes it: `--rpc-lanes
-        // auto` feeds it straight into ArenaLayout::with_ring, whose
-        // alignment assert would otherwise turn this usage error into a
-        // panic.
-        if let Some(cap) = cfg.rpc_data_cap {
-            if cap == 0 || cap % 64 != 0 {
-                return Err(format!(
-                    "--rpc-data-cap {cap} must be a positive multiple of 64 bytes"
-                ));
-            }
+        b = b.heap_mb(int("heap-mb")?.unwrap_or(256) as u64);
+        if let Some(n) = int("rpc-launch-threads")? {
+            b = b.rpc_launch_threads(n);
         }
-        if cfg.rpc_launch_threads == 0 || cfg.rpc_launch_slots == 0 {
-            return Err("--rpc-launch-threads/--rpc-launch-slots must be positive".into());
+        if let Some(n) = int("rpc-launch-slots")? {
+            b = b.rpc_launch_slots(n);
         }
-        // Lanes before workers among the engine knobs: both `auto`
-        // resolvers need earlier values — lanes sizes from the team count
-        // against the (validated) ring width and data cap, workers size
-        // from the resolved lane count.
-        cfg.rpc_lanes = match args.get("rpc-lanes") {
-            Some("auto") => {
-                auto_lanes(cfg.teams, &cfg.mem, cfg.rpc_launch_slots, cfg.rpc_data_cap)
-            }
-            _ => int("rpc-lanes")?.unwrap_or(cfg.rpc_lanes),
+        if let Some(cap) = args.try_get_typed::<u64>("rpc-data-cap", "a byte count")? {
+            b = b.rpc_data_cap(cap);
+        }
+        b = match args.get("rpc-lanes") {
+            Some("auto") => b.rpc_lanes_auto(),
+            _ => match int("rpc-lanes")? {
+                Some(n) => b.rpc_lanes(n),
+                None => b,
+            },
         };
-        cfg.rpc_workers = match args.get("rpc-workers") {
-            Some("auto") => auto_workers(cfg.rpc_lanes),
-            _ => int("rpc-workers")?.unwrap_or(cfg.rpc_workers),
+        b = match args.get("rpc-workers") {
+            Some("auto") => b.rpc_workers_auto(),
+            _ => match int("rpc-workers")? {
+                Some(n) => b.rpc_workers(n),
+                None => b,
+            },
         };
-        // Lanes and workers validate together once both are resolved
-        // (the launch knobs were checked above, before the `auto` lane
-        // resolver fed them into the arena constructors).
-        if cfg.rpc_lanes == 0 || cfg.rpc_workers == 0 {
-            return Err("--rpc-lanes/--rpc-workers must be positive".into());
-        }
-        cfg.rpc_batch = !args.flag("no-rpc-batch");
-        cfg.verbose = args.flag("verbose");
-        cfg.trace = args.flag("trace") || args.get("trace-out").is_some();
-        if cfg.teams == 0 || cfg.threads_per_team == 0 {
-            return Err("teams/threads must be positive".into());
-        }
-        // Reject arena shapes the device cannot reserve here, where it is
-        // a clean CLI error rather than a panic in Device::with_arena.
-        let arena = cfg.arena();
-        if arena.reserved_bytes() + (1 << 20) > cfg.mem.managed_size {
-            return Err(format!(
-                "the RPC arena ({} lanes + a {}-slot launch ring at {} B each) needs \
-                 {} B of managed memory (plus 1 MiB headroom) but the managed segment \
-                 is {} B; lower --rpc-lanes, --rpc-launch-slots or --rpc-data-cap",
-                cfg.rpc_lanes,
-                cfg.rpc_launch_slots,
-                arena.lane_stride(),
-                arena.reserved_bytes(),
-                cfg.mem.managed_size,
-            ));
-        }
-        Ok(cfg)
+        b.rpc_batch(!args.flag("no-rpc-batch"))
+            .verbose(args.flag("verbose"))
+            .trace(args.flag("trace") || args.get("trace-out").is_some())
+            .build()
     }
 
     /// The mailbox arena shape this configuration selects.
@@ -393,6 +609,63 @@ mod tests {
         assert!(Config::from_args(&args).is_err());
         let args = Args::parse(&sv(&["--rpc-workers", "0"]), &[]);
         assert!(Config::from_args(&args).is_err());
+    }
+
+    #[test]
+    fn builder_validates_with_typed_errors() {
+        // Direct builder use (no CLI): same checks, typed variants.
+        let cfg = Config::builder().teams(8).threads_per_team(32).rpc_lanes(4).build().unwrap();
+        assert_eq!((cfg.teams, cfg.threads_per_team, cfg.rpc_lanes), (8, 32, 4));
+
+        let err = Config::builder().rpc_data_cap(100).build().unwrap_err();
+        assert_eq!(err, ConfigError::DataCapAlignment { cap: 100 });
+
+        let err = Config::builder().rpc_lanes(0).build().unwrap_err();
+        assert_eq!(err, ConfigError::NotPositive { what: "--rpc-lanes/--rpc-workers" });
+
+        let err = Config::builder().teams(0).build().unwrap_err();
+        assert_eq!(err, ConfigError::NotPositive { what: "teams/threads" });
+
+        let err = Config::builder().rpc_launch_slots(0).build().unwrap_err();
+        assert_eq!(
+            err,
+            ConfigError::NotPositive { what: "--rpc-launch-threads/--rpc-launch-slots" }
+        );
+
+        assert!(matches!(
+            Config::builder().rpc_lanes(200).build().unwrap_err(),
+            ConfigError::ArenaTooLarge { lanes: 200, .. }
+        ));
+
+        // `auto` sizings resolve at build time, lanes before workers.
+        let cfg = Config::builder().teams(6).rpc_lanes_auto().rpc_workers_auto().build().unwrap();
+        assert_eq!(cfg.rpc_lanes, 6);
+        assert_eq!(cfg.rpc_workers, auto_workers(6));
+    }
+
+    #[test]
+    fn typed_errors_render_the_historical_messages() {
+        // The from_args shim must stay byte-compatible: every typed
+        // variant renders exactly the string the old implementation
+        // produced.
+        let args = Args::parse(&sv(&["--teams", "lots"]), &[]);
+        let typed = Config::try_from_args(&args).unwrap_err();
+        assert!(matches!(&typed, ConfigError::Flag(e) if e.flag == "teams" && e.value == "lots"));
+        assert_eq!(Config::from_args(&args).unwrap_err(), typed.to_string());
+
+        assert_eq!(
+            ConfigError::DataCapAlignment { cap: 100 }.to_string(),
+            "--rpc-data-cap 100 must be a positive multiple of 64 bytes"
+        );
+        assert_eq!(
+            ConfigError::NotPositive { what: "teams/threads" }.to_string(),
+            "teams/threads must be positive"
+        );
+        let args = Args::parse(&sv(&["--rpc-lanes", "200"]), &[]);
+        let typed = Config::try_from_args(&args).unwrap_err();
+        let rendered = Config::from_args(&args).unwrap_err();
+        assert_eq!(String::from(typed), rendered);
+        assert!(rendered.starts_with("the RPC arena (200 lanes"), "message shape: {rendered}");
     }
 
     #[test]

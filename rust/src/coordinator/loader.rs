@@ -36,13 +36,23 @@ pub struct GpuFirstSession {
 impl GpuFirstSession {
     /// Bring up device + host RPC engine + common landing pads.
     pub fn start(cfg: Config) -> Self {
+        let registry = Arc::new(WrapperRegistry::new());
+        register_common(&registry);
+        Self::start_with_registry(cfg, registry)
+    }
+
+    /// `start` against a caller-owned landing-pad registry (the serving
+    /// daemon shares ONE registry across every session, so pads a
+    /// compile registered once serve later cache-hit sessions that
+    /// never run the pipeline). The caller is responsible for
+    /// [`register_common`]; registration is idempotent by mangled name,
+    /// so re-registering across sessions is harmless.
+    pub fn start_with_registry(cfg: Config, registry: Arc<WrapperRegistry>) -> Self {
         let arena = cfg.arena();
         let device = Arc::new(Device::with_arena(cfg.mem, cfg.allocator, arena));
         if cfg.trace {
             device.mem.obs.spans.enable();
         }
-        let registry = Arc::new(WrapperRegistry::new());
-        register_common(&registry);
         // The open-file table shards one-to-one with the lanes serving
         // the pads; a single-lane session keeps the unsharded (legacy
         // fd numbering) shape.
@@ -125,6 +135,13 @@ impl GpuFirstSession {
         self.env = Some(env);
     }
 
+    /// The loaded environment's launch-session id (the interpreter's
+    /// process-global mint); 0 before `load()`. The serving daemon's
+    /// `SessionHandle::id` is this number.
+    pub fn session_id(&self) -> u64 {
+        self.env.as_ref().map_or(0, |e| e.launch_session)
+    }
+
     /// Map argv to the device and invoke the user `main` on the GPU.
     pub fn run(&self, argv: &[i64]) -> (i64, RunMetrics) {
         let env = self.env.as_ref().expect("load() before run()");
@@ -144,6 +161,7 @@ impl GpuFirstSession {
             })
             .collect();
         let metrics = RunMetrics {
+            session: env.launch_session,
             exit_code: ret,
             wall_ns,
             main_stats,

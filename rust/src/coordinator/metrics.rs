@@ -12,6 +12,12 @@ use crate::util::json::Json;
 
 #[derive(Debug, Clone)]
 pub struct RunMetrics {
+    /// Launch-session id of the program environment that produced this
+    /// run (the interpreter's process-global mint; the serving daemon's
+    /// `SessionHandle::id` is the same number, so daemon-side attribution
+    /// and ring-slot telemetry key consistently). 0 for hand-built
+    /// metrics.
+    pub session: u64,
     pub exit_code: i64,
     /// Real wallclock of the whole simulated run on this host.
     pub wall_ns: f64,
@@ -185,6 +191,7 @@ impl RunMetrics {
             })
             .collect();
         Json::obj(vec![
+            ("session", Json::uint(self.session)),
             ("exit_code", Json::num(self.exit_code as f64)),
             ("wall_ns", Json::num(self.wall_ns)),
             ("modeled_device_ns", Json::num(self.modeled_device_ns())),
@@ -250,6 +257,7 @@ mod tests {
 
     fn base() -> RunMetrics {
         RunMetrics {
+            session: 0,
             exit_code: 0,
             wall_ns: 0.0,
             main_stats: LaunchStats::default(),

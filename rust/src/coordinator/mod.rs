@@ -8,7 +8,11 @@
 pub mod config;
 pub mod loader;
 pub mod metrics;
+pub mod serve;
 
-pub use config::{auto_lanes, auto_workers, Config};
+pub use config::{auto_lanes, auto_workers, Config, ConfigBuilder, ConfigError};
 pub use loader::GpuFirstSession;
 pub use metrics::RunMetrics;
+pub use serve::{
+    ServeConfig, ServeDaemon, ServeError, ServeSnapshot, SessionHandle, TenantCounters,
+};

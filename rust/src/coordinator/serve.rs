@@ -1,0 +1,739 @@
+//! The resident serving daemon: many sessions, one compile.
+//!
+//! The one-shot [`GpuFirstSession`] pays full compile + loader startup
+//! per run — one module per process. [`ServeDaemon`] keeps the process
+//! resident and serves *sessions* instead:
+//!
+//! * **Compiled-module cache** — modules are keyed by a content hash
+//!   over source text + pipeline shape. The first session on a key runs
+//!   the full `PassManager` pipeline (under the cache lock, so a burst
+//!   of identical opens compiles exactly once); every later session
+//!   clones the cached lowered module and reports **zero pipeline
+//!   passes run** (its `RunMetrics.passes` is empty while the fold /
+//!   intent / lowering counters still describe the cached compile).
+//! * **One shared landing-pad registry** — pads registered during the
+//!   original compile serve cache-hit sessions that never run the
+//!   pipeline (`WrapperRegistry::register` is idempotent by mangled
+//!   name, so repeat compiles are harmless).
+//! * **Admission control** — at most `max_sessions` sessions run
+//!   concurrently; each gets a fair share of the daemon's engine shape
+//!   (`--rpc-lanes/workers/launch-slots` divided across sessions, never
+//!   below 1). Beyond that, up to `queue_depth` opens **block** in FIFO
+//!   fairness; past the queue, opens are rejected with
+//!   [`ServeError::Saturated`] — bounded backpressure instead of
+//!   oversubscribing the managed segment.
+//! * **Per-tenant accounting** — admitted/queued/rejected/run counters
+//!   per tenant name, so a noisy tenant is visible in the snapshot.
+//! * **Per-session attribution** — every session's id is the
+//!   interpreter's launch-session mint (the same number that keys its
+//!   home launch-ring slot), daemon-wide queue-wait and session-latency
+//!   histograms feed the serving benchmark's p50/p99, and a
+//!   daemon-owned [`SpanRecorder`] records `SpanKind::Session` spans
+//!   (queue-wait / compile / cache-hit / run) with the session id as
+//!   the track, one timeline row per session in the exported trace.
+//!
+//! Each session still owns its *device*: its own simulated GPU memory,
+//! RPC engine and [`crate::rpc::HostEnv`] (stdout/stderr and file tables never
+//! bleed across sessions). What the daemon shares is the compiled
+//! artifact and the pad registry — the HetGPU-style "compiled artifacts
+//! are reusable units" argument applied to serving.
+
+use super::config::Config;
+use super::loader::GpuFirstSession;
+use super::metrics::RunMetrics;
+use crate::ir::parser::parse_module;
+use crate::ir::Module;
+use crate::obs::{Hist, HistSnapshot, SpanKind, SpanRecorder};
+use crate::rpc::wrappers::register_common;
+use crate::rpc::WrapperRegistry;
+use crate::transform::{compile_with_spec, CompileReport, PipelineSpec};
+use crate::util::json::Json;
+use std::collections::{BTreeMap, HashMap};
+use std::fmt;
+use std::sync::{Arc, Condvar, Mutex, PoisonError};
+
+/// Why the daemon refused (or failed) to open a session.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ServeError {
+    /// Source text failed to parse.
+    Parse(String),
+    /// The pipeline rejected the module (verifier or pass errors).
+    Compile(String),
+    /// Admission control: `max_sessions` running and the wait queue is
+    /// full. Back off and retry.
+    Saturated { active: usize, queued: usize },
+    /// The daemon is shutting down; no new sessions.
+    Closed,
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Parse(e) => write!(f, "parse failed: {e}"),
+            ServeError::Compile(e) => write!(f, "{e}"),
+            ServeError::Saturated { active, queued } => write!(
+                f,
+                "daemon saturated: {active} active session(s) and {queued} queued; retry later"
+            ),
+            ServeError::Closed => write!(f, "daemon is shut down"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// Daemon shape: the engine budget to divide across sessions plus the
+/// admission bounds.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeConfig {
+    /// Per-daemon budget: memory sizes, grid shape, and the engine
+    /// knobs (`rpc_lanes`/`rpc_workers`/`rpc_launch_threads`/
+    /// `rpc_launch_slots`) that [`ServeDaemon::session_config`] divides
+    /// across `max_sessions` concurrent sessions.
+    pub base: Config,
+    /// Concurrent-session cap (each admitted session reserves its own
+    /// device arena, so this bounds managed-segment oversubscription).
+    pub max_sessions: usize,
+    /// Opens allowed to block waiting for a slot before further opens
+    /// are rejected with [`ServeError::Saturated`].
+    pub queue_depth: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { base: Config::default(), max_sessions: 4, queue_depth: 16 }
+    }
+}
+
+/// One compiled artifact: the lowered module plus the report the
+/// pipeline produced (cloned into every session served from the cache).
+struct CachedModule {
+    module: Module,
+    report: CompileReport,
+}
+
+/// Admission state under the daemon's mutex; the condvar wakes FIFO
+/// waiters as sessions close.
+#[derive(Debug, Default)]
+struct Admission {
+    active: usize,
+    waiting: usize,
+    peak_active: usize,
+    shutdown: bool,
+}
+
+/// Per-tenant fairness counters.
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct TenantCounters {
+    /// Sessions admitted (immediately or after queueing).
+    pub admitted: u64,
+    /// Admissions that had to wait in the queue first.
+    pub queued: u64,
+    /// Opens rejected at the queue bound.
+    pub rejected: u64,
+    /// Completed `run()` calls across this tenant's sessions.
+    pub runs: u64,
+}
+
+/// Daemon-wide counters (monotonic; `active` is instantaneous).
+#[derive(Debug, Default, Clone)]
+pub struct ServeSnapshot {
+    pub admitted: u64,
+    pub queued: u64,
+    pub rejected: u64,
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    pub active: usize,
+    /// Opens currently blocked in the admission queue (instantaneous).
+    pub waiting: usize,
+    pub peak_active: usize,
+    /// Wall latency of every completed session run.
+    pub session_latency: HistSnapshot,
+    /// Admission queue wait of every admitted session (0 entries while
+    /// the daemon never saturated).
+    pub queue_wait: HistSnapshot,
+    pub tenants: Vec<(String, TenantCounters)>,
+}
+
+impl ServeSnapshot {
+    /// Machine-readable form (the serving benchmark embeds it per load
+    /// level).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("admitted", Json::uint(self.admitted)),
+            ("queued", Json::uint(self.queued)),
+            ("rejected", Json::uint(self.rejected)),
+            ("cache_hits", Json::uint(self.cache_hits)),
+            ("cache_misses", Json::uint(self.cache_misses)),
+            ("active", Json::uint(self.active as u64)),
+            ("waiting", Json::uint(self.waiting as u64)),
+            ("peak_active", Json::uint(self.peak_active as u64)),
+            ("session_latency", self.session_latency.to_json()),
+            ("queue_wait", self.queue_wait.to_json()),
+            (
+                "tenants",
+                Json::Obj(
+                    self.tenants
+                        .iter()
+                        .map(|(name, t)| {
+                            (
+                                name.clone(),
+                                Json::obj(vec![
+                                    ("admitted", Json::uint(t.admitted)),
+                                    ("queued", Json::uint(t.queued)),
+                                    ("rejected", Json::uint(t.rejected)),
+                                    ("runs", Json::uint(t.runs)),
+                                ]),
+                            )
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "admitted={} queued={} rejected={} cache={}hit/{}miss active={} peak={}",
+            self.admitted,
+            self.queued,
+            self.rejected,
+            self.cache_hits,
+            self.cache_misses,
+            self.active,
+            self.peak_active,
+        )
+    }
+}
+
+#[derive(Debug, Default)]
+struct Counters {
+    admitted: u64,
+    queued: u64,
+    rejected: u64,
+    cache_hits: u64,
+    cache_misses: u64,
+    tenants: BTreeMap<String, TenantCounters>,
+}
+
+/// The resident multi-tenant serving daemon (see module docs).
+pub struct ServeDaemon {
+    cfg: ServeConfig,
+    registry: Arc<WrapperRegistry>,
+    cache: Mutex<HashMap<u64, Arc<CachedModule>>>,
+    adm: Mutex<Admission>,
+    adm_cv: Condvar,
+    counters: Mutex<Counters>,
+    /// Daemon-timeline spans (`SpanKind::Session`, track = session id).
+    /// Enabled when `cfg.base.trace` is set.
+    pub spans: SpanRecorder,
+    session_latency: Hist,
+    queue_wait: Hist,
+}
+
+impl ServeDaemon {
+    pub fn start(cfg: ServeConfig) -> Self {
+        let registry = Arc::new(WrapperRegistry::new());
+        register_common(&registry);
+        let spans = SpanRecorder::new();
+        if cfg.base.trace {
+            spans.enable();
+        }
+        Self {
+            cfg,
+            registry,
+            cache: Mutex::new(HashMap::new()),
+            adm: Mutex::new(Admission::default()),
+            adm_cv: Condvar::new(),
+            counters: Mutex::new(Counters::default()),
+            spans,
+            session_latency: Hist::new(),
+            queue_wait: Hist::new(),
+        }
+    }
+
+    /// The per-session configuration: the daemon's base with the engine
+    /// knobs divided fairly across `max_sessions` (never below 1, so a
+    /// wide daemon degrades to per-session legacy shapes rather than
+    /// zero-width engines).
+    pub fn session_config(&self) -> Config {
+        let n = self.cfg.max_sessions.max(1);
+        let share = |v: usize| (v / n).max(1);
+        Config {
+            rpc_lanes: share(self.cfg.base.rpc_lanes),
+            rpc_workers: share(self.cfg.base.rpc_workers),
+            rpc_launch_threads: share(self.cfg.base.rpc_launch_threads),
+            rpc_launch_slots: share(self.cfg.base.rpc_launch_slots),
+            ..self.cfg.base
+        }
+    }
+
+    /// Open a session on `source` under the default pipeline.
+    pub fn open_session(
+        &self,
+        tenant: &str,
+        source: &str,
+    ) -> Result<SessionHandle<'_>, ServeError> {
+        self.open_session_spec(tenant, source, &PipelineSpec::default())
+    }
+
+    /// Open a session: admit (block in the bounded queue if the daemon
+    /// is at `max_sessions`; reject past `queue_depth`), then serve the
+    /// compiled module from the cache — compiling it first iff this is
+    /// the first session on its `(source, pipeline)` content hash.
+    pub fn open_session_spec(
+        &self,
+        tenant: &str,
+        source: &str,
+        spec: &PipelineSpec,
+    ) -> Result<SessionHandle<'_>, ServeError> {
+        let t_open = self.spans.start();
+        let (waited_ns, was_queued) = self.admit(tenant)?;
+
+        // Compile-or-cache. Errors release the admission slot.
+        let t_compile = self.spans.start();
+        let (entry, hit) = match self.lookup_or_compile(source, spec) {
+            Ok(v) => v,
+            Err(e) => {
+                self.release();
+                return Err(e);
+            }
+        };
+
+        let mut inner =
+            GpuFirstSession::start_with_registry(self.session_config(), Arc::clone(&self.registry));
+        let mut report = entry.report.clone();
+        if hit {
+            // A cache hit runs zero passes: the timing section empties
+            // while the compile-derived counters (folds, intents,
+            // lowered fns) keep describing the artifact being served.
+            report.timings.clear();
+        }
+        inner.report = Some(report);
+        inner.load(entry.module.clone());
+        let id = inner.session_id();
+
+        // Attribute the open on the session's own timeline row (the id
+        // exists only now, so the spans are recorded retroactively with
+        // the measured starts).
+        if let Some(open_ns) = t_open {
+            self.spans.record("queue-wait", SpanKind::Session, id, open_ns, waited_ns);
+        }
+        if let Some(compile_ns) = t_compile {
+            let dur = self.spans.now_ns().saturating_sub(compile_ns);
+            let name = if hit { "cache-hit" } else { "compile" };
+            self.spans.record(name, SpanKind::Session, id, compile_ns, dur);
+        }
+        if was_queued {
+            self.queue_wait.record(waited_ns);
+        }
+
+        Ok(SessionHandle {
+            daemon: self,
+            inner,
+            id,
+            tenant: tenant.to_string(),
+            cache_hit: hit,
+            last: None,
+            released: false,
+        })
+    }
+
+    /// Block until a session slot frees (FIFO via the condvar), honoring
+    /// the queue bound. Returns (queue wait ns, whether it queued).
+    fn admit(&self, tenant: &str) -> Result<(u64, bool), ServeError> {
+        let t0 = std::time::Instant::now();
+        let mut adm = self.adm.lock().unwrap_or_else(PoisonError::into_inner);
+        if adm.shutdown {
+            return Err(ServeError::Closed);
+        }
+        let mut was_queued = false;
+        if adm.active >= self.cfg.max_sessions {
+            if adm.waiting >= self.cfg.queue_depth {
+                let (active, queued) = (adm.active, adm.waiting);
+                drop(adm);
+                let mut c = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+                c.rejected += 1;
+                c.tenants.entry(tenant.to_string()).or_default().rejected += 1;
+                return Err(ServeError::Saturated { active, queued });
+            }
+            was_queued = true;
+            adm.waiting += 1;
+            while adm.active >= self.cfg.max_sessions && !adm.shutdown {
+                adm = self.adm_cv.wait(adm).unwrap_or_else(PoisonError::into_inner);
+            }
+            adm.waiting -= 1;
+            if adm.shutdown {
+                drop(adm);
+                self.adm_cv.notify_one();
+                return Err(ServeError::Closed);
+            }
+        }
+        adm.active += 1;
+        adm.peak_active = adm.peak_active.max(adm.active);
+        drop(adm);
+        let mut c = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        c.admitted += 1;
+        let t = c.tenants.entry(tenant.to_string()).or_default();
+        t.admitted += 1;
+        if was_queued {
+            c.queued += 1;
+            t.queued += 1;
+        }
+        Ok((t0.elapsed().as_nanos() as u64, was_queued))
+    }
+
+    /// Free one session slot and wake the next waiter.
+    fn release(&self) {
+        let mut adm = self.adm.lock().unwrap_or_else(PoisonError::into_inner);
+        adm.active = adm.active.saturating_sub(1);
+        drop(adm);
+        self.adm_cv.notify_one();
+    }
+
+    /// Serve the compiled module for `(source, spec)` from the cache,
+    /// compiling under the cache lock on the first request — "compile
+    /// once" even when identical opens race.
+    fn lookup_or_compile(
+        &self,
+        source: &str,
+        spec: &PipelineSpec,
+    ) -> Result<(Arc<CachedModule>, bool), ServeError> {
+        let key = content_key(source, &spec.names().join(","));
+        let mut cache = self.cache.lock().unwrap_or_else(PoisonError::into_inner);
+        if let Some(entry) = cache.get(&key) {
+            let entry = Arc::clone(entry);
+            drop(cache);
+            let mut c = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+            c.cache_hits += 1;
+            return Ok((entry, true));
+        }
+        let mut module = parse_module(source).map_err(ServeError::Parse)?;
+        let report = compile_with_spec(&mut module, &self.registry, spec).map_err(|errs| {
+            ServeError::Compile(format!("compile failed:\n  {}", errs.join("\n  ")))
+        })?;
+        let entry = Arc::new(CachedModule { module, report });
+        cache.insert(key, Arc::clone(&entry));
+        drop(cache);
+        let mut c = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        c.cache_misses += 1;
+        Ok((entry, false))
+    }
+
+    /// Compiled modules currently cached.
+    pub fn cached_modules(&self) -> usize {
+        self.cache.lock().unwrap_or_else(PoisonError::into_inner).len()
+    }
+
+    /// Sessions currently running.
+    pub fn active_sessions(&self) -> usize {
+        self.adm.lock().unwrap_or_else(PoisonError::into_inner).active
+    }
+
+    /// Daemon-wide counters + latency histograms + per-tenant table.
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let adm = self.adm.lock().unwrap_or_else(PoisonError::into_inner);
+        let (active, waiting, peak_active) = (adm.active, adm.waiting, adm.peak_active);
+        drop(adm);
+        let c = self.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        ServeSnapshot {
+            admitted: c.admitted,
+            queued: c.queued,
+            rejected: c.rejected,
+            cache_hits: c.cache_hits,
+            cache_misses: c.cache_misses,
+            active,
+            waiting,
+            peak_active,
+            session_latency: self.session_latency.snapshot(),
+            queue_wait: self.queue_wait.snapshot(),
+            tenants: c.tenants.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+        }
+    }
+
+    /// Refuse new sessions and wake every queued open with
+    /// [`ServeError::Closed`]. Already-open handles keep working until
+    /// closed/dropped.
+    pub fn shutdown(&self) {
+        let mut adm = self.adm.lock().unwrap_or_else(PoisonError::into_inner);
+        adm.shutdown = true;
+        drop(adm);
+        self.adm_cv.notify_all();
+    }
+}
+
+/// A running session inside the daemon: its own device, engine and
+/// host environment, sharing only the compiled artifact and the pad
+/// registry. Dropping (or [`SessionHandle::close`]) releases the
+/// admission slot and stops the session's engine.
+pub struct SessionHandle<'d> {
+    daemon: &'d ServeDaemon,
+    inner: GpuFirstSession,
+    id: u64,
+    tenant: String,
+    cache_hit: bool,
+    last: Option<RunMetrics>,
+    released: bool,
+}
+
+impl SessionHandle<'_> {
+    /// The launch-session id (also `RunMetrics.session` of every run).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    pub fn tenant(&self) -> &str {
+        &self.tenant
+    }
+
+    /// Was this session served from the compiled-module cache?
+    pub fn cache_hit(&self) -> bool {
+        self.cache_hit
+    }
+
+    /// The underlying one-shot session (host environment, device,
+    /// compile report) for callers needing the legacy surface.
+    pub fn session(&self) -> &GpuFirstSession {
+        &self.inner
+    }
+
+    /// This session's captured stdout so far.
+    pub fn stdout_string(&self) -> String {
+        self.inner.host.stdout_string()
+    }
+
+    /// Run the loaded program (repeatable: the module stays loaded), and
+    /// feed daemon-side accounting (session-latency histogram, run
+    /// span, per-tenant run counter).
+    pub fn run(&mut self, argv: &[i64]) -> (i64, RunMetrics) {
+        let t0 = self.daemon.spans.start();
+        let (ret, metrics) = self.inner.run(argv);
+        self.daemon.session_latency.record(metrics.wall_ns as u64);
+        self.daemon.spans.finish(t0, "run", SpanKind::Session, self.id);
+        let mut c = self.daemon.counters.lock().unwrap_or_else(PoisonError::into_inner);
+        c.tenants.entry(self.tenant.clone()).or_default().runs += 1;
+        drop(c);
+        self.last = Some(metrics.clone());
+        (ret, metrics)
+    }
+
+    /// Metrics of the most recent [`SessionHandle::run`].
+    pub fn metrics(&self) -> Option<&RunMetrics> {
+        self.last.as_ref()
+    }
+
+    /// Close the session: stop its engine and release the admission
+    /// slot (equivalent to dropping, but explicit at call sites).
+    pub fn close(self) {}
+}
+
+impl Drop for SessionHandle<'_> {
+    fn drop(&mut self) {
+        if !self.released {
+            self.released = true;
+            self.daemon.release();
+        }
+    }
+}
+
+/// FNV-1a 64 over source text and pipeline shape — the module cache
+/// key. A NUL joins the parts so `("a", "b,c")` and `("ab", ",c")`
+/// never collide by concatenation.
+fn content_key(source: &str, pipeline: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in source.bytes().chain(std::iter::once(0)).chain(pipeline.bytes()) {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1_0000_0000_01b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gpu::memory::MemConfig;
+
+    const HELLO: &str = r#"
+global @fmt const 7 "n=%d\n"
+
+func @main(%n: i64) -> i64 {
+  call printf(@fmt, %n)
+  return %n
+}
+"#;
+
+    fn small_serve(max_sessions: usize, queue_depth: usize) -> ServeConfig {
+        let base = Config {
+            mem: MemConfig::small(),
+            teams: 2,
+            threads_per_team: 16,
+            ..Default::default()
+        };
+        ServeConfig { base, max_sessions, queue_depth }
+    }
+
+    #[test]
+    fn second_session_hits_the_cache_and_runs_no_passes() {
+        let daemon = ServeDaemon::start(small_serve(2, 2));
+        let mut s1 = daemon.open_session("a", HELLO).unwrap();
+        assert!(!s1.cache_hit());
+        let (ret, m1) = s1.run(&[7]);
+        assert_eq!(ret, 7);
+        assert!(!m1.passes.is_empty(), "first session compiled");
+        assert_eq!(s1.stdout_string(), "n=7\n");
+        s1.close();
+
+        let mut s2 = daemon.open_session("a", HELLO).unwrap();
+        assert!(s2.cache_hit());
+        let (ret, m2) = s2.run(&[9]);
+        assert_eq!(ret, 9);
+        assert!(m2.passes.is_empty(), "cache hit ran zero pipeline passes");
+        assert_eq!(m2.lowered_fns, m1.lowered_fns, "cached compile counters survive");
+        assert_eq!(s2.stdout_string(), "n=9\n", "fresh host env per session");
+        assert_ne!(m1.session, m2.session, "distinct session ids");
+        s2.close();
+
+        let snap = daemon.snapshot();
+        assert_eq!((snap.cache_hits, snap.cache_misses), (1, 1));
+        assert_eq!(daemon.cached_modules(), 1);
+        assert_eq!(snap.admitted, 2);
+        assert_eq!(snap.rejected, 0);
+        assert_eq!(snap.session_latency.count, 2);
+    }
+
+    #[test]
+    fn saturation_rejects_past_the_queue_bound() {
+        // max_sessions=1, queue_depth=0: the second concurrent open must
+        // reject immediately.
+        let daemon = ServeDaemon::start(small_serve(1, 0));
+        let s1 = daemon.open_session("a", HELLO).unwrap();
+        let err = daemon.open_session("b", HELLO).unwrap_err();
+        assert_eq!(err, ServeError::Saturated { active: 1, queued: 0 });
+        drop(s1);
+        // The slot freed: the same open now succeeds.
+        let s2 = daemon.open_session("b", HELLO).unwrap();
+        assert!(s2.cache_hit(), "compile survived the rejected open");
+        drop(s2);
+        let snap = daemon.snapshot();
+        assert_eq!(snap.rejected, 1);
+        let b = snap.tenants.iter().find(|(n, _)| n == "b").unwrap();
+        assert_eq!(b.1.rejected, 1);
+        assert_eq!(b.1.admitted, 1);
+    }
+
+    #[test]
+    fn queued_open_blocks_until_a_slot_frees() {
+        let daemon = Arc::new(ServeDaemon::start(small_serve(1, 4)));
+        let s1 = daemon.open_session("a", HELLO).unwrap();
+        let d = Arc::clone(&daemon);
+        let waiter = std::thread::spawn(move || {
+            let mut s = d.open_session("b", HELLO).unwrap();
+            let (ret, _) = s.run(&[3]);
+            ret
+        });
+        // Give the waiter time to park in the queue, then free the slot.
+        while daemon.snapshot().waiting == 0 {
+            std::thread::yield_now();
+        }
+        drop(s1);
+        assert_eq!(waiter.join().unwrap(), 3);
+        let snap = daemon.snapshot();
+        assert_eq!(snap.admitted, 2);
+        assert_eq!(snap.queued, 1);
+        assert_eq!(snap.queue_wait.count, 1, "queue wait recorded for the queued open");
+        assert_eq!(snap.peak_active, 1);
+    }
+
+    #[test]
+    fn shutdown_refuses_new_sessions_and_wakes_waiters() {
+        let daemon = ServeDaemon::start(small_serve(1, 2));
+        daemon.shutdown();
+        assert_eq!(daemon.open_session("a", HELLO).unwrap_err(), ServeError::Closed);
+    }
+
+    #[test]
+    fn engine_budget_divides_across_sessions() {
+        let base = Config {
+            mem: MemConfig::small(),
+            teams: 2,
+            threads_per_team: 16,
+            rpc_lanes: 8,
+            rpc_workers: 4,
+            rpc_launch_threads: 2,
+            rpc_launch_slots: 4,
+            ..Default::default()
+        };
+        let daemon = ServeDaemon::start(ServeConfig { base, max_sessions: 4, queue_depth: 0 });
+        let per = daemon.session_config();
+        assert_eq!(per.rpc_lanes, 2);
+        assert_eq!(per.rpc_workers, 1);
+        assert_eq!(per.rpc_launch_threads, 1, "never below 1");
+        assert_eq!(per.rpc_launch_slots, 1);
+        // A daemon narrower than its session cap degrades to legacy
+        // per-session shapes.
+        let daemon = ServeDaemon::start(small_serve(8, 0));
+        assert!(daemon.session_config().legacy_rpc());
+    }
+
+    #[test]
+    fn bad_source_and_bad_module_release_the_slot() {
+        let daemon = ServeDaemon::start(small_serve(1, 0));
+        let err = daemon.open_session("a", "func @broken(").unwrap_err();
+        assert!(matches!(err, ServeError::Parse(_)), "{err:?}");
+        // The failed open released its slot: a good open succeeds.
+        let s = daemon.open_session("a", HELLO).unwrap();
+        assert_eq!(daemon.active_sessions(), 1);
+        drop(s);
+        assert_eq!(daemon.active_sessions(), 0);
+    }
+
+    #[test]
+    fn serve_snapshot_json_uses_the_shared_emitter() {
+        let daemon = ServeDaemon::start(small_serve(2, 2));
+        let mut s = daemon.open_session("tenant-x", HELLO).unwrap();
+        s.run(&[1]);
+        s.close();
+        let snap = daemon.snapshot();
+        let j = snap.to_json();
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("admitted").and_then(Json::as_f64), Some(1.0));
+        assert_eq!(parsed.get("cache_misses").and_then(Json::as_f64), Some(1.0));
+        let t = parsed.get("tenants").unwrap().get("tenant-x").unwrap();
+        assert_eq!(t.get("runs").and_then(Json::as_f64), Some(1.0));
+        assert!(snap.summary().contains("admitted=1"));
+    }
+
+    #[test]
+    fn trace_enabled_daemon_records_session_spans() {
+        let mut cfg = small_serve(2, 2);
+        cfg.base.trace = true;
+        let daemon = ServeDaemon::start(cfg);
+        let mut s = daemon.open_session("a", HELLO).unwrap();
+        let id = s.id();
+        s.run(&[1]);
+        s.close();
+        let spans = daemon.spans.snapshot();
+        let names: Vec<&str> = spans
+            .iter()
+            .filter(|sp| sp.kind == SpanKind::Session && sp.track == id)
+            .map(|sp| sp.name.as_str())
+            .collect();
+        assert!(names.contains(&"queue-wait"), "{names:?}");
+        assert!(names.contains(&"compile"), "{names:?}");
+        assert!(names.contains(&"run"), "{names:?}");
+        // A second session on the same module records a cache-hit span.
+        let mut s2 = daemon.open_session("a", HELLO).unwrap();
+        let id2 = s2.id();
+        s2.run(&[2]);
+        s2.close();
+        let spans = daemon.spans.snapshot();
+        assert!(spans.iter().any(|sp| sp.track == id2 && sp.name == "cache-hit"));
+    }
+
+    #[test]
+    fn content_key_separates_source_and_pipeline() {
+        assert_ne!(content_key("a", "b,c"), content_key("ab", ",c"));
+        assert_ne!(content_key(HELLO, "default"), content_key(HELLO, "libcres,rpcgen"));
+        assert_eq!(content_key(HELLO, "default"), content_key(HELLO, "default"));
+    }
+}

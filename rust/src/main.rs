@@ -12,6 +12,11 @@
 //! gpu-first explain <prog.ir>          # symbol resolution + RPC argument
 //!                                      # classification + per-pass timings
 //!                                      # + lowered (register-file) dump
+//! gpu-first serve   <prog.ir> [--serve-sessions N] [--serve-queue N]
+//!                   [--serve-opens N] [--serve-tenants N] [--serve-runs N]
+//!                                      # resident daemon demo: N interleaved
+//!                                      # sessions against the compiled-module
+//!                                      # cache, admission + tenant counters
 //! gpu-first apps                        # list evaluation apps
 //! gpu-first artifacts [--dir artifacts] # load + smoke the AOT artifacts
 //! ```
@@ -42,7 +47,7 @@
 //! A traced run prints the top slowest spans and the per-callee RPC
 //! round-trip table at the end.
 
-use gpu_first::coordinator::{Config, GpuFirstSession};
+use gpu_first::coordinator::{Config, GpuFirstSession, ServeConfig, ServeDaemon, ServeError};
 use gpu_first::ir::parser::parse_module;
 use gpu_first::ir::printer::{print_lowered_module, print_module};
 use gpu_first::obs::SpanKind;
@@ -51,20 +56,23 @@ use gpu_first::util::cli::Args;
 use gpu_first::util::table::Table;
 
 fn main() {
-    let args = Args::from_env(&["compile", "run", "explain", "apps", "artifacts"]);
+    let args = Args::from_env(&["compile", "run", "explain", "serve", "apps", "artifacts"]);
     let result = match args.subcommand.as_deref() {
         Some("compile") => cmd_compile(&args),
         Some("run") => cmd_run(&args),
         Some("explain") => cmd_explain(&args),
+        Some("serve") => cmd_serve(&args),
         Some("apps") => cmd_apps(),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: gpu-first <compile|run|explain|apps|artifacts> [...]\n\
+                "usage: gpu-first <compile|run|explain|serve|apps|artifacts> [...]\n\
                  run options: --teams N --threads N --allocator generic|vendor|balanced[N,M]\n\
                               --heap-mb N --rpc-lanes N|auto --rpc-workers N|auto\n\
                               --rpc-launch-threads N --rpc-launch-slots N\n\
                               --rpc-data-cap BYTES --no-rpc-batch --verbose\n\
+                 serve:       --serve-sessions N (concurrent cap) --serve-queue N\n\
+                              --serve-opens N --serve-tenants N --serve-runs N\n\
                  telemetry:   --trace (span recorder) --trace-out FILE (Chrome\n\
                               trace-event JSON, implies --trace) --metrics-out FILE\n\
                               (RunMetrics JSON with latency histograms)\n\
@@ -304,6 +312,67 @@ fn cmd_explain(args: &Args) -> Result<(), String> {
         print!("\n{}", print_lowered_module(&module));
     }
     session.stop();
+    Ok(())
+}
+
+/// The resident daemon in miniature: open `--serve-opens` sessions on
+/// the program (spread across `--serve-tenants` tenant names, at most
+/// `--serve-sessions` concurrent, `--serve-queue` waiters), run each
+/// `--serve-runs` times against the compiled-module cache, and report
+/// the daemon snapshot (admission, cache, per-tenant counters, latency
+/// percentiles). `--metrics-out FILE` writes the snapshot JSON.
+fn cmd_serve(args: &Args) -> Result<(), String> {
+    let path = args.positional.first().ok_or("expected an input .ir file")?;
+    let source = std::fs::read_to_string(path).map_err(|e| format!("{path}: {e}"))?;
+    let spec = pipeline_spec(args)?;
+    let base = Config::from_args(args)?;
+    let max_sessions = args.get_usize("serve-sessions", 4);
+    let queue_depth = args.get_usize("serve-queue", 16);
+    let opens = args.get_usize("serve-opens", 16);
+    let tenants = args.get_usize("serve-tenants", 2).max(1);
+    let runs = args.get_usize("serve-runs", 1).max(1);
+    let daemon = ServeDaemon::start(ServeConfig { base, max_sessions, queue_depth });
+    let workers = max_sessions.max(1).min(opens.max(1));
+    std::thread::scope(|s| {
+        for w in 0..workers {
+            let daemon = &daemon;
+            let source = source.as_str();
+            let spec = &spec;
+            s.spawn(move || {
+                // Worker w serves opens w, w+workers, w+2*workers, ...
+                for i in (w..opens).step_by(workers.max(1)) {
+                    let tenant = format!("tenant-{}", i % tenants);
+                    match daemon.open_session_spec(&tenant, source, spec) {
+                        Ok(mut session) => {
+                            for _ in 0..runs {
+                                session.run(&[]);
+                            }
+                            session.close();
+                        }
+                        Err(ServeError::Saturated { .. }) => {} // counted by the daemon
+                        Err(e) => eprintln!("error: session {i}: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    let snap = daemon.snapshot();
+    println!(";; serve: {}", snap.summary());
+    if !snap.session_latency.is_empty() {
+        println!(
+            ";; serve: session latency p50={} p99={} over {} runs",
+            gpu_first::util::fmt_ns(snap.session_latency.p50() as f64),
+            gpu_first::util::fmt_ns(snap.session_latency.p99() as f64),
+            snap.session_latency.count,
+        );
+    }
+    if args.flag("verbose") {
+        println!(";; JSON {}", snap.to_json());
+    }
+    if let Some(out) = args.get("metrics-out") {
+        std::fs::write(out, format!("{}\n", snap.to_json())).map_err(|e| format!("{out}: {e}"))?;
+        eprintln!(";; gpu-first: wrote serve snapshot to {out}");
+    }
     Ok(())
 }
 

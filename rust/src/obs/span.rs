@@ -27,6 +27,10 @@ pub enum SpanKind {
     Interp,
     /// Middle-end passes (parse + the pass-manager pipeline).
     Pass,
+    /// Serving-daemon session lifecycle (queue wait, compile-or-cache,
+    /// run) — `track` is the session id, so every session owns one
+    /// timeline row in the exported trace.
+    Session,
 }
 
 impl SpanKind {
@@ -38,6 +42,7 @@ impl SpanKind {
             SpanKind::LaunchSlot => "launch-slot",
             SpanKind::Interp => "interp",
             SpanKind::Pass => "pass",
+            SpanKind::Session => "session",
         }
     }
 
@@ -50,6 +55,7 @@ impl SpanKind {
             SpanKind::LaunchSlot => 3000,
             SpanKind::Interp => 4000,
             SpanKind::Pass => 5000,
+            SpanKind::Session => 6000,
         }
     }
 }

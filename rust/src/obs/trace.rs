@@ -20,6 +20,7 @@ pub fn track_label(kind: SpanKind, track: u64) -> String {
         SpanKind::LaunchSlot => format!("launch-slot {track}"),
         SpanKind::Interp => format!("interp team {track}"),
         SpanKind::Pass => "passes".to_string(),
+        SpanKind::Session => format!("session {track}"),
     }
 }
 

@@ -20,10 +20,12 @@
 //! resolution table classifies as a printf/scanf-family host RPC, the
 //! format operand's def chain is folded through copies, zero-offset
 //! `gep`s and constant-condition `select`s; interprocedurally, a
-//! parameter that every caller binds to the *same* constant global is
-//! folded inside the callee. A successful fold rewrites the format
-//! operand to the global itself, so `rpcgen`'s `parse_format` sees
-//! literal text and classifies the trailing buffers precisely instead of
+//! parameter that every caller binds to the *same* constant — a
+//! constant global *or* an integer — is folded inside the callee, so a
+//! `select` whose condition is a consistently-bound integer parameter
+//! picks its side too. A successful fold rewrites the format operand to
+//! the global itself, so `rpcgen`'s `parse_format` sees literal text
+//! and classifies the trailing buffers precisely instead of
 //! read-write. The parameter bindings are iterated to a fixed point, so
 //! constants flow through nested wrappers before the single rewrite
 //! round.
@@ -89,13 +91,23 @@ pub fn run_with(m: &mut Module, table: &ResolutionTable) -> ConstFoldReport {
     report
 }
 
+/// What every call site consistently binds a parameter to: a constant
+/// global (format text — the fold target) or a compile-time integer
+/// (feeds `select` conditions and `gep` offsets inside the callee).
+#[derive(Debug, Clone, PartialEq, Eq)]
+enum Binding {
+    Global(String),
+    Int(i64),
+}
+
 /// For every defined function, the parameters that *every* call site in
-/// the module binds to the same constant global: `(function, param
-/// name) -> global`. Iterated to a fixed point so a binding in a caller
-/// lets its own call sites fold (`main → outer(@fmt) → inner(%g)`
-/// binds `inner`'s parameter transitively). Parameters shadowed by a
-/// local definition in the callee are excluded.
-fn param_bindings(m: &Module) -> HashMap<(String, String), String> {
+/// the module binds to the same constant (global or integer):
+/// `(function, param name) -> binding`. Iterated to a fixed point so a
+/// binding in a caller lets its own call sites fold (`main →
+/// outer(@fmt) → inner(%g)` binds `inner`'s parameter transitively).
+/// Parameters shadowed by a local definition in the callee are
+/// excluded.
+fn param_bindings(m: &Module) -> HashMap<(String, String), Binding> {
     let mut bindings = HashMap::new();
     // Each round propagates constants one call-graph level deeper; 16
     // levels is far beyond any real wrapper nesting, and the early
@@ -115,17 +127,17 @@ fn param_bindings(m: &Module) -> HashMap<(String, String), String> {
 /// be bound to globals).
 fn bindings_once(
     m: &Module,
-    prev: &HashMap<(String, String), String>,
-) -> HashMap<(String, String), String> {
-    // (callee, param index) -> Some(global) while consistent, None once
+    prev: &HashMap<(String, String), Binding>,
+) -> HashMap<(String, String), Binding> {
+    // (callee, param index) -> Some(binding) while consistent, None once
     // two sites disagree (or a site passes something unfoldable).
-    let mut seen: HashMap<(String, usize), Option<String>> = HashMap::new();
+    let mut seen: HashMap<(String, usize), Option<Binding>> = HashMap::new();
     for (caller, f) in &m.functions {
         let defs = def_map(f);
-        let caller_params: HashMap<String, String> = prev
+        let caller_params: HashMap<String, Binding> = prev
             .iter()
             .filter(|((func, _), _)| func == caller)
-            .map(|((_, param), global)| (param.clone(), global.clone()))
+            .map(|((_, param), binding)| (param.clone(), binding.clone()))
             .collect();
         walk(&f.body, &mut |ins| {
             if let Instr::Call { callee, args, .. } = ins {
@@ -133,10 +145,14 @@ fn bindings_once(
                     return;
                 }
                 for (i, arg) in args.iter().enumerate() {
-                    let folded = fold_operand(m, &defs, &caller_params, arg, 0);
+                    let folded = fold_operand(m, &defs, &caller_params, arg, 0)
+                        .map(Binding::Global)
+                        .or_else(|| {
+                            fold_const_int(&defs, &caller_params, arg, 0).map(Binding::Int)
+                        });
                     seen.entry((callee.clone(), i))
                         .and_modify(|entry| {
-                            if entry.as_deref() != folded.as_deref() {
+                            if entry.as_ref() != folded.as_ref() {
                                 *entry = None;
                             }
                         })
@@ -146,8 +162,8 @@ fn bindings_once(
         });
     }
     let mut out = HashMap::new();
-    for ((callee, i), global) in seen {
-        let Some(global) = global else { continue };
+    for ((callee, i), binding) in seen {
+        let Some(binding) = binding else { continue };
         let Some(f) = m.functions.get(&callee) else { continue };
         let Some(param) = f.params.get(i) else { continue };
         // A body instruction redefining the parameter name shadows the
@@ -156,7 +172,7 @@ fn bindings_once(
         if def_map(f).contains_key(&param.name) {
             continue;
         }
-        out.insert((callee.clone(), param.name.clone()), global);
+        out.insert((callee.clone(), param.name.clone()), binding);
     }
     out
 }
@@ -165,7 +181,7 @@ fn bindings_once(
 fn fold_round(
     m: &mut Module,
     table: &ResolutionTable,
-    bindings: &HashMap<(String, String), String>,
+    bindings: &HashMap<(String, String), Binding>,
     report: &mut ConstFoldReport,
 ) -> u64 {
     let mut folds = 0;
@@ -173,10 +189,10 @@ fn fold_round(
     for fname in fnames {
         let f = m.functions.get(&fname).unwrap();
         let defs = def_map(f);
-        let my_params: HashMap<String, String> = bindings
+        let my_params: HashMap<String, Binding> = bindings
             .iter()
             .filter(|((func, _), _)| *func == fname)
-            .map(|((_, param), global)| (param.clone(), global.clone()))
+            .map(|((_, param), binding)| (param.clone(), binding.clone()))
             .collect();
         let mut f = f.clone();
         let n = fold_body(m, &mut f.body, &defs, &my_params, table, &fname, report);
@@ -194,7 +210,7 @@ fn fold_body(
     m: &Module,
     body: &mut Vec<Instr>,
     defs: &HashMap<String, Instr>,
-    params: &HashMap<String, String>,
+    params: &HashMap<String, Binding>,
     table: &ResolutionTable,
     fname: &str,
     report: &mut ConstFoldReport,
@@ -247,11 +263,12 @@ fn render(op: &Operand) -> String {
 
 /// Fold `op` down to a constant global it provably aliases at offset 0:
 /// follows plain copies, zero-offset `gep`s, constant-condition
-/// `select`s, and parameters bound by every caller (`params`).
+/// `select`s (where the condition may itself be a consistently-bound
+/// integer parameter), and parameters bound by every caller (`params`).
 fn fold_operand(
     m: &Module,
     defs: &HashMap<String, Instr>,
-    params: &HashMap<String, String>,
+    params: &HashMap<String, Binding>,
     op: &Operand,
     depth: usize,
 ) -> Option<String> {
@@ -263,11 +280,11 @@ fn fold_operand(
         Operand::Var(v) => match defs.get(v) {
             Some(Instr::Assign { expr, .. }) => match expr {
                 Expr::Op(inner) => fold_operand(m, defs, params, inner, depth + 1),
-                Expr::Gep(base, off) if fold_const_int(defs, off, 0) == Some(0) => {
+                Expr::Gep(base, off) if fold_const_int(defs, params, off, 0) == Some(0) => {
                     fold_operand(m, defs, params, base, depth + 1)
                 }
                 Expr::Select(c, a, b) => {
-                    let cv = fold_const_int(defs, c, 0)?;
+                    let cv = fold_const_int(defs, params, c, 0)?;
                     let side = if cv != 0 { a } else { b };
                     fold_operand(m, defs, params, side, depth + 1)
                 }
@@ -276,14 +293,24 @@ fn fold_operand(
             Some(_) => None,
             // No local definition: a parameter — foldable when every
             // caller binds it to the same constant global.
-            None => params.get(v).cloned(),
+            None => match params.get(v) {
+                Some(Binding::Global(g)) => Some(g.clone()),
+                _ => None,
+            },
         },
         _ => None,
     }
 }
 
-/// Fold `op` to a compile-time integer (constants and copy chains).
-fn fold_const_int(defs: &HashMap<String, Instr>, op: &Operand, depth: usize) -> Option<i64> {
+/// Fold `op` to a compile-time integer: constants, copy chains, and
+/// parameters every caller binds to the same integer (the bindings that
+/// let `select` conditions fold through wrapper params).
+fn fold_const_int(
+    defs: &HashMap<String, Instr>,
+    params: &HashMap<String, Binding>,
+    op: &Operand,
+    depth: usize,
+) -> Option<i64> {
     if depth > 32 {
         return None;
     }
@@ -291,9 +318,13 @@ fn fold_const_int(defs: &HashMap<String, Instr>, op: &Operand, depth: usize) -> 
         Operand::ConstI(i) => Some(*i),
         Operand::Var(v) => match defs.get(v) {
             Some(Instr::Assign { expr: Expr::Op(inner), .. }) => {
-                fold_const_int(defs, inner, depth + 1)
+                fold_const_int(defs, params, inner, depth + 1)
             }
-            _ => None,
+            Some(_) => None,
+            None => match params.get(v) {
+                Some(Binding::Int(i)) => Some(*i),
+                _ => None,
+            },
         },
         _ => None,
     }
@@ -440,6 +471,37 @@ func @main() -> i64 {
     }
 
     #[test]
+    fn select_condition_folds_through_param_binding() {
+        let src = r#"
+global @fmt const 3 "%d"
+global @alt const 3 "%f"
+
+func @log(%f: ptr, %c: i64) -> void {
+  %f = select %c, @alt, @fmt
+  call printf(%f, 1)
+  return
+}
+
+func @main() -> i64 {
+  call log(@fmt, 0)
+  call log(@fmt, 0)
+  return 0
+}
+"#;
+        // %f is shadowed by the select, so its own binding is dropped —
+        // but %c is bound to 0 by every site, so the select condition
+        // folds through the parameter and picks the false side.
+        let (m, report) = fold(src);
+        assert_eq!(report.count(), 1, "{:?}", report.folded);
+        assert_eq!(fmt_arg_of_call(&m, "log", "printf", 0), Operand::Global("fmt".into()));
+        // The true side folds the other way.
+        let src1 = src.replace("call log(@fmt, 0)", "call log(@fmt, 1)");
+        let mut m = parse_module(&src1).unwrap();
+        run(&mut m);
+        assert_eq!(fmt_arg_of_call(&m, "log", "printf", 0), Operand::Global("alt".into()));
+    }
+
+    #[test]
     fn shadowed_parameter_and_dynamic_select_do_not_fold() {
         let src = r#"
 global @fmt const 3 "%d"
@@ -453,13 +515,13 @@ func @log(%f: ptr, %c: i64) -> void {
 
 func @main() -> i64 {
   call log(@fmt, 0)
+  call log(@fmt, 1)
   return 0
 }
 "#;
-        // %f is shadowed by the select, whose condition is a parameter:
-        // neither the binding nor the local chain may fold. (The local
-        // select *could* fold through %c's binding, but conditions fold
-        // through constants only — conservative by design.)
+        // %f is shadowed by the select, and the sites disagree on %c:
+        // the condition stays dynamic, so neither the binding nor the
+        // local chain may fold.
         let (_, report) = fold(src);
         assert_eq!(report.count(), 0, "{:?}", report.folded);
     }

@@ -9,6 +9,32 @@
 //! pass manager as [`crate::transform::PipelineSpec`].
 
 use std::collections::BTreeMap;
+use std::fmt;
+
+/// A typed flag-parse failure: the offending flag, the value it got and
+/// what it expected. [`Args::try_get`] renders it to the historical
+/// usage string; typed consumers (the coordinator's `ConfigError`) wrap
+/// it whole so the flag name survives into structured error handling.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FlagParseError {
+    pub flag: String,
+    pub value: String,
+    pub expected: String,
+}
+
+impl fmt::Display for FlagParseError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "--{} expects {}, got {:?}", self.flag, self.expected, self.value)
+    }
+}
+
+impl std::error::Error for FlagParseError {}
+
+impl From<FlagParseError> for String {
+    fn from(e: FlagParseError) -> Self {
+        e.to_string()
+    }
+}
 
 /// The RPC engine shape as one value: `lanes × workers × launch_threads
 /// × launch_slots`. CI's engine-shape matrix exports it as
@@ -126,18 +152,31 @@ impl Args {
     }
 
     /// Fallible typed accessor: `Ok(None)` when the option is absent,
-    /// `Err(message)` when the value does not parse.
+    /// `Err(message)` when the value does not parse. A string-rendering
+    /// shim over [`Args::try_get_typed`].
     pub fn try_get<T: std::str::FromStr>(
         &self,
         name: &str,
         expected: &str,
     ) -> Result<Option<T>, String> {
+        self.try_get_typed(name, expected).map_err(String::from)
+    }
+
+    /// [`Args::try_get`] with the failure as a typed [`FlagParseError`]
+    /// instead of a rendered string, so callers building structured
+    /// error enums keep the flag/value/expectation fields.
+    pub fn try_get_typed<T: std::str::FromStr>(
+        &self,
+        name: &str,
+        expected: &str,
+    ) -> Result<Option<T>, FlagParseError> {
         match self.get(name) {
             None => Ok(None),
-            Some(v) => v
-                .parse()
-                .map(Some)
-                .map_err(|_| format!("--{name} expects {expected}, got {v:?}")),
+            Some(v) => v.parse().map(Some).map_err(|_| FlagParseError {
+                flag: name.to_string(),
+                value: v.to_string(),
+                expected: expected.to_string(),
+            }),
         }
     }
 
@@ -217,6 +256,19 @@ mod tests {
         assert!(err.contains("lots"), "echoes the bad value: {err}");
         assert_eq!(a.try_get::<f64>("x", "a number").unwrap(), Some(1.5));
         assert_eq!(a.try_get::<usize>("missing", "an integer").unwrap(), None);
+    }
+
+    #[test]
+    fn typed_parse_error_carries_fields_and_renders_identically() {
+        let a = Args::parse(&sv(&["--teams", "lots"]), &[]);
+        let err = a.try_get_typed::<usize>("teams", "an integer").unwrap_err();
+        assert_eq!(err.flag, "teams");
+        assert_eq!(err.value, "lots");
+        assert_eq!(err.expected, "an integer");
+        // The typed path renders byte-identically to the string path.
+        let rendered = a.try_get::<usize>("teams", "an integer").unwrap_err();
+        assert_eq!(err.to_string(), rendered);
+        assert_eq!(String::from(err), rendered);
     }
 
     #[test]

@@ -77,6 +77,23 @@ impl Json {
     pub fn num(n: f64) -> Json {
         Json::Num(n)
     }
+
+    /// Integer counter convenience: counters everywhere in the exporters
+    /// are `u64`/`i64`; this keeps the `as f64` casts out of schema
+    /// construction. Integral f64s print without a fraction, so the
+    /// emitted bytes are identical to `Json::num(n as f64)`.
+    pub fn int(n: i64) -> Json {
+        Json::Num(n as f64)
+    }
+
+    /// `int` for the unsigned counters (all well within 2^53).
+    pub fn uint(n: u64) -> Json {
+        Json::Num(n as f64)
+    }
+
+    pub fn bool(b: bool) -> Json {
+        Json::Bool(b)
+    }
 }
 
 impl fmt::Display for Json {
@@ -329,6 +346,16 @@ mod tests {
         assert!(Json::parse("{} x").is_err());
         assert!(Json::parse("[1,").is_err());
         assert!(Json::parse("\"unterminated").is_err());
+    }
+
+    #[test]
+    fn int_and_uint_emit_identically_to_num() {
+        assert_eq!(Json::int(42).to_string(), Json::num(42.0).to_string());
+        assert_eq!(Json::uint(42).to_string(), "42");
+        assert_eq!(Json::int(-7).to_string(), "-7");
+        assert_eq!(Json::bool(true).to_string(), "true");
+        // Values stay Num: parse/eq round trips agree with num().
+        assert_eq!(Json::int(5), Json::num(5.0));
     }
 
     #[test]

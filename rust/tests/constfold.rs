@@ -72,6 +72,35 @@ func @main() -> i64 {
         exit: 0,
     },
     Program {
+        // The select lives inside the wrapper and its *condition* is a
+        // parameter — folds only because every caller binds %c to the
+        // same integer (the param-binding generalization).
+        name: "select_condition_through_wrapper_param",
+        src: r#"
+global @f1 const 4 "%s\n"
+global @f2 const 4 "%d\n"
+global @msg const 6 "hello"
+global @buf 64
+
+func @pick_and_print(%c: i64, %s: ptr) -> void {
+  %f = select %c, @f1, @f2
+  call printf(%f, %s)
+  return
+}
+
+func @main() -> i64 {
+  %p = gep @buf, 0
+  call strcpy(%p, @msg)
+  call pick_and_print(1, %p)
+  call pick_and_print(1, %p)
+  return 0
+}
+"#,
+        files: &[],
+        stdout: "hello\nhello\n",
+        exit: 0,
+    },
+    Program {
         name: "pass_through_wrapper_fscanf",
         src: r#"
 global @path const 6 "n.txt"

@@ -1,0 +1,183 @@
+//! Serving-daemon integration corpus: concurrent sessions through the
+//! resident [`ServeDaemon`] against three promises the service API
+//! makes on top of the one-shot loader —
+//!
+//! * the module cache compiles a `(source, pipeline)` content hash
+//!   exactly once no matter how many opens race it,
+//! * per-session metrics and host I/O never bleed between concurrent
+//!   tenants (each session owns its device, engine, and `HostEnv`),
+//! * a served session is observably byte-identical to the legacy
+//!   one-shot `GpuFirstSession::execute` path it wraps.
+
+use gpu_first::coordinator::{Config, GpuFirstSession, ServeConfig, ServeDaemon, ServeError};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::ir::parser::parse_module;
+use gpu_first::transform::CompileOptions;
+
+/// The served program: a per-session id threaded through a printf loop,
+/// so stdout bleeding between sessions is immediately visible.
+const SRC: &str = r#"
+global @fmt const 16 "session %d:%d\n"
+
+func @main(%id: i64) -> i64 {
+  for %i = 0 to 3 step 1 {
+    call printf(@fmt, %id, %i)
+  }
+  return %id
+}
+"#;
+
+fn expected_stdout(id: i64) -> String {
+    (0..3).map(|i| format!("session {id}:{i}\n")).collect()
+}
+
+fn serve_config(max_sessions: usize, queue_depth: usize) -> ServeConfig {
+    let base = Config {
+        mem: MemConfig::small(),
+        teams: 2,
+        threads_per_team: 16,
+        ..Default::default()
+    };
+    ServeConfig { base, max_sessions, queue_depth }
+}
+
+#[test]
+fn racing_opens_compile_once_and_sessions_do_not_bleed() {
+    const OPENS: usize = 6;
+    let daemon = ServeDaemon::start(serve_config(3, OPENS));
+
+    // Every open races the same source; some are concurrent with the
+    // compile, some queue behind the 3-session admission cap.
+    let results: Vec<(u64, bool, bool, u64)> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..OPENS)
+            .map(|i| {
+                let daemon = &daemon;
+                s.spawn(move || {
+                    let tenant = format!("tenant-{}", i % 2);
+                    let mut session = daemon.open_session(&tenant, SRC).expect("admitted");
+                    let (ret, metrics) = session.run(&[i as i64]);
+                    assert_eq!(ret, i as i64);
+                    // Isolation: this session's stdout holds exactly its
+                    // own id — a bleed from any concurrent session would
+                    // land foreign lines here.
+                    assert_eq!(session.stdout_string(), expected_stdout(i as i64));
+                    let row = (
+                        session.id(),
+                        session.cache_hit(),
+                        metrics.passes.is_empty(),
+                        metrics.session,
+                    );
+                    session.close();
+                    row
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    // Compile-once: exactly one open missed the cache (and it is the
+    // one whose metrics carry pipeline pass timings).
+    let misses = results.iter().filter(|(_, hit, _, _)| !hit).count();
+    assert_eq!(misses, 1, "racing opens still compile the module exactly once");
+    for &(id, hit, no_passes, metrics_session) in &results {
+        assert_eq!(no_passes, hit, "cache hits run zero passes; the miss runs the pipeline");
+        assert_eq!(metrics_session, id, "RunMetrics carries its own session id");
+    }
+    let mut ids: Vec<u64> = results.iter().map(|r| r.0).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), OPENS, "every session got a distinct id");
+
+    let snap = daemon.snapshot();
+    assert_eq!(snap.admitted as usize, OPENS);
+    assert_eq!((snap.cache_misses, snap.cache_hits), (1, OPENS as u64 - 1));
+    assert_eq!(snap.rejected, 0);
+    assert_eq!(snap.session_latency.count as usize, OPENS);
+    assert!(snap.peak_active <= 3, "admission never exceeded max_sessions");
+    assert_eq!(daemon.cached_modules(), 1);
+}
+
+#[test]
+fn served_session_matches_the_legacy_one_shot_path() {
+    // Legacy one-shot path: parse, compile, load, run in one process-
+    // private session — the API every pre-daemon caller uses.
+    let cfg = Config {
+        mem: MemConfig::small(),
+        teams: 2,
+        threads_per_team: 16,
+        ..Default::default()
+    };
+    let module = parse_module(SRC).expect("parse");
+    let mut legacy = GpuFirstSession::start(cfg);
+    let (legacy_ret, legacy_metrics) =
+        legacy.execute(module, CompileOptions::default(), &[5]).expect("execute");
+    let legacy_stdout = legacy.host.stdout_string();
+    legacy.stop();
+
+    // Served path: max_sessions=1 so the per-session engine budget is
+    // the whole base config — the same shape the one-shot session ran.
+    let daemon = ServeDaemon::start(serve_config(1, 0));
+    let mut session = daemon.open_session("compat", SRC).expect("admitted");
+    let (served_ret, served_metrics) = session.run(&[5]);
+
+    assert_eq!(served_ret, legacy_ret);
+    assert_eq!(session.stdout_string(), legacy_stdout, "byte-identical observable output");
+    assert_eq!(served_metrics.exit_code, legacy_metrics.exit_code);
+    assert_eq!(served_metrics.main_stats.rpc_calls, legacy_metrics.main_stats.rpc_calls);
+    assert_eq!(served_metrics.folded_formats, legacy_metrics.folded_formats);
+    assert_eq!(served_metrics.lowered_fns, legacy_metrics.lowered_fns);
+    assert_eq!(served_metrics.grid, legacy_metrics.grid);
+    // First open compiled fresh, so even the pass list matches.
+    assert_eq!(
+        served_metrics.passes.iter().map(|t| t.pass.as_str()).collect::<Vec<_>>(),
+        legacy_metrics.passes.iter().map(|t| t.pass.as_str()).collect::<Vec<_>>(),
+    );
+    session.close();
+}
+
+#[test]
+fn tenant_counters_attribute_admission_queueing_and_rejection() {
+    let daemon = ServeDaemon::start(serve_config(1, 1));
+    let first = daemon.open_session("alpha", SRC).expect("admitted");
+
+    std::thread::scope(|s| {
+        let queued = s.spawn(|| {
+            // Queues behind `first`, admitted once it closes.
+            let mut session = daemon.open_session("beta", SRC).expect("admitted after wait");
+            let (ret, _) = session.run(&[2]);
+            assert_eq!(ret, 2);
+            assert!(session.cache_hit(), "the queued open serves the cached module");
+            session.close();
+        });
+        // Wait for beta to be parked in the admission queue, then a
+        // third tenant must bounce off the full queue immediately.
+        while daemon.snapshot().waiting == 0 {
+            std::thread::yield_now();
+        }
+        match daemon.open_session("gamma", SRC) {
+            Err(ServeError::Saturated { active, queued }) => {
+                assert_eq!((active, queued), (1, 1));
+            }
+            other => panic!("expected saturation, got {:?}", other.map(|s| s.id())),
+        }
+        first.close();
+        queued.join().unwrap();
+    });
+
+    let snap = daemon.snapshot();
+    assert_eq!(snap.admitted, 2);
+    assert_eq!(snap.queued, 1);
+    assert_eq!(snap.rejected, 1);
+    assert_eq!(snap.queue_wait.count, 1, "the queued admission recorded its wait");
+    let tenant = |name: &str| {
+        snap.tenants
+            .iter()
+            .find(|(t, _)| t == name)
+            .map(|(_, c)| c.clone())
+            .unwrap_or_else(|| panic!("tenant {name} missing from snapshot"))
+    };
+    assert_eq!((tenant("alpha").admitted, tenant("alpha").queued), (1, 0));
+    assert_eq!((tenant("beta").admitted, tenant("beta").queued), (1, 1));
+    assert_eq!(tenant("gamma").rejected, 1);
+    assert_eq!(tenant("beta").runs, 1, "runs attribute to the tenant that issued them");
+}
