@@ -3,11 +3,12 @@
 //! paper's headline claim (up to 14.36x on the GPU).
 //!
 //! The trailing section benchmarks the interpreter itself on an
-//! XSBench-shaped IR lookup loop: tree-walk executor (no `lower` pass)
-//! vs the register-file core (default pipeline), the before/after of
-//! the slot-resolved lowering. `FIG08_QUICK=1` shrinks the loop for
-//! CI's bench-smoke job; `FIG08_JSON=FILE` writes the comparison as
-//! JSON (committed as `BENCH_fig08.json` on main).
+//! XSBench-shaped IR lookup loop across all three executor tiers:
+//! tree-walk (no `lower` pass), the register-file core (`lower,fuse`),
+//! and the linear-bytecode pc-loop (default pipeline) — the
+//! before/after of each execution-tier optimization. `FIG08_QUICK=1`
+//! shrinks the loop for CI's bench-smoke job; `FIG08_JSON=FILE` writes
+//! the comparison as JSON (committed as `BENCH_fig08.json` on main).
 
 use gpu_first::apps::common::{close, Mode};
 use gpu_first::apps::xsbench::{run, LookupMode, XsWorkload};
@@ -59,8 +60,8 @@ func @main() -> i64 {{
 }
 
 /// Run the lookup program under `passes`; returns (mean ns/run, exit,
-/// lowered_fns, fused_instrs).
-fn interp_leg(passes: &str, lookups: usize) -> (f64, i64, u64, u64) {
+/// lowered_fns, fused_instrs, bytecode_fns).
+fn interp_leg(passes: &str, lookups: usize) -> (f64, i64, u64, u64, u64) {
     let mut m = parse_module(&lookup_src(lookups)).unwrap();
     let mut s = GpuFirstSession::start(Config {
         mem: MemConfig::small(),
@@ -83,7 +84,7 @@ fn interp_leg(passes: &str, lookups: usize) -> (f64, i64, u64, u64) {
     let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
     let mt = metrics.unwrap();
     s.stop();
-    (ns, warm, mt.lowered_fns, mt.fused_instrs)
+    (ns, warm, mt.lowered_fns, mt.fused_instrs, mt.bytecode_fns)
 }
 
 fn main() {
@@ -120,17 +121,23 @@ fn main() {
         fmt_ratio(headline)
     );
 
-    // Interpreter before/after: tree-walk vs the register-file core on
-    // the XSBench-shaped lookup loop.
+    // Interpreter before/after per execution tier: tree-walk vs the
+    // register-file core vs linear bytecode on the XSBench-shaped
+    // lookup loop.
     let lookups = if quick() { 2_000 } else { 50_000 };
-    let (tree_ns, tree_ret, tree_lowered, _) =
+    let (tree_ns, tree_ret, tree_lowered, _, _) =
         interp_leg("constfold,dce,libcres,rpcgen,multiteam", lookups);
-    let (core_ns, core_ret, lowered_fns, fused_instrs) =
+    let (core_ns, core_ret, lowered_fns, fused_instrs, core_bc) =
         interp_leg("constfold,dce,libcres,rpcgen,multiteam,lower,fuse", lookups);
+    let (bc_ns, bc_ret, _, _, bytecode_fns) =
+        interp_leg("constfold,dce,libcres,rpcgen,multiteam,lower,fuse,bytecode", lookups);
     assert_eq!(tree_ret, core_ret, "executors must agree on the result");
+    assert_eq!(tree_ret, bc_ret, "executors must agree on the result");
     assert_eq!(tree_lowered, 0);
-    assert!(lowered_fns > 0 && fused_instrs > 0);
+    assert_eq!(core_bc, 0);
+    assert!(lowered_fns > 0 && fused_instrs > 0 && bytecode_fns > 0);
     let speedup = tree_ns / core_ns;
+    let speedup_bc = tree_ns / bc_ns;
     let mut it = Table::new(
         "interpreter executors — XSBench-shaped lookup loop (wallclock)",
         &["series", "ns/run", "speedup"],
@@ -141,6 +148,11 @@ fn main() {
         format!("{core_ns:.0}"),
         format!("{speedup:.2}x"),
     ]);
+    it.row(&[
+        "linear bytecode (default)".into(),
+        format!("{bc_ns:.0}"),
+        format!("{speedup_bc:.2}x"),
+    ]);
     it.print();
 
     let report = Json::obj(vec![
@@ -149,9 +161,12 @@ fn main() {
         ("lookups", Json::num(lookups as f64)),
         ("tree_walk_ns", Json::num(tree_ns)),
         ("register_core_ns", Json::num(core_ns)),
+        ("bytecode_ns", Json::num(bc_ns)),
         ("speedup", Json::num(speedup)),
+        ("speedup_bytecode", Json::num(speedup_bc)),
         ("lowered_fns", Json::num(lowered_fns as f64)),
         ("fused_instrs", Json::num(fused_instrs as f64)),
+        ("bytecode_fns", Json::num(bytecode_fns as f64)),
     ]);
     println!("\nJSON {report}");
     // CI's bench-smoke job exports FIG08_JSON=BENCH_fig08.json and

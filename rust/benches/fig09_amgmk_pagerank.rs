@@ -1,9 +1,10 @@
 //! E7 — Fig. 9c: AMGmk relax kernel and page-rank propagation step.
 //!
 //! The trailing section benchmarks the interpreter itself on a
-//! relax-shaped IR sweep (ELL-style row × width gather/accumulate):
-//! tree-walk executor vs the register-file core, the before/after of
-//! the slot-resolved lowering. `FIG09_QUICK=1` shrinks the sweep for
+//! relax-shaped IR sweep (ELL-style row × width gather/accumulate)
+//! across all three executor tiers: tree-walk vs the register-file
+//! core vs the linear-bytecode pc-loop, the before/after of each
+//! execution-tier optimization. `FIG09_QUICK=1` shrinks the sweep for
 //! CI's bench-smoke job; `FIG09_JSON=FILE` writes the comparison as
 //! JSON (committed as `BENCH_fig09.json` on main).
 
@@ -65,8 +66,8 @@ func @main() -> i64 {{
 }
 
 /// Run the relax program under `passes`; returns (mean ns/run, exit,
-/// lowered_fns, fused_instrs).
-fn interp_leg(passes: &str, rows: usize) -> (f64, i64, u64, u64) {
+/// lowered_fns, fused_instrs, bytecode_fns).
+fn interp_leg(passes: &str, rows: usize) -> (f64, i64, u64, u64, u64) {
     let mut m = parse_module(&relax_src(rows)).unwrap();
     let mut s = GpuFirstSession::start(Config {
         mem: MemConfig::small(),
@@ -89,7 +90,7 @@ fn interp_leg(passes: &str, rows: usize) -> (f64, i64, u64, u64) {
     let ns = t0.elapsed().as_nanos() as f64 / reps as f64;
     let mt = metrics.unwrap();
     s.stop();
-    (ns, warm, mt.lowered_fns, mt.fused_instrs)
+    (ns, warm, mt.lowered_fns, mt.fused_instrs, mt.bytecode_fns)
 }
 
 fn main() {
@@ -125,17 +126,22 @@ fn main() {
     t.print();
     println!("\nexpected shape (paper §5.3.4): GPU First tracks the manual offload on both.");
 
-    // Interpreter before/after: tree-walk vs the register-file core on
-    // the relax-shaped sweep.
+    // Interpreter before/after per execution tier: tree-walk vs the
+    // register-file core vs linear bytecode on the relax-shaped sweep.
     let rows = if quick() { 500 } else { 10_000 };
-    let (tree_ns, tree_ret, tree_lowered, _) =
+    let (tree_ns, tree_ret, tree_lowered, _, _) =
         interp_leg("constfold,dce,libcres,rpcgen,multiteam", rows);
-    let (core_ns, core_ret, lowered_fns, fused_instrs) =
+    let (core_ns, core_ret, lowered_fns, fused_instrs, core_bc) =
         interp_leg("constfold,dce,libcres,rpcgen,multiteam,lower,fuse", rows);
+    let (bc_ns, bc_ret, _, _, bytecode_fns) =
+        interp_leg("constfold,dce,libcres,rpcgen,multiteam,lower,fuse,bytecode", rows);
     assert_eq!(tree_ret, core_ret, "executors must agree on the result");
+    assert_eq!(tree_ret, bc_ret, "executors must agree on the result");
     assert_eq!(tree_lowered, 0);
-    assert!(lowered_fns > 0 && fused_instrs > 0);
+    assert_eq!(core_bc, 0);
+    assert!(lowered_fns > 0 && fused_instrs > 0 && bytecode_fns > 0);
     let speedup = tree_ns / core_ns;
+    let speedup_bc = tree_ns / bc_ns;
     let mut it = Table::new(
         "interpreter executors — relax-shaped sweep (wallclock)",
         &["series", "ns/run", "speedup"],
@@ -146,6 +152,11 @@ fn main() {
         format!("{core_ns:.0}"),
         format!("{speedup:.2}x"),
     ]);
+    it.row(&[
+        "linear bytecode (default)".into(),
+        format!("{bc_ns:.0}"),
+        format!("{speedup_bc:.2}x"),
+    ]);
     it.print();
 
     let report = Json::obj(vec![
@@ -154,9 +165,12 @@ fn main() {
         ("rows", Json::num(rows as f64)),
         ("tree_walk_ns", Json::num(tree_ns)),
         ("register_core_ns", Json::num(core_ns)),
+        ("bytecode_ns", Json::num(bc_ns)),
         ("speedup", Json::num(speedup)),
+        ("speedup_bytecode", Json::num(speedup_bc)),
         ("lowered_fns", Json::num(lowered_fns as f64)),
         ("fused_instrs", Json::num(fused_instrs as f64)),
+        ("bytecode_fns", Json::num(bytecode_fns as f64)),
     ]);
     println!("\nJSON {report}");
     // CI's bench-smoke job exports FIG09_JSON=BENCH_fig09.json and

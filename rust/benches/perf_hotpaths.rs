@@ -1,7 +1,8 @@
 //! §Perf — L3 hot-path microbenchmarks tracked across the optimization
 //! pass (EXPERIMENTS.md §Perf): RPC round-trip, allocator fast paths,
 //! simulator launch overhead, device-memory access, interpreter
-//! executors (tree-walk vs register-core), PJRT execution.
+//! executors (tree-walk vs register-core vs linear bytecode), PJRT
+//! execution.
 
 use gpu_first::alloc::{AllocCtx, BalancedAllocator, BalancedConfig, DeviceAllocator};
 use gpu_first::coordinator::{Config, GpuFirstSession};
@@ -92,8 +93,9 @@ fn main() {
     });
 
     // Interpreter executors over the same 512-iteration program: the
-    // tree-walk baseline against the slot-resolved register core, with
-    // and without superinstruction fusion.
+    // tree-walk baseline against the slot-resolved register core (with
+    // and without superinstruction fusion) and the flat pc-loop over
+    // linear bytecode, the default tier.
     bench_interp(
         &mut b,
         "interp tree-walk 512-iter loop",
@@ -108,6 +110,11 @@ fn main() {
         &mut b,
         "interp register-core+fuse 512-iter loop",
         "constfold,dce,libcres,rpcgen,multiteam,lower,fuse",
+    );
+    bench_interp(
+        &mut b,
+        "interp bytecode 512-iter loop",
+        "constfold,dce,libcres,rpcgen,multiteam,lower,fuse,bytecode",
     );
 
     // Real RPC round-trip (protocol cost without the modeled wait).

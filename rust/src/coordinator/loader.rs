@@ -176,6 +176,7 @@ impl GpuFirstSession {
             rpc_rw_intents: self.report.as_ref().map_or(0, |r| r.rpc.rw_buffer_intents),
             lowered_fns: self.report.as_ref().map_or(0, |r| r.lower.lowered_fns),
             fused_instrs: self.report.as_ref().map_or(0, |r| r.fuse.pairs),
+            bytecode_fns: self.report.as_ref().map_or(0, |r| r.bytecode.bytecode_fns),
             rpc_round_trip: obs.rpc_round_trip.snapshot(),
             rpc_per_callee,
             launch_queue_wait: obs.launch_queue_wait.snapshot(),
@@ -261,14 +262,25 @@ func @main() -> i64 {
         let names: Vec<&str> = metrics.passes.iter().map(|t| t.pass.as_str()).collect();
         assert_eq!(
             names,
-            vec!["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse"]
+            vec![
+                "constfold",
+                "dce",
+                "libcres",
+                "rpcgen",
+                "multiteam",
+                "lower",
+                "fuse",
+                "bytecode"
+            ]
         );
         assert!(metrics.compile_ns() > 0.0);
         assert_eq!(metrics.unresolved_calls, 0);
         assert_eq!(metrics.folded_formats, 0, "direct @fmt: nothing to fold");
-        // The default pipeline ran `main` on the register core.
+        // The default pipeline ran `main` on the linear bytecode tier.
         assert_eq!(metrics.lowered_fns, 1);
+        assert_eq!(metrics.bytecode_fns, 1);
         assert!(metrics.summary().contains("register_core fns=1"));
+        assert!(metrics.summary().contains("bytecode fns=1"));
         session.stop();
     }
 

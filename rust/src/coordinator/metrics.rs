@@ -51,6 +51,10 @@ pub struct RunMetrics {
     pub lowered_fns: u64,
     /// Superinstructions the `fuse` pass created across the module.
     pub fused_instrs: u64,
+    /// Functions the `bytecode` pass flattened to the linear bytecode
+    /// form (the executor the interpreter prefers over the register
+    /// core); 0 = register-core or tree-walk run.
+    pub bytecode_fns: u64,
     /// Client-measured RPC round-trip latency over every callee
     /// (claim → doorbell; the flat `real_ns` sum decomposed into a
     /// log-bucketed histogram with percentiles).
@@ -133,6 +137,9 @@ impl RunMetrics {
                 self.lowered_fns, self.fused_instrs
             ));
         }
+        if self.bytecode_fns > 0 {
+            s.push_str(&format!(" bytecode fns={}", self.bytecode_fns));
+        }
         if let Some(e) = &self.rpc_engine {
             s.push(' ');
             s.push_str(&e.summary());
@@ -153,6 +160,9 @@ impl RunMetrics {
         }
         if self.host_io.batched_reads > 0 {
             s.push_str(&format!(" batched_reads={}", self.host_io.batched_reads));
+        }
+        if self.host_io.batched_cross_callee > 0 {
+            s.push_str(&format!(" batched_cross_callee={}", self.host_io.batched_cross_callee));
         }
         if self.host_io.poison_recoveries > 0 {
             s.push_str(&format!(" poison_recoveries={}", self.host_io.poison_recoveries));
@@ -208,8 +218,10 @@ impl RunMetrics {
             ("rpc_rw_intents", Json::num(self.rpc_rw_intents as f64)),
             ("lowered_fns", Json::num(self.lowered_fns as f64)),
             ("fused_instrs", Json::num(self.fused_instrs as f64)),
+            ("bytecode_fns", Json::num(self.bytecode_fns as f64)),
             ("batched_writes", Json::num(self.host_io.batched_writes as f64)),
             ("batched_reads", Json::num(self.host_io.batched_reads as f64)),
+            ("batched_cross_callee", Json::num(self.host_io.batched_cross_callee as f64)),
             ("poison_recoveries", Json::num(self.host_io.poison_recoveries as f64)),
             ("passes", Json::Arr(passes)),
             (
@@ -272,6 +284,7 @@ mod tests {
             rpc_rw_intents: 0,
             lowered_fns: 0,
             fused_instrs: 0,
+            bytecode_fns: 0,
             rpc_round_trip: HistSnapshot::default(),
             rpc_per_callee: Vec::new(),
             launch_queue_wait: HistSnapshot::default(),
@@ -326,6 +339,7 @@ mod tests {
                 poison_recoveries: 2,
                 batched_writes: 9,
                 batched_reads: 4,
+                batched_cross_callee: 2,
             },
             ..base()
         };
@@ -338,6 +352,7 @@ mod tests {
         assert!(s.contains("files_contention=5/16shards"), "content-map counters: {s}");
         assert!(s.contains("batched_writes=9"), "fwrite batch counter surfaces: {s}");
         assert!(s.contains("batched_reads=4"), "fread batch counter surfaces: {s}");
+        assert!(s.contains("batched_cross_callee=2"), "cross-callee merges surface: {s}");
         assert!(s.contains("poison_recoveries=2"), "recoveries surface: {s}");
         assert_eq!(m.rpc_engine.unwrap().launch_latency_ns(), 1000.0);
     }
@@ -361,15 +376,18 @@ mod tests {
 
     #[test]
     fn summary_and_json_carry_register_core_counters() {
-        let m = RunMetrics { lowered_fns: 3, fused_instrs: 17, ..base() };
+        let m = RunMetrics { lowered_fns: 3, fused_instrs: 17, bytecode_fns: 3, ..base() };
         let s = m.summary();
         assert!(s.contains("register_core fns=3 fused=17"), "{s}");
+        assert!(s.contains("bytecode fns=3"), "{s}");
         let j = m.to_json().to_string();
         assert!(j.contains("\"lowered_fns\":3"), "{j}");
         assert!(j.contains("\"fused_instrs\":17"), "{j}");
+        assert!(j.contains("\"bytecode_fns\":3"), "{j}");
         // A tree-walk run (nothing lowered) stays quiet.
         let quiet = base().summary();
         assert!(!quiet.contains("register_core"), "{quiet}");
+        assert!(!quiet.contains("bytecode"), "{quiet}");
     }
 
     #[test]

@@ -197,6 +197,80 @@ impl Device {
         shared.snapshot()
     }
 
+    /// Batched data-parallel launch: `make` materializes per-lane state
+    /// once for every simulated thread of a worker's chunk, then `step`
+    /// advances each live lane by one bounded quantum per round,
+    /// round-robin, until every lane reports done (`step` returns
+    /// `true`). Per-lane counters are merged exactly like [`Self::launch`]
+    /// and the launch-overhead term is charged once.
+    ///
+    /// This is the engine half of the bytecode executor's batched team
+    /// stepping: instead of re-entering the execution body per lane per
+    /// step, one dispatch round sweeps the whole team batch, amortizing
+    /// frame setup and RPC-wait polling across the team loop. Bodies
+    /// must not use [`GridCtx::barrier_global`] (lanes share a worker
+    /// thread; use [`Self::launch_coop`] for barrier codes).
+    pub fn launch_batched<S, M, F>(&self, cfg: LaunchConfig, make: M, step: F) -> LaunchStats
+    where
+        M: Fn(&mut GridCtx) -> S + Sync,
+        F: Fn(&mut GridCtx, &mut S) -> bool + Sync,
+    {
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        let shared = SharedCounters::default();
+        let total = cfg.total_threads();
+        let next = AtomicUsize::new(0);
+        let workers = self.workers.min(total.div_ceil(64)).max(1);
+        let chunk = (total / (workers * 8)).max(1);
+        std::thread::scope(|s| {
+            for _ in 0..workers.min(total) {
+                s.spawn(|| {
+                    let mut local = Counters::default();
+                    loop {
+                        let start = next.fetch_add(chunk, Ordering::Relaxed);
+                        if start >= total {
+                            break;
+                        }
+                        // Materialize every lane of the chunk up front…
+                        let mut lanes: Vec<(GridCtx, S, bool)> = (start
+                            ..(start + chunk).min(total))
+                            .map(|gtid| {
+                                let mut ctx = GridCtx {
+                                    team_id: gtid / cfg.threads_per_team,
+                                    thread_id: gtid % cfg.threads_per_team,
+                                    cfg,
+                                    counters: Counters::default(),
+                                    device: self,
+                                    coop_barrier: None,
+                                };
+                                let state = make(&mut ctx);
+                                (ctx, state, false)
+                            })
+                            .collect();
+                        // …then sweep: one quantum per live lane per
+                        // round until the whole batch drains.
+                        let mut live = lanes.len();
+                        while live > 0 {
+                            for (ctx, state, done) in lanes.iter_mut() {
+                                if *done {
+                                    continue;
+                                }
+                                if step(ctx, state) {
+                                    *done = true;
+                                    live -= 1;
+                                }
+                            }
+                        }
+                        for (ctx, _, _) in &lanes {
+                            local.merge_from(&ctx.counters);
+                        }
+                    }
+                    shared.absorb(&local);
+                });
+            }
+        });
+        shared.snapshot()
+    }
+
     /// Bulk-synchronous launch: `phases` rounds with a global barrier after
     /// each. The barrier cost is charged once per phase per thread.
     pub fn launch_phased<F>(&self, cfg: LaunchConfig, phases: usize, body: F) -> LaunchStats
@@ -416,6 +490,35 @@ mod tests {
         assert_eq!(stats.flops_f64, 160);
         assert_eq!(stats.bytes_coalesced, 1024);
         assert_eq!(stats.bytes_random, 128);
+    }
+
+    #[test]
+    fn batched_launch_steps_every_lane_to_completion() {
+        let dev = Device::small();
+        let cfg = LaunchConfig::new(4, 16);
+        let before = dev.launches.load(Ordering::Relaxed);
+        let hits: Vec<AtomicU64> = (0..cfg.total_threads()).map(|_| AtomicU64::new(0)).collect();
+        // Lanes need different step counts (tid % 5 + 1) so the sweep
+        // must keep revisiting a shrinking live set.
+        let stats = dev.launch_batched(
+            cfg,
+            |ctx| (ctx.global_tid(), 0usize),
+            |ctx, (tid, steps)| {
+                assert_eq!(*tid, ctx.global_tid(), "state stays with its lane");
+                ctx.int_ops(1);
+                *steps += 1;
+                if *steps == *tid % 5 + 1 {
+                    hits[*tid].fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    false
+                }
+            },
+        );
+        assert!(hits.iter().all(|h| h.load(Ordering::Relaxed) == 1), "each lane done once");
+        let want: u64 = (0..cfg.total_threads()).map(|t| (t % 5 + 1) as u64).sum();
+        assert_eq!(stats.int_ops, want, "per-lane counters merge");
+        assert_eq!(dev.launches.load(Ordering::Relaxed), before + 1, "one launch charge");
     }
 
     #[test]

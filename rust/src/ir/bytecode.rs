@@ -1,0 +1,1515 @@
+//! The linear bytecode execution form (third executor tier).
+//!
+//! The register-file form ([`super::lowered`]) removed per-operand
+//! hashing, but its body is still a pointer-chasing tree: every nested
+//! `if`/`while`/`for` is a `Vec<LowInstr>` the interpreter recurses
+//! into, so the hot loop pays a Rust call frame and a match on the
+//! *structure* per block entry. The `bytecode` pass flattens each
+//! lowered function into one contiguous `Vec<Op>` of fixed-width ops —
+//! u32 register/pool operands, branches as resolved absolute pc targets
+//! — executed by a flat `pc` loop ([`super::interp`]): no tree
+//! recursion, no block lookup, and `parallel` regions can be stepped in
+//! bounded quanta across a whole team batch.
+//!
+//! **Counter parity is the contract.** Every op derived from a
+//! `LowInstr` charges exactly what the register core charges for that
+//! instruction (superinstructions still charge both components);
+//! flattening artifacts ([`Op::Jump`], [`Op::BrZeroFree`],
+//! [`Op::ForHead`], [`Op::ForNext`]) charge *nothing*, so modeled
+//! device counters are executor-invariant and `tests/lowering.rs` can
+//! hold tree == register == bytecode exactly.
+//!
+//! Operand encoding: one u32 per operand. Bit 31 ([`POOL_BIT`]) tags a
+//! constant-pool index; otherwise the u32 is a register slot. Variable-
+//! length payloads (call/RPC/launch/parallel sites) live in side tables
+//! so the op stream itself stays fixed-width. [`serialize`] /
+//! [`deserialize`] give AOT artifacts a runnable on-disk encoding; the
+//! deserializer rejects truncated or corrupt streams and re-validates
+//! the result with [`validate`], the same checker the `bytecode` pass
+//! runs on freshly flattened functions.
+
+use super::lowered::{
+    low_body_has_barrier, LowExpr, LowInstr, LowOffset, LowOp, LowRpcArg, LoweredFunction,
+    PoolConst,
+};
+use super::{BinOp, Schedule, Ty, Width};
+use crate::rpc::ArgMode;
+
+/// Bit 31 of an operand word tags a constant-pool index; clear = slot.
+pub const POOL_BIT: u32 = 1 << 31;
+
+/// Encode a lowered operand into the u32 operand word.
+#[inline]
+pub fn enc(op: LowOp) -> u32 {
+    match op {
+        LowOp::Slot(s) => s,
+        LowOp::Pool(p) => p | POOL_BIT,
+    }
+}
+
+/// One fixed-width bytecode op. `u32` operand fields hold [`enc`]-tagged
+/// slot/pool words; `dst`/`tmp`/`var`/`*_slot` fields are always plain
+/// register slots; `target`/`exit`/`head` fields are absolute pc values.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Op {
+    // ---- straight-line (each charges like its LowInstr) ----
+    Mov { dst: u32, src: u32 },
+    Bin { dst: u32, op: BinOp, a: u32, b: u32 },
+    Gep { dst: u32, base: u32, off: u32 },
+    Select { dst: u32, cond: u32, a: u32, b: u32 },
+    SiToFp { dst: u32, a: u32 },
+    FpToSi { dst: u32, a: u32 },
+    Tid { dst: u32 },
+    NumThreads { dst: u32 },
+    Sqrt { dst: u32, a: u32 },
+    Exp { dst: u32, a: u32 },
+    Log { dst: u32, a: u32 },
+    Alloca { dst: u32, size: u64 },
+    Store { addr: u32, val: u32, width: Width },
+    Load { dst: u32, addr: u32, width: Width, ty: Ty },
+    Call { site: u32 },
+    Intrinsic { site: u32 },
+    Rpc { site: u32 },
+    Launch { site: u32 },
+    Barrier,
+    Return { val: u32 },
+    ReturnVoid,
+    // ---- control flow ----
+    /// `if` lowering: carries the `If` dispatch charge; branches to
+    /// `target` when the condition is falsy.
+    BrZero { cond: u32, target: u32 },
+    /// `while` exit test (zero charge — the construct charged once at
+    /// [`Op::LoopEntry`]).
+    BrZeroFree { cond: u32, target: u32 },
+    /// Unconditional branch; pure flattening artifact, zero charge.
+    Jump { target: u32 },
+    /// `while` entry: the construct's single dispatch charge.
+    LoopEntry,
+    /// `for` entry: dispatch charge + evaluate `lo`/`hi`/`step` once and
+    /// apply the work-sharing schedule, writing the loop's three hidden
+    /// slots (`i`, bound, stride — beyond the lowered `nslots`, so the
+    /// body overwriting the induction variable cannot corrupt the loop).
+    ForInit {
+        lo: u32,
+        hi: u32,
+        step: u32,
+        sched: Schedule,
+        i_slot: u32,
+        hi_slot: u32,
+        stride_slot: u32,
+    },
+    /// `for` head test (zero charge): bind `var` and fall through, or
+    /// branch to `exit`.
+    ForHead { i_slot: u32, hi_slot: u32, var: u32, exit: u32 },
+    /// `for` increment + back edge (zero charge).
+    ForNext { i_slot: u32, stride_slot: u32, head: u32 },
+    /// `parallel` region dispatch; the body is flattened inline at
+    /// `[site.body_start, site.body_end)` and the dispatching thread
+    /// jumps over it.
+    Par { site: u32 },
+    // ---- fused superinstructions (charge both components) ----
+    CmpBr { tmp: u32, op: BinOp, a: u32, b: u32, else_target: u32 },
+    GepLoad { tmp: u32, base: u32, off: u32, dst: u32, width: Width, ty: Ty },
+    GepStore { tmp: u32, base: u32, off: u32, val: u32, width: Width },
+    BinStore { tmp: u32, op: BinOp, a: u32, b: u32, addr: u32, width: Width },
+}
+
+/// Direct-call site (shared by [`Op::Call`] and [`Op::Intrinsic`]).
+#[derive(Debug, Clone, PartialEq)]
+pub struct CallSite {
+    pub dst: Option<u32>,
+    pub callee: String,
+    pub args: Vec<u32>,
+}
+
+/// RPC argument descriptor with [`enc`]-tagged operand words — the
+/// bytecode twin of [`LowRpcArg`], including the dynamic-offset `Ref`
+/// representation (the offset is recovered at marshal time via the
+/// object lookup, like the other executors).
+#[derive(Debug, Clone, PartialEq)]
+pub enum BcRpcArg {
+    Val(u32),
+    Ref { ptr: u32, mode: ArgMode, obj_size: u64, offset: LowOffset },
+    MultiRef { ptr: u32, candidates: Vec<(u32, ArgMode, u64)> },
+    DynRef { ptr: u32, mode: ArgMode },
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct RpcSite {
+    pub dst: Option<u32>,
+    pub callee_id: u64,
+    pub args: Vec<BcRpcArg>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaunchSite {
+    pub region: String,
+    pub arg: Option<u32>,
+    pub params: Vec<u32>,
+}
+
+/// A `parallel` region: worker threads execute the inline body range;
+/// `has_barrier` (precomputed at flatten time) picks cooperative vs
+/// batched data-parallel dispatch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParSite {
+    pub num_threads: Option<u32>,
+    pub body_start: u32,
+    pub body_end: u32,
+    pub has_barrier: bool,
+}
+
+/// One function flattened to linear bytecode. Lives alongside the tree
+/// and lowered forms ([`super::Module::bytecode`]); the interpreter
+/// prefers it when present.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BytecodeFunction {
+    /// Register-file size of one call frame, *including* the hidden
+    /// per-`for` loop slots appended by flattening.
+    pub nslots: u32,
+    pub param_slots: Vec<u32>,
+    /// Carried verbatim from the lowered form; resolved to `Value`s at
+    /// program load exactly like the register core's pool.
+    pub pool: Vec<PoolConst>,
+    pub code: Vec<Op>,
+    pub calls: Vec<CallSite>,
+    pub rpcs: Vec<RpcSite>,
+    pub launches: Vec<LaunchSite>,
+    pub pars: Vec<ParSite>,
+    /// Diagnostics side table (`--explain`); hidden loop slots get
+    /// synthesized `<for.*>` names so `names[slot]` stays total.
+    pub names: Vec<String>,
+    /// Superinstructions carried through from the `fuse` pass.
+    pub fused: u32,
+}
+
+// ---------------------------------------------------------------------
+// Flattening
+// ---------------------------------------------------------------------
+
+/// Flatten one lowered function into linear bytecode. Infallible: every
+/// lowered shape has a bytecode encoding (the result still goes through
+/// [`validate`] in the `bytecode` pass as an internal-consistency
+/// check).
+pub fn flatten(lf: &LoweredFunction) -> BytecodeFunction {
+    let mut fx = Flattener {
+        bf: BytecodeFunction {
+            nslots: lf.nslots,
+            param_slots: lf.param_slots.clone(),
+            pool: lf.pool.clone(),
+            code: Vec::new(),
+            calls: Vec::new(),
+            rpcs: Vec::new(),
+            launches: Vec::new(),
+            pars: Vec::new(),
+            names: lf.names.clone(),
+            fused: lf.fused,
+        },
+    };
+    fx.emit_body(&lf.body);
+    fx.bf
+}
+
+struct Flattener {
+    bf: BytecodeFunction,
+}
+
+impl Flattener {
+    fn pc(&self) -> u32 {
+        self.bf.code.len() as u32
+    }
+
+    fn push(&mut self, op: Op) -> usize {
+        self.bf.code.push(op);
+        self.bf.code.len() - 1
+    }
+
+    /// Allocate a hidden slot beyond the lowered register file (loop
+    /// state the source program can never alias).
+    fn hidden_slot(&mut self, tag: &str) -> u32 {
+        let s = self.bf.nslots;
+        self.bf.nslots += 1;
+        self.bf.names.push(format!("<{tag}>"));
+        s
+    }
+
+    fn patch(&mut self, at: usize, target: u32) {
+        match &mut self.bf.code[at] {
+            Op::BrZero { target: t, .. }
+            | Op::BrZeroFree { target: t, .. }
+            | Op::Jump { target: t }
+            | Op::CmpBr { else_target: t, .. }
+            | Op::ForHead { exit: t, .. } => *t = target,
+            other => unreachable!("patching non-branch op {other:?}"),
+        }
+    }
+
+    fn rpc_arg(a: &LowRpcArg) -> BcRpcArg {
+        match a {
+            LowRpcArg::Val(o) => BcRpcArg::Val(enc(*o)),
+            LowRpcArg::Ref { ptr, mode, obj_size, offset } => BcRpcArg::Ref {
+                ptr: enc(*ptr),
+                mode: *mode,
+                obj_size: *obj_size,
+                offset: *offset,
+            },
+            LowRpcArg::MultiRef { ptr, candidates } => BcRpcArg::MultiRef {
+                ptr: enc(*ptr),
+                candidates: candidates.iter().map(|(c, m, s)| (enc(*c), *m, *s)).collect(),
+            },
+            LowRpcArg::DynRef { ptr, mode } => BcRpcArg::DynRef { ptr: enc(*ptr), mode: *mode },
+        }
+    }
+
+    fn emit_body(&mut self, body: &[LowInstr]) {
+        for ins in body {
+            self.emit(ins);
+        }
+    }
+
+    /// Emit a then/else pair ending at a join point: used by both `If`
+    /// (via [`Op::BrZero`]) and the fused `CmpIf` (via [`Op::CmpBr`]).
+    fn emit_branch_bodies(&mut self, br: usize, then_body: &[LowInstr], else_body: &[LowInstr]) {
+        self.emit_body(then_body);
+        if else_body.is_empty() {
+            let join = self.pc();
+            self.patch(br, join);
+        } else {
+            let jmp = self.push(Op::Jump { target: 0 });
+            let else_start = self.pc();
+            self.patch(br, else_start);
+            self.emit_body(else_body);
+            let join = self.pc();
+            self.patch(jmp, join);
+        }
+    }
+
+    fn emit(&mut self, ins: &LowInstr) {
+        match ins {
+            LowInstr::Assign { dst, expr } => {
+                let d = *dst;
+                let op = match expr {
+                    LowExpr::Op(o) => Op::Mov { dst: d, src: enc(*o) },
+                    LowExpr::Bin(op, a, b) => Op::Bin { dst: d, op: *op, a: enc(*a), b: enc(*b) },
+                    LowExpr::Gep(a, b) => Op::Gep { dst: d, base: enc(*a), off: enc(*b) },
+                    LowExpr::Select(c, a, b) => {
+                        Op::Select { dst: d, cond: enc(*c), a: enc(*a), b: enc(*b) }
+                    }
+                    LowExpr::SiToFp(a) => Op::SiToFp { dst: d, a: enc(*a) },
+                    LowExpr::FpToSi(a) => Op::FpToSi { dst: d, a: enc(*a) },
+                    LowExpr::Tid => Op::Tid { dst: d },
+                    LowExpr::NumThreads => Op::NumThreads { dst: d },
+                    LowExpr::Sqrt(a) => Op::Sqrt { dst: d, a: enc(*a) },
+                    LowExpr::Exp(a) => Op::Exp { dst: d, a: enc(*a) },
+                    LowExpr::Log(a) => Op::Log { dst: d, a: enc(*a) },
+                };
+                self.push(op);
+            }
+            LowInstr::Alloca { dst, size } => {
+                self.push(Op::Alloca { dst: *dst, size: *size });
+            }
+            LowInstr::Store { addr, val, width } => {
+                self.push(Op::Store { addr: enc(*addr), val: enc(*val), width: *width });
+            }
+            LowInstr::Load { dst, addr, width, ty } => {
+                self.push(Op::Load { dst: *dst, addr: enc(*addr), width: *width, ty: *ty });
+            }
+            LowInstr::Call { dst, callee, args } => {
+                let site = self.bf.calls.len() as u32;
+                self.bf.calls.push(CallSite {
+                    dst: *dst,
+                    callee: callee.clone(),
+                    args: args.iter().map(|&a| enc(a)).collect(),
+                });
+                self.push(Op::Call { site });
+            }
+            LowInstr::Intrinsic { dst, name, args } => {
+                let site = self.bf.calls.len() as u32;
+                self.bf.calls.push(CallSite {
+                    dst: *dst,
+                    callee: name.clone(),
+                    args: args.iter().map(|&a| enc(a)).collect(),
+                });
+                self.push(Op::Intrinsic { site });
+            }
+            LowInstr::RpcCall { dst, callee_id, args } => {
+                let site = self.bf.rpcs.len() as u32;
+                self.bf.rpcs.push(RpcSite {
+                    dst: *dst,
+                    callee_id: *callee_id,
+                    args: args.iter().map(Self::rpc_arg).collect(),
+                });
+                self.push(Op::Rpc { site });
+            }
+            LowInstr::KernelLaunch { region, arg, params } => {
+                let site = self.bf.launches.len() as u32;
+                self.bf.launches.push(LaunchSite {
+                    region: region.clone(),
+                    arg: arg.map(enc),
+                    params: params.iter().map(|&p| enc(p)).collect(),
+                });
+                self.push(Op::Launch { site });
+            }
+            LowInstr::If { cond, then_body, else_body } => {
+                let br = self.push(Op::BrZero { cond: enc(*cond), target: 0 });
+                self.emit_branch_bodies(br, then_body, else_body);
+            }
+            LowInstr::CmpIf { tmp, op, a, b, then_body, else_body } => {
+                let br = self.push(Op::CmpBr {
+                    tmp: *tmp,
+                    op: *op,
+                    a: enc(*a),
+                    b: enc(*b),
+                    else_target: 0,
+                });
+                self.emit_branch_bodies(br, then_body, else_body);
+            }
+            LowInstr::While { cond_var, cond, body } => {
+                self.push(Op::LoopEntry);
+                let head = self.pc();
+                self.emit_body(cond);
+                let exit_br = self.push(Op::BrZeroFree { cond: *cond_var, target: 0 });
+                self.emit_body(body);
+                self.push(Op::Jump { target: head });
+                let exit = self.pc();
+                self.patch(exit_br, exit);
+            }
+            LowInstr::For { var, lo, hi, step, schedule, body } => {
+                let i_slot = self.hidden_slot("for.i");
+                let hi_slot = self.hidden_slot("for.hi");
+                let stride_slot = self.hidden_slot("for.stride");
+                self.push(Op::ForInit {
+                    lo: enc(*lo),
+                    hi: enc(*hi),
+                    step: enc(*step),
+                    sched: *schedule,
+                    i_slot,
+                    hi_slot,
+                    stride_slot,
+                });
+                let head = self.pc();
+                let head_op = self.push(Op::ForHead { i_slot, hi_slot, var: *var, exit: 0 });
+                self.emit_body(body);
+                self.push(Op::ForNext { i_slot, stride_slot, head });
+                let exit = self.pc();
+                self.patch(head_op, exit);
+            }
+            LowInstr::Parallel { num_threads, body } => {
+                let site = self.bf.pars.len();
+                self.bf.pars.push(ParSite {
+                    num_threads: num_threads.map(enc),
+                    body_start: 0,
+                    body_end: 0,
+                    has_barrier: low_body_has_barrier(body),
+                });
+                self.push(Op::Par { site: site as u32 });
+                let start = self.pc();
+                self.emit_body(body);
+                let end = self.pc();
+                self.bf.pars[site].body_start = start;
+                self.bf.pars[site].body_end = end;
+            }
+            LowInstr::Barrier => {
+                self.push(Op::Barrier);
+            }
+            LowInstr::Return(v) => {
+                match v {
+                    Some(o) => self.push(Op::Return { val: enc(*o) }),
+                    None => self.push(Op::ReturnVoid),
+                };
+            }
+            LowInstr::GepLoad { tmp, base, off, dst, width, ty } => {
+                self.push(Op::GepLoad {
+                    tmp: *tmp,
+                    base: enc(*base),
+                    off: enc(*off),
+                    dst: *dst,
+                    width: *width,
+                    ty: *ty,
+                });
+            }
+            LowInstr::GepStore { tmp, base, off, val, width } => {
+                self.push(Op::GepStore {
+                    tmp: *tmp,
+                    base: enc(*base),
+                    off: enc(*off),
+                    val: enc(*val),
+                    width: *width,
+                });
+            }
+            LowInstr::BinStore { tmp, op, a, b, addr, width } => {
+                self.push(Op::BinStore {
+                    tmp: *tmp,
+                    op: *op,
+                    a: enc(*a),
+                    b: enc(*b),
+                    addr: enc(*addr),
+                    width: *width,
+                });
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Validation (the loader's checker)
+// ---------------------------------------------------------------------
+
+/// Validate internal consistency: every operand word indexes inside the
+/// register file / pool, every branch target lands in `[0, code.len()]`
+/// (`code.len()` = fall-off-the-end), every side-table index exists,
+/// widths are legal, and `parallel` body ranges are well-formed. Run by
+/// the `bytecode` pass on fresh flattenings and by [`deserialize`] on
+/// loaded artifacts.
+pub fn validate(bf: &BytecodeFunction) -> Result<(), String> {
+    let nslots = bf.nslots as usize;
+    let npool = bf.pool.len();
+    let end = bf.code.len() as u32;
+    if bf.names.len() != nslots {
+        return Err(format!("names table has {} entries for {nslots} slots", bf.names.len()));
+    }
+    let operand = |x: u32, what: &str| -> Result<(), String> {
+        if x & POOL_BIT != 0 {
+            let i = (x & !POOL_BIT) as usize;
+            if i >= npool {
+                return Err(format!("{what}: pool index {i} out of range (pool size {npool})"));
+            }
+        } else if x as usize >= nslots {
+            return Err(format!("{what}: slot {x} out of range (nslots {nslots})"));
+        }
+        Ok(())
+    };
+    let slot = |s: u32, what: &str| -> Result<(), String> {
+        if s as usize >= nslots {
+            return Err(format!("{what}: slot {s} out of range (nslots {nslots})"));
+        }
+        Ok(())
+    };
+    let target = |t: u32, what: &str| -> Result<(), String> {
+        if t > end {
+            return Err(format!("{what}: pc target {t} beyond code end {end}"));
+        }
+        Ok(())
+    };
+    let width_ok = |w: Width, what: &str| -> Result<(), String> {
+        if !matches!(w, 1 | 4 | 8) {
+            return Err(format!("{what}: bad access width {w}"));
+        }
+        Ok(())
+    };
+    for (i, &s) in bf.param_slots.iter().enumerate() {
+        slot(s, &format!("param {i}"))?;
+    }
+    for (pc, op) in bf.code.iter().enumerate() {
+        let at = format!("op {pc}");
+        match *op {
+            Op::Mov { dst, src } => {
+                slot(dst, &at)?;
+                operand(src, &at)?;
+            }
+            Op::Bin { dst, a, b, .. } => {
+                slot(dst, &at)?;
+                operand(a, &at)?;
+                operand(b, &at)?;
+            }
+            Op::Gep { dst, base, off } => {
+                slot(dst, &at)?;
+                operand(base, &at)?;
+                operand(off, &at)?;
+            }
+            Op::Select { dst, cond, a, b } => {
+                slot(dst, &at)?;
+                operand(cond, &at)?;
+                operand(a, &at)?;
+                operand(b, &at)?;
+            }
+            Op::SiToFp { dst, a }
+            | Op::FpToSi { dst, a }
+            | Op::Sqrt { dst, a }
+            | Op::Exp { dst, a }
+            | Op::Log { dst, a } => {
+                slot(dst, &at)?;
+                operand(a, &at)?;
+            }
+            Op::Tid { dst } | Op::NumThreads { dst } | Op::Alloca { dst, .. } => slot(dst, &at)?,
+            Op::Store { addr, val, width } => {
+                operand(addr, &at)?;
+                operand(val, &at)?;
+                width_ok(width, &at)?;
+            }
+            Op::Load { dst, addr, width, .. } => {
+                slot(dst, &at)?;
+                operand(addr, &at)?;
+                width_ok(width, &at)?;
+            }
+            Op::Call { site } | Op::Intrinsic { site } => {
+                if site as usize >= bf.calls.len() {
+                    return Err(format!("{at}: call site {site} out of range"));
+                }
+            }
+            Op::Rpc { site } => {
+                if site as usize >= bf.rpcs.len() {
+                    return Err(format!("{at}: rpc site {site} out of range"));
+                }
+            }
+            Op::Launch { site } => {
+                if site as usize >= bf.launches.len() {
+                    return Err(format!("{at}: launch site {site} out of range"));
+                }
+            }
+            Op::Barrier | Op::ReturnVoid | Op::LoopEntry => {}
+            Op::Return { val } => operand(val, &at)?,
+            Op::BrZero { cond, target: t } | Op::BrZeroFree { cond, target: t } => {
+                operand(cond, &at)?;
+                target(t, &at)?;
+            }
+            Op::Jump { target: t } => target(t, &at)?,
+            Op::ForInit { lo, hi, step, i_slot, hi_slot, stride_slot, .. } => {
+                operand(lo, &at)?;
+                operand(hi, &at)?;
+                operand(step, &at)?;
+                slot(i_slot, &at)?;
+                slot(hi_slot, &at)?;
+                slot(stride_slot, &at)?;
+            }
+            Op::ForHead { i_slot, hi_slot, var, exit } => {
+                slot(i_slot, &at)?;
+                slot(hi_slot, &at)?;
+                slot(var, &at)?;
+                target(exit, &at)?;
+            }
+            Op::ForNext { i_slot, stride_slot, head } => {
+                slot(i_slot, &at)?;
+                slot(stride_slot, &at)?;
+                target(head, &at)?;
+            }
+            Op::Par { site } => {
+                let Some(ps) = bf.pars.get(site as usize) else {
+                    return Err(format!("{at}: parallel site {site} out of range"));
+                };
+                if let Some(n) = ps.num_threads {
+                    operand(n, &at)?;
+                }
+                if ps.body_start > ps.body_end || ps.body_end > end {
+                    return Err(format!(
+                        "{at}: parallel body [{}, {}) outside code of {end} ops",
+                        ps.body_start, ps.body_end
+                    ));
+                }
+            }
+            Op::CmpBr { tmp, a, b, else_target, .. } => {
+                slot(tmp, &at)?;
+                operand(a, &at)?;
+                operand(b, &at)?;
+                target(else_target, &at)?;
+            }
+            Op::GepLoad { tmp, base, off, dst, width, .. } => {
+                slot(tmp, &at)?;
+                operand(base, &at)?;
+                operand(off, &at)?;
+                slot(dst, &at)?;
+                width_ok(width, &at)?;
+            }
+            Op::GepStore { tmp, base, off, val, width } => {
+                slot(tmp, &at)?;
+                operand(base, &at)?;
+                operand(off, &at)?;
+                operand(val, &at)?;
+                width_ok(width, &at)?;
+            }
+            Op::BinStore { tmp, a, b, addr, width, .. } => {
+                slot(tmp, &at)?;
+                operand(a, &at)?;
+                operand(b, &at)?;
+                operand(addr, &at)?;
+                width_ok(width, &at)?;
+            }
+        }
+    }
+    for (i, cs) in bf.calls.iter().enumerate() {
+        let at = format!("call site {i}");
+        if let Some(d) = cs.dst {
+            slot(d, &at)?;
+        }
+        for &a in &cs.args {
+            operand(a, &at)?;
+        }
+    }
+    for (i, rs) in bf.rpcs.iter().enumerate() {
+        let at = format!("rpc site {i}");
+        if let Some(d) = rs.dst {
+            slot(d, &at)?;
+        }
+        for a in &rs.args {
+            match a {
+                BcRpcArg::Val(o) | BcRpcArg::DynRef { ptr: o, .. } => operand(*o, &at)?,
+                BcRpcArg::Ref { ptr, .. } => operand(*ptr, &at)?,
+                BcRpcArg::MultiRef { ptr, candidates } => {
+                    operand(*ptr, &at)?;
+                    for (c, _, _) in candidates {
+                        operand(*c, &at)?;
+                    }
+                }
+            }
+        }
+    }
+    for (i, ls) in bf.launches.iter().enumerate() {
+        let at = format!("launch site {i}");
+        if let Some(a) = ls.arg {
+            operand(a, &at)?;
+        }
+        for &p in &ls.params {
+            operand(p, &at)?;
+        }
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Serialization (the AOT artifact encoding)
+// ---------------------------------------------------------------------
+
+const MAGIC: &[u8; 4] = b"GFBC";
+const VERSION: u32 = 1;
+
+/// Serialize one bytecode function to the on-disk artifact encoding
+/// (little-endian, length-prefixed tables, magic + version header).
+pub fn serialize(bf: &BytecodeFunction) -> Vec<u8> {
+    let mut w = Vec::with_capacity(64 + bf.code.len() * 16);
+    w.extend_from_slice(MAGIC);
+    put_u32(&mut w, VERSION);
+    put_u32(&mut w, bf.nslots);
+    put_u32(&mut w, bf.param_slots.len() as u32);
+    for &s in &bf.param_slots {
+        put_u32(&mut w, s);
+    }
+    put_u32(&mut w, bf.pool.len() as u32);
+    for c in &bf.pool {
+        match c {
+            PoolConst::I(i) => {
+                w.push(0);
+                put_u64(&mut w, *i as u64);
+            }
+            PoolConst::F(f) => {
+                w.push(1);
+                put_u64(&mut w, f.to_bits());
+            }
+            PoolConst::Global(g) => {
+                w.push(2);
+                put_str(&mut w, g);
+            }
+        }
+    }
+    put_u32(&mut w, bf.code.len() as u32);
+    for op in &bf.code {
+        put_op(&mut w, op);
+    }
+    put_u32(&mut w, bf.calls.len() as u32);
+    for cs in &bf.calls {
+        put_opt_u32(&mut w, cs.dst);
+        put_str(&mut w, &cs.callee);
+        put_u32(&mut w, cs.args.len() as u32);
+        for &a in &cs.args {
+            put_u32(&mut w, a);
+        }
+    }
+    put_u32(&mut w, bf.rpcs.len() as u32);
+    for rs in &bf.rpcs {
+        put_opt_u32(&mut w, rs.dst);
+        put_u64(&mut w, rs.callee_id);
+        put_u32(&mut w, rs.args.len() as u32);
+        for a in &rs.args {
+            match a {
+                BcRpcArg::Val(o) => {
+                    w.push(0);
+                    put_u32(&mut w, *o);
+                }
+                BcRpcArg::Ref { ptr, mode, obj_size, offset } => {
+                    w.push(1);
+                    put_u32(&mut w, *ptr);
+                    w.push(mode_code(*mode));
+                    put_u64(&mut w, *obj_size);
+                    match offset {
+                        LowOffset::Const(c) => {
+                            w.push(0);
+                            put_u64(&mut w, *c);
+                        }
+                        LowOffset::Dynamic => w.push(1),
+                    }
+                }
+                BcRpcArg::MultiRef { ptr, candidates } => {
+                    w.push(2);
+                    put_u32(&mut w, *ptr);
+                    put_u32(&mut w, candidates.len() as u32);
+                    for (c, m, s) in candidates {
+                        put_u32(&mut w, *c);
+                        w.push(mode_code(*m));
+                        put_u64(&mut w, *s);
+                    }
+                }
+                BcRpcArg::DynRef { ptr, mode } => {
+                    w.push(3);
+                    put_u32(&mut w, *ptr);
+                    w.push(mode_code(*mode));
+                }
+            }
+        }
+    }
+    put_u32(&mut w, bf.launches.len() as u32);
+    for ls in &bf.launches {
+        put_str(&mut w, &ls.region);
+        put_opt_u32(&mut w, ls.arg);
+        put_u32(&mut w, ls.params.len() as u32);
+        for &p in &ls.params {
+            put_u32(&mut w, p);
+        }
+    }
+    put_u32(&mut w, bf.pars.len() as u32);
+    for ps in &bf.pars {
+        put_opt_u32(&mut w, ps.num_threads);
+        put_u32(&mut w, ps.body_start);
+        put_u32(&mut w, ps.body_end);
+        w.push(ps.has_barrier as u8);
+    }
+    put_u32(&mut w, bf.names.len() as u32);
+    for n in &bf.names {
+        put_str(&mut w, n);
+    }
+    put_u32(&mut w, bf.fused);
+    w
+}
+
+/// Deserialize + validate a function artifact. Any truncation, trailing
+/// garbage, unknown tag, or out-of-range index is a hard error — a
+/// corrupt artifact can never reach the executor.
+pub fn deserialize(buf: &[u8]) -> Result<BytecodeFunction, String> {
+    let mut r = Reader { buf, pos: 0 };
+    let magic = r.bytes(4)?;
+    if magic != MAGIC {
+        return Err(format!("bad magic {magic:?} (want {MAGIC:?})"));
+    }
+    let version = r.u32()?;
+    if version != VERSION {
+        return Err(format!("unsupported bytecode version {version} (want {VERSION})"));
+    }
+    let nslots = r.u32()?;
+    let param_slots = r.vec_u32("param slots")?;
+    let npool = r.len("pool")?;
+    let mut pool = Vec::with_capacity(npool);
+    for _ in 0..npool {
+        pool.push(match r.u8()? {
+            0 => PoolConst::I(r.u64()? as i64),
+            1 => PoolConst::F(f64::from_bits(r.u64()?)),
+            2 => PoolConst::Global(r.str()?),
+            t => return Err(format!("bad pool tag {t}")),
+        });
+    }
+    let ncode = r.len("code")?;
+    let mut code = Vec::with_capacity(ncode);
+    for _ in 0..ncode {
+        code.push(get_op(&mut r)?);
+    }
+    let ncalls = r.len("call table")?;
+    let mut calls = Vec::with_capacity(ncalls);
+    for _ in 0..ncalls {
+        let dst = r.opt_u32()?;
+        let callee = r.str()?;
+        let args = r.vec_u32("call args")?;
+        calls.push(CallSite { dst, callee, args });
+    }
+    let nrpcs = r.len("rpc table")?;
+    let mut rpcs = Vec::with_capacity(nrpcs);
+    for _ in 0..nrpcs {
+        let dst = r.opt_u32()?;
+        let callee_id = r.u64()?;
+        let nargs = r.len("rpc args")?;
+        let mut args = Vec::with_capacity(nargs);
+        for _ in 0..nargs {
+            args.push(match r.u8()? {
+                0 => BcRpcArg::Val(r.u32()?),
+                1 => {
+                    let ptr = r.u32()?;
+                    let mode = mode_from(r.u8()?)?;
+                    let obj_size = r.u64()?;
+                    let offset = match r.u8()? {
+                        0 => LowOffset::Const(r.u64()?),
+                        1 => LowOffset::Dynamic,
+                        t => return Err(format!("bad offset tag {t}")),
+                    };
+                    BcRpcArg::Ref { ptr, mode, obj_size, offset }
+                }
+                2 => {
+                    let ptr = r.u32()?;
+                    let n = r.len("multiref candidates")?;
+                    let mut candidates = Vec::with_capacity(n);
+                    for _ in 0..n {
+                        let c = r.u32()?;
+                        let m = mode_from(r.u8()?)?;
+                        let s = r.u64()?;
+                        candidates.push((c, m, s));
+                    }
+                    BcRpcArg::MultiRef { ptr, candidates }
+                }
+                3 => {
+                    let ptr = r.u32()?;
+                    let mode = mode_from(r.u8()?)?;
+                    BcRpcArg::DynRef { ptr, mode }
+                }
+                t => return Err(format!("bad rpc-arg tag {t}")),
+            });
+        }
+        rpcs.push(RpcSite { dst, callee_id, args });
+    }
+    let nlaunches = r.len("launch table")?;
+    let mut launches = Vec::with_capacity(nlaunches);
+    for _ in 0..nlaunches {
+        let region = r.str()?;
+        let arg = r.opt_u32()?;
+        let params = r.vec_u32("launch params")?;
+        launches.push(LaunchSite { region, arg, params });
+    }
+    let npars = r.len("parallel table")?;
+    let mut pars = Vec::with_capacity(npars);
+    for _ in 0..npars {
+        let num_threads = r.opt_u32()?;
+        let body_start = r.u32()?;
+        let body_end = r.u32()?;
+        let has_barrier = match r.u8()? {
+            0 => false,
+            1 => true,
+            t => return Err(format!("bad barrier flag {t}")),
+        };
+        pars.push(ParSite { num_threads, body_start, body_end, has_barrier });
+    }
+    let nnames = r.len("names table")?;
+    let mut names = Vec::with_capacity(nnames);
+    for _ in 0..nnames {
+        names.push(r.str()?);
+    }
+    let fused = r.u32()?;
+    if r.pos != r.buf.len() {
+        return Err(format!("{} trailing bytes after function", r.buf.len() - r.pos));
+    }
+    let bf = BytecodeFunction {
+        nslots,
+        param_slots,
+        pool,
+        code,
+        calls,
+        rpcs,
+        launches,
+        pars,
+        names,
+        fused,
+    };
+    validate(&bf)?;
+    Ok(bf)
+}
+
+// Op wire encoding: one kind byte, then the fields in declaration order.
+fn put_op(w: &mut Vec<u8>, op: &Op) {
+    match *op {
+        Op::Mov { dst, src } => {
+            w.push(0);
+            put_u32(w, dst);
+            put_u32(w, src);
+        }
+        Op::Bin { dst, op, a, b } => {
+            w.push(1);
+            put_u32(w, dst);
+            w.push(binop_code(op));
+            put_u32(w, a);
+            put_u32(w, b);
+        }
+        Op::Gep { dst, base, off } => {
+            w.push(2);
+            put_u32(w, dst);
+            put_u32(w, base);
+            put_u32(w, off);
+        }
+        Op::Select { dst, cond, a, b } => {
+            w.push(3);
+            put_u32(w, dst);
+            put_u32(w, cond);
+            put_u32(w, a);
+            put_u32(w, b);
+        }
+        Op::SiToFp { dst, a } => {
+            w.push(4);
+            put_u32(w, dst);
+            put_u32(w, a);
+        }
+        Op::FpToSi { dst, a } => {
+            w.push(5);
+            put_u32(w, dst);
+            put_u32(w, a);
+        }
+        Op::Tid { dst } => {
+            w.push(6);
+            put_u32(w, dst);
+        }
+        Op::NumThreads { dst } => {
+            w.push(7);
+            put_u32(w, dst);
+        }
+        Op::Sqrt { dst, a } => {
+            w.push(8);
+            put_u32(w, dst);
+            put_u32(w, a);
+        }
+        Op::Exp { dst, a } => {
+            w.push(9);
+            put_u32(w, dst);
+            put_u32(w, a);
+        }
+        Op::Log { dst, a } => {
+            w.push(10);
+            put_u32(w, dst);
+            put_u32(w, a);
+        }
+        Op::Alloca { dst, size } => {
+            w.push(11);
+            put_u32(w, dst);
+            put_u64(w, size);
+        }
+        Op::Store { addr, val, width } => {
+            w.push(12);
+            put_u32(w, addr);
+            put_u32(w, val);
+            w.push(width);
+        }
+        Op::Load { dst, addr, width, ty } => {
+            w.push(13);
+            put_u32(w, dst);
+            put_u32(w, addr);
+            w.push(width);
+            w.push(ty_code(ty));
+        }
+        Op::Call { site } => {
+            w.push(14);
+            put_u32(w, site);
+        }
+        Op::Intrinsic { site } => {
+            w.push(15);
+            put_u32(w, site);
+        }
+        Op::Rpc { site } => {
+            w.push(16);
+            put_u32(w, site);
+        }
+        Op::Launch { site } => {
+            w.push(17);
+            put_u32(w, site);
+        }
+        Op::Barrier => w.push(18),
+        Op::Return { val } => {
+            w.push(19);
+            put_u32(w, val);
+        }
+        Op::ReturnVoid => w.push(20),
+        Op::BrZero { cond, target } => {
+            w.push(21);
+            put_u32(w, cond);
+            put_u32(w, target);
+        }
+        Op::BrZeroFree { cond, target } => {
+            w.push(22);
+            put_u32(w, cond);
+            put_u32(w, target);
+        }
+        Op::Jump { target } => {
+            w.push(23);
+            put_u32(w, target);
+        }
+        Op::LoopEntry => w.push(24),
+        Op::ForInit { lo, hi, step, sched, i_slot, hi_slot, stride_slot } => {
+            w.push(25);
+            put_u32(w, lo);
+            put_u32(w, hi);
+            put_u32(w, step);
+            w.push(sched_code(sched));
+            put_u32(w, i_slot);
+            put_u32(w, hi_slot);
+            put_u32(w, stride_slot);
+        }
+        Op::ForHead { i_slot, hi_slot, var, exit } => {
+            w.push(26);
+            put_u32(w, i_slot);
+            put_u32(w, hi_slot);
+            put_u32(w, var);
+            put_u32(w, exit);
+        }
+        Op::ForNext { i_slot, stride_slot, head } => {
+            w.push(27);
+            put_u32(w, i_slot);
+            put_u32(w, stride_slot);
+            put_u32(w, head);
+        }
+        Op::Par { site } => {
+            w.push(28);
+            put_u32(w, site);
+        }
+        Op::CmpBr { tmp, op, a, b, else_target } => {
+            w.push(29);
+            put_u32(w, tmp);
+            w.push(binop_code(op));
+            put_u32(w, a);
+            put_u32(w, b);
+            put_u32(w, else_target);
+        }
+        Op::GepLoad { tmp, base, off, dst, width, ty } => {
+            w.push(30);
+            put_u32(w, tmp);
+            put_u32(w, base);
+            put_u32(w, off);
+            put_u32(w, dst);
+            w.push(width);
+            w.push(ty_code(ty));
+        }
+        Op::GepStore { tmp, base, off, val, width } => {
+            w.push(31);
+            put_u32(w, tmp);
+            put_u32(w, base);
+            put_u32(w, off);
+            put_u32(w, val);
+            w.push(width);
+        }
+        Op::BinStore { tmp, op, a, b, addr, width } => {
+            w.push(32);
+            put_u32(w, tmp);
+            w.push(binop_code(op));
+            put_u32(w, a);
+            put_u32(w, b);
+            put_u32(w, addr);
+            w.push(width);
+        }
+    }
+}
+
+fn get_op(r: &mut Reader) -> Result<Op, String> {
+    Ok(match r.u8()? {
+        0 => Op::Mov { dst: r.u32()?, src: r.u32()? },
+        1 => Op::Bin { dst: r.u32()?, op: binop_from(r.u8()?)?, a: r.u32()?, b: r.u32()? },
+        2 => Op::Gep { dst: r.u32()?, base: r.u32()?, off: r.u32()? },
+        3 => Op::Select { dst: r.u32()?, cond: r.u32()?, a: r.u32()?, b: r.u32()? },
+        4 => Op::SiToFp { dst: r.u32()?, a: r.u32()? },
+        5 => Op::FpToSi { dst: r.u32()?, a: r.u32()? },
+        6 => Op::Tid { dst: r.u32()? },
+        7 => Op::NumThreads { dst: r.u32()? },
+        8 => Op::Sqrt { dst: r.u32()?, a: r.u32()? },
+        9 => Op::Exp { dst: r.u32()?, a: r.u32()? },
+        10 => Op::Log { dst: r.u32()?, a: r.u32()? },
+        11 => Op::Alloca { dst: r.u32()?, size: r.u64()? },
+        12 => Op::Store { addr: r.u32()?, val: r.u32()?, width: r.u8()? },
+        13 => Op::Load { dst: r.u32()?, addr: r.u32()?, width: r.u8()?, ty: ty_from(r.u8()?)? },
+        14 => Op::Call { site: r.u32()? },
+        15 => Op::Intrinsic { site: r.u32()? },
+        16 => Op::Rpc { site: r.u32()? },
+        17 => Op::Launch { site: r.u32()? },
+        18 => Op::Barrier,
+        19 => Op::Return { val: r.u32()? },
+        20 => Op::ReturnVoid,
+        21 => Op::BrZero { cond: r.u32()?, target: r.u32()? },
+        22 => Op::BrZeroFree { cond: r.u32()?, target: r.u32()? },
+        23 => Op::Jump { target: r.u32()? },
+        24 => Op::LoopEntry,
+        25 => Op::ForInit {
+            lo: r.u32()?,
+            hi: r.u32()?,
+            step: r.u32()?,
+            sched: sched_from(r.u8()?)?,
+            i_slot: r.u32()?,
+            hi_slot: r.u32()?,
+            stride_slot: r.u32()?,
+        },
+        26 => Op::ForHead { i_slot: r.u32()?, hi_slot: r.u32()?, var: r.u32()?, exit: r.u32()? },
+        27 => Op::ForNext { i_slot: r.u32()?, stride_slot: r.u32()?, head: r.u32()? },
+        28 => Op::Par { site: r.u32()? },
+        29 => Op::CmpBr {
+            tmp: r.u32()?,
+            op: binop_from(r.u8()?)?,
+            a: r.u32()?,
+            b: r.u32()?,
+            else_target: r.u32()?,
+        },
+        30 => Op::GepLoad {
+            tmp: r.u32()?,
+            base: r.u32()?,
+            off: r.u32()?,
+            dst: r.u32()?,
+            width: r.u8()?,
+            ty: ty_from(r.u8()?)?,
+        },
+        31 => Op::GepStore {
+            tmp: r.u32()?,
+            base: r.u32()?,
+            off: r.u32()?,
+            val: r.u32()?,
+            width: r.u8()?,
+        },
+        32 => Op::BinStore {
+            tmp: r.u32()?,
+            op: binop_from(r.u8()?)?,
+            a: r.u32()?,
+            b: r.u32()?,
+            addr: r.u32()?,
+            width: r.u8()?,
+        },
+        k => return Err(format!("bad op kind {k}")),
+    })
+}
+
+const BINOPS: [BinOp; 25] = [
+    BinOp::Add,
+    BinOp::Sub,
+    BinOp::Mul,
+    BinOp::Div,
+    BinOp::Rem,
+    BinOp::And,
+    BinOp::Or,
+    BinOp::Xor,
+    BinOp::Shl,
+    BinOp::Shr,
+    BinOp::Eq,
+    BinOp::Ne,
+    BinOp::Lt,
+    BinOp::Le,
+    BinOp::Gt,
+    BinOp::Ge,
+    BinOp::FAdd,
+    BinOp::FSub,
+    BinOp::FMul,
+    BinOp::FDiv,
+    BinOp::FLt,
+    BinOp::FLe,
+    BinOp::FGt,
+    BinOp::FGe,
+    BinOp::FEq,
+];
+
+fn binop_code(op: BinOp) -> u8 {
+    BINOPS.iter().position(|&o| o == op).expect("binop in table") as u8
+}
+
+fn binop_from(c: u8) -> Result<BinOp, String> {
+    BINOPS.get(c as usize).copied().ok_or_else(|| format!("bad binop code {c}"))
+}
+
+fn ty_code(t: Ty) -> u8 {
+    match t {
+        Ty::I64 => 0,
+        Ty::F64 => 1,
+        Ty::Ptr => 2,
+        Ty::Void => 3,
+    }
+}
+
+fn ty_from(c: u8) -> Result<Ty, String> {
+    Ok(match c {
+        0 => Ty::I64,
+        1 => Ty::F64,
+        2 => Ty::Ptr,
+        3 => Ty::Void,
+        _ => return Err(format!("bad type code {c}")),
+    })
+}
+
+fn sched_code(s: Schedule) -> u8 {
+    match s {
+        Schedule::Seq => 0,
+        Schedule::Team => 1,
+        Schedule::Grid => 2,
+    }
+}
+
+fn sched_from(c: u8) -> Result<Schedule, String> {
+    Ok(match c {
+        0 => Schedule::Seq,
+        1 => Schedule::Team,
+        2 => Schedule::Grid,
+        _ => return Err(format!("bad schedule code {c}")),
+    })
+}
+
+fn mode_code(m: ArgMode) -> u8 {
+    match m {
+        ArgMode::Read => 0,
+        ArgMode::Write => 1,
+        ArgMode::ReadWrite => 2,
+    }
+}
+
+fn mode_from(c: u8) -> Result<ArgMode, String> {
+    Ok(match c {
+        0 => ArgMode::Read,
+        1 => ArgMode::Write,
+        2 => ArgMode::ReadWrite,
+        _ => return Err(format!("bad arg-mode code {c}")),
+    })
+}
+
+fn put_u32(w: &mut Vec<u8>, v: u32) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_u64(w: &mut Vec<u8>, v: u64) {
+    w.extend_from_slice(&v.to_le_bytes());
+}
+
+fn put_str(w: &mut Vec<u8>, s: &str) {
+    put_u32(w, s.len() as u32);
+    w.extend_from_slice(s.as_bytes());
+}
+
+fn put_opt_u32(w: &mut Vec<u8>, v: Option<u32>) {
+    match v {
+        Some(x) => {
+            w.push(1);
+            put_u32(w, x);
+        }
+        None => w.push(0),
+    }
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn bytes(&mut self, n: usize) -> Result<&'a [u8], String> {
+        if self.pos + n > self.buf.len() {
+            return Err(format!(
+                "truncated stream: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.buf.len() - self.pos
+            ));
+        }
+        let b = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(b)
+    }
+
+    fn u8(&mut self) -> Result<u8, String> {
+        Ok(self.bytes(1)?[0])
+    }
+
+    fn u32(&mut self) -> Result<u32, String> {
+        Ok(u32::from_le_bytes(self.bytes(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64, String> {
+        Ok(u64::from_le_bytes(self.bytes(8)?.try_into().unwrap()))
+    }
+
+    /// A length prefix, sanity-bounded by the bytes actually remaining
+    /// so a corrupt length can't trigger a huge allocation.
+    fn len(&mut self, what: &str) -> Result<usize, String> {
+        let n = self.u32()? as usize;
+        if n > self.buf.len() - self.pos {
+            return Err(format!("corrupt {what} length {n} exceeds remaining stream"));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String, String> {
+        let n = self.len("string")?;
+        let b = self.bytes(n)?;
+        String::from_utf8(b.to_vec()).map_err(|e| format!("bad utf-8 string: {e}"))
+    }
+
+    fn opt_u32(&mut self) -> Result<Option<u32>, String> {
+        Ok(match self.u8()? {
+            0 => None,
+            1 => Some(self.u32()?),
+            t => return Err(format!("bad option tag {t}")),
+        })
+    }
+
+    fn vec_u32(&mut self, what: &str) -> Result<Vec<u32>, String> {
+        let n = self.len(what)?;
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.u32()?);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    fn flatten_fn(src: &str, name: &str) -> BytecodeFunction {
+        let mut m = parse_module(src).unwrap();
+        let report = crate::transform::lower::run(&mut m);
+        assert!(report.skipped.is_empty(), "{:?}", report.skipped);
+        crate::transform::fuse::run(&mut m);
+        flatten(&m.lowered[name])
+    }
+
+    const LOOPY: &str = r#"
+global @buf 64
+
+func @main() -> i64 {
+  %sum = alloca 8
+  store.8 0, %sum
+  for %i = 0 to 8 step 1 {
+    %off = mul %i, 8
+    %p = gep @buf, %off
+    store.8 %i, %p
+    %s = load.8 %sum
+    %s2 = add %s, %i
+    store.8 %s2, %sum
+  }
+  %c = lt 1, 2
+  if %c {
+    %x = 7
+  }
+  %r = load.8 %sum
+  return %r
+}
+"#;
+
+    #[test]
+    fn flattening_validates_and_resolves_branches() {
+        let bf = flatten_fn(LOOPY, "main");
+        validate(&bf).unwrap();
+        // Three hidden slots for the single for loop.
+        let m = {
+            let mut m = parse_module(LOOPY).unwrap();
+            crate::transform::lower::run(&mut m);
+            m
+        };
+        assert_eq!(bf.nslots, m.lowered["main"].nslots + 3);
+        assert_eq!(bf.names.len(), bf.nslots as usize);
+        assert!(bf.names.iter().any(|n| n == "<for.i>"));
+        // The loop flattened to init/head/next with a back edge.
+        assert!(bf.code.iter().any(|o| matches!(o, Op::ForInit { .. })));
+        let (head_pc, exit) = bf
+            .code
+            .iter()
+            .enumerate()
+            .find_map(|(pc, o)| match o {
+                Op::ForHead { exit, .. } => Some((pc as u32, *exit)),
+                _ => None,
+            })
+            .unwrap();
+        let back = bf
+            .code
+            .iter()
+            .find_map(|o| match o {
+                Op::ForNext { head, .. } => Some(*head),
+                _ => None,
+            })
+            .unwrap();
+        assert_eq!(back, head_pc, "ForNext jumps back to the head");
+        assert!(exit > head_pc && exit <= bf.code.len() as u32);
+        // No tree recursion left: nothing nests.
+        assert!(bf.code.len() > 8);
+    }
+
+    #[test]
+    fn fused_ops_carry_through() {
+        let bf = flatten_fn(LOOPY, "main");
+        assert!(bf.fused > 0, "corpus fuses");
+        let has_super = bf.code.iter().any(|o| {
+            matches!(
+                o,
+                Op::CmpBr { .. } | Op::GepLoad { .. } | Op::GepStore { .. } | Op::BinStore { .. }
+            )
+        });
+        assert!(has_super, "superinstructions survive flattening: {:?}", bf.code);
+    }
+
+    #[test]
+    fn parallel_body_is_an_inline_range() {
+        let src = r#"
+func @main() -> i64 {
+  parallel num_threads(4) {
+    %t = tid
+  }
+  return 0
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        crate::transform::lower::run(&mut m);
+        let bf = flatten(&m.lowered["main"]);
+        validate(&bf).unwrap();
+        assert_eq!(bf.pars.len(), 1);
+        let ps = &bf.pars[0];
+        assert!(ps.body_start < ps.body_end, "non-empty inline body");
+        assert!(!ps.has_barrier);
+        let par_pc = bf
+            .code
+            .iter()
+            .position(|o| matches!(o, Op::Par { .. }))
+            .unwrap() as u32;
+        assert_eq!(ps.body_start, par_pc + 1, "body flattened right after the dispatch op");
+    }
+
+    #[test]
+    fn round_trip_is_identity() {
+        let bf = flatten_fn(LOOPY, "main");
+        let bytes = serialize(&bf);
+        let back = deserialize(&bytes).unwrap();
+        assert_eq!(bf, back);
+    }
+
+    #[test]
+    fn truncated_and_corrupt_streams_are_rejected() {
+        let bf = flatten_fn(LOOPY, "main");
+        let bytes = serialize(&bf);
+        // Every strict prefix is rejected (truncation never panics).
+        for cut in [0, 3, 4, 8, bytes.len() / 2, bytes.len() - 1] {
+            assert!(deserialize(&bytes[..cut]).is_err(), "prefix of {cut} bytes must fail");
+        }
+        // Trailing garbage is rejected.
+        let mut long = bytes.clone();
+        long.push(0);
+        assert!(deserialize(&long).unwrap_err().contains("trailing"));
+        // Bad magic.
+        let mut bad = bytes.clone();
+        bad[0] = b'X';
+        assert!(deserialize(&bad).unwrap_err().contains("magic"));
+        // A corrupt op-kind byte (first op starts right after the fixed
+        // header + param/pool tables; flip it to an invalid kind).
+        let mut corrupt = bytes.clone();
+        // Find the code-section length prefix by re-serializing a copy
+        // with a recognizable op count; simpler: flip a byte in the
+        // middle and expect *an* error (decode or validation).
+        let mid = corrupt.len() / 2;
+        corrupt[mid] ^= 0xFF;
+        // Either the stream fails to decode or validation catches the
+        // inconsistency; silently succeeding with different content is
+        // only possible for bytes in string payloads, which LOOPY's
+        // mid-stream region (op stream) does not contain.
+        match deserialize(&corrupt) {
+            Err(_) => {}
+            Ok(back) => assert_ne!(back, bf, "corruption must not round-trip silently"),
+        }
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_indices() {
+        let mut bf = flatten_fn(LOOPY, "main");
+        let ok = bf.clone();
+        validate(&ok).unwrap();
+        // Slot out of range.
+        bf.code[0] = Op::Mov { dst: bf.nslots + 7, src: 0 };
+        assert!(validate(&bf).unwrap_err().contains("out of range"));
+        // Pool index out of range.
+        let mut bf2 = ok.clone();
+        bf2.code[0] = Op::Mov { dst: 0, src: POOL_BIT | 10_000 };
+        assert!(validate(&bf2).unwrap_err().contains("pool index"));
+        // Branch target beyond code end.
+        let mut bf3 = ok.clone();
+        bf3.code[0] = Op::Jump { target: bf3.code.len() as u32 + 1 };
+        assert!(validate(&bf3).unwrap_err().contains("beyond code end"));
+        // Call site out of range.
+        let mut bf4 = ok.clone();
+        bf4.code[0] = Op::Call { site: 99 };
+        assert!(validate(&bf4).unwrap_err().contains("call site"));
+    }
+}

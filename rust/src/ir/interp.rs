@@ -15,20 +15,27 @@
 //!   and `DynRef` via the allocator's `_FindObj` lookup, then block on the
 //!   mailbox.
 //!
-//! Two executors share this model. The historical **tree-walk** path
+//! Three executors share this model. The historical **tree-walk** path
 //! resolves operands through `HashMap<String, Value>` frames; the
 //! **register-file** path executes the [`lowered`] form the `lower`
 //! pass produces — `Vec<Value>` frames indexed by slot, constants
 //! fetched from a pool resolved once at load, superinstructions from
-//! the `fuse` pass dispatched in one step. A function runs on the
-//! register core whenever [`Module::lowered`] has its body (the default
-//! pipeline); otherwise it tree-walks. Both paths charge identical
-//! instruction/flop/memory counters — a superinstruction charges both
-//! of its component instructions — so modeled device time is the same,
-//! and `tests/lowering.rs` holds the outputs equal.
+//! the `fuse` pass dispatched in one step; the **bytecode** path
+//! executes the [`bytecode`] form — one flat `Vec<Op>` per function
+//! driven by a `pc` loop with resolved branch targets, no tree
+//! recursion or block lookup, and `parallel` regions stepped in bounded
+//! quanta across the whole team batch
+//! ([`crate::gpu::grid::Device::launch_batched`]). Dispatch prefers
+//! bytecode over lowered over tree, per function. All paths charge
+//! identical instruction/flop/memory counters — a superinstruction
+//! charges both of its component instructions, flattening artifacts
+//! charge nothing — so modeled device time is the same, and
+//! `tests/lowering.rs` holds the outputs equal.
 
+use super::bytecode::{BcRpcArg, BytecodeFunction, Op, RpcSite, POOL_BIT};
 use super::lowered::{
-    low_body_has_barrier, LowExpr, LowInstr, LowOp, LowRpcArg, LoweredFunction, PoolConst,
+    low_body_has_barrier, LowExpr, LowInstr, LowOffset, LowOp, LowRpcArg, LoweredFunction,
+    PoolConst,
 };
 use super::*;
 use crate::gpu::grid::{Device, GridCtx, LaunchConfig};
@@ -81,6 +88,11 @@ pub struct ProgramEnv {
     /// Keyed like [`Module::lowered`]; empty when the `lower` pass did
     /// not run.
     pub pools: HashMap<String, Vec<Value>>,
+    /// Same resolution for the bytecode forms (keyed like
+    /// [`Module::bytecode`]). Separate from [`Self::pools`] because a
+    /// module loaded from an AOT artifact may carry bytecode without
+    /// its lowered twin.
+    pub bpools: HashMap<String, Vec<Value>>,
     /// Captures for the in-flight kernel launch (single RPC slot ⇒ one).
     pending: Mutex<Option<PendingLaunch>>,
     stack_bump: AtomicU64,
@@ -185,14 +197,12 @@ impl ProgramEnv {
         // dispatch agrees with the compile-time classification even for
         // modules loaded without the full pipeline.
         let resolution = resolve_module(&module);
-        // Resolve each lowered function's constant pool once, here, so
-        // the register-file executor never touches the globals map (or
-        // any other string-keyed table) on the hot path.
-        let mut pools = HashMap::new();
-        for (name, lf) in &module.lowered {
-            let pool: Vec<Value> = lf
-                .pool
-                .iter()
+        // Resolve each lowered/bytecode function's constant pool once,
+        // here, so the register-file and bytecode executors never touch
+        // the globals map (or any other string-keyed table) on the hot
+        // path.
+        let resolve_pool = |pool: &[PoolConst]| -> Vec<Value> {
+            pool.iter()
                 .map(|c| match c {
                     PoolConst::I(i) => Value::I(*i),
                     PoolConst::F(f) => Value::F(*f),
@@ -203,8 +213,15 @@ impl ProgramEnv {
                             .0 as i64,
                     ),
                 })
-                .collect();
-            pools.insert(name.clone(), pool);
+                .collect()
+        };
+        let mut pools = HashMap::new();
+        for (name, lf) in &module.lowered {
+            pools.insert(name.clone(), resolve_pool(&lf.pool));
+        }
+        let mut bpools = HashMap::new();
+        for (name, bf) in &module.bytecode {
+            bpools.insert(name.clone(), resolve_pool(&bf.pool));
         }
         let env = Arc::new(Self {
             module,
@@ -218,6 +235,7 @@ impl ProgramEnv {
             region_ids,
             region_names,
             pools,
+            bpools,
             pending: Mutex::new(None),
             stack_bump: AtomicU64::new(0),
             stack_slots,
@@ -305,33 +323,40 @@ impl ProgramEnv {
         cfg: LaunchConfig,
     ) -> LaunchStats {
         let f = &self.module.functions[region];
-        // Kernel threads run the register core when the region was
-        // lowered (the default pipeline); else they tree-walk.
+        // Kernel threads run the bytecode when the region was flattened
+        // (the default pipeline), else the register core when it was
+        // lowered, else they tree-walk.
+        let bytecode = self.module.bytecode.get(region);
         let lowered = self.module.lowered.get(region);
-        let has_barrier = match lowered {
-            Some(lf) => low_body_has_barrier(&lf.body),
-            None => body_has_barrier(&f.body),
+        let has_barrier = match (bytecode, lowered) {
+            (Some(bf), _) => bc_has_barrier(bf),
+            (None, Some(lf)) => low_body_has_barrier(&lf.body),
+            (None, None) => body_has_barrier(&f.body),
         };
         let body = |g: &mut GridCtx| {
             let mut interp = Interp::new(self, g);
-            match lowered {
-                Some(lf) => {
-                    let pool = self.pools[region].as_slice();
-                    let mut regs = vec![Value::I(0); lf.nslots as usize];
-                    for (slot, v) in lf.param_slots.iter().zip(values.iter()) {
-                        regs[*slot as usize] = *v;
-                    }
-                    interp.enter_lowered(pool, &mut regs, &lf.body);
+            if let Some(bf) = bytecode {
+                let pool = self.bpools[region].as_slice();
+                let mut regs = vec![Value::I(0); bf.nslots as usize];
+                for (slot, v) in bf.param_slots.iter().zip(values.iter()) {
+                    regs[*slot as usize] = *v;
                 }
-                None => {
-                    let bindings: Vec<(String, Value)> = f
-                        .params
-                        .iter()
-                        .zip(values.iter())
-                        .map(|(p, v)| (p.name.clone(), *v))
-                        .collect();
-                    interp.exec_function_body(&f.body, bindings);
+                interp.enter_bytecode(bf, pool, &mut regs);
+            } else if let Some(lf) = lowered {
+                let pool = self.pools[region].as_slice();
+                let mut regs = vec![Value::I(0); lf.nslots as usize];
+                for (slot, v) in lf.param_slots.iter().zip(values.iter()) {
+                    regs[*slot as usize] = *v;
                 }
+                interp.enter_lowered(pool, &mut regs, &lf.body);
+            } else {
+                let bindings: Vec<(String, Value)> = f
+                    .params
+                    .iter()
+                    .zip(values.iter())
+                    .map(|(p, v)| (p.name.clone(), *v))
+                    .collect();
+                interp.exec_function_body(&f.body, bindings);
             }
         };
         let obs = &self.device.mem.obs;
@@ -353,6 +378,13 @@ impl ProgramEnv {
         }
         stats
     }
+}
+
+/// Barrier scan over flat bytecode: `parallel` bodies are inline ranges
+/// of the same op array, so one linear pass sees everything `walk_low`
+/// reaches in the lowered form.
+pub(crate) fn bc_has_barrier(bf: &BytecodeFunction) -> bool {
+    bf.code.iter().any(|op| matches!(op, Op::Barrier))
 }
 
 pub(crate) fn body_has_barrier(body: &[Instr]) -> bool {
@@ -418,9 +450,15 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
     }
 
     pub fn call_function(&mut self, name: &str, args: Vec<Value>) -> Option<Value> {
-        // Prefer the register-file form: slot-indexed frame, pool
-        // constants, zero string hashing for the whole call.
+        // Three-tier dispatch: prefer the flat bytecode (pc-loop, no
+        // tree recursion), then the register-file form (slot-indexed
+        // frame, pool constants), then the tree walk.
         let env = self.env;
+        if let Some(bf) = env.module.bytecode.get(name) {
+            assert_eq!(bf.param_slots.len(), args.len(), "arity mismatch calling {name}");
+            let pool = env.bpools.get(name).map_or(&[][..], |p| p.as_slice());
+            return self.call_bytecode(bf, pool, args);
+        }
         if let Some(lf) = env.module.lowered.get(name) {
             assert_eq!(lf.param_slots.len(), args.len(), "arity mismatch calling {name}");
             let pool = env.pools.get(name).map_or(&[][..], |p| p.as_slice());
@@ -631,7 +669,7 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
                 };
                 obs.spans.finish(
                     span,
-                    "parallel-region",
+                    "parallel-region [tree]",
                     crate::obs::SpanKind::Interp,
                     self.g.team_id as u64,
                 );
@@ -778,7 +816,14 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
                     let p = self.eval(ptr).as_addr();
                     let off = match offset {
                         OffsetSpec::Const(c) => *c,
-                        OffsetSpec::Dynamic => unreachable!("Ref with dynamic offset"),
+                        // Dynamic offset within a statically identified
+                        // object: recover it at marshal time from the
+                        // object's base (`_FindObj`; 0 when the pointer
+                        // doesn't resolve — the host copies from the
+                        // object start).
+                        OffsetSpec::Dynamic => {
+                            self.env.find_object(p).map(|(base, _)| p - base).unwrap_or(0)
+                        }
                     };
                     info.add_ref(p, *mode, *obj_size, off);
                 }
@@ -1109,7 +1154,7 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
                 };
                 obs.spans.finish(
                     span,
-                    "parallel-region",
+                    "parallel-region [register]",
                     crate::obs::SpanKind::Interp,
                     self.g.team_id as u64,
                 );
@@ -1256,7 +1301,13 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
                 }
                 LowRpcArg::Ref { ptr, mode, obj_size, offset } => {
                     let p = lv(pool, regs, *ptr).as_addr();
-                    info.add_ref(p, *mode, *obj_size, *offset);
+                    let off = match offset {
+                        LowOffset::Const(c) => *c,
+                        LowOffset::Dynamic => {
+                            self.env.find_object(p).map(|(base, _)| p - base).unwrap_or(0)
+                        }
+                    };
+                    info.add_ref(p, *mode, *obj_size, off);
                 }
                 LowRpcArg::MultiRef { ptr, candidates } => {
                     let p = lv(pool, regs, *ptr).as_addr();
@@ -1287,6 +1338,486 @@ impl<'e, 'g, 'd> Interp<'e, 'g, 'd> {
             }
         }
         self.dispatch_rpc(callee_id, &info)
+    }
+
+    // ----- the bytecode executor ------------------------------------
+
+    /// Call a bytecode function: allocate its register file (including
+    /// the hidden loop slots appended by flattening), bind parameters by
+    /// slot, and run the flat pc loop.
+    fn call_bytecode(
+        &mut self,
+        bf: &BytecodeFunction,
+        pool: &[Value],
+        args: Vec<Value>,
+    ) -> Option<Value> {
+        let mut regs = vec![Value::I(0); bf.nslots as usize];
+        for (slot, v) in bf.param_slots.iter().zip(args) {
+            regs[*slot as usize] = v;
+        }
+        self.enter_bytecode(bf, pool, &mut regs)
+    }
+
+    /// The bytecode twin of [`Self::enter_lowered`]: same call-depth and
+    /// stack-pointer bookkeeping around the dispatch loop.
+    fn enter_bytecode(
+        &mut self,
+        bf: &BytecodeFunction,
+        pool: &[Value],
+        regs: &mut [Value],
+    ) -> Option<Value> {
+        self.depth += 1;
+        assert!(self.depth < 128, "interpreter call depth exceeded");
+        let saved_sp = self.sp;
+        let ret = self.run_bytecode(bf, pool, regs, 0, bf.code.len());
+        self.sp = saved_sp;
+        self.depth -= 1;
+        ret
+    }
+
+    /// The flat dispatch loop: execute `[start, end)` until a return or
+    /// until the pc falls off `end` (a void return — validated branch
+    /// targets may equal `code.len()`).
+    fn run_bytecode(
+        &mut self,
+        bf: &BytecodeFunction,
+        pool: &[Value],
+        regs: &mut [Value],
+        start: usize,
+        end: usize,
+    ) -> Option<Value> {
+        let mut pc = start;
+        while pc < end {
+            match self.exec_bc_op(bf, pool, regs, pc) {
+                BcFlow::Next => pc += 1,
+                BcFlow::Jump(t) => pc = t as usize,
+                BcFlow::Returned(v) => return v,
+            }
+        }
+        None
+    }
+
+    /// Advance one batched lane by at most `quantum` dispatched ops
+    /// (nested calls, RPC waits and kernel launches run to completion
+    /// inside their op). Returns true when the lane finished its body
+    /// range.
+    fn step_bytecode(
+        &mut self,
+        bf: &BytecodeFunction,
+        pool: &[Value],
+        t: &mut BcThread,
+        end: usize,
+        quantum: usize,
+    ) -> bool {
+        for _ in 0..quantum {
+            if t.pc >= end {
+                return true;
+            }
+            match self.exec_bc_op(bf, pool, &mut t.regs, t.pc) {
+                BcFlow::Next => t.pc += 1,
+                BcFlow::Jump(p) => t.pc = p as usize,
+                BcFlow::Returned(_) => {
+                    t.pc = end;
+                    return true;
+                }
+            }
+        }
+        t.pc >= end
+    }
+
+    /// One bytecode op. Counter discipline mirrors
+    /// [`Self::exec_low_instr`] exactly: one `int_ops` charge per op
+    /// derived from a lowered instruction, superinstructions charge
+    /// their second component too, and pure flattening artifacts
+    /// ([`Op::Jump`], [`Op::BrZeroFree`], [`Op::ForHead`],
+    /// [`Op::ForNext`]) charge nothing — so modeled device counters are
+    /// executor-invariant.
+    fn exec_bc_op(
+        &mut self,
+        bf: &BytecodeFunction,
+        pool: &[Value],
+        regs: &mut [Value],
+        pc: usize,
+    ) -> BcFlow {
+        let op = bf.code[pc];
+        // Zero-charge flattening artifacts first: they have no lowered
+        // counterpart, so they must not perturb counter parity.
+        match op {
+            Op::Jump { target } => return BcFlow::Jump(target),
+            Op::BrZeroFree { cond, target } => {
+                return if regs[cond as usize].truthy() {
+                    BcFlow::Next
+                } else {
+                    BcFlow::Jump(target)
+                };
+            }
+            Op::ForHead { i_slot, hi_slot, var, exit } => {
+                let i = regs[i_slot as usize].as_i();
+                return if i < regs[hi_slot as usize].as_i() {
+                    regs[var as usize] = Value::I(i);
+                    BcFlow::Next
+                } else {
+                    BcFlow::Jump(exit)
+                };
+            }
+            Op::ForNext { i_slot, stride_slot, head } => {
+                let next = regs[i_slot as usize].as_i() + regs[stride_slot as usize].as_i();
+                regs[i_slot as usize] = Value::I(next);
+                return BcFlow::Jump(head);
+            }
+            _ => {}
+        }
+        self.g.counters.int_ops += 1;
+        match op {
+            Op::Mov { dst, src } => regs[dst as usize] = bv(pool, regs, src),
+            Op::Bin { dst, op, a, b } => {
+                let x = bv(pool, regs, a);
+                let y = bv(pool, regs, b);
+                if op.is_float() {
+                    self.g.counters.flops_f64 += 1;
+                } else {
+                    self.g.counters.int_ops += 1;
+                }
+                regs[dst as usize] = eval_bin(op, x, y);
+            }
+            Op::Gep { dst, base, off } => {
+                regs[dst as usize] =
+                    Value::I(bv(pool, regs, base).as_i() + bv(pool, regs, off).as_i());
+            }
+            Op::Select { dst, cond, a, b } => {
+                regs[dst as usize] = if bv(pool, regs, cond).truthy() {
+                    bv(pool, regs, a)
+                } else {
+                    bv(pool, regs, b)
+                };
+            }
+            Op::SiToFp { dst, a } => {
+                regs[dst as usize] = Value::F(bv(pool, regs, a).as_i() as f64)
+            }
+            Op::FpToSi { dst, a } => {
+                regs[dst as usize] = Value::I(bv(pool, regs, a).as_f() as i64)
+            }
+            Op::Tid { dst } => regs[dst as usize] = Value::I(self.g.global_tid() as i64),
+            Op::NumThreads { dst } => {
+                regs[dst as usize] = Value::I(self.g.num_threads_global() as i64)
+            }
+            Op::Sqrt { dst, a } => {
+                self.g.counters.flops_f64 += 4;
+                regs[dst as usize] = Value::F(bv(pool, regs, a).as_f().sqrt());
+            }
+            Op::Exp { dst, a } => {
+                self.g.counters.flops_f64 += 8;
+                regs[dst as usize] = Value::F(bv(pool, regs, a).as_f().exp());
+            }
+            Op::Log { dst, a } => {
+                self.g.counters.flops_f64 += 8;
+                regs[dst as usize] = Value::F(bv(pool, regs, a).as_f().ln());
+            }
+            Op::Alloca { dst, size } => {
+                let addr = crate::alloc::align_up(self.sp, 16);
+                assert!(addr + size <= self.stack_end, "device stack overflow");
+                self.sp = addr + size;
+                regs[dst as usize] = Value::I(addr as i64);
+            }
+            Op::Store { addr, val, width } => {
+                let a = bv(pool, regs, addr).as_addr();
+                let v = bv(pool, regs, val);
+                self.mem_store(a, v, width);
+            }
+            Op::Load { dst, addr, width, ty } => {
+                let a = bv(pool, regs, addr).as_addr();
+                regs[dst as usize] = self.mem_load(a, width, ty);
+            }
+            Op::Call { site } => {
+                let cs = &bf.calls[site as usize];
+                let vals: Vec<Value> = cs.args.iter().map(|&a| bv(pool, regs, a)).collect();
+                let ret = self.call_function(&cs.callee, vals);
+                if let Some(d) = cs.dst {
+                    regs[d as usize] = ret.unwrap_or(Value::I(0));
+                }
+            }
+            Op::Intrinsic { site } => {
+                let cs = &bf.calls[site as usize];
+                let vals: Vec<Value> = cs.args.iter().map(|&a| bv(pool, regs, a)).collect();
+                let ret = match self.env.resolution.class_of(&cs.callee) {
+                    Some(SymbolClass::Device(dev)) => self.device_fn(dev, &vals),
+                    Some(SymbolClass::HostRpc(_)) => panic!(
+                        "intrinsic {} resolves host-RPC, not device-native \
+                         (malformed module: verify() would reject it)",
+                        cs.callee
+                    ),
+                    Some(SymbolClass::Unresolved) | None => {
+                        self.env.unresolved_trap(&cs.callee);
+                        Value::I(0)
+                    }
+                };
+                if let Some(d) = cs.dst {
+                    regs[d as usize] = ret;
+                }
+            }
+            Op::Rpc { site } => {
+                let rs = &bf.rpcs[site as usize];
+                let ret = self.issue_rpc_bytecode(pool, regs, rs);
+                if let Some(d) = rs.dst {
+                    regs[d as usize] = Value::I(ret);
+                }
+            }
+            Op::Launch { site } => {
+                let ls = &bf.launches[site as usize];
+                let values: Vec<Value> = ls.params.iter().map(|&p| bv(pool, regs, p)).collect();
+                let requested = ls.arg.map(|o| bv(pool, regs, o).as_i() as usize);
+                self.kernel_launch_with(&ls.region, values, requested);
+            }
+            Op::Barrier => {
+                if self.g.num_threads_global() > 1 {
+                    self.g.barrier_global();
+                } else {
+                    self.g.counters.barriers_global += 1;
+                }
+            }
+            Op::Return { val } => return BcFlow::Returned(Some(bv(pool, regs, val))),
+            Op::ReturnVoid => return BcFlow::Returned(None),
+            Op::BrZero { cond, target } => {
+                return if bv(pool, regs, cond).truthy() {
+                    BcFlow::Next
+                } else {
+                    BcFlow::Jump(target)
+                };
+            }
+            Op::LoopEntry => {}
+            Op::ForInit { lo, hi, step, sched, i_slot, hi_slot, stride_slot } => {
+                let lo = bv(pool, regs, lo).as_i();
+                let hi = bv(pool, regs, hi).as_i();
+                let step = bv(pool, regs, step).as_i().max(1);
+                let (start, stride) = match sched {
+                    Schedule::Seq => (lo, step),
+                    Schedule::Team => {
+                        let t = self.g.thread_id as i64;
+                        let n = self.g.cfg.threads_per_team as i64;
+                        (lo + t * step, n * step)
+                    }
+                    Schedule::Grid => {
+                        let t = self.g.global_tid() as i64;
+                        let n = self.g.num_threads_global() as i64;
+                        (lo + t * step, n * step)
+                    }
+                };
+                regs[i_slot as usize] = Value::I(start);
+                regs[hi_slot as usize] = Value::I(hi);
+                regs[stride_slot as usize] = Value::I(stride);
+            }
+            Op::Par { site } => {
+                self.bc_parallel(bf, pool, regs, site);
+                // The dispatching thread skips the inline body range.
+                return BcFlow::Jump(bf.pars[site as usize].body_end);
+            }
+            Op::CmpBr { tmp, op, a, b, else_target } => {
+                let x = bv(pool, regs, a);
+                let y = bv(pool, regs, b);
+                if op.is_float() {
+                    self.g.counters.flops_f64 += 1;
+                } else {
+                    self.g.counters.int_ops += 1;
+                }
+                let c = eval_bin(op, x, y);
+                regs[tmp as usize] = c;
+                // The fused branch still charges its instruction slot.
+                self.g.counters.int_ops += 1;
+                return if c.truthy() { BcFlow::Next } else { BcFlow::Jump(else_target) };
+            }
+            Op::GepLoad { tmp, base, off, dst, width, ty } => {
+                let addr = Value::I(bv(pool, regs, base).as_i() + bv(pool, regs, off).as_i());
+                regs[tmp as usize] = addr;
+                // The fused load's instruction charge.
+                self.g.counters.int_ops += 1;
+                regs[dst as usize] = self.mem_load(addr.as_addr(), width, ty);
+            }
+            Op::GepStore { tmp, base, off, val, width } => {
+                let addr = Value::I(bv(pool, regs, base).as_i() + bv(pool, regs, off).as_i());
+                regs[tmp as usize] = addr;
+                // The fused store's instruction charge; `val` is read
+                // *after* tmp is written, matching the unfused order.
+                self.g.counters.int_ops += 1;
+                let v = bv(pool, regs, val);
+                self.mem_store(addr.as_addr(), v, width);
+            }
+            Op::BinStore { tmp, op, a, b, addr, width } => {
+                let x = bv(pool, regs, a);
+                let y = bv(pool, regs, b);
+                if op.is_float() {
+                    self.g.counters.flops_f64 += 1;
+                } else {
+                    self.g.counters.int_ops += 1;
+                }
+                let v = eval_bin(op, x, y);
+                regs[tmp as usize] = v;
+                // The fused store's instruction charge; the address is
+                // evaluated after tmp is written (unfused order).
+                self.g.counters.int_ops += 1;
+                let a_addr = bv(pool, regs, addr).as_addr();
+                self.mem_store(a_addr, v, width);
+            }
+            Op::Jump { .. } | Op::BrZeroFree { .. } | Op::ForHead { .. } | Op::ForNext { .. } => {
+                unreachable!("zero-charge ops handled above")
+            }
+        }
+        BcFlow::Next
+    }
+
+    /// `parallel` dispatch from bytecode. The barrier-free case uses the
+    /// engine's **batched team stepping** ([`Device::launch_batched`]):
+    /// every lane of a worker's chunk is materialized once, then all
+    /// lanes advance round-robin through bounded op quanta — one
+    /// dispatch round amortizes frame setup and RPC-wait polling across
+    /// the whole team loop instead of re-entering the interpreter per
+    /// team per step. Barrier bodies keep one real thread per lane
+    /// (`launch_coop`): a lane blocked in a barrier cannot yield its
+    /// quantum cooperatively.
+    fn bc_parallel(&mut self, bf: &BytecodeFunction, pool: &[Value], regs: &[Value], site: u32) {
+        let ps = &bf.pars[site as usize];
+        let n = ps
+            .num_threads
+            .map(|o| bv(pool, regs, o).as_i() as usize)
+            .unwrap_or(128)
+            .clamp(1, 1024);
+        let snapshot: Vec<Value> = regs.to_vec();
+        let env = self.env;
+        let cfg = LaunchConfig::new(1, n);
+        let (start, end) = (ps.body_start as usize, ps.body_end as usize);
+        let obs = &env.device.mem.obs;
+        let span = obs.spans.start();
+        let stats = if ps.has_barrier {
+            env.device.launch_coop(cfg, |g| {
+                let mut interp = Interp::new(env, g);
+                let mut thread_regs = snapshot.clone();
+                interp.run_bytecode(bf, pool, &mut thread_regs, start, end);
+            })
+        } else {
+            env.device.launch_batched(
+                cfg,
+                |g| {
+                    let base = env.stack_base();
+                    BcThread {
+                        regs: snapshot.clone(),
+                        pc: start,
+                        sp: base,
+                        stack_end: base + PER_THREAD_STACK,
+                        rand: DeviceRand::for_thread(0xD00D, g.global_tid() as u64),
+                    }
+                },
+                |g, t: &mut BcThread| {
+                    // A transient interpreter per quantum: cheap (the
+                    // HashMap frame stays empty on the bytecode path)
+                    // and it restores the lane's stack pointer and RNG
+                    // from the persisted lane state.
+                    let mut interp = Interp {
+                        env,
+                        g,
+                        frames: vec![HashMap::new()],
+                        sp: t.sp,
+                        stack_end: t.stack_end,
+                        rand: t.rand,
+                        depth: 0,
+                    };
+                    let done = interp.step_bytecode(bf, pool, t, end, BC_PAR_QUANTUM);
+                    t.sp = interp.sp;
+                    t.rand = interp.rand;
+                    done
+                },
+            )
+        };
+        obs.spans.finish(
+            span,
+            "parallel-region [bytecode]",
+            crate::obs::SpanKind::Interp,
+            self.g.team_id as u64,
+        );
+        let mut agg = env.kernel_stats.lock().unwrap();
+        *agg = agg.add(&stats);
+    }
+
+    /// The bytecode twin of [`Self::issue_rpc_lowered`], marshaling from
+    /// tagged operand words (including the dynamic-offset `Ref` form,
+    /// recovered through the object lookup at marshal time).
+    fn issue_rpc_bytecode(&mut self, pool: &[Value], regs: &[Value], site: &RpcSite) -> i64 {
+        let mut info = RpcArgInfo::with_capacity(site.args.len());
+        for spec in &site.args {
+            match spec {
+                BcRpcArg::Val(o) => {
+                    let bits = match bv(pool, regs, *o) {
+                        Value::I(i) => i as u64,
+                        Value::F(f) => f.to_bits(),
+                    };
+                    info.add_val(bits);
+                }
+                BcRpcArg::Ref { ptr, mode, obj_size, offset } => {
+                    let p = bv(pool, regs, *ptr).as_addr();
+                    let off = match offset {
+                        LowOffset::Const(c) => *c,
+                        LowOffset::Dynamic => {
+                            self.env.find_object(p).map(|(base, _)| p - base).unwrap_or(0)
+                        }
+                    };
+                    info.add_ref(p, *mode, *obj_size, off);
+                }
+                BcRpcArg::MultiRef { ptr, candidates } => {
+                    let p = bv(pool, regs, *ptr).as_addr();
+                    let mut matched = false;
+                    for (cand, mode, size) in candidates {
+                        let base = bv(pool, regs, *cand).as_addr();
+                        if p >= base && p < base + size.max(&1) {
+                            info.add_ref(p, *mode, *size, p - base);
+                            matched = true;
+                            break;
+                        }
+                    }
+                    if !matched {
+                        info.add_val(p);
+                    }
+                }
+                BcRpcArg::DynRef { ptr, mode } => {
+                    let p = bv(pool, regs, *ptr).as_addr();
+                    match self.env.find_object(p) {
+                        Some((base, size)) => info.add_ref(p, *mode, size, p - base),
+                        None => info.add_val(p),
+                    }
+                }
+            }
+        }
+        self.dispatch_rpc(site.callee_id, &info)
+    }
+}
+
+/// Flow result of one bytecode op.
+enum BcFlow {
+    Next,
+    Jump(u32),
+    Returned(Option<Value>),
+}
+
+/// Per-lane state of a batched `parallel` dispatch: everything a lane
+/// needs to resume where its last quantum left off.
+struct BcThread {
+    regs: Vec<Value>,
+    pc: usize,
+    sp: u64,
+    stack_end: u64,
+    rand: DeviceRand,
+}
+
+/// Ops per lane per batched dispatch round: large enough to amortize
+/// the per-quantum interpreter setup, small enough that lanes of a
+/// chunk interleave rather than run to completion one after another.
+const BC_PAR_QUANTUM: usize = 256;
+
+/// Bytecode-operand fetch: [`POOL_BIT`] picks pool vs slot — two array
+/// indexes, like [`lv`].
+#[inline(always)]
+fn bv(pool: &[Value], regs: &[Value], x: u32) -> Value {
+    if x & POOL_BIT != 0 {
+        pool[(x & !POOL_BIT) as usize]
+    } else {
+        regs[x as usize]
     }
 }
 
@@ -1633,18 +2164,28 @@ func @main() -> i64 {
 "#;
 
     #[test]
-    fn register_core_matches_tree_walk_exactly() {
-        let lowered = crate::transform::CompileOptions::default();
-        let (env, server) = setup(EQUIV_SRC, lowered);
-        assert!(env.module.lowered.contains_key("main"), "default pipeline lowers");
-        assert!(env.pools.contains_key("main"), "pool resolved at load");
-        assert!(env.module.lowered["main"].fused > 0, "fusable corpus fused");
-        let (reg_ret, reg_stats) = env.run_main(&[]);
+    fn all_three_executors_match_exactly() {
+        // Bytecode leg: the default pipeline ends in `bytecode`.
+        let (env, server) = setup(EQUIV_SRC, crate::transform::CompileOptions::default());
+        assert!(env.module.bytecode.contains_key("main"), "default pipeline flattens");
+        assert!(env.bpools.contains_key("main"), "bytecode pool resolved at load");
+        assert!(env.module.bytecode["main"].fused > 0, "fusion carries through");
+        let (bc_ret, bc_stats) = env.run_main(&[]);
         server.stop();
+
+        // Register leg: `--no-bytecode` falls back to the lowered form.
+        let reg = crate::transform::CompileOptions { bytecode: false, ..Default::default() };
+        let (env1, server1) = setup(EQUIV_SRC, reg);
+        assert!(env1.module.bytecode.is_empty(), "no-bytecode leg stays on the register core");
+        assert!(env1.module.lowered.contains_key("main"), "register leg lowers");
+        assert!(env1.module.lowered["main"].fused > 0, "fusable corpus fused");
+        let (reg_ret, reg_stats) = env1.run_main(&[]);
+        server1.stop();
 
         let tree = crate::transform::CompileOptions {
             lower: false,
             fuse: false,
+            bytecode: false,
             ..Default::default()
         };
         let (env2, server2) = setup(EQUIV_SRC, tree);
@@ -1652,25 +2193,82 @@ func @main() -> i64 {
         let (tree_ret, tree_stats) = env2.run_main(&[]);
         server2.stop();
 
-        assert_eq!(reg_ret, 2 * (99 * 100 / 2));
-        assert_eq!(reg_ret, tree_ret, "executors must agree on the result");
+        assert_eq!(bc_ret, 2 * (99 * 100 / 2));
+        assert_eq!(bc_ret, reg_ret, "executors must agree on the result");
+        assert_eq!(bc_ret, tree_ret, "executors must agree on the result");
         // Counter discipline is mirrored exactly (superinstructions
-        // charge both components), so modeled work is identical too.
-        assert_eq!(reg_stats.int_ops, tree_stats.int_ops, "int-op parity");
-        assert_eq!(reg_stats.flops_f64, tree_stats.flops_f64, "flop parity");
+        // charge both components, flattening artifacts charge nothing),
+        // so modeled work is identical across all three executors.
+        assert_eq!(bc_stats.int_ops, reg_stats.int_ops, "int-op parity (bc vs reg)");
+        assert_eq!(reg_stats.int_ops, tree_stats.int_ops, "int-op parity (reg vs tree)");
+        assert_eq!(bc_stats.flops_f64, tree_stats.flops_f64, "flop parity");
         assert_eq!(
-            reg_stats.bytes_strided, tree_stats.bytes_strided,
+            bc_stats.bytes_strided, tree_stats.bytes_strided,
             "memory-traffic parity"
         );
     }
 
     #[test]
     fn fusion_off_still_runs_the_register_core() {
-        let opts = crate::transform::CompileOptions { fuse: false, ..Default::default() };
+        let opts = crate::transform::CompileOptions {
+            fuse: false,
+            bytecode: false,
+            ..Default::default()
+        };
         let (env, server) = setup(EQUIV_SRC, opts);
         assert_eq!(env.module.lowered["main"].fused, 0);
         let (ret, _) = env.run_main(&[]);
         assert_eq!(ret, 2 * (99 * 100 / 2));
+        server.stop();
+    }
+
+    #[test]
+    fn fusion_off_bytecode_still_flattens() {
+        // `bytecode` does not require `fuse`: the flattening simply has
+        // no superinstructions.
+        let opts = crate::transform::CompileOptions { fuse: false, ..Default::default() };
+        let (env, server) = setup(EQUIV_SRC, opts);
+        assert_eq!(env.module.bytecode["main"].fused, 0);
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 2 * (99 * 100 / 2));
+        server.stop();
+    }
+
+    #[test]
+    fn batched_parallel_lanes_persist_state_across_quanta() {
+        // Each lane allocas a private accumulator and runs a loop far
+        // longer than one step quantum ([`BC_PAR_QUANTUM`]); lane state
+        // (registers, stack pointer, pc) must survive the round-robin
+        // batched stepping. multiteam is off so the `parallel` op stays
+        // un-expanded and dispatches through the batched path.
+        let src = r#"
+global @out 1024
+
+func @main() -> i64 {
+  parallel num_threads(128) {
+    %acc = alloca 8
+    store.8 0, %acc
+    %t = tid
+    for %i = 0 to 200 step 1 {
+      %s = load.8 %acc
+      %s2 = add %s, %i
+      store.8 %s2, %acc
+    }
+    %off = mul %t, 8
+    %p = gep @out, %off
+    %v = load.8 %acc
+    store.8 %v, %p
+  }
+  %p = gep @out, 504
+  %r = load.8 %p
+  return %r
+}
+"#;
+        let opts = crate::transform::CompileOptions { multiteam: false, ..Default::default() };
+        let (env, server) = setup(src, opts);
+        assert!(env.module.bytecode.contains_key("main"), "runs on the bytecode tier");
+        let (ret, _) = env.run_main(&[]);
+        assert_eq!(ret, 199 * 200 / 2, "every lane accumulated its full loop");
         server.stop();
     }
 

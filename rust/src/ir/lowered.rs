@@ -20,8 +20,10 @@
 //! equivalence baseline (`tests/lowering.rs`). Instruction/flop/memory
 //! counters are mirrored exactly — a superinstruction charges both of
 //! its component instructions — so modeled device time is identical
-//! between the two executors. HetGPU-style portable bytecode is the
-//! intended follow-on consumer of this boundary.
+//! across the executors. The `bytecode` pass
+//! ([`crate::transform::bytecode`]) consumes this form in turn,
+//! flattening it into the linear bytecode ([`super::bytecode`]) the
+//! interpreter runs by default.
 
 use super::{Schedule, Ty, Width};
 use crate::rpc::ArgMode;
@@ -63,16 +65,24 @@ pub enum LowExpr {
     Log(LowOp),
 }
 
-/// A lowered RPC argument descriptor. `Ref` offsets are always constant
-/// here — a dynamic-offset `Ref` makes the whole function unlowerable
-/// (it stays on the tree-walk path; the tree-walk arm treats it as
-/// unreachable too). `MultiRef` candidate offsets are dropped: the
-/// runtime recomputes `ptr - base` for the matching candidate exactly
-/// like the tree-walk executor.
+/// A `Ref`'s offset into its underlying object — the lowered twin of
+/// [`super::OffsetSpec`]. `Dynamic` is recomputed at marshal time as
+/// `ptr - base(object)` via the runtime object lookup, exactly like
+/// `MultiRef` candidates, so dynamic-offset refs no longer pin a
+/// function to the tree-walk executor.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LowOffset {
+    Const(u64),
+    Dynamic,
+}
+
+/// A lowered RPC argument descriptor. `MultiRef` candidate offsets are
+/// dropped: the runtime recomputes `ptr - base` for the matching
+/// candidate exactly like the tree-walk executor.
 #[derive(Debug, Clone, PartialEq)]
 pub enum LowRpcArg {
     Val(LowOp),
-    Ref { ptr: LowOp, mode: ArgMode, obj_size: u64, offset: u64 },
+    Ref { ptr: LowOp, mode: ArgMode, obj_size: u64, offset: LowOffset },
     MultiRef { ptr: LowOp, candidates: Vec<(LowOp, ArgMode, u64)> },
     DynRef { ptr: LowOp, mode: ArgMode },
 }

@@ -21,6 +21,7 @@ pub mod parser;
 pub mod printer;
 pub mod interp;
 pub mod lowered;
+pub mod bytecode;
 
 use std::collections::BTreeMap;
 use std::fmt;
@@ -246,6 +247,12 @@ pub struct Module {
     /// only), and cleared whenever a later pass mutates the tree so a
     /// stale lowering can never execute.
     pub lowered: BTreeMap<String, lowered::LoweredFunction>,
+    /// Linear bytecode forms produced by the `bytecode` pass from the
+    /// lowered forms, keyed by function name. The interpreter prefers
+    /// a function's bytecode over its lowered body over the tree.
+    /// Cleared together with `lowered` whenever a later pass mutates
+    /// the tree, so a stale flattening can never execute.
+    pub bytecode: BTreeMap<String, bytecode::BytecodeFunction>,
 }
 
 impl Module {

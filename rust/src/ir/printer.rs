@@ -255,7 +255,7 @@ fn escape(s: &str) -> String {
 // artifact the `lower` pass re-creates from the tree IR, so
 // `print_module` never emits it.
 
-use super::lowered::{LowExpr, LowInstr, LowOp, LowRpcArg, LoweredFunction, PoolConst};
+use super::lowered::{LowExpr, LowInstr, LowOffset, LowOp, LowRpcArg, LoweredFunction, PoolConst};
 
 /// Render every lowered function in `m` (slots as `rN`, pool operands
 /// as `cN`, superinstructions flagged `fused`) for `--explain` and
@@ -332,10 +332,14 @@ fn print_low_spec(s: &LowRpcArg) -> String {
         crate::rpc::ArgMode::Write => "w",
         crate::rpc::ArgMode::ReadWrite => "rw",
     };
+    let off = |o: &LowOffset| match o {
+        LowOffset::Const(c) => format!("+{c}"),
+        LowOffset::Dynamic => "+dyn".into(),
+    };
     match s {
         LowRpcArg::Val(o) => format!("val {}", lop(*o)),
         LowRpcArg::Ref { ptr, mode: m, obj_size, offset } => {
-            format!("ref {} {} {} +{}", lop(*ptr), mode(*m), obj_size, offset)
+            format!("ref {} {} {} {}", lop(*ptr), mode(*m), obj_size, off(offset))
         }
         LowRpcArg::DynRef { ptr, mode: m } => format!("dyn {} {}", lop(*ptr), mode(*m)),
         LowRpcArg::MultiRef { ptr, candidates } => {
@@ -499,6 +503,204 @@ fn print_low_body(out: &mut String, body: &[LowInstr], depth: usize) {
     }
 }
 
+// ---------------------------------------------------------------------
+// Bytecode dump. Diagnostics only, like the lowered dump: the linear
+// form is a derived artifact the `bytecode` pass re-creates, so
+// `print_module` never emits it. (The *runnable* encoding is
+// `bytecode::serialize`, not this listing.)
+
+use super::bytecode::{BcRpcArg, BytecodeFunction, Op, POOL_BIT};
+
+/// Render every bytecode function in `m` (pc-numbered flat listing plus
+/// the call/rpc/launch/parallel side tables) for `--explain`.
+pub fn print_bytecode_module(m: &Module) -> String {
+    let mut out = String::new();
+    for (name, bf) in &m.bytecode {
+        out.push_str(&print_bytecode_fn(name, bf));
+    }
+    out
+}
+
+/// Operand-word render: pool bit picks `cN` vs `rN`.
+fn bop(x: u32) -> String {
+    if x & POOL_BIT != 0 {
+        format!("c{}", x & !POOL_BIT)
+    } else {
+        format!("r{x}")
+    }
+}
+
+/// Render one function's linear bytecode with resolved pc targets.
+pub fn print_bytecode_fn(name: &str, bf: &BytecodeFunction) -> String {
+    let mut out = String::new();
+    let params =
+        bf.param_slots.iter().map(|s| format!("r{s}")).collect::<Vec<_>>().join(", ");
+    out.push_str(&format!(
+        "bytecode @{name}({params}) slots={} ops={} fused={} {{\n",
+        bf.nslots,
+        bf.code.len(),
+        bf.fused
+    ));
+    if !bf.names.is_empty() {
+        let legend = bf
+            .names
+            .iter()
+            .enumerate()
+            .map(|(i, n)| format!("r{i}=%{n}"))
+            .collect::<Vec<_>>()
+            .join(" ");
+        out.push_str(&format!("  ; slots: {legend}\n"));
+    }
+    for (i, c) in bf.pool.iter().enumerate() {
+        let v = match c {
+            PoolConst::I(x) => x.to_string(),
+            PoolConst::F(x) => format!("{x}"),
+            PoolConst::Global(g) => format!("@{g}"),
+        };
+        out.push_str(&format!("  c{i} = {v}\n"));
+    }
+    for (pc, op) in bf.code.iter().enumerate() {
+        out.push_str(&format!("  {pc:>4}: {}\n", print_bc_op(bf, *op)));
+    }
+    for (i, cs) in bf.calls.iter().enumerate() {
+        let dst = cs.dst.map(|d| format!("r{d} = ")).unwrap_or_default();
+        let args = cs.args.iter().map(|&a| bop(a)).collect::<Vec<_>>().join(", ");
+        out.push_str(&format!("  ; call{i}: {dst}{}({args})\n", cs.callee));
+    }
+    for (i, rs) in bf.rpcs.iter().enumerate() {
+        let dst = rs.dst.map(|d| format!("r{d} = ")).unwrap_or_default();
+        let args = rs.args.iter().map(print_bc_spec).collect::<Vec<_>>().join(", ");
+        out.push_str(&format!("  ; rpc{i}: {dst}rpc {} ({args})\n", rs.callee_id));
+    }
+    for (i, ls) in bf.launches.iter().enumerate() {
+        let arg = ls.arg.map(|a| format!(" ({})", bop(a))).unwrap_or_default();
+        let ps = ls.params.iter().map(|&p| bop(p)).collect::<Vec<_>>().join(", ");
+        out.push_str(&format!("  ; launch{i}: @{}{arg} params [{ps}]\n", ls.region));
+    }
+    for (i, ps) in bf.pars.iter().enumerate() {
+        let n = ps.num_threads.map(|o| bop(o)).unwrap_or_else(|| "default".into());
+        out.push_str(&format!(
+            "  ; par{i}: num_threads={n} body=[{}, {}) barrier={}\n",
+            ps.body_start, ps.body_end, ps.has_barrier
+        ));
+    }
+    out.push_str("}\n");
+    out
+}
+
+fn print_bc_op(bf: &BytecodeFunction, op: Op) -> String {
+    match op {
+        Op::Mov { dst, src } => format!("r{dst} = mov {}", bop(src)),
+        Op::Bin { dst, op, a, b } => {
+            format!("r{dst} = {} {}, {}", binop_name(op), bop(a), bop(b))
+        }
+        Op::Gep { dst, base, off } => format!("r{dst} = gep {}, {}", bop(base), bop(off)),
+        Op::Select { dst, cond, a, b } => {
+            format!("r{dst} = select {}, {}, {}", bop(cond), bop(a), bop(b))
+        }
+        Op::SiToFp { dst, a } => format!("r{dst} = sitofp {}", bop(a)),
+        Op::FpToSi { dst, a } => format!("r{dst} = fptosi {}", bop(a)),
+        Op::Tid { dst } => format!("r{dst} = tid"),
+        Op::NumThreads { dst } => format!("r{dst} = nthreads"),
+        Op::Sqrt { dst, a } => format!("r{dst} = sqrt {}", bop(a)),
+        Op::Exp { dst, a } => format!("r{dst} = exp {}", bop(a)),
+        Op::Log { dst, a } => format!("r{dst} = log {}", bop(a)),
+        Op::Alloca { dst, size } => format!("r{dst} = alloca {size}"),
+        Op::Store { addr, val, width } => {
+            format!("store.{width} {}, {}", bop(val), bop(addr))
+        }
+        Op::Load { dst, addr, width, ty } => {
+            let m = if ty == Ty::F64 { "loadf" } else { "load" };
+            format!("r{dst} = {m}.{width} {}", bop(addr))
+        }
+        Op::Call { site } => format!("call call{site} ({})", bf.calls[site as usize].callee),
+        Op::Intrinsic { site } => {
+            format!("intrinsic call{site} ({})", bf.calls[site as usize].callee)
+        }
+        Op::Rpc { site } => format!("rpc rpc{site}"),
+        Op::Launch { site } => {
+            format!("launch launch{site} (@{})", bf.launches[site as usize].region)
+        }
+        Op::Barrier => "barrier".into(),
+        Op::Return { val } => format!("return {}", bop(val)),
+        Op::ReturnVoid => "return".into(),
+        Op::BrZero { cond, target } => format!("brz {} -> {target}", bop(cond)),
+        Op::BrZeroFree { cond, target } => format!("brz.free r{cond} -> {target}"),
+        Op::Jump { target } => format!("jump -> {target}"),
+        Op::LoopEntry => "loop.entry".into(),
+        Op::ForInit { lo, hi, step, sched, i_slot, hi_slot, stride_slot } => {
+            let s = match sched {
+                Schedule::Seq => "seq",
+                Schedule::Team => "team",
+                Schedule::Grid => "grid",
+            };
+            format!(
+                "for.init.{s} r{i_slot},r{hi_slot},r{stride_slot} = {} to {} step {}",
+                bop(lo),
+                bop(hi),
+                bop(step)
+            )
+        }
+        Op::ForHead { i_slot, hi_slot, var, exit } => {
+            format!("for.head r{var} = r{i_slot} < r{hi_slot} else -> {exit}")
+        }
+        Op::ForNext { i_slot, stride_slot, head } => {
+            format!("for.next r{i_slot} += r{stride_slot} -> {head}")
+        }
+        Op::Par { site } => format!("par par{site}"),
+        Op::CmpBr { tmp, op, a, b, else_target } => format!(
+            "fused cmp.br r{tmp} = {} {}, {} else -> {else_target}",
+            binop_name(op),
+            bop(a),
+            bop(b)
+        ),
+        Op::GepLoad { tmp, base, off, dst, width, ty } => {
+            let m = if ty == Ty::F64 { "loadf" } else { "load" };
+            format!("fused r{dst} = {m}.{width} [{} + {}] via r{tmp}", bop(base), bop(off))
+        }
+        Op::GepStore { tmp, base, off, val, width } => format!(
+            "fused store.{width} {}, [{} + {}] via r{tmp}",
+            bop(val),
+            bop(base),
+            bop(off)
+        ),
+        Op::BinStore { tmp, op, a, b, addr, width } => format!(
+            "fused store.{width} ({} {}, {} -> r{tmp}), {}",
+            binop_name(op),
+            bop(a),
+            bop(b),
+            bop(addr)
+        ),
+    }
+}
+
+fn print_bc_spec(s: &BcRpcArg) -> String {
+    let mode = |m: crate::rpc::ArgMode| match m {
+        crate::rpc::ArgMode::Read => "r",
+        crate::rpc::ArgMode::Write => "w",
+        crate::rpc::ArgMode::ReadWrite => "rw",
+    };
+    let off = |o: &LowOffset| match o {
+        LowOffset::Const(c) => format!("+{c}"),
+        LowOffset::Dynamic => "+dyn".into(),
+    };
+    match s {
+        BcRpcArg::Val(o) => format!("val {}", bop(*o)),
+        BcRpcArg::Ref { ptr, mode: m, obj_size, offset } => {
+            format!("ref {} {} {} {}", bop(*ptr), mode(*m), obj_size, off(offset))
+        }
+        BcRpcArg::DynRef { ptr, mode: m } => format!("dyn {} {}", bop(*ptr), mode(*m)),
+        BcRpcArg::MultiRef { ptr, candidates } => {
+            let cands = candidates
+                .iter()
+                .map(|(c, m, s)| format!("{} {} {}", bop(*c), mode(*m), s))
+                .collect::<Vec<_>>()
+                .join(" ; ");
+            format!("multi {} [ {cands} ]", bop(*ptr))
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -535,6 +737,26 @@ mod tests {
         assert!(s.contains("r1 = add r0, c0"), "{s}");
         assert!(s.contains("fused r1 = load.8 [c1 + r1] via r2"), "{s}");
         assert!(s.contains("return r1"), "{s}");
+    }
+
+    #[test]
+    fn bytecode_dump_numbers_pcs_and_shows_loop_artifacts() {
+        let src = "global @buf 64\n\nfunc @main() -> i64 {\n  for %i = 0 to 4 step 1 {\n    %off = mul %i, 8\n    %p = gep @buf, %off\n    store.8 %i, %p\n  }\n  return 0\n}\n";
+        let mut m = crate::ir::parser::parse_module(src).unwrap();
+        crate::transform::lower::run(&mut m);
+        crate::transform::fuse::run(&mut m);
+        crate::transform::bytecode::run(&mut m);
+        let dump = print_bytecode_module(&m);
+        assert!(dump.contains("bytecode @main"), "{dump}");
+        assert!(dump.contains("   0: "), "pc-numbered listing: {dump}");
+        assert!(dump.contains("for.init.seq"), "{dump}");
+        assert!(dump.contains("for.head"), "{dump}");
+        assert!(dump.contains("for.next"), "{dump}");
+        assert!(dump.contains("=%<for.i>"), "hidden slots in the legend: {dump}");
+        // Derived artifact: never part of the parse/print round trip.
+        let printed = print_module(&m);
+        assert!(!printed.contains("bytecode"), "{printed}");
+        crate::ir::parser::parse_module(&printed).unwrap();
     }
 
     #[test]

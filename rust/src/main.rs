@@ -12,6 +12,7 @@
 //! gpu-first explain <prog.ir>          # symbol resolution + RPC argument
 //!                                      # classification + per-pass timings
 //!                                      # + lowered (register-file) dump
+//!                                      # + linear bytecode dump
 //! gpu-first serve   <prog.ir> [--serve-sessions N] [--serve-queue N]
 //!                   [--serve-opens N] [--serve-tenants N] [--serve-runs N]
 //!                                      # resident daemon demo: N interleaved
@@ -22,9 +23,10 @@
 //! ```
 //!
 //! The middle-end pipeline is an ordered pass list (default
-//! `constfold,dce,libcres,rpcgen,multiteam,lower,fuse`; the trailing
-//! `lower`+`fuse` compile every function to the register-file execution
-//! form the interpreter prefers). `--passes` overrides it explicitly;
+//! `constfold,dce,libcres,rpcgen,multiteam,lower,fuse,bytecode`; the
+//! trailing `lower`+`fuse`+`bytecode` compile every function down to
+//! the linear bytecode the interpreter prefers, with `--no-bytecode`
+//! falling back to the register core). `--passes` overrides it explicitly;
 //! below that, the `GPU_FIRST_PASSES` environment variable (the CI
 //! pass-shape matrix) applies; below that, the `--no-*` flags drop
 //! individual passes from the default order.
@@ -49,7 +51,7 @@
 
 use gpu_first::coordinator::{Config, GpuFirstSession, ServeConfig, ServeDaemon, ServeError};
 use gpu_first::ir::parser::parse_module;
-use gpu_first::ir::printer::{print_lowered_module, print_module};
+use gpu_first::ir::printer::{print_bytecode_module, print_lowered_module, print_module};
 use gpu_first::obs::SpanKind;
 use gpu_first::transform::{CompileOptions, PipelineSpec};
 use gpu_first::util::cli::Args;
@@ -77,10 +79,11 @@ fn main() {
                               trace-event JSON, implies --trace) --metrics-out FILE\n\
                               (RunMetrics JSON with latency histograms)\n\
                  pipeline:    --passes p1,p2,... (known: constfold, dce, libcres,\n\
-                              rpcgen, multiteam, lower, fuse; default all seven;\n\
-                              GPU_FIRST_PASSES env applies below it) --no-constfold\n\
-                              --no-dce --no-libcres --no-rpcgen --no-multiteam\n\
-                              --no-lower --no-fuse\n\
+                              rpcgen, multiteam, lower, fuse, bytecode; default\n\
+                              all eight; GPU_FIRST_PASSES env applies below it)\n\
+                              --no-constfold --no-dce --no-libcres --no-rpcgen\n\
+                              --no-multiteam --no-lower --no-fuse --no-bytecode\n\
+                              (fall back to the register core)\n\
                  see README.md"
             );
             std::process::exit(2);
@@ -107,6 +110,7 @@ fn opts(args: &Args) -> CompileOptions {
         multiteam: !args.flag("no-multiteam"),
         lower: !args.flag("no-lower"),
         fuse: !args.flag("no-fuse"),
+        bytecode: !args.flag("no-bytecode"),
     }
 }
 
@@ -261,13 +265,13 @@ fn export_telemetry(
 fn cmd_explain(args: &Args) -> Result<(), String> {
     let mut module = read_module(args)?;
     // Explain compiles without region expansion by default (the module
-    // stays closest to the source) but does run lower+fuse so the
-    // register-file dump reflects what execution would use; `--passes`
-    // and the GPU_FIRST_PASSES env still override, with the same
-    // precedence as compile/run.
+    // stays closest to the source) but does run lower+fuse+bytecode so
+    // the register-file and bytecode dumps reflect what execution would
+    // use; `--passes` and the GPU_FIRST_PASSES env still override, with
+    // the same precedence as compile/run.
     let spec = pipeline_spec_or(
         args,
-        PipelineSpec::parse("constfold,dce,libcres,rpcgen,lower,fuse").unwrap(),
+        PipelineSpec::parse("constfold,dce,libcres,rpcgen,lower,fuse,bytecode").unwrap(),
     )?;
     let mut session = GpuFirstSession::start(Config::from_args(args)?);
     session.compile_spec(&mut module, &spec)?;
@@ -310,6 +314,10 @@ fn cmd_explain(args: &Args) -> Result<(), String> {
         }
         println!("superinstruction fusion (fuse): {}", report.fuse.summary());
         print!("\n{}", print_lowered_module(&module));
+    }
+    if !module.bytecode.is_empty() {
+        println!("linear bytecode (bytecode): {}", report.bytecode.summary());
+        print!("\n{}", print_bytecode_module(&module));
     }
     session.stop();
     Ok(())

@@ -8,7 +8,11 @@
 //! are dispatched as **one batched landing-pad invocation** through the
 //! registry's batch pad (or, lacking one, the scalar pad already
 //! fetched — together with its launch flag — by the sweep's single
-//! per-frame registry lookup).
+//! per-frame registry lookup). Consecutive `fwrite`/`fread` frames that
+//! target the same stream additionally merge **across callee
+//! boundaries** (distinct call-site pads of one direction share a frame
+//! layout); frames that joined that way are counted in
+//! `HostIoSnapshot::batched_cross_callee`.
 //!
 //! Stage table for the batched path (the Fig. 7 pipeline, per sweep):
 //!
@@ -37,7 +41,9 @@ use super::arena::ArenaLayout;
 use super::executor::{LaunchExecutor, LaunchJob};
 use crate::gpu::memory::DeviceMemory;
 use crate::rpc::mailbox::{ST_DONE, ST_IDLE, ST_REQUEST, ST_SERVING};
-use crate::rpc::server::{unpack_frame, writeback_frame, RpcFrame, WrapperFn, WrapperRegistry};
+use crate::rpc::server::{
+    unpack_frame, writeback_frame, HostArg, RpcFrame, StreamDir, WrapperFn, WrapperRegistry,
+};
 use crate::rpc::wrappers::{with_lane_ctx, HostEnv};
 use crate::util::json::Json;
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
@@ -537,18 +543,68 @@ fn dispatch_sweep(
         frames.push(frame);
         pads.push(entry.map(|(w, _)| w));
     }
-    // Group by callee, preserving claim order within a group.
-    let mut groups: Vec<(u64, Vec<usize>)> = Vec::new();
+    // Group by callee, preserving claim order within a group — and
+    // merge **consecutive** stream-pad frames (`fwrite`/`fread`) that
+    // target the same stream into one batch run even across a callee
+    // boundary: every pad of one direction shares the
+    // `(buf, size, count, fd)` frame layout, so the merged run commits
+    // through one batch-pad invocation (and one stream-lock
+    // acquisition) exactly like a homogeneous group.
+    struct Group {
+        callee: u64,
+        members: Vec<usize>,
+        /// The `(direction, fd)` every member shares while the group is
+        /// still extendable by the cross-callee merge; `None` once it
+        /// mixes streams or never was a stream run.
+        stream: Option<(StreamDir, u64)>,
+        /// Members that joined from a different callee than `callee`.
+        cross: u64,
+    }
+    let stream_key = |k: usize| -> Option<(StreamDir, u64)> {
+        if !batch {
+            return None;
+        }
+        let dir = registry.stream_dir(callees[k])?;
+        match frames[k].args.get(3) {
+            Some(HostArg::Val(fd)) => Some((dir, *fd)),
+            _ => None,
+        }
+    };
+    let mut groups: Vec<Group> = Vec::new();
+    let mut prev: Option<usize> = None;
     for (k, &c) in callees.iter().enumerate() {
-        match groups.iter_mut().find(|(g, _)| *g == c) {
-            Some((_, members)) => members.push(k),
-            None => groups.push((c, vec![k])),
+        let key = stream_key(k);
+        // Same stream as the immediately preceding frame: extend its
+        // group, whatever the callee.
+        if key.is_some() {
+            if let Some(gi) = prev {
+                if groups[gi].stream == key {
+                    if groups[gi].callee != c {
+                        groups[gi].cross += 1;
+                    }
+                    groups[gi].members.push(k);
+                    continue;
+                }
+            }
+        }
+        match groups.iter().position(|g| g.callee == c) {
+            Some(gi) => {
+                if groups[gi].stream != key {
+                    groups[gi].stream = None;
+                }
+                groups[gi].members.push(k);
+                prev = Some(gi);
+            }
+            None => {
+                groups.push(Group { callee: c, members: vec![k], stream: key, cross: 0 });
+                prev = Some(groups.len() - 1);
+            }
         }
     }
-    // Stage 3: one landing-pad invocation per homogeneous group, run
-    // under the (first) owning slot's lane context so HostEnv shard
-    // selection follows the serving lane.
-    for (callee, members) in groups {
+    // Stage 3: one landing-pad invocation per group, run under the
+    // (first) owning slot's lane context so HostEnv shard selection
+    // follows the serving lane.
+    for Group { callee, members, cross, .. } in groups {
         let serve_span = mem.obs.spans.start();
         let coalesced = batch && members.len() > 1;
         if coalesced {
@@ -592,6 +648,9 @@ fn dispatch_sweep(
             }
             metrics.served.fetch_add(1, Ordering::Relaxed);
             mb.set_status(ST_DONE);
+        }
+        if cross > 0 {
+            env.count_batched_cross_callee(cross);
         }
         if serve_span.is_some() {
             // Spans are enabled: the name lookup is off the default path.
@@ -778,6 +837,83 @@ mod tests {
         }
         assert_eq!(env.stdout_string(), "line0\nline1\nline2\n");
         assert_eq!(engine.metrics.snapshot().batches, 1);
+        engine.stop();
+    }
+
+    #[test]
+    fn consecutive_same_stream_frames_merge_across_callees() {
+        use crate::rpc::wrappers::{register_pad, HostFnKind, FD_STDERR, FD_STDOUT};
+        // Two distinct fwrite call-site pads (different callee ids, one
+        // frame layout). Both lanes ready before the engine starts, both
+        // targeting stdout: the sweep must dispatch them as ONE batch
+        // run, counting the second frame as a cross-callee join.
+        let (mem, arena, reg, env) = setup(2);
+        let id_a = register_pad(&reg, "__fwrite_site_a", HostFnKind::Fwrite);
+        let id_b = register_pad(&reg, "__fwrite_site_b", HostFnKind::Fwrite);
+        assert_ne!(id_a, id_b);
+        let fill = |lane: usize, callee: u64, payload: &str, fd: u64| {
+            let mb = arena.lane(&mem, lane);
+            mb.write_data(0, payload.as_bytes());
+            mb.set_callee(callee);
+            mb.set_nargs(4);
+            mb.write_arg(
+                0,
+                WireArg {
+                    kind: KIND_REF,
+                    value: 0,
+                    mode: ArgMode::Read.encode(),
+                    size: payload.len() as u64,
+                    offset: 0,
+                },
+            );
+            mb.write_arg(1, WireArg { kind: KIND_VAL, value: 1, mode: 0, size: 0, offset: 0 });
+            mb.write_arg(
+                2,
+                WireArg { kind: KIND_VAL, value: payload.len() as u64, mode: 0, size: 0, offset: 0 },
+            );
+            mb.write_arg(3, WireArg { kind: KIND_VAL, value: fd, mode: 0, size: 0, offset: 0 });
+            mb.set_status(ST_REQUEST);
+        };
+        let drain = |lane: usize, want_ret: i64| {
+            let mb = arena.lane(&mem, lane);
+            let mut spins = 0u64;
+            while mb.status() != ST_DONE {
+                std::thread::yield_now();
+                spins += 1;
+                assert!(spins < 50_000_000, "lane {lane} never served");
+            }
+            assert_eq!(mb.ret(), want_ret, "fwrite returns count on lane {lane}");
+            mb.set_status(ST_IDLE);
+        };
+        fill(0, id_a, "AA", FD_STDOUT);
+        fill(1, id_b, "BB", FD_STDOUT);
+        let engine = RpcEngine::start(
+            Arc::clone(&mem),
+            arena,
+            Arc::clone(&reg),
+            Arc::clone(&env),
+            EngineConfig { lanes: 2, workers: 1, ..EngineConfig::default() },
+        );
+        drain(0, 2);
+        drain(1, 2);
+        assert_eq!(env.stdout_string(), "AABB", "claim order preserved through the merge");
+        let snap = engine.metrics.snapshot();
+        assert_eq!(snap.served, 2);
+        assert_eq!(snap.batches, 1, "one coalesced dispatch despite two callees");
+        assert_eq!(snap.batched_calls, 2);
+        let io = env.io_snapshot();
+        assert_eq!(io.batched_writes, 2, "both frames committed through the batch pad");
+        assert_eq!(io.batched_cross_callee, 1, "one frame joined across a callee boundary");
+        // Different streams never merge: same two callees, stdout vs
+        // stderr, whatever sweep(s) they land in.
+        fill(0, id_a, "XX", FD_STDOUT);
+        fill(1, id_b, "YY", FD_STDERR);
+        drain(0, 2);
+        drain(1, 2);
+        assert_eq!(env.stdout_string(), "AABBXX");
+        assert_eq!(env.stderr_string(), "YY");
+        let io = env.io_snapshot();
+        assert_eq!(io.batched_cross_callee, 1, "distinct streams stayed separate runs");
         engine.stop();
     }
 

@@ -90,6 +90,17 @@ pub type WrapperFn = Box<dyn Fn(&mut RpcFrame, &HostEnv) -> i64 + Send + Sync>;
 /// See [`crate::rpc::wrappers::synthesize_batch`].
 pub type BatchWrapperFn = Box<dyn Fn(&mut [RpcFrame], &HostEnv) -> Vec<i64> + Send + Sync>;
 
+/// Transfer direction of an order-preserving *stream pad* (`fwrite` =
+/// write, `fread` = read). Every pad of one direction shares the
+/// `(buf, size, count, fd)` frame layout, which is what lets the
+/// engine's sweep grouping merge consecutive same-stream frames into
+/// one batch run even when their callee ids differ.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StreamDir {
+    Write,
+    Read,
+}
+
 /// Registry mapping compile-time callee enum values to wrappers.
 #[derive(Default)]
 pub struct WrapperRegistry {
@@ -102,6 +113,9 @@ pub struct WrapperRegistry {
     wrappers: Mutex<Vec<(Arc<WrapperFn>, bool)>>,
     /// Optional batched variants, keyed by the scalar pad's callee id.
     batch: Mutex<HashMap<u64, Arc<BatchWrapperFn>>>,
+    /// Stream-pad direction per callee id (`fwrite`/`fread` pads only);
+    /// drives the engine's cross-callee same-stream batch merge.
+    stream: Mutex<HashMap<u64, StreamDir>>,
 }
 
 impl WrapperRegistry {
@@ -147,6 +161,21 @@ impl WrapperRegistry {
         let id = self.id_of(mangled)?;
         self.batch.lock().unwrap().insert(id, Arc::new(f));
         Some(id)
+    }
+
+    /// Mark an already-registered pad as an order-preserving stream pad
+    /// of direction `dir`; returns its callee id, or `None` when no pad
+    /// exists under `mangled`.
+    pub fn mark_stream(&self, mangled: &str, dir: StreamDir) -> Option<u64> {
+        let id = self.id_of(mangled)?;
+        self.stream.lock().unwrap().insert(id, dir);
+        Some(id)
+    }
+
+    /// Stream-pad direction of `id`, if it was marked with
+    /// [`Self::mark_stream`].
+    pub(crate) fn stream_dir(&self, id: u64) -> Option<StreamDir> {
+        self.stream.lock().unwrap().get(&id).copied()
     }
 
     /// Mark an already-registered pad as a kernel-split launch; returns

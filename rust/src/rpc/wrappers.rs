@@ -8,7 +8,7 @@
 //! in-memory [`HostEnv`] (files, stdout/stderr capture, process state) so
 //! host-side effects are observable in tests.
 
-use super::server::{BatchWrapperFn, RpcFrame, WrapperFn, WrapperRegistry};
+use super::server::{BatchWrapperFn, RpcFrame, StreamDir, WrapperFn, WrapperRegistry};
 use std::cell::Cell;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -198,6 +198,11 @@ pub struct HostIoSnapshot {
     /// Reads served through the batched `fread` landing pad
     /// (engine per-sweep coalescing; each counts one frame).
     pub batched_reads: u64,
+    /// Frames that joined a batch run **across a callee boundary**: the
+    /// engine's sweep grouping merged consecutive `fwrite`/`fread` pad
+    /// runs because they target the same stream, even though the callees
+    /// differ (subset of `batched_writes + batched_reads`).
+    pub batched_cross_callee: u64,
 }
 
 /// Host process state backing the landing pads: an in-memory filesystem,
@@ -239,6 +244,8 @@ pub struct HostEnv {
     batched_writes: AtomicU64,
     /// Frames served through the batched `fread` landing pad.
     batched_reads: AtomicU64,
+    /// Frames batched across a callee boundary (same-stream merge).
+    batched_cross_callee: AtomicU64,
     /// Kernel-split hook: `(region_id, arg_ptr) -> ret`. The coordinator
     /// installs a closure that launches the multi-team parallel kernel.
     #[allow(clippy::type_complexity)]
@@ -274,6 +281,7 @@ impl HostEnv {
             poison_recoveries: AtomicU64::new(0),
             batched_writes: AtomicU64::new(0),
             batched_reads: AtomicU64::new(0),
+            batched_cross_callee: AtomicU64::new(0),
             region_launcher: Mutex::new(None),
         }
     }
@@ -301,6 +309,7 @@ impl HostEnv {
             poison_recoveries: self.poison_recoveries.load(r),
             batched_writes: self.batched_writes.load(r),
             batched_reads: self.batched_reads.load(r),
+            batched_cross_callee: self.batched_cross_callee.load(r),
         }
     }
 
@@ -372,6 +381,12 @@ impl HostEnv {
     /// Record `frames` served through a batched read pad.
     fn count_batched_reads(&self, frames: u64) {
         self.batched_reads.fetch_add(frames, Ordering::Relaxed);
+    }
+
+    /// Record `frames` that joined a batch run **across a callee
+    /// boundary** (the engine's cross-callee same-stream merge).
+    pub(crate) fn count_batched_cross_callee(&self, frames: u64) {
+        self.batched_cross_callee.fetch_add(frames, Ordering::Relaxed);
     }
 
     fn write_stream(&self, fd: u64, bytes: &[u8]) -> i64 {
@@ -1093,8 +1108,19 @@ pub fn register_pad(registry: &WrapperRegistry, mangled: &str, kind: HostFnKind)
     if let Some(batch) = synthesize_batch(kind) {
         registry.register_batch(mangled, batch);
     }
-    if kind == HostFnKind::LaunchKernel {
-        registry.mark_launch(mangled);
+    match kind {
+        // Stream pads share a frame layout per direction, so the engine
+        // may merge their runs across callee boundaries.
+        HostFnKind::Fwrite => {
+            registry.mark_stream(mangled, StreamDir::Write);
+        }
+        HostFnKind::Fread => {
+            registry.mark_stream(mangled, StreamDir::Read);
+        }
+        HostFnKind::LaunchKernel => {
+            registry.mark_launch(mangled);
+        }
+        _ => {}
     }
     id
 }

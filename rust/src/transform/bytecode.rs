@@ -1,0 +1,108 @@
+//! The `bytecode` pass: flatten every lowered function into the linear
+//! bytecode execution form ([`crate::ir::bytecode`]).
+//!
+//! Runs after `lower` (and `fuse`, whose superinstructions flatten to
+//! fused ops) and rebuilds [`crate::ir::Module::bytecode`] wholesale
+//! from [`crate::ir::Module::lowered`]. Functions the `lower` pass kept
+//! on the tree-walk path simply have no bytecode either; the
+//! interpreter's three-tier dispatch (bytecode → register core → tree)
+//! handles them. Every flattening is re-checked with the validating
+//! loader before it is installed — an encoding bug fails the compile
+//! loudly instead of executing garbage.
+
+use crate::ir::bytecode::{flatten, validate};
+use crate::ir::Module;
+use std::collections::BTreeMap;
+
+/// What the pass did (→ `CompileReport.bytecode`, `--explain`,
+/// `RunMetrics.bytecode_fns`).
+#[derive(Debug, Default, Clone)]
+pub struct BytecodeReport {
+    /// Functions flattened to linear bytecode.
+    pub bytecode_fns: u64,
+    /// Total ops emitted across all functions.
+    pub total_ops: u64,
+    /// Side-table entries (call + rpc + launch + parallel sites).
+    pub total_sites: u64,
+}
+
+impl BytecodeReport {
+    /// One-line summary for reports.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} function(s) flattened ({} ops, {} call/rpc/launch/par sites)",
+            self.bytecode_fns, self.total_ops, self.total_sites
+        )
+    }
+}
+
+/// Flatten every lowered function of `m` into [`Module::bytecode`],
+/// replacing any previous flattening wholesale. The lowered forms are
+/// untouched — the bytecode lives alongside them (`--no-bytecode` falls
+/// back to the register core).
+pub fn run(m: &mut Module) -> BytecodeReport {
+    let mut report = BytecodeReport::default();
+    let mut out = BTreeMap::new();
+    for (name, lf) in &m.lowered {
+        let bf = flatten(lf);
+        if let Err(e) = validate(&bf) {
+            panic!("bytecode flattening of @{name} failed validation: {e}");
+        }
+        report.bytecode_fns += 1;
+        report.total_ops += bf.code.len() as u64;
+        report.total_sites +=
+            (bf.calls.len() + bf.rpcs.len() + bf.launches.len() + bf.pars.len()) as u64;
+        out.insert(name.clone(), bf);
+    }
+    m.bytecode = out;
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ir::parser::parse_module;
+
+    const SRC: &str = r#"
+global @buf 16
+
+func @main() -> i64 {
+  %p = gep @buf, 0
+  store.8 41, %p
+  %v = load.8 %p
+  %r = add %v, 1
+  return %r
+}
+"#;
+
+    #[test]
+    fn pass_mirrors_the_lowered_map() {
+        let mut m = parse_module(SRC).unwrap();
+        crate::transform::lower::run(&mut m);
+        crate::transform::fuse::run(&mut m);
+        let report = run(&mut m);
+        assert_eq!(report.bytecode_fns, 1);
+        assert!(report.total_ops > 0);
+        assert_eq!(m.bytecode.len(), m.lowered.len());
+        assert!(m.bytecode.contains_key("main"));
+        assert!(report.summary().contains("1 function(s) flattened"));
+    }
+
+    #[test]
+    fn rerun_replaces_previous_flattening() {
+        let mut m = parse_module(SRC).unwrap();
+        crate::transform::lower::run(&mut m);
+        run(&mut m);
+        let before = m.bytecode.clone();
+        run(&mut m);
+        assert_eq!(m.bytecode, before, "flattening is deterministic");
+    }
+
+    #[test]
+    fn no_lowered_forms_means_no_bytecode() {
+        let mut m = parse_module(SRC).unwrap();
+        let report = run(&mut m);
+        assert_eq!(report.bytecode_fns, 0);
+        assert!(m.bytecode.is_empty());
+    }
+}

@@ -18,17 +18,21 @@
 //!
 //! This pass folds exactly those shapes: for every call site the
 //! resolution table classifies as a printf/scanf-family host RPC, the
-//! format operand's def chain is folded through copies, zero-offset
-//! `gep`s and constant-condition `select`s; interprocedurally, a
-//! parameter that every caller binds to the *same* constant — a
-//! constant global *or* an integer — is folded inside the callee, so a
-//! `select` whose condition is a consistently-bound integer parameter
-//! picks its side too. A successful fold rewrites the format operand to
-//! the global itself, so `rpcgen`'s `parse_format` sees literal text
-//! and classifies the trailing buffers precisely instead of
-//! read-write. The parameter bindings are iterated to a fixed point, so
-//! constants flow through nested wrappers before the single rewrite
-//! round.
+//! format operand's def chain is folded through copies,
+//! constant-offset `gep`s and constant-condition `select`s;
+//! interprocedurally, a parameter that every caller binds to the *same*
+//! constant — a constant global *or* an integer — is folded inside the
+//! callee, so a `select` whose condition is a consistently-bound
+//! integer parameter picks its side too. A successful fold rewrites the
+//! format operand to the global itself, so `rpcgen`'s `parse_format`
+//! sees literal text and classifies the trailing buffers precisely
+//! instead of read-write. A chain landing at constant **non-zero**
+//! offset `K` into a constant global `@g` (the `fmt + K` idiom — skip a
+//! prefix, print the tail) synthesizes a *suffix global* `@g__sfxK`
+//! initialized with `@g`'s bytes from `K` on and rewrites the operand
+//! to that, so `fmt+K` call sites get precise intents too. The
+//! parameter bindings are iterated to a fixed point, so constants flow
+//! through nested wrappers before the single rewrite round.
 //!
 //! Only format operands of format-taking host-RPC callees are rewritten;
 //! the pass never touches computation, so a program where nothing folds
@@ -38,9 +42,9 @@
 use super::libcres::{resolve_module, ResolutionTable};
 use crate::analysis::callgraph::walk;
 use crate::analysis::objects::def_map;
-use crate::ir::{Expr, Instr, Module, Operand};
+use crate::ir::{Expr, Global, Instr, Module, Operand};
 use crate::rpc::wrappers::HostFnKind;
-use std::collections::HashMap;
+use std::collections::{BTreeMap, HashMap};
 
 /// What the pass did — consumed by tests, `--explain` and `RunMetrics`.
 #[derive(Debug, Default, Clone)]
@@ -146,7 +150,10 @@ fn bindings_once(
                 }
                 for (i, arg) in args.iter().enumerate() {
                     let folded = fold_operand(m, &defs, &caller_params, arg, 0)
-                        .map(Binding::Global)
+                        // Bindings carry zero-offset globals only; a
+                        // suffix global may not exist yet at binding
+                        // time.
+                        .and_then(|(g, k)| (k == 0).then_some(Binding::Global(g)))
                         .or_else(|| {
                             fold_const_int(&defs, &caller_params, arg, 0).map(Binding::Int)
                         });
@@ -185,6 +192,7 @@ fn fold_round(
     report: &mut ConstFoldReport,
 ) -> u64 {
     let mut folds = 0;
+    let mut pending: BTreeMap<String, Global> = BTreeMap::new();
     let fnames: Vec<String> = m.functions.keys().cloned().collect();
     for fname in fnames {
         let f = m.functions.get(&fname).unwrap();
@@ -195,14 +203,46 @@ fn fold_round(
             .map(|((_, param), binding)| (param.clone(), binding.clone()))
             .collect();
         let mut f = f.clone();
-        let n = fold_body(m, &mut f.body, &defs, &my_params, table, &fname, report);
+        let n = fold_body(m, &mut f.body, &defs, &my_params, table, &fname, report, &mut pending);
         if n > 0 {
             // Unchanged functions keep their original storage.
             m.functions.insert(fname, f);
         }
         folds += n;
     }
+    // Install the synthesized suffix globals the rewrites refer to.
+    for (name, g) in pending {
+        m.globals.insert(name, g);
+    }
     folds
+}
+
+/// The constant global a `fmt + K` chain lands in, synthesized on
+/// demand: `@g__sfxK`, initialized with `@g`'s bytes from offset `K`
+/// on. `None` (no fold) when `@g` is not a constant global, `K` is out
+/// of range, or the synthesized name is already taken by a different
+/// global.
+fn suffix_global(
+    m: &Module,
+    pending: &mut BTreeMap<String, Global>,
+    g: &str,
+    k: u64,
+) -> Option<String> {
+    let orig = m.globals.get(g)?;
+    if !orig.constant || k >= orig.size {
+        return None;
+    }
+    let name = format!("{g}__sfx{k}");
+    let size = orig.size - k;
+    let init = orig.init.get(k as usize..).unwrap_or(&[]).to_vec();
+    if let Some(existing) = m.globals.get(&name).or_else(|| pending.get(&name)) {
+        // Idempotent re-runs reuse the identical synthesis; any other
+        // occupant of the name blocks the fold.
+        let same = existing.constant && existing.size == size && existing.init == init;
+        return same.then_some(name);
+    }
+    pending.insert(name.clone(), Global { name: name.clone(), size, constant: true, init });
+    Some(name)
 }
 
 #[allow(clippy::too_many_arguments)]
@@ -214,6 +254,7 @@ fn fold_body(
     table: &ResolutionTable,
     fname: &str,
     report: &mut ConstFoldReport,
+    pending: &mut BTreeMap<String, Global>,
 ) -> u64 {
     let mut folds = 0;
     for ins in body.iter_mut() {
@@ -224,27 +265,33 @@ fn fold_body(
                 if matches!(op, Operand::Global(_)) {
                     continue; // already a direct constant reference
                 }
-                if let Some(g) = fold_operand(m, defs, params, op, 0) {
+                if let Some((g, k)) = fold_operand(m, defs, params, op, 0) {
+                    let target = if k == 0 {
+                        g
+                    } else {
+                        let Some(name) = suffix_global(m, pending, &g, k) else { continue };
+                        name
+                    };
                     report.folded.push((
                         fname.to_string(),
                         callee.clone(),
                         render(op),
-                        g.clone(),
+                        target.clone(),
                     ));
-                    args[i] = Operand::Global(g);
+                    args[i] = Operand::Global(target);
                     folds += 1;
                 }
             }
             Instr::If { then_body, else_body, .. } => {
-                folds += fold_body(m, then_body, defs, params, table, fname, report);
-                folds += fold_body(m, else_body, defs, params, table, fname, report);
+                folds += fold_body(m, then_body, defs, params, table, fname, report, pending);
+                folds += fold_body(m, else_body, defs, params, table, fname, report, pending);
             }
             Instr::While { cond, body, .. } => {
-                folds += fold_body(m, cond, defs, params, table, fname, report);
-                folds += fold_body(m, body, defs, params, table, fname, report);
+                folds += fold_body(m, cond, defs, params, table, fname, report, pending);
+                folds += fold_body(m, body, defs, params, table, fname, report, pending);
             }
             Instr::For { body, .. } | Instr::Parallel { body, .. } => {
-                folds += fold_body(m, body, defs, params, table, fname, report);
+                folds += fold_body(m, body, defs, params, table, fname, report, pending);
             }
             _ => {}
         }
@@ -261,27 +308,36 @@ fn render(op: &Operand) -> String {
     }
 }
 
-/// Fold `op` down to a constant global it provably aliases at offset 0:
-/// follows plain copies, zero-offset `gep`s, constant-condition
-/// `select`s (where the condition may itself be a consistently-bound
-/// integer parameter), and parameters bound by every caller (`params`).
+/// Fold `op` down to a constant global it provably aliases at a
+/// constant byte offset, returned as `(global, offset)`: follows plain
+/// copies, constant-offset `gep`s (offsets accumulate along the chain),
+/// constant-condition `select`s (where the condition may itself be a
+/// consistently-bound integer parameter), and parameters bound by every
+/// caller (`params`).
 fn fold_operand(
     m: &Module,
     defs: &HashMap<String, Instr>,
     params: &HashMap<String, Binding>,
     op: &Operand,
     depth: usize,
-) -> Option<String> {
+) -> Option<(String, u64)> {
     if depth > 32 {
         return None;
     }
     match op {
-        Operand::Global(g) if m.globals.get(g).is_some_and(|gl| gl.constant) => Some(g.clone()),
+        Operand::Global(g) if m.globals.get(g).is_some_and(|gl| gl.constant) => {
+            Some((g.clone(), 0))
+        }
         Operand::Var(v) => match defs.get(v) {
             Some(Instr::Assign { expr, .. }) => match expr {
                 Expr::Op(inner) => fold_operand(m, defs, params, inner, depth + 1),
-                Expr::Gep(base, off) if fold_const_int(defs, params, off, 0) == Some(0) => {
-                    fold_operand(m, defs, params, base, depth + 1)
+                Expr::Gep(base, off) => {
+                    let k = fold_const_int(defs, params, off, 0)?;
+                    if k < 0 {
+                        return None;
+                    }
+                    let (g, k0) = fold_operand(m, defs, params, base, depth + 1)?;
+                    Some((g, k0 + k as u64))
                 }
                 Expr::Select(c, a, b) => {
                     let cv = fold_const_int(defs, params, c, 0)?;
@@ -294,7 +350,7 @@ fn fold_operand(
             // No local definition: a parameter — foldable when every
             // caller binds it to the same constant global.
             None => match params.get(v) {
-                Some(Binding::Global(g)) => Some(g.clone()),
+                Some(Binding::Global(g)) => Some((g.clone(), 0)),
                 _ => None,
             },
         },
@@ -524,6 +580,74 @@ func @main() -> i64 {
         // local chain may fold.
         let (_, report) = fold(src);
         assert_eq!(report.count(), 0, "{:?}", report.folded);
+    }
+
+    #[test]
+    fn constant_nonzero_gep_offset_synthesizes_a_suffix_global() {
+        let src = r#"
+global @fmt const 8 "##x=%d\n"
+
+func @main() -> i64 {
+  %p = gep @fmt, 2
+  call printf(%p, 7)
+  return 0
+}
+"#;
+        let (m, report) = fold(src);
+        assert_eq!(report.count(), 1, "{:?}", report.folded);
+        assert_eq!(
+            fmt_arg_of_call(&m, "main", "printf", 0),
+            Operand::Global("fmt__sfx2".into())
+        );
+        let sfx = &m.globals["fmt__sfx2"];
+        assert!(sfx.constant);
+        assert_eq!(sfx.size, 6);
+        assert_eq!(sfx.init, m.globals["fmt"].init[2..].to_vec(), "tail bytes from offset 2");
+        // Re-running the pass is a no-op: the operand is a direct
+        // global now, and the synthesized name is reused, not doubled.
+        let mut m2 = m.clone();
+        let report2 = run(&mut m2);
+        assert_eq!(report2.count(), 0);
+        assert_eq!(m2, m);
+    }
+
+    #[test]
+    fn gep_offsets_accumulate_along_the_chain() {
+        let src = r#"
+global @fmt const 8 "##x=%d\n"
+
+func @main() -> i64 {
+  %a = gep @fmt, 1
+  %b = gep %a, 1
+  call printf(%b, 7)
+  return 0
+}
+"#;
+        let (m, report) = fold(src);
+        assert_eq!(report.count(), 1, "{:?}", report.folded);
+        assert_eq!(
+            fmt_arg_of_call(&m, "main", "printf", 0),
+            Operand::Global("fmt__sfx2".into())
+        );
+        assert_eq!(m.globals["fmt__sfx2"].size, 6);
+    }
+
+    #[test]
+    fn out_of_range_or_dynamic_gep_offset_does_not_fold() {
+        let src = r#"
+global @fmt const 6 "x=%d\n"
+
+func @main(%argc: i64) -> i64 {
+  %p = gep @fmt, 64
+  call printf(%p, 1)
+  %q = gep @fmt, %argc
+  call printf(%q, 2)
+  return 0
+}
+"#;
+        let (m, report) = fold(src);
+        assert_eq!(report.count(), 0, "{:?}", report.folded);
+        assert!(!m.globals.contains_key("fmt__sfx64"), "no out-of-range suffix synthesized");
     }
 
     #[test]

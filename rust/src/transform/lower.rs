@@ -15,15 +15,16 @@
 //! per-function pool; [`crate::ir::interp::ProgramEnv`] resolves
 //! `PoolConst::Global` entries to device base addresses once at load.
 //!
-//! Not everything lowers. A function stays on the tree-walk path (with
-//! the reason in [`LowerReport::skipped`]) when it carries an RPC ref
-//! with a dynamic offset — the tree-walk arm treats that as
-//! unreachable, so the lowered form refuses rather than guessing — or
-//! a `launch` whose region parameters are not all visible in the
-//! caller's scope (the tree-walk executor reads them back by name at
-//! launch time; lowering must resolve that lookup statically).
+//! Almost everything lowers. The one remaining skip reason (recorded
+//! in [`LowerReport::skipped`]) is a `launch` whose region parameters
+//! are not all visible in the caller's scope (the tree-walk executor
+//! reads them back by name at launch time; lowering must resolve that
+//! lookup statically). Dynamic-offset RPC refs lower to
+//! [`crate::ir::lowered::LowOffset::Dynamic`] — the offset is
+//! recomputed at marshal time from the runtime object lookup, so those
+//! functions no longer stay on the tree-walk executor.
 
-use crate::ir::lowered::{LowExpr, LowInstr, LowOp, LowRpcArg, LoweredFunction, PoolConst};
+use crate::ir::lowered::{LowExpr, LowInstr, LowOffset, LowOp, LowRpcArg, LoweredFunction, PoolConst};
 use crate::ir::{Expr, Function, Instr, Module, OffsetSpec, Operand, RpcArgSpec};
 use std::collections::{BTreeMap, HashMap};
 
@@ -214,12 +215,11 @@ impl Lowerer<'_> {
         Ok(match a {
             RpcArgSpec::Val(o) => LowRpcArg::Val(self.op(o)?),
             RpcArgSpec::Ref { ptr, mode, obj_size, offset } => {
-                let OffsetSpec::Const(off) = offset else {
-                    // The tree-walk arm treats a dynamic Ref offset as
-                    // unreachable; refuse to lower rather than guess.
-                    return Err("RPC ref with dynamic offset".into());
+                let offset = match offset {
+                    OffsetSpec::Const(off) => LowOffset::Const(*off),
+                    OffsetSpec::Dynamic => LowOffset::Dynamic,
                 };
-                LowRpcArg::Ref { ptr: self.op(ptr)?, mode: *mode, obj_size: *obj_size, offset: *off }
+                LowRpcArg::Ref { ptr: self.op(ptr)?, mode: *mode, obj_size: *obj_size, offset }
             }
             RpcArgSpec::MultiRef { ptr, candidates } => LowRpcArg::MultiRef {
                 ptr: self.op(ptr)?,
@@ -378,7 +378,10 @@ func @main() -> i64 {
     }
 
     #[test]
-    fn dynamic_ref_offset_skips_the_function() {
+    fn dynamic_ref_offset_lowers() {
+        // A dynamic-offset Ref used to pin the whole function to the
+        // tree-walk executor; it now lowers carrying LowOffset::Dynamic
+        // for the marshal-time object lookup.
         let mut m = parse_module("func @main() -> i64 {\n  %p = alloca 8\n  return 0\n}\n").unwrap();
         let f = m.functions.get_mut("main").unwrap();
         f.body.insert(
@@ -389,17 +392,24 @@ func @main() -> i64 {
                 callee_id: 7,
                 args: vec![RpcArgSpec::Ref {
                     ptr: Operand::var("p"),
-                    mode: ArgMode::In,
+                    mode: ArgMode::Read,
                     obj_size: 8,
                     offset: OffsetSpec::Dynamic,
                 }],
             },
         );
         let report = run(&mut m);
-        assert_eq!(report.lowered_fns, 0);
-        assert_eq!(report.skipped.len(), 1);
-        assert!(report.skipped[0].1.contains("dynamic offset"), "{:?}", report.skipped);
-        assert!(m.lowered.is_empty());
+        assert_eq!(report.lowered_fns, 1);
+        assert!(report.skipped.is_empty(), "{:?}", report.skipped);
+        let body = &m.lowered["main"].body;
+        let has_dyn = body.iter().any(|i| {
+            matches!(
+                i,
+                LowInstr::RpcCall { args, .. }
+                    if matches!(args[0], LowRpcArg::Ref { offset: LowOffset::Dynamic, .. })
+            )
+        });
+        assert!(has_dyn, "ref lowers with a dynamic offset: {body:?}");
     }
 
     #[test]

@@ -21,23 +21,29 @@
 //!   per-function constant pool instead of string-keyed lookups.
 //! * [`fuse`] — folds adjacent lowered pairs (cmp+br, gep+load,
 //!   gep+store, bin+store) into superinstructions.
+//! * [`bytecode`] — flattens each lowered function into the linear
+//!   bytecode form ([`crate::ir::bytecode`]): one contiguous op array
+//!   with resolved pc branches, executed by the interpreter's flat
+//!   `pc`-loop dispatch.
 //! * [`pm`] — the pass manager: the [`pm::Pass`] trait, the shared
 //!   [`pm::AnalysisCache`], pipeline specs (`--passes` /
 //!   `GPU_FIRST_PASSES`) and per-pass timing.
 //! * [`pipeline`] — the "LTO pass pipeline" façade: verify → constfold
-//!   → dce → libcres → rpcgen → multiteam → lower → fuse → verify,
-//!   i.e. what the paper's augmented compiler driver runs.
+//!   → dce → libcres → rpcgen → multiteam → lower → fuse → bytecode →
+//!   verify, i.e. what the paper's augmented compiler driver runs.
 
 pub mod constfold;
 pub mod dce;
 pub mod fuse;
 pub mod lower;
+pub mod bytecode;
 pub mod rpcgen;
 pub mod multiteam;
 pub mod libcres;
 pub mod pm;
 pub mod pipeline;
 
+pub use bytecode::BytecodeReport;
 pub use constfold::ConstFoldReport;
 pub use dce::DceReport;
 pub use fuse::FuseReport;

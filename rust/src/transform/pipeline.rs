@@ -7,10 +7,12 @@
 //! or from an explicit [`PipelineSpec`](super::pm::PipelineSpec)
 //! (`--passes` / `GPU_FIRST_PASSES`). The default pipeline is
 //! `verify → constfold → dce → libcres → rpcgen → multiteam → lower →
-//! fuse → verify`; its tree-transforming prefix is behaviorally
-//! identical to the pre-refactor fixed sequence, and the `lower`/`fuse`
-//! tail produces the register-file sidecar the interpreter prefers.
+//! fuse → bytecode → verify`; its tree-transforming prefix is
+//! behaviorally identical to the pre-refactor fixed sequence, and the
+//! `lower`/`fuse`/`bytecode` tail produces the sidecar execution forms
+//! (register file, then linear bytecode) the interpreter prefers.
 
+use super::bytecode::BytecodeReport;
 use super::constfold::ConstFoldReport;
 use super::dce::DceReport;
 use super::fuse::FuseReport;
@@ -46,6 +48,10 @@ pub struct CompileOptions {
     /// Fold adjacent lowered pairs (cmp+br, gep+load, gep+store,
     /// bin+store) into superinstructions.
     pub fuse: bool,
+    /// Flatten lowered functions into the linear bytecode the
+    /// interpreter prefers over the register core (flat pc-loop
+    /// dispatch, batched team stepping). Off = register-core execution.
+    pub bytecode: bool,
 }
 
 impl Default for CompileOptions {
@@ -58,6 +64,7 @@ impl Default for CompileOptions {
             multiteam: true,
             lower: true,
             fuse: true,
+            bytecode: true,
         }
     }
 }
@@ -75,6 +82,8 @@ pub struct CompileReport {
     pub lower: LowerReport,
     /// Superinstruction fusion counts per pair kind.
     pub fuse: FuseReport,
+    /// Linear-bytecode flattening counts (functions, ops, sites).
+    pub bytecode: BytecodeReport,
     /// The `libcres` table (empty when the pass did not run).
     pub resolution: ResolutionTable,
     /// Executed pass names in order.
@@ -112,7 +121,7 @@ impl CompileReport {
 
 /// Compile with the pipeline [`CompileOptions`] selects (the default:
 /// verify → constfold → dce → libcres → rpcgen → multiteam → lower →
-/// fuse → verify).
+/// fuse → bytecode → verify).
 pub fn compile(
     m: &mut Module,
     registry: &WrapperRegistry,
@@ -167,14 +176,17 @@ func @main() -> i64 {
         // The pass-manager surface: executed passes, timings, resolution.
         assert_eq!(
             report.pipeline,
-            vec!["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse"]
+            vec!["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse", "bytecode"]
         );
-        assert_eq!(report.timings.len(), 7);
+        assert_eq!(report.timings.len(), 8);
         assert!(report.total_pass_ns() >= 0.0);
         assert!(report.resolution.host_kind("printf").is_some());
-        // The register-file sidecar exists for every surviving function.
+        // The register-file and bytecode sidecars exist for every
+        // surviving function.
         assert_eq!(report.lower.lowered_fns as usize, m.functions.len());
         assert!(m.lowered.contains_key("main"));
+        assert_eq!(report.bytecode.bytecode_fns, report.lower.lowered_fns);
+        assert!(m.bytecode.contains_key("main"));
         // The AOT coverage check verified the rewritten site's pads.
         assert_eq!(report.pad_coverage.sites, 1);
         assert!(report.pad_coverage.missing.is_empty());
@@ -195,6 +207,7 @@ func @main() -> i64 {
                 multiteam: false,
                 lower: false,
                 fuse: false,
+                bytecode: false,
             },
         )
         .unwrap();

@@ -19,15 +19,16 @@
 //!   recording per-pass wall time and summaries, and verifies again.
 //!
 //! The default pipeline is `constfold → dce → libcres → rpcgen →
-//! multiteam → lower → fuse`; its tree-transforming prefix is
-//! behaviorally identical to the historical fixed sequence (proved by
-//! the `pass_manager` equivalence suite), and the `lower`/`fuse` tail
-//! only produces the sidecar register-file form the interpreter
-//! prefers (proved equivalent by `tests/lowering.rs`).
+//! multiteam → lower → fuse → bytecode`; its tree-transforming prefix
+//! is behaviorally identical to the historical fixed sequence (proved
+//! by the `pass_manager` equivalence suite), and the
+//! `lower`/`fuse`/`bytecode` tail only produces the sidecar execution
+//! forms (register file, then linear bytecode) the interpreter prefers
+//! (proved equivalent by `tests/lowering.rs`).
 
 use super::libcres::ResolutionTable;
 use super::pipeline::{CompileOptions, CompileReport};
-use super::{constfold, dce, fuse, libcres, lower, multiteam, rpcgen};
+use super::{bytecode, constfold, dce, fuse, libcres, lower, multiteam, rpcgen};
 use crate::analysis::callgraph::{walk, CallGraph};
 use crate::analysis::objects::def_map;
 use crate::ir::{Instr, Module};
@@ -37,7 +38,7 @@ use std::collections::HashMap;
 
 /// The pass names the manager knows, in default pipeline order.
 pub const KNOWN_PASSES: &[&str] =
-    &["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse"];
+    &["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse", "bytecode"];
 
 /// What one pass invocation reports back to the manager.
 #[derive(Debug, Clone)]
@@ -154,7 +155,7 @@ pub struct PipelineSpec {
 
 impl Default for PipelineSpec {
     /// The full default pipeline: `constfold → dce → libcres → rpcgen →
-    /// multiteam → lower → fuse`.
+    /// multiteam → lower → fuse → bytecode`.
     fn default() -> Self {
         Self { names: KNOWN_PASSES.to_vec() }
     }
@@ -215,6 +216,9 @@ impl PipelineSpec {
         if opts.fuse {
             names.push("fuse");
         }
+        if opts.bytecode {
+            names.push("bytecode");
+        }
         Self { names }
     }
 
@@ -253,6 +257,7 @@ fn make_pass(name: &str) -> Option<Box<dyn Pass>> {
         "multiteam" => Some(Box::new(MultiTeamPass)),
         "lower" => Some(Box::new(LowerPass)),
         "fuse" => Some(Box::new(FusePass)),
+        "bytecode" => Some(Box::new(BytecodePass)),
         _ => None,
     }
 }
@@ -301,12 +306,14 @@ impl PassManager {
             let outcome = pass.run(m, &mut cx)?;
             if outcome.changed {
                 cx.cache.invalidate();
-                // A tree-mutating pass makes any existing lowering
-                // stale; drop it so the interpreter can never execute a
-                // lowered body that disagrees with the tree (matters
-                // only for explicit specs that order `lower` early).
-                if !matches!(pass.name(), "lower" | "fuse") {
+                // A tree-mutating pass makes any existing lowering (and
+                // its bytecode flattening) stale; drop both so the
+                // interpreter can never execute a sidecar form that
+                // disagrees with the tree (matters only for explicit
+                // specs that order `lower`/`bytecode` early).
+                if !matches!(pass.name(), "lower" | "fuse" | "bytecode") {
                     m.lowered.clear();
+                    m.bytecode.clear();
                 }
             }
             cx.report.pipeline.push(pass.name().to_string());
@@ -557,6 +564,10 @@ impl Pass for LowerPass {
 
     fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
         let report = lower::run(m);
+        // The bytecode (if any) was flattened from the *previous*
+        // lowered map; drop it rather than let it drift (an explicit
+        // spec may order `bytecode` before `lower`).
+        m.bytecode.clear();
         let summary = report.summary();
         cx.report.lower = report;
         Ok(PassOutcome { summary, changed: false })
@@ -574,8 +585,30 @@ impl Pass for FusePass {
 
     fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
         let report = fuse::run(m);
+        // Fusion rewrites the lowered forms the bytecode was flattened
+        // from; drop any stale flattening (only reachable via explicit
+        // specs that order `bytecode` before `fuse`).
+        m.bytecode.clear();
         let summary = report.summary();
         cx.report.fuse = report;
+        Ok(PassOutcome { summary, changed: false })
+    }
+}
+
+/// Flattens every lowered function into the linear bytecode the
+/// interpreter prefers over the register core (see [`bytecode`]).
+/// Also `changed: false`: only the sidecar is written.
+struct BytecodePass;
+
+impl Pass for BytecodePass {
+    fn name(&self) -> &'static str {
+        "bytecode"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let report = bytecode::run(m);
+        let summary = report.summary();
+        cx.report.bytecode = report;
         Ok(PassOutcome { summary, changed: false })
     }
 }
@@ -723,12 +756,14 @@ func @main() -> i64 {
             multiteam: false,
             lower: false,
             fuse: false,
+            bytecode: false,
         };
         assert_eq!(PipelineSpec::from_options(opts).names(), &["libcres", "rpcgen"]);
         let with_fold = CompileOptions {
             multiteam: false,
             lower: false,
             fuse: false,
+            bytecode: false,
             ..CompileOptions::default()
         };
         assert_eq!(
@@ -743,6 +778,7 @@ func @main() -> i64 {
             multiteam: false,
             lower: false,
             fuse: false,
+            bytecode: false,
         };
         assert!(PipelineSpec::from_options(none).names().is_empty());
         assert_eq!(PipelineSpec::from_options(CompileOptions::default()), PipelineSpec::default());
@@ -754,7 +790,7 @@ func @main() -> i64 {
         let reg = WrapperRegistry::new();
         let report = PassManager::from_spec(&PipelineSpec::default()).run(&mut m, &reg).unwrap();
         assert_eq!(report.pipeline, KNOWN_PASSES.to_vec());
-        assert_eq!(report.timings.len(), 7);
+        assert_eq!(report.timings.len(), 8);
         for t in &report.timings {
             assert!(t.wall_ns >= 0.0);
             assert!(!t.summary.is_empty());
@@ -766,7 +802,14 @@ func @main() -> i64 {
         assert!(report.timings[4].changed, "multiteam expanded the region");
         assert!(!report.timings[5].changed, "lower only writes the sidecar");
         assert!(!report.timings[6].changed, "fuse only rewrites the sidecar");
+        assert!(!report.timings[7].changed, "bytecode only writes the sidecar");
         assert!(report.lower.lowered_fns >= 1, "{:?}", report.lower);
+        assert_eq!(
+            report.bytecode.bytecode_fns, report.lower.lowered_fns,
+            "every lowered function flattens: {:?}",
+            report.bytecode
+        );
+        assert_eq!(m.bytecode.len(), m.lowered.len());
         // The AOT coverage check verified the generated site's pads.
         assert_eq!(report.pad_coverage.sites, 1);
         assert_eq!(report.pad_coverage.scalar_pads, 1);

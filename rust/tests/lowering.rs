@@ -1,26 +1,40 @@
-//! Tree-walk ↔ register-core equivalence corpus.
+//! Three-executor equivalence corpus: tree-walk ↔ register core ↔
+//! linear bytecode.
 //!
-//! The `lower` pass makes the register-file executor the default
-//! execution path; this suite is the proof obligation that came with
-//! it. Every corpus program — loops with fusable gep/load/store
-//! chains, nested control flow, recursion, parallel regions with
-//! barriers, host RPC I/O — runs under three pipelines:
+//! The `lower` pass made the register-file executor the default
+//! execution path, and the `bytecode` pass now flattens every lowered
+//! function into a linear instruction stream that the flat pc-loop
+//! interpreter dispatches. This suite is the proof obligation that
+//! came with both tiers. Every corpus program — loops with fusable
+//! gep/load/store chains, nested control flow, recursion, parallel
+//! regions with barriers, host RPC I/O, and a dynamic-offset RPC ref
+//! that used to pin its function to the tree walk — runs under four
+//! pipelines:
 //!
 //! * **no-lower** (`constfold,dce,libcres,rpcgen,multiteam`): the
 //!   tree-walk executor, the pre-register-core behaviour (and CI's
 //!   no-lower pass-shape leg);
 //! * **lower** (… + `lower`): the register core, unfused;
-//! * **default** (… + `lower,fuse`): the register core with
-//!   superinstructions.
+//! * **no-bytecode** (… + `lower,fuse`): the register core with
+//!   superinstructions (CI's `--no-bytecode` fallback leg);
+//! * **default** (… + `lower,fuse,bytecode`): the linear bytecode
+//!   tier, batched per-team stepping inside parallel regions.
 //!
-//! All three must agree on exit code, stdout, and the modeled device
+//! All four must agree on exit code, stdout, and the modeled device
 //! counters (`int_ops`, `flops_f64` — a superinstruction charges both
-//! of its component instructions, so fusion is invisible to modeled
-//! time), at the paper's 1×1×1×1 engine shape **and** at a wide
-//! multi-lane shape.
+//! of its component instructions and the zero-cost flattening
+//! artifacts charge nothing, so neither fusion nor flattening is
+//! visible in modeled time), at the paper's narrow engine shape
+//! **and** at a wide multi-lane shape.
+//!
+//! A second pair of tests covers the bytecode wire format: encode →
+//! decode must be the identity (and the decoded stream must execute
+//! identically), while truncated or corrupted streams must be
+//! rejected by the validating loader.
 
 use gpu_first::coordinator::{Config, GpuFirstSession, RunMetrics};
 use gpu_first::gpu::memory::MemConfig;
+use gpu_first::ir::bytecode::{deserialize, serialize};
 use gpu_first::ir::parser::parse_module;
 use gpu_first::transform::PipelineSpec;
 
@@ -167,6 +181,30 @@ func @main() -> i64 {
         files: &[("n.txt", b"123")],
         fusable: true,
     },
+    Program {
+        // The offset into @text is loaded at runtime, so rpcgen can
+        // only classify the %s ref as object-known / offset-dynamic.
+        // Such refs used to land the whole function on the lowering
+        // skip list; they now lower (and flatten) with a marshal-time
+        // object lookup, so this program must agree across all three
+        // executors like any other.
+        name: "dynamic_offset_rpc",
+        src: r#"
+global @text const 12 "abcdefghijk"
+global @fmt const 6 "s=%s\n"
+
+func @main() -> i64 {
+  %ip = alloca 8
+  store.8 4, %ip
+  %off = load.8 %ip
+  %p = gep @text, %off
+  call printf(@fmt, %p)
+  return %off
+}
+"#,
+        files: &[],
+        fusable: false,
+    },
 ];
 
 fn config(wide: bool) -> Config {
@@ -207,48 +245,79 @@ fn lower_only() -> PipelineSpec {
     PipelineSpec::parse("constfold,dce,libcres,rpcgen,multiteam,lower").unwrap()
 }
 
+fn no_bytecode() -> PipelineSpec {
+    PipelineSpec::parse("constfold,dce,libcres,rpcgen,multiteam,lower,fuse").unwrap()
+}
+
 #[test]
-fn register_core_matches_tree_walk_across_the_corpus() {
+fn three_executors_match_across_the_corpus() {
     for p in CORPUS {
         for wide in [false, true] {
             let (exit_t, out_t, m_t) = run_with(p, &no_lower(), wide);
             let (exit_l, out_l, m_l) = run_with(p, &lower_only(), wide);
-            let (exit_f, out_f, m_f) = run_with(p, &PipelineSpec::default(), wide);
+            let (exit_r, out_r, m_r) = run_with(p, &no_bytecode(), wide);
+            let (exit_b, out_b, m_b) = run_with(p, &PipelineSpec::default(), wide);
 
             assert_eq!(exit_t, exit_l, "{} (wide={wide}): exit, tree vs lowered", p.name);
-            assert_eq!(exit_t, exit_f, "{} (wide={wide}): exit, tree vs fused", p.name);
+            assert_eq!(exit_t, exit_r, "{} (wide={wide}): exit, tree vs fused", p.name);
+            assert_eq!(exit_t, exit_b, "{} (wide={wide}): exit, tree vs bytecode", p.name);
             assert_eq!(out_t, out_l, "{} (wide={wide}): stdout, tree vs lowered", p.name);
-            assert_eq!(out_t, out_f, "{} (wide={wide}): stdout, tree vs fused", p.name);
+            assert_eq!(out_t, out_r, "{} (wide={wide}): stdout, tree vs fused", p.name);
+            assert_eq!(out_t, out_b, "{} (wide={wide}): stdout, tree vs bytecode", p.name);
 
             // The executors mirror the device counters exactly (a
-            // superinstruction charges both component instructions).
+            // superinstruction charges both component instructions,
+            // flattening artifacts — jumps, loop bookkeeping — charge
+            // nothing).
             assert_eq!(
                 m_t.main_stats.int_ops, m_l.main_stats.int_ops,
                 "{} (wide={wide}): int_ops, tree vs lowered",
                 p.name
             );
             assert_eq!(
-                m_t.main_stats.int_ops, m_f.main_stats.int_ops,
+                m_t.main_stats.int_ops, m_r.main_stats.int_ops,
                 "{} (wide={wide}): int_ops, tree vs fused",
                 p.name
             );
             assert_eq!(
-                m_t.main_stats.flops_f64, m_f.main_stats.flops_f64,
+                m_t.main_stats.int_ops, m_b.main_stats.int_ops,
+                "{} (wide={wide}): int_ops, tree vs bytecode",
+                p.name
+            );
+            assert_eq!(
+                m_t.main_stats.flops_f64, m_r.main_stats.flops_f64,
                 "{} (wide={wide}): flops, tree vs fused",
                 p.name
             );
-            assert_eq!(m_t.kernel_launches, m_f.kernel_launches, "{} (wide={wide})", p.name);
-            assert_eq!(m_t.unresolved_calls, m_f.unresolved_calls, "{} (wide={wide})", p.name);
+            assert_eq!(
+                m_t.main_stats.flops_f64, m_b.main_stats.flops_f64,
+                "{} (wide={wide}): flops, tree vs bytecode",
+                p.name
+            );
+            assert_eq!(m_t.kernel_launches, m_r.kernel_launches, "{} (wide={wide})", p.name);
+            assert_eq!(m_t.kernel_launches, m_b.kernel_launches, "{} (wide={wide})", p.name);
+            assert_eq!(m_t.unresolved_calls, m_r.unresolved_calls, "{} (wide={wide})", p.name);
+            assert_eq!(m_t.unresolved_calls, m_b.unresolved_calls, "{} (wide={wide})", p.name);
 
             // Which executor actually ran is visible in the metrics.
             assert_eq!(m_t.lowered_fns, 0, "{}: no-lower leg stays tree-walk", p.name);
             assert_eq!(m_t.fused_instrs, 0, "{}", p.name);
+            assert_eq!(m_t.bytecode_fns, 0, "{}", p.name);
             assert!(m_l.lowered_fns > 0, "{}: lowered leg uses the register core", p.name);
             assert_eq!(m_l.fused_instrs, 0, "{}: no fuse pass, no pairs", p.name);
-            assert!(m_f.lowered_fns > 0, "{}", p.name);
+            assert_eq!(m_l.bytecode_fns, 0, "{}: no bytecode pass", p.name);
+            assert!(m_r.lowered_fns > 0, "{}", p.name);
+            assert_eq!(m_r.bytecode_fns, 0, "{}: --no-bytecode leg stays on registers", p.name);
+            assert!(m_b.bytecode_fns > 0, "{}: default leg runs linear bytecode", p.name);
+            // Superinstruction fusion carries through flattening.
+            assert_eq!(
+                m_r.fused_instrs, m_b.fused_instrs,
+                "{}: fusion is identical with and without bytecode",
+                p.name
+            );
             if p.fusable {
                 assert!(
-                    m_f.fused_instrs > 0,
+                    m_r.fused_instrs > 0,
                     "{}: fusable corpus must produce superinstructions",
                     p.name
                 );
@@ -258,12 +327,90 @@ fn register_core_matches_tree_walk_across_the_corpus() {
 }
 
 #[test]
-fn default_pipeline_runs_the_register_core() {
-    // The register core is the *default* execution path: an unqualified
-    // default-spec run must report lowered functions.
+fn default_pipeline_runs_the_bytecode_tier() {
+    // Linear bytecode is the *default* execution path: an unqualified
+    // default-spec run must report lowered, fused AND flattened
+    // functions.
     let p = &CORPUS[0];
     let (_, _, m) = run_with(p, &PipelineSpec::default(), false);
     assert!(m.lowered_fns > 0, "default pipeline must lower: {}", m.summary());
     assert!(m.fused_instrs > 0, "default pipeline must fuse: {}", m.summary());
-    assert!(m.summary().contains("register_core"), "{}", m.summary());
+    assert!(m.bytecode_fns > 0, "default pipeline must flatten: {}", m.summary());
+    assert!(m.summary().contains("bytecode fns"), "{}", m.summary());
+}
+
+#[test]
+fn bytecode_round_trip_preserves_execution() {
+    // encode → decode is the identity, and a module whose bytecode was
+    // rebuilt from the wire format executes exactly like the original.
+    for p in CORPUS {
+        let (exit0, out0, m0) = run_with(p, &PipelineSpec::default(), false);
+
+        let mut module = parse_module(p.src).unwrap();
+        let mut s = GpuFirstSession::start(config(false));
+        for (path, content) in p.files {
+            s.host.put_file(path, content);
+        }
+        s.compile_spec(&mut module, &PipelineSpec::default()).unwrap();
+        assert!(!module.bytecode.is_empty(), "{}: default spec flattens", p.name);
+
+        let mut decoded = std::collections::BTreeMap::new();
+        for (name, bf) in &module.bytecode {
+            let bytes = serialize(bf);
+            let back = deserialize(&bytes)
+                .unwrap_or_else(|e| panic!("{}/{name}: decode failed: {e}", p.name));
+            assert_eq!(&back, bf, "{}/{name}: decode(encode(bf)) is the identity", p.name);
+            decoded.insert(name.clone(), back);
+        }
+        module.bytecode = decoded;
+
+        s.load(module);
+        let (exit, metrics) = s.run(&[]);
+        let out = s.host.stdout_string();
+        s.stop();
+
+        assert_eq!(exit, exit0, "{}: exit after round-trip", p.name);
+        assert_eq!(out, out0, "{}: stdout after round-trip", p.name);
+        assert_eq!(
+            metrics.main_stats.int_ops, m0.main_stats.int_ops,
+            "{}: int_ops after round-trip",
+            p.name
+        );
+        assert_eq!(
+            metrics.main_stats.flops_f64, m0.main_stats.flops_f64,
+            "{}: flops after round-trip",
+            p.name
+        );
+    }
+}
+
+#[test]
+fn truncated_and_corrupt_bytecode_is_rejected() {
+    let p = &CORPUS[0];
+    let mut module = parse_module(p.src).unwrap();
+    let mut s = GpuFirstSession::start(config(false));
+    s.compile_spec(&mut module, &PipelineSpec::default()).unwrap();
+    s.stop();
+
+    let bf = module.bytecode.get("main").expect("main flattens");
+    let bytes = serialize(bf);
+
+    // Every strict prefix is an incomplete stream: the loader must
+    // refuse all of them rather than silently decode a partial
+    // function.
+    for len in 0..bytes.len() {
+        assert!(
+            deserialize(&bytes[..len]).is_err(),
+            "prefix of {len}/{} bytes must be rejected",
+            bytes.len()
+        );
+    }
+    // Trailing garbage is rejected too — the stream is length-exact.
+    let mut padded = bytes.clone();
+    padded.push(0);
+    assert!(deserialize(&padded).is_err(), "trailing bytes must be rejected");
+    // A corrupted magic never decodes.
+    let mut bad_magic = bytes.clone();
+    bad_magic[0] ^= 0xff;
+    assert!(deserialize(&bad_magic).is_err(), "bad magic must be rejected");
 }

@@ -4,12 +4,14 @@
 //!   behaviorally identical to the historical fixed rpcgen→multiteam
 //!   sequence — same compiled module text, same execution output, same
 //!   key `RunMetrics` — over an app-shaped IR corpus. (The default
-//!   pipeline now ends in `lower,fuse`, so this equivalence also pins
-//!   the register-file executor against the legacy tree-walk runs.)
+//!   pipeline now ends in `lower,fuse,bytecode`, so this equivalence
+//!   also pins the linear-bytecode executor against the legacy
+//!   tree-walk runs.)
 //! * **Pass-shape matrix**: `GPU_FIRST_PASSES` (exported by CI's
-//!   pass-shape matrix job: default / no-libcres / no-multiteam /
-//!   no-lower / rpcgen-only) selects the pipeline the corpus re-runs
-//!   under; every shape must preserve program semantics.
+//!   pass-shape matrix job: default / no-bytecode / no-libcres /
+//!   no-multiteam / no-lower / rpcgen-only) selects the pipeline the
+//!   corpus re-runs under; every shape must preserve program
+//!   semantics.
 //! * **CLI**: `--passes` ordering, unknown-pass usage errors, and the
 //!   `--explain` resolution/timing output.
 
@@ -291,9 +293,9 @@ fn report_carries_timings_resolution_and_cache_counters() {
     let report = s.report.as_ref().unwrap();
     assert_eq!(
         report.pipeline,
-        vec!["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse"]
+        vec!["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse", "bytecode"]
     );
-    assert_eq!(report.timings.len(), 7);
+    assert_eq!(report.timings.len(), 8);
     assert_eq!(report.lower.lowered_fns as usize, module.functions.len());
     // libcres built the table once; rpcgen reused it from cache.
     assert_eq!(report.cache.resolution_builds, 1);
