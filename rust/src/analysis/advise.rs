@@ -1,0 +1,757 @@
+//! The compile-time offload advisor (OpenMP-Advisor direction).
+//!
+//! Walks every parallel region (pre-`multiteam` `parallel` blocks and
+//! post-`multiteam` kernel-region functions) and statically estimates
+//! its dynamic profile — instruction mix, memory traffic by coalescing
+//! class, trip counts, barrier events, and RPC pressure — purely from
+//! the IR, with **no execution**. Each region is then scored with both
+//! roofline machine models: [`crate::perfmodel::a100`] at grid scale
+//! versus [`crate::perfmodel::epyc`] at full-socket scale. Host-RPC
+//! callees are charged their full modeled round-trip on the device
+//! side; device-native callees their registry estimate
+//! ([`crate::libc_gpu::registry::DeviceFn::modeled_cost_ns`]). The
+//! result is a ranked [`AdviseReport`]: predicted speedup, dominant
+//! bottleneck, and blocking reasons per region — the paper's "guides
+//! porting efforts" promise made a compile artifact.
+//!
+//! Estimation is deliberately coarse and documented rather than exact:
+//! constant loop bounds give exact trip counts, unknown bounds assume
+//! [`AdviseParams::default_trips`] (and flag the region), `if` branches
+//! are weighted 50/50, and address coalescing is judged by a small
+//! affine-propagation lattice over the region's local defs (thread-
+//! linear → coalesced, sequential-linear → strided, uniform → strided,
+//! opaque → random). Rankings, not absolute times, are the contract.
+
+use std::collections::{BTreeMap, BTreeSet, HashMap};
+
+use super::resolution::{ResolutionTable, SymbolClass};
+use crate::gpu::stats::LaunchStats;
+use crate::ir::{Expr, Instr, Module, Operand, Schedule};
+use crate::libc_gpu::registry::DeviceFn;
+use crate::perfmodel::{a100, epyc};
+use crate::util::json::Json;
+use crate::util::{fmt_ns, fmt_ratio, table::Table};
+
+/// Machine assumptions the advisor scores against. Defaults mirror the
+/// paper's testbed shapes: a 256-team × 128-thread grid on the A100
+/// versus all 32 EPYC cores.
+#[derive(Debug, Clone, Copy)]
+pub struct AdviseParams {
+    pub teams: u64,
+    pub threads_per_team: u64,
+    pub cpu_threads: usize,
+    /// Trip count assumed for loops with non-constant bounds (regions
+    /// using it are flagged `trips_assumed`).
+    pub default_trips: u64,
+}
+
+impl Default for AdviseParams {
+    fn default() -> Self {
+        AdviseParams { teams: 256, threads_per_team: 128, cpu_threads: 32, default_trips: 128 }
+    }
+}
+
+/// Callee-recursion depth cap for static estimation.
+const MAX_CALL_DEPTH: usize = 8;
+/// Modeled host-side cost of a libc call when the region runs on the
+/// CPU (glibc fast path).
+const CPU_LIBC_CALL_NS: f64 = 20.0;
+/// Modeled host-side cost of an I/O-ish call (the host-RPC class) when
+/// the region runs on the CPU — a direct call, no round-trip.
+const CPU_HOST_CALL_NS: f64 = 500.0;
+
+/// Exact trip count of a `for` with constant bounds, if computable.
+pub(crate) fn const_trips(lo: &Operand, hi: &Operand, step: &Operand) -> Option<u64> {
+    match (lo, hi, step) {
+        (Operand::ConstI(lo), Operand::ConstI(hi), Operand::ConstI(step)) if *step > 0 => {
+            if hi <= lo {
+                Some(0)
+            } else {
+                Some(((hi - lo + step - 1) / step) as u64)
+            }
+        }
+        _ => None,
+    }
+}
+
+/// The advisor's verdict on one parallel region.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionAdvice {
+    /// Enclosing function (kernel-region functions advise themselves).
+    pub function: String,
+    /// `parallel#K` within the function, or `kernel` for an outlined
+    /// kernel-region function.
+    pub region: String,
+    /// Device threads the region is scored at.
+    pub threads: u64,
+    /// Static launch sites across the module (kernel regions; 1 for
+    /// in-function `parallel` blocks).
+    pub launches: u64,
+    /// Predicted A100-vs-EPYC speedup of one region execution (> 1
+    /// means offloading wins).
+    pub speedup: f64,
+    pub gpu_ns: f64,
+    pub cpu_ns: f64,
+    /// Dominant device-side cost: `compute` | `memory` | `sync` |
+    /// `launch` | `rpc` | `libc`.
+    pub bottleneck: &'static str,
+    /// Some loop bounds were non-constant; trip counts were assumed.
+    pub trips_assumed: bool,
+    pub rpc_calls: u64,
+    pub barriers: u64,
+    pub flops: u64,
+    pub int_ops: u64,
+    pub bytes: u64,
+    /// Reasons offloading is blocked or handicapped (unresolved
+    /// callees, RPC dominance, no work-shared loop).
+    pub blockers: Vec<String>,
+}
+
+impl RegionAdvice {
+    pub fn label(&self) -> String {
+        format!("@{} {}", self.function, self.region)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("function", Json::str(&self.function)),
+            ("region", Json::str(&self.region)),
+            ("threads", Json::uint(self.threads)),
+            ("launches", Json::uint(self.launches)),
+            ("speedup", Json::num(self.speedup)),
+            ("predicted_gpu_ns", Json::num(self.gpu_ns)),
+            ("predicted_cpu_ns", Json::num(self.cpu_ns)),
+            ("bottleneck", Json::str(self.bottleneck)),
+            ("trips_assumed", Json::bool(self.trips_assumed)),
+            ("rpc_calls", Json::uint(self.rpc_calls)),
+            ("barriers", Json::uint(self.barriers)),
+            ("flops", Json::uint(self.flops)),
+            ("int_ops", Json::uint(self.int_ops)),
+            ("bytes", Json::uint(self.bytes)),
+            (
+                "blockers",
+                Json::Arr(self.blockers.iter().map(|b| Json::str(b)).collect()),
+            ),
+        ])
+    }
+}
+
+/// The ranked advisor output: regions sorted by predicted speedup,
+/// best first (ties break on function, then region, so ranking is
+/// stable for a given module).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct AdviseReport {
+    pub regions: Vec<RegionAdvice>,
+}
+
+impl AdviseReport {
+    pub fn best(&self) -> Option<&RegionAdvice> {
+        self.regions.first()
+    }
+
+    /// One-line summary for pass reports.
+    pub fn summary(&self) -> String {
+        match self.best() {
+            None => "no parallel regions to advise".into(),
+            Some(b) => format!(
+                "{} region(s) scored; best {} at {} ({}-bound)",
+                self.regions.len(),
+                b.label(),
+                fmt_ratio(b.speedup),
+                b.bottleneck
+            ),
+        }
+    }
+
+    /// The ranked table for CLI output.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "offload advice (predicted A100 vs EPYC)",
+            &["#", "region", "speedup", "gpu", "cpu", "bottleneck", "rpc", "blockers"],
+        );
+        for (i, r) in self.regions.iter().enumerate() {
+            let mut flags = r.blockers.join("; ");
+            if r.trips_assumed {
+                if !flags.is_empty() {
+                    flags.push_str("; ");
+                }
+                flags.push_str("trips assumed");
+            }
+            if flags.is_empty() {
+                flags.push('-');
+            }
+            t.row(&[
+                (i + 1).to_string(),
+                r.label(),
+                fmt_ratio(r.speedup),
+                fmt_ns(r.gpu_ns),
+                fmt_ns(r.cpu_ns),
+                r.bottleneck.to_string(),
+                r.rpc_calls.to_string(),
+                flags,
+            ]);
+        }
+        t
+    }
+
+    /// One line per region (rank order), for `--explain`.
+    pub fn lines(&self) -> Vec<String> {
+        self.regions
+            .iter()
+            .enumerate()
+            .map(|(i, r)| {
+                format!(
+                    "#{:<2} {:<28} {:>8} gpu {:>10} cpu {:>10} {}-bound{}",
+                    i + 1,
+                    r.label(),
+                    fmt_ratio(r.speedup),
+                    fmt_ns(r.gpu_ns),
+                    fmt_ns(r.cpu_ns),
+                    r.bottleneck,
+                    if r.blockers.is_empty() {
+                        String::new()
+                    } else {
+                        format!("  [{}]", r.blockers.join("; "))
+                    }
+                )
+            })
+            .collect()
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.regions.iter().map(RegionAdvice::to_json).collect())
+    }
+}
+
+/// Address/value classification for the coalescing heuristic: what a
+/// local's value looks like across device threads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum VarKind {
+    /// Same value on every thread (constants, globals, broadcast).
+    Uniform,
+    /// Affine in the thread id or a work-shared induction variable —
+    /// consecutive threads touch consecutive addresses.
+    ThreadLinear,
+    /// Affine in a sequential loop's induction variable.
+    SeqLinear,
+    /// Anything else (loads, unknown params).
+    Opaque,
+}
+
+fn combine(a: VarKind, b: VarKind) -> VarKind {
+    use VarKind::*;
+    if a == ThreadLinear || b == ThreadLinear {
+        ThreadLinear
+    } else if a == SeqLinear || b == SeqLinear {
+        SeqLinear
+    } else if a == Uniform && b == Uniform {
+        Uniform
+    } else {
+        Opaque
+    }
+}
+
+fn operand_kind(env: &HashMap<String, VarKind>, o: &Operand) -> VarKind {
+    match o {
+        Operand::ConstI(_) | Operand::ConstF(_) | Operand::Global(_) => VarKind::Uniform,
+        Operand::Var(v) => env.get(v).copied().unwrap_or(VarKind::Opaque),
+    }
+}
+
+fn expr_kind(env: &HashMap<String, VarKind>, e: &Expr) -> VarKind {
+    match e {
+        Expr::Tid => VarKind::ThreadLinear,
+        Expr::NumThreads => VarKind::Uniform,
+        Expr::Op(o) | Expr::SiToFp(o) | Expr::FpToSi(o) => operand_kind(env, o),
+        Expr::Bin(_, a, b) | Expr::Gep(a, b) => combine(operand_kind(env, a), operand_kind(env, b)),
+        Expr::Select(_, a, b) => combine(operand_kind(env, a), operand_kind(env, b)),
+        Expr::Sqrt(_) | Expr::Exp(_) | Expr::Log(_) => VarKind::Opaque,
+    }
+}
+
+/// Static per-region profile accumulator (fractional: branch weighting
+/// and trip multipliers make counts non-integral).
+#[derive(Debug, Clone, Default)]
+struct Est {
+    flops_f64: f64,
+    int_ops: f64,
+    bytes_coalesced: f64,
+    bytes_strided: f64,
+    bytes_random: f64,
+    /// Region-wide barrier occurrences (events, not per-thread counts).
+    barrier_events: f64,
+    rpc_calls: f64,
+    /// Device-side charged RPC round-trip time.
+    rpc_ns: f64,
+    /// Device-side charged device-native libc time.
+    libc_ns: f64,
+    allocs: f64,
+    frees: f64,
+    /// Host-side direct-call cost of the same callees when the region
+    /// stays on the CPU.
+    cpu_call_ns: f64,
+    trips_assumed: bool,
+    has_work_shared: bool,
+    unresolved: BTreeSet<String>,
+}
+
+struct Walker<'a> {
+    m: &'a Module,
+    table: &'a ResolutionTable,
+    params: &'a AdviseParams,
+    visiting: Vec<String>,
+}
+
+impl<'a> Walker<'a> {
+    /// Accumulate the profile of `body` into `est`. `mult` is the total
+    /// dynamic execution count of this straight-line code across the
+    /// whole machine; `threads` the thread count of the enclosing
+    /// region (so `mult / threads` is the per-thread count — what a
+    /// barrier event or a work-shared loop's total trip budget scales
+    /// by).
+    fn est_body(
+        &mut self,
+        body: &'a [Instr],
+        mult: f64,
+        threads: f64,
+        env: &mut HashMap<String, VarKind>,
+        est: &mut Est,
+        depth: usize,
+    ) {
+        for ins in body {
+            match ins {
+                Instr::Assign { dst, expr } => {
+                    match expr {
+                        Expr::Bin(b, _, _) => {
+                            if b.is_float() {
+                                est.flops_f64 += mult;
+                            } else {
+                                est.int_ops += mult;
+                            }
+                        }
+                        Expr::Sqrt(_) => est.flops_f64 += 4.0 * mult,
+                        Expr::Exp(_) | Expr::Log(_) => est.flops_f64 += 8.0 * mult,
+                        Expr::Gep(..) | Expr::Select(..) | Expr::SiToFp(_) | Expr::FpToSi(_) => {
+                            est.int_ops += mult
+                        }
+                        // Register moves and id reads are free.
+                        Expr::Op(_) | Expr::Tid | Expr::NumThreads => {}
+                    }
+                    let k = expr_kind(env, expr);
+                    env.insert(dst.clone(), k);
+                }
+                Instr::Alloca { dst, .. } => {
+                    est.int_ops += mult;
+                    // Per-thread private memory interleaves well.
+                    env.insert(dst.clone(), VarKind::ThreadLinear);
+                }
+                Instr::Store { addr, width, .. } => {
+                    self.add_bytes(env, addr, f64::from(*width) * mult, est);
+                }
+                Instr::Load { dst, addr, width, .. } => {
+                    self.add_bytes(env, addr, f64::from(*width) * mult, est);
+                    env.insert(dst.clone(), VarKind::Opaque);
+                }
+                Instr::Barrier => est.barrier_events += mult / threads.max(1.0),
+                Instr::Call { callee, .. } => self.est_call(callee, mult, threads, est, depth),
+                Instr::Intrinsic { name, .. } => self.est_call(name, mult, threads, est, depth),
+                Instr::RpcCall { .. } => {
+                    est.rpc_calls += mult;
+                    est.rpc_ns += a100::RPC_TOTAL_NS * mult;
+                    est.cpu_call_ns += CPU_HOST_CALL_NS * mult;
+                }
+                Instr::KernelLaunch { .. } => {
+                    // A nested launch inside advised code: charge the
+                    // kernel-split round-trip (the launched region is
+                    // advised separately).
+                    est.rpc_ns += a100::KERNEL_SPLIT_RPC_NS * mult;
+                }
+                Instr::If { then_body, else_body, .. } => {
+                    est.int_ops += mult;
+                    // 50/50 branch weighting.
+                    self.est_body(then_body, mult * 0.5, threads, env, est, depth);
+                    self.est_body(else_body, mult * 0.5, threads, env, est, depth);
+                }
+                Instr::While { cond, body, .. } => {
+                    est.trips_assumed = true;
+                    let child = mult * self.params.default_trips as f64;
+                    est.int_ops += child;
+                    self.est_body(cond, child, threads, env, est, depth);
+                    self.est_body(body, child, threads, env, est, depth);
+                }
+                Instr::For { var, lo, hi, step, schedule, body } => {
+                    let trips = match const_trips(lo, hi, step) {
+                        Some(t) => t as f64,
+                        None => {
+                            est.trips_assumed = true;
+                            self.params.default_trips as f64
+                        }
+                    };
+                    let child = match schedule {
+                        Schedule::Seq => {
+                            env.insert(var.clone(), VarKind::SeqLinear);
+                            mult * trips
+                        }
+                        Schedule::Team | Schedule::Grid => {
+                            // Work-shared: `trips` total iterations are
+                            // distributed across the region's threads,
+                            // so the body runs `trips` times in total,
+                            // not `trips` per thread.
+                            est.has_work_shared = true;
+                            env.insert(var.clone(), VarKind::ThreadLinear);
+                            (mult / threads.max(1.0)) * trips
+                        }
+                    };
+                    est.int_ops += child;
+                    self.est_body(body, child, threads, env, est, depth);
+                }
+                Instr::Parallel { body, .. } => {
+                    // Only reachable through a callee of advised serial
+                    // code; treat as running at the advised grid shape.
+                    let t = (self.params.teams * self.params.threads_per_team) as f64;
+                    let mut inner_env = HashMap::new();
+                    self.est_body(body, mult * t, t, &mut inner_env, est, depth);
+                }
+                Instr::Return(_) => {}
+            }
+        }
+    }
+
+    fn add_bytes(
+        &self,
+        env: &HashMap<String, VarKind>,
+        addr: &Operand,
+        bytes: f64,
+        est: &mut Est,
+    ) {
+        match operand_kind(env, addr) {
+            VarKind::ThreadLinear => est.bytes_coalesced += bytes,
+            VarKind::SeqLinear | VarKind::Uniform => est.bytes_strided += bytes,
+            VarKind::Opaque => est.bytes_random += bytes,
+        }
+    }
+
+    fn est_call(&mut self, callee: &str, mult: f64, threads: f64, est: &mut Est, depth: usize) {
+        if let Some(f) = self.m.functions.get(callee) {
+            if depth >= MAX_CALL_DEPTH || self.visiting.iter().any(|v| v == callee) {
+                return; // recursion / depth cap: charge nothing further
+            }
+            self.visiting.push(callee.to_string());
+            let mut env = HashMap::new(); // params are opaque
+            self.est_body(&f.body, mult, threads, &mut env, est, depth + 1);
+            self.visiting.pop();
+            return;
+        }
+        match self.table.class_of(callee) {
+            Some(SymbolClass::Device(f)) => {
+                est.libc_ns += f.modeled_cost_ns() * mult;
+                est.cpu_call_ns += CPU_LIBC_CALL_NS * mult;
+                match f {
+                    DeviceFn::Malloc | DeviceFn::Realloc => est.allocs += mult,
+                    DeviceFn::Free => est.frees += mult,
+                    _ => {}
+                }
+            }
+            Some(SymbolClass::HostRpc(_)) => {
+                est.rpc_calls += mult;
+                est.rpc_ns += a100::RPC_TOTAL_NS * mult;
+                est.cpu_call_ns += CPU_HOST_CALL_NS * mult;
+            }
+            Some(SymbolClass::Unresolved) | None => {
+                est.unresolved.insert(callee.to_string());
+            }
+        }
+    }
+}
+
+/// Collect every `parallel` block in `body` in source order, keeping
+/// references (unlike [`super::callgraph::walk`], whose higher-ranked
+/// closure cannot return borrows). Nested `parallel` is a verify
+/// error, so blocks are not searched inside each other.
+fn collect_parallel<'a>(body: &'a [Instr], out: &mut Vec<(Option<&'a Operand>, &'a [Instr])>) {
+    for ins in body {
+        match ins {
+            Instr::Parallel { num_threads, body } => out.push((num_threads.as_ref(), body)),
+            Instr::If { then_body, else_body, .. } => {
+                collect_parallel(then_body, out);
+                collect_parallel(else_body, out);
+            }
+            Instr::While { cond, body, .. } => {
+                collect_parallel(cond, out);
+                collect_parallel(body, out);
+            }
+            Instr::For { body, .. } => collect_parallel(body, out),
+            _ => {}
+        }
+    }
+}
+
+/// Static launch-site counts per kernel region across the module.
+fn launch_counts(m: &Module) -> BTreeMap<String, u64> {
+    let mut counts = BTreeMap::new();
+    for f in m.functions.values() {
+        super::callgraph::walk(&f.body, &mut |ins| {
+            if let Instr::KernelLaunch { region, .. } = ins {
+                *counts.entry(region.clone()).or_insert(0) += 1;
+            }
+        });
+    }
+    counts
+}
+
+/// Score one region body and produce its advice record.
+fn score_region<'a>(
+    walker: &mut Walker<'a>,
+    function: &str,
+    region: String,
+    body: &'a [Instr],
+    threads: u64,
+    launches: u64,
+) -> RegionAdvice {
+    let mut est = Est::default();
+    let mut env = HashMap::new();
+    walker.est_body(body, threads as f64, threads as f64, &mut env, &mut est, 0);
+
+    let gs = LaunchStats {
+        flops_f64: est.flops_f64.round() as u64,
+        int_ops: est.int_ops.round() as u64,
+        bytes_coalesced: est.bytes_coalesced.round() as u64,
+        bytes_strided: est.bytes_strided.round() as u64,
+        bytes_random: est.bytes_random.round() as u64,
+        // Post-multiteam a region barrier is a cross-team barrier.
+        barriers_global: est.barrier_events.ceil() as u64,
+        allocs: est.allocs.round() as u64,
+        frees: est.frees.round() as u64,
+        rpc_calls: est.rpc_calls.round() as u64,
+        charged_ns_max: est.rpc_ns + est.libc_ns,
+        ..Default::default()
+    };
+
+    let mut gpu_mt = a100::device_time(&gs, threads, 1);
+    // The region itself reaches the device via one kernel-split RPC.
+    gpu_mt.overhead_ns += a100::KERNEL_SPLIT_RPC_NS;
+    let gpu_ns = gpu_mt.total_ns();
+
+    // On the CPU the same barriers are OpenMP barriers and the callee
+    // costs are direct host calls (charged separately below).
+    let cs = LaunchStats {
+        barriers_team: est.barrier_events.ceil() as u64,
+        barriers_global: 0,
+        charged_ns_max: 0.0,
+        rpc_calls: 0,
+        ..gs
+    };
+    let cpu_ns = epyc::cpu_time(&cs, walker.params.cpu_threads).total_ns() + est.cpu_call_ns;
+
+    let bottleneck = match gpu_mt.dominant() {
+        "charged" => {
+            if est.rpc_ns >= est.libc_ns {
+                "rpc"
+            } else {
+                "libc"
+            }
+        }
+        "overhead" => "launch",
+        other => other,
+    };
+
+    let mut blockers: Vec<String> = est
+        .unresolved
+        .iter()
+        .map(|n| format!("unresolved callee `{n}`"))
+        .collect();
+    if est.rpc_ns > 0.5 * gpu_ns {
+        blockers.push(format!(
+            "rpc-bound: {} host-RPC call(s) dominate the modeled device time",
+            est.rpc_calls.round() as u64
+        ));
+    }
+    if !est.has_work_shared {
+        blockers.push("no work-shared loop: iterations do not distribute across the grid".into());
+    }
+
+    RegionAdvice {
+        function: function.to_string(),
+        region,
+        threads,
+        launches,
+        speedup: if gpu_ns > 0.0 { cpu_ns / gpu_ns } else { 0.0 },
+        gpu_ns,
+        cpu_ns,
+        bottleneck,
+        trips_assumed: est.trips_assumed,
+        rpc_calls: est.rpc_calls.round() as u64,
+        barriers: est.barrier_events.ceil() as u64,
+        flops: gs.flops_f64,
+        int_ops: gs.int_ops,
+        bytes: gs.bytes_coalesced + gs.bytes_strided + gs.bytes_random,
+        blockers,
+    }
+}
+
+/// Run the advisor over `m` with the module's resolution table. Pure
+/// analysis: the module is not mutated and nothing executes.
+pub fn analyze(m: &Module, table: &ResolutionTable, params: &AdviseParams) -> AdviseReport {
+    let launches = launch_counts(m);
+    let mut report = AdviseReport::default();
+    let mut walker = Walker { m, table, params, visiting: Vec::new() };
+    let grid = params.teams * params.threads_per_team;
+
+    for f in m.functions.values() {
+        if f.is_kernel_region {
+            walker.visiting.push(f.name.clone());
+            let advice = score_region(
+                &mut walker,
+                &f.name,
+                "kernel".into(),
+                &f.body,
+                grid,
+                launches.get(&f.name).copied().unwrap_or(0).max(1),
+            );
+            walker.visiting.pop();
+            report.regions.push(advice);
+            continue;
+        }
+        // Pre-multiteam view: advise each `parallel` block in place.
+        let mut regions: Vec<(Option<&Operand>, &[Instr])> = Vec::new();
+        collect_parallel(&f.body, &mut regions);
+        walker.visiting.push(f.name.clone());
+        for (k, (num_threads, body)) in regions.into_iter().enumerate() {
+            let threads = match num_threads {
+                Some(Operand::ConstI(n)) if *n > 0 => (*n as u64).saturating_mul(params.teams),
+                _ => grid,
+            };
+            let advice = score_region(
+                &mut walker,
+                &f.name,
+                format!("parallel#{k}"),
+                body,
+                threads,
+                1,
+            );
+            report.regions.push(advice);
+        }
+        walker.visiting.pop();
+    }
+
+    report.regions.sort_by(|a, b| {
+        b.speedup
+            .partial_cmp(&a.speedup)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then_with(|| a.function.cmp(&b.function))
+            .then_with(|| a.region.cmp(&b.region))
+    });
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::resolution::resolve_module;
+    use crate::ir::parser::parse_module;
+
+    #[test]
+    fn const_trip_counts() {
+        let c = |v| Operand::ConstI(v);
+        assert_eq!(const_trips(&c(0), &c(10), &c(1)), Some(10));
+        assert_eq!(const_trips(&c(0), &c(10), &c(3)), Some(4));
+        assert_eq!(const_trips(&c(5), &c(5), &c(1)), Some(0));
+        assert_eq!(const_trips(&c(0), &c(10), &c(0)), None);
+        assert_eq!(const_trips(&Operand::var("n"), &c(10), &c(1)), None);
+    }
+
+    const TWO_REGIONS: &str = r#"
+global @fmt const 8 "%d\n"
+
+func @main() -> i64 {
+  parallel {
+    for.team %i = 0 to 65536 step 1 {
+      %x = sitofp %i
+      %y = fmul %x, %x
+      %z = fadd %y, %x
+    }
+  }
+  parallel {
+    for.team %j = 0 to 256 step 1 {
+      %p = gep @fmt, 0
+      call printf(%p, %j)
+    }
+  }
+  return 0
+}
+"#;
+
+    #[test]
+    fn compute_region_outranks_rpc_region() {
+        let m = parse_module(TWO_REGIONS).unwrap();
+        let table = resolve_module(&m);
+        let report = analyze(&m, &table, &AdviseParams::default());
+        assert_eq!(report.regions.len(), 2);
+        // The flop loop wins; the printf loop is RPC-bound and ranks last.
+        assert_eq!(report.regions[0].region, "parallel#0");
+        assert_eq!(report.regions[1].region, "parallel#1");
+        assert_eq!(report.regions[1].bottleneck, "rpc");
+        assert!(report.regions[1].rpc_calls > 0);
+        assert!(report.regions[0].speedup > report.regions[1].speedup);
+        assert!(report.regions[1].blockers.iter().any(|b| b.contains("rpc-bound")));
+        // Deterministic ranking.
+        let again = analyze(&m, &table, &AdviseParams::default());
+        let order: Vec<_> = report.regions.iter().map(RegionAdvice::label).collect();
+        let order2: Vec<_> = again.regions.iter().map(RegionAdvice::label).collect();
+        assert_eq!(order, order2);
+        assert!(report.summary().contains("2 region(s) scored"));
+    }
+
+    #[test]
+    fn serial_region_is_flagged() {
+        let src = r#"
+func @main() -> i64 {
+  parallel {
+    %a = add 1, 2
+  }
+  return 0
+}
+"#;
+        let m = parse_module(src).unwrap();
+        let table = resolve_module(&m);
+        let report = analyze(&m, &table, &AdviseParams::default());
+        assert_eq!(report.regions.len(), 1);
+        assert!(report.regions[0]
+            .blockers
+            .iter()
+            .any(|b| b.contains("no work-shared loop")));
+    }
+
+    #[test]
+    fn unknown_bounds_assume_trips_and_flag() {
+        let src = r#"
+func @main(%n: i64) -> i64 {
+  parallel {
+    for.team %i = 0 to %n step 1 {
+      %x = add %i, 1
+    }
+  }
+  return 0
+}
+"#;
+        let m = parse_module(src).unwrap();
+        let table = resolve_module(&m);
+        let report = analyze(&m, &table, &AdviseParams::default());
+        assert!(report.regions[0].trips_assumed);
+        assert!(report.regions[0].int_ops > 0);
+    }
+
+    #[test]
+    fn json_and_table_render() {
+        let m = parse_module(TWO_REGIONS).unwrap();
+        let table = resolve_module(&m);
+        let report = analyze(&m, &table, &AdviseParams::default());
+        let json = report.to_json().to_string();
+        for key in ["\"speedup\"", "\"bottleneck\"", "\"predicted_gpu_ns\"", "\"blockers\""] {
+            assert!(json.contains(key), "{key} missing from {json}");
+        }
+        let rendered = report.table().render();
+        assert!(rendered.contains("offload advice"));
+        assert_eq!(report.lines().len(), 2);
+    }
+}

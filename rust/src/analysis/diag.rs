@@ -1,0 +1,177 @@
+//! Located compile-time diagnostics.
+//!
+//! A reusable severity/code/location/hint record that analysis passes
+//! (`lint`, `advise`) emit into the `CompileReport`. Locations are
+//! structural — a function name plus a `>`-joined path of enclosing
+//! constructs ending at a one-line rendering of the offending
+//! instruction — because the IR carries no source coordinates.
+
+use crate::util::json::Json;
+
+/// How serious a diagnostic is. Lints only warn; `Error` is reserved
+/// for findings that would make an offload outright wrong (none of the
+/// current lints claim that certainty).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Note,
+    Warning,
+    Error,
+}
+
+impl Severity {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Severity::Note => "note",
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// One located diagnostic: `warning[rpc-hot-loop] @main parallel#0 >
+/// for %i > call printf(...): ... hint: ...`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diag {
+    pub severity: Severity,
+    /// Stable kebab-case code, e.g. `barrier-divergent-flow`.
+    pub code: &'static str,
+    /// Enclosing function (without the `@`).
+    pub function: String,
+    /// Structural path inside the function, `>`-joined, ending at a
+    /// one-line rendering of the instruction.
+    pub location: String,
+    pub message: String,
+    /// Actionable fix hint.
+    pub hint: String,
+}
+
+impl Diag {
+    pub fn line(&self) -> String {
+        format!(
+            "{}[{}] @{} {}: {} (hint: {})",
+            self.severity.as_str(),
+            self.code,
+            self.function,
+            self.location,
+            self.message,
+            self.hint
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("severity", Json::str(self.severity.as_str())),
+            ("code", Json::str(self.code)),
+            ("function", Json::str(&self.function)),
+            ("location", Json::str(&self.location)),
+            ("message", Json::str(&self.message)),
+            ("hint", Json::str(&self.hint)),
+        ])
+    }
+}
+
+/// An ordered collection of diagnostics, in emission (walk) order so
+/// output is deterministic for a given module.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Diagnostics {
+    pub diags: Vec<Diag>,
+}
+
+impl Diagnostics {
+    pub fn emit(
+        &mut self,
+        severity: Severity,
+        code: &'static str,
+        function: &str,
+        location: String,
+        message: String,
+        hint: String,
+    ) {
+        self.diags.push(Diag {
+            severity,
+            code,
+            function: function.to_string(),
+            location,
+            message,
+            hint,
+        });
+    }
+
+    pub fn len(&self) -> usize {
+        self.diags.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.diags.is_empty()
+    }
+
+    /// How many diagnostics carry the given code.
+    pub fn count_of(&self, code: &str) -> usize {
+        self.diags.iter().filter(|d| d.code == code).count()
+    }
+
+    pub fn lines(&self) -> Vec<String> {
+        self.diags.iter().map(Diag::line).collect()
+    }
+
+    /// `"2 warning(s), 1 note(s)"` / `"clean"`.
+    pub fn summary(&self) -> String {
+        if self.diags.is_empty() {
+            return "clean".into();
+        }
+        let mut parts = Vec::new();
+        for sev in [Severity::Error, Severity::Warning, Severity::Note] {
+            let n = self.diags.iter().filter(|d| d.severity == sev).count();
+            if n > 0 {
+                parts.push(format!("{n} {}(s)", sev.as_str()));
+            }
+        }
+        parts.join(", ")
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.diags.iter().map(Diag::to_json).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn line_and_summary_render() {
+        let mut d = Diagnostics::default();
+        assert_eq!(d.summary(), "clean");
+        d.emit(
+            Severity::Warning,
+            "rpc-hot-loop",
+            "main",
+            "parallel#0 > for %i > call printf(@fmt)".into(),
+            "host-RPC call inside a hot loop".into(),
+            "hoist or batch the call".into(),
+        );
+        let line = &d.lines()[0];
+        assert!(line.starts_with("warning[rpc-hot-loop] @main "));
+        assert!(line.contains("hint:"));
+        assert_eq!(d.summary(), "1 warning(s)");
+        assert_eq!(d.count_of("rpc-hot-loop"), 1);
+        assert_eq!(d.count_of("other"), 0);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut d = Diagnostics::default();
+        d.emit(
+            Severity::Note,
+            "c",
+            "f",
+            "loc".into(),
+            "m".into(),
+            "h".into(),
+        );
+        let txt = d.to_json().to_string();
+        assert!(txt.contains("\"severity\""));
+        assert!(txt.contains("\"note\""));
+        assert!(txt.contains("\"code\""));
+    }
+}

@@ -1,0 +1,350 @@
+//! IR lints: the advisor's anti-pattern detectors.
+//!
+//! Three heuristics over the structured IR, each emitting a located
+//! [`Diag`](super::diag::Diag) into the compile report:
+//!
+//! * [`BARRIER_DIVERGENT`] — a `barrier` under divergent control flow
+//!   (`if`/`while`) inside a parallel region: threads that skip the
+//!   branch never arrive and the region deadlocks.
+//! * [`SHARED_WRITE_RACE`] — a store inside a parallel region whose
+//!   address is uniform across threads (a global, or a constant-offset
+//!   `gep` from one): every thread writes the same location with no
+//!   synchronization, a cross-team race.
+//! * [`RPC_HOT_LOOP`] — a host-RPC callee (or an already-generated
+//!   `rpc` site) inside a loop that is statically hot (constant trip
+//!   count ≥ [`HOT_TRIPS`], or unknown bounds): each iteration pays the
+//!   full modeled round-trip, the advisor's top anti-pattern.
+//!
+//! These are heuristics: they warn, never error, and false positives
+//! are acceptable (e.g. a uniform store that is in fact idempotent).
+//! Lints run only when the opt-in `lint` pass is in the pipeline.
+
+use std::collections::HashMap;
+
+use super::advise::const_trips;
+use super::diag::{Diagnostics, Severity};
+use super::resolution::{ResolutionTable, SymbolClass};
+use crate::ir::printer::render_instr;
+use crate::ir::{Expr, Function, Instr, Module, Operand};
+
+pub const BARRIER_DIVERGENT: &str = "barrier-divergent-flow";
+pub const SHARED_WRITE_RACE: &str = "shared-global-race";
+pub const RPC_HOT_LOOP: &str = "rpc-hot-loop";
+
+/// Every code a lint can emit, for docs and schema checks.
+pub const CODES: &[&str] = &[BARRIER_DIVERGENT, RPC_HOT_LOOP, SHARED_WRITE_RACE];
+
+/// Loops at or beyond this static trip count are "hot" for
+/// [`RPC_HOT_LOOP`]; unknown-bound loops count as hot (worst case).
+pub const HOT_TRIPS: u64 = 64;
+
+/// How many def links the uniform-address check chases.
+const UNIFORM_CHASE_DEPTH: usize = 4;
+
+struct LintCx<'a> {
+    table: &'a ResolutionTable,
+    diags: &'a mut Diagnostics,
+    function: &'a str,
+    path: Vec<String>,
+    /// Flat per-function def map (heuristic: ignores shadowing across
+    /// sibling blocks, which the verifier's SSA-ish discipline already
+    /// makes rare).
+    defs: HashMap<String, Expr>,
+}
+
+impl LintCx<'_> {
+    fn emit(&mut self, code: &'static str, ins: &Instr, message: String, hint: &str) {
+        let mut loc = self.path.join(" > ");
+        if !loc.is_empty() {
+            loc.push_str(" > ");
+        }
+        loc.push_str(&render_instr(ins));
+        self.diags.emit(
+            Severity::Warning,
+            code,
+            self.function,
+            loc,
+            message,
+            hint.to_string(),
+        );
+    }
+
+    /// If `o` resolves to the same address on every thread, the global
+    /// it points into. Chases `%v = gep <uniform>, <const>` and plain
+    /// copies up to a small depth.
+    fn uniform_global(&self, o: &Operand, depth: usize) -> Option<String> {
+        match o {
+            Operand::Global(g) => Some(g.clone()),
+            Operand::Var(v) if depth > 0 => match self.defs.get(v) {
+                Some(Expr::Op(inner)) => self.uniform_global(inner, depth - 1),
+                Some(Expr::Gep(base, off)) if matches!(off, Operand::ConstI(_)) => {
+                    self.uniform_global(base, depth - 1)
+                }
+                _ => None,
+            },
+            _ => None,
+        }
+    }
+
+    /// Is `callee` (an external symbol) served by a host RPC?
+    fn is_host_rpc(&self, callee: &str) -> bool {
+        matches!(self.table.class_of(callee), Some(SymbolClass::HostRpc(_)))
+    }
+}
+
+/// Run all lints over `m`, classified against `table`. Pure analysis.
+pub fn run_lints(m: &Module, table: &ResolutionTable) -> Diagnostics {
+    let mut diags = Diagnostics::default();
+    for f in m.functions.values() {
+        lint_function(f, table, &mut diags);
+    }
+    diags
+}
+
+fn lint_function(f: &Function, table: &ResolutionTable, diags: &mut Diagnostics) {
+    let mut cx =
+        LintCx { table, diags, function: &f.name, path: Vec::new(), defs: HashMap::new() };
+    let mut parallel_seen = 0usize;
+    if f.is_kernel_region {
+        // Outlined kernel regions execute with every thread inside.
+        cx.path.push("kernel".into());
+        lint_body(&mut cx, &f.body, &mut parallel_seen, true, 0, 0);
+    } else {
+        lint_body(&mut cx, &f.body, &mut parallel_seen, false, 0, 0);
+    }
+}
+
+/// `divergent` counts enclosing thread-divergent constructs inside the
+/// parallel region; `hot` counts enclosing statically-hot loops.
+fn lint_body(
+    cx: &mut LintCx<'_>,
+    body: &[Instr],
+    parallel_seen: &mut usize,
+    in_parallel: bool,
+    divergent: usize,
+    hot: usize,
+) {
+    for ins in body {
+        match ins {
+            Instr::Assign { dst, expr } => {
+                cx.defs.insert(dst.clone(), expr.clone());
+            }
+            Instr::Barrier => {
+                if in_parallel && divergent > 0 {
+                    cx.emit(
+                        BARRIER_DIVERGENT,
+                        ins,
+                        "barrier under divergent control flow: threads that skip the branch \
+                         never arrive, deadlocking the region"
+                            .into(),
+                        "hoist the barrier out of the branch, or make the condition uniform \
+                         across threads",
+                    );
+                }
+            }
+            Instr::Store { addr, .. } => {
+                if in_parallel {
+                    if let Some(g) = cx.uniform_global(addr, UNIFORM_CHASE_DEPTH) {
+                        cx.emit(
+                            SHARED_WRITE_RACE,
+                            ins,
+                            format!(
+                                "every thread writes the same address in @{g} with no \
+                                 synchronization (cross-team race)"
+                            ),
+                            "index the store by tid or a work-shared loop variable, or guard \
+                             it so a single thread writes",
+                        );
+                    }
+                }
+            }
+            Instr::Call { callee, .. } => {
+                if hot > 0 && cx.is_host_rpc(callee) {
+                    cx.emit(
+                        RPC_HOT_LOOP,
+                        ins,
+                        format!(
+                            "host-RPC callee `{callee}` inside a hot loop: every iteration \
+                             pays the full modeled round-trip"
+                        ),
+                        "hoist the call out of the loop, batch the I/O, or buffer into \
+                         device memory and flush once",
+                    );
+                }
+            }
+            Instr::RpcCall { mangled, .. } => {
+                if hot > 0 {
+                    cx.emit(
+                        RPC_HOT_LOOP,
+                        ins,
+                        format!(
+                            "generated RPC `{mangled}` inside a hot loop: every iteration \
+                             pays the full modeled round-trip"
+                        ),
+                        "hoist the call out of the loop, batch the I/O, or buffer into \
+                         device memory and flush once",
+                    );
+                }
+            }
+            Instr::If { then_body, else_body, .. } => {
+                cx.path.push("if-then".into());
+                lint_body(cx, then_body, parallel_seen, in_parallel, divergent + 1, hot);
+                cx.path.pop();
+                if !else_body.is_empty() {
+                    cx.path.push("if-else".into());
+                    lint_body(cx, else_body, parallel_seen, in_parallel, divergent + 1, hot);
+                    cx.path.pop();
+                }
+            }
+            Instr::While { cond_var, cond, body, .. } => {
+                // Unknown trip count: hot by assumption, and divergent
+                // (the condition is thread-dependent in general).
+                cx.path.push(format!("while %{cond_var}"));
+                lint_body(cx, cond, parallel_seen, in_parallel, divergent + 1, hot + 1);
+                lint_body(cx, body, parallel_seen, in_parallel, divergent + 1, hot + 1);
+                cx.path.pop();
+            }
+            Instr::For { var, lo, hi, step, body, .. } => {
+                let is_hot = const_trips(lo, hi, step).map_or(true, |t| t >= HOT_TRIPS);
+                cx.path.push(format!("for %{var}"));
+                lint_body(
+                    cx,
+                    body,
+                    parallel_seen,
+                    in_parallel,
+                    divergent,
+                    hot + usize::from(is_hot),
+                );
+                cx.path.pop();
+            }
+            Instr::Parallel { body, .. } => {
+                let k = *parallel_seen;
+                *parallel_seen += 1;
+                cx.path.push(format!("parallel#{k}"));
+                lint_body(cx, body, parallel_seen, true, 0, hot);
+                cx.path.pop();
+            }
+            _ => {}
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::analysis::resolution::resolve_module;
+    use crate::ir::parser::parse_module;
+
+    fn lint(src: &str) -> Diagnostics {
+        let m = parse_module(src).unwrap();
+        let table = resolve_module(&m);
+        run_lints(&m, &table)
+    }
+
+    #[test]
+    fn barrier_under_divergence_fires_once() {
+        let d = lint(
+            r#"
+func @main() -> i64 {
+  parallel {
+    %t = tid
+    %c = eq %t, 0
+    if %c {
+      barrier
+    }
+    barrier
+  }
+  return 0
+}
+"#,
+        );
+        assert_eq!(d.count_of(BARRIER_DIVERGENT), 1, "{:?}", d.lines());
+        let diag = &d.diags[0];
+        assert_eq!(diag.function, "main");
+        assert!(diag.location.contains("parallel#0 > if-then > barrier"), "{}", diag.location);
+    }
+
+    #[test]
+    fn uniform_store_in_parallel_is_a_race() {
+        let d = lint(
+            r#"
+global @acc 8
+
+func @main() -> i64 {
+  parallel {
+    %p = gep @acc, 0
+    store.8 1, %p
+  }
+  return 0
+}
+"#,
+        );
+        assert_eq!(d.count_of(SHARED_WRITE_RACE), 1, "{:?}", d.lines());
+        assert!(d.diags[0].message.contains("@acc"));
+    }
+
+    #[test]
+    fn tid_indexed_store_is_clean() {
+        let d = lint(
+            r#"
+global @buf 1024
+
+func @main() -> i64 {
+  parallel {
+    %t = tid
+    %p = gep @buf, %t
+    store.8 1, %p
+  }
+  return 0
+}
+"#,
+        );
+        assert_eq!(d.count_of(SHARED_WRITE_RACE), 0, "{:?}", d.lines());
+    }
+
+    #[test]
+    fn rpc_in_hot_loop_fires_once() {
+        let d = lint(
+            r#"
+global @fmt const 4 "%d\n"
+
+func @main() -> i64 {
+  %p = gep @fmt, 0
+  call printf(%p, 1)
+  for %i = 0 to 1000 step 1 {
+    call printf(%p, %i)
+  }
+  for %j = 0 to 4 step 1 {
+    call printf(%p, %j)
+  }
+  return 0
+}
+"#,
+        );
+        // The 1000-trip loop is hot; the 4-trip loop and the straight-
+        // line call are not.
+        assert_eq!(d.count_of(RPC_HOT_LOOP), 1, "{:?}", d.lines());
+        assert!(d.diags[0].location.contains("for %i"));
+    }
+
+    #[test]
+    fn clean_program_lints_clean() {
+        let d = lint(
+            r#"
+global @buf 1024
+
+func @main() -> i64 {
+  parallel {
+    for.team %i = 0 to 128 step 1 {
+      %p = gep @buf, %i
+      store.8 %i, %p
+    }
+    barrier
+  }
+  return 0
+}
+"#,
+        );
+        assert!(d.is_empty(), "{:?}", d.lines());
+    }
+}

@@ -10,16 +10,32 @@
 //!   decide which calls are library calls and for multi-team eligibility).
 //! * [`resolution`] — the libc/RPC symbol-resolution table (paper
 //!   §3.2/§3.4): every external callee classified device-native,
-//!   host-RPC, or unresolved. Materialized by the `libcres` pass,
-//!   consumed by `rpcgen` and the interpreter's dispatch.
+//!   host-RPC, or unresolved, with per-symbol modeled cost annotations.
+//!   Materialized by the `libcres` pass, consumed by `rpcgen`, the
+//!   interpreter's dispatch, and the advisor.
+//! * [`advise`] — the compile-time offload advisor: static per-region
+//!   cost estimation scored A100-vs-EPYC, producing a ranked
+//!   [`AdviseReport`] (the opt-in `advise` pass).
+//! * [`diag`] — the located-diagnostics framework (severity, code,
+//!   function/instruction location, fix hint) shared by the advisor
+//!   and the lints.
+//! * [`lint`] — IR anti-pattern lints (barrier-under-divergence,
+//!   shared-global race heuristic, RPC-inside-hot-loop), emitted as
+//!   diagnostics by the opt-in `lint` pass.
 //!
 //! These analyses are cached by the pass manager's
 //! [`crate::transform::AnalysisCache`]: computed once per module state
 //! and invalidated only when a pass reports mutating the module.
 
-pub mod objects;
+pub mod advise;
 pub mod callgraph;
+pub mod diag;
+pub mod lint;
+pub mod objects;
 pub mod resolution;
 
+pub use advise::{analyze, AdviseParams, AdviseReport, RegionAdvice};
+pub use diag::{Diag, Diagnostics, Severity};
+pub use lint::run_lints;
 pub use objects::{classify_operand, def_map, ObjClass, ObjOrigin, OffKind};
 pub use resolution::{resolve_module, ResolutionTable, SymbolClass};

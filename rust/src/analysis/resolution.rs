@@ -24,6 +24,7 @@ use crate::analysis::callgraph::walk;
 use crate::ir::{Instr, Module};
 use crate::libc_gpu::registry::{self, DeviceFn};
 use crate::rpc::wrappers::{host_function, HostFnKind};
+use crate::util::json::Json;
 use std::collections::BTreeMap;
 
 /// How one external symbol is satisfied (the per-callee verdict).
@@ -45,6 +46,19 @@ impl SymbolClass {
             SymbolClass::Device(_) => "device",
             SymbolClass::HostRpc(_) => "host-rpc",
             SymbolClass::Unresolved => "unresolved",
+        }
+    }
+
+    /// Modeled per-call cost in nanoseconds when the caller runs on the
+    /// device: device-native callees are charged their registry
+    /// estimate, host-RPC callees the full modeled round-trip, and
+    /// unresolved callees nothing (their sites are counted no-ops). The
+    /// offload advisor's per-symbol cost annotation.
+    pub fn modeled_cost_ns(&self) -> f64 {
+        match self {
+            SymbolClass::Device(f) => f.modeled_cost_ns(),
+            SymbolClass::HostRpc(_) => crate::perfmodel::a100::RPC_TOTAL_NS,
+            SymbolClass::Unresolved => 0.0,
         }
     }
 }
@@ -115,20 +129,45 @@ impl ResolutionTable {
         c
     }
 
+    /// Modeled device-path cost of one call to `name`, if the symbol is
+    /// external to the module this table was built from.
+    pub fn cost_of(&self, name: &str) -> Option<f64> {
+        self.class_of(name).map(|c| c.modeled_cost_ns())
+    }
+
     /// One human-readable line per symbol (`--explain`'s resolution
-    /// section).
+    /// section), cost-annotated for the advisor.
     pub fn lines(&self) -> Vec<String> {
         self.symbols
             .iter()
             .map(|(name, i)| {
                 format!(
-                    "{name:<24} {:<10} {} call site(s) in {:?}",
+                    "{name:<24} {:<10} ~{:>9.0} ns/call  {} call site(s) in {:?}",
                     i.class.label(),
+                    i.class.modeled_cost_ns(),
                     i.call_sites,
                     i.callers
                 )
             })
             .collect()
+    }
+
+    /// JSON array of per-symbol cost annotations (the advise report's
+    /// `symbols` section).
+    pub fn to_json(&self) -> Json {
+        Json::Arr(
+            self.symbols
+                .iter()
+                .map(|(name, i)| {
+                    Json::obj(vec![
+                        ("symbol", Json::str(name)),
+                        ("class", Json::str(i.class.label())),
+                        ("cost_ns", Json::num(i.class.modeled_cost_ns())),
+                        ("call_sites", Json::uint(i.call_sites)),
+                    ])
+                })
+                .collect(),
+        )
     }
 
     /// One-line summary for pass reports.
@@ -246,5 +285,24 @@ func @main() -> i64 {
         assert_eq!(lines.len(), t.symbols.len());
         assert!(lines.iter().any(|l| l.contains("dgemm") && l.contains("unresolved")));
         assert!(t.summary().contains("2 device-native"));
+    }
+
+    #[test]
+    fn symbols_carry_modeled_costs() {
+        let m = parse_module(SRC).unwrap();
+        let t = resolve_module(&m);
+        // Host-RPC callees are charged the full modeled round-trip.
+        assert_eq!(t.cost_of("fprintf"), Some(crate::perfmodel::a100::RPC_TOTAL_NS));
+        // Device-native callees are orders of magnitude cheaper.
+        let malloc = t.cost_of("malloc").unwrap();
+        assert!(malloc > 0.0 && malloc < crate::perfmodel::a100::RPC_TOTAL_NS / 100.0);
+        // Unresolved callees cost nothing (counted no-ops).
+        assert_eq!(t.cost_of("dgemm"), Some(0.0));
+        assert_eq!(t.cost_of("not_a_symbol"), None);
+        // Cost annotations surface in the human-readable lines and JSON.
+        assert!(t.lines().iter().any(|l| l.contains("ns/call")));
+        let json = t.to_json().to_string();
+        assert!(json.contains("\"cost_ns\""));
+        assert!(json.contains("\"call_sites\""));
     }
 }

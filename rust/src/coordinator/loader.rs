@@ -177,6 +177,8 @@ impl GpuFirstSession {
             lowered_fns: self.report.as_ref().map_or(0, |r| r.lower.lowered_fns),
             fused_instrs: self.report.as_ref().map_or(0, |r| r.fuse.pairs),
             bytecode_fns: self.report.as_ref().map_or(0, |r| r.bytecode.bytecode_fns),
+            advice_regions: self.report.as_ref().map_or(0, |r| r.advise.regions.len() as u64),
+            lint_diags: self.report.as_ref().map_or(0, |r| r.diags.len() as u64),
             rpc_round_trip: obs.rpc_round_trip.snapshot(),
             rpc_per_callee,
             launch_queue_wait: obs.launch_queue_wait.snapshot(),

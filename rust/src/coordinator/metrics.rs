@@ -73,6 +73,12 @@ pub struct RunMetrics {
     /// (open-handle tables + content-map shards). Empty while
     /// `host_io.lock_contention` and `host_io.content_contention` are 0.
     pub host_io_lock_wait: HistSnapshot,
+    /// Regions the opt-in `advise` pass scored at compile time; 0 for
+    /// the default pipeline (the advisor never runs implicitly).
+    pub advice_regions: u64,
+    /// Located diagnostics the opt-in `lint` pass emitted; 0 for the
+    /// default pipeline.
+    pub lint_diags: u64,
     /// Leveled warn-once diagnostics this run raised (unresolved
     /// symbols, format degradations), with per-code occurrence counts.
     pub events: Vec<EventRecord>,
@@ -139,6 +145,12 @@ impl RunMetrics {
         }
         if self.bytecode_fns > 0 {
             s.push_str(&format!(" bytecode fns={}", self.bytecode_fns));
+        }
+        if self.advice_regions > 0 {
+            s.push_str(&format!(" advice_regions={}", self.advice_regions));
+        }
+        if self.lint_diags > 0 {
+            s.push_str(&format!(" lint_diags={}", self.lint_diags));
         }
         if let Some(e) = &self.rpc_engine {
             s.push(' ');
@@ -219,6 +231,8 @@ impl RunMetrics {
             ("lowered_fns", Json::num(self.lowered_fns as f64)),
             ("fused_instrs", Json::num(self.fused_instrs as f64)),
             ("bytecode_fns", Json::num(self.bytecode_fns as f64)),
+            ("advice_regions", Json::num(self.advice_regions as f64)),
+            ("lint_diags", Json::num(self.lint_diags as f64)),
             ("batched_writes", Json::num(self.host_io.batched_writes as f64)),
             ("batched_reads", Json::num(self.host_io.batched_reads as f64)),
             ("batched_cross_callee", Json::num(self.host_io.batched_cross_callee as f64)),
@@ -285,6 +299,8 @@ mod tests {
             lowered_fns: 0,
             fused_instrs: 0,
             bytecode_fns: 0,
+            advice_regions: 0,
+            lint_diags: 0,
             rpc_round_trip: HistSnapshot::default(),
             rpc_per_callee: Vec::new(),
             launch_queue_wait: HistSnapshot::default(),
@@ -388,6 +404,21 @@ mod tests {
         let quiet = base().summary();
         assert!(!quiet.contains("register_core"), "{quiet}");
         assert!(!quiet.contains("bytecode"), "{quiet}");
+    }
+
+    #[test]
+    fn summary_and_json_carry_advisor_counters() {
+        let m = RunMetrics { advice_regions: 2, lint_diags: 3, ..base() };
+        let s = m.summary();
+        assert!(s.contains("advice_regions=2"), "{s}");
+        assert!(s.contains("lint_diags=3"), "{s}");
+        let j = m.to_json().to_string();
+        assert!(j.contains("\"advice_regions\":2"), "{j}");
+        assert!(j.contains("\"lint_diags\":3"), "{j}");
+        // The default pipeline never runs the advisor: quiet summaries.
+        let quiet = base().summary();
+        assert!(!quiet.contains("advice_regions"), "{quiet}");
+        assert!(!quiet.contains("lint_diags"), "{quiet}");
     }
 
     #[test]

@@ -306,7 +306,9 @@ impl ServeDaemon {
         if hit {
             // A cache hit runs zero passes: the timing section empties
             // while the compile-derived counters (folds, intents,
-            // lowered fns) keep describing the artifact being served.
+            // lowered fns) — and the advisor's `advise`/`diags`
+            // sections, when the cached pipeline included those opt-in
+            // passes — keep describing the artifact being served.
             report.timings.clear();
         }
         inner.report = Some(report);

@@ -149,6 +149,61 @@ fn print_body(out: &mut String, body: &[Instr], depth: usize) {
     }
 }
 
+/// One-line rendering of an instruction head for diagnostics: leaf
+/// instructions render exactly as `print_module` would; block
+/// instructions render their header with `{ ... }` standing in for the
+/// body.
+pub fn render_instr(ins: &Instr) -> String {
+    match ins {
+        Instr::Assign { dst, expr } => format!("%{dst} = {}", print_expr(expr)),
+        Instr::Alloca { dst, size } => format!("%{dst} = alloca {size}"),
+        Instr::Store { addr, val, width } => {
+            format!("store.{width} {}, {}", op(val), op(addr))
+        }
+        Instr::Load { dst, addr, width, ty } => {
+            let m = if *ty == Ty::F64 { "loadf" } else { "load" };
+            format!("%{dst} = {m}.{width} {}", op(addr))
+        }
+        Instr::Call { dst, callee, args } | Instr::Intrinsic { dst, name: callee, args } => {
+            let head = match dst {
+                Some(d) => format!("%{d} = "),
+                None => String::new(),
+            };
+            format!(
+                "{head}call {callee}({})",
+                args.iter().map(op).collect::<Vec<_>>().join(", ")
+            )
+        }
+        Instr::RpcCall { dst, mangled, callee_id, .. } => {
+            let head = match dst {
+                Some(d) => format!("%{d} = "),
+                None => String::new(),
+            };
+            format!("{head}rpc \"{mangled}\" {callee_id} (...)")
+        }
+        Instr::KernelLaunch { region, .. } => format!("launch @{region}"),
+        Instr::If { cond, .. } => format!("if {} {{ ... }}", op(cond)),
+        Instr::While { cond_var, .. } => format!("while %{cond_var} {{ ... }}"),
+        Instr::For { var, lo, hi, step, schedule, .. } => {
+            let sched = match schedule {
+                Schedule::Seq => "for",
+                Schedule::Team => "for.team",
+                Schedule::Grid => "for.grid",
+            };
+            format!(
+                "{sched} %{var} = {} to {} step {} {{ ... }}",
+                op(lo),
+                op(hi),
+                op(step)
+            )
+        }
+        Instr::Parallel { .. } => "parallel { ... }".into(),
+        Instr::Barrier => "barrier".into(),
+        Instr::Return(Some(v)) => format!("return {}", op(v)),
+        Instr::Return(None) => "return".into(),
+    }
+}
+
 pub fn op(o: &Operand) -> String {
     match o {
         Operand::Var(v) => format!("%{v}"),

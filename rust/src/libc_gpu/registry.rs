@@ -111,6 +111,27 @@ impl DeviceFn {
     pub fn returns_tracked_pointer(self) -> bool {
         matches!(self, DeviceFn::Malloc | DeviceFn::Realloc)
     }
+
+    /// Modeled per-call device cost in nanoseconds, for the offload
+    /// advisor's per-symbol annotations. Allocator entry points use the
+    /// generic-allocator figure from the perf model; the rest are flat
+    /// estimates for a short (≤ 64-byte) operand, deliberately coarse —
+    /// the advisor only needs device-native calls to be orders of
+    /// magnitude cheaper than a host RPC round-trip, which they are.
+    pub fn modeled_cost_ns(self) -> f64 {
+        match self {
+            DeviceFn::Malloc | DeviceFn::Realloc | DeviceFn::Free => {
+                crate::perfmodel::a100::GENERIC_ALLOC_OP_NS
+            }
+            DeviceFn::Memcpy | DeviceFn::Memset => 200.0,
+            DeviceFn::Strcpy | DeviceFn::Strcat => 150.0,
+            DeviceFn::Strlen | DeviceFn::Strcmp => 120.0,
+            DeviceFn::Strtod | DeviceFn::Atoi => 160.0,
+            DeviceFn::Rand => 25.0,
+            DeviceFn::Srand | DeviceFn::Fabs => 5.0,
+            DeviceFn::Sqrt => 15.0,
+        }
+    }
 }
 
 /// Resolve `name` against the device-native registry.
@@ -163,5 +184,17 @@ mod tests {
         assert!(DeviceFn::Malloc.returns_tracked_pointer());
         assert!(DeviceFn::Realloc.returns_tracked_pointer());
         assert!(!DeviceFn::Strlen.returns_tracked_pointer());
+    }
+
+    #[test]
+    fn every_variant_has_a_positive_finite_cost() {
+        for v in DeviceFn::VARIANTS {
+            let c = v.modeled_cost_ns();
+            assert!(c.is_finite() && c > 0.0, "{v:?} cost {c}");
+            // Device-native calls must stay far cheaper than an RPC
+            // round-trip or the advisor's dichotomy collapses.
+            assert!(c < crate::perfmodel::a100::RPC_TOTAL_NS / 100.0, "{v:?} cost {c}");
+        }
+        assert!(DeviceFn::Malloc.modeled_cost_ns() > DeviceFn::Fabs.modeled_cost_ns());
     }
 }

@@ -13,6 +13,12 @@
 //!                                      # classification + per-pass timings
 //!                                      # + lowered (register-file) dump
 //!                                      # + linear bytecode dump
+//! gpu-first advise  <prog.ir> [--json] [--advise-out FILE]
+//!                                      # compile-time offload advisor: rank
+//!                                      # parallel regions by predicted
+//!                                      # A100-vs-EPYC speedup, surface lint
+//!                                      # diagnostics + per-symbol costs;
+//!                                      # runs ZERO kernels
 //! gpu-first serve   <prog.ir> [--serve-sessions N] [--serve-queue N]
 //!                   [--serve-opens N] [--serve-tenants N] [--serve-runs N]
 //!                                      # resident daemon demo: N interleaved
@@ -53,22 +59,25 @@ use gpu_first::coordinator::{Config, GpuFirstSession, ServeConfig, ServeDaemon, 
 use gpu_first::ir::parser::parse_module;
 use gpu_first::ir::printer::{print_bytecode_module, print_lowered_module, print_module};
 use gpu_first::obs::SpanKind;
-use gpu_first::transform::{CompileOptions, PipelineSpec};
+use gpu_first::transform::{CompileOptions, CompileReport, PipelineSpec};
 use gpu_first::util::cli::Args;
+use gpu_first::util::json::Json;
 use gpu_first::util::table::Table;
 
 fn main() {
-    let args = Args::from_env(&["compile", "run", "explain", "serve", "apps", "artifacts"]);
+    let args =
+        Args::from_env(&["compile", "run", "explain", "advise", "serve", "apps", "artifacts"]);
     let result = match args.subcommand.as_deref() {
         Some("compile") => cmd_compile(&args),
         Some("run") => cmd_run(&args),
         Some("explain") => cmd_explain(&args),
+        Some("advise") => cmd_advise(&args),
         Some("serve") => cmd_serve(&args),
         Some("apps") => cmd_apps(),
         Some("artifacts") => cmd_artifacts(&args),
         _ => {
             eprintln!(
-                "usage: gpu-first <compile|run|explain|serve|apps|artifacts> [...]\n\
+                "usage: gpu-first <compile|run|explain|advise|serve|apps|artifacts> [...]\n\
                  run options: --teams N --threads N --allocator generic|vendor|balanced[N,M]\n\
                               --heap-mb N --rpc-lanes N|auto --rpc-workers N|auto\n\
                               --rpc-launch-threads N --rpc-launch-slots N\n\
@@ -80,10 +89,14 @@ fn main() {
                               (RunMetrics JSON with latency histograms)\n\
                  pipeline:    --passes p1,p2,... (known: constfold, dce, libcres,\n\
                               rpcgen, multiteam, lower, fuse, bytecode; default\n\
-                              all eight; GPU_FIRST_PASSES env applies below it)\n\
+                              all eight; GPU_FIRST_PASSES env applies below it;\n\
+                              opt-in analyses: lint, advise)\n\
                               --no-constfold --no-dce --no-libcres --no-rpcgen\n\
                               --no-multiteam --no-lower --no-fuse --no-bytecode\n\
                               (fall back to the register core)\n\
+                 advisor:     advise <prog.ir> [--json] [--advise-out FILE], or\n\
+                              --advise on compile/run/explain (appends the\n\
+                              lint+advise passes; execution-free analysis)\n\
                  see README.md"
             );
             std::process::exit(2);
@@ -135,9 +148,36 @@ fn pipeline_spec(args: &Args) -> Result<PipelineSpec, String> {
     pipeline_spec_or(args, PipelineSpec::from_options(opts(args)))
 }
 
+/// Apply `--advise`: append the opt-in `lint`+`advise` analyses to
+/// whatever pipeline the invocation selected.
+fn with_advice_flag(args: &Args, spec: PipelineSpec) -> PipelineSpec {
+    if args.flag("advise") {
+        spec.with_advice()
+    } else {
+        spec
+    }
+}
+
+/// The advisor sections (ranked regions + lint diagnostics) on stderr,
+/// for `--advise` on compile/run.
+fn eprint_advice(report: &CompileReport) {
+    if !report.advise.regions.is_empty() {
+        eprintln!(";; --- advise: {} ---", report.advise.summary());
+        for line in report.advise.lines() {
+            eprintln!(";;   {line}");
+        }
+    }
+    if !report.diags.is_empty() {
+        eprintln!(";; --- lint: {} ---", report.diags.summary());
+        for line in report.diags.lines() {
+            eprintln!(";;   {line}");
+        }
+    }
+}
+
 fn cmd_compile(args: &Args) -> Result<(), String> {
     let mut module = read_module(args)?;
-    let spec = pipeline_spec(args)?;
+    let spec = with_advice_flag(args, pipeline_spec(args)?);
     let mut session = GpuFirstSession::start(Config::from_args(args)?);
     session.compile_spec(&mut module, &spec)?;
     let report = session.report.as_ref().unwrap();
@@ -177,6 +217,7 @@ fn cmd_compile(args: &Args) -> Result<(), String> {
         }
         eprintln!(";; --- fuse: {} ---", report.fuse.summary());
     }
+    eprint_advice(report);
     session.stop();
     Ok(())
 }
@@ -185,7 +226,7 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     let t_parse = std::time::Instant::now();
     let module = read_module(args)?;
     let parse_ns = t_parse.elapsed().as_nanos() as u64;
-    let spec = pipeline_spec(args)?;
+    let spec = with_advice_flag(args, pipeline_spec(args)?);
     let cfg = Config::from_args(args)?;
     let verbose = cfg.verbose;
     let mut session = GpuFirstSession::start(cfg);
@@ -199,6 +240,11 @@ fn cmd_run(args: &Args) -> Result<(), String> {
     if verbose {
         eprintln!(";; {}", metrics.summary());
         eprintln!(";; JSON {}", metrics.to_json());
+    }
+    if args.flag("advise") {
+        if let Some(report) = session.report.as_ref() {
+            eprint_advice(report);
+        }
     }
     export_telemetry(args, &session, &metrics)?;
     session.stop();
@@ -262,6 +308,52 @@ fn export_telemetry(
     Ok(())
 }
 
+/// The compile-time offload advisor: run the analysis-only pipeline
+/// (no rpcgen, no region expansion, ZERO kernels) and print the ranked
+/// region table, the lint diagnostics and the per-symbol cost
+/// annotations. `--json` prints the machine-readable report to stdout;
+/// `--advise-out FILE` writes the same JSON to a file.
+fn cmd_advise(args: &Args) -> Result<(), String> {
+    let mut module = read_module(args)?;
+    let spec = pipeline_spec_or(
+        args,
+        PipelineSpec::parse("constfold,dce,libcres,lint,advise").unwrap(),
+    )?
+    .with_advice();
+    let mut session = GpuFirstSession::start(Config::from_args(args)?);
+    session.compile_spec(&mut module, &spec)?;
+    let report = session.report.as_ref().unwrap();
+    let json = Json::obj(vec![
+        ("regions", report.advise.to_json()),
+        ("diagnostics", report.diags.to_json()),
+        ("symbols", report.resolution.to_json()),
+    ]);
+    if args.flag("json") {
+        println!("{json}");
+    } else {
+        print!("{}", report.advise.table().render());
+        println!(";; {}", report.advise.summary());
+        if !report.diags.is_empty() {
+            println!(";; lint: {}", report.diags.summary());
+            for line in report.diags.lines() {
+                println!(";;   {line}");
+            }
+        }
+        if !report.resolution.symbols.is_empty() {
+            println!(";; symbol costs ({}):", report.resolution.summary());
+            for line in report.resolution.lines() {
+                println!(";;   {line}");
+            }
+        }
+    }
+    if let Some(path) = args.get("advise-out") {
+        std::fs::write(path, format!("{json}\n")).map_err(|e| format!("{path}: {e}"))?;
+        eprintln!(";; gpu-first: wrote advise report to {path}");
+    }
+    session.stop();
+    Ok(())
+}
+
 fn cmd_explain(args: &Args) -> Result<(), String> {
     let mut module = read_module(args)?;
     // Explain compiles without region expansion by default (the module
@@ -269,10 +361,13 @@ fn cmd_explain(args: &Args) -> Result<(), String> {
     // the register-file and bytecode dumps reflect what execution would
     // use; `--passes` and the GPU_FIRST_PASSES env still override, with
     // the same precedence as compile/run.
-    let spec = pipeline_spec_or(
+    let spec = with_advice_flag(
         args,
-        PipelineSpec::parse("constfold,dce,libcres,rpcgen,lower,fuse,bytecode").unwrap(),
-    )?;
+        pipeline_spec_or(
+            args,
+            PipelineSpec::parse("constfold,dce,libcres,rpcgen,lower,fuse,bytecode").unwrap(),
+        )?,
+    );
     let mut session = GpuFirstSession::start(Config::from_args(args)?);
     session.compile_spec(&mut module, &spec)?;
     let report = session.report.as_ref().unwrap();
@@ -307,6 +402,18 @@ fn cmd_explain(args: &Args) -> Result<(), String> {
         "\npad coverage (AOT, every RPC site verified against the registry): {}",
         report.pad_coverage.summary()
     );
+    if !report.advise.regions.is_empty() {
+        println!("\noffload advice (advise): {}", report.advise.summary());
+        for line in report.advise.lines() {
+            println!("  {line}");
+        }
+    }
+    if !report.diags.is_empty() {
+        println!("\nlint diagnostics ({}):", report.diags.summary());
+        for line in report.diags.lines() {
+            println!("  {line}");
+        }
+    }
     if !module.lowered.is_empty() {
         println!("\nregister-file execution form (lower): {}", report.lower.summary());
         for (f, reason) in &report.lower.skipped {

@@ -37,6 +37,27 @@ impl ModeledTime {
     pub fn total_ns(&self) -> f64 {
         self.compute_ns.max(self.memory_ns) + self.sync_ns + self.overhead_ns + self.charged_ns
     }
+
+    /// Which component dominates the modeled time — the offload
+    /// advisor's bottleneck attribution. Ties break toward the earlier
+    /// component in `compute > memory > sync > overhead > charged`
+    /// order, so an all-zero time reports `"compute"`.
+    pub fn dominant(&self) -> &'static str {
+        let parts = [
+            ("compute", self.compute_ns),
+            ("memory", self.memory_ns),
+            ("sync", self.sync_ns),
+            ("overhead", self.overhead_ns),
+            ("charged", self.charged_ns),
+        ];
+        let mut best = parts[0];
+        for p in &parts[1..] {
+            if p.1 > best.1 {
+                best = *p;
+            }
+        }
+        best.0
+    }
 }
 
 /// Common roofline skeleton shared by both machine models.
@@ -72,6 +93,10 @@ mod tests {
             charged_ns: 2.0,
         };
         assert!((t.total_ns() - 317.0).abs() < 1e-9);
+        assert_eq!(t.dominant(), "memory");
+        assert_eq!(ModeledTime::default().dominant(), "compute");
+        let rpc_bound = ModeledTime { charged_ns: 1e6, ..t };
+        assert_eq!(rpc_bound.dominant(), "charged");
     }
 
     #[test]

@@ -1,5 +1,7 @@
 //! Dead-code elimination ahead of `rpcgen`: drop functions no execution
-//! path can reach, and truncate straight-line code after a `return`.
+//! path can reach, truncate straight-line code after a `return`, and
+//! evict `constfold` suffix globals (`@g__sfxK`) that no surviving
+//! instruction references (user-named globals are never touched).
 //!
 //! Reachability is seeded from `@main` plus every extracted kernel
 //! region (launched by id through the RPC executor, so they must
@@ -19,7 +21,7 @@
 
 use super::pm::AnalysisCache;
 use crate::analysis::callgraph::walk;
-use crate::ir::{Instr, Module};
+use crate::ir::{expr_operands, Instr, Module, Operand, RpcArgSpec};
 use std::collections::BTreeSet;
 
 /// What the pass removed (→ `CompileReport.dce`, `--explain`).
@@ -29,20 +31,25 @@ pub struct DceReport {
     pub removed_fns: Vec<String>,
     /// Instructions truncated after a straight-line `return`.
     pub removed_instrs: u64,
+    /// Orphaned constfold suffix globals (`@g__sfxK`) evicted because
+    /// no surviving instruction references them.
+    pub removed_globals: Vec<String>,
 }
 
 impl DceReport {
     /// One-line summary for reports.
     pub fn summary(&self) -> String {
         format!(
-            "{} unreachable function(s) removed, {} post-return instr(s) truncated",
+            "{} unreachable function(s) removed, {} post-return instr(s) truncated, \
+             {} suffix global(s) evicted",
             self.removed_fns.len(),
-            self.removed_instrs
+            self.removed_instrs,
+            self.removed_globals.len()
         )
     }
 
     pub fn changed(&self) -> bool {
-        !self.removed_fns.is_empty() || self.removed_instrs > 0
+        !self.removed_fns.is_empty() || self.removed_instrs > 0 || !self.removed_globals.is_empty()
     }
 }
 
@@ -85,7 +92,103 @@ pub fn run_with(m: &mut Module, cache: &mut AnalysisCache) -> DceReport {
     for f in m.functions.values_mut() {
         report.removed_instrs += truncate_after_return(&mut f.body, true);
     }
+    report.removed_globals = evict_orphaned_suffix_globals(m);
     report
+}
+
+/// `constfold` materializes folded format strings as `@g__sfxK`
+/// globals. When the call site that referenced one is later removed
+/// (unreachable function, post-return truncation), the global is an
+/// orphan: nothing loads it, and `rpcgen` would never see it. Drop
+/// every suffix global no surviving instruction references. Only
+/// `__sfx<digits>`-named globals are candidates — user globals are
+/// never evicted, referenced or not (the host side may map them).
+fn evict_orphaned_suffix_globals(m: &mut Module) -> Vec<String> {
+    let mut referenced: BTreeSet<String> = BTreeSet::new();
+    for f in m.functions.values() {
+        walk(&f.body, &mut |ins| {
+            collect_global_refs(ins, &mut referenced);
+        });
+    }
+    let orphans: Vec<String> = m
+        .globals
+        .keys()
+        .filter(|g| is_suffix_global(g) && !referenced.contains(*g))
+        .cloned()
+        .collect();
+    for g in &orphans {
+        m.globals.remove(g);
+    }
+    orphans
+}
+
+fn is_suffix_global(name: &str) -> bool {
+    name.rfind("__sfx").is_some_and(|i| {
+        let digits = &name[i + "__sfx".len()..];
+        !digits.is_empty() && digits.bytes().all(|b| b.is_ascii_digit())
+    })
+}
+
+/// Record every `@global` operand `ins` itself mentions (nested bodies
+/// are covered by the caller's `walk`).
+fn collect_global_refs(ins: &Instr, out: &mut BTreeSet<String>) {
+    let mut op = |o: &Operand| {
+        if let Operand::Global(g) = o {
+            out.insert(g.clone());
+        }
+    };
+    match ins {
+        Instr::Assign { expr, .. } => {
+            for o in expr_operands(expr) {
+                op(o);
+            }
+        }
+        Instr::Store { addr, val, .. } => {
+            op(addr);
+            op(val);
+        }
+        Instr::Load { addr, .. } => op(addr),
+        Instr::Call { args, .. } | Instr::Intrinsic { args, .. } => {
+            for a in args {
+                op(a);
+            }
+        }
+        Instr::RpcCall { args, .. } => {
+            for spec in args {
+                match spec {
+                    RpcArgSpec::Val(o) => op(o),
+                    RpcArgSpec::Ref { ptr, .. } | RpcArgSpec::DynRef { ptr, .. } => op(ptr),
+                    RpcArgSpec::MultiRef { ptr, candidates } => {
+                        op(ptr);
+                        for (cand, _, _, _) in candidates {
+                            op(cand);
+                        }
+                    }
+                }
+            }
+        }
+        Instr::KernelLaunch { arg, .. } => {
+            if let Some(a) = arg {
+                op(a);
+            }
+        }
+        Instr::If { cond, .. } => op(cond),
+        Instr::For { lo, hi, step, .. } => {
+            op(lo);
+            op(hi);
+            op(step);
+        }
+        Instr::Parallel { num_threads, .. } => {
+            if let Some(n) = num_threads {
+                op(n);
+            }
+        }
+        Instr::Return(Some(o)) => op(o),
+        Instr::Alloca { .. }
+        | Instr::While { .. }
+        | Instr::Barrier
+        | Instr::Return(None) => {}
+    }
 }
 
 /// Count every instruction in `body`, including nested ones.
@@ -205,6 +308,58 @@ func @main() -> i64 {
         assert_eq!(report.removed_instrs, 3, "{report:?}");
         assert!(m.verify().is_ok());
         assert_eq!(m.functions["main"].body.len(), 2, "if + return survive");
+    }
+
+    #[test]
+    fn orphaned_suffix_globals_are_evicted() {
+        // @fmt__sfx0 is only referenced from @dead, which DCE removes;
+        // @fmt__sfx1 stays referenced from @main; @user is not a suffix
+        // global and survives even though nothing references it.
+        let src = r#"
+global @fmt__sfx0 const 4 "%d\n"
+global @fmt__sfx1 const 4 "%s\n"
+global @user 8
+
+func @dead() -> i64 {
+  call printf(@fmt__sfx0, 1)
+  return 0
+}
+
+func @main() -> i64 {
+  call printf(@fmt__sfx1, 2)
+  return 0
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let mut cache = AnalysisCache::default();
+        let report = run_with(&mut m, &mut cache);
+        assert_eq!(report.removed_fns, vec!["dead".to_string()]);
+        assert_eq!(report.removed_globals, vec!["fmt__sfx0".to_string()]);
+        assert!(report.changed());
+        assert!(!m.globals.contains_key("fmt__sfx0"));
+        assert!(m.globals.contains_key("fmt__sfx1"));
+        assert!(m.globals.contains_key("user"), "non-suffix globals are never evicted");
+        assert!(report.summary().contains("1 suffix global(s) evicted"));
+        assert!(m.verify().is_ok());
+    }
+
+    #[test]
+    fn referenced_suffix_globals_survive_truncation() {
+        let src = r#"
+global @s__sfx7 const 3 "ok"
+
+func @main() -> i64 {
+  call puts(@s__sfx7)
+  return 0
+  call puts(@s__sfx7)
+}
+"#;
+        let mut m = parse_module(src).unwrap();
+        let mut cache = AnalysisCache::default();
+        let report = run_with(&mut m, &mut cache);
+        assert_eq!(report.removed_instrs, 1);
+        assert!(report.removed_globals.is_empty(), "live reference keeps the global");
+        assert!(m.globals.contains_key("s__sfx7"));
     }
 
     #[test]

@@ -27,7 +27,9 @@
 //!   `pc`-loop dispatch.
 //! * [`pm`] — the pass manager: the [`pm::Pass`] trait, the shared
 //!   [`pm::AnalysisCache`], pipeline specs (`--passes` /
-//!   `GPU_FIRST_PASSES`) and per-pass timing.
+//!   `GPU_FIRST_PASSES`) and per-pass timing. Also home to the opt-in
+//!   `lint` and `advise` analysis passes
+//!   ([`pm::OPTIONAL_PASSES`]) backing `--advise`.
 //! * [`pipeline`] — the "LTO pass pipeline" façade: verify → constfold
 //!   → dce → libcres → rpcgen → multiteam → lower → fuse → bytecode →
 //!   verify, i.e. what the paper's augmented compiler driver runs.
@@ -52,4 +54,5 @@ pub use lower::LowerReport;
 pub use pipeline::{compile, compile_with_spec, CompileOptions, CompileReport};
 pub use pm::{
     AnalysisCache, CacheStats, PadCoverage, Pass, PassManager, PassTiming, PipelineSpec,
+    OPTIONAL_PASSES,
 };

@@ -20,6 +20,8 @@ use super::lower::LowerReport;
 use super::multiteam::MultiTeamReport;
 use super::pm::{CacheStats, PadCoverage, PassManager, PassTiming, PipelineSpec};
 use super::rpcgen::RpcGenReport;
+use crate::analysis::advise::AdviseReport;
+use crate::analysis::diag::Diagnostics;
 use crate::ir::Module;
 use crate::rpc::WrapperRegistry;
 use crate::transform::libcres::ResolutionTable;
@@ -95,6 +97,13 @@ pub struct CompileReport {
     /// AOT pad-coverage check over the compiled module's RPC sites
     /// (missing pads abort the compile instead of appearing here).
     pub pad_coverage: PadCoverage,
+    /// The offload advisor's ranked per-region verdicts (empty unless
+    /// the opt-in `advise` pass ran).
+    pub advise: AdviseReport,
+    /// Located lint/advisor diagnostics (empty unless the opt-in
+    /// `lint` pass ran). Serve-daemon cache hits retain both this and
+    /// `advise` alongside the per-pass counters — only timings clear.
+    pub diags: Diagnostics,
 }
 
 impl CompileReport {

@@ -31,6 +31,7 @@ use super::pipeline::{CompileOptions, CompileReport};
 use super::{bytecode, constfold, dce, fuse, libcres, lower, multiteam, rpcgen};
 use crate::analysis::callgraph::{walk, CallGraph};
 use crate::analysis::objects::def_map;
+use crate::analysis::{advise, lint};
 use crate::ir::{Instr, Module};
 use crate::rpc::wrappers::{self, HostFnKind};
 use crate::rpc::WrapperRegistry;
@@ -39,6 +40,12 @@ use std::collections::HashMap;
 /// The pass names the manager knows, in default pipeline order.
 pub const KNOWN_PASSES: &[&str] =
     &["constfold", "dce", "libcres", "rpcgen", "multiteam", "lower", "fuse", "bytecode"];
+
+/// Opt-in analysis passes `--passes` (and `--advise`) may add but the
+/// default pipeline never runs: the IR lints and the offload advisor.
+/// Kept out of [`KNOWN_PASSES`] so the default pipeline — and every
+/// invariant pinned to its 8-pass shape — is unchanged.
+pub const OPTIONAL_PASSES: &[&str] = &["lint", "advise"];
 
 /// What one pass invocation reports back to the manager.
 #[derive(Debug, Clone)]
@@ -168,8 +175,9 @@ impl PipelineSpec {
 
     /// Parse a comma-separated pass list (`"libcres,rpcgen"`). The
     /// keyword `default` selects the full pipeline; an empty string is
-    /// the empty pipeline (verify only). Unknown and duplicate names are
-    /// errors listing the known passes.
+    /// the empty pipeline (verify only). [`OPTIONAL_PASSES`] are
+    /// accepted by name. Unknown and duplicate names are errors listing
+    /// the known passes.
     pub fn parse(s: &str) -> Result<Self, String> {
         let s = s.trim();
         if s == "default" {
@@ -177,10 +185,12 @@ impl PipelineSpec {
         }
         let mut names: Vec<&'static str> = Vec::new();
         for part in s.split(',').map(str::trim).filter(|p| !p.is_empty()) {
-            let Some(known) = KNOWN_PASSES.iter().find(|k| **k == part) else {
+            let Some(known) = KNOWN_PASSES.iter().chain(OPTIONAL_PASSES).find(|k| **k == part)
+            else {
                 return Err(format!(
-                    "unknown pass {part:?} (known passes: {})",
-                    KNOWN_PASSES.join(", ")
+                    "unknown pass {part:?} (known passes: {}; optional: {})",
+                    KNOWN_PASSES.join(", "),
+                    OPTIONAL_PASSES.join(", ")
                 ));
             };
             if names.contains(known) {
@@ -189,6 +199,20 @@ impl PipelineSpec {
             names.push(*known);
         }
         Ok(Self { names })
+    }
+
+    /// This spec with the advisory tail appended: every
+    /// [`OPTIONAL_PASSES`] entry not already present is pushed to the
+    /// end (lints before the advisor). What `--advise` and the `advise`
+    /// subcommand run; idempotent.
+    pub fn with_advice(&self) -> Self {
+        let mut names = self.names.clone();
+        for extra in OPTIONAL_PASSES {
+            if !names.contains(extra) {
+                names.push(extra);
+            }
+        }
+        Self { names }
     }
 
     /// The pipeline [`CompileOptions`] selects: the default order with
@@ -258,6 +282,8 @@ fn make_pass(name: &str) -> Option<Box<dyn Pass>> {
         "lower" => Some(Box::new(LowerPass)),
         "fuse" => Some(Box::new(FusePass)),
         "bytecode" => Some(Box::new(BytecodePass)),
+        "lint" => Some(Box::new(LintPass)),
+        "advise" => Some(Box::new(AdvisePass)),
         _ => None,
     }
 }
@@ -613,6 +639,45 @@ impl Pass for BytecodePass {
     }
 }
 
+/// Runs the IR lints (see [`lint`]) over the cached resolution table
+/// and materializes their located diagnostics into the report. Pure
+/// analysis, opt-in via [`OPTIONAL_PASSES`].
+struct LintPass;
+
+impl Pass for LintPass {
+    fn name(&self) -> &'static str {
+        "lint"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let table = cx.cache.resolution(m).clone();
+        let diags = lint::run_lints(m, &table);
+        let summary = diags.summary();
+        cx.report.diags = diags;
+        Ok(PassOutcome { summary, changed: false })
+    }
+}
+
+/// Runs the compile-time offload advisor (see [`advise`]): scores every
+/// parallel region A100-vs-EPYC and materializes the ranked
+/// [`advise::AdviseReport`]. Pure analysis — nothing executes — and
+/// opt-in via [`OPTIONAL_PASSES`].
+struct AdvisePass;
+
+impl Pass for AdvisePass {
+    fn name(&self) -> &'static str {
+        "advise"
+    }
+
+    fn run(&self, m: &mut Module, cx: &mut PassCx) -> Result<PassOutcome, Vec<String>> {
+        let table = cx.cache.resolution(m).clone();
+        let report = advise::analyze(m, &table, &advise::AdviseParams::default());
+        let summary = report.summary();
+        cx.report.advise = report;
+        Ok(PassOutcome { summary, changed: false })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -650,6 +715,43 @@ func @main() -> i64 {
         assert!(err.contains("frobnicate") && err.contains("libcres"), "{err}");
         let err = PipelineSpec::parse("rpcgen,rpcgen").unwrap_err();
         assert!(err.contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn optional_passes_parse_and_append() {
+        let spec = PipelineSpec::parse("libcres,lint,advise").unwrap();
+        assert_eq!(spec.names(), &["libcres", "lint", "advise"]);
+        // Optional passes never appear in the default pipeline...
+        assert!(!PipelineSpec::default().contains("lint"));
+        assert!(!PipelineSpec::default().contains("advise"));
+        assert_eq!(PipelineSpec::default().names().len(), KNOWN_PASSES.len());
+        // ...but with_advice appends them, idempotently, in order.
+        let spec = PipelineSpec::default().with_advice();
+        assert_eq!(spec.names().len(), KNOWN_PASSES.len() + 2);
+        assert_eq!(&spec.names()[KNOWN_PASSES.len()..], &["lint", "advise"]);
+        assert_eq!(spec.with_advice(), spec);
+        let err = PipelineSpec::parse("lint,lint").unwrap_err();
+        assert!(err.contains("twice"), "{err}");
+    }
+
+    #[test]
+    fn lint_and_advise_passes_fill_the_report_without_mutating() {
+        let mut m = parse_module(SRC).unwrap();
+        let before = m.clone();
+        let reg = WrapperRegistry::new();
+        let spec = PipelineSpec::parse("libcres,lint,advise").unwrap();
+        let report = PassManager::from_spec(&spec).run(&mut m, &reg).unwrap();
+        assert_eq!(m, before, "analysis passes must not mutate the module");
+        assert_eq!(report.advise.regions.len(), 1, "{:?}", report.advise);
+        assert!(report.timings.iter().all(|t| !t.changed));
+        // The advisor also understands the post-multiteam shape: after
+        // the full pipeline the region is an outlined kernel function.
+        let mut m2 = parse_module(SRC).unwrap();
+        let report2 = PassManager::from_spec(&PipelineSpec::default().with_advice())
+            .run(&mut m2, &reg)
+            .unwrap();
+        assert_eq!(report2.advise.regions.len(), 1, "{:?}", report2.advise);
+        assert_eq!(report2.advise.regions[0].region, "kernel");
     }
 
     #[test]

@@ -1,0 +1,170 @@
+//! Offload-advisor integration corpus: the opt-in `lint`+`advise`
+//! pipeline against three promises the advisor makes —
+//!
+//! * the golden demo ranks its regions deterministically (heavy
+//!   work-shared compute first, the RPC-laden region last and
+//!   rpc-bound),
+//! * each lint fixture pattern trips its diagnostic code exactly once,
+//! * advising is execution-free: zero kernels run, and appending the
+//!   advice passes to the default pipeline changes no run behavior —
+//!   only the new `RunMetrics` counters light up.
+
+use gpu_first::analysis::lint::{BARRIER_DIVERGENT, CODES, RPC_HOT_LOOP, SHARED_WRITE_RACE};
+use gpu_first::coordinator::{Config, GpuFirstSession};
+use gpu_first::gpu::memory::MemConfig;
+use gpu_first::ir::parser::parse_module;
+use gpu_first::transform::PipelineSpec;
+
+/// The shipped advisor demo: three regions with distinct offload
+/// profiles plus one instance of every lintable anti-pattern.
+const DEMO: &str = include_str!("../../examples/advise_demo.ir");
+
+/// The analysis-only pipeline `gpu-first advise` runs by default.
+fn advise_spec() -> PipelineSpec {
+    PipelineSpec::parse("constfold,dce,libcres,lint,advise").unwrap()
+}
+
+fn config() -> Config {
+    Config { mem: MemConfig::small(), teams: 2, threads_per_team: 16, ..Default::default() }
+}
+
+fn compile_demo() -> GpuFirstSession {
+    let mut module = parse_module(DEMO).expect("demo parses");
+    let mut session = GpuFirstSession::start(config());
+    session.compile_spec(&mut module, &advise_spec()).expect("demo compiles");
+    session
+}
+
+#[test]
+fn demo_ranking_is_golden_and_deterministic() {
+    let session = compile_demo();
+    let report = session.report.as_ref().unwrap();
+    let advise = &report.advise;
+    assert_eq!(advise.regions.len(), 3, "three parallel regions scored");
+
+    // Golden ranking: the heavy work-shared fp loop offloads best, the
+    // badly synchronized shuffle is second, the printf loop last.
+    let order: Vec<&str> = advise.regions.iter().map(|r| r.region.as_str()).collect();
+    assert_eq!(order, vec!["parallel#0", "parallel#1", "parallel#2"], "{:?}", advise.lines());
+    assert!(advise.regions[0].speedup > advise.regions[1].speedup);
+    assert!(advise.regions[1].speedup > advise.regions[2].speedup);
+
+    // Per-region attribution: the loser is rpc-bound, with the blocker
+    // naming the dominance; the winner carries real static volume.
+    let rpc = &advise.regions[2];
+    assert_eq!(rpc.bottleneck, "rpc", "{:?}", advise.lines());
+    assert!(rpc.rpc_calls > 0);
+    assert!(rpc.blockers.iter().any(|b| b.contains("rpc-bound")), "{:?}", rpc.blockers);
+    let best = advise.best().unwrap();
+    assert!(best.flops > 0 && best.bytes > 0);
+    assert!(best.blockers.is_empty(), "{:?}", best.blockers);
+
+    // Deterministic: an independent compile produces the identical report.
+    let again = compile_demo();
+    assert_eq!(again.report.as_ref().unwrap().advise, *advise);
+    assert_eq!(again.report.as_ref().unwrap().diags, report.diags);
+}
+
+#[test]
+fn demo_trips_every_lint_code_exactly_once() {
+    let session = compile_demo();
+    let diags = &session.report.as_ref().unwrap().diags;
+    assert_eq!(diags.len(), 3, "{:?}", diags.lines());
+    for code in CODES {
+        assert_eq!(diags.count_of(code), 1, "{code}: {:?}", diags.lines());
+    }
+    let by_code = |code: &str| {
+        diags.diags.iter().find(|d| d.code == code).unwrap_or_else(|| panic!("{code} missing"))
+    };
+    // Locations pin the fixture each code was designed around.
+    assert!(by_code(BARRIER_DIVERGENT).location.contains("parallel#1 > if-then"));
+    assert!(by_code(SHARED_WRITE_RACE).message.contains("@flag"));
+    assert!(by_code(RPC_HOT_LOOP).location.contains("for %i"));
+    for d in &diags.diags {
+        assert_eq!(d.function, "main");
+        assert!(!d.hint.is_empty(), "every lint ships a fix hint");
+    }
+}
+
+#[test]
+fn advising_runs_zero_kernels() {
+    let session = compile_demo();
+    let report = session.report.as_ref().unwrap();
+    assert_eq!(
+        report.pipeline,
+        vec!["constfold", "dce", "libcres", "lint", "advise"],
+        "analysis-only pipeline: no rpcgen, no multiteam, no execution tail"
+    );
+    assert!(!report.advise.regions.is_empty());
+    // Nothing was loaded, launched, or printed: the advisor is a pure
+    // compile-time artifact.
+    assert!(session.env.is_none(), "no program environment exists");
+    assert_eq!(session.host.stdout_string(), "", "no host I/O happened");
+    // The analysis passes report themselves unchanged.
+    for t in &report.timings {
+        if t.pass == "lint" || t.pass == "advise" {
+            assert!(!t.changed, "{} must not mutate the module", t.pass);
+        }
+    }
+}
+
+/// Appending `--advise` to a real run changes nothing about execution:
+/// same exit code, same stdout, same kernel/RPC counts — only the
+/// advisor's `RunMetrics` counters appear.
+#[test]
+fn advice_passes_leave_run_behavior_untouched() {
+    const SRC: &str = r#"
+global @acc 32768
+global @fmt const 8 "sum=%d\n"
+
+func @main() -> i64 {
+  parallel {
+    for.team %i = 0 to 1024 step 1 {
+      %off = mul %i, 8
+      %p = gep @acc, %off
+      store.8 %i, %p
+    }
+    barrier
+  }
+  %s = 0
+  for %i = 0 to 1024 step 128 {
+    %off = mul %i, 8
+    %p = gep @acc, %off
+    %v = load.8 %p
+    %s = add %s, %v
+  }
+  call printf(@fmt, %s)
+  return 0
+}
+"#;
+    let mut plain = GpuFirstSession::start(config());
+    let (ret_p, m_p) = plain
+        .execute_spec(parse_module(SRC).unwrap(), &PipelineSpec::default(), &[])
+        .unwrap();
+    let out_p = plain.host.stdout_string();
+
+    let mut advised = GpuFirstSession::start(config());
+    let (ret_a, m_a) = advised
+        .execute_spec(parse_module(SRC).unwrap(), &PipelineSpec::default().with_advice(), &[])
+        .unwrap();
+    let out_a = advised.host.stdout_string();
+
+    assert_eq!(ret_p, ret_a);
+    assert_eq!(out_p, out_a, "identical observable output");
+    assert_eq!(m_p.kernel_launches, m_a.kernel_launches);
+    assert_eq!(m_p.main_stats.rpc_calls, m_a.main_stats.rpc_calls);
+    assert_eq!(m_p.kernel_stats.rpc_calls, m_a.kernel_stats.rpc_calls);
+    assert_eq!(m_p.unresolved_calls, m_a.unresolved_calls);
+
+    // The only delta: the advisor counters. The default pipeline never
+    // runs the opt-in passes.
+    assert_eq!((m_p.advice_regions, m_p.lint_diags), (0, 0));
+    assert!(m_a.advice_regions > 0, "post-multiteam the kernel region is advised");
+    let report = advised.report.as_ref().unwrap();
+    assert_eq!(
+        report.advise.regions.len() as u64,
+        m_a.advice_regions,
+        "metrics mirror the report"
+    );
+    assert_eq!(report.advise.regions[0].region, "kernel", "advised after outlining");
+}

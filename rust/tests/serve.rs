@@ -181,3 +181,47 @@ fn tenant_counters_attribute_admission_queueing_and_rejection() {
     assert_eq!(tenant("gamma").rejected, 1);
     assert_eq!(tenant("beta").runs, 1, "runs attribute to the tenant that issued them");
 }
+
+#[test]
+fn cache_hits_retain_advise_and_diags_but_not_timings() {
+    use gpu_first::transform::PipelineSpec;
+
+    // A source the advisor has opinions about: one parallel region with
+    // a uniform store (race lint) and a host-RPC printf in a hot loop.
+    let src = r#"
+global @acc 8
+global @fmt const 4 "%d\n"
+
+func @main() -> i64 {
+  parallel num_threads(16) {
+    for.team %i = 0 to 256 step 1 {
+      store.8 %i, @acc
+    }
+  }
+  for %j = 0 to 100 step 1 {
+    call printf(@fmt, %j)
+  }
+  return 0
+}
+"#;
+    let daemon = ServeDaemon::start(serve_config(2, 2));
+    let spec = PipelineSpec::default().with_advice();
+
+    let miss = daemon.open_session_spec("advisor", src, &spec).expect("admitted");
+    assert!(!miss.cache_hit());
+    let fresh = miss.session().report.as_ref().expect("report");
+    assert!(!fresh.advise.regions.is_empty(), "advise pass scored the region");
+    assert!(!fresh.diags.is_empty(), "lint pass found the anti-patterns");
+    assert!(!fresh.timings.is_empty());
+    let fresh_advise = fresh.advise.clone();
+    let fresh_diags = fresh.diags.clone();
+    miss.close();
+
+    let hit = daemon.open_session_spec("advisor", src, &spec).expect("admitted");
+    assert!(hit.cache_hit());
+    let cached = hit.session().report.as_ref().expect("report");
+    assert!(cached.timings.is_empty(), "cache hits run zero passes");
+    assert_eq!(cached.advise, fresh_advise, "advice survives the cache");
+    assert_eq!(cached.diags, fresh_diags, "diagnostics survive the cache");
+    hit.close();
+}
